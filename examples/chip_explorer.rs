@@ -1,0 +1,84 @@
+//! Design-space explorer: how the paper's headline metrics move as the
+//! chip parameters change — the co-design ablations DESIGN.md calls out.
+//!
+//!   cargo run --release --example chip_explorer
+//!
+//! Sweeps: GRNG bias (energy/quality trade), tile geometry (area vs
+//! throughput), ADC resolution (accuracy vs energy), σ precision.
+
+use bnn_cim::config::ChipConfig;
+use bnn_cim::energy::{area_breakdown, HeadlineMetrics};
+use bnn_cim::experiments::{run_breakdown, run_characterization};
+use bnn_cim::grng::GrngBank;
+
+fn headline(chip: &ChipConfig) -> HeadlineMetrics {
+    let bank = GrngBank::for_chip(chip);
+    let rep = run_breakdown(chip, 1);
+    HeadlineMetrics::compute(
+        chip,
+        bank.hardware_throughput_sa_s(),
+        bank.mean_energy_per_sample(),
+        rep.mvm_energy_j,
+    )
+}
+
+fn main() {
+    // --- GRNG bias sweep: quality vs energy ---
+    println!("GRNG bias design point (2, Fig. 9 trade):");
+    println!("  V_R [mV] | σ(T_D) ns | latency ns | fJ/Sa | bank GSa/s | Q-Q r");
+    for mv in [120.0, 150.0, 180.0, 210.0] {
+        let mut chip = ChipConfig::default();
+        chip.grng.bias_v = mv / 1e3;
+        let rep = run_characterization(&chip.grng, 800, 3, false);
+        let bank = GrngBank::for_chip(&chip);
+        println!(
+            "  {:>8.0} | {:>9.2} | {:>10.0} | {:>5.0} | {:>10.2} | {:.4}",
+            mv,
+            rep.quality.width_sd_s * 1e9,
+            rep.quality.mean_latency_s * 1e9,
+            rep.quality.mean_energy_j * 1e15,
+            bank.hardware_throughput_sa_s() / 1e9,
+            rep.quality.qq_r
+        );
+    }
+
+    // --- tile geometry ---
+    println!("\ntile geometry (area vs throughput):");
+    println!("  rows×words | tile mm² | NN GOp/s | GOp/s/mm² | fJ/Op");
+    for (rows, words) in [(32, 8), (64, 8), (64, 16), (128, 8)] {
+        let mut chip = ChipConfig::default();
+        chip.tile.rows = rows;
+        chip.tile.words_per_row = words;
+        let m = headline(&chip);
+        let area = area_breakdown(&chip.tile, &chip.area);
+        println!(
+            "  {rows:>4}×{words:<5} | {:>8.4} | {:>8.1} | {:>9.0} | {:>5.0}",
+            area.tile_mm2, m.nn_tput_gops, m.nn_tput_gops / area.tile_mm2, m.nn_eff_fj_per_op
+        );
+    }
+
+    // --- ADC resolution ---
+    println!("\nADC resolution (conversion energy scales ~2^b):");
+    println!("  bits | MVM pJ | fJ/Op | SRAM share");
+    for bits in [4, 6, 8] {
+        let mut chip = ChipConfig::default();
+        chip.adc.bits = bits;
+        // SAR energy ≈ linear-ish in bits at fixed DNL budget (model).
+        chip.adc.energy_j = 110.0e-15 * (bits as f64 / 6.0);
+        let rep = run_breakdown(&chip, 2);
+        println!(
+            "  {bits:>4} | {:>6.1} | {:>5.0} | {:>6.1}%",
+            rep.mvm_energy_j * 1e12,
+            rep.fj_per_op,
+            rep.sram_energy_share() * 100.0
+        );
+    }
+
+    // --- headline recap ---
+    let m = headline(&ChipConfig::default());
+    println!(
+        "\ndefault chip: {:.2} GSa/s RNG @ {:.2} pJ/Sa | {:.0} GOp/s NN @ {:.0} fJ/Op | {:.3} mm²",
+        m.rng_tput_gsa_s, m.rng_eff_pj_per_sa, m.nn_tput_gops, m.nn_eff_fj_per_op, m.area_mm2
+    );
+    println!("paper:        5.12 GSa/s       @ 0.36 pJ/Sa  | 102 GOp/s     @ 672 fJ/Op  | 0.45 mm²");
+}

@@ -1,0 +1,119 @@
+//! End-to-end driver (the DESIGN.md "(e2e)" row): exercises every layer
+//! of the stack on a real small workload and reports the paper's
+//! headline quantities.
+//!
+//!   cargo run --release --example e2e_serving [n_requests] [mc_samples]
+//!
+//! Pipeline proven here:
+//!   python (build time): synthetic-person training → ELBO Bayesian head
+//!     → quantization → Pallas-kernel inference graph → HLO text
+//!   rust (request path): coordinator batches requests → PJRT executes
+//!     the feature extractor once per batch → T Monte-Carlo head passes,
+//!     each fed fresh ε from the *simulated in-word GRNG bank* (die
+//!     mismatch + calibration included) → entropy/deferral policy.
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use bnn_cim::bayes::{accuracy, ape_by_group, ece_percent, EvalPoint};
+use bnn_cim::config::Config;
+use bnn_cim::coordinator::Coordinator;
+use bnn_cim::data::{OodKind, SyntheticPerson};
+use bnn_cim::grng::GrngBank;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args: Vec<String> = std::env::args().collect();
+    let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let mc: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(16);
+    if !Path::new("artifacts/manifest.json").exists() {
+        return Err("artifacts missing — run `make artifacts`".into());
+    }
+
+    let mut cfg = Config::default();
+    cfg.model.mc_samples = mc;
+    cfg.server.max_batch = 8;
+    let coord = Coordinator::start(cfg.clone())?;
+    let gen = SyntheticPerson::new(cfg.model.image_side, 2024);
+
+    println!("=== e2e serving: {n_requests} requests (+25% OOD), T={mc} MC samples ===");
+    let t0 = Instant::now();
+
+    // Offer the whole workload asynchronously (coordinator batches).
+    let mut expected = Vec::new();
+    let mut receivers = Vec::new();
+    let kinds = [
+        OodKind::Fragment,
+        OodKind::Texture,
+        OodKind::Inverted,
+        OodKind::Noise,
+    ];
+    for i in 0..n_requests as u64 {
+        let s = gen.sample(i);
+        expected.push((s.label, false));
+        receivers.push(coord.submit(s.pixels, 0).map_err(|e| format!("{e}"))?);
+        if i % 4 == 0 {
+            let o = gen.ood_sample(i, kinds[(i / 4 % 4) as usize]);
+            expected.push((0, true));
+            receivers.push(coord.submit(o.pixels, 0).map_err(|e| format!("{e}"))?);
+        }
+    }
+    let mut points = Vec::new();
+    let mut deferred = 0usize;
+    for (rx, &(label, ood)) in receivers.into_iter().zip(expected.iter()) {
+        let resp = rx.recv()?;
+        if resp.deferred {
+            deferred += 1;
+        }
+        points.push(EvalPoint {
+            pred: resp.pred,
+            label,
+            ood,
+        });
+    }
+    let wall = t0.elapsed();
+
+    // --- quality ---
+    let acc = accuracy(&points);
+    let ece = ece_percent(&points, 15);
+    let (ape_c, ape_i, ape_o) = ape_by_group(&points);
+    println!("\nquality (BNN over PJRT + in-word-GRNG ε):");
+    println!("  accuracy (ID)        {:.3}", acc);
+    println!("  ECE                  {:.2} %", ece);
+    println!("  APE correct/incorrect/OOD   {ape_c:.3} / {ape_i:.3} / {ape_o:.3}");
+    println!(
+        "  deferred             {} / {} ({:.1} %)",
+        deferred,
+        points.len(),
+        100.0 * deferred as f64 / points.len() as f64
+    );
+
+    // --- serving performance ---
+    let m = coord.metrics();
+    println!("\nserving:");
+    println!("  wallclock            {wall:.2?}");
+    println!(
+        "  throughput           {:.1} inferences/s (each = {} MC passes)",
+        points.len() as f64 / wall.as_secs_f64(),
+        mc
+    );
+    println!("  latency p50/p95      {:.1} / {:.1} ms", m.latency_p50_ms, m.latency_p95_ms);
+    println!("  batches              {} (mean fill {:.2})", m.batches, m.mean_batch_fill);
+    println!("  PJRT executions      {}", m.pjrt_executions);
+
+    // --- hardware-model energy of the ε stream ---
+    let bank = GrngBank::for_chip(&cfg.chip);
+    println!("\nhardware model (the chip this simulates):");
+    println!(
+        "  ε samples drawn      {} ({:.2} µJ at {:.0} fJ/Sample)",
+        m.epsilon_samples,
+        m.epsilon_energy_j * 1e6,
+        bank.mean_energy_per_sample() * 1e15
+    );
+    println!(
+        "  GRNG bank rate       {:.2} GSa/s (paper 5.12)",
+        bank.hardware_throughput_sa_s() / 1e9
+    );
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Quickstart: the three layers of the stack in ~60 lines.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! 1. Characterize one in-word GRNG cell (the paper's entropy source).
+//! 2. Program a CIM tile, calibrate it, run a Bayesian MVM.
+//! 3. If artifacts are built: one classification through the full
+//!    AOT-compiled (JAX+Pallas → PJRT) serving path.
+
+use bnn_cim::cim::{calibrate, CimTile, MvmOptions};
+use bnn_cim::config::Config;
+use bnn_cim::coordinator::Coordinator;
+use bnn_cim::data::SyntheticPerson;
+use bnn_cim::experiments::run_characterization;
+use std::path::Path;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let cfg = Config::default();
+
+    // --- 1. GRNG cell ---
+    let rep = run_characterization(&cfg.chip.grng, 1000, 1, false);
+    println!(
+        "GRNG @ {:.0} mV: σ(T_D) = {:.2} ns, latency = {:.0} ns, \
+         {:.0} fJ/Sample, Q-Q r = {:.4}",
+        cfg.chip.grng.bias_v * 1e3,
+        rep.quality.width_sd_s * 1e9,
+        rep.quality.mean_latency_s * 1e9,
+        rep.quality.mean_energy_j * 1e15,
+        rep.quality.qq_r
+    );
+
+    // --- 2. CIM tile ---
+    let mut tile = CimTile::new(&cfg.chip);
+    let cal = calibrate(&mut tile, 16, 32)?;
+    println!(
+        "calibrated tile: ε₀ residual {:.3}, cost {:.2} nJ",
+        cal.grng_residual_rms,
+        cal.energy_j * 1e9
+    );
+    // w = μ + σ·ε with μ ramp and uniform σ.
+    let n = cfg.chip.tile.rows * cfg.chip.tile.words_per_row;
+    let mu: Vec<f64> = (0..n).map(|i| (i % 256) as f64 - 128.0).collect();
+    let sigma = vec![6.0; n];
+    tile.program_matrix(&mu, &sigma);
+    let x = vec![8u8; cfg.chip.tile.rows];
+    let y = tile.mvm(&x, MvmOptions::default());
+    println!(
+        "Bayesian MVM outputs (μ-path + σε-path): {:?}",
+        y.combined()
+            .iter()
+            .map(|v| v.round())
+            .collect::<Vec<_>>()
+    );
+    println!("tile energy so far:\n{}", tile.ledger.ascii_breakdown());
+
+    // --- 3. Full serving path (needs `make artifacts`) ---
+    if Path::new("artifacts/manifest.json").exists() {
+        let coord = Coordinator::start(cfg.clone())?;
+        let sample = SyntheticPerson::new(cfg.model.image_side, 7).sample(1);
+        let resp = coord
+            .infer_blocking(sample.pixels, 16)
+            .map_err(|e| format!("{e}"))?;
+        println!(
+            "served inference: true={} pred={} entropy={:.3} deferred={} ({:.1} ms)",
+            sample.label,
+            resp.pred.class,
+            resp.pred.entropy,
+            resp.deferred,
+            resp.latency.as_secs_f64() * 1e3
+        );
+        coord.shutdown();
+    } else {
+        println!("(skip serving demo: run `make artifacts` first)");
+    }
+    Ok(())
+}

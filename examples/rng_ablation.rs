@@ -1,0 +1,91 @@
+//! Ablation: serve the same workload with different ε sources — the
+//! in-word GRNG bank (this work), the Philox mirror of the L1 kernel,
+//! and the Tab. II baseline algorithms (Wallace, Box–Muller, TI-Hadamard,
+//! CLT-LFSR). Shows task quality is RNG-robust while the *cost* differs
+//! by orders of magnitude (the paper's whole point: the win is
+//! energy/locality, not statistics).
+//!
+//!   cargo run --release --example rng_ablation [n_requests]
+
+use bnn_cim::bayes::{accuracy, ape_by_group, EvalPoint};
+use bnn_cim::config::Config;
+use bnn_cim::coordinator::server::SourceFactory;
+use bnn_cim::coordinator::{BaselineSource, Coordinator, GrngBankSource, PhiloxSource};
+use bnn_cim::data::SyntheticPerson;
+use bnn_cim::grng::baselines::{
+    box_muller::FixedPointBoxMuller, clt_lfsr::CltLfsr, hadamard::TiHadamard, wallace::Wallace,
+};
+use std::path::Path;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        return Err("artifacts missing — run `make artifacts`".into());
+    }
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(96);
+
+    let mut cfg = Config::default();
+    cfg.model.mc_samples = 12;
+
+    let sources: Vec<(&str, SourceFactory)> = vec![
+        ("in-word GRNG (this work)", {
+            let chip = cfg.chip.clone();
+            Box::new(move || Box::new(GrngBankSource::new(&chip)))
+        }),
+        ("philox (L1 kernel mirror)", Box::new(|| Box::new(PhiloxSource::new(42)))),
+        ("wallace [11]", Box::new(|| {
+            Box::new(BaselineSource::new(Box::new(Wallace::new(1))))
+        })),
+        ("box-muller [12]", Box::new(|| {
+            Box::new(BaselineSource::new(Box::new(FixedPointBoxMuller::new(2))))
+        })),
+        ("ti-hadamard [9]", Box::new(|| {
+            Box::new(BaselineSource::new(Box::new(TiHadamard::new(3))))
+        })),
+        ("clt-lfsr (ablation)", Box::new(|| {
+            Box::new(BaselineSource::new(Box::new(CltLfsr::new(4))))
+        })),
+    ];
+
+    println!(
+        "{:<28} {:>8} {:>8} {:>10} {:>10} {:>12}",
+        "ε source", "acc", "APE-inc", "APE-ood", "eps-draws", "model energy"
+    );
+    for (name, factory) in sources {
+        let coord = Coordinator::start_with_source(cfg.clone(), factory)?;
+        let gen = SyntheticPerson::new(cfg.model.image_side, 9);
+        let mut points = Vec::new();
+        let mut rx = Vec::new();
+        for i in 0..n as u64 {
+            let s = gen.sample(i);
+            rx.push((s.label, false, coord.submit(s.pixels, 0).map_err(|e| format!("{e}"))?));
+            if i % 4 == 0 {
+                let o = gen.ood_sample(i, bnn_cim::data::OodKind::Fragment);
+                rx.push((0, true, coord.submit(o.pixels, 0).map_err(|e| format!("{e}"))?));
+            }
+        }
+        for (label, ood, r) in rx {
+            points.push(EvalPoint {
+                pred: r.recv()?.pred,
+                label,
+                ood,
+            });
+        }
+        let m = coord.metrics();
+        let (_, ape_i, ape_o) = ape_by_group(&points);
+        println!(
+            "{:<28} {:>8.3} {:>8.3} {:>10.3} {:>10} {:>9.2} µJ",
+            name,
+            accuracy(&points),
+            ape_i,
+            ape_o,
+            m.epsilon_samples,
+            m.epsilon_energy_j * 1e6
+        );
+        coord.shutdown();
+    }
+    println!("\n(model energy = ε draws × the published/simulated per-sample cost of that source)");
+    Ok(())
+}

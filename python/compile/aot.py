@@ -1,0 +1,174 @@
+"""AOT lowering: JAX → HLO *text* artifacts for the Rust PJRT runtime.
+
+Emits (into artifacts/):
+  features.hlo.txt — images[B,32,32,1]            → (features[B,64],)
+  head.hlo.txt     — feats[B,64], ε1[B,64,32],
+                     ε2[B,32,2]                   → (probs[B,2],)
+  full.hlo.txt     — images, ε1, ε2               → (probs[B,2],)
+  manifest.json    — shapes/entry-points/batch for the Rust loader.
+
+Weights are baked into the computations as constants (the chip analogy:
+weights are *programmed into the tile*; only activations and ε flow).
+ε is an *input*: the Rust coordinator's in-word GRNG bank generates it —
+the L3↔L1 bridge this architecture is about.
+
+HLO TEXT, not `.serialize()`: jax ≥ 0.5 emits protos with 64-bit ids
+which xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is ESSENTIAL: the default elides baked weight
+    # tensors as `constant({...})`, which the xla_extension 0.5.1 text
+    # parser silently zero-fills.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def load_params(weights_path: Path):
+    """Rebuild a params pytree from weights.json (no training needed)."""
+    doc = json.loads(weights_path.read_text())
+    params = {"features": [], "det_head": [], "head": []}
+    for layer in doc["features"]:
+        if layer["kind"] == "gap":
+            continue
+        w = jnp.asarray(
+            np.asarray(layer["w"], dtype=np.float32).reshape(layer["w_shape"])
+        )
+        b = jnp.asarray(np.asarray(layer["b"], dtype=np.float32))
+        params["features"].append({"w": w, "b": b})
+    for layer in doc["head"]["layers"]:
+        mu = jnp.asarray(
+            np.asarray(layer["mu"], dtype=np.float32).reshape(
+                layer["in"], layer["out"]
+            )
+        )
+        sigma = np.asarray(layer["sigma"], dtype=np.float64).reshape(
+            layer["in"], layer["out"]
+        )
+        # invert softplus to store ρ (model code recomputes σ).
+        rho = jnp.asarray(np.log(np.expm1(np.maximum(sigma, 1e-9))), jnp.float32)
+        b = jnp.asarray(np.asarray(layer["bias"], dtype=np.float32))
+        params["head"].append({"mu": mu, "rho": rho, "b": b})
+    for layer in doc["det_head"]["layers"]:
+        w = jnp.asarray(
+            np.asarray(layer["w"], dtype=np.float32).reshape(
+                layer["in"], layer["out"]
+            )
+        )
+        b = jnp.asarray(np.asarray(layer["bias"], dtype=np.float32))
+        params["det_head"].append({"w": w, "b": b})
+    return params, doc["meta"]
+
+
+def build_and_export(artifacts_dir: Path, batch: int = BATCH):
+    weights = artifacts_dir / "weights.json"
+    if not weights.exists():
+        raise SystemExit(
+            f"{weights} missing — run `python -m compile.train` first "
+            "(the Makefile does this)."
+        )
+    params, meta = load_params(weights)
+    qhead = M.quantize_head_weights(params["head"])
+    side = meta["side"]
+
+    # ---- features ----
+    def features_fn(images):
+        return (M.features_fwd(params, images),)
+
+    img_spec = jax.ShapeDtypeStruct((batch, side, side, 1), jnp.float32)
+    feats_hlo = to_hlo_text(jax.jit(features_fn).lower(img_spec))
+
+    # ---- head (quantized, Pallas kernel inside, ε as inputs) ----
+    act_max = float(meta.get("act_max", M.ACT_MAX))
+
+    def head_fn(feats, eps1, eps2):
+        logits = M.head_fwd_sample(qhead, feats, [eps1, eps2], act_max=act_max)
+        return (jax.nn.softmax(logits, axis=1),)
+
+    f_spec = jax.ShapeDtypeStruct((batch, M.FEATURE_DIM), jnp.float32)
+    e1_spec = jax.ShapeDtypeStruct(
+        (batch,) + qhead[0]["mu_fixed"].shape, jnp.float32
+    )
+    e2_spec = jax.ShapeDtypeStruct(
+        (batch,) + qhead[1]["mu_fixed"].shape, jnp.float32
+    )
+    head_hlo = to_hlo_text(jax.jit(head_fn).lower(f_spec, e1_spec, e2_spec))
+
+    # ---- full pipeline ----
+    def full_fn(images, eps1, eps2):
+        feats = M.features_fwd(params, images)
+        logits = M.head_fwd_sample(qhead, feats, [eps1, eps2], act_max=act_max)
+        return (jax.nn.softmax(logits, axis=1),)
+
+    full_hlo = to_hlo_text(jax.jit(full_fn).lower(img_spec, e1_spec, e2_spec))
+
+    (artifacts_dir / "features.hlo.txt").write_text(feats_hlo)
+    (artifacts_dir / "head.hlo.txt").write_text(head_hlo)
+    (artifacts_dir / "full.hlo.txt").write_text(full_hlo)
+
+    manifest = {
+        "batch": batch,
+        "side": side,
+        "feature_dim": M.FEATURE_DIM,
+        "classes": meta["classes"],
+        "head_dims": M.HEAD_DIMS,
+        "entry_points": {
+            "features": {
+                "file": "features.hlo.txt",
+                "inputs": [["images", [batch, side, side, 1]]],
+                "outputs": [["features", [batch, M.FEATURE_DIM]]],
+            },
+            "head": {
+                "file": "head.hlo.txt",
+                "inputs": [
+                    ["features", [batch, M.FEATURE_DIM]],
+                    ["eps1", [batch] + list(qhead[0]["mu_fixed"].shape)],
+                    ["eps2", [batch] + list(qhead[1]["mu_fixed"].shape)],
+                ],
+                "outputs": [["probs", [batch, meta["classes"]]]],
+            },
+            "full": {
+                "file": "full.hlo.txt",
+                "inputs": [
+                    ["images", [batch, side, side, 1]],
+                    ["eps1", [batch] + list(qhead[0]["mu_fixed"].shape)],
+                    ["eps2", [batch] + list(qhead[1]["mu_fixed"].shape)],
+                ],
+                "outputs": [["probs", [batch, meta["classes"]]]],
+            },
+        },
+    }
+    (artifacts_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    for f in ["features.hlo.txt", "head.hlo.txt", "full.hlo.txt", "manifest.json"]:
+        p = artifacts_dir / f
+        print(f"wrote {p} ({p.stat().st_size/1e3:.0f} kB)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=str, default="../artifacts")
+    ap.add_argument("--batch", type=int, default=BATCH)
+    args = ap.parse_args()
+    build_and_export(Path(args.out), args.batch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""Synthetic person-detection dataset (INRIA substitute) — Python side.
+
+Same *procedure and parameters* as `rust/src/data/generator.rs` (person =
+head + torso + legs at random position/scale/contrast over rect clutter;
+distractors = poles/blobs; OOD = textures/inverted/noise). The two
+implementations draw from the same distribution; they need not be
+bit-identical (all experiments use fresh draws — see DESIGN.md).
+"""
+
+import numpy as np
+
+BACKGROUND = 0
+PERSON = 1
+
+
+class SyntheticPerson:
+    def __init__(self, side: int = 32, seed: int = 0):
+        assert side >= 16
+        self.side = side
+        self.seed = seed
+
+    def _rng(self, index: int, salt: int) -> np.random.Generator:
+        return np.random.Generator(
+            np.random.Philox(key=(self.seed ^ (index * 0x9E3779B97F4A7C15 + salt)) % 2**64)
+        )
+
+    # ------------------------------------------------------------------
+
+    def sample(self, index: int):
+        label = index % 2
+        rng = self._rng(index, 0x1D)
+        img = self._clutter(rng)
+        if label == PERSON:
+            self._draw_person(img, rng)
+        elif rng.random() < 0.5:
+            self._draw_distractor(img, rng)
+        img = np.clip(img + 0.03 * rng.standard_normal(img.shape), 0.0, 1.0)
+        return img.astype(np.float32), label
+
+    def ood_sample(self, index: int, kind: str):
+        rng = self._rng(index + 2**62, 0x0D)
+        if kind == "texture":
+            img = self._texture(rng)
+        elif kind == "fragment":
+            # Partially visible pedestrian: clutter + 1 body part only —
+            # the genuinely ambiguous OOD of the safety-critical story.
+            img = self._clutter(rng)
+            self._draw_fragment(img, rng)
+            img = np.clip(img + 0.03 * rng.standard_normal(img.shape), 0.0, 1.0)
+        elif kind == "inverted":
+            base, _ = self.sample(index)
+            img = 1.0 - base
+        elif kind == "noise":
+            img = np.clip(0.5 + 0.15 * rng.standard_normal((self.side, self.side)), 0.0, 1.0)
+        else:
+            raise ValueError(f"unknown OOD kind {kind}")
+        return img.astype(np.float32)
+
+    def split(self, offset: int, n: int):
+        imgs = np.zeros((n, self.side, self.side, 1), dtype=np.float32)
+        labels = np.zeros(n, dtype=np.int32)
+        for i in range(n):
+            img, lab = self.sample(offset + i)
+            imgs[i, :, :, 0] = img
+            labels[i] = lab
+        return imgs, labels
+
+    def ood_split(self, offset: int, n: int):
+        kinds = ["fragment", "texture", "inverted", "noise"]
+        imgs = np.zeros((n, self.side, self.side, 1), dtype=np.float32)
+        for i in range(n):
+            imgs[i, :, :, 0] = self.ood_sample(offset + i, kinds[i % len(kinds)])
+        return imgs
+
+    # ------------------------------------------------------------------
+
+    def _clutter(self, rng):
+        s = self.side
+        gx = (rng.random() - 0.5) * 0.4
+        gy = (rng.random() - 0.5) * 0.4
+        base = 0.35 + 0.3 * rng.random()
+        xs = np.linspace(0, 1, s, endpoint=False) - 0.5
+        img = base + gx * xs[None, :] + gy * xs[:, None]
+        for _ in range(2 + rng.integers(0, 4)):
+            w = 2 + rng.integers(0, s // 3)
+            h = 2 + rng.integers(0, s // 3)
+            x0 = rng.integers(0, s - w)
+            y0 = rng.integers(0, s - h)
+            v = 0.2 + 0.6 * rng.random()
+            alpha = 0.3 + 0.5 * rng.random()
+            img[y0 : y0 + h, x0 : x0 + w] = (
+                img[y0 : y0 + h, x0 : x0 + w] * (1 - alpha) + v * alpha
+            )
+        return img
+
+    def _paint(self, img, x0, y0, x1, y1, v):
+        s = self.side
+        xa, xb = int(x0 * s), int(x1 * s)
+        ya, yb = int(y0 * s), int(y1 * s)
+        xa, xb = max(xa, 0), min(xb, s)
+        ya, yb = max(ya, 0), min(yb, s)
+        if xb > xa and yb > ya:
+            img[ya:yb, xa:xb] = np.clip(img[ya:yb, xa:xb] + v, 0.0, 1.0)
+
+    def _draw_person(self, img, rng):
+        height = 0.5 + 0.3 * rng.random()
+        cx = 0.25 + 0.5 * rng.random()
+        top = 0.05 + (0.9 - height) * rng.random()
+        contrast = 1.0 if rng.random() < 0.5 else -1.0
+        tone = 0.35 * (0.6 + 0.4 * rng.random()) * contrast
+        head_r = height * 0.11
+        torso_w = height * 0.16
+        torso_h = height * 0.42
+        leg_w = torso_w * 0.38
+        leg_h = height * 0.38
+        lean = (rng.random() - 0.5) * 0.06
+        self._paint(img, cx - head_r, top, cx + head_r, top + 2 * head_r, tone * 1.1)
+        torso_top = top + 2 * head_r + 0.01
+        self._paint(
+            img, cx - torso_w / 2, torso_top, cx + torso_w / 2, torso_top + torso_h, tone
+        )
+        leg_top = torso_top + torso_h
+        self._paint(
+            img,
+            cx - torso_w / 2 + lean,
+            leg_top,
+            cx - torso_w / 2 + leg_w + lean,
+            leg_top + leg_h,
+            tone * 0.95,
+        )
+        self._paint(
+            img,
+            cx + torso_w / 2 - leg_w - lean,
+            leg_top,
+            cx + torso_w / 2 - lean,
+            leg_top + leg_h,
+            tone * 0.95,
+        )
+
+    def _draw_fragment(self, img, rng):
+        """One body part of the person figure (head / torso / legs)."""
+        height = 0.5 + 0.3 * rng.random()
+        cx = 0.25 + 0.5 * rng.random()
+        top = 0.05 + (0.9 - height) * rng.random()
+        contrast = 1.0 if rng.random() < 0.5 else -1.0
+        tone = 0.35 * (0.6 + 0.4 * rng.random()) * contrast
+        head_r = height * 0.11
+        torso_w = height * 0.16
+        torso_h = height * 0.42
+        part = rng.integers(0, 3)
+        if part == 0:  # head only
+            self._paint(img, cx - head_r, top, cx + head_r, top + 2 * head_r, tone * 1.1)
+        elif part == 1:  # torso only
+            self._paint(img, cx - torso_w / 2, top, cx + torso_w / 2, top + torso_h, tone)
+        else:  # legs only
+            leg_w = torso_w * 0.38
+            leg_h = height * 0.38
+            self._paint(img, cx - torso_w / 2, top, cx - torso_w / 2 + leg_w, top + leg_h, tone * 0.95)
+            self._paint(img, cx + torso_w / 2 - leg_w, top, cx + torso_w / 2, top + leg_h, tone * 0.95)
+
+    def _draw_distractor(self, img, rng):
+        s = self.side
+        tone = (0.3 + 0.4 * rng.random()) * (1.0 if rng.random() < 0.5 else -1.0)
+        if rng.random() < 0.5:
+            w = 1 + rng.integers(0, 2)
+            h = s // 2 + rng.integers(0, s // 3)
+            x0 = rng.integers(0, s - w)
+            y0 = rng.integers(0, max(s - h, 1))
+            img[y0 : min(y0 + h, s), x0 : x0 + w] = np.clip(
+                img[y0 : min(y0 + h, s), x0 : x0 + w] + tone, 0.0, 1.0
+            )
+        else:
+            w = s // 4 + rng.integers(0, s // 4)
+            x0 = rng.integers(0, s - w)
+            y0 = rng.integers(0, s - w)
+            img[y0 : y0 + w, x0 : x0 + w] = np.clip(
+                img[y0 : y0 + w, x0 : x0 + w] + tone * 0.8, 0.0, 1.0
+            )
+
+    def _texture(self, rng):
+        # Statistics-matched texture: OOD structure at in-distribution
+        # brightness/contrast (see rust generator for rationale).
+        s = self.side
+        period = 2 + rng.integers(0, 5)
+        checker = rng.random() < 0.5
+        mid = 0.4 + 0.2 * rng.random()
+        amp = 0.08 + 0.1 * rng.random()
+        x = np.arange(s) // period
+        if checker:
+            grid = (x[None, :] + x[:, None]) % 2
+        else:
+            grid = np.broadcast_to(x[None, :] % 2, (s, s))
+        img = np.where(grid == 0, mid - amp, mid + amp).astype(np.float64)
+        return np.clip(img + 0.03 * rng.standard_normal((s, s)), 0.0, 1.0)

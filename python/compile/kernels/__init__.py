@@ -1,0 +1,3 @@
+"""L1 Pallas kernels: in-kernel GRNG + decomposed Bayesian CIM MVM."""
+
+from . import bayes_mvm, grng, ref  # noqa: F401

@@ -1,0 +1,154 @@
+"""L1 Pallas kernel: the decomposed Bayesian CIM matrix-vector product.
+
+The paper's compute hot-spot (Eq. 5): for quantized inputs X and the
+weight decomposition w = μ + σ·ε,
+
+    Y_j = Σ_i X_i·μ_ij  +  Σ_i X_i·σ_ij·ε_ij
+
+with hardware-faithful quantization grids:
+  - X: unsigned 4-bit codes (IDAC input),
+  - μ: 8-bit *signed-digit* grid — digits ∈ {−1,+1} per bit ⇒ odd
+    integers in [−255, 255] (differential SRAM encoding, Fig. 5),
+  - σ: 4-bit unsigned magnitude,
+  - per-path 6-bit ADC quantization of partial sums (optional).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the two subarrays of
+Fig. 3 become two MXU matmuls sharing the X operand; BlockSpec tiles
+(μ, σ, ε resident in VMEM) express what the chip does with
+bitline-parallel words. interpret=True for CPU-PJRT executability.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def quantize_mu(mu, bits: int = 8):
+    """Round to the signed-digit grid: odd integers in [−(2^b−1), 2^b−1].
+
+    x → 2·round((x−1)/2)+1 gives the nearest odd integer.
+    """
+    grid_max = float(2**bits - 1)
+    x = jnp.clip(mu, -grid_max, grid_max)
+    return 2.0 * jnp.round((x - 1.0) / 2.0) + 1.0
+
+
+def quantize_sigma(sigma, bits: int = 4):
+    """Round to the unsigned magnitude grid [0, 2^b−1]."""
+    grid_max = float(2**bits - 1)
+    return jnp.clip(jnp.round(sigma), 0.0, grid_max)
+
+
+def quantize_act(x, step, bits: int = 4):
+    """Activation → IDAC code grid: round(x/step) clamped to [0, 2^b−1]."""
+    grid_max = float(2**bits - 1)
+    return jnp.clip(jnp.round(x / step), 0.0, grid_max)
+
+
+def adc_quantize(v, lsb, bits: int = 6):
+    """Differential SAR ADC transfer: round to codes, clamp, reconstruct."""
+    half = float(2 ** (bits - 1))
+    code = jnp.clip(jnp.round(v / lsb), -half, half - 1.0)
+    return code * lsb
+
+
+def _mvm_kernel(
+    x_ref,
+    mu_ref,
+    sigma_ref,
+    eps_ref,
+    out_ref,
+    *,
+    adc_bits: int,
+    adc_lsb_mu: float,
+    adc_lsb_sigma: float,
+    use_adc: bool,
+):
+    """One (batch-row × out-tile) block of the decomposed MVM.
+
+    x: [rows] codes; mu/sigma/eps: [rows, out_block]. The σε product is
+    formed in VMEM (ε never leaves the kernel when fused with the GRNG
+    kernel) and both paths hit the MXU as matmul/broadcast-reduce ops.
+    """
+    x = x_ref[...]
+    mu = mu_ref[...]
+    sigma = sigma_ref[...]
+    eps = eps_ref[...]
+    # μ path: X·μ — contraction over rows (MXU matvec).
+    y_mu = jnp.einsum("r,ro->o", x, mu, preferred_element_type=jnp.float32)
+    # σε path: X·(σ⊙ε) — the in-word product then the same contraction.
+    y_sigma = jnp.einsum(
+        "r,ro->o", x, sigma * eps, preferred_element_type=jnp.float32
+    )
+    if use_adc:
+        y_mu = adc_quantize(y_mu, adc_lsb_mu, adc_bits)
+        y_sigma = adc_quantize(y_sigma, adc_lsb_sigma, adc_bits)
+    out_ref[...] = y_mu + y_sigma
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("out_block", "adc_bits", "use_adc"),
+)
+def bayes_mvm(
+    x_codes,
+    mu_fixed,
+    sigma_fixed,
+    eps,
+    out_block: int = 0,
+    adc_bits: int = 6,
+    adc_lsb_mu: float = 7.5,
+    adc_lsb_sigma: float = 7.5,
+    use_adc: bool = False,
+):
+    """Decomposed Bayesian MVM: Y = X·μ + X·(σ⊙ε).
+
+    Args:
+      x_codes: [rows] float32 (integer-valued codes).
+      mu_fixed: [rows, cols] float32 on the signed-digit grid.
+      sigma_fixed: [rows, cols] float32 on the σ grid.
+      eps: [rows, cols] float32 N(0,1) samples.
+      out_block: output-tile width (0 = whole output in one tile).
+      use_adc: apply the per-path ADC transfer (word-level approximation
+        of the per-bit-column ADCs; the Rust simulator models per-column).
+
+    Returns [cols] float32 in fixed-point units.
+    """
+    rows, cols = mu_fixed.shape
+    if out_block <= 0 or out_block > cols:
+        out_block = cols
+    assert cols % out_block == 0, "cols must divide into out blocks"
+    grid = cols // out_block
+    kernel = functools.partial(
+        _mvm_kernel,
+        adc_bits=adc_bits,
+        adc_lsb_mu=adc_lsb_mu,
+        adc_lsb_sigma=adc_lsb_sigma,
+        use_adc=use_adc,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((rows,), lambda i: (0,)),
+            pl.BlockSpec((rows, out_block), lambda i: (0, i)),
+            pl.BlockSpec((rows, out_block), lambda i: (0, i)),
+            pl.BlockSpec((rows, out_block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((out_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((cols,), jnp.float32),
+        interpret=True,
+    )(
+        x_codes.astype(jnp.float32),
+        mu_fixed.astype(jnp.float32),
+        sigma_fixed.astype(jnp.float32),
+        eps.astype(jnp.float32),
+    )
+
+
+def bayes_mvm_batch(x_codes, mu_fixed, sigma_fixed, eps, **kw):
+    """vmap over a batch: x [B, rows], eps [B, rows, cols] → [B, cols]."""
+    fn = lambda x, e: bayes_mvm(x, mu_fixed, sigma_fixed, e, **kw)
+    return jax.vmap(fn)(x_codes, eps)

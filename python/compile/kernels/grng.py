@@ -1,0 +1,144 @@
+"""L1 Pallas kernel: counter-based in-kernel Gaussian RNG.
+
+Hardware-adaptation of the paper's in-word GRNG (DESIGN.md
+§Hardware-Adaptation): on the chip, ε is generated physically inside the
+SRAM word that stores σ, so samples never cross a memory bus. The TPU
+translation of that locality is *in-kernel generation*: ε is derived from
+a (key, counter) pair inside the same Pallas kernel invocation that
+consumes it, living only in VMEM — it never materializes in HBM.
+
+The bit source is Philox4x32-10 (Salmon et al., SC'11), the canonical
+counter-based generator; the Rust coordinator implements the identical
+function (`bnn_cim::util::rng::Philox4x32`), so L3 can reproduce the
+exact ε-stream an artifact will see (cross-language test vectors in
+python/tests/test_kernels.py and rust/src/util/rng.rs).
+
+Pallas kernels here always run with ``interpret=True``: the CPU PJRT
+client cannot execute Mosaic custom-calls, and interpret mode lowers to
+plain HLO ops that any backend runs (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Plain ints (converted at trace time inside the kernel): module-level
+# jnp arrays would be captured as pallas_call constants, which is an error.
+PHILOX_M0 = 0xD2511F53
+PHILOX_M1 = 0xCD9E8D57
+PHILOX_W0 = 0x9E3779B9
+PHILOX_W1 = 0xBB67AE85
+
+TWO_PI = 6.283185307179586
+
+
+def _mulhilo(a, b):
+    """32x32 -> (hi, lo) using 16-bit limbs (jax_enable_x64 is off, so
+    uint64 is unavailable; uint32 multiplies wrap, which gives `lo` for
+    free and the limb decomposition recovers `hi`)."""
+    mask = jnp.uint32(0xFFFF)
+    sixteen = jnp.uint32(16)
+    al = a & mask
+    ah = a >> sixteen
+    bl = b & mask
+    bh = b >> sixteen
+    lo = a * b  # wrapping multiply = low 32 bits
+    t = al * bl
+    k = t >> sixteen
+    t = ah * bl + k
+    w2 = t & mask
+    w1 = t >> sixteen
+    t = al * bh + w2
+    k = t >> sixteen
+    hi = ah * bh + w1 + k
+    return hi, lo
+
+
+def philox_4x32(key0, key1, c0, c1, c2, c3, rounds=10):
+    """Philox4x32 block function on uint32 arrays (vectorized)."""
+    k0, k1 = key0, key1
+    m0 = jnp.uint32(PHILOX_M0)
+    m1 = jnp.uint32(PHILOX_M1)
+    w0 = jnp.uint32(PHILOX_W0)
+    w1 = jnp.uint32(PHILOX_W1)
+    for _ in range(rounds):
+        hi0, lo0 = _mulhilo(m0, c0)
+        hi1, lo1 = _mulhilo(m1, c2)
+        c0, c1, c2, c3 = hi1 ^ c1 ^ k0, lo1, hi0 ^ c3 ^ k1, lo0
+        k0 = k0 + w0
+        k1 = k1 + w1
+    return c0, c1, c2, c3
+
+
+def _bits_to_unit_open(bits):
+    """uint32 -> float32 in (0, 1]: (bits >> 8 + 1) / 2^24."""
+    return (
+        (bits >> jnp.uint32(8)).astype(jnp.float32) + jnp.float32(1.0)
+    ) * jnp.float32(1.0 / 16777216.0)
+
+
+def _bits_to_unit(bits):
+    """uint32 -> float32 in [0, 1)."""
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(
+        1.0 / 16777216.0
+    )
+
+
+def _grng_kernel(key_ref, out_ref, *, block_rows: int, cols: int):
+    """Pallas kernel body: fill one [block_rows, cols] tile of ε.
+
+    Counters are derived from the global element index so every tile and
+    every grid step draws from a disjoint counter range (random access —
+    the property the chip gets from having one physical GRNG per word).
+    """
+    # program_id is int32 — cast BEFORE mixing with uint32 counters, or
+    # the whole index computation silently promotes to int32 and the
+    # Philox shifts turn arithmetic (sign-extending) on high-bit lanes.
+    tile = pl.program_id(0).astype(jnp.uint32)
+    key0 = key_ref[0]
+    key1 = key_ref[1]
+    # Global element index of each slot in this tile.
+    base = tile * jnp.uint32(block_rows * cols)
+    idx = base + jax.lax.broadcasted_iota(jnp.uint32, (block_rows, cols), 0) * jnp.uint32(cols)
+    idx = idx + jax.lax.broadcasted_iota(jnp.uint32, (block_rows, cols), 1)
+    zero = jnp.zeros_like(idx)
+    r0, r1, _r2, _r3 = philox_4x32(key0, key1, idx, zero, zero, zero)
+    # Box–Muller on two independent 24-bit uniforms.
+    u1 = _bits_to_unit_open(r0)
+    u2 = _bits_to_unit(r1)
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    eps = r * jnp.cos(jnp.float32(TWO_PI) * u2)
+    out_ref[...] = eps
+
+
+@functools.partial(jax.jit, static_argnames=("rows", "cols", "block_rows"))
+def sample_epsilon(key, rows: int, cols: int, block_rows: int = 0):
+    """Generate an ε matrix [rows, cols] ~ N(0,1) from a uint32[2] key.
+
+    ``block_rows`` controls the VMEM tile height (0 = whole array in one
+    tile). On real TPU hardware the BlockSpec keeps each ε tile resident
+    in VMEM next to the σ tile that consumes it — the "in-word" locality.
+    """
+    if block_rows <= 0 or block_rows > rows:
+        block_rows = rows
+    assert rows % block_rows == 0, "rows must divide into blocks"
+    grid = rows // block_rows
+    return pl.pallas_call(
+        functools.partial(_grng_kernel, block_rows=block_rows, cols=cols),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((block_rows, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(jnp.asarray(key, dtype=jnp.uint32))
+
+
+def philox_bits(key, n: int):
+    """First output word of Philox4x32-10 for counters 0..n-1 (testing)."""
+    key = jnp.asarray(key, dtype=jnp.uint32)
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    zero = jnp.zeros_like(idx)
+    r0, r1, r2, r3 = philox_4x32(key[0], key[1], idx, zero, zero, zero)
+    return jnp.stack([r0, r1, r2, r3], axis=1)

@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the CORE correctness signal: pytest asserts
+`kernel(...) ≈ ref(...)` over hypothesis-generated shapes/values
+(python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def quantize_mu_ref(mu, bits: int = 8):
+    grid_max = float(2**bits - 1)
+    x = jnp.clip(mu, -grid_max, grid_max)
+    return 2.0 * jnp.round((x - 1.0) / 2.0) + 1.0
+
+
+def quantize_sigma_ref(sigma, bits: int = 4):
+    grid_max = float(2**bits - 1)
+    return jnp.clip(jnp.round(sigma), 0.0, grid_max)
+
+
+def adc_quantize_ref(v, lsb, bits: int = 6):
+    half = float(2 ** (bits - 1))
+    code = jnp.clip(jnp.round(v / lsb), -half, half - 1.0)
+    return code * lsb
+
+
+def bayes_mvm_ref(
+    x_codes,
+    mu_fixed,
+    sigma_fixed,
+    eps,
+    adc_bits: int = 6,
+    adc_lsb_mu: float = 7.5,
+    adc_lsb_sigma: float = 7.5,
+    use_adc: bool = False,
+):
+    """Oracle for kernels.bayes_mvm: plain jnp einsum."""
+    y_mu = jnp.einsum("r,ro->o", x_codes.astype(jnp.float32), mu_fixed)
+    y_sigma = jnp.einsum(
+        "r,ro->o", x_codes.astype(jnp.float32), sigma_fixed * eps
+    )
+    if use_adc:
+        y_mu = adc_quantize_ref(y_mu, adc_lsb_mu, adc_bits)
+        y_sigma = adc_quantize_ref(y_sigma, adc_lsb_sigma, adc_bits)
+    return y_mu + y_sigma
+
+
+def philox4x32_ref(key, counters):
+    """NumPy reference Philox4x32-10 (counter in lane 0, rest zero).
+
+    Returns [n, 4] uint32. Mirrors bnn_cim::util::rng::Philox4x32 —
+    cross-language vectors are pinned in tests on both sides.
+    """
+    M0 = np.uint64(0xD2511F53)
+    M1 = np.uint64(0xCD9E8D57)
+    W0 = np.uint32(0x9E3779B9)
+    W1 = np.uint32(0xBB67AE85)
+    c0 = np.asarray(counters, dtype=np.uint32)
+    c1 = np.zeros_like(c0)
+    c2 = np.zeros_like(c0)
+    c3 = np.zeros_like(c0)
+    k0 = np.uint32(key & 0xFFFFFFFF)
+    k1 = np.uint32((key >> 32) & 0xFFFFFFFF)
+    for _ in range(10):
+        p0 = M0 * c0.astype(np.uint64)
+        p1 = M1 * c2.astype(np.uint64)
+        hi0 = (p0 >> np.uint64(32)).astype(np.uint32)
+        lo0 = p0.astype(np.uint32)
+        hi1 = (p1 >> np.uint64(32)).astype(np.uint32)
+        lo1 = p1.astype(np.uint32)
+        c0, c1, c2, c3 = hi1 ^ c1 ^ k0, lo1, hi0 ^ c3 ^ k1, lo0
+        k0 = np.uint32((int(k0) + int(W0)) & 0xFFFFFFFF)
+        k1 = np.uint32((int(k1) + int(W1)) & 0xFFFFFFFF)
+    return np.stack([c0, c1, c2, c3], axis=1)
+
+
+def box_muller_ref(bits0, bits1):
+    """Oracle for the kernel's bits→Gaussian mapping."""
+    u1 = ((bits0 >> np.uint32(8)).astype(np.float32) + np.float32(1.0)) * np.float32(
+        1.0 / 16777216.0
+    )
+    u2 = (bits1 >> np.uint32(8)).astype(np.float32) * np.float32(1.0 / 16777216.0)
+    r = np.sqrt(-2.0 * np.log(u1))
+    return r * np.cos(np.float32(2.0 * np.pi) * u2)

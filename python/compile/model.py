@@ -1,0 +1,269 @@
+"""L2: JAX partial-Bayesian MobileNet-mini (§III-A).
+
+Architecture (32×32×1 input):
+    conv3x3(1→8, s2) → dw3x3(8) → pw(8→16, s2) → dw(16) → pw(16→32, s2)
+    → dw(32) → pw(32→64) → GAP → 64-d feature, then a Bayesian FC head
+    64→32→2 using the weight decomposition w = μ + σ·ε (Eq. 4).
+
+Three forward paths:
+  - ``features_fwd``   — deterministic backbone (HWC, SAME pad, ReLU6)
+                         — matches `rust/src/nn/layers.rs`.
+  - ``head_fwd_train`` — ELBO training path: local reparameterization.
+  - ``head_fwd_sample``— inference path taking explicit ε inputs and
+                         calling the L1 Pallas kernel with the hardware
+                         quantization grids; `aot.py` lowers this for
+                         the Rust runtime.
+
+Python is build-time only: nothing here runs at serving time.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import bayes_mvm as K
+
+ARCH = [
+    # (kind, cin, cout, stride)
+    ("conv", 1, 8, 2),
+    ("dw", 8, 8, 1),
+    ("conv1", 8, 16, 2),
+    ("dw", 16, 16, 1),
+    ("conv1", 16, 32, 2),
+    ("dw", 32, 32, 1),
+    ("conv1", 32, 64, 1),
+]
+FEATURE_DIM = 64
+HEAD_DIMS = [(64, 32), (32, 2)]
+ACT_MAX = 6.0
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def init_params(key):
+    """Backbone + deterministic head + Bayesian head parameters."""
+    params = {"features": [], "det_head": [], "head": []}
+    for kind, cin, cout, _s in ARCH:
+        key, k1 = jax.random.split(key)
+        if kind == "conv":
+            shape = (3, 3, cin, cout)
+        elif kind == "conv1":
+            shape = (1, 1, cin, cout)
+        else:  # dw
+            shape = (3, 3, cin)
+        fan_in = int(np.prod(shape[:-1])) if kind != "dw" else 9
+        w = jax.random.normal(k1, shape) * jnp.sqrt(2.0 / fan_in)
+        b = jnp.zeros(shape[-1] if kind != "dw" else cin)
+        params["features"].append({"w": w, "b": b})
+    for in_d, out_d in HEAD_DIMS:
+        key, k1, k2 = jax.random.split(key, 3)
+        w = jax.random.normal(k1, (in_d, out_d)) * jnp.sqrt(2.0 / in_d)
+        params["det_head"].append({"w": w, "b": jnp.zeros(out_d)})
+        mu = jax.random.normal(k2, (in_d, out_d)) * jnp.sqrt(2.0 / in_d)
+        # softplus(−2.0) ≈ 0.127: weight directions the data never
+        # constrains keep prior-scale uncertainty (OOD entropy, Fig. 10)
+        # while constrained directions shrink during ELBO training.
+        rho = jnp.full((in_d, out_d), -2.0)
+        params["head"].append({"mu": mu, "rho": rho, "b": jnp.zeros(out_d)})
+    return params
+
+
+def sigma_from_rho(rho):
+    """σ = softplus(ρ) — keeps σ positive during training."""
+    return jax.nn.softplus(rho)
+
+
+# ---------------------------------------------------------------------------
+# Backbone
+# ---------------------------------------------------------------------------
+
+
+def _conv(x, w, b, stride):
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def _dwconv(x, w, b, stride):
+    c = x.shape[-1]
+    wd = w[..., None]  # HWC -> HWC1
+    wd = jnp.transpose(wd, (0, 1, 3, 2))  # HW1C (HWIO with I=1, O=C)
+    y = jax.lax.conv_general_dilated(
+        x,
+        wd,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    return y + b
+
+
+def features_fwd(params, images):
+    """images [B, S, S, 1] → features [B, 64]."""
+    x = images
+    for (kind, _cin, _cout, stride), layer in zip(ARCH, params["features"]):
+        if kind == "dw":
+            x = _dwconv(x, layer["w"], layer["b"], stride)
+        else:
+            x = _conv(x, layer["w"], layer["b"], stride)
+        x = jnp.clip(x, 0.0, ACT_MAX)  # ReLU6
+    return jnp.mean(x, axis=(1, 2))  # GAP
+
+
+# ---------------------------------------------------------------------------
+# Heads
+# ---------------------------------------------------------------------------
+
+
+def det_head_fwd(params, feats):
+    x = feats
+    for i, layer in enumerate(params["det_head"]):
+        x = x @ layer["w"] + layer["b"]
+        if i + 1 < len(params["det_head"]):
+            x = jax.nn.relu(x)
+    return x
+
+
+def head_fwd_train(params, feats, key):
+    """ELBO path: local reparameterization (Kingma et al. 2015) — sample
+    the *pre-activations* a ~ N(x·μ, (x²)·σ²) instead of the weights."""
+    x = feats
+    for i, layer in enumerate(params["head"]):
+        sigma = sigma_from_rho(layer["rho"])
+        mean = x @ layer["mu"] + layer["b"]
+        var = (x * x) @ (sigma * sigma)
+        key, sub = jax.random.split(key)
+        a = mean + jnp.sqrt(var + 1e-12) * jax.random.normal(sub, mean.shape)
+        x = jax.nn.relu(a) if i + 1 < len(params["head"]) else a
+    return x
+
+
+def kl_to_prior(params, prior_sigma: float = 0.3):
+    """KL(q‖p) for factorized Gaussians vs N(0, prior_sigma²).
+
+    A loose prior (0.3) avoids over-shrinking μ margins — tight priors
+    make the BNN systematically underconfident (high ECE), the opposite
+    of the calibration the paper demonstrates.
+    """
+    kl = 0.0
+    for layer in params["head"]:
+        sigma = sigma_from_rho(layer["rho"])
+        mu = layer["mu"]
+        kl += jnp.sum(
+            jnp.log(prior_sigma / sigma)
+            + (sigma**2 + mu**2) / (2 * prior_sigma**2)
+            - 0.5
+        )
+    return kl
+
+
+# ---------------------------------------------------------------------------
+# Hardware-faithful inference path (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def quantize_head_weights(head_params, mu_bits=8, sigma_bits=4):
+    """Fold float (μ, σ) onto the hardware grids with per-layer scales.
+
+    Mirrors `rust/src/cim/word.rs::WeightScale`: μ fills the 8-bit
+    signed-digit grid, σ the 4-bit magnitude grid, each with its own
+    scale. The σ-path scale ratio is folded into σ_fixed
+    (`sigma_eff = σ_fixed·mu_scale/sigma_scale`) so one kernel call
+    returns both paths in μ units.
+    """
+    out = []
+    for layer in head_params:
+        mu = np.asarray(layer["mu"], dtype=np.float64)
+        sigma = np.asarray(sigma_from_rho(layer["rho"]), dtype=np.float64)
+        mu_grid = float(2**mu_bits - 1)
+        sg_grid = float(2**sigma_bits - 1)
+        mu_scale = mu_grid / max(float(np.abs(mu).max()), 1e-12)
+        sigma_scale = sg_grid / max(float(sigma.max()), 1e-12)
+        mu_fixed = np.asarray(
+            K.quantize_mu(jnp.asarray(mu * mu_scale), mu_bits), dtype=np.float32
+        )
+        sigma_fixed = np.asarray(
+            K.quantize_sigma(jnp.asarray(sigma * sigma_scale), sigma_bits),
+            dtype=np.float32,
+        )
+        sigma_eff = sigma_fixed * np.float32(mu_scale / sigma_scale)
+        out.append(
+            {
+                "mu_fixed": mu_fixed,
+                "sigma_fixed": sigma_fixed,
+                "sigma_eff": sigma_eff,
+                "bias": np.asarray(layer["b"], dtype=np.float32),
+                "mu_scale": mu_scale,
+                "sigma_scale": sigma_scale,
+            }
+        )
+    return out
+
+
+def head_fwd_sample(qhead, feats, eps_list, act_max=ACT_MAX, input_bits=4):
+    """One MC forward pass with explicit ε inputs via the Pallas kernel.
+
+    Args:
+      qhead: output of `quantize_head_weights` (baked constants in AOT).
+      feats: [B, in_dim] float features.
+      eps_list: per-layer ε, each [B, in_dim, out_dim] ~ N(0,1).
+    Returns logits [B, classes].
+    """
+    x = feats
+    for i, (layer, eps) in enumerate(zip(qhead, eps_list)):
+        step = act_max / float(2**input_bits - 1)
+        codes = K.quantize_act(x, step, input_bits)
+        y = K.bayes_mvm_batch(
+            codes,
+            jnp.asarray(layer["mu_fixed"]),
+            jnp.asarray(layer["sigma_eff"]),
+            eps,
+        )
+        x = jnp.asarray(layer["bias"]) + y * (step / layer["mu_scale"])
+        if i + 1 < len(qhead):
+            x = jax.nn.relu(x)
+    return x
+
+
+def head_fwd_mean(qhead, feats, act_max=ACT_MAX, input_bits=4):
+    """μ-only quantized forward pass (ablation / deterministic arm)."""
+    eps_list = [
+        jnp.zeros((feats.shape[0],) + l["mu_fixed"].shape, jnp.float32)
+        for l in qhead
+    ]
+    return head_fwd_sample(qhead, feats, eps_list, act_max, input_bits)
+
+
+# ---------------------------------------------------------------------------
+# Losses / metrics
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+
+
+def det_loss(params, images, labels):
+    feats = features_fwd(params, images)
+    logits = det_head_fwd(params, feats)
+    return cross_entropy(logits, labels)
+
+
+def elbo_loss(params, feats, labels, key, kl_weight):
+    logits = head_fwd_train(params, feats, key)
+    nll = cross_entropy(logits, labels)
+    return nll + kl_weight * kl_to_prior(params)

@@ -1,0 +1,233 @@
+"""Build-time training: backbone + deterministic head (cross-entropy),
+then the Bayesian head by maximizing the ELBO (§II-A) with the backbone
+frozen. Exports:
+
+  artifacts/weights.json     — consumed by rust `nn::Model::load`
+  artifacts/eval_batch.json  — shared eval split (images/labels/OOD) so
+                               Rust experiments can evaluate the *same*
+                               inputs the training-side metrics used
+  artifacts/train_metrics.json
+
+Run:  cd python && python -m compile.train [--steps N] [--out DIR]
+"""
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .dataset import SyntheticPerson
+
+SEED = 1234
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat = jax.tree.map(lambda m: m / (1 - b1**t), m)
+    vhat = jax.tree.map(lambda v: v / (1 - b2**t), v)
+    params = jax.tree.map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def train(steps_backbone=400, steps_head=800, batch=64, out_dir="../artifacts",
+          n_train=2048, n_val=512, seed=SEED, verbose=True):
+    t0 = time.time()
+    gen = SyntheticPerson(32, seed)
+    x_train, y_train = gen.split(0, n_train)
+    x_val, y_val = gen.split(n_train, n_val)
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(key)
+
+    # ---- Phase 1: backbone + det head ----
+    det_subset = {"features": params["features"], "det_head": params["det_head"]}
+
+    @jax.jit
+    def det_step(subset, opt, images, labels):
+        def loss_fn(s):
+            feats = M.features_fwd(s, images)
+            return M.cross_entropy(M.det_head_fwd(s, feats), labels)
+
+        loss, grads = jax.value_and_grad(loss_fn)(subset)
+        subset, opt = adam_step(subset, grads, opt, lr=2e-3)
+        return subset, opt, loss
+
+    opt = adam_init(det_subset)
+    rng = np.random.default_rng(seed)
+    for step in range(steps_backbone):
+        idx = rng.integers(0, n_train, batch)
+        det_subset, opt, loss = det_step(
+            det_subset, opt, jnp.asarray(x_train[idx]), jnp.asarray(y_train[idx])
+        )
+        if verbose and step % 100 == 0:
+            print(f"[backbone] step {step} loss {float(loss):.4f}", flush=True)
+    params["features"] = det_subset["features"]
+    params["det_head"] = det_subset["det_head"]
+
+    # ---- Phase 2: Bayesian head on frozen features (ELBO) ----
+    feats_train = np.asarray(
+        jax.jit(M.features_fwd)(params, jnp.asarray(x_train))
+    )
+    feats_val = np.asarray(jax.jit(M.features_fwd)(params, jnp.asarray(x_val)))
+    # Initialize μ from the trained deterministic head (warm start).
+    for i, det in enumerate(params["det_head"]):
+        params["head"][i]["mu"] = det["w"]
+        params["head"][i]["b"] = det["b"]
+    head = {"head": params["head"]}
+    kl_weight = 0.5 / n_train
+
+    @jax.jit
+    def head_step(head, opt, feats, labels, key):
+        def loss_fn(h):
+            return M.elbo_loss(h, feats, labels, key, kl_weight)
+
+        loss, grads = jax.value_and_grad(loss_fn)(head)
+        head, opt = adam_step(head, grads, opt, lr=1e-3)
+        return head, opt, loss
+
+    opt = adam_init(head)
+    for step in range(steps_head):
+        idx = rng.integers(0, n_train, batch)
+        key, sub = jax.random.split(key)
+        head, opt, loss = head_step(
+            head, opt, jnp.asarray(feats_train[idx]), jnp.asarray(y_train[idx]), sub
+        )
+        if verbose and step % 100 == 0:
+            print(f"[bayes-head] step {step} elbo-loss {float(loss):.4f}", flush=True)
+    params["head"] = head["head"]
+
+    # ---- Metrics ----
+    val_logits_det = M.det_head_fwd(params, jnp.asarray(feats_val))
+    det_acc = float(M.accuracy(val_logits_det, jnp.asarray(y_val)))
+    # Bayesian val accuracy (mean of 8 MC passes, float path).
+    probs = 0.0
+    for t in range(8):
+        key, sub = jax.random.split(key)
+        logits = M.head_fwd_train({"head": params["head"]}, jnp.asarray(feats_val), sub)
+        probs = probs + jax.nn.softmax(logits, axis=1)
+    bayes_acc = float(
+        jnp.mean((jnp.argmax(probs, axis=1) == jnp.asarray(y_val)).astype(jnp.float32))
+    )
+    if verbose:
+        print(f"val acc: det {det_acc:.3f} | bayes(float, T=8) {bayes_acc:.3f}")
+
+    # ---- Export ----
+    # Calibrate the activation quantizer range from the actual feature
+    # distribution (ReLU6's bound of 6.0 wastes most of the 4-bit grid:
+    # real features live below ~1).
+    act_max = float(np.percentile(feats_train, 99.5))
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    export_weights(params, out / "weights.json", act_max=act_max)
+    export_eval_batch(gen, n_train + n_val, out / "eval_batch.json")
+    (out / "train_metrics.json").write_text(
+        json.dumps(
+            {
+                "det_val_acc": det_acc,
+                "bayes_val_acc_float_T8": bayes_acc,
+                "steps_backbone": steps_backbone,
+                "steps_head": steps_head,
+                "n_train": n_train,
+                "seed": seed,
+                "wall_s": time.time() - t0,
+            },
+            indent=2,
+        )
+    )
+    return params, det_acc, bayes_acc
+
+
+def export_weights(params, path: Path, act_max=M.ACT_MAX):
+    doc = {
+        "meta": {
+            "side": 32,
+            "classes": 2,
+            "feature_dim": M.FEATURE_DIM,
+            "act_max": round(float(act_max), 5),
+        },
+        "features": [],
+        "head": {"layers": []},
+        "det_head": {"layers": []},
+    }
+    for (kind, _cin, _cout, stride), layer in zip(M.ARCH, params["features"]):
+        w = np.asarray(layer["w"], dtype=np.float64)
+        doc["features"].append(
+            {
+                "kind": "dw" if kind == "dw" else "conv",
+                "stride": stride,
+                "w_shape": list(w.shape),
+                "w": [round(float(v), 7) for v in w.reshape(-1)],
+                "b": [round(float(v), 7) for v in np.asarray(layer["b"]).reshape(-1)],
+            }
+        )
+    doc["features"].append({"kind": "gap"})
+    for (in_d, out_d), layer in zip(M.HEAD_DIMS, params["head"]):
+        sigma = np.asarray(M.sigma_from_rho(layer["rho"]), dtype=np.float64)
+        doc["head"]["layers"].append(
+            {
+                "in": in_d,
+                "out": out_d,
+                "relu": (in_d, out_d) != M.HEAD_DIMS[-1],
+                "mu": [round(float(v), 7) for v in np.asarray(layer["mu"]).reshape(-1)],
+                "sigma": [round(float(v), 7) for v in sigma.reshape(-1)],
+                "bias": [round(float(v), 7) for v in np.asarray(layer["b"]).reshape(-1)],
+            }
+        )
+    for (in_d, out_d), layer in zip(M.HEAD_DIMS, params["det_head"]):
+        doc["det_head"]["layers"].append(
+            {
+                "in": in_d,
+                "out": out_d,
+                "relu": (in_d, out_d) != M.HEAD_DIMS[-1],
+                "w": [round(float(v), 7) for v in np.asarray(layer["w"]).reshape(-1)],
+                "bias": [round(float(v), 7) for v in np.asarray(layer["b"]).reshape(-1)],
+            }
+        )
+    path.write_text(json.dumps(doc))
+    print(f"wrote {path} ({path.stat().st_size/1e6:.2f} MB)")
+
+
+def export_eval_batch(gen: SyntheticPerson, offset: int, path: Path,
+                      n_id=256, n_ood=96):
+    imgs, labels = gen.split(offset, n_id)
+    ood = gen.ood_split(offset, n_ood)
+    doc = {
+        "side": gen.side,
+        "id_images": [[round(float(v), 5) for v in img.reshape(-1)] for img in imgs],
+        "id_labels": [int(v) for v in labels],
+        "ood_images": [[round(float(v), 5) for v in img.reshape(-1)] for img in ood],
+    }
+    path.write_text(json.dumps(doc))
+    print(f"wrote {path} ({path.stat().st_size/1e6:.2f} MB)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--head-steps", type=int, default=400)
+    ap.add_argument("--out", type=str, default="../artifacts")
+    ap.add_argument("--seed", type=int, default=SEED)
+    args = ap.parse_args()
+    train(
+        steps_backbone=args.steps,
+        steps_head=args.head_steps,
+        out_dir=args.out,
+        seed=args.seed,
+    )
+
+
+if __name__ == "__main__":
+    main()

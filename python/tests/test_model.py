@@ -1,0 +1,98 @@
+"""L2 model shape/behaviour tests + dataset checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile.dataset import SyntheticPerson
+
+
+def small_batch(n=4, seed=0):
+    gen = SyntheticPerson(32, seed)
+    return gen.split(0, n)
+
+
+def test_feature_shapes():
+    params = M.init_params(jax.random.PRNGKey(0))
+    imgs, _ = small_batch()
+    feats = M.features_fwd(params, jnp.asarray(imgs))
+    assert feats.shape == (4, M.FEATURE_DIM)
+    assert bool(jnp.all(feats >= 0.0)) and bool(jnp.all(feats <= M.ACT_MAX))
+
+
+def test_det_head_shapes():
+    params = M.init_params(jax.random.PRNGKey(1))
+    feats = jnp.ones((4, M.FEATURE_DIM))
+    logits = M.det_head_fwd(params, feats)
+    assert logits.shape == (4, 2)
+
+
+def test_elbo_train_path_is_stochastic():
+    params = M.init_params(jax.random.PRNGKey(2))
+    feats = jnp.ones((4, M.FEATURE_DIM))
+    a = M.head_fwd_train(params, feats, jax.random.PRNGKey(3))
+    b = M.head_fwd_train(params, feats, jax.random.PRNGKey(4))
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_kl_positive_and_differentiable():
+    params = M.init_params(jax.random.PRNGKey(5))
+    kl = M.kl_to_prior(params)
+    assert float(kl) > 0.0
+    grads = jax.grad(lambda p: M.kl_to_prior(p))({"head": params["head"]})
+    g = np.asarray(grads["head"][0]["mu"])
+    assert np.isfinite(g).all()
+
+
+def test_quantized_head_sample_path():
+    params = M.init_params(jax.random.PRNGKey(6))
+    qhead = M.quantize_head_weights(params["head"])
+    # grids respected
+    for layer in qhead:
+        mu = layer["mu_fixed"]
+        assert np.all(np.abs(mu) <= 255)
+        assert np.all(np.mod(np.abs(mu), 2) == 1)
+        assert np.all((layer["sigma_fixed"] >= 0) & (layer["sigma_fixed"] <= 15))
+    feats = jnp.asarray(np.random.default_rng(0).uniform(0, 6, (2, 64)), jnp.float32)
+    eps = [
+        jnp.asarray(np.random.default_rng(1).normal(0, 1, (2, 64, 32)), jnp.float32),
+        jnp.asarray(np.random.default_rng(2).normal(0, 1, (2, 32, 2)), jnp.float32),
+    ]
+    logits = M.head_fwd_sample(qhead, feats, eps)
+    assert logits.shape == (2, 2)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_quantized_mean_path_close_to_float_mean():
+    params = M.init_params(jax.random.PRNGKey(7))
+    qhead = M.quantize_head_weights(params["head"])
+    feats = jnp.asarray(np.random.default_rng(3).uniform(0, 6, (4, 64)), jnp.float32)
+    q_logits = np.asarray(M.head_fwd_mean(qhead, feats))
+    # float μ-only reference
+    x = feats
+    for i, layer in enumerate(params["head"]):
+        x = x @ layer["mu"] + layer["b"]
+        if i + 1 < len(params["head"]):
+            x = jax.nn.relu(x)
+    f_logits = np.asarray(x)
+    # Quantization (4-bit acts!) is coarse; demand correlation not equality.
+    r = np.corrcoef(q_logits.reshape(-1), f_logits.reshape(-1))[0, 1]
+    assert r > 0.9, f"quantized mean path decorrelated: r={r}"
+
+
+def test_dataset_balance_and_range():
+    imgs, labels = small_batch(50, seed=9)
+    assert imgs.shape == (50, 32, 32, 1)
+    assert imgs.min() >= 0.0 and imgs.max() <= 1.0
+    assert labels.sum() == 25  # balanced
+
+
+def test_dataset_ood_split():
+    gen = SyntheticPerson(32, 4)
+    ood = gen.ood_split(0, 6)
+    assert ood.shape == (6, 32, 32, 1)
+    # inverted kind inverts its in-distribution twin
+    base, _ = gen.sample(1)
+    inv = gen.ood_sample(1, "inverted")
+    np.testing.assert_allclose(base + inv, 1.0, atol=1e-5)

@@ -1,0 +1,40 @@
+//! Bench: Fig. 12 — tile energy & area breakdown for one complete MVM.
+
+use bnn_cim::config::ChipConfig;
+use bnn_cim::energy::Component;
+use bnn_cim::experiments::run_breakdown;
+use bnn_cim::util::bench::Suite;
+
+fn main() {
+    let mut suite = Suite::new("breakdown (Fig. 12)");
+    suite.header();
+    let chip = ChipConfig::default();
+    let rep = run_breakdown(&chip, 3);
+    println!("{}", rep.render());
+    suite.note(
+        "fig12.sram_energy_share (paper >0.63)",
+        format!("{:.3}", rep.sram_energy_share()),
+    );
+    suite.note(
+        "fig12.sram_area_share (paper ~0.48)",
+        format!("{:.3}", rep.sram_area_share()),
+    );
+    suite.note(
+        "fig12.grng_energy_share",
+        format!(
+            "{:.3}",
+            rep.energy.component_j(Component::Grng) / rep.mvm_energy_j
+        ),
+    );
+    suite.note("fig12.mvm_energy_pj", format!("{:.2}", rep.mvm_energy_j * 1e12));
+    suite.note(
+        "fig12.nn_eff_fj_per_op (paper 672)",
+        format!("{:.0}", rep.fj_per_op),
+    );
+    suite.note("fig12.tile_area_mm2", format!("{:.4}", rep.area.tile_mm2));
+    suite.note(
+        "fig12.chip_area_mm2 (paper 0.45)",
+        format!("{:.3}", rep.area.chip_mm2),
+    );
+    suite.finish();
+}

@@ -1,0 +1,69 @@
+//! Bench: CIM tile simulator — MVM latency by mode, calibration cost,
+//! multi-tile array scaling. (Simulator wallclock; the *hardware* timing
+//! model is reported by nn_throughput/comparison.)
+
+use bnn_cim::cim::{calibrate, CimTile, MvmOptions, TileArray};
+use bnn_cim::config::ChipConfig;
+use bnn_cim::util::bench::{black_box, Suite};
+use bnn_cim::util::rng::{Pcg64, Rng64};
+
+fn main() {
+    let mut suite = Suite::new("cim_tile");
+    suite.header();
+    let chip = ChipConfig::default();
+    let mut tile = CimTile::new(&chip);
+    let rep = {
+        let t0 = std::time::Instant::now();
+        let r = calibrate(&mut tile, 16, 64).unwrap();
+        suite.note("calibration wallclock", format!("{:.2?}", t0.elapsed()));
+        r
+    };
+    suite.note("calibration residual rms", format!("{:.3}", rep.grng_residual_rms));
+    suite.note(
+        "calibration energy (paper 3.6 nJ)",
+        format!("{:.2} nJ", rep.energy_j * 1e9),
+    );
+
+    let mut rng = Pcg64::new(3);
+    let n = chip.tile.rows * chip.tile.words_per_row;
+    let mu: Vec<f64> = (0..n).map(|_| (rng.next_f64() * 2.0 - 1.0) * 200.0).collect();
+    let sg: Vec<f64> = (0..n).map(|_| rng.next_f64() * 12.0).collect();
+    tile.program_matrix(&mu, &sg);
+    let x: Vec<u8> = (0..chip.tile.rows).map(|_| rng.next_below(16) as u8).collect();
+
+    let ops = chip.tile.ops_per_mvm() as f64;
+    suite.bench_throughput("tile mvm (bayesian, fresh ε)", ops, || {
+        black_box(tile.mvm(&x, MvmOptions::default()));
+    });
+    suite.bench_throughput("tile mvm (bayesian, held ε)", ops, || {
+        black_box(tile.mvm(
+            &x,
+            MvmOptions {
+                refresh_epsilon: false,
+                ..Default::default()
+            },
+        ));
+    });
+    suite.bench_throughput("tile mvm (μ only)", ops, || {
+        black_box(tile.mvm(
+            &x,
+            MvmOptions {
+                bayesian: false,
+                ..Default::default()
+            },
+        ));
+    });
+    suite.bench_throughput("tile mvm reference (digital)", ops, || {
+        black_box(tile.mvm_reference(&x, true));
+    });
+
+    // Array scaling: a 64→32 layer (4 tiles).
+    let mut arr = TileArray::new(&chip, 64, 32);
+    arr.program_matrix(&vec![100.0; 64 * 32], &vec![6.0; 64 * 32]);
+    let x64: Vec<u8> = (0..64).map(|_| rng.next_below(16) as u8).collect();
+    suite.bench_throughput("array 64x32 mvm (4 tiles)", 64.0 * 32.0 * 2.0, || {
+        black_box(arr.mvm(&x64, MvmOptions::default()));
+    });
+
+    suite.finish();
+}

@@ -1,0 +1,45 @@
+//! Bench: Tab. II — comparison to other work, including software
+//! microbenchmarks of the re-implemented baseline GRNG algorithms.
+
+use bnn_cim::config::ChipConfig;
+use bnn_cim::experiments::tab2;
+use bnn_cim::grng::baselines::all_sources;
+use bnn_cim::util::bench::{black_box, Suite};
+
+fn main() {
+    let mut suite = Suite::new("comparison (Tab. II)");
+    suite.header();
+
+    // Software throughput of each baseline algorithm (context column).
+    for mut src in all_sources(0xC0FFEE) {
+        let name = src.name();
+        suite.bench_throughput(&format!("sw {name}"), 1.0, || {
+            black_box(src.sample());
+        });
+    }
+    // Our in-word GRNG (fast path) for the same comparison.
+    let chip = ChipConfig::default();
+    let mut cell = bnn_cim::grng::GrngCell::ideal(&chip.grng, 5);
+    suite.bench_throughput("sw in-word grng (sim fast path)", 1.0, || {
+        black_box(cell.eps_fast());
+    });
+
+    let (rows, m) = tab2::comparison_table(&chip, 0);
+    println!("\n{}", tab2::render(&rows, &m));
+    suite.note("tab2.rng_tput_gsa_s (paper 5.12)", format!("{:.2}", m.rng_tput_gsa_s));
+    suite.note(
+        "tab2.rng_eff_pj_per_sa (paper 0.36)",
+        format!("{:.3}", m.rng_eff_pj_per_sa),
+    );
+    suite.note("tab2.nn_tput_gops (paper 102)", format!("{:.1}", m.nn_tput_gops));
+    suite.note(
+        "tab2.nn_eff_fj_per_op (paper 672)",
+        format!("{:.0}", m.nn_eff_fj_per_op),
+    );
+    suite.note("tab2.area_mm2 (paper 0.45)", format!("{:.3}", m.area_mm2));
+    suite.note(
+        "tab2.norm_rng_tput (paper 11.4 GSa/s/mm2)",
+        format!("{:.1}", m.rng_tput_norm_gsa_s_mm2),
+    );
+    suite.finish();
+}

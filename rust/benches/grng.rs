@@ -1,0 +1,81 @@
+//! Bench: GRNG subsystem — regenerates Fig. 8 (characterization),
+//! Fig. 9 (bias sweep) and Tab. I (temperature sweep), plus wallclock
+//! throughput of the two simulation modes.
+
+use bnn_cim::config::GrngConfig;
+use bnn_cim::experiments::{self, fig9, tab1};
+use bnn_cim::grng::GrngCell;
+use bnn_cim::util::bench::{black_box, Suite};
+
+fn main() {
+    let mut suite = Suite::new("grng (Fig. 8, Fig. 9, Tab. I)");
+    suite.header();
+    let cfg = GrngConfig::default();
+
+    // --- wallclock throughput of the two sampling modes ---
+    let mut cell = GrngCell::ideal(&cfg, 1);
+    suite.bench_throughput("sample_fast (closed form)", 1.0, || {
+        black_box(cell.eps_fast());
+    });
+    let mut cell2 = GrngCell::ideal(&cfg, 2);
+    suite.bench_throughput("sample_circuit (stochastic ODE)", 1.0, || {
+        black_box(cell2.sample_circuit());
+    });
+
+    // --- Fig. 8 ---
+    let rep = experiments::run_characterization(&cfg, 2500, 42, true);
+    suite.note("fig8.qq_r (paper 0.9967)", format!("{:.4}", rep.quality.qq_r));
+    suite.note(
+        "fig8.pulse_sd_ns (paper ~1.0)",
+        format!("{:.3}", rep.quality.width_sd_s * 1e9),
+    );
+    suite.note(
+        "fig8.latency_ns (paper ~69)",
+        format!("{:.1}", rep.quality.mean_latency_s * 1e9),
+    );
+    suite.note(
+        "fig8.energy_fj (paper 360)",
+        format!("{:.0}", rep.quality.mean_energy_j * 1e15),
+    );
+
+    // --- Fig. 9 ---
+    let pts = experiments::run_bias_sweep(&cfg, &fig9::default_biases(), 200, 7);
+    println!("\n{}", fig9::render(&pts));
+    let first = &pts[0];
+    let last = &pts[pts.len() - 1];
+    suite.note(
+        "fig9.latency_range_ns",
+        format!(
+            "{:.1} → {:.1}",
+            first.model_latency_s * 1e9,
+            last.model_latency_s * 1e9
+        ),
+    );
+    suite.note(
+        "fig9.sigma_range_ns",
+        format!(
+            "{:.2} → {:.2}",
+            first.model_sigma_s * 1e9,
+            last.model_sigma_s * 1e9
+        ),
+    );
+
+    // --- Tab. I ---
+    let temps = [28.0, 40.0, 50.0, 60.0];
+    let rows = experiments::run_temp_sweep(&cfg, &temps, 2500, 11);
+    println!("{}", tab1::render(&rows));
+    suite.note(
+        "tab1.latency_ratio_28_60 (paper 2.49)",
+        format!("{:.2}", rows[0].latency_s / rows[3].latency_s),
+    );
+    suite.note(
+        "tab1.sigma_ratio_60_28 (paper 2.62)",
+        format!("{:.2}", rows[3].width_sd_s / rows[0].width_sd_s),
+    );
+    suite.note(
+        "tab1.qq_r_60C (paper 0.0736 — collapse)",
+        format!("{:.3}", rows[3].qq_r),
+    );
+
+    suite.finish();
+}

@@ -1,0 +1,107 @@
+//! Bench: NN throughput — the paper's 102 GOp/s headline is a *hardware*
+//! rate (64×8×2 ops per 10 ns cycle); here we report that model number
+//! alongside measured wallclock of every inference path in the stack:
+//! rust-native layers, CIM-sim head, and the PJRT artifacts the
+//! coordinator actually serves.
+
+use bnn_cim::config::{ChipConfig, Config};
+use bnn_cim::data::SyntheticPerson;
+use bnn_cim::nn::Model;
+use bnn_cim::runtime::Engine;
+use bnn_cim::util::bench::{black_box, fmt_si, Suite};
+use std::path::Path;
+
+fn main() {
+    let mut suite = Suite::new("nn_throughput");
+    suite.header();
+    let chip = ChipConfig::default();
+    let hw_gops = chip.tile.ops_per_mvm() as f64 * chip.tile.clock_hz / 1e9;
+    suite.note("hardware model NN tput (paper 102 GOp/s)", format!("{hw_gops:.1} GOp/s"));
+
+    let gen = SyntheticPerson::new(32, 5);
+    let img = gen.sample(1).pixels;
+
+    // Rust-native reference path.
+    let mut model = Model::random(32, 2, 7);
+    let feats = model.forward_features(&img);
+    suite.bench("features fwd (rust-native)", || {
+        black_box(model.forward_features(&img));
+    });
+    suite.bench("bayes head MC sample (float ref)", || {
+        black_box(model.head_sample_ref(&feats));
+    });
+    model.map_head_to_hardware(&chip);
+    suite.bench("bayes head MC sample (CIM sim)", || {
+        black_box(model.head_sample_hw(&feats));
+    });
+
+    // PJRT artifact path (what the coordinator serves).
+    if Path::new("artifacts/manifest.json").exists() {
+        let mut engine = Engine::load(Path::new("artifacts")).unwrap();
+        let m = engine.manifest().clone();
+        let fspec = m.entry("features").unwrap().clone();
+        let hspec = m.entry("head").unwrap().clone();
+        let b = m.batch;
+        let images = vec![0.5f32; b * m.side * m.side];
+        let feats = engine
+            .run("features", &[(&images, &fspec.inputs[0].1)])
+            .unwrap();
+        let eps1 = vec![0.1f32; hspec.input_len(1)];
+        let eps2 = vec![0.1f32; hspec.input_len(2)];
+        let r = suite
+            .bench_throughput("pjrt features (batch 8)", b as f64, || {
+                black_box(
+                    engine
+                        .run("features", &[(&images, &fspec.inputs[0].1)])
+                        .unwrap(),
+                );
+            })
+            .clone();
+        suite.note(
+            "pjrt features imgs/s",
+            fmt_si(r.throughput_per_sec().unwrap_or(0.0)),
+        );
+        suite.bench_throughput("pjrt head MC pass (batch 8)", b as f64, || {
+            black_box(
+                engine
+                    .run(
+                        "head",
+                        &[
+                            (&feats, &hspec.inputs[0].1),
+                            (&eps1, &hspec.inputs[1].1),
+                            (&eps2, &hspec.inputs[2].1),
+                        ],
+                    )
+                    .unwrap(),
+            );
+        });
+        // End-to-end serving throughput via the coordinator.
+        let mut cfg = Config::default();
+        cfg.model.mc_samples = 8;
+        let coord = bnn_cim::coordinator::Coordinator::start(cfg).unwrap();
+        let opts = suite.opts();
+        let _ = opts;
+        let t0 = std::time::Instant::now();
+        let n_req = 48;
+        let rx: Vec<_> = (0..n_req)
+            .map(|i| coord.submit(gen.sample(i).pixels, 0).unwrap())
+            .collect();
+        for r in rx {
+            let _ = r.recv();
+        }
+        let dt = t0.elapsed();
+        suite.note(
+            "coordinator e2e (T=8, batch≤8)",
+            format!(
+                "{n_req} req in {dt:.2?} → {:.1} req/s",
+                n_req as f64 / dt.as_secs_f64()
+            ),
+        );
+        let snap = coord.metrics();
+        suite.note("coordinator batches", format!("{} (fill {:.2})", snap.batches, snap.mean_batch_fill));
+        coord.shutdown();
+    } else {
+        suite.note("pjrt", "skipped (artifacts not built)".into());
+    }
+    suite.finish();
+}

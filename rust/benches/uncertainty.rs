@@ -1,0 +1,70 @@
+//! Bench: Fig. 10 & 11 — uncertainty quality of the three inference arms
+//! plus the σ-precision and deferral-threshold sweeps.
+
+use bnn_cim::config::ChipConfig;
+use bnn_cim::experiments::{fig10_11::Arm, run_uncertainty, sigma_bit_sweep};
+use bnn_cim::nn::Model;
+use bnn_cim::util::bench::Suite;
+use std::path::Path;
+
+fn main() {
+    let mut suite = Suite::new("uncertainty (Fig. 10, Fig. 11)");
+    suite.header();
+    let weights = Path::new("artifacts/weights.json");
+    if !weights.exists() {
+        suite.note("status", "skipped (run `make artifacts`)".into());
+        suite.finish();
+        return;
+    }
+    let chip = ChipConfig::default();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (n_id, n_ood, mc) = if quick { (80, 32, 8) } else { (200, 80, 16) };
+
+    let mut reports = Vec::new();
+    for arm in [Arm::DetNn, Arm::BnnFloat, Arm::BnnHw] {
+        let mut model = Model::load(weights).unwrap();
+        let t = if arm == Arm::DetNn { 1 } else { mc };
+        let t0 = std::time::Instant::now();
+        let rep = run_uncertainty(&mut model, &chip, arm, n_id, n_ood, t, 5);
+        suite.note(
+            &format!("{arm:?} ({:.1?})", t0.elapsed()),
+            rep.render(),
+        );
+        reports.push(rep);
+    }
+    let det = &reports[0];
+    let bnn = &reports[1];
+    let hw = &reports[2];
+    suite.note(
+        "fig10.ape_incorrect det→bnn (paper 0.350→0.513, +46.6%)",
+        format!(
+            "{:.3} → {:.3} ({:+.1}%)",
+            det.ape_incorrect,
+            bnn.ape_incorrect,
+            (bnn.ape_incorrect / det.ape_incorrect - 1.0) * 100.0
+        ),
+    );
+    suite.note(
+        "fig10.ece det→bnn (paper 4.88→3.31, −32.2%)",
+        format!(
+            "{:.2}% → {:.2}% ({:+.1}%)",
+            det.ece_percent,
+            bnn.ece_percent,
+            (bnn.ece_percent / det.ece_percent - 1.0) * 100.0
+        ),
+    );
+    suite.note(
+        "fig11.recovery_gain bnn-hw (paper +3.5%)",
+        format!("{:+.2}%", hw.mean_recovery_gain() * 100.0),
+    );
+
+    // Fig. 11-left: σ precision sweep on the hardware arm.
+    let sweep = sigma_bit_sweep(weights, &chip, &[2, 3, 4], n_id / 2, mc / 2, 9);
+    for (bits, rep) in &sweep {
+        suite.note(
+            &format!("fig11.sigma_{bits}bit"),
+            format!("acc {:.3} ECE {:.2}%", rep.accuracy, rep.ece_percent),
+        );
+    }
+    suite.finish();
+}

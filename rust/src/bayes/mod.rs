@@ -1,0 +1,304 @@
+//! Uncertainty-estimation mathematics (§IV-B, Fig. 10–11).
+//!
+//! Monte-Carlo aggregation of BNN forward passes, predictive entropy,
+//! expected calibration error (ECE), average predictive entropy (APE) per
+//! outcome group, and accuracy-recovery-vs-deferral curves.
+
+use crate::util::stats::entropy_nats;
+
+/// Aggregated prediction from T Monte-Carlo forward passes.
+#[derive(Clone, Debug)]
+pub struct McPrediction {
+    /// Mean predictive distribution (softmax averaged over samples).
+    pub probs: Vec<f64>,
+    /// Predictive entropy H[E[p]] in nats.
+    pub entropy: f64,
+    /// Expected entropy E[H[p]] (aleatoric part) in nats.
+    pub expected_entropy: f64,
+    /// Mutual information (epistemic part): H[E[p]] − E[H[p]].
+    pub mutual_information: f64,
+    /// argmax class.
+    pub class: usize,
+    /// Confidence = max prob.
+    pub confidence: f64,
+    /// Number of MC samples aggregated.
+    pub t: usize,
+}
+
+/// Aggregate per-sample softmax outputs (T × classes).
+pub fn aggregate_mc(sample_probs: &[Vec<f64>]) -> McPrediction {
+    assert!(!sample_probs.is_empty());
+    let t = sample_probs.len();
+    let k = sample_probs[0].len();
+    let mut mean = vec![0.0f64; k];
+    let mut exp_h = 0.0;
+    for p in sample_probs {
+        assert_eq!(p.len(), k, "inconsistent class count");
+        for (m, &pi) in mean.iter_mut().zip(p.iter()) {
+            *m += pi;
+        }
+        exp_h += entropy_nats(p);
+    }
+    for m in mean.iter_mut() {
+        *m /= t as f64;
+    }
+    exp_h /= t as f64;
+    let entropy = entropy_nats(&mean);
+    let (class, &confidence) = mean
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap();
+    McPrediction {
+        probs: mean,
+        entropy,
+        expected_entropy: exp_h,
+        mutual_information: (entropy - exp_h).max(0.0),
+        class,
+        confidence,
+        t,
+    }
+}
+
+/// Numerically-stable softmax.
+pub fn softmax(logits: &[f64]) -> Vec<f64> {
+    let max = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|&l| (l - max).exp()).collect();
+    let sum: f64 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum).collect()
+}
+
+/// One evaluated test point: prediction + ground truth + OOD marker.
+#[derive(Clone, Debug)]
+pub struct EvalPoint {
+    pub pred: McPrediction,
+    pub label: usize,
+    pub ood: bool,
+}
+
+/// Expected calibration error over a set of in-distribution predictions,
+/// with `bins` equal-width confidence bins (standard 15-bin ECE of [31]).
+/// Returned in *percent* (the paper quotes ECE 4.88 → 3.31).
+pub fn ece_percent(points: &[EvalPoint], bins: usize) -> f64 {
+    assert!(bins > 0);
+    let id_points: Vec<&EvalPoint> = points.iter().filter(|p| !p.ood).collect();
+    if id_points.is_empty() {
+        return f64::NAN;
+    }
+    let mut bin_conf = vec![0.0f64; bins];
+    let mut bin_acc = vec![0.0f64; bins];
+    let mut bin_n = vec![0usize; bins];
+    for p in &id_points {
+        let b = ((p.pred.confidence * bins as f64) as usize).min(bins - 1);
+        bin_conf[b] += p.pred.confidence;
+        bin_acc[b] += if p.pred.class == p.label { 1.0 } else { 0.0 };
+        bin_n[b] += 1;
+    }
+    let n = id_points.len() as f64;
+    let mut ece = 0.0;
+    for b in 0..bins {
+        if bin_n[b] > 0 {
+            let conf = bin_conf[b] / bin_n[b] as f64;
+            let acc = bin_acc[b] / bin_n[b] as f64;
+            ece += (bin_n[b] as f64 / n) * (conf - acc).abs();
+        }
+    }
+    ece * 100.0
+}
+
+/// Reliability curve: (mean confidence, accuracy, count) per bin — the
+/// calibration plot of Fig. 10-right.
+pub fn reliability_curve(points: &[EvalPoint], bins: usize) -> Vec<(f64, f64, usize)> {
+    let mut out = Vec::with_capacity(bins);
+    let id_points: Vec<&EvalPoint> = points.iter().filter(|p| !p.ood).collect();
+    for b in 0..bins {
+        let lo = b as f64 / bins as f64;
+        let hi = (b + 1) as f64 / bins as f64;
+        let in_bin: Vec<&&EvalPoint> = id_points
+            .iter()
+            .filter(|p| p.pred.confidence >= lo && (p.pred.confidence < hi || b == bins - 1))
+            .collect();
+        if in_bin.is_empty() {
+            out.push((f64::NAN, f64::NAN, 0));
+        } else {
+            let conf = in_bin.iter().map(|p| p.pred.confidence).sum::<f64>() / in_bin.len() as f64;
+            let acc = in_bin.iter().filter(|p| p.pred.class == p.label).count() as f64
+                / in_bin.len() as f64;
+            out.push((conf, acc, in_bin.len()));
+        }
+    }
+    out
+}
+
+/// Average predictive entropy by outcome group (Fig. 10-left):
+/// (correct, incorrect, OOD).
+pub fn ape_by_group(points: &[EvalPoint]) -> (f64, f64, f64) {
+    let mean_of = |it: Vec<f64>| {
+        if it.is_empty() {
+            f64::NAN
+        } else {
+            it.iter().sum::<f64>() / it.len() as f64
+        }
+    };
+    let correct = mean_of(
+        points
+            .iter()
+            .filter(|p| !p.ood && p.pred.class == p.label)
+            .map(|p| p.pred.entropy)
+            .collect(),
+    );
+    let incorrect = mean_of(
+        points
+            .iter()
+            .filter(|p| !p.ood && p.pred.class != p.label)
+            .map(|p| p.pred.entropy)
+            .collect(),
+    );
+    let ood = mean_of(
+        points
+            .iter()
+            .filter(|p| p.ood)
+            .map(|p| p.pred.entropy)
+            .collect(),
+    );
+    (correct, incorrect, ood)
+}
+
+/// Accuracy after deferring predictions with entropy > threshold
+/// (Fig. 11-right). Returns (accuracy_on_kept, fraction_kept).
+pub fn deferred_accuracy(points: &[EvalPoint], threshold: f64) -> (f64, f64) {
+    let id_points: Vec<&EvalPoint> = points.iter().filter(|p| !p.ood).collect();
+    if id_points.is_empty() {
+        return (f64::NAN, 0.0);
+    }
+    let kept: Vec<&&EvalPoint> = id_points
+        .iter()
+        .filter(|p| p.pred.entropy <= threshold)
+        .collect();
+    if kept.is_empty() {
+        return (f64::NAN, 0.0);
+    }
+    let acc =
+        kept.iter().filter(|p| p.pred.class == p.label).count() as f64 / kept.len() as f64;
+    (acc, kept.len() as f64 / id_points.len() as f64)
+}
+
+/// Sweep deferral thresholds; returns (threshold, accuracy, kept_frac).
+pub fn accuracy_recovery_curve(
+    points: &[EvalPoint],
+    thresholds: &[f64],
+) -> Vec<(f64, f64, f64)> {
+    thresholds
+        .iter()
+        .map(|&t| {
+            let (acc, kept) = deferred_accuracy(points, t);
+            (t, acc, kept)
+        })
+        .collect()
+}
+
+/// Plain accuracy over in-distribution points.
+pub fn accuracy(points: &[EvalPoint]) -> f64 {
+    let id: Vec<&EvalPoint> = points.iter().filter(|p| !p.ood).collect();
+    if id.is_empty() {
+        return f64::NAN;
+    }
+    id.iter().filter(|p| p.pred.class == p.label).count() as f64 / id.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(probs: Vec<f64>, label: usize, ood: bool) -> EvalPoint {
+        EvalPoint {
+            pred: aggregate_mc(&[probs]),
+            label,
+            ood,
+        }
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+        // Stability at large logits.
+        let p = softmax(&[1000.0, 1000.0]);
+        assert!((p[0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mc_aggregation_decomposition() {
+        // Two confident-but-disagreeing samples: high MI (epistemic).
+        let disagree = aggregate_mc(&[vec![0.99, 0.01], vec![0.01, 0.99]]);
+        // Two agreeing-but-unsure samples: high aleatoric, low MI.
+        let unsure = aggregate_mc(&[vec![0.5, 0.5], vec![0.5, 0.5]]);
+        assert!(disagree.mutual_information > 0.5);
+        assert!(unsure.mutual_information < 1e-9);
+        assert!((disagree.entropy - unsure.entropy).abs() < 1e-9); // same mean
+        assert_eq!(disagree.t, 2);
+    }
+
+    #[test]
+    fn ece_perfect_and_overconfident() {
+        // Perfectly calibrated: confidence 0.8, accuracy 0.8.
+        let mut pts = Vec::new();
+        for i in 0..100 {
+            pts.push(point(vec![0.8, 0.2], if i < 80 { 0 } else { 1 }, false));
+        }
+        let e = ece_percent(&pts, 10);
+        assert!(e < 1.0, "calibrated ECE {e}");
+        // Overconfident: confidence 0.99, accuracy 0.5.
+        let mut pts = Vec::new();
+        for i in 0..100 {
+            pts.push(point(vec![0.99, 0.01], i % 2, false));
+        }
+        let e = ece_percent(&pts, 10);
+        assert!(e > 40.0, "overconfident ECE {e}");
+    }
+
+    #[test]
+    fn ape_groups_ordering() {
+        let pts = vec![
+            point(vec![0.95, 0.05], 0, false), // correct, low entropy
+            point(vec![0.6, 0.4], 1, false),   // incorrect, high entropy
+            point(vec![0.5, 0.5], 0, true),    // OOD, max entropy
+        ];
+        let (c, i, o) = ape_by_group(&pts);
+        assert!(c < i && i < o, "entropy ordering c={c} i={i} o={o}");
+    }
+
+    #[test]
+    fn deferral_improves_accuracy() {
+        let mut pts = Vec::new();
+        // 80 confident correct, 20 unsure incorrect.
+        for _ in 0..80 {
+            pts.push(point(vec![0.97, 0.03], 0, false));
+        }
+        for _ in 0..20 {
+            pts.push(point(vec![0.55, 0.45], 1, false));
+        }
+        let base = accuracy(&pts);
+        let (acc, kept) = deferred_accuracy(&pts, 0.3);
+        assert!((base - 0.8).abs() < 1e-9);
+        assert!(acc > 0.99, "after deferral acc {acc}");
+        assert!((kept - 0.8).abs() < 1e-9);
+        // Curve is monotone in kept fraction.
+        let curve = accuracy_recovery_curve(&pts, &[0.1, 0.3, 0.7]);
+        assert!(curve[0].2 <= curve[2].2);
+    }
+
+    #[test]
+    fn reliability_curve_bins() {
+        let pts = vec![
+            point(vec![0.95, 0.05], 0, false),
+            point(vec![0.55, 0.45], 0, false),
+        ];
+        let curve = reliability_curve(&pts, 10);
+        assert_eq!(curve.len(), 10);
+        assert_eq!(curve[9].2, 1); // 0.95 bin
+        assert_eq!(curve[5].2, 1); // 0.55 bin
+        assert_eq!(curve[0].2, 0);
+    }
+}

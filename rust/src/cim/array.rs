@@ -1,0 +1,247 @@
+//! Multi-tile array: maps FC layers larger than one 64×8 tile onto a grid
+//! of tiles, accumulating partial sums digitally across row-chunks (the
+//! standard CIM tiling scheme; the prototype chip contains one tile, the
+//! architecture scales by replication).
+
+use crate::cim::tile::{CimTile, MvmOptions};
+use crate::config::ChipConfig;
+use crate::energy::EnergyLedger;
+
+/// A grid of CIM tiles implementing a `in_dim × out_dim` matrix.
+pub struct TileArray {
+    pub chip: ChipConfig,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    tiles_x: usize,
+    tiles_y: usize,
+    /// Row-major over (tile_row, tile_col) = (input chunk, output chunk).
+    tiles: Vec<CimTile>,
+}
+
+impl TileArray {
+    pub fn new(chip: &ChipConfig, in_dim: usize, out_dim: usize) -> Self {
+        assert!(in_dim > 0 && out_dim > 0);
+        let rows = chip.tile.rows;
+        let words = chip.tile.words_per_row;
+        let tiles_x = in_dim.div_ceil(rows);
+        let tiles_y = out_dim.div_ceil(words);
+        let mut tiles = Vec::with_capacity(tiles_x * tiles_y);
+        for t in 0..tiles_x * tiles_y {
+            let mut c = chip.clone();
+            // Distinct die seed per tile: separate silicon instances.
+            c.die_seed = chip.die_seed.wrapping_add(1 + t as u64);
+            tiles.push(CimTile::new(&c));
+        }
+        Self {
+            chip: chip.clone(),
+            in_dim,
+            out_dim,
+            tiles_x,
+            tiles_y,
+            tiles,
+        }
+    }
+
+    pub fn tile_count(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn tiles(&self) -> &[CimTile] {
+        &self.tiles
+    }
+
+    pub fn tiles_mut(&mut self) -> &mut [CimTile] {
+        &mut self.tiles
+    }
+
+    /// Program from fixed-point μ/σ matrices (row-major [in_dim][out_dim]).
+    /// Out-of-matrix tile cells are zero-padded (σ=0, μ≈0).
+    pub fn program_matrix(&mut self, mu_fixed: &[f64], sigma_fixed: &[f64]) {
+        assert_eq!(mu_fixed.len(), self.in_dim * self.out_dim);
+        assert_eq!(sigma_fixed.len(), self.in_dim * self.out_dim);
+        let rows = self.chip.tile.rows;
+        let words = self.chip.tile.words_per_row;
+        for tx in 0..self.tiles_x {
+            for ty in 0..self.tiles_y {
+                let tile = &mut self.tiles[tx * self.tiles_y + ty];
+                for r in 0..rows {
+                    let gi = tx * rows + r;
+                    for w in 0..words {
+                        let go = ty * words + w;
+                        if gi < self.in_dim && go < self.out_dim {
+                            let idx = gi * self.out_dim + go;
+                            tile.program(r, w, mu_fixed[idx], sigma_fixed[idx]);
+                        } else {
+                            tile.program(r, w, 0.0, 0.0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// MVM over the full array: input codes (len = in_dim) → accumulated
+    /// per-path outputs (len = out_dim each) in fixed-point units.
+    ///
+    /// Padding correction: μ cells cannot store exact zero (odd-integer
+    /// grid), so padded rows would contribute ±1·X. Padded *inputs* are
+    /// zero (X=0 ⇒ no current), so only padded outputs need masking.
+    pub fn mvm(&mut self, x_codes: &[u8], opts: MvmOptions) -> crate::cim::tile::MvmResult {
+        assert_eq!(x_codes.len(), self.in_dim, "input length mismatch");
+        let rows = self.chip.tile.rows;
+        let words = self.chip.tile.words_per_row;
+        let mut out_mu = vec![0.0f64; self.out_dim];
+        let mut out_sigma = vec![0.0f64; self.out_dim];
+        for tx in 0..self.tiles_x {
+            // Input chunk, zero-padded.
+            let mut chunk = vec![0u8; rows];
+            for r in 0..rows {
+                let gi = tx * rows + r;
+                if gi < self.in_dim {
+                    chunk[r] = x_codes[gi];
+                }
+            }
+            for ty in 0..self.tiles_y {
+                let tile = &mut self.tiles[tx * self.tiles_y + ty];
+                let y = tile.mvm(&chunk, opts);
+                for w in 0..words {
+                    let go = ty * words + w;
+                    if go < self.out_dim {
+                        out_mu[go] += y.mu[w];
+                        out_sigma[go] += y.sigma[w];
+                    }
+                }
+            }
+        }
+        crate::cim::tile::MvmResult {
+            mu: out_mu,
+            sigma: out_sigma,
+        }
+    }
+
+    /// Exact digital reference across the array (same ε as last mvm).
+    pub fn mvm_reference(&self, x_codes: &[u8], bayesian: bool) -> crate::cim::tile::MvmResult {
+        let rows = self.chip.tile.rows;
+        let words = self.chip.tile.words_per_row;
+        let mut out_mu = vec![0.0f64; self.out_dim];
+        let mut out_sigma = vec![0.0f64; self.out_dim];
+        for tx in 0..self.tiles_x {
+            let mut chunk = vec![0u8; rows];
+            for r in 0..rows {
+                let gi = tx * rows + r;
+                if gi < self.in_dim {
+                    chunk[r] = x_codes[gi];
+                }
+            }
+            for ty in 0..self.tiles_y {
+                let tile = &self.tiles[tx * self.tiles_y + ty];
+                let y = tile.mvm_reference(&chunk, bayesian);
+                for w in 0..words {
+                    let go = ty * words + w;
+                    if go < self.out_dim {
+                        out_mu[go] += y.mu[w];
+                        out_sigma[go] += y.sigma[w];
+                    }
+                }
+            }
+        }
+        crate::cim::tile::MvmResult {
+            mu: out_mu,
+            sigma: out_sigma,
+        }
+    }
+
+    /// Aggregate energy ledger across tiles.
+    pub fn ledger(&self) -> EnergyLedger {
+        let mut total = EnergyLedger::new();
+        for t in &self.tiles {
+            total.absorb(&t.ledger);
+        }
+        total
+    }
+
+    pub fn reset_ledgers(&mut self) {
+        for t in &mut self.tiles {
+            t.ledger.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Pcg64, Rng64};
+    use crate::util::stats::pearson;
+
+    fn small_chip() -> ChipConfig {
+        let mut chip = ChipConfig::default();
+        chip.tile.rows = 16;
+        chip.tile.words_per_row = 4;
+        chip
+    }
+
+    #[test]
+    fn grid_dimensions() {
+        let chip = small_chip();
+        let arr = TileArray::new(&chip, 40, 10);
+        // ceil(40/16)=3 input chunks × ceil(10/4)=3 output chunks
+        assert_eq!(arr.tile_count(), 9);
+    }
+
+    #[test]
+    fn array_mvm_tracks_reference_across_tiles() {
+        let chip = small_chip();
+        let in_dim = 40;
+        let out_dim = 10;
+        let mut arr = TileArray::new(&chip, in_dim, out_dim);
+        for t in arr.tiles_mut() {
+            crate::cim::calibration::calibrate(t, 16, 4).unwrap();
+        }
+        let mut rng = Pcg64::new(3);
+        let mu: Vec<f64> = (0..in_dim * out_dim)
+            .map(|_| (rng.next_f64() * 2.0 - 1.0) * 200.0)
+            .collect();
+        let sigma = vec![0.0; in_dim * out_dim];
+        arr.program_matrix(&mu, &sigma);
+        let opts = MvmOptions {
+            bayesian: false,
+            refresh_epsilon: false,
+            ideal_analog: false,
+        };
+        let mut ys = Vec::new();
+        let mut refs = Vec::new();
+        for s in 0..12 {
+            let x: Vec<u8> = {
+                let mut r2 = Pcg64::new(s);
+                (0..in_dim).map(|_| r2.next_below(16) as u8).collect()
+            };
+            ys.extend(arr.mvm(&x, opts).combined());
+            refs.extend(arr.mvm_reference(&x, false).combined());
+        }
+        let r = pearson(&ys, &refs);
+        // Each of the 3 input chunks adds an independent ADC conversion
+        // per output, so the multi-tile bound is looser than single-tile.
+        assert!(r > 0.98, "array output must track reference, r={r}");
+    }
+
+    #[test]
+    fn ledger_aggregates_tiles() {
+        let chip = small_chip();
+        let mut arr = TileArray::new(&chip, 32, 8);
+        arr.program_matrix(&vec![1.0; 32 * 8], &vec![0.0; 32 * 8]);
+        arr.reset_ledgers();
+        let x = vec![7u8; 32];
+        let _ = arr.mvm(&x, MvmOptions::default());
+        let ledger = arr.ledger();
+        assert_eq!(ledger.mvm_count, arr.tile_count() as u64);
+        assert!(ledger.total_j() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "input length mismatch")]
+    fn wrong_input_length() {
+        let chip = small_chip();
+        let mut arr = TileArray::new(&chip, 32, 8);
+        let _ = arr.mvm(&[0u8; 5], MvmOptions::default());
+    }
+}

@@ -1,0 +1,99 @@
+//! Row IDAC model (§III-D): 4-bit digital input → read-wordline voltage →
+//! cell current linearly proportional to X_i, with a static integral
+//! nonlinearity (INL) bow per instance.
+
+use crate::config::IdacConfig;
+use crate::util::rng::{Pcg64, Rng64};
+
+/// One row's IDAC. The nonlinearity is static per instance (process
+/// variation), drawn at construction from the die seed.
+#[derive(Clone, Debug)]
+pub struct Idac {
+    cfg: IdacConfig,
+    /// Static INL bow coefficient (relative, applied as a parabola that
+    /// vanishes at 0 and full scale — the classic DAC bow shape).
+    bow: f64,
+    /// Static gain error (relative).
+    gain_err: f64,
+}
+
+impl Idac {
+    pub fn new(cfg: &IdacConfig, seed: u64) -> Self {
+        let mut rng = Pcg64::with_stream(seed, 0x1DAC);
+        Self {
+            cfg: cfg.clone(),
+            bow: cfg.inl_rel * rng.next_gaussian(),
+            gain_err: 0.25 * cfg.inl_rel * rng.next_gaussian(),
+        }
+    }
+
+    /// Ideal transfer: code → normalized drive in [0, 1].
+    pub fn ideal_drive(&self, code: u8) -> f64 {
+        let max = (self.cfg.levels() - 1) as f64;
+        (code.min((self.cfg.levels() - 1) as u8) as f64) / max
+    }
+
+    /// Actual normalized drive including INL bow and gain error.
+    pub fn drive(&self, code: u8) -> f64 {
+        let x = self.ideal_drive(code);
+        let bow = self.bow * 4.0 * x * (1.0 - x); // zero at rails, max mid-scale
+        (x * (1.0 + self.gain_err) + bow).max(0.0)
+    }
+
+    /// Cell current for a given input code [A] (per unit cell conductance).
+    pub fn current(&self, code: u8) -> f64 {
+        self.drive(code) * self.cfg.lsb_current_a * (self.cfg.levels() - 1) as f64
+    }
+
+    /// Per-conversion energy [J].
+    pub fn energy_j(&self) -> f64 {
+        self.cfg.energy_j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drive_monotonic_and_bounded() {
+        let cfg = IdacConfig::default();
+        let idac = Idac::new(&cfg, 3);
+        let mut prev = -1.0;
+        for code in 0..16u8 {
+            let d = idac.drive(code);
+            assert!(d >= 0.0 && d <= 1.05, "drive {d} out of range");
+            assert!(d > prev, "drive must be monotonic (INL is small)");
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn rails_are_exact_up_to_gain() {
+        let cfg = IdacConfig::default();
+        let idac = Idac::new(&cfg, 4);
+        assert_eq!(idac.drive(0), 0.0);
+        let fs = idac.drive(15);
+        assert!((fs - 1.0).abs() < 0.02, "full scale {fs}");
+    }
+
+    #[test]
+    fn current_scales_with_code() {
+        let cfg = IdacConfig::default();
+        let idac = Idac::new(&cfg, 5);
+        let i15 = idac.current(15);
+        let i1 = idac.current(1);
+        assert!(i15 > 10.0 * i1);
+        assert!(i15 <= cfg.lsb_current_a * 15.0 * 1.05);
+    }
+
+    #[test]
+    fn instances_differ_but_deterministic() {
+        let cfg = IdacConfig::default();
+        let a = Idac::new(&cfg, 1);
+        let b = Idac::new(&cfg, 1);
+        let c = Idac::new(&cfg, 2);
+        assert_eq!(a.drive(7), b.drive(7));
+        assert_ne!(a.drive(7), c.drive(7));
+    }
+}

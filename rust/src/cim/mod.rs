@@ -1,0 +1,15 @@
+//! Compute-in-memory tile simulator (§III-B/D): memory-word encodings,
+//! data converters, the two-subarray tile, multi-tile arrays, and the
+//! static-variation calibration controller.
+
+pub mod adc;
+pub mod array;
+pub mod calibration;
+pub mod idac;
+pub mod tile;
+pub mod word;
+
+pub use array::TileArray;
+pub use calibration::{calibrate, CalibrationReport};
+pub use tile::{CimTile, MvmOptions};
+pub use word::{MuWord, SigmaWord, WeightScale};

@@ -1,0 +1,617 @@
+//! The CIM tile (Fig. 3): two crossbar subarrays computing X·μ and
+//! X·(σ⊙ε) in one cycle, sharing the 4-bit input X through row IDACs,
+//! digitized per bit-column by 6-bit SAR ADCs and recombined (shift-add)
+//! by the reduction logic.
+//!
+//! Signal chain modeled per column j, bit-plane b:
+//!
+//!   μ path:  q_μ(j,b)  = Σ_i drive(X_i) · d_μ(i,j,b)          d ∈ {−1,+1}
+//!   σε path: q_σ(j,b)  = Σ_i drive(X_i) · bit_σ(i,j,b) · ε_ij
+//!
+//! where `drive` is the IDAC transfer (0..1·15), ε carries the GRNG's
+//! sign (BL_P/BL_N steering) and magnitude (pulse width). Charges map to
+//! ADC LSBs through a full-scale factor, get offset/noise/clipping from
+//! the ADC model, are offset-corrected and shift-added by the reduction
+//! logic, and finally scaled back to fixed-point weight units.
+
+use crate::cim::adc::SarAdc;
+use crate::cim::idac::Idac;
+use crate::cim::word::{MuWord, SigmaWord};
+use crate::config::ChipConfig;
+use crate::energy::{Component, EnergyLedger};
+use crate::grng::{DieVariation, GrngBank};
+use crate::util::rng::SplitMix64;
+
+/// Options controlling an MVM.
+#[derive(Clone, Copy, Debug)]
+pub struct MvmOptions {
+    /// Include the σε path (false = deterministic NN, μ only).
+    pub bayesian: bool,
+    /// Draw fresh ε for this MVM (false = reuse the last sample matrix).
+    pub refresh_epsilon: bool,
+    /// Bypass analog non-idealities (ideal ADC, ideal IDAC): ablation.
+    pub ideal_analog: bool,
+}
+
+impl Default for MvmOptions {
+    fn default() -> Self {
+        Self {
+            bayesian: true,
+            refresh_epsilon: true,
+            ideal_analog: false,
+        }
+    }
+}
+
+/// MVM output with the two subarray paths kept separate: the reduction
+/// logic recombines them with independent shifts (μ and σ words have
+/// different LSB weights — 8-bit vs 4-bit grids).
+#[derive(Clone, Debug)]
+pub struct MvmResult {
+    /// X·μ path, fixed-point μ units.
+    pub mu: Vec<f64>,
+    /// X·(σ⊙ε) path, fixed-point σ units.
+    pub sigma: Vec<f64>,
+}
+
+impl MvmResult {
+    /// Recombine with unit scales (μ LSB = σ LSB) — the simple case used
+    /// when both paths share one `WeightScale`.
+    pub fn combined(&self) -> Vec<f64> {
+        self.mu
+            .iter()
+            .zip(self.sigma.iter())
+            .map(|(m, s)| m + s)
+            .collect()
+    }
+
+    /// Recombine with independent path scales.
+    pub fn combined_scaled(&self, k_mu: f64, k_sigma: f64) -> Vec<f64> {
+        self.mu
+            .iter()
+            .zip(self.sigma.iter())
+            .map(|(m, s)| m * k_mu + s * k_sigma)
+            .collect()
+    }
+}
+
+/// One CIM tile: `rows` inputs × `words` outputs.
+pub struct CimTile {
+    pub chip: ChipConfig,
+    rows: usize,
+    words: usize,
+    /// μ words, row-major [rows × words].
+    mu: Vec<MuWord>,
+    /// σ words, row-major [rows × words].
+    sigma: Vec<SigmaWord>,
+    /// In-word GRNG bank (one cell per σ word).
+    pub bank: GrngBank,
+    /// Cached ε matrix (refreshed per MVM unless told otherwise).
+    eps: Vec<f64>,
+    /// Row IDACs.
+    idacs: Vec<Idac>,
+    /// Column ADCs: [words × (mu_bits + sigma_bits)].
+    adcs: Vec<SarAdc>,
+    /// Digital offset-correction registers per ADC [LSB], set by
+    /// calibration (zeros when uncalibrated).
+    pub adc_offset_cal: Vec<f64>,
+    /// μ-side correction for GRNG static offsets ε₀ (Eq. 10): value to
+    /// subtract from the recombined σε word output, in weight LSB units.
+    pub grng_offset_cal: Vec<f64>,
+    /// Energy ledger.
+    pub ledger: EnergyLedger,
+    /// ADC full-scale: LSB size in "drive·digit" charge units.
+    adc_lsb_mu: f64,
+    adc_lsb_sigma: f64,
+}
+
+impl CimTile {
+    pub fn new(chip: &ChipConfig) -> Self {
+        let rows = chip.tile.rows;
+        let words = chip.tile.words_per_row;
+        let die = DieVariation::draw(&chip.grng, rows, words, chip.die_seed);
+        let bank = GrngBank::new(&chip.grng, &die, chip.die_seed);
+        let mut seeder = SplitMix64::new(chip.die_seed ^ 0x711E_C1A0);
+        let idacs = (0..rows).map(|_| Idac::new(&chip.idac, seeder.split())).collect();
+        let adc_per_word = chip.tile.mu_bits + chip.tile.sigma_bits;
+        let adcs = (0..words * adc_per_word)
+            .map(|_| SarAdc::new(&chip.adc, seeder.split()))
+            .collect();
+        // ADC full scale: worst-case μ column charge is rows·15·(±1); the
+        // design centers the transfer so that a typical (quarter-occupancy)
+        // column spans the code range — the standard CIM FS compromise
+        // between clipping and quantization noise.
+        let x_max = (chip.idac.levels() - 1) as f64;
+        let half_codes = (1i64 << (chip.adc.bits - 1)) as f64;
+        let fs_frac = 0.25;
+        let adc_lsb_mu = rows as f64 * x_max * fs_frac / half_codes;
+        // σε path: the Gaussian ε spreads column charge wider than the
+        // ±1 μ digits (σ codes reach 15 and |ε| tails run past 3), so its
+        // differential ADC is ranged 2× — otherwise trained-model σε
+        // columns clip and the head collapses to chance.
+        let adc_lsb_sigma = 2.0 * adc_lsb_mu;
+        Self {
+            chip: chip.clone(),
+            rows,
+            words,
+            mu: vec![MuWord { digits: 0, bits: chip.tile.mu_bits as u8 }; rows * words],
+            sigma: vec![SigmaWord { code: 0, bits: chip.tile.sigma_bits as u8 }; rows * words],
+            bank,
+            eps: vec![0.0; rows * words],
+            idacs,
+            adcs,
+            adc_offset_cal: vec![0.0; words * adc_per_word],
+            grng_offset_cal: vec![0.0; rows * words],
+            ledger: EnergyLedger::new(),
+            adc_lsb_mu,
+            adc_lsb_sigma,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// Program one weight (fixed-point units; see `word::WeightScale`).
+    /// Costs SRAM write energy.
+    pub fn program(&mut self, row: usize, word: usize, mu_fixed: f64, sigma_fixed: f64) {
+        let idx = row * self.words + word;
+        self.mu[idx] = MuWord::quantize(mu_fixed, self.chip.tile.mu_bits as u8);
+        self.sigma[idx] = SigmaWord::quantize(sigma_fixed, self.chip.tile.sigma_bits as u8);
+        let cells = 2 * self.chip.tile.mu_bits + self.chip.tile.sigma_bits;
+        self.ledger.deposit(
+            Component::SramWrite,
+            cells as f64 * self.chip.energy.sram_cell_write_j,
+        );
+    }
+
+    /// Program a full weight matrix (row-major [rows][words]).
+    pub fn program_matrix(&mut self, mu_fixed: &[f64], sigma_fixed: &[f64]) {
+        assert_eq!(mu_fixed.len(), self.rows * self.words);
+        assert_eq!(sigma_fixed.len(), self.rows * self.words);
+        for r in 0..self.rows {
+            for w in 0..self.words {
+                let i = r * self.words + w;
+                self.program(r, w, mu_fixed[i], sigma_fixed[i]);
+            }
+        }
+    }
+
+    /// Stored μ value (fixed-point) at (row, word) — for tests.
+    pub fn mu_value(&self, row: usize, word: usize) -> i32 {
+        self.mu[row * self.words + word].value()
+    }
+
+    /// Stored σ code at (row, word).
+    pub fn sigma_value(&self, row: usize, word: usize) -> u32 {
+        self.sigma[row * self.words + word].value()
+    }
+
+    /// Direct σ-word write (used by the calibration controller).
+    pub fn write_sigma_raw(&mut self, row: usize, word: usize, code: u8) {
+        let idx = row * self.words + word;
+        self.sigma[idx] = SigmaWord {
+            code: code.min(((1u16 << self.chip.tile.sigma_bits) - 1) as u8),
+            bits: self.chip.tile.sigma_bits as u8,
+        };
+        self.ledger.deposit(
+            Component::SramWrite,
+            self.chip.tile.sigma_bits as f64 * self.chip.energy.sram_cell_write_j,
+        );
+    }
+
+    /// The ε matrix used by the last MVM (row-major) — for tests/debug.
+    pub fn last_epsilon(&self) -> &[f64] {
+        &self.eps
+    }
+
+    /// Perform one matrix-vector multiplication.
+    ///
+    /// `x`: input codes (len = rows, values < 2^input_bits).
+    /// Returns the two subarray outputs (`mu` ≈ Σ X_i·μ_ij,
+    /// `sigma` ≈ Σ X_i·σ_ij·ε_ij, each in its own fixed-point units).
+    pub fn mvm(&mut self, x: &[u8], opts: MvmOptions) -> MvmResult {
+        assert_eq!(x.len(), self.rows, "input length must equal tile rows");
+        let max_code = (self.chip.idac.levels() - 1) as u8;
+        debug_assert!(x.iter().all(|&c| c <= max_code), "input code overflow");
+
+        if opts.bayesian && opts.refresh_epsilon {
+            self.bank.fill_epsilon(&mut self.eps);
+            self.ledger.grng_samples += self.eps.len() as u64;
+            let grng_j = self.bank.mean_energy_per_sample() * self.eps.len() as f64;
+            self.ledger.deposit(Component::Grng, grng_j);
+        }
+
+        // Row drives through the IDACs (energy: one conversion per row).
+        let mut drives = vec![0.0f64; self.rows];
+        let x_fs = (self.chip.idac.levels() - 1) as f64;
+        for r in 0..self.rows {
+            drives[r] = if opts.ideal_analog {
+                x[r] as f64
+            } else {
+                self.idacs[r].drive(x[r]) * x_fs
+            };
+        }
+        self.ledger.deposit(
+            Component::Idac,
+            self.rows as f64 * self.chip.idac.energy_j,
+        );
+
+        let mu_bits = self.chip.tile.mu_bits;
+        let sigma_bits = self.chip.tile.sigma_bits;
+        let adc_per_word = mu_bits + sigma_bits;
+        let mut out_mu = vec![0.0f64; self.words];
+        let mut out_sigma = vec![0.0f64; self.words];
+
+        for w in 0..self.words {
+            // ---- μ subarray: one differential column per bit-plane ----
+            let mut y_mu = 0.0f64;
+            for b in 0..mu_bits {
+                let mut q = 0.0f64;
+                for r in 0..self.rows {
+                    q += drives[r] * self.mu[r * self.words + w].digit(b) as f64;
+                }
+                let v_lsb = q / self.adc_lsb_mu;
+                let adc_idx = w * adc_per_word + b;
+                let code = if opts.ideal_analog {
+                    self.adcs[adc_idx].convert_ideal(v_lsb)
+                } else {
+                    self.adcs[adc_idx].convert(v_lsb)
+                };
+                let corrected = code as f64 - self.adc_offset_cal[adc_idx];
+                y_mu += (1u64 << b) as f64 * corrected * self.adc_lsb_mu;
+            }
+
+            // ---- σε subarray ----
+            let mut y_sigma = 0.0f64;
+            if opts.bayesian {
+                for b in 0..sigma_bits {
+                    let mut q = 0.0f64;
+                    for r in 0..self.rows {
+                        let i = r * self.words + w;
+                        if self.sigma[i].bit(b) == 1 {
+                            q += drives[r] * self.eps[i];
+                        }
+                    }
+                    let v_lsb = q / self.adc_lsb_sigma;
+                    let adc_idx = w * adc_per_word + mu_bits + b;
+                    let code = if opts.ideal_analog {
+                        self.adcs[adc_idx].convert_ideal(v_lsb)
+                    } else {
+                        self.adcs[adc_idx].convert(v_lsb)
+                    };
+                    let corrected = code as f64 - self.adc_offset_cal[adc_idx];
+                    y_sigma += (1u64 << b) as f64 * corrected * self.adc_lsb_sigma;
+                }
+                // GRNG static-offset correction (Eq. 10): subtract the
+                // calibrated Σ_i X_i·σ_ij·ε₀_ij estimate.
+                let mut corr = 0.0f64;
+                for r in 0..self.rows {
+                    let i = r * self.words + w;
+                    if self.grng_offset_cal[i] != 0.0 {
+                        corr += drives[r]
+                            * self.sigma[i].value() as f64
+                            * self.grng_offset_cal[i];
+                    }
+                }
+                y_sigma -= corr;
+            }
+
+            out_mu[w] = y_mu;
+            out_sigma[w] = y_sigma;
+        }
+
+        // ---- energy bookkeeping ----
+        let e = &self.chip.energy;
+        let cells_active = self.rows * self.words * (2 * mu_bits + sigma_bits);
+        self.ledger
+            .deposit(Component::Sram, cells_active as f64 * e.sram_cell_read_j);
+        let adc_count = self.words * adc_per_word;
+        let adc_used = if opts.bayesian {
+            adc_count
+        } else {
+            self.words * mu_bits
+        };
+        self.ledger
+            .deposit(Component::Adc, adc_used as f64 * self.chip.adc.energy_j);
+        // Differential: 2 bitlines per column.
+        self.ledger.deposit(
+            Component::Bitline,
+            2.0 * adc_used as f64 * e.bitline_precharge_j,
+        );
+        self.ledger.deposit(
+            Component::Reduction,
+            self.words as f64 * e.reduction_word_j,
+        );
+        if opts.bayesian {
+            self.ledger.deposit(
+                Component::Switches,
+                (self.rows * self.words) as f64 * e.switch_word_j,
+            );
+        }
+        self.ledger.deposit(
+            Component::Leakage,
+            e.tile_leakage_w / self.chip.tile.clock_hz,
+        );
+        self.ledger.mvm_count += 1;
+
+        MvmResult {
+            mu: out_mu,
+            sigma: out_sigma,
+        }
+    }
+
+    /// Raw (uncorrected) column codes for one conversion with input `x` —
+    /// used by the calibration controller to estimate ADC offsets.
+    /// Deposits the corresponding conversion energy.
+    pub fn raw_column_codes(&mut self, x: &[u8]) -> crate::error::Result<Vec<i64>> {
+        if x.len() != self.rows {
+            return Err(crate::error::Error::Calibration(
+                "input length must equal tile rows".into(),
+            ));
+        }
+        let mu_bits = self.chip.tile.mu_bits;
+        let sigma_bits = self.chip.tile.sigma_bits;
+        let adc_per_word = mu_bits + sigma_bits;
+        let x_fs = (self.chip.idac.levels() - 1) as f64;
+        let drives: Vec<f64> = (0..self.rows)
+            .map(|r| self.idacs[r].drive(x[r]) * x_fs)
+            .collect();
+        let mut codes = vec![0i64; self.words * adc_per_word];
+        for w in 0..self.words {
+            for b in 0..mu_bits {
+                let mut q = 0.0;
+                for r in 0..self.rows {
+                    q += drives[r] * self.mu[r * self.words + w].digit(b) as f64;
+                }
+                codes[w * adc_per_word + b] =
+                    self.adcs[w * adc_per_word + b].convert(q / self.adc_lsb_mu);
+            }
+            for b in 0..sigma_bits {
+                let mut q = 0.0;
+                for r in 0..self.rows {
+                    let i = r * self.words + w;
+                    if self.sigma[i].bit(b) == 1 {
+                        q += drives[r] * self.eps[i];
+                    }
+                }
+                let idx = w * adc_per_word + mu_bits + b;
+                codes[idx] = self.adcs[idx].convert(q / self.adc_lsb_sigma);
+            }
+        }
+        self.ledger
+            .deposit(Component::Adc, codes.len() as f64 * self.chip.adc.energy_j);
+        Ok(codes)
+    }
+
+    /// Maximum input code of the IDAC.
+    pub fn max_input_code(&self) -> u8 {
+        (self.chip.idac.levels() - 1) as u8
+    }
+
+    /// The effective row drive for an input code (calibration math).
+    pub fn drive_of_row_code(&self, row: usize, code: u8) -> f64 {
+        let x_fs = (self.chip.idac.levels() - 1) as f64;
+        self.idacs[row].drive(code) * x_fs
+    }
+
+    /// Draw a fresh ε matrix without running an MVM (calibration).
+    pub fn refresh_epsilon(&mut self) {
+        self.bank.fill_epsilon(&mut self.eps);
+        self.ledger.grng_samples += self.eps.len() as u64;
+        let grng_j = self.bank.mean_energy_per_sample() * self.eps.len() as f64;
+        self.ledger.deposit(Component::Grng, grng_j);
+    }
+
+    /// ADC LSB size of the σε path in charge units (calibration math).
+    pub fn sigma_lsb(&self) -> f64 {
+        self.adc_lsb_sigma
+    }
+
+    /// Index of the ADC for (word, σ bit-plane) in the flat ADC array.
+    pub fn sigma_adc_index(&self, word: usize, bit: usize) -> usize {
+        word * (self.chip.tile.mu_bits + self.chip.tile.sigma_bits) + self.chip.tile.mu_bits + bit
+    }
+
+    /// Exact digital reference of what the tile approximates:
+    /// mu_j = Σ_i X_i·μ_ij, sigma_j = Σ_i X_i·σ_ij·ε_ij (same ε).
+    pub fn mvm_reference(&self, x: &[u8], bayesian: bool) -> MvmResult {
+        let mut out_mu = vec![0.0f64; self.words];
+        let mut out_sigma = vec![0.0f64; self.words];
+        for w in 0..self.words {
+            for r in 0..self.rows {
+                let i = r * self.words + w;
+                out_mu[w] += x[r] as f64 * self.mu[i].value() as f64;
+                if bayesian {
+                    out_sigma[w] += x[r] as f64 * self.sigma[i].value() as f64 * self.eps[i];
+                }
+            }
+        }
+        MvmResult {
+            mu: out_mu,
+            sigma: out_sigma,
+        }
+    }
+
+    /// Per-MVM energy at steady state [J] (one fresh-ε Bayesian MVM).
+    pub fn energy_per_mvm(&mut self) -> f64 {
+        let x = vec![((self.chip.idac.levels() - 1) / 2) as u8; self.rows];
+        self.ledger.reset();
+        let _ = self.mvm(&x, MvmOptions::default());
+        let j = self.ledger.total_j();
+        self.ledger.reset();
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Pcg64, Rng64};
+    use crate::util::stats::{pearson, Summary};
+
+    fn make_tile() -> CimTile {
+        CimTile::new(&ChipConfig::default())
+    }
+
+    fn random_program(tile: &mut CimTile, seed: u64, sigma_scale: f64) {
+        let mut rng = Pcg64::new(seed);
+        for r in 0..tile.rows() {
+            for w in 0..tile.words() {
+                let mu = (rng.next_f64() * 2.0 - 1.0) * 200.0;
+                let sg = rng.next_f64() * sigma_scale;
+                tile.program(r, w, mu, sg);
+            }
+        }
+    }
+
+    fn random_input(tile: &CimTile, seed: u64) -> Vec<u8> {
+        let mut rng = Pcg64::new(seed ^ 0xF00D);
+        (0..tile.rows())
+            .map(|_| (rng.next_below(16)) as u8)
+            .collect()
+    }
+
+    #[test]
+    fn deterministic_mvm_tracks_reference() {
+        let mut tile = make_tile();
+        // The chip always runs calibrated (ADC offsets are corrected by
+        // the reduction logic, §III-B); calibrate before measuring.
+        crate::cim::calibration::calibrate(&mut tile, 16, 4).unwrap();
+        random_program(&mut tile, 1, 0.0);
+        let opts = MvmOptions {
+            bayesian: false,
+            refresh_epsilon: false,
+            ideal_analog: false,
+        };
+        let mut ys = Vec::new();
+        let mut refs = Vec::new();
+        for s in 0..20 {
+            let x = random_input(&tile, s);
+            ys.extend(tile.mvm(&x, opts).combined());
+            refs.extend(tile.mvm_reference(&x, false).combined());
+        }
+        let r = pearson(&ys, &refs);
+        assert!(r > 0.99, "analog MVM should track digital reference, r={r}");
+        // Scale should be ≈1 (reduction reconstructs absolute values).
+        let sy = Summary::from_slice(&ys);
+        let sr = Summary::from_slice(&refs);
+        let gain = sy.std() / sr.std();
+        assert!((0.9..1.1).contains(&gain), "gain {gain}");
+    }
+
+    #[test]
+    fn ideal_analog_is_near_exact() {
+        let mut tile = make_tile();
+        random_program(&mut tile, 2, 0.0);
+        let opts = MvmOptions {
+            bayesian: false,
+            refresh_epsilon: false,
+            ideal_analog: true,
+        };
+        let x = random_input(&tile, 7);
+        let y = tile.mvm(&x, opts).combined();
+        let r = tile.mvm_reference(&x, false).combined();
+        for (a, b) in y.iter().zip(r.iter()) {
+            // Only ADC quantization (and clipping) remains.
+            let tol = 8.0 * tile.adc_lsb_mu * 128.0; // worst-case bitplane rounding
+            assert!((a - b).abs() <= tol, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn bayesian_mvm_adds_variance_proportional_to_sigma() {
+        let mut tile = make_tile();
+        random_program(&mut tile, 3, 8.0);
+        let x = random_input(&tile, 9);
+        let opts = MvmOptions::default();
+        let mut outs0 = Vec::new();
+        for _ in 0..60 {
+            outs0.push(tile.mvm(&x, opts).combined()[0]);
+        }
+        let var_low = Summary::from_slice(&outs0).variance();
+        // Re-program with larger σ → larger output variance.
+        random_program(&mut tile, 3, 15.0);
+        let mut outs1 = Vec::new();
+        for _ in 0..60 {
+            outs1.push(tile.mvm(&x, opts).combined()[0]);
+        }
+        let var_high = Summary::from_slice(&outs1).variance();
+        assert!(
+            var_high > var_low,
+            "σ↑ must increase output variance: {var_low} vs {var_high}"
+        );
+    }
+
+    #[test]
+    fn epsilon_refresh_control() {
+        let mut tile = make_tile();
+        random_program(&mut tile, 4, 8.0);
+        let x = random_input(&tile, 11);
+        let refresh = MvmOptions::default();
+        let hold = MvmOptions {
+            refresh_epsilon: false,
+            ..MvmOptions::default()
+        };
+        let _ = tile.mvm(&x, refresh);
+        let e1 = tile.last_epsilon().to_vec();
+        let _ = tile.mvm(&x, hold);
+        assert_eq!(tile.last_epsilon(), &e1[..], "ε must persist when held");
+        let _ = tile.mvm(&x, refresh);
+        assert_ne!(tile.last_epsilon(), &e1[..], "ε must change on refresh");
+    }
+
+    #[test]
+    fn energy_breakdown_sram_dominates() {
+        // Fig. 12: SRAM > 63 % of tile energy for one complete MVM.
+        let mut tile = make_tile();
+        random_program(&mut tile, 5, 8.0);
+        let x = random_input(&tile, 13);
+        tile.ledger.reset();
+        let _ = tile.mvm(&x, MvmOptions::default());
+        let total = tile.ledger.total_j();
+        let sram = tile.ledger.component_j(Component::Sram);
+        let share = sram / total;
+        assert!(
+            share > 0.55,
+            "SRAM share {share:.3} should dominate (paper: >0.63)"
+        );
+        // NN efficiency ballpark (Tab. II: 672 fJ/Op).
+        let fj_per_op = total / tile.chip.tile.ops_per_mvm() as f64 * 1e15;
+        assert!(
+            (400.0..1000.0).contains(&fj_per_op),
+            "efficiency {fj_per_op:.0} fJ/Op should be ≈672"
+        );
+    }
+
+    #[test]
+    fn non_bayesian_mvm_cheaper() {
+        let mut tile = make_tile();
+        random_program(&mut tile, 6, 8.0);
+        let x = random_input(&tile, 17);
+        tile.ledger.reset();
+        let _ = tile.mvm(&x, MvmOptions::default());
+        let bayes_j = tile.ledger.total_j();
+        tile.ledger.reset();
+        let _ = tile.mvm(
+            &x,
+            MvmOptions {
+                bayesian: false,
+                ..MvmOptions::default()
+            },
+        );
+        let det_j = tile.ledger.total_j();
+        assert!(det_j < bayes_j, "μ-only MVM must cost less");
+    }
+
+    #[test]
+    #[should_panic(expected = "input length")]
+    fn wrong_input_length_panics() {
+        let mut tile = make_tile();
+        let _ = tile.mvm(&[0u8; 3], MvmOptions::default());
+    }
+}

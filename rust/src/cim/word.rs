@@ -1,0 +1,206 @@
+//! CIM memory-word encodings (§III-D, Fig. 5).
+//!
+//! - **μ words**: 8-bit, *differential* — every bit is stored in 2 SRAM
+//!   cells; `0,1` encodes a positive bit contribution (+1 on BL_P) and
+//!   `1,0` a negative one (−1 on BL_N). The word value is therefore a
+//!   signed-digit number Σ_b d_b·2^b with digits d ∈ {−1, +1} — exactly
+//!   the set of odd integers in [−(2^B−1), 2^B−1]. Quantizers that target
+//!   this grid are provided here.
+//! - **σ words**: 4-bit unsigned magnitude, one cell per bit; the sign
+//!   comes from the GRNG's P/N steering, the magnitude from the pulse
+//!   width, so the stored value only scales the current.
+
+/// A μ word: digits ∈ {−1,+1} per bit (differential encoding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MuWord {
+    /// Packed digits: bit b set ⇒ digit +1, clear ⇒ digit −1.
+    pub digits: u16,
+    pub bits: u8,
+}
+
+impl MuWord {
+    /// Decode to the signed integer value Σ d_b·2^b.
+    pub fn value(&self) -> i32 {
+        let mut v = 0i32;
+        for b in 0..self.bits {
+            let d = if (self.digits >> b) & 1 == 1 { 1 } else { -1 };
+            v += d << b;
+        }
+        v
+    }
+
+    /// Digit of bit-plane `b` as ±1.
+    #[inline]
+    pub fn digit(&self, b: usize) -> i32 {
+        if (self.digits >> b) & 1 == 1 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    /// Encode the nearest representable value to `x`.
+    ///
+    /// The representable set for B bits is the odd integers in
+    /// [−(2^B−1), 2^B−1]; encoding picks digits greedily from the MSB
+    /// (the residual after choosing d_b is always representable).
+    pub fn quantize(x: f64, bits: u8) -> MuWord {
+        assert!(bits >= 1 && bits <= 15);
+        let max = (1i32 << bits) - 1;
+        let clamped = x.clamp(-(max as f64), max as f64);
+        let mut digits = 0u16;
+        let mut residual = clamped;
+        for b in (0..bits).rev() {
+            let w = 1i32 << b;
+            if residual >= 0.0 {
+                digits |= 1 << b;
+                residual -= w as f64;
+            } else {
+                residual += w as f64;
+            }
+        }
+        MuWord { digits, bits }
+    }
+
+    /// Quantization step of the signed-digit grid (odd integers ⇒ 2).
+    pub const STEP: f64 = 2.0;
+}
+
+/// A σ word: unsigned magnitude, one SRAM cell per bit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SigmaWord {
+    pub code: u8,
+    pub bits: u8,
+}
+
+impl SigmaWord {
+    pub fn value(&self) -> u32 {
+        self.code as u32
+    }
+
+    #[inline]
+    pub fn bit(&self, b: usize) -> u32 {
+        ((self.code >> b) & 1) as u32
+    }
+
+    /// Quantize a non-negative σ to the code grid.
+    pub fn quantize(x: f64, bits: u8) -> SigmaWord {
+        assert!(bits >= 1 && bits <= 8);
+        let max = (1u32 << bits) - 1;
+        let code = x.round().clamp(0.0, max as f64) as u8;
+        SigmaWord { code, bits }
+    }
+
+    pub fn max_code(bits: u8) -> u32 {
+        (1u32 << bits) - 1
+    }
+}
+
+/// Fixed-point scaling plan for mapping float weights onto the words.
+///
+/// μ and σ live in *separate* subarrays with separate ADCs and separate
+/// reduction shifts (Fig. 3), so each path gets its own scale: μ fills
+/// the 8-bit signed-digit grid, σ fills the 4-bit magnitude grid. The
+/// recombination `y = y_mu/mu_scale + y_sigma/sigma_scale` restores the
+/// float decomposition w = μ + σ·ε.
+#[derive(Clone, Copy, Debug)]
+pub struct WeightScale {
+    /// Float → fixed multiplier for μ.
+    pub mu_scale: f64,
+    /// Float → fixed multiplier for σ.
+    pub sigma_scale: f64,
+    pub mu_bits: u8,
+    pub sigma_bits: u8,
+}
+
+impl WeightScale {
+    /// Choose scales from the layer's max |μ| and max σ.
+    pub fn fit(mu_abs_max: f64, sigma_max: f64, mu_bits: u8, sigma_bits: u8) -> WeightScale {
+        let mu_grid = ((1i32 << mu_bits) - 1) as f64;
+        let sigma_grid = ((1u32 << sigma_bits) - 1) as f64;
+        WeightScale {
+            mu_scale: mu_grid / mu_abs_max.max(1e-12),
+            sigma_scale: sigma_grid / sigma_max.max(1e-12),
+            mu_bits,
+            sigma_bits,
+        }
+    }
+
+    pub fn encode_mu(&self, mu_f: f64) -> MuWord {
+        MuWord::quantize(mu_f * self.mu_scale, self.mu_bits)
+    }
+
+    pub fn encode_sigma(&self, sigma_f: f64) -> SigmaWord {
+        // Small σ quantize to 0 (pruned noise) — the behaviour that the
+        // Fig. 11-left σ-precision sweep stresses.
+        SigmaWord::quantize(sigma_f.max(0.0) * self.sigma_scale, self.sigma_bits)
+    }
+
+    pub fn decode_mu(&self, fixed: f64) -> f64 {
+        fixed / self.mu_scale
+    }
+
+    pub fn decode_sigma(&self, fixed: f64) -> f64 {
+        fixed / self.sigma_scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mu_roundtrip_all_odd_values() {
+        for v in (-255..=255).filter(|v| v % 2 != 0) {
+            let w = MuWord::quantize(v as f64, 8);
+            assert_eq!(w.value(), v, "encode/decode of {v}");
+        }
+    }
+
+    #[test]
+    fn mu_quantize_rounds_to_nearest_odd() {
+        // Even values are exactly between two odd grid points.
+        let w = MuWord::quantize(4.0, 8);
+        assert!((w.value() - 4).abs() == 1);
+        let w = MuWord::quantize(0.3, 8);
+        assert_eq!(w.value().abs(), 1);
+        // Clamps at the rails.
+        assert_eq!(MuWord::quantize(1e9, 8).value(), 255);
+        assert_eq!(MuWord::quantize(-1e9, 8).value(), -255);
+    }
+
+    #[test]
+    fn mu_digits_match_value() {
+        let w = MuWord::quantize(37.0, 8);
+        let mut v = 0i32;
+        for b in 0..8 {
+            v += w.digit(b) << b;
+        }
+        assert_eq!(v, w.value());
+    }
+
+    #[test]
+    fn sigma_quantize_clamps() {
+        assert_eq!(SigmaWord::quantize(3.4, 4).value(), 3);
+        assert_eq!(SigmaWord::quantize(99.0, 4).value(), 15);
+        assert_eq!(SigmaWord::quantize(-2.0, 4).value(), 0);
+        assert_eq!(SigmaWord::max_code(4), 15);
+    }
+
+    #[test]
+    fn weight_scale_consistency() {
+        let ws = WeightScale::fit(0.5, 0.1, 8, 4);
+        let mu = ws.encode_mu(0.37);
+        let back = ws.decode_mu(mu.value() as f64);
+        assert!(
+            (back - 0.37).abs() < 2.0 / ws.mu_scale,
+            "μ error too large"
+        );
+        // σ at its own max fills its own grid.
+        assert_eq!(ws.encode_sigma(0.1).value(), 15);
+        let sg = ws.encode_sigma(0.05);
+        assert!(sg.value() >= 7, "σ grid must resolve mid-range values");
+        let back_s = ws.decode_sigma(sg.value() as f64);
+        assert!((back_s - 0.05).abs() <= 0.5 / ws.sigma_scale + 1e-12);
+    }
+}

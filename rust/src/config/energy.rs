@@ -1,0 +1,208 @@
+//! Per-operation energy and area tables (65 nm), plus technology scaling.
+//!
+//! The fabricated chip reports aggregate numbers (Tab. II, Fig. 12); our
+//! simulator regenerates them from per-operation costs. Values are
+//! Horowitz-style estimates for a commercial 65 nm node, tuned so the
+//! defaults land on the paper's headline figures:
+//!   - 360 fJ/GRNG sample (from the GRNG physics model, not this table)
+//!   - 672 fJ/Op NN efficiency over a 64×8 MVM
+//!   - 0.45 mm² total area with SRAM ≈ 48 % of tile area (Fig. 12)
+//!   - SRAM > 63 % of tile energy per MVM (Fig. 12)
+
+use super::f64_field;
+use crate::error::Result;
+use crate::util::json::Json;
+
+/// The prototype's technology node [nm].
+pub const TECH_NODE_NM: f64 = 65.0;
+
+/// Per-operation energies [J]. "One MVM" means the single-cycle 64-row
+/// parallel operation of §III-B.
+#[derive(Clone, Debug)]
+pub struct EnergyTable {
+    /// SRAM cell read contribution during one MVM, per cell [J]
+    /// (bitline discharge share of one 8T cell conducting for the
+    /// integration window).
+    pub sram_cell_read_j: f64,
+    /// SRAM cell write [J] (used during programming / calibration).
+    pub sram_cell_write_j: f64,
+    /// Bitline precharge per column per MVM [J] (C_BL · V_DD²).
+    pub bitline_precharge_j: f64,
+    /// Digital reduction logic per output word per MVM [J].
+    pub reduction_word_j: f64,
+    /// Transmission-gate / switch overhead per σε word per MVM [J].
+    pub switch_word_j: f64,
+    /// Leakage power of the tile [W] (counted against MVM time).
+    pub tile_leakage_w: f64,
+    /// Host-side DRAM access per byte [J] — used for the conventional-BNN
+    /// comparison in Fig. 2 (weights streamed per sample).
+    pub dram_access_per_byte_j: f64,
+    /// Generic digital 8-bit MAC at 65 nm [J] — baseline NN cost model.
+    pub digital_mac8_j: f64,
+}
+
+impl Default for EnergyTable {
+    fn default() -> Self {
+        Self {
+            // Analog current-mode read: E ≈ I_cell·V_DD·t_window — much
+            // larger than a digital read. 64·8·20 cells/tile; calibrated
+            // so SRAM is >63 % of MVM energy (Fig. 12) and total lands on
+            // 672 fJ/Op (Tab. II).
+            sram_cell_read_j: 42.0e-15,
+            sram_cell_write_j: 1.8e-15,
+            bitline_precharge_j: 2.2e-15,
+            reduction_word_j: 18.0e-15,
+            switch_word_j: 2.5e-15,
+            tile_leakage_w: 35.0e-6,
+            dram_access_per_byte_j: 20.0e-12,
+            digital_mac8_j: 250.0e-15,
+        }
+    }
+}
+
+impl EnergyTable {
+    pub fn apply_json(&mut self, doc: &Json) -> Result<()> {
+        f64_field(doc, "sram_cell_read_j", &mut self.sram_cell_read_j)?;
+        f64_field(doc, "sram_cell_write_j", &mut self.sram_cell_write_j)?;
+        f64_field(doc, "bitline_precharge_j", &mut self.bitline_precharge_j)?;
+        f64_field(doc, "reduction_word_j", &mut self.reduction_word_j)?;
+        f64_field(doc, "switch_word_j", &mut self.switch_word_j)?;
+        f64_field(doc, "tile_leakage_w", &mut self.tile_leakage_w)?;
+        f64_field(doc, "dram_access_per_byte_j", &mut self.dram_access_per_byte_j)?;
+        f64_field(doc, "digital_mac8_j", &mut self.digital_mac8_j)?;
+        Ok(())
+    }
+}
+
+/// Component areas [mm²] at 65 nm for one tile plus chip-level overhead.
+#[derive(Clone, Debug)]
+pub struct AreaTable {
+    /// One 8T SRAM cell [mm²] (65 nm 8T ≈ 0.95 µm² incl. wiring share).
+    pub sram_cell_mm2: f64,
+    /// One GRNG cell incl. fringe caps above it [mm²] (caps stacked on
+    /// top per §III-C, so only transistor area counts).
+    pub grng_cell_mm2: f64,
+    /// One 6-bit SAR ADC, pitch-matched slice [mm²].
+    pub adc_mm2: f64,
+    /// One row IDAC [mm²].
+    pub idac_mm2: f64,
+    /// Reduction + calibration digital logic per tile [mm²].
+    pub reduction_mm2: f64,
+    /// Chip-level overhead outside the tile (IO ring, buffers, control)
+    /// [mm²] — brings total die to 0.45 mm².
+    pub chip_overhead_mm2: f64,
+}
+
+impl Default for AreaTable {
+    fn default() -> Self {
+        Self {
+            // Tile area target: SRAM ≈ 48 % of tile (Fig. 12).
+            // 10240 cells · 0.95 µm² = 0.00973 mm²  → tile ≈ 0.0203 mm².
+            sram_cell_mm2: 0.95e-6,
+            // 512 GRNG cells: SOTA area efficiency — 11.4 GSa/s/mm² norm.
+            // target: 512 cells ≈ 0.0045 mm² → 8.8 µm²/cell.
+            grng_cell_mm2: 8.8e-6,
+            // 96 ADCs ≈ 0.0038 mm² → 40 µm² each (shared controller).
+            adc_mm2: 40.0e-6,
+            // 64 IDACs ≈ 0.0013 mm².
+            idac_mm2: 20.0e-6,
+            reduction_mm2: 0.0008,
+            // Total die 0.45 mm²; tile ≈ 0.0203 mm² → overhead ≈ 0.43 mm²
+            // (IO pads, decap, test mux — Fig. 6 die shot is mostly pads).
+            chip_overhead_mm2: 0.4297,
+        }
+    }
+}
+
+impl AreaTable {
+    pub fn apply_json(&mut self, doc: &Json) -> Result<()> {
+        f64_field(doc, "sram_cell_mm2", &mut self.sram_cell_mm2)?;
+        f64_field(doc, "grng_cell_mm2", &mut self.grng_cell_mm2)?;
+        f64_field(doc, "adc_mm2", &mut self.adc_mm2)?;
+        f64_field(doc, "idac_mm2", &mut self.idac_mm2)?;
+        f64_field(doc, "reduction_mm2", &mut self.reduction_mm2)?;
+        f64_field(doc, "chip_overhead_mm2", &mut self.chip_overhead_mm2)?;
+        Ok(())
+    }
+}
+
+/// Technology scaling from 65 nm to `target_nm` (Tab. II footnote scales
+/// to 22 nm). Classic Dennard-ish rules as used for such cross-node
+/// comparisons: area ∝ λ², energy ∝ λ·V² (V also drops), delay ∝ λ.
+#[derive(Clone, Copy, Debug)]
+pub struct TechScale {
+    pub from_nm: f64,
+    pub to_nm: f64,
+}
+
+impl TechScale {
+    pub fn to_22nm() -> Self {
+        Self {
+            from_nm: TECH_NODE_NM,
+            to_nm: 22.0,
+        }
+    }
+
+    fn lambda(&self) -> f64 {
+        self.to_nm / self.from_nm
+    }
+
+    /// Area scales with λ².
+    pub fn area(&self, mm2: f64) -> f64 {
+        mm2 * self.lambda().powi(2)
+    }
+
+    /// Throughput scales with 1/λ (delay ∝ λ).
+    pub fn throughput(&self, per_s: f64) -> f64 {
+        per_s / self.lambda()
+    }
+
+    /// Energy per op scales ≈ λ · (V_to/V_from)²; with V 1.2→0.8 V.
+    pub fn energy(&self, joules: f64) -> f64 {
+        let v_scale: f64 = 0.8 / 1.2;
+        joules * self.lambda() * v_scale.powi(2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaling_directions() {
+        let s = TechScale::to_22nm();
+        assert!(s.area(1.0) < 0.2, "area should shrink a lot");
+        assert!(s.throughput(1.0) > 2.5, "throughput should rise ~3x");
+        assert!(s.energy(1.0) < 0.2, "energy should shrink");
+    }
+
+    #[test]
+    fn paper_scaled_throughput_consistent() {
+        // Tab. II: RNG Tput 5.12 GSa/s → 28.0 GSa/s scaled to 22 nm.
+        // Our rule gives 5.12 / (22/65) = 15.1 GSa/s from delay alone;
+        // the paper also scales parallelism per area. Normalized per mm²:
+        // 11.4 → 62.3 GSa/s/mm²: ratio 5.46. area⁻¹·delay⁻¹ = (65/22)³ ≈ 25.8
+        // — the paper is more conservative; we only check monotonicity here
+        // and report both rules in the comparison bench.
+        let s = TechScale::to_22nm();
+        let scaled = s.throughput(5.12e9);
+        assert!(scaled > 5.12e9);
+    }
+
+    #[test]
+    fn default_tile_area_shares() {
+        // SRAM should be ≈ 48 % of tile area with default geometry
+        // (64×8 words × (2·8+4) cells).
+        let a = AreaTable::default();
+        let sram = 64.0 * 8.0 * 20.0 * a.sram_cell_mm2;
+        let grng = 512.0 * a.grng_cell_mm2;
+        let adc = 96.0 * a.adc_mm2;
+        let idac = 64.0 * a.idac_mm2;
+        let tile = sram + grng + adc + idac + a.reduction_mm2;
+        let share = sram / tile;
+        assert!(
+            (0.40..=0.56).contains(&share),
+            "SRAM tile-area share {share:.3} out of range"
+        );
+    }
+}

@@ -1,0 +1,163 @@
+//! Typed configuration system.
+//!
+//! Every subsystem is parameterized by a config struct whose `Default`
+//! matches the fabricated 65 nm prototype described in the paper
+//! (§III–IV): 1 fF fringe caps, V_DD = 1.2 V, V_R = 180 mV typical bias,
+//! 64×8-word tiles with 8-bit μ / 4-bit σ words, 4-bit IDAC inputs and
+//! 6-bit SAR ADCs. Configs load from TOML files (see `configs/`) and every
+//! field can be overridden; `validate()` enforces physical sanity.
+
+mod chip;
+pub mod energy;
+mod model;
+mod server;
+
+pub use chip::{AdcConfig, ChipConfig, GrngConfig, IdacConfig, TileConfig};
+pub use energy::{AreaTable, EnergyTable, TECH_NODE_NM};
+pub use model::ModelConfig;
+pub use server::ServerConfig;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::toml;
+use std::path::Path;
+
+/// Root configuration: everything needed to instantiate the full system.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub chip: ChipConfig,
+    pub model: ModelConfig,
+    pub server: ServerConfig,
+}
+
+impl Config {
+    /// Load from a TOML file, overriding defaults field by field.
+    pub fn from_toml_file(path: &Path) -> Result<Config> {
+        let doc = toml::read_file(path).map_err(|e| Error::Config(e.to_string()))?;
+        Self::from_json(&doc)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Config> {
+        let doc = toml::parse(text)?;
+        Self::from_json(&doc)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Config> {
+        let mut cfg = Config::default();
+        if let Some(chip) = doc.get("chip") {
+            cfg.chip.apply_json(chip)?;
+        }
+        if let Some(model) = doc.get("model") {
+            cfg.model.apply_json(model)?;
+        }
+        if let Some(server) = doc.get("server") {
+            cfg.server.apply_json(server)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.chip.validate()?;
+        self.model.validate()?;
+        self.server.validate()?;
+        Ok(())
+    }
+}
+
+/// Helper: read an f64 field if present.
+pub(crate) fn f64_field(doc: &Json, key: &str, target: &mut f64) -> Result<()> {
+    if let Some(v) = doc.get(key) {
+        *target = v
+            .as_f64()
+            .ok_or_else(|| Error::Config(format!("field '{key}' must be a number")))?;
+    }
+    Ok(())
+}
+
+pub(crate) fn usize_field(doc: &Json, key: &str, target: &mut usize) -> Result<()> {
+    if let Some(v) = doc.get(key) {
+        *target = v
+            .as_usize()
+            .ok_or_else(|| Error::Config(format!("field '{key}' must be a non-negative integer")))?;
+    }
+    Ok(())
+}
+
+pub(crate) fn u64_field(doc: &Json, key: &str, target: &mut u64) -> Result<()> {
+    if let Some(v) = doc.get(key) {
+        *target = v
+            .as_i64()
+            .filter(|&x| x >= 0)
+            .ok_or_else(|| Error::Config(format!("field '{key}' must be a non-negative integer")))?
+            as u64;
+    }
+    Ok(())
+}
+
+pub(crate) fn bool_field(doc: &Json, key: &str, target: &mut bool) -> Result<()> {
+    if let Some(v) = doc.get(key) {
+        *target = v
+            .as_bool()
+            .ok_or_else(|| Error::Config(format!("field '{key}' must be a boolean")))?;
+    }
+    Ok(())
+}
+
+pub(crate) fn string_field(doc: &Json, key: &str, target: &mut String) -> Result<()> {
+    if let Some(v) = doc.get(key) {
+        *target = v
+            .as_str()
+            .ok_or_else(|| Error::Config(format!("field '{key}' must be a string")))?
+            .to_string();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let cfg = Config::from_toml_str(
+            r#"
+[chip.grng]
+bias_v = 0.15
+temp_c = 40.0
+
+[chip.tile]
+rows = 32
+
+[model]
+mc_samples = 16
+
+[server]
+max_batch = 8
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.chip.grng.bias_v, 0.15);
+        assert_eq!(cfg.chip.grng.temp_c, 40.0);
+        assert_eq!(cfg.chip.tile.rows, 32);
+        assert_eq!(cfg.model.mc_samples, 16);
+        assert_eq!(cfg.server.max_batch, 8);
+        // untouched fields keep defaults
+        assert_eq!(cfg.chip.tile.words_per_row, 8);
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let r = Config::from_toml_str("[chip.grng]\nvdd = -1.0\n");
+        assert!(r.is_err());
+        let r = Config::from_toml_str("[chip.adc]\nbits = 0\n");
+        assert!(r.is_err());
+        let r = Config::from_toml_str("[chip.grng]\nbias_v = \"hi\"\n");
+        assert!(r.is_err());
+    }
+}

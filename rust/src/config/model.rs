@@ -1,0 +1,75 @@
+//! Model / inference configuration.
+
+use super::{f64_field, string_field, usize_field};
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Partial-Bayesian model configuration (§III-A: Bayesian weights only in
+/// the final FC layers; feature extractor stays deterministic).
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    /// Directory containing AOT artifacts (HLO text + weights JSON).
+    pub artifacts_dir: String,
+    /// Monte-Carlo forward passes per inference.
+    pub mc_samples: usize,
+    /// Activation (input) precision [bits] — matches the IDAC.
+    pub input_bits: usize,
+    /// μ weight precision [bits].
+    pub mu_bits: usize,
+    /// σ weight precision [bits].
+    pub sigma_bits: usize,
+    /// Entropy threshold above which a classification is deferred
+    /// (Fig. 11-right sweeps 0.0–0.6; default mid-range).
+    pub defer_threshold: f64,
+    /// Number of classes.
+    pub classes: usize,
+    /// Input image side (synthetic person dataset is square grayscale).
+    pub image_side: usize,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            mc_samples: 32,
+            input_bits: 4,
+            mu_bits: 8,
+            sigma_bits: 4,
+            defer_threshold: 0.45,
+            classes: 2,
+            image_side: 32,
+        }
+    }
+}
+
+impl ModelConfig {
+    pub fn apply_json(&mut self, doc: &Json) -> Result<()> {
+        string_field(doc, "artifacts_dir", &mut self.artifacts_dir)?;
+        usize_field(doc, "mc_samples", &mut self.mc_samples)?;
+        usize_field(doc, "input_bits", &mut self.input_bits)?;
+        usize_field(doc, "mu_bits", &mut self.mu_bits)?;
+        usize_field(doc, "sigma_bits", &mut self.sigma_bits)?;
+        f64_field(doc, "defer_threshold", &mut self.defer_threshold)?;
+        usize_field(doc, "classes", &mut self.classes)?;
+        usize_field(doc, "image_side", &mut self.image_side)?;
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.mc_samples == 0 {
+            return Err(Error::Config("model: mc_samples must be > 0".into()));
+        }
+        if self.classes < 2 {
+            return Err(Error::Config("model: classes must be >= 2".into()));
+        }
+        if !(0.0..=10.0).contains(&self.defer_threshold) {
+            return Err(Error::Config(
+                "model: defer_threshold must be in [0, 10]".into(),
+            ));
+        }
+        if self.input_bits == 0 || self.mu_bits == 0 || self.sigma_bits == 0 {
+            return Err(Error::Config("model: bit widths must be > 0".into()));
+        }
+        Ok(())
+    }
+}

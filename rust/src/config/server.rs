@@ -1,0 +1,59 @@
+//! Serving / coordinator configuration.
+
+use super::{f64_field, usize_field};
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Coordinator (L3 serving engine) configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Maximum requests fused into one batched executable call.
+    pub max_batch: usize,
+    /// Batching deadline [ms]: a partial batch is dispatched after this.
+    pub batch_deadline_ms: f64,
+    /// Request queue capacity (backpressure beyond this).
+    pub queue_capacity: usize,
+    /// Worker threads executing batches.
+    pub workers: usize,
+    /// Per-request deadline [ms]; exceeded requests are rejected.
+    pub request_timeout_ms: f64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 16,
+            batch_deadline_ms: 2.0,
+            queue_capacity: 256,
+            workers: 1,
+            request_timeout_ms: 1000.0,
+        }
+    }
+}
+
+impl ServerConfig {
+    pub fn apply_json(&mut self, doc: &Json) -> Result<()> {
+        usize_field(doc, "max_batch", &mut self.max_batch)?;
+        f64_field(doc, "batch_deadline_ms", &mut self.batch_deadline_ms)?;
+        usize_field(doc, "queue_capacity", &mut self.queue_capacity)?;
+        usize_field(doc, "workers", &mut self.workers)?;
+        f64_field(doc, "request_timeout_ms", &mut self.request_timeout_ms)?;
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 {
+            return Err(Error::Config("server: max_batch must be > 0".into()));
+        }
+        if self.queue_capacity == 0 {
+            return Err(Error::Config("server: queue_capacity must be > 0".into()));
+        }
+        if self.workers == 0 {
+            return Err(Error::Config("server: workers must be > 0".into()));
+        }
+        if self.batch_deadline_ms < 0.0 || self.request_timeout_ms <= 0.0 {
+            return Err(Error::Config("server: invalid timeouts".into()));
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,183 @@
+//! Serving metrics registry (lock-protected, shared with the worker).
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub requests_total: u64,
+    pub requests_rejected: u64,
+    pub requests_deferred: u64,
+    pub batches: u64,
+    pub mc_passes: u64,
+    pub pjrt_executions: u64,
+    pub epsilon_samples: u64,
+    pub epsilon_energy_j: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p95_ms: f64,
+    pub latency_max_ms: f64,
+    pub mean_batch_fill: f64,
+    pub throughput_rps: f64,
+    pub wall_s: f64,
+}
+
+impl MetricsSnapshot {
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} rejected={} deferred={} batches={} (fill {:.2})\n\
+             mc_passes={} pjrt_exec={} eps_samples={} eps_energy={:.3} µJ\n\
+             latency p50={:.2} ms p95={:.2} ms max={:.2} ms | throughput={:.1} req/s",
+            self.requests_total,
+            self.requests_rejected,
+            self.requests_deferred,
+            self.batches,
+            self.mean_batch_fill,
+            self.mc_passes,
+            self.pjrt_executions,
+            self.epsilon_samples,
+            self.epsilon_energy_j * 1e6,
+            self.latency_p50_ms,
+            self.latency_p95_ms,
+            self.latency_max_ms,
+            self.throughput_rps,
+        )
+    }
+}
+
+/// Shared registry. Latencies kept as a bounded reservoir.
+#[derive(Clone)]
+pub struct Metrics {
+    inner: Arc<Mutex<Inner>>,
+}
+
+struct Inner {
+    requests_total: u64,
+    requests_rejected: u64,
+    requests_deferred: u64,
+    batches: u64,
+    batch_fill_sum: f64,
+    mc_passes: u64,
+    pjrt_executions: u64,
+    epsilon_samples: u64,
+    epsilon_energy_j: f64,
+    latencies_ms: Vec<f64>,
+    started: std::time::Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(Inner {
+                requests_total: 0,
+                requests_rejected: 0,
+                requests_deferred: 0,
+                batches: 0,
+                batch_fill_sum: 0.0,
+                mc_passes: 0,
+                pjrt_executions: 0,
+                epsilon_samples: 0,
+                epsilon_energy_j: 0.0,
+                latencies_ms: Vec::new(),
+                started: std::time::Instant::now(),
+            })),
+        }
+    }
+
+    pub fn record_reject(&self) {
+        self.inner.lock().unwrap().requests_rejected += 1;
+    }
+
+    pub fn record_batch(&self, fill: usize, capacity: usize, mc_passes: u64, pjrt: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_fill_sum += fill as f64 / capacity.max(1) as f64;
+        g.mc_passes += mc_passes;
+        g.pjrt_executions += pjrt;
+    }
+
+    pub fn record_response(&self, latency: Duration, deferred: bool) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests_total += 1;
+        if deferred {
+            g.requests_deferred += 1;
+        }
+        if g.latencies_ms.len() < 100_000 {
+            g.latencies_ms.push(latency.as_secs_f64() * 1e3);
+        }
+    }
+
+    pub fn record_epsilon(&self, samples: u64, energy_j: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.epsilon_samples = samples;
+        g.epsilon_energy_j = energy_j;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let mut lat = g.latencies_ms.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() {
+                return 0.0;
+            }
+            let idx = ((lat.len() - 1) as f64 * p).round() as usize;
+            lat[idx]
+        };
+        let wall = g.started.elapsed().as_secs_f64();
+        MetricsSnapshot {
+            requests_total: g.requests_total,
+            requests_rejected: g.requests_rejected,
+            requests_deferred: g.requests_deferred,
+            batches: g.batches,
+            mc_passes: g.mc_passes,
+            pjrt_executions: g.pjrt_executions,
+            epsilon_samples: g.epsilon_samples,
+            epsilon_energy_j: g.epsilon_energy_j,
+            latency_p50_ms: pct(0.50),
+            latency_p95_ms: pct(0.95),
+            latency_max_ms: lat.last().copied().unwrap_or(0.0),
+            mean_batch_fill: if g.batches > 0 {
+                g.batch_fill_sum / g.batches as f64
+            } else {
+                0.0
+            },
+            throughput_rps: if wall > 0.0 {
+                g.requests_total as f64 / wall
+            } else {
+                0.0
+            },
+            wall_s: wall,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metrics_accumulate_and_snapshot() {
+        let m = Metrics::new();
+        m.record_batch(6, 8, 32, 33);
+        m.record_batch(8, 8, 32, 33);
+        for i in 0..10 {
+            m.record_response(Duration::from_millis(10 + i), i % 3 == 0);
+        }
+        m.record_reject();
+        m.record_epsilon(1000, 3.6e-7);
+        let s = m.snapshot();
+        assert_eq!(s.requests_total, 10);
+        assert_eq!(s.requests_rejected, 1);
+        assert_eq!(s.requests_deferred, 4);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch_fill - 0.875).abs() < 1e-9);
+        assert!(s.latency_p50_ms >= 10.0 && s.latency_p95_ms <= 20.0);
+        assert!(s.render().contains("requests=10"));
+    }
+}

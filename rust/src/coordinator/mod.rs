@@ -1,0 +1,13 @@
+//! L3 coordinator: the serving engine around the PJRT runtime — request
+//! router/batcher, Monte-Carlo sample scheduler, ε sourcing from the
+//! in-word GRNG bank, deferral policy, and metrics.
+
+pub mod epsilon;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use epsilon::{BaselineSource, EpsilonSource, GrngBankSource, PhiloxSource};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{InferRequest, InferResponse, RejectReason};
+pub use server::Coordinator;

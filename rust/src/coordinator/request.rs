@@ -1,0 +1,53 @@
+//! Request/response types for the serving engine.
+
+use crate::bayes::McPrediction;
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// A classification request entering the coordinator.
+pub struct InferRequest {
+    pub id: u64,
+    /// Grayscale image, row-major, side×side in [0,1].
+    pub pixels: Vec<f32>,
+    /// Monte-Carlo samples requested (0 = server default).
+    pub mc_samples: usize,
+    pub enqueued: Instant,
+    /// Reply channel.
+    pub reply: Sender<InferResponse>,
+}
+
+/// The coordinator's answer.
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub id: u64,
+    pub pred: McPrediction,
+    /// Entropy exceeded the deferral threshold → route to human /
+    /// secondary model (Fig. 1's safety-critical loop).
+    pub deferred: bool,
+    /// Queue + compute latency.
+    pub latency: std::time::Duration,
+    /// Which batch this request rode in (diagnostics).
+    pub batch_id: u64,
+}
+
+/// Failure modes surfaced to clients.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    QueueFull,
+    WrongShape { expected: usize, got: usize },
+    ShuttingDown,
+    Timeout,
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::QueueFull => write!(f, "queue full (backpressure)"),
+            RejectReason::WrongShape { expected, got } => {
+                write!(f, "wrong input shape: expected {expected} pixels, got {got}")
+            }
+            RejectReason::ShuttingDown => write!(f, "server shutting down"),
+            RejectReason::Timeout => write!(f, "request timed out"),
+        }
+    }
+}

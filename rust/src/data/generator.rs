@@ -1,0 +1,472 @@
+//! Procedural image generator for the synthetic person dataset.
+//!
+//! Images are `side × side` grayscale in [0, 1], row-major.
+
+use crate::util::rng::{Pcg64, Rng64};
+
+/// One labeled sample.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub pixels: Vec<f32>,
+    pub label: usize,
+    /// Out-of-distribution marker (None = in-distribution).
+    pub ood: Option<OodKind>,
+}
+
+/// OOD generators (Fig. 10's out-of-distribution arm).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OodKind {
+    /// Partially visible pedestrian (single body part) — the genuinely
+    /// ambiguous OOD of the safety-critical story.
+    Fragment,
+    /// Regular stripe/checker textures.
+    Texture,
+    /// Contrast-inverted in-distribution images.
+    Inverted,
+    /// Statistics-matched structure-free noise.
+    Noise,
+}
+
+/// A materialized dataset split.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub side: usize,
+    pub samples: Vec<Sample>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+/// The generator. Every `Sample` is produced from `(seed, index)` alone,
+/// so datasets are reproducible and parallelizable.
+#[derive(Clone, Debug)]
+pub struct SyntheticPerson {
+    pub side: usize,
+    pub seed: u64,
+}
+
+impl SyntheticPerson {
+    pub fn new(side: usize, seed: u64) -> Self {
+        assert!(side >= 16, "images smaller than 16px lose the figure");
+        Self { side, seed }
+    }
+
+    fn rng_for(&self, index: u64, stream: u64) -> Pcg64 {
+        Pcg64::with_stream(self.seed ^ index.wrapping_mul(0x9E3779B97F4A7C15), stream)
+    }
+
+    /// Generate sample `index` of the in-distribution split; even indices
+    /// are background, odd are person (balanced classes).
+    pub fn sample(&self, index: u64) -> Sample {
+        let label = (index % 2) as usize;
+        let mut rng = self.rng_for(index, 0x1D);
+        let mut img = self.clutter(&mut rng);
+        if label == super::PERSON {
+            self.draw_person(&mut img, &mut rng);
+        } else if rng.next_bool(0.5) {
+            self.draw_distractor(&mut img, &mut rng);
+        }
+        self.post(&mut img, &mut rng);
+        Sample {
+            pixels: img,
+            label,
+            ood: None,
+        }
+    }
+
+    /// Generate OOD sample `index` of the given kind.
+    pub fn ood_sample(&self, index: u64, kind: OodKind) -> Sample {
+        let mut rng = self.rng_for(index | 0x8000_0000_0000_0000, 0x0D);
+        let img = match kind {
+            OodKind::Fragment => {
+                let mut img = self.clutter(&mut rng);
+                self.draw_fragment(&mut img, &mut rng);
+                self.post(&mut img, &mut rng);
+                img
+            }
+            OodKind::Texture => self.texture(&mut rng),
+            OodKind::Inverted => {
+                let base = self.sample(index);
+                base.pixels.iter().map(|&p| 1.0 - p).collect()
+            }
+            // Statistics-matched noise: N(0.5, 0.15) clipped — structure-
+            // free but not brightness-extreme.
+            OodKind::Noise => (0..self.side * self.side)
+                .map(|_| (0.5 + 0.15 * rng.next_gaussian() as f32).clamp(0.0, 1.0))
+                .collect(),
+        };
+        Sample {
+            pixels: img,
+            label: super::BACKGROUND, // label is meaningless for OOD
+            ood: Some(kind),
+        }
+    }
+
+    /// Materialize a split of n in-distribution samples starting at
+    /// `offset` (train/val/test splits use disjoint offsets).
+    pub fn split(&self, offset: u64, n: usize) -> Dataset {
+        Dataset {
+            side: self.side,
+            samples: (0..n as u64).map(|i| self.sample(offset + i)).collect(),
+        }
+    }
+
+    /// Materialize a mixed OOD split (equal thirds of each kind).
+    pub fn ood_split(&self, offset: u64, n: usize) -> Dataset {
+        let kinds = [
+            OodKind::Fragment,
+            OodKind::Texture,
+            OodKind::Inverted,
+            OodKind::Noise,
+        ];
+        Dataset {
+            side: self.side,
+            samples: (0..n as u64)
+                .map(|i| self.ood_sample(offset + i, kinds[(i % kinds.len() as u64) as usize]))
+                .collect(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // drawing primitives
+    // ------------------------------------------------------------------
+
+    fn clutter(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let s = self.side;
+        let mut img = vec![0.0f32; s * s];
+        // Smooth background gradient.
+        let gx = (rng.next_f32() - 0.5) * 0.4;
+        let gy = (rng.next_f32() - 0.5) * 0.4;
+        let base = 0.35 + 0.3 * rng.next_f32();
+        for y in 0..s {
+            for x in 0..s {
+                img[y * s + x] =
+                    base + gx * (x as f32 / s as f32 - 0.5) + gy * (y as f32 / s as f32 - 0.5);
+            }
+        }
+        // Random rectangles (buildings / clutter).
+        let n_rects = 2 + rng.next_below(4) as usize;
+        for _ in 0..n_rects {
+            let w = 2 + rng.next_below((s / 3) as u64) as usize;
+            let h = 2 + rng.next_below((s / 3) as u64) as usize;
+            let x0 = rng.next_below((s - w) as u64) as usize;
+            let y0 = rng.next_below((s - h) as u64) as usize;
+            let v = 0.2 + 0.6 * rng.next_f32();
+            let alpha = 0.3 + 0.5 * rng.next_f32();
+            for y in y0..y0 + h {
+                for x in x0..x0 + w {
+                    let p = &mut img[y * s + x];
+                    *p = *p * (1.0 - alpha) + v * alpha;
+                }
+            }
+        }
+        img
+    }
+
+    /// Draw the articulated person figure.
+    fn draw_person(&self, img: &mut [f32], rng: &mut Pcg64) {
+        let s = self.side as f32;
+        // Figure geometry (normalized units).
+        let height = 0.5 + 0.3 * rng.next_f32(); // figure height / image
+        let cx = 0.25 + 0.5 * rng.next_f32(); // center x
+        let top = 0.05 + (0.9 - height) * rng.next_f32(); // top y
+        let contrast = if rng.next_bool(0.5) { 1.0 } else { -1.0 };
+        let tone = 0.35 * (0.6 + 0.4 * rng.next_f32()) * contrast;
+
+        let head_r = height * 0.11;
+        let torso_w = height * 0.16;
+        let torso_h = height * 0.42;
+        let leg_w = torso_w * 0.38;
+        let leg_h = height * 0.38;
+        let lean = (rng.next_f32() - 0.5) * 0.06;
+
+        let mut paint = |x0: f32, y0: f32, x1: f32, y1: f32, v: f32| {
+            let (xa, xb) = ((x0 * s) as i64, (x1 * s) as i64);
+            let (ya, yb) = ((y0 * s) as i64, (y1 * s) as i64);
+            for y in ya.max(0)..yb.min(self.side as i64) {
+                for x in xa.max(0)..xb.min(self.side as i64) {
+                    let p = &mut img[y as usize * self.side + x as usize];
+                    *p = (*p + v).clamp(0.0, 1.0);
+                }
+            }
+        };
+        // Head (as a small box; at 32px circles and boxes are equivalent).
+        paint(
+            cx - head_r,
+            top,
+            cx + head_r,
+            top + 2.0 * head_r,
+            tone * 1.1,
+        );
+        // Torso.
+        let torso_top = top + 2.0 * head_r + 0.01;
+        paint(
+            cx - torso_w / 2.0,
+            torso_top,
+            cx + torso_w / 2.0,
+            torso_top + torso_h,
+            tone,
+        );
+        // Legs (two, slightly apart, with lean).
+        let leg_top = torso_top + torso_h;
+        let gap = torso_w * 0.18;
+        paint(
+            cx - torso_w / 2.0 + lean,
+            leg_top,
+            cx - torso_w / 2.0 + leg_w + lean,
+            leg_top + leg_h,
+            tone * 0.95,
+        );
+        paint(
+            cx + torso_w / 2.0 - leg_w - lean,
+            leg_top,
+            cx + torso_w / 2.0 - lean,
+            leg_top + leg_h,
+            tone * 0.95,
+        );
+        let _ = gap;
+    }
+
+    /// One body part of the person figure (head / torso / legs) — the
+    /// Fragment OOD kind.
+    fn draw_fragment(&self, img: &mut [f32], rng: &mut Pcg64) {
+        let s = self.side as f32;
+        let height = 0.5 + 0.3 * rng.next_f32();
+        let cx = 0.25 + 0.5 * rng.next_f32();
+        let top = 0.05 + (0.9 - height) * rng.next_f32();
+        let contrast = if rng.next_bool(0.5) { 1.0 } else { -1.0 };
+        let tone = 0.35 * (0.6 + 0.4 * rng.next_f32()) * contrast;
+        let head_r = height * 0.11;
+        let torso_w = height * 0.16;
+        let torso_h = height * 0.42;
+        let mut paint = |x0: f32, y0: f32, x1: f32, y1: f32, v: f32| {
+            let (xa, xb) = ((x0 * s) as i64, (x1 * s) as i64);
+            let (ya, yb) = ((y0 * s) as i64, (y1 * s) as i64);
+            for y in ya.max(0)..yb.min(self.side as i64) {
+                for x in xa.max(0)..xb.min(self.side as i64) {
+                    let p = &mut img[y as usize * self.side + x as usize];
+                    *p = (*p + v).clamp(0.0, 1.0);
+                }
+            }
+        };
+        match rng.next_below(3) {
+            0 => paint(cx - head_r, top, cx + head_r, top + 2.0 * head_r, tone * 1.1),
+            1 => paint(
+                cx - torso_w / 2.0,
+                top,
+                cx + torso_w / 2.0,
+                top + torso_h,
+                tone,
+            ),
+            _ => {
+                let leg_w = torso_w * 0.38;
+                let leg_h = height * 0.38;
+                paint(
+                    cx - torso_w / 2.0,
+                    top,
+                    cx - torso_w / 2.0 + leg_w,
+                    top + leg_h,
+                    tone * 0.95,
+                );
+                paint(
+                    cx + torso_w / 2.0 - leg_w,
+                    top,
+                    cx + torso_w / 2.0,
+                    top + leg_h,
+                    tone * 0.95,
+                );
+            }
+        }
+    }
+
+    /// Person-like distractor (pole / blob) in background images.
+    fn draw_distractor(&self, img: &mut [f32], rng: &mut Pcg64) {
+        let s = self.side;
+        let tone = (0.3 + 0.4 * rng.next_f32()) * if rng.next_bool(0.5) { 1.0 } else { -1.0 };
+        if rng.next_bool(0.5) {
+            // Vertical pole: right aspect, no articulation.
+            let w = 1 + rng.next_below(2) as usize;
+            let h = s / 2 + rng.next_below((s / 3) as u64) as usize;
+            let x0 = rng.next_below((s - w) as u64) as usize;
+            let y0 = rng.next_below((s - h).max(1) as u64) as usize;
+            for y in y0..(y0 + h).min(s) {
+                for x in x0..x0 + w {
+                    let p = &mut img[y * s + x];
+                    *p = (*p + tone as f32).clamp(0.0, 1.0);
+                }
+            }
+        } else {
+            // Square blob: wrong aspect.
+            let w = s / 4 + rng.next_below((s / 4) as u64) as usize;
+            let x0 = rng.next_below((s - w) as u64) as usize;
+            let y0 = rng.next_below((s - w) as u64) as usize;
+            for y in y0..y0 + w {
+                for x in x0..x0 + w {
+                    let p = &mut img[y * s + x];
+                    *p = (*p + tone as f32 * 0.8).clamp(0.0, 1.0);
+                }
+            }
+        }
+    }
+
+    /// OOD textures keep first-order statistics close to the training
+    /// distribution (mean ≈ 0.5, moderate contrast): out-of-distribution
+    /// *structure*, not saturating brightness — otherwise the feature
+    /// extractor rails and margins explode, which is not what natural
+    /// OOD images (the INRIA analogue) do.
+    fn texture(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let s = self.side;
+        let period = 2 + rng.next_below(5) as usize;
+        let checker = rng.next_bool(0.5);
+        let mid = 0.4 + 0.2 * rng.next_f32();
+        let amp = 0.08 + 0.1 * rng.next_f32();
+        let mut img: Vec<f32> = (0..s * s)
+            .map(|i| {
+                let (x, y) = (i % s, i / s);
+                let v = if checker {
+                    ((x / period) + (y / period)) % 2
+                } else {
+                    (x / period) % 2
+                };
+                if v == 0 {
+                    mid - amp
+                } else {
+                    mid + amp
+                }
+            })
+            .collect();
+        for p in img.iter_mut() {
+            *p = (*p + 0.03 * rng.next_gaussian() as f32).clamp(0.0, 1.0);
+        }
+        img
+    }
+
+    /// Sensor noise + clamp.
+    fn post(&self, img: &mut [f32], rng: &mut Pcg64) {
+        for p in img.iter_mut() {
+            *p = (*p + 0.03 * rng.next_gaussian() as f32).clamp(0.0, 1.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+
+    #[test]
+    fn deterministic_generation() {
+        let g = SyntheticPerson::new(32, 42);
+        let a = g.sample(7);
+        let b = g.sample(7);
+        assert_eq!(a.pixels, b.pixels);
+        let c = g.sample(8);
+        assert_ne!(a.pixels, c.pixels);
+        let g2 = SyntheticPerson::new(32, 43);
+        assert_ne!(a.pixels, g2.sample(7).pixels);
+    }
+
+    #[test]
+    fn balanced_labels_and_bounds() {
+        let g = SyntheticPerson::new(32, 1);
+        let ds = g.split(0, 100);
+        let persons = ds.samples.iter().filter(|s| s.label == 1).count();
+        assert_eq!(persons, 50);
+        for s in &ds.samples {
+            assert_eq!(s.pixels.len(), 32 * 32);
+            for &p in &s.pixels {
+                assert!((0.0..=1.0).contains(&p));
+            }
+        }
+    }
+
+    #[test]
+    fn person_figure_is_vertically_elongated() {
+        // Unit-test the generator directly: paint a figure on a flat
+        // canvas and check the changed region has person-like aspect.
+        let g = SyntheticPerson::new(32, 5);
+        for seed_idx in 0..20u64 {
+            let mut rng = crate::util::rng::Pcg64::with_stream(seed_idx, 0xFACE);
+            let mut img = vec![0.5f32; 32 * 32];
+            g.draw_person(&mut img, &mut rng);
+            let (mut x0, mut x1, mut y0, mut y1) = (32usize, 0usize, 32usize, 0usize);
+            let mut changed = 0usize;
+            for y in 0..32 {
+                for x in 0..32 {
+                    if (img[y * 32 + x] - 0.5).abs() > 0.05 {
+                        changed += 1;
+                        x0 = x0.min(x);
+                        x1 = x1.max(x);
+                        y0 = y0.min(y);
+                        y1 = y1.max(y);
+                    }
+                }
+            }
+            assert!(changed > 20, "figure must paint pixels (got {changed})");
+            let h = (y1 - y0 + 1) as f64;
+            let w = (x1 - x0 + 1) as f64;
+            assert!(
+                h / w > 1.4,
+                "figure must be vertically elongated: h={h} w={w}"
+            );
+        }
+    }
+
+    #[test]
+    fn class_pixel_statistics_are_close() {
+        // Trivial first-moment shortcuts must NOT separate the classes —
+        // the task should require shape, not brightness.
+        let g = SyntheticPerson::new(32, 6);
+        let mut p_mean = Summary::new();
+        let mut b_mean = Summary::new();
+        for i in 0..300 {
+            let s = g.sample(i);
+            let m = s.pixels.iter().map(|&p| p as f64).sum::<f64>() / 1024.0;
+            if s.label == 1 {
+                p_mean.push(m);
+            } else {
+                b_mean.push(m);
+            }
+        }
+        let gap = (p_mean.mean() - b_mean.mean()).abs();
+        assert!(
+            gap < 0.05,
+            "class mean-brightness gap {gap:.4} should be small (no trivial cue)"
+        );
+    }
+
+    #[test]
+    fn ood_kinds_generate() {
+        let g = SyntheticPerson::new(32, 9);
+        let ood = g.ood_split(0, 12);
+        assert_eq!(ood.len(), 12);
+        let kinds: Vec<_> = ood.samples.iter().map(|s| s.ood.unwrap()).collect();
+        assert!(kinds.contains(&OodKind::Fragment));
+        assert!(kinds.contains(&OodKind::Texture));
+        assert!(kinds.contains(&OodKind::Inverted));
+        assert!(kinds.contains(&OodKind::Noise));
+        // Inverted really inverts.
+        let base = g.sample(1);
+        let inv = g.ood_sample(1, OodKind::Inverted);
+        for (a, b) in base.pixels.iter().zip(inv.pixels.iter()) {
+            assert!((a + b - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn splits_are_disjoint_by_offset() {
+        let g = SyntheticPerson::new(32, 2);
+        let train = g.split(0, 10);
+        let test = g.split(10, 10);
+        for (a, b) in train.samples.iter().zip(test.samples.iter()) {
+            assert_ne!(a.pixels, b.pixels);
+        }
+    }
+}

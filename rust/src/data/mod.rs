@@ -1,0 +1,28 @@
+//! Synthetic person-detection dataset (INRIA-person substitute).
+//!
+//! The paper evaluates uncertainty on the INRIA person dataset — real
+//! pedestrian photos we cannot ship. The substitute is a procedural
+//! binary-classification task with the same *functional* properties the
+//! experiments need (DESIGN.md substitution table):
+//!
+//! - **person**: a vertically-elongated articulated figure (head, torso,
+//!   legs) at random position/scale/contrast over textured clutter;
+//! - **background**: the same clutter statistics without the figure
+//!   (plus person-*like* distractors: vertical poles, blobs — so the task
+//!   is learnable but not trivial);
+//! - **OOD** split: textures, inverted images, and pure noise — inputs
+//!   from outside the training distribution whose predictive entropy the
+//!   BNN should raise (Fig. 10).
+//!
+//! The same procedure (same parameters) is implemented in
+//! `python/compile/dataset.py` for build-time training; the two need not
+//! be bit-identical — every experiment draws fresh samples from the same
+//! distribution.
+
+pub mod generator;
+
+pub use generator::{Dataset, OodKind, Sample, SyntheticPerson};
+
+/// Class labels.
+pub const BACKGROUND: usize = 0;
+pub const PERSON: usize = 1;

@@ -1,0 +1,275 @@
+//! Energy and area accounting (Fig. 12 breakdown, Tab. II metrics).
+//!
+//! Every simulated hardware event deposits joules into an [`EnergyLedger`]
+//! keyed by component; the benches query breakdowns and derived
+//! efficiencies. Area comes statically from the config tables.
+
+use crate::config::{AreaTable, ChipConfig, TileConfig};
+use std::collections::BTreeMap;
+
+/// Hardware components tracked by the ledger (Fig. 12 categories).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Component {
+    /// 8T SRAM cells conducting during the MVM integration window.
+    Sram,
+    /// In-word GRNG cells (sampling energy).
+    Grng,
+    /// SAR ADC conversions.
+    Adc,
+    /// Row IDACs.
+    Idac,
+    /// Bitline precharge.
+    Bitline,
+    /// Digital reduction + offset-correction logic.
+    Reduction,
+    /// σε-word transmission-gate switching.
+    Switches,
+    /// Tile leakage (integrated over active time).
+    Leakage,
+    /// SRAM writes (programming / calibration).
+    SramWrite,
+}
+
+impl Component {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Component::Sram => "SRAM (read)",
+            Component::Grng => "GRNG",
+            Component::Adc => "SAR ADC",
+            Component::Idac => "IDAC",
+            Component::Bitline => "Bitline precharge",
+            Component::Reduction => "Reduction logic",
+            Component::Switches => "TG switches",
+            Component::Leakage => "Leakage",
+            Component::SramWrite => "SRAM (write)",
+        }
+    }
+
+    pub fn all() -> &'static [Component] {
+        &[
+            Component::Sram,
+            Component::Grng,
+            Component::Adc,
+            Component::Idac,
+            Component::Bitline,
+            Component::Reduction,
+            Component::Switches,
+            Component::Leakage,
+            Component::SramWrite,
+        ]
+    }
+}
+
+/// Accumulates energy by component.
+#[derive(Clone, Debug, Default)]
+pub struct EnergyLedger {
+    joules: BTreeMap<Component, f64>,
+    /// Operation counters for efficiency metrics.
+    pub mvm_count: u64,
+    pub grng_samples: u64,
+}
+
+impl EnergyLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn deposit(&mut self, c: Component, joules: f64) {
+        *self.joules.entry(c).or_insert(0.0) += joules;
+    }
+
+    pub fn total_j(&self) -> f64 {
+        self.joules.values().sum()
+    }
+
+    pub fn component_j(&self, c: Component) -> f64 {
+        self.joules.get(&c).copied().unwrap_or(0.0)
+    }
+
+    /// Breakdown as (component, joules, share-of-total).
+    pub fn breakdown(&self) -> Vec<(Component, f64, f64)> {
+        let total = self.total_j().max(1e-300);
+        self.joules
+            .iter()
+            .map(|(&c, &j)| (c, j, j / total))
+            .collect()
+    }
+
+    pub fn reset(&mut self) {
+        self.joules.clear();
+        self.mvm_count = 0;
+        self.grng_samples = 0;
+    }
+
+    /// Merge another ledger into this one.
+    pub fn absorb(&mut self, other: &EnergyLedger) {
+        for (&c, &j) in &other.joules {
+            self.deposit(c, j);
+        }
+        self.mvm_count += other.mvm_count;
+        self.grng_samples += other.grng_samples;
+    }
+
+    /// NN efficiency [J/Op] over everything recorded.
+    pub fn j_per_op(&self, ops_per_mvm: usize) -> f64 {
+        if self.mvm_count == 0 {
+            return f64::NAN;
+        }
+        self.total_j() / (self.mvm_count as f64 * ops_per_mvm as f64)
+    }
+
+    /// GRNG efficiency [J/Sample].
+    pub fn j_per_sample(&self) -> f64 {
+        if self.grng_samples == 0 {
+            return f64::NAN;
+        }
+        self.component_j(Component::Grng) / self.grng_samples as f64
+    }
+
+    /// Render an ASCII breakdown table.
+    pub fn ascii_breakdown(&self) -> String {
+        let mut s = String::new();
+        let total = self.total_j();
+        s.push_str(&format!("total: {:.3} pJ\n", total * 1e12));
+        for (c, j, share) in self.breakdown() {
+            let bar = "#".repeat((share * 40.0).round() as usize);
+            s.push_str(&format!(
+                "  {:<18} {:>10.3} pJ {:>6.1}% {}\n",
+                c.name(),
+                j * 1e12,
+                share * 100.0,
+                bar
+            ));
+        }
+        s
+    }
+}
+
+/// Static area breakdown of one tile + chip overhead (Fig. 12-left).
+#[derive(Clone, Debug)]
+pub struct AreaBreakdown {
+    pub items: Vec<(&'static str, f64)>,
+    pub tile_mm2: f64,
+    pub chip_mm2: f64,
+}
+
+pub fn area_breakdown(tile: &TileConfig, table: &AreaTable) -> AreaBreakdown {
+    let sram = tile.sram_cells() as f64 * table.sram_cell_mm2;
+    let grng = tile.grng_cells() as f64 * table.grng_cell_mm2;
+    let adc = tile.adc_count() as f64 * table.adc_mm2;
+    let idac = tile.rows as f64 * table.idac_mm2;
+    let reduction = table.reduction_mm2;
+    let tile_mm2 = sram + grng + adc + idac + reduction;
+    AreaBreakdown {
+        items: vec![
+            ("SRAM", sram),
+            ("GRNG", grng),
+            ("SAR ADC", adc),
+            ("IDAC", idac),
+            ("Reduction", reduction),
+        ],
+        tile_mm2,
+        chip_mm2: tile_mm2 + table.chip_overhead_mm2,
+    }
+}
+
+/// Derived headline metrics for Tab. II.
+#[derive(Clone, Debug)]
+pub struct HeadlineMetrics {
+    pub rng_tput_gsa_s: f64,
+    pub rng_eff_pj_per_sa: f64,
+    pub rng_tput_norm_gsa_s_mm2: f64,
+    pub nn_tput_gops: f64,
+    pub nn_eff_fj_per_op: f64,
+    pub nn_tput_norm_gops_mm2: f64,
+    pub area_mm2: f64,
+}
+
+impl HeadlineMetrics {
+    /// Compute from a chip config + measured per-sample energy and per-MVM
+    /// energy (from the simulator's ledger).
+    pub fn compute(
+        chip: &ChipConfig,
+        grng_sa_per_s: f64,
+        grng_j_per_sa: f64,
+        mvm_j: f64,
+    ) -> Self {
+        let tile = &chip.tile;
+        let area = area_breakdown(tile, &chip.area);
+        let ops = tile.ops_per_mvm() as f64;
+        let nn_tput = ops * tile.clock_hz;
+        HeadlineMetrics {
+            rng_tput_gsa_s: grng_sa_per_s / 1e9,
+            rng_eff_pj_per_sa: grng_j_per_sa * 1e12,
+            rng_tput_norm_gsa_s_mm2: grng_sa_per_s / 1e9 / area.chip_mm2,
+            nn_tput_gops: nn_tput / 1e9,
+            nn_eff_fj_per_op: mvm_j / ops * 1e15,
+            nn_tput_norm_gops_mm2: nn_tput / 1e9 / area.chip_mm2,
+            area_mm2: area.chip_mm2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+
+    #[test]
+    fn ledger_accumulates_and_breaks_down() {
+        let mut l = EnergyLedger::new();
+        l.deposit(Component::Sram, 3e-12);
+        l.deposit(Component::Grng, 1e-12);
+        l.deposit(Component::Sram, 1e-12);
+        assert!((l.total_j() - 5e-12).abs() < 1e-24);
+        assert!((l.component_j(Component::Sram) - 4e-12).abs() < 1e-24);
+        let bd = l.breakdown();
+        let sram = bd.iter().find(|(c, _, _)| *c == Component::Sram).unwrap();
+        assert!((sram.2 - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ledger_absorb() {
+        let mut a = EnergyLedger::new();
+        a.deposit(Component::Adc, 1e-12);
+        a.mvm_count = 2;
+        let mut b = EnergyLedger::new();
+        b.deposit(Component::Adc, 2e-12);
+        b.grng_samples = 10;
+        a.absorb(&b);
+        assert!((a.component_j(Component::Adc) - 3e-12).abs() < 1e-24);
+        assert_eq!(a.mvm_count, 2);
+        assert_eq!(a.grng_samples, 10);
+    }
+
+    #[test]
+    fn chip_area_matches_paper() {
+        // Total die should be ≈ 0.45 mm² (Tab. II).
+        let chip = ChipConfig::default();
+        let bd = area_breakdown(&chip.tile, &chip.area);
+        assert!(
+            (bd.chip_mm2 - 0.45).abs() < 0.02,
+            "chip area {:.3} mm² should be ≈0.45",
+            bd.chip_mm2
+        );
+        // SRAM share of the tile ≈ 48 % (Fig. 12).
+        let sram = bd.items.iter().find(|(n, _)| *n == "SRAM").unwrap().1;
+        let share = sram / bd.tile_mm2;
+        assert!(
+            (0.40..=0.56).contains(&share),
+            "SRAM tile share {share:.3}"
+        );
+    }
+
+    #[test]
+    fn headline_metrics_sane() {
+        let chip = ChipConfig::default();
+        let m = HeadlineMetrics::compute(&chip, 5.12e9, 360e-15, 660e-12);
+        assert!((m.rng_tput_gsa_s - 5.12).abs() < 0.01);
+        assert!((m.rng_eff_pj_per_sa - 0.36).abs() < 0.01);
+        assert!((m.nn_tput_gops - 102.4).abs() < 1.0);
+        assert!((m.nn_eff_fj_per_op - 644.5).abs() < 2.0);
+        assert!(m.rng_tput_norm_gsa_s_mm2 > 10.0);
+    }
+}

@@ -1,0 +1,36 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for the bnn-cim library.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("configuration error: {0}")]
+    Config(String),
+    #[error("artifact error: {0}")]
+    Artifact(String),
+    #[error("runtime (PJRT) error: {0}")]
+    Runtime(String),
+    #[error("model error: {0}")]
+    Model(String),
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+    #[error("calibration error: {0}")]
+    Calibration(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        Error::Artifact(e.to_string())
+    }
+}
+
+impl From<crate::util::toml::TomlError> for Error {
+    fn from(e: crate::util::toml::TomlError) -> Self {
+        Error::Config(e.to_string())
+    }
+}

@@ -1,0 +1,124 @@
+//! Fig. 12: tile area and energy breakdown for one complete MVM.
+//! Paper: SRAM > 63 % of tile energy and 48 % of tile area; synthesized
+//! digital (calibration/reduction control, IO buffers) excluded.
+
+use crate::cim::{CimTile, MvmOptions};
+use crate::config::ChipConfig;
+use crate::energy::{area_breakdown, AreaBreakdown, Component, EnergyLedger};
+
+#[derive(Clone, Debug)]
+pub struct BreakdownReport {
+    pub energy: EnergyLedger,
+    pub area: AreaBreakdown,
+    pub mvm_energy_j: f64,
+    pub fj_per_op: f64,
+    pub ops_per_mvm: usize,
+}
+
+/// Run one programmed, calibrated, fresh-ε MVM and collect the ledgers.
+pub fn run_breakdown(chip: &ChipConfig, seed: u64) -> BreakdownReport {
+    let mut tile = CimTile::new(chip);
+    let _ = crate::cim::calibrate(&mut tile, 8, 16);
+    // Program representative weights.
+    let mut rng = crate::util::rng::Pcg64::new(seed);
+    use crate::util::rng::Rng64;
+    let n = chip.tile.rows * chip.tile.words_per_row;
+    let mu: Vec<f64> = (0..n).map(|_| (rng.next_f64() * 2.0 - 1.0) * 200.0).collect();
+    let sg: Vec<f64> = (0..n).map(|_| rng.next_f64() * 12.0).collect();
+    tile.program_matrix(&mu, &sg);
+    tile.ledger.reset();
+    let x: Vec<u8> = (0..chip.tile.rows).map(|_| rng.next_below(16) as u8).collect();
+    let _ = tile.mvm(&x, MvmOptions::default());
+    let energy = tile.ledger.clone();
+    let mvm_energy_j = energy.total_j();
+    let ops = chip.tile.ops_per_mvm();
+    BreakdownReport {
+        energy,
+        area: area_breakdown(&chip.tile, &chip.area),
+        mvm_energy_j,
+        fj_per_op: mvm_energy_j / ops as f64 * 1e15,
+        ops_per_mvm: ops,
+    }
+}
+
+impl BreakdownReport {
+    pub fn sram_energy_share(&self) -> f64 {
+        self.energy.component_j(Component::Sram) / self.mvm_energy_j
+    }
+
+    pub fn sram_area_share(&self) -> f64 {
+        let sram = self
+            .area
+            .items
+            .iter()
+            .find(|(n, _)| *n == "SRAM")
+            .map(|(_, a)| *a)
+            .unwrap_or(0.0);
+        sram / self.area.tile_mm2
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "Fig. 12 — tile energy breakdown (one MVM, {:.1} pJ total, {:.0} fJ/Op over {} ops):\n{}",
+            self.mvm_energy_j * 1e12,
+            self.fj_per_op,
+            self.ops_per_mvm,
+            self.energy.ascii_breakdown()
+        );
+        s.push_str(&format!(
+            "\ntile area breakdown ({:.4} mm² tile, {:.3} mm² chip):\n",
+            self.area.tile_mm2, self.area.chip_mm2
+        ));
+        for (name, mm2) in &self.area.items {
+            let share = mm2 / self.area.tile_mm2;
+            let bar = "#".repeat((share * 40.0).round() as usize);
+            s.push_str(&format!(
+                "  {:<10} {:>9.5} mm² {:>6.1}% {}\n",
+                name,
+                mm2,
+                share * 100.0,
+                bar
+            ));
+        }
+        s.push_str(&format!(
+            "\npaper targets: SRAM >63% of energy (got {:.1}%), ≈48% of area (got {:.1}%)\n",
+            self.sram_energy_share() * 100.0,
+            self.sram_area_share() * 100.0
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_matches_fig12_shares() {
+        let chip = ChipConfig::default();
+        let rep = run_breakdown(&chip, 7);
+        assert!(
+            rep.sram_energy_share() > 0.55,
+            "SRAM energy share {:.3}",
+            rep.sram_energy_share()
+        );
+        assert!(
+            (0.40..0.56).contains(&rep.sram_area_share()),
+            "SRAM area share {:.3}",
+            rep.sram_area_share()
+        );
+        // Tab. II NN efficiency ≈ 672 fJ/Op.
+        assert!(
+            (420.0..1000.0).contains(&rep.fj_per_op),
+            "fJ/Op {}",
+            rep.fj_per_op
+        );
+        // GRNG share should be visible but small (in-word efficiency).
+        let grng_share = rep.energy.component_j(Component::Grng) / rep.mvm_energy_j;
+        assert!(
+            (0.05..0.45).contains(&grng_share),
+            "GRNG share {grng_share}"
+        );
+        assert!(rep.render().contains("Fig. 12"));
+    }
+}

@@ -1,0 +1,137 @@
+//! Fig. 9: GRNG operating points vs bias voltage V_R — average latency,
+//! pulse-width σ, and energy/sample all fall as V_R rises. The paper
+//! overlays chip measurements (≤ ~110 mV limited by IO) with
+//! parasitic-annotated simulation; our "measured" series is the
+//! stochastic circuit ODE and the "simulated" series the closed form.
+
+use crate::config::GrngConfig;
+use crate::grng::physics;
+use crate::grng::GrngCell;
+use crate::util::stats::Summary;
+
+#[derive(Clone, Debug)]
+pub struct BiasPoint {
+    pub bias_v: f64,
+    /// Closed-form (the "simulation" series).
+    pub model_latency_s: f64,
+    pub model_sigma_s: f64,
+    pub model_energy_j: f64,
+    /// Monte-Carlo over the circuit sim (the "measurement" series);
+    /// None for points where only the model is evaluated.
+    pub meas_latency_s: Option<f64>,
+    pub meas_sigma_s: Option<f64>,
+}
+
+/// Sweep bias voltages. `mc_n = 0` skips the circuit-ODE series.
+pub fn run_bias_sweep(
+    cfg: &GrngConfig,
+    biases_v: &[f64],
+    mc_n: usize,
+    seed: u64,
+) -> Vec<BiasPoint> {
+    biases_v
+        .iter()
+        .enumerate()
+        .map(|(i, &bias)| {
+            let mut c = cfg.clone();
+            c.bias_v = bias;
+            let op = physics::operating_point(&c, bias, c.temp_c);
+            let (meas_latency_s, meas_sigma_s) = if mc_n > 0 {
+                let mut cell = GrngCell::ideal(&c, seed ^ (i as u64) << 8);
+                let mut lat = Summary::new();
+                let mut wid = Summary::new();
+                for _ in 0..mc_n {
+                    let s = cell.sample_circuit();
+                    lat.push(s.latency_s);
+                    wid.push(s.signed_width_s);
+                }
+                (Some(lat.mean()), Some(wid.sample_std()))
+            } else {
+                (None, None)
+            };
+            BiasPoint {
+                bias_v: bias,
+                model_latency_s: op.mu_t,
+                model_sigma_s: op.pulse_sigma,
+                model_energy_j: op.energy_j,
+                meas_latency_s,
+                meas_sigma_s,
+            }
+        })
+        .collect()
+}
+
+/// Default Fig. 9 sweep grid (mV → V).
+pub fn default_biases() -> Vec<f64> {
+    (0..=10).map(|i| 0.10 + 0.01 * i as f64).collect()
+}
+
+pub fn render(points: &[BiasPoint]) -> String {
+    let mut s = String::from(
+        "Fig. 9 — bias sweep\n  V_R [mV] | latency model/meas [ns] | σ(T_D) model/meas [ns] | E [fJ/Sa]\n",
+    );
+    for p in points {
+        s.push_str(&format!(
+            "  {:>7.0} | {:>10.1} / {:<10} | {:>8.2} / {:<8} | {:>7.0}\n",
+            p.bias_v * 1e3,
+            p.model_latency_s * 1e9,
+            p.meas_latency_s
+                .map(|v| format!("{:.1}", v * 1e9))
+                .unwrap_or_else(|| "—".into()),
+            p.model_sigma_s * 1e9,
+            p.meas_sigma_s
+                .map(|v| format!("{:.2}", v * 1e9))
+                .unwrap_or_else(|| "—".into()),
+            p.model_energy_j * 1e15,
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_has_paper_monotonicity() {
+        // Fig. 9: increasing V_R ⇒ latency ↓, σ ↓, energy ↓.
+        let cfg = GrngConfig::default();
+        let pts = run_bias_sweep(&cfg, &default_biases(), 0, 3);
+        for w in pts.windows(2) {
+            assert!(w[1].model_latency_s < w[0].model_latency_s);
+            assert!(w[1].model_sigma_s < w[0].model_sigma_s);
+            assert!(w[1].model_energy_j < w[0].model_energy_j);
+        }
+    }
+
+    #[test]
+    fn measured_series_tracks_model() {
+        let cfg = GrngConfig::default();
+        let pts = run_bias_sweep(&cfg, &[0.14, 0.18], 300, 5);
+        for p in &pts {
+            let lat_ratio = p.meas_latency_s.unwrap() / p.model_latency_s;
+            assert!(
+                (0.9..1.1).contains(&lat_ratio),
+                "latency ratio {lat_ratio} at {} mV",
+                p.bias_v * 1e3
+            );
+            let sd_ratio = p.meas_sigma_s.unwrap() / p.model_sigma_s;
+            assert!(
+                (0.75..1.3).contains(&sd_ratio),
+                "σ ratio {sd_ratio} at {} mV",
+                p.bias_v * 1e3
+            );
+        }
+    }
+
+    #[test]
+    fn typical_point_is_on_the_curve() {
+        // 180 mV row should read ≈69 ns / ≈1 ns / ≈360 fJ.
+        let cfg = GrngConfig::default();
+        let pts = run_bias_sweep(&cfg, &[0.18], 0, 1);
+        let p = &pts[0];
+        assert!((p.model_latency_s * 1e9 - 69.0).abs() < 12.0);
+        assert!((p.model_sigma_s * 1e9 - 1.0).abs() < 0.4);
+        assert!((p.model_energy_j * 1e15 - 360.0).abs() < 60.0);
+    }
+}

@@ -1,0 +1,258 @@
+//! Tab. II: comparison to other work. Our row is *measured* from the
+//! simulator (GRNG bank throughput/energy, tile MVM energy, area model);
+//! baseline rows quote the published figures attached to each
+//! re-implemented algorithm, plus our software microbenchmark of the
+//! algorithm itself.
+
+use crate::config::{ChipConfig, TECH_NODE_NM};
+use crate::config::energy::TechScale;
+use crate::energy::HeadlineMetrics;
+use crate::grng::baselines::{all_sources, GaussianSource};
+use crate::grng::GrngBank;
+
+#[derive(Clone, Debug)]
+pub struct ComparisonRow {
+    pub name: String,
+    pub implementation: String,
+    pub tech_nm: f64,
+    pub rng_kind: String,
+    pub area_mm2: Option<f64>,
+    pub rng_tput_gsa_s: Option<f64>,
+    pub rng_eff_pj_per_sa: Option<f64>,
+    pub nn_tput_gops: Option<f64>,
+    pub nn_eff_fj_per_op: Option<f64>,
+    /// Software throughput of our implementation [MSa/s] (context only).
+    pub sw_msa_s: Option<f64>,
+}
+
+/// Published rows of Tab. II.
+pub fn paper_rows() -> Vec<ComparisonRow> {
+    vec![
+        ComparisonRow {
+            name: "[9] Dorrance JSSC'23".into(),
+            implementation: "ASIC".into(),
+            tech_nm: 22.0,
+            rng_kind: "TI-Hadamard".into(),
+            area_mm2: Some(3.88),
+            rng_tput_gsa_s: Some(4.65),
+            rng_eff_pj_per_sa: Some(1.08),
+            nn_tput_gops: Some(1200.0),
+            nn_eff_fj_per_op: Some(31.0),
+            sw_msa_s: None,
+        },
+        ComparisonRow {
+            name: "[10] Shukla TVLSI'21".into(),
+            implementation: "Simulated".into(),
+            tech_nm: 45.0,
+            rng_kind: "Analog Vth".into(),
+            area_mm2: None,
+            rng_tput_gsa_s: None,
+            rng_eff_pj_per_sa: Some(0.37),
+            nn_tput_gops: None,
+            nn_eff_fj_per_op: None,
+            sw_msa_s: None,
+        },
+        ComparisonRow {
+            name: "[11] VIBNN ASPLOS'18".into(),
+            implementation: "FPGA".into(),
+            tech_nm: 28.0,
+            rng_kind: "Wallace".into(),
+            area_mm2: None,
+            rng_tput_gsa_s: Some(13.63),
+            rng_eff_pj_per_sa: Some(38.8),
+            nn_tput_gops: Some(59.6),
+            nn_eff_fj_per_op: None,
+            sw_msa_s: None,
+        },
+        ComparisonRow {
+            name: "[12] Xu OJCAS'21".into(),
+            implementation: "FPGA".into(),
+            tech_nm: 16.0,
+            rng_kind: "Box-Muller".into(),
+            area_mm2: None,
+            rng_tput_gsa_s: Some(8.88),
+            rng_eff_pj_per_sa: Some(5.40),
+            nn_tput_gops: None,
+            nn_eff_fj_per_op: None,
+            sw_msa_s: None,
+        },
+        ComparisonRow {
+            name: "[13] Fan TCAD'22".into(),
+            implementation: "FPGA".into(),
+            tech_nm: 20.0,
+            rng_kind: "MC Dropout".into(),
+            area_mm2: None,
+            rng_tput_gsa_s: None,
+            rng_eff_pj_per_sa: None,
+            nn_tput_gops: Some(533.0),
+            nn_eff_fj_per_op: Some(24_000.0),
+            sw_msa_s: None,
+        },
+    ]
+}
+
+/// Measure OUR row from the simulator, then assemble the full table.
+/// `sw_bench_n` samples per baseline software microbenchmark (0 = skip).
+pub fn comparison_table(chip: &ChipConfig, sw_bench_n: usize) -> (Vec<ComparisonRow>, HeadlineMetrics) {
+    // --- our row, measured ---
+    let bank = GrngBank::for_chip(chip);
+    let grng_tput = bank.hardware_throughput_sa_s();
+    let grng_eff = bank.mean_energy_per_sample();
+    let mvm_j = {
+        let rep = super::fig12::run_breakdown(chip, 99);
+        rep.mvm_energy_j
+    };
+    let m = HeadlineMetrics::compute(chip, grng_tput, grng_eff, mvm_j);
+    let mut rows = vec![ComparisonRow {
+        name: "This work (sim)".into(),
+        implementation: "ASIC (behavioral sim)".into(),
+        tech_nm: TECH_NODE_NM,
+        rng_kind: "Analog (thermal, in-word)".into(),
+        area_mm2: Some(m.area_mm2),
+        rng_tput_gsa_s: Some(m.rng_tput_gsa_s),
+        rng_eff_pj_per_sa: Some(m.rng_eff_pj_per_sa),
+        nn_tput_gops: Some(m.nn_tput_gops),
+        nn_eff_fj_per_op: Some(m.nn_eff_fj_per_op),
+        sw_msa_s: None,
+    }];
+    // --- baselines: published figures + our software microbench ---
+    for mut row in paper_rows() {
+        if sw_bench_n > 0 {
+            if let Some(source) = matching_source(&row.rng_kind) {
+                row.sw_msa_s = Some(software_throughput(source, sw_bench_n));
+            }
+        }
+        rows.push(row);
+    }
+    (rows, m)
+}
+
+fn matching_source(kind: &str) -> Option<Box<dyn GaussianSource>> {
+    let sources = all_sources(0xBEEF);
+    for s in sources {
+        let match_ = match kind {
+            "TI-Hadamard" => s.name().contains("hadamard"),
+            "Wallace" => s.name().contains("wallace"),
+            "Box-Muller" => s.name().contains("box-muller"),
+            _ => false,
+        };
+        if match_ {
+            return Some(s);
+        }
+    }
+    None
+}
+
+fn software_throughput(mut src: Box<dyn GaussianSource>, n: usize) -> f64 {
+    let t0 = std::time::Instant::now();
+    let mut acc = 0.0;
+    for _ in 0..n {
+        acc += src.sample();
+    }
+    std::hint::black_box(acc);
+    n as f64 / t0.elapsed().as_secs_f64() / 1e6
+}
+
+/// 22 nm-scaled view of our row (Tab. II footnote †).
+pub fn scaled_22nm(m: &HeadlineMetrics) -> (f64, f64, f64) {
+    let s = TechScale::to_22nm();
+    (
+        s.throughput(m.rng_tput_gsa_s * 1e9) / 1e9,
+        s.throughput(m.rng_tput_gsa_s * 1e9) / 1e9 / s.area(m.area_mm2),
+        s.throughput(m.nn_tput_gops * 1e9) / 1e9 / s.area(m.area_mm2),
+    )
+}
+
+pub fn render(rows: &[ComparisonRow], m: &HeadlineMetrics) -> String {
+    let fmt_opt = |v: Option<f64>, digits: usize| {
+        v.map(|x| format!("{x:.*}", digits)).unwrap_or_else(|| "—".into())
+    };
+    let mut s = String::from(
+        "Tab. II — comparison to other work\n\
+         design                 | impl                  | nm | RNG                      | area mm² | RNG GSa/s | RNG pJ/Sa | NN GOp/s | NN fJ/Op | sw MSa/s\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<22} | {:<21} | {:>2.0} | {:<24} | {:>8} | {:>9} | {:>9} | {:>8} | {:>8} | {:>8}\n",
+            r.name,
+            r.implementation,
+            r.tech_nm,
+            r.rng_kind,
+            fmt_opt(r.area_mm2, 2),
+            fmt_opt(r.rng_tput_gsa_s, 2),
+            fmt_opt(r.rng_eff_pj_per_sa, 2),
+            fmt_opt(r.nn_tput_gops, 0),
+            fmt_opt(r.nn_eff_fj_per_op, 0),
+            fmt_opt(r.sw_msa_s, 1),
+        ));
+    }
+    let (t22, tn22, nn22) = scaled_22nm(m);
+    s.push_str(&format!(
+        "\nnormalized (this work): RNG {:.1} GSa/s/mm², NN {:.0} GOp/s/mm²\n\
+         scaled to 22 nm†: RNG {:.1} GSa/s ({:.1} GSa/s/mm²), NN {:.0} GOp/s/mm²\n\
+         paper row:  0.45 mm² | 5.12 GSa/s | 0.36 pJ/Sa | 102 GOp/s | 672 fJ/Op | 11.4 GSa/s/mm²\n",
+        m.rng_tput_norm_gsa_s_mm2, m.nn_tput_norm_gops_mm2, t22, tn22, nn22
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn our_row_lands_on_paper_headlines() {
+        let chip = ChipConfig::default();
+        let (rows, m) = comparison_table(&chip, 0);
+        assert_eq!(rows.len(), 6);
+        // 5.12 GSa/s, 0.36 pJ/Sa, 102 GOp/s, 672 fJ/Op, 0.45 mm² — shapes.
+        assert!((3.0..9.0).contains(&m.rng_tput_gsa_s), "{}", m.rng_tput_gsa_s);
+        assert!(
+            (0.26..0.46).contains(&m.rng_eff_pj_per_sa),
+            "{}",
+            m.rng_eff_pj_per_sa
+        );
+        assert!((95.0..110.0).contains(&m.nn_tput_gops), "{}", m.nn_tput_gops);
+        assert!((420.0..1000.0).contains(&m.nn_eff_fj_per_op), "{}", m.nn_eff_fj_per_op);
+        assert!((0.43..0.47).contains(&m.area_mm2), "{}", m.area_mm2);
+    }
+
+    #[test]
+    fn headline_comparisons_hold() {
+        // The table's message: lowest RNG energy among ASIC/FPGA rows and
+        // the best normalized RNG throughput.
+        let chip = ChipConfig::default();
+        let (rows, m) = comparison_table(&chip, 0);
+        let ours = &rows[0];
+        for other in &rows[1..] {
+            if let (Some(a), Some(b)) = (ours.rng_eff_pj_per_sa, other.rng_eff_pj_per_sa) {
+                // [10] is a simulation at 0.37 pJ — we tie/beat it narrowly.
+                assert!(
+                    a <= b * 1.05,
+                    "{} beats us on RNG energy: {a} vs {b}",
+                    other.name
+                );
+            }
+        }
+        assert!(m.rng_tput_norm_gsa_s_mm2 > 5.0);
+    }
+
+    #[test]
+    fn scaling_footnote_increases_throughput() {
+        let chip = ChipConfig::default();
+        let (_, m) = comparison_table(&chip, 0);
+        let (t22, tn22, _) = scaled_22nm(&m);
+        assert!(t22 > m.rng_tput_gsa_s);
+        assert!(tn22 > m.rng_tput_norm_gsa_s_mm2);
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let chip = ChipConfig::default();
+        let (rows, m) = comparison_table(&chip, 0);
+        let text = render(&rows, &m);
+        assert!(text.contains("This work"));
+        assert!(text.contains("VIBNN"));
+        assert!(text.contains("paper row"));
+    }
+}

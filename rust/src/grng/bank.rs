@@ -1,0 +1,192 @@
+//! The in-word GRNG bank: one GRNG cell per σε word of the CIM tile.
+//!
+//! This is the architectural point of the paper: ε is generated *inside*
+//! the memory word that stores σ, so a full 64×8 matrix of fresh Gaussian
+//! samples materializes in one conversion — no reads, no writes, no RNG
+//! unit on the far side of a bus. The bank exposes:
+//!
+//! - [`GrngBank::fill_epsilon`] — one fresh ε per cell (one MVM's worth),
+//! - per-cell offsets for the calibration controller,
+//! - aggregate throughput/energy accounting for Tab. II.
+
+use crate::config::{ChipConfig, GrngConfig};
+use crate::grng::circuit::GrngCell;
+use crate::grng::mismatch::DieVariation;
+use crate::util::rng::{Rng64, SplitMix64};
+
+/// Bank of GRNG cells matching a tile's σε array layout.
+pub struct GrngBank {
+    pub rows: usize,
+    pub words: usize,
+    cells: Vec<GrngCell>,
+    /// Total samples drawn (for energy/throughput accounting).
+    samples_drawn: u64,
+}
+
+impl GrngBank {
+    /// Build the bank for a die.
+    pub fn new(cfg: &GrngConfig, die: &DieVariation, seed: u64) -> Self {
+        let mut seeder = SplitMix64::new(seed ^ 0x6BA4_57B1);
+        let cells = (0..die.rows * die.words)
+            .map(|i| {
+                let row = i / die.words;
+                let word = i % die.words;
+                GrngCell::new(die.cell_params(cfg, row, word), seeder.split())
+            })
+            .collect();
+        Self {
+            rows: die.rows,
+            words: die.words,
+            cells,
+            samples_drawn: 0,
+        }
+    }
+
+    /// Convenience: bank for the configured chip with its die seed.
+    pub fn for_chip(chip: &ChipConfig) -> Self {
+        let die = DieVariation::draw(
+            &chip.grng,
+            chip.tile.rows,
+            chip.tile.words_per_row,
+            chip.die_seed,
+        );
+        Self::new(&chip.grng, &die, chip.die_seed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    #[inline]
+    pub fn cell(&self, row: usize, word: usize) -> &GrngCell {
+        &self.cells[row * self.words + word]
+    }
+
+    #[inline]
+    pub fn cell_mut(&mut self, row: usize, word: usize) -> &mut GrngCell {
+        &mut self.cells[row * self.words + word]
+    }
+
+    /// Fill `out` (len = rows × words, row-major) with one fresh ε per
+    /// cell — the parallel sampling that accompanies every MVM. Uses the
+    /// fast closed-form path.
+    pub fn fill_epsilon(&mut self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.cells.len());
+        for (o, cell) in out.iter_mut().zip(self.cells.iter_mut()) {
+            *o = cell.eps_fast();
+        }
+        self.samples_drawn += self.cells.len() as u64;
+    }
+
+    /// Allocate-and-fill variant.
+    pub fn epsilon_matrix(&mut self) -> Vec<f64> {
+        let mut out = vec![0.0; self.cells.len()];
+        self.fill_epsilon(&mut out);
+        out
+    }
+
+    /// True per-cell static offsets (ground truth for calibration tests).
+    pub fn true_offsets(&self) -> Vec<f64> {
+        self.cells
+            .iter()
+            .map(|c| c.params.epsilon_offset())
+            .collect()
+    }
+
+    /// Mean per-sample energy across the bank [J].
+    pub fn mean_energy_per_sample(&self) -> f64 {
+        let total: f64 = self.cells.iter().map(|c| c.params.energy_j).sum();
+        total / self.cells.len() as f64
+    }
+
+    /// Mean conversion latency (≈ slowest-branch mean) across the bank [s].
+    pub fn mean_latency(&self) -> f64 {
+        let total: f64 = self
+            .cells
+            .iter()
+            .map(|c| c.params.mu_p.max(c.params.mu_n))
+            .sum();
+        total / self.cells.len() as f64
+    }
+
+    /// Aggregate hardware sample throughput [Sa/s]: all cells convert in
+    /// parallel, one sample per cell per conversion. (The paper's
+    /// 5.12 GSa/s: 512 cells ÷ ~100 ns cycle.)
+    pub fn hardware_throughput_sa_s(&self) -> f64 {
+        let latency = self.mean_latency() + self.cells[0].params.cfg.dff_reset_window_s * 2.0;
+        self.cells.len() as f64 / latency
+    }
+
+    pub fn samples_drawn(&self) -> u64 {
+        self.samples_drawn
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+    use crate::util::stats::Summary;
+
+    #[test]
+    fn bank_fills_full_matrix() {
+        let chip = ChipConfig::default();
+        let mut bank = GrngBank::for_chip(&chip);
+        assert_eq!(bank.len(), 512);
+        let eps = bank.epsilon_matrix();
+        assert_eq!(eps.len(), 512);
+        assert_eq!(bank.samples_drawn(), 512);
+        // Not all equal (actual randomness).
+        let s = Summary::from_slice(&eps);
+        assert!(s.std() > 0.5);
+    }
+
+    #[test]
+    fn bank_throughput_near_paper() {
+        // Paper: 5.12 GSa/s from 512 parallel cells.
+        let chip = ChipConfig::default();
+        let bank = GrngBank::for_chip(&chip);
+        let tput = bank.hardware_throughput_sa_s();
+        assert!(
+            (3.0e9..9.0e9).contains(&tput),
+            "throughput {tput:.3e} should be in the GSa/s range"
+        );
+    }
+
+    #[test]
+    fn bank_energy_near_paper() {
+        let chip = ChipConfig::default();
+        let bank = GrngBank::for_chip(&chip);
+        let e = bank.mean_energy_per_sample();
+        assert!(
+            (260e-15..460e-15).contains(&e),
+            "energy/sample {:.0} fJ should be ≈360 fJ",
+            e * 1e15
+        );
+    }
+
+    #[test]
+    fn different_cells_have_different_offsets() {
+        let chip = ChipConfig::default();
+        let bank = GrngBank::for_chip(&chip);
+        let offs = bank.true_offsets();
+        let s = Summary::from_slice(&offs);
+        assert!(s.std() > 0.05, "mismatch must spread offsets, σ={}", s.std());
+    }
+
+    #[test]
+    fn deterministic_per_die_seed() {
+        let chip = ChipConfig::default();
+        let mut a = GrngBank::for_chip(&chip);
+        let mut b = GrngBank::for_chip(&chip);
+        assert_eq!(a.epsilon_matrix(), b.epsilon_matrix());
+        let mut chip2 = ChipConfig::default();
+        chip2.die_seed = 1;
+        let mut c = GrngBank::for_chip(&chip2);
+        assert_ne!(a.epsilon_matrix(), c.epsilon_matrix());
+    }
+}

@@ -1,0 +1,76 @@
+//! Bernoulli mask source for MC-dropout uncertainty estimation.
+//!
+//! [13] (Fan et al., TCAD 2022) sidesteps Gaussian sampling entirely:
+//! uncertainty comes from Monte-Carlo dropout — random Bernoulli masks
+//! applied at inference time. Not a Gaussian source, so it gets its own
+//! type; the uncertainty benches use it as the non-Bayesian-sampling
+//! comparison arm, and Tab. II quotes its published system figures.
+
+use crate::util::rng::{Rng64, Xoshiro256};
+
+/// Published figures of the MC-dropout FPGA design [13].
+pub const MCDROPOUT_TECH_NM: f64 = 20.0;
+pub const MCDROPOUT_NN_GOPS: (f64, f64) = (533.0, 1590.0);
+pub const MCDROPOUT_NN_FJ_PER_OP: (f64, f64) = (24_000.0, 51_000.0);
+
+pub struct DropoutMask {
+    rng: Xoshiro256,
+    /// Keep probability (1 − dropout rate).
+    pub keep_p: f64,
+}
+
+impl DropoutMask {
+    pub fn new(seed: u64, keep_p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&keep_p));
+        Self {
+            rng: Xoshiro256::new(seed ^ 0xD20_F0C7),
+            keep_p,
+        }
+    }
+
+    /// One mask value: 1/keep_p with probability keep_p else 0
+    /// (inverted-dropout scaling so the expectation is 1).
+    #[inline]
+    pub fn sample(&mut self) -> f64 {
+        if self.rng.next_f64() < self.keep_p {
+            1.0 / self.keep_p
+        } else {
+            0.0
+        }
+    }
+
+    /// Fill a mask vector for one forward pass.
+    pub fn fill(&mut self, out: &mut [f32]) {
+        for o in out.iter_mut() {
+            *o = self.sample() as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_expectation_is_one() {
+        let mut d = DropoutMask::new(3, 0.8);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| d.sample()).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.01, "inverted dropout mean {mean}");
+    }
+
+    #[test]
+    fn keep_rate_respected() {
+        let mut d = DropoutMask::new(4, 0.3);
+        let n = 50_000;
+        let kept = (0..n).filter(|_| d.sample() > 0.0).count();
+        let rate = kept as f64 / n as f64;
+        assert!((rate - 0.3).abs() < 0.02, "keep rate {rate}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_keep_p_rejected() {
+        let _ = DropoutMask::new(1, 1.5);
+    }
+}

@@ -1,0 +1,137 @@
+//! Time-interleaved Hadamard CLT Gaussian generator.
+//!
+//! Models the digital GRNG of [9] (Dorrance et al., JSSC 2023): a block of
+//! uniform ±1 bits is passed through a fast Walsh–Hadamard transform;
+//! each output coordinate is a sum of N independent ±1 terms, so by the
+//! CLT it is approximately N(0, N) — normalized by √N. "Time-interleaved"
+//! refers to producing the transform outputs over successive cycles from
+//! one bit-block while the next block streams in; here that manifests as
+//! a buffered block generator.
+
+use super::{GaussianSource, SourceCost};
+use crate::util::rng::{Rng64, Xoshiro256};
+
+/// Block size (order of the Hadamard matrix). [9] uses small orders
+/// time-interleaved; 64 balances normality vs cost.
+const ORDER: usize = 64;
+
+pub struct TiHadamard {
+    rng: Xoshiro256,
+    buf: [f64; ORDER],
+    pos: usize,
+}
+
+impl TiHadamard {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Xoshiro256::new(seed ^ 0x44AD_0ADA),
+            buf: [0.0; ORDER],
+            pos: ORDER, // force refill on first sample
+        }
+    }
+
+    /// In-place fast Walsh–Hadamard transform (unnormalized).
+    fn fwht(data: &mut [f64; ORDER]) {
+        let mut h = 1;
+        while h < ORDER {
+            let mut i = 0;
+            while i < ORDER {
+                for j in i..i + h {
+                    let x = data[j];
+                    let y = data[j + h];
+                    data[j] = x + y;
+                    data[j + h] = x - y;
+                }
+                i += 2 * h;
+            }
+            h *= 2;
+        }
+    }
+
+    fn refill(&mut self) {
+        // Draw 64 random ±1 values from one 64-bit word.
+        let bits = self.rng.next_u64();
+        for (i, slot) in self.buf.iter_mut().enumerate() {
+            *slot = if (bits >> i) & 1 == 1 { 1.0 } else { -1.0 };
+        }
+        Self::fwht(&mut self.buf);
+        let norm = 1.0 / (ORDER as f64).sqrt();
+        for slot in self.buf.iter_mut() {
+            *slot *= norm;
+        }
+        self.pos = 0;
+    }
+}
+
+impl GaussianSource for TiHadamard {
+    fn name(&self) -> &'static str {
+        "ti-hadamard [9]"
+    }
+
+    fn sample(&mut self) -> f64 {
+        if self.pos >= ORDER {
+            self.refill();
+        }
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        v
+    }
+
+    fn cost(&self) -> SourceCost {
+        SourceCost {
+            // [9]: 1.08–1.69 pJ/Sa, 4.65–7.31 GSa/s, 3.88 mm², 22 nm.
+            published_pj_per_sa: Some(1.08),
+            published_gsa_s: Some(4.65),
+            published_area_mm2: Some(3.88),
+            tech_nm: 22.0,
+            // FWHT: N·log2 N adds per N outputs → log2 N adds/sample + RNG.
+            ops_per_sample: 6.0 + 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+
+    #[test]
+    fn hadamard_transform_orthogonality() {
+        // FWHT of a delta is a constant row of ±1 — check Parseval.
+        let mut data = [0.0; ORDER];
+        data[3] = 1.0;
+        TiHadamard::fwht(&mut data);
+        let energy: f64 = data.iter().map(|x| x * x).sum();
+        assert!((energy - ORDER as f64).abs() < 1e-9);
+        for &v in &data {
+            assert!((v.abs() - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn outputs_within_clt_range() {
+        // Each output is a sum of 64 ±1 / 8 → |x| ≤ 8.
+        let mut g = TiHadamard::new(5);
+        for _ in 0..10_000 {
+            let v = g.sample();
+            assert!(v.abs() <= 8.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn block_samples_are_uncorrelated() {
+        let mut g = TiHadamard::new(9);
+        let xs = g.sample_n(ORDER * 200);
+        // Correlation between successive outputs within blocks.
+        let mut num = 0.0;
+        let mut den = 0.0;
+        let m = xs.iter().sum::<f64>() / xs.len() as f64;
+        for i in 0..xs.len() - 1 {
+            num += (xs[i] - m) * (xs[i + 1] - m);
+            den += (xs[i] - m) * (xs[i] - m);
+        }
+        assert!((num / den).abs() < 0.05);
+        let s = Summary::from_slice(&xs);
+        assert!((s.std() - 1.0).abs() < 0.05);
+    }
+}

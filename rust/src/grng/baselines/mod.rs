@@ -1,0 +1,96 @@
+//! Comparison GRNG implementations (Tab. II baselines).
+//!
+//! The paper compares its analog in-word GRNG against digital approaches
+//! used by prior BNN accelerators. To regenerate Tab. II we implement each
+//! *algorithm* and attach the published cost figures of the corresponding
+//! design (their silicon is obviously not reproducible here):
+//!
+//! - [`hadamard`] — time-interleaved Hadamard CLT generator
+//!   ([9] Dorrance et al., 22 nm ASIC).
+//! - [`wallace`] — Wallace pool method ([11] VIBNN, Cyclone V FPGA;
+//!   original algorithm [14] Lee et al.).
+//! - [`box_muller`] — fixed-point Box–Muller ([12] Xu et al., ZU9EG FPGA).
+//! - [`clt_lfsr`] — Irwin–Hall/CLT sum of LFSR uniforms (classic cheap
+//!   digital GRNG; ablation baseline).
+//! - [`dropout`] — Bernoulli mask source for MC-dropout
+//!   ([13] Fan et al., Arria 10 FPGA), the non-Gaussian alternative.
+
+pub mod box_muller;
+pub mod clt_lfsr;
+pub mod dropout;
+pub mod hadamard;
+pub mod wallace;
+
+/// Cost metadata for a Gaussian source: the published figures of the
+/// design that used this algorithm (for Tab. II), plus an op count that
+/// lets the energy model derive a same-methodology digital estimate.
+#[derive(Clone, Copy, Debug)]
+pub struct SourceCost {
+    /// Published energy per sample [pJ/Sa] (None if not reported).
+    pub published_pj_per_sa: Option<f64>,
+    /// Published throughput [GSa/s].
+    pub published_gsa_s: Option<f64>,
+    /// Published area [mm²] (ASICs only).
+    pub published_area_mm2: Option<f64>,
+    /// Technology node of the published design [nm].
+    pub tech_nm: f64,
+    /// Approximate digital op count per sample (for our own estimate).
+    pub ops_per_sample: f64,
+}
+
+/// A stream of (approximately) standard-normal samples.
+pub trait GaussianSource {
+    fn name(&self) -> &'static str;
+    fn sample(&mut self) -> f64;
+    fn cost(&self) -> SourceCost;
+
+    fn sample_n(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.sample()).collect()
+    }
+}
+
+/// All comparison sources with a common seed (for the comparison bench).
+pub fn all_sources(seed: u64) -> Vec<Box<dyn GaussianSource>> {
+    vec![
+        Box::new(hadamard::TiHadamard::new(seed)),
+        Box::new(wallace::Wallace::new(seed)),
+        Box::new(box_muller::FixedPointBoxMuller::new(seed)),
+        Box::new(clt_lfsr::CltLfsr::new(seed)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{qq_r_value, Summary};
+
+    #[test]
+    fn all_sources_are_roughly_standard_normal() {
+        for mut src in all_sources(0xA11CE) {
+            let xs = src.sample_n(20_000);
+            let s = Summary::from_slice(&xs);
+            assert!(
+                s.mean().abs() < 0.04,
+                "{}: mean {}",
+                src.name(),
+                s.mean()
+            );
+            assert!(
+                (s.std() - 1.0).abs() < 0.06,
+                "{}: std {}",
+                src.name(),
+                s.std()
+            );
+            let r = qq_r_value(&xs[..2500.min(xs.len())]);
+            assert!(r > 0.97, "{}: qq r {}", src.name(), r);
+        }
+    }
+
+    #[test]
+    fn costs_present_for_published_designs() {
+        let srcs = all_sources(1);
+        let hadamard = &srcs[0];
+        assert!(hadamard.cost().published_pj_per_sa.is_some());
+        assert!(hadamard.cost().ops_per_sample > 0.0);
+    }
+}

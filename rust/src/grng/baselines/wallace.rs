@@ -1,0 +1,147 @@
+//! Wallace-method Gaussian generator.
+//!
+//! Models the GRNG of [11] (VIBNN, ASPLOS'18), which uses the Wallace
+//! method [14] (Lee et al., TVLSI 2005): maintain a pool of Gaussian
+//! variates; each step applies a random orthogonal transform to a small
+//! group, producing new Gaussians *without* evaluating transcendental
+//! functions (the appeal for FPGA/ASIC implementation). Orthogonality
+//! preserves the pool's sum-of-squares, so outputs stay Gaussian; a
+//! slow chi-square-driven rescale corrects residual drift.
+
+use super::{GaussianSource, SourceCost};
+use crate::util::rng::{ziggurat_normal, Rng64, Xoshiro256};
+
+const POOL: usize = 1024;
+const GROUP: usize = 4;
+/// Rescale cadence (pool passes between variance corrections).
+const RESCALE_EVERY: usize = 8 * POOL;
+
+pub struct Wallace {
+    rng: Xoshiro256,
+    pool: Vec<f64>,
+    emitted: usize,
+    since_rescale: usize,
+}
+
+impl Wallace {
+    pub fn new(seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(seed ^ 0x3A11A5E);
+        // Initialize the pool from a reference sampler (hardware does this
+        // once at boot from a ROM of Gaussian constants).
+        let pool = (0..POOL).map(|_| ziggurat_normal(&mut rng)).collect();
+        Self {
+            rng,
+            pool,
+            emitted: 0,
+            since_rescale: 0,
+        }
+    }
+
+    /// 4×4 orthogonal transform (normalized Hadamard H₄/2): maps 4
+    /// Gaussians to 4 fresh Gaussians with the same total energy.
+    #[inline]
+    fn transform(vals: [f64; GROUP]) -> [f64; GROUP] {
+        let [a, b, c, d] = vals;
+        [
+            0.5 * (a + b + c + d),
+            0.5 * (a - b + c - d),
+            0.5 * (a + b - c - d),
+            0.5 * (a - b - c + d),
+        ]
+    }
+
+    fn step(&mut self) {
+        // Pick 4 distinct-ish random slots (collisions are harmless: the
+        // transform is still orthogonal over the distinct subset in
+        // expectation; hardware uses strided addressing).
+        let i0 = self.rng.next_below(POOL as u64) as usize;
+        let i1 = self.rng.next_below(POOL as u64) as usize;
+        let i2 = self.rng.next_below(POOL as u64) as usize;
+        let i3 = self.rng.next_below(POOL as u64) as usize;
+        let vals = [self.pool[i0], self.pool[i1], self.pool[i2], self.pool[i3]];
+        let out = Self::transform(vals);
+        self.pool[i0] = out[0];
+        self.pool[i1] = out[1];
+        self.pool[i2] = out[2];
+        self.pool[i3] = out[3];
+        self.since_rescale += GROUP;
+        if self.since_rescale >= RESCALE_EVERY {
+            self.rescale();
+        }
+    }
+
+    /// Variance correction: renormalize pool energy to POOL (a hardware
+    /// Wallace generator multiplies by a χ-distributed correction factor).
+    fn rescale(&mut self) {
+        let energy: f64 = self.pool.iter().map(|x| x * x).sum();
+        let k = (POOL as f64 / energy).sqrt();
+        for v in self.pool.iter_mut() {
+            *v *= k;
+        }
+        self.since_rescale = 0;
+    }
+}
+
+impl GaussianSource for Wallace {
+    fn name(&self) -> &'static str {
+        "wallace [11]"
+    }
+
+    fn sample(&mut self) -> f64 {
+        self.step();
+        let idx = self.emitted % POOL;
+        self.emitted += 1;
+        self.pool[idx]
+    }
+
+    fn cost(&self) -> SourceCost {
+        SourceCost {
+            // [11] VIBNN: 38.8 pJ/Sa, 13.63 GSa/s on Cyclone V (28 nm).
+            published_pj_per_sa: Some(38.8),
+            published_gsa_s: Some(13.63),
+            published_area_mm2: None,
+            tech_nm: 28.0,
+            // 4 reads + 8 add/sub + 4 writes per 4 outputs + addressing.
+            ops_per_sample: 5.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{qq_r_value, Summary};
+
+    #[test]
+    fn transform_is_orthogonal() {
+        let v = [1.0, -2.0, 3.0, 0.5];
+        let o = Wallace::transform(v);
+        let e_in: f64 = v.iter().map(|x| x * x).sum();
+        let e_out: f64 = o.iter().map(|x| x * x).sum();
+        assert!((e_in - e_out).abs() < 1e-12, "energy must be preserved");
+    }
+
+    #[test]
+    fn pool_energy_stays_bounded() {
+        let mut w = Wallace::new(3);
+        let _ = w.sample_n(50_000);
+        let energy: f64 = w.pool.iter().map(|x| x * x).sum();
+        let per_slot = energy / POOL as f64;
+        assert!(
+            (0.7..1.4).contains(&per_slot),
+            "pool variance drifted to {per_slot}"
+        );
+    }
+
+    #[test]
+    fn long_run_normality() {
+        let mut w = Wallace::new(8);
+        // Skip warmup (initial pool correlations).
+        let _ = w.sample_n(10_000);
+        let xs = w.sample_n(2500);
+        let s = Summary::from_slice(&xs);
+        assert!(s.mean().abs() < 0.08);
+        assert!((s.std() - 1.0).abs() < 0.08);
+        assert!(qq_r_value(&xs) > 0.995);
+    }
+}

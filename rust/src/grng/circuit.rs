@@ -1,0 +1,346 @@
+//! Behavioral circuit simulation of the in-word GRNG cell (Fig. 4).
+//!
+//! Two modes share one parameter derivation ([`CellParams`]):
+//!
+//! - [`GrngCell::sample_circuit`] — full stochastic transient: Euler–
+//!   Maruyama integration of both capacitor discharges with per-step shot
+//!   noise, per-conversion low-frequency (RTN/flicker) slope error, kTC
+//!   initial-voltage noise, threshold-crossing interpolation, and outlier
+//!   injection (DFF mis-reset bursts). This is the *characterization*
+//!   path used by Fig. 8/9 and Tab. I benches.
+//! - [`GrngCell::sample_fast`] — closed-form draw from the same physics
+//!   (crossing times are Gaussian to first order), used on the MVM hot
+//!   path where millions of ε are needed. A unit test pins the two modes
+//!   to agree in distribution.
+
+use crate::config::GrngConfig;
+use crate::grng::physics;
+use crate::util::rng::{Rng64, Xoshiro256};
+
+/// Static per-cell parameters derived from config + die mismatch.
+#[derive(Clone, Debug)]
+pub struct CellParams {
+    pub cfg: GrngConfig,
+    /// Per-branch threshold-voltage mismatch [V] (static, per die).
+    pub dvth_p: f64,
+    pub dvth_n: f64,
+    /// Derived: per-branch leakage currents [A].
+    pub i_p: f64,
+    pub i_n: f64,
+    /// Derived: per-branch mean crossing times [s].
+    pub mu_p: f64,
+    pub mu_n: f64,
+    /// Derived: per-branch crossing σ [s].
+    pub sigma_p: f64,
+    pub sigma_n: f64,
+    /// Outlier probability per sample.
+    pub p_outlier: f64,
+    /// Outlier mean magnitude [s].
+    pub outlier_scale_s: f64,
+    /// ε normalization unit [s].
+    pub sigma_unit_s: f64,
+    /// Energy per sample [J].
+    pub energy_j: f64,
+    /// Precomputed pulse-width mean μ_n − μ_p [s] (hot-path).
+    pub diff_mean_s: f64,
+    /// Precomputed pulse-width σ = √(σ_p² + σ_n²) [s] (hot-path).
+    pub diff_sigma_s: f64,
+}
+
+impl CellParams {
+    /// Derive cell parameters at the config's operating point with the
+    /// given static mismatch.
+    pub fn derive(cfg: &GrngConfig, dvth_p: f64, dvth_n: f64) -> CellParams {
+        let temp_k = cfg.temp_k();
+        let i_p = physics::leakage_current(cfg, cfg.bias_v, temp_k, dvth_p);
+        let i_n = physics::leakage_current(cfg, cfg.bias_v, temp_k, dvth_n);
+        let mu_p = physics::mean_crossing_time(cfg, i_p);
+        let mu_n = physics::mean_crossing_time(cfg, i_n);
+        let sigma_p = physics::total_sigma(cfg, temp_k, mu_p, i_p);
+        let sigma_n = physics::total_sigma(cfg, temp_k, mu_n, i_n);
+        // Nominal (mismatch-free) operating point for normalization.
+        let op = physics::operating_point(cfg, cfg.bias_v, cfg.temp_c);
+        let sigma_unit_s = if cfg.sigma_unit_s > 0.0 {
+            cfg.sigma_unit_s
+        } else {
+            op.pulse_sigma
+        };
+        CellParams {
+            cfg: cfg.clone(),
+            dvth_p,
+            dvth_n,
+            i_p,
+            i_n,
+            mu_p,
+            mu_n,
+            sigma_p,
+            sigma_n,
+            diff_mean_s: mu_n - mu_p,
+            diff_sigma_s: (sigma_p * sigma_p + sigma_n * sigma_n).sqrt(),
+            p_outlier: physics::outlier_probability(cfg, temp_k),
+            outlier_scale_s: cfg.outlier_magnitude
+                * physics::outlier_magnitude_scale(cfg, temp_k)
+                * op.pulse_sigma,
+            // NOTE: outliers corrupt the *pulse width* (spurious E edges
+            // from a DFF mis-reset), not the conversion latency — Tab. I
+            // shows latency falling monotonically with temperature even
+            // as normality collapses.
+            sigma_unit_s,
+            energy_j: physics::energy_per_sample(cfg, 0.5 * (i_p + i_n)),
+        }
+    }
+
+    /// Static offset ε₀ of this cell (Eq. 8), in ε units: the mean of the
+    /// output distribution caused by branch mismatch.
+    pub fn epsilon_offset(&self) -> f64 {
+        (self.mu_n - self.mu_p) / self.sigma_unit_s
+    }
+}
+
+/// One GRNG output sample.
+#[derive(Clone, Copy, Debug)]
+pub struct GrngSample {
+    /// Signed time-domain value (t_n − t_p) [s]; the pulse width is its
+    /// magnitude, the sign selects BL_P vs BL_N steering (§III-D).
+    pub signed_width_s: f64,
+    /// Normalized ε = signed_width / σ_unit.
+    pub eps: f64,
+    /// Conversion latency (both branches crossed) [s].
+    pub latency_s: f64,
+    /// Energy consumed [J].
+    pub energy_j: f64,
+    /// Whether an outlier event (trap burst / DFF mis-reset) occurred.
+    pub outlier: bool,
+}
+
+/// A single in-word GRNG cell.
+#[derive(Clone, Debug)]
+pub struct GrngCell {
+    pub params: CellParams,
+    rng: Xoshiro256,
+}
+
+impl GrngCell {
+    pub fn new(params: CellParams, seed: u64) -> Self {
+        Self {
+            params,
+            rng: Xoshiro256::new(seed),
+        }
+    }
+
+    /// Ideal (mismatch-free) cell from a config.
+    pub fn ideal(cfg: &GrngConfig, seed: u64) -> Self {
+        Self::new(CellParams::derive(cfg, 0.0, 0.0), seed)
+    }
+
+    // -------------------------------------------------------------------
+    // Full transient simulation
+    // -------------------------------------------------------------------
+
+    /// Simulate one complete conversion with the stochastic ODE.
+    pub fn sample_circuit(&mut self) -> GrngSample {
+        let p = self.params.clone();
+        let t_p = self.simulate_branch(p.i_p, p.mu_p);
+        let t_n = self.simulate_branch(p.i_n, p.mu_n);
+        self.finish_sample(t_p, t_n)
+    }
+
+    /// Integrate one branch: dV = −(I·m_lf + i_shot(t))·dt/C from
+    /// V₀ = V_DD + kTC noise down to V_Thr. Returns the crossing time.
+    fn simulate_branch(&mut self, i_leak: f64, mu_t: f64) -> f64 {
+        let cfg = &self.params.cfg;
+        let temp_k = cfg.temp_k();
+        let c = cfg.cap_f;
+        let dt = mu_t * cfg.sim_dt_frac;
+        // Per-conversion low-frequency slope error (RTN/flicker): the
+        // closed-form σ_rtn is realized as a quasi-static current error.
+        let rel_lf = physics::rtn_sigma(cfg, temp_k, mu_t) / mu_t;
+        let m_lf = 1.0 + rel_lf * self.rng.next_gaussian();
+        // Shot noise: white current noise whose diffusion reproduces
+        // Eq. 7 exactly: σ_T² = μ_T·q·κ/(2I) requires S_I = q·I·κ/2
+        // (the single-sided/double-sided PSD convention is folded into κ).
+        let sigma_i_step = (0.5 * physics::Q_E * i_leak * cfg.noise_scale / dt).sqrt();
+        // kTC: sampled initial voltage.
+        let v0 = cfg.vdd + (physics::K_B * temp_k / c).sqrt() * self.rng.next_gaussian();
+        let mut v = v0;
+        let mut t = 0.0;
+        let i_mean = i_leak * m_lf;
+        loop {
+            let i_inst = i_mean + sigma_i_step * self.rng.next_gaussian();
+            let v_next = v - i_inst * dt / c;
+            if v_next <= cfg.v_thr {
+                // Linear interpolation of the crossing instant inside the step.
+                let frac = (v - cfg.v_thr) / (v - v_next);
+                return t + frac * dt;
+            }
+            v = v_next;
+            t += dt;
+            // Safety: never integrate more than 20 mean crossings (an
+            // extreme downward noise excursion cannot stall the sim).
+            if t > 20.0 * mu_t {
+                return t;
+            }
+        }
+    }
+
+    // -------------------------------------------------------------------
+    // Fast closed-form sampling
+    // -------------------------------------------------------------------
+
+    /// Draw one sample from the closed-form crossing-time distributions.
+    pub fn sample_fast(&mut self) -> GrngSample {
+        let p = &self.params;
+        let t_p = p.mu_p + p.sigma_p * self.rng.next_gaussian();
+        let t_n = p.mu_n + p.sigma_n * self.rng.next_gaussian();
+        self.finish_sample(t_p, t_n)
+    }
+
+    /// Fast path returning only ε (no bookkeeping) — the MVM hot loop.
+    ///
+    /// §Perf: t_n − t_p of two independent Gaussians IS a Gaussian with
+    /// precomputed (diff_mean, diff_sigma), so one draw replaces two
+    /// (distribution unchanged; verified by `eps_is_approximately_
+    /// standard_normal` and the circuit-vs-fast pinning test). Outliers
+    /// are the rare path: skip the uniform draw entirely when p = 0.
+    #[inline]
+    pub fn eps_fast(&mut self) -> f64 {
+        let p = &self.params;
+        let mut d = p.diff_mean_s + p.diff_sigma_s * self.rng.next_gaussian();
+        if p.p_outlier > 0.0 && self.rng.next_f64() < p.p_outlier {
+            let extra = -self.rng.next_f64_open().ln() * p.outlier_scale_s;
+            if self.rng.next_bool(0.5) {
+                d += extra;
+            } else {
+                d -= extra;
+            }
+        }
+        d / p.sigma_unit_s
+    }
+
+    fn finish_sample(&mut self, t_p: f64, t_n: f64) -> GrngSample {
+        let p = &self.params;
+        // Outlier: a DFF mis-reset emits a spurious E edge, corrupting the
+        // measured pulse width; the conversion latency (reset of both
+        // branches) is unaffected (Tab. I: latency falls with T even as
+        // normality collapses).
+        let outlier = self.rng.next_f64() < p.p_outlier;
+        let mut signed = t_n - t_p;
+        if outlier {
+            let extra = -self.rng.next_f64_open().ln() * p.outlier_scale_s;
+            signed += if self.rng.next_bool(0.5) { extra } else { -extra };
+        }
+        GrngSample {
+            signed_width_s: signed,
+            eps: signed / p.sigma_unit_s,
+            latency_s: t_p.max(t_n),
+            energy_j: p.energy_j,
+            outlier,
+        }
+    }
+
+    /// Batch characterization: n circuit-level samples.
+    pub fn characterize(&mut self, n: usize) -> Vec<GrngSample> {
+        (0..n).map(|_| self.sample_circuit()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{self, Summary};
+
+    fn default_cell(seed: u64) -> GrngCell {
+        GrngCell::ideal(&GrngConfig::default(), seed)
+    }
+
+    #[test]
+    fn circuit_sample_basic_properties() {
+        let mut cell = default_cell(1);
+        let s = cell.sample_circuit();
+        assert!(s.latency_s > 0.0);
+        assert!(s.energy_j > 0.0);
+        assert!(s.eps.abs() < 50.0);
+    }
+
+    #[test]
+    fn circuit_mean_latency_matches_closed_form() {
+        let mut cell = default_cell(2);
+        let n = 400;
+        let samples = cell.characterize(n);
+        let mut lat = Summary::new();
+        for s in &samples {
+            lat.push(s.latency_s);
+        }
+        // E[max of two ~equal gaussians] ≈ μ_T + σ/√π — dominated by μ_T.
+        let mu_t = cell.params.mu_p;
+        assert!(
+            (lat.mean() - mu_t).abs() < 0.05 * mu_t,
+            "latency {:.3e} vs μ_T {:.3e}",
+            lat.mean(),
+            mu_t
+        );
+    }
+
+    #[test]
+    fn circuit_and_fast_agree_in_distribution() {
+        let mut cell_a = default_cell(3);
+        let mut cell_b = default_cell(4);
+        let n = 1200;
+        let eps_circ: Vec<f64> = (0..n).map(|_| cell_a.sample_circuit().eps).collect();
+        let eps_fast: Vec<f64> = (0..n).map(|_| cell_b.sample_fast().eps).collect();
+        let sc = Summary::from_slice(&eps_circ);
+        let sf = Summary::from_slice(&eps_fast);
+        assert!(sc.mean().abs() < 0.12, "circuit mean {}", sc.mean());
+        assert!(sf.mean().abs() < 0.12, "fast mean {}", sf.mean());
+        let ratio = sc.std() / sf.std();
+        assert!(
+            (0.85..1.18).contains(&ratio),
+            "σ ratio circuit/fast = {ratio:.3} (circ {:.3}, fast {:.3})",
+            sc.std(),
+            sf.std()
+        );
+    }
+
+    #[test]
+    fn eps_is_approximately_standard_normal() {
+        // The auto-calibrated σ_unit should make ε ~ N(0,1).
+        let mut cell = default_cell(5);
+        let eps: Vec<f64> = (0..4000).map(|_| cell.eps_fast()).collect();
+        let s = Summary::from_slice(&eps);
+        assert!(s.mean().abs() < 0.06, "mean {}", s.mean());
+        assert!((s.std() - 1.0).abs() < 0.08, "std {}", s.std());
+        let r = stats::qq_r_value(&eps);
+        assert!(r > 0.99, "qq r {r}");
+    }
+
+    #[test]
+    fn mismatch_shifts_mean() {
+        let cfg = GrngConfig::default();
+        // Slower N-branch (positive ΔVth) → t_n later → positive ε₀.
+        let params = CellParams::derive(&cfg, 0.0, 0.01);
+        assert!(params.epsilon_offset() > 0.5);
+        let mut cell = GrngCell::new(params, 6);
+        let eps: Vec<f64> = (0..2000).map(|_| cell.sample_fast().eps).collect();
+        let m = stats::mean(&eps);
+        let expect = cell.params.epsilon_offset();
+        assert!(
+            (m - expect).abs() < 0.15 * expect.abs().max(1.0),
+            "measured offset {m:.3} vs predicted {expect:.3}"
+        );
+    }
+
+    #[test]
+    fn hot_cell_produces_outliers() {
+        let mut cfg = GrngConfig::default();
+        cfg.temp_c = 60.0;
+        let mut cell = GrngCell::ideal(&cfg, 7);
+        let n = 3000;
+        let outliers = (0..n).filter(|_| cell.sample_fast().outlier).count();
+        let p = physics::outlier_probability(&cfg, cfg.temp_k());
+        let expect = p * n as f64;
+        assert!(
+            (outliers as f64) > 0.4 * expect,
+            "outliers {outliers} vs expected ≈{expect:.0}"
+        );
+    }
+}

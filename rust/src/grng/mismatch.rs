@@ -1,0 +1,122 @@
+//! Die-level static variation Monte Carlo (§III-C.3).
+//!
+//! Fabrication-induced transistor mismatch makes each GRNG cell's two
+//! branches conduct slightly differently, shifting the output mean by a
+//! static per-cell offset ε₀ (Eq. 8). The offsets are fixed per die —
+//! drawn once from the process distribution and then constant — which is
+//! exactly what makes the one-time calibration of Eq. 9–10 possible.
+
+use crate::config::GrngConfig;
+use crate::grng::circuit::CellParams;
+use crate::util::rng::{Pcg64, Rng64};
+
+/// Static mismatch for every GRNG cell of a die (row-major `rows × words`).
+#[derive(Clone, Debug)]
+pub struct DieVariation {
+    pub rows: usize,
+    pub words: usize,
+    /// Per-cell ΔVth for the P branch [V].
+    pub dvth_p: Vec<f64>,
+    /// Per-cell ΔVth for the N branch [V].
+    pub dvth_n: Vec<f64>,
+}
+
+impl DieVariation {
+    /// Draw a die. `seed` identifies the die; the same seed always yields
+    /// the same silicon (mismatch is static).
+    ///
+    /// ΔVth σ is derived from the configured relative current mismatch:
+    /// in subthreshold, ΔI/I = ΔVth/(n·v_T), so
+    /// σ_Vth = mismatch_rel_sigma · n · v_T.
+    pub fn draw(cfg: &GrngConfig, rows: usize, words: usize, seed: u64) -> Self {
+        let v_t = crate::grng::physics::thermal_voltage(cfg.temp_k());
+        let sigma_vth = cfg.mismatch_rel_sigma * cfg.subthreshold_n * v_t;
+        let mut rng = Pcg64::with_stream(seed, 0x5EED_D1E5);
+        let n = rows * words;
+        let dvth_p = (0..n).map(|_| sigma_vth * rng.next_gaussian()).collect();
+        let dvth_n = (0..n).map(|_| sigma_vth * rng.next_gaussian()).collect();
+        Self {
+            rows,
+            words,
+            dvth_p,
+            dvth_n,
+        }
+    }
+
+    /// A perfect die (no mismatch) — for ablations.
+    pub fn ideal(rows: usize, words: usize) -> Self {
+        Self {
+            rows,
+            words,
+            dvth_p: vec![0.0; rows * words],
+            dvth_n: vec![0.0; rows * words],
+        }
+    }
+
+    #[inline]
+    pub fn index(&self, row: usize, word: usize) -> usize {
+        debug_assert!(row < self.rows && word < self.words);
+        row * self.words + word
+    }
+
+    /// Derive the cell parameters for cell (row, word).
+    pub fn cell_params(&self, cfg: &GrngConfig, row: usize, word: usize) -> CellParams {
+        let i = self.index(row, word);
+        CellParams::derive(cfg, self.dvth_p[i], self.dvth_n[i])
+    }
+
+    /// The true ε₀ offset map of the die (what calibration must estimate).
+    pub fn offset_map(&self, cfg: &GrngConfig) -> Vec<f64> {
+        (0..self.rows * self.words)
+            .map(|i| CellParams::derive(cfg, self.dvth_p[i], self.dvth_n[i]).epsilon_offset())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::Summary;
+
+    #[test]
+    fn same_seed_same_die() {
+        let cfg = GrngConfig::default();
+        let a = DieVariation::draw(&cfg, 8, 4, 42);
+        let b = DieVariation::draw(&cfg, 8, 4, 42);
+        assert_eq!(a.dvth_p, b.dvth_p);
+        let c = DieVariation::draw(&cfg, 8, 4, 43);
+        assert_ne!(a.dvth_p, c.dvth_p);
+    }
+
+    #[test]
+    fn offsets_are_zero_mean_and_spread() {
+        let cfg = GrngConfig::default();
+        let die = DieVariation::draw(&cfg, 64, 8, 7);
+        let offsets = die.offset_map(&cfg);
+        let s = Summary::from_slice(&offsets);
+        // Eq. 8: nonzero per-cell offsets, zero-mean across the die.
+        assert!(s.std() > 0.1, "σ(ε₀)={} should be significant", s.std());
+        assert!(
+            s.mean().abs() < 3.0 * s.std() / (offsets.len() as f64).sqrt() + 0.05,
+            "die-average offset should be ~0, got {}",
+            s.mean()
+        );
+    }
+
+    #[test]
+    fn ideal_die_has_no_offsets() {
+        let cfg = GrngConfig::default();
+        let die = DieVariation::ideal(4, 4);
+        for off in die.offset_map(&cfg) {
+            assert_eq!(off, 0.0);
+        }
+    }
+
+    #[test]
+    fn index_layout() {
+        let die = DieVariation::ideal(3, 5);
+        assert_eq!(die.index(0, 0), 0);
+        assert_eq!(die.index(1, 0), 5);
+        assert_eq!(die.index(2, 4), 14);
+    }
+}

@@ -1,0 +1,15 @@
+//! The in-word GRNG subsystem (§III-C): physics model, behavioral circuit
+//! simulation, die-level mismatch Monte Carlo, the per-tile GRNG bank,
+//! output-quality statistics, and the comparison baselines of Tab. II.
+
+pub mod bank;
+pub mod baselines;
+pub mod circuit;
+pub mod mismatch;
+pub mod physics;
+pub mod quality;
+
+pub use bank::GrngBank;
+pub use circuit::{CellParams, GrngCell, GrngSample};
+pub use mismatch::DieVariation;
+pub use quality::QualityReport;

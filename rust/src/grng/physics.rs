@@ -1,0 +1,262 @@
+//! Closed-form physics of the capacitor-discharge GRNG (§III-C, Eq. 6–7).
+//!
+//! The entropy source: a ~1 fF capacitor charged to V_DD discharges through
+//! an NMOS biased in subthreshold at V_R. Charge leaves in discrete
+//! electrons (shot noise, PSD 2·q_e·I), so the time T at which the voltage
+//! crosses the inverter threshold V_Thr is Gaussian:
+//!
+//! ```text
+//! μ_T  = C·(V_DD − V_Thr) / I_L            (paper Eq. 6, explicit V_Thr)
+//! σ_T² = μ_T · q_e / (2·I_L) · κ           (paper Eq. 7)
+//! ```
+//!
+//! Two additional measured effects are modeled (they drive Tab. I):
+//!
+//! - **kTC noise**: the sampled initial voltage carries σ_V = √(kT/C),
+//!   contributing σ_T,kTC = C·σ_V / I_L of crossing-time jitter.
+//! - **RTN** (random telegraph noise): single-trap capture/emission in the
+//!   subthreshold channel modulates I_L by a relative amplitude that grows
+//!   with temperature (Arrhenius-activated). This term dominates at the
+//!   low-bias/long-latency operating points of Tab. I and explains why the
+//!   measured pulse-width σ *increases* 2.62× from 28 °C to 60 °C while
+//!   latency *decreases* 2.49× — pure shot noise would predict both falling.
+//!
+//! Temperature enters the mean through the subthreshold law
+//! I_L ∝ (T/T₀)²·exp((V_R − V_th(T))/(n·v_T)) with v_T = kT/q and
+//! dV_th/dT < 0, so leakage rises steeply with temperature.
+
+use crate::config::GrngConfig;
+
+/// Boltzmann constant [J/K].
+pub const K_B: f64 = 1.380649e-23;
+/// Elementary charge [C].
+pub const Q_E: f64 = 1.602176634e-19;
+/// Reference temperature for I_0 calibration [K] (28 °C).
+pub const T_REF_K: f64 = 301.15;
+
+/// Thermal voltage kT/q [V].
+#[inline]
+pub fn thermal_voltage(temp_k: f64) -> f64 {
+    K_B * temp_k / Q_E
+}
+
+/// Subthreshold leakage current of one discharge branch [A].
+///
+/// `delta_vth` is the per-device static mismatch on the threshold voltage
+/// (Eq. 8's origin); positive `delta_vth` → less current.
+pub fn leakage_current(cfg: &GrngConfig, bias_v: f64, temp_k: f64, delta_vth: f64) -> f64 {
+    let v_t = thermal_voltage(temp_k);
+    let vth_t = cfg.v_th + cfg.v_th_tc * (temp_k - T_REF_K) + delta_vth;
+    let exponent = (bias_v - vth_t) / (cfg.subthreshold_n * v_t);
+    cfg.i0_a * (temp_k / T_REF_K).powi(2) * exponent.exp()
+}
+
+/// Mean crossing time μ_T [s] (Eq. 6).
+pub fn mean_crossing_time(cfg: &GrngConfig, i_leak: f64) -> f64 {
+    cfg.cap_f * (cfg.vdd - cfg.v_thr) / i_leak
+}
+
+/// Shot-noise crossing-time standard deviation [s] (Eq. 7, with the
+/// configurable calibration scale κ).
+pub fn shot_sigma(cfg: &GrngConfig, mu_t: f64, i_leak: f64) -> f64 {
+    (mu_t * Q_E / (2.0 * i_leak) * cfg.noise_scale).sqrt()
+}
+
+/// kTC-noise contribution to crossing-time σ [s]: sampled initial-voltage
+/// noise √(kT/C) divided by the ramp slope I/C.
+pub fn ktc_sigma(cfg: &GrngConfig, temp_k: f64, i_leak: f64) -> f64 {
+    let sigma_v = (K_B * temp_k / cfg.cap_f).sqrt();
+    cfg.cap_f * sigma_v / i_leak
+}
+
+/// RTN/flicker relative amplitude at temperature `temp_k`:
+/// a(T) = a₀ · exp((T − T₀)/T_scale). Trap occupancy fluctuations are
+/// thermally activated, so low-frequency noise grows steeply with
+/// temperature — this is what makes the measured pulse-width σ *rise*
+/// 2.62× from 28 °C to 60 °C (Tab. I) while the latency falls.
+pub fn rtn_amplitude(cfg: &GrngConfig, temp_k: f64) -> f64 {
+    cfg.rtn_rel_amplitude * ((temp_k - T_REF_K) / cfg.rtn_t_scale_k).exp()
+}
+
+/// Probability that a sample is an outlier (trap burst coinciding with the
+/// DFF asynchronous reset, §III-C.2) — responsible for the Q–Q r-value
+/// collapse at 60 °C in Tab. I.
+pub fn outlier_probability(cfg: &GrngConfig, temp_k: f64) -> f64 {
+    (cfg.outlier_p0 * ((temp_k - T_REF_K) / cfg.outlier_t_scale_k).exp()).min(0.5)
+}
+
+/// Outlier magnitude multiplier. Magnitude is kept temperature-flat:
+/// the Tab. I degradation is reproduced by the *probability* onset
+/// (sharp 2 K activation scale), which both bumps the measured pulse-σ
+/// (×~1.4 at 60 °C) and drags the Q-Q r-value down without the gross
+/// distribution blow-up a magnitude explosion would cause.
+pub fn outlier_magnitude_scale(_cfg: &GrngConfig, _temp_k: f64) -> f64 {
+    1.0
+}
+
+/// RTN/flicker contribution to crossing-time σ [s].
+///
+/// Low-frequency noise accumulates superlinearly with integration time:
+/// σ_rtn/μ_T = a(T) · (μ_T/τ_ref)^p. Fitted to Tab. I (p ≈ 0.7): at the
+/// 69 ns typical point it contributes < 1 % relative jitter; at the
+/// 1.93 µs low-bias point it dominates (~7 % relative, → 200 ns pulse σ).
+pub fn rtn_sigma(cfg: &GrngConfig, temp_k: f64, mu_t: f64) -> f64 {
+    let a = rtn_amplitude(cfg, temp_k);
+    a * mu_t * (mu_t / cfg.rtn_tau_s).powf(cfg.rtn_exponent)
+}
+
+/// Total single-branch crossing-time σ [s]: independent contributions add
+/// in quadrature.
+pub fn total_sigma(cfg: &GrngConfig, temp_k: f64, mu_t: f64, i_leak: f64) -> f64 {
+    let s2 = shot_sigma(cfg, mu_t, i_leak).powi(2)
+        + ktc_sigma(cfg, temp_k, i_leak).powi(2)
+        + rtn_sigma(cfg, temp_k, mu_t).powi(2);
+    s2.sqrt()
+}
+
+/// Closed-form operating point at (bias, temperature): the quantities the
+/// paper measures in Fig. 8/9 and Tab. I.
+#[derive(Clone, Copy, Debug)]
+pub struct OperatingPoint {
+    pub bias_v: f64,
+    pub temp_c: f64,
+    /// Per-branch leakage current [A].
+    pub i_leak: f64,
+    /// Mean single-branch crossing time (≈ average latency) [s].
+    pub mu_t: f64,
+    /// Pulse-width standard deviation [s]: √2 × single-branch σ (the pulse
+    /// is the *difference* of two independent crossings).
+    pub pulse_sigma: f64,
+    /// Energy per sample [J].
+    pub energy_j: f64,
+}
+
+/// Compute the closed-form operating point for a config at its configured
+/// bias/temperature (or overridden values).
+pub fn operating_point(cfg: &GrngConfig, bias_v: f64, temp_c: f64) -> OperatingPoint {
+    let temp_k = temp_c + 273.15;
+    let i_leak = leakage_current(cfg, bias_v, temp_k, 0.0);
+    let mu_t = mean_crossing_time(cfg, i_leak);
+    let sigma_1 = total_sigma(cfg, temp_k, mu_t, i_leak);
+    OperatingPoint {
+        bias_v,
+        temp_c,
+        i_leak,
+        mu_t,
+        pulse_sigma: core::f64::consts::SQRT_2 * sigma_1,
+        energy_j: energy_per_sample(cfg, i_leak),
+    }
+}
+
+/// Energy per GRNG sample [J] (§III-C.2):
+/// - recharging both fringe caps: 2·C·V_DD²
+/// - inverter short-circuit while V_C crosses V_Thr: ∝ C/I_L (slower ramp
+///   → longer conduction window) — the dominant term, mitigated but not
+///   eliminated by the asynchronous-reset DFF
+/// - DFF reset + latch energy (fixed digital cost)
+pub fn energy_per_sample(cfg: &GrngConfig, i_leak: f64) -> f64 {
+    let caps = 2.0 * cfg.cap_f * cfg.vdd * cfg.vdd;
+    let inverter = cfg.inverter_sc_coeff / i_leak;
+    caps + inverter + cfg.dff_energy_j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> GrngConfig {
+        GrngConfig::default()
+    }
+
+    #[test]
+    fn typical_operating_point_matches_paper() {
+        // Paper §IV-A: V_R = 180 mV → σ ≈ 1.0 ns pulse width, ~69 ns
+        // average latency, 360 fJ/Sample.
+        let op = operating_point(&cfg(), 0.18, 28.0);
+        assert!(
+            (op.mu_t - 69e-9).abs() < 12e-9,
+            "latency {:.1} ns should be ≈69 ns",
+            op.mu_t * 1e9
+        );
+        assert!(
+            (op.pulse_sigma - 1.0e-9).abs() < 0.35e-9,
+            "pulse σ {:.2} ns should be ≈1.0 ns",
+            op.pulse_sigma * 1e9
+        );
+        assert!(
+            (op.energy_j - 360e-15).abs() < 60e-15,
+            "energy {:.0} fJ should be ≈360 fJ",
+            op.energy_j * 1e15
+        );
+    }
+
+    #[test]
+    fn bias_tradeoff_direction() {
+        // Fig. 9: increasing V_R decreases latency AND decreases σ.
+        let lo = operating_point(&cfg(), 0.12, 28.0);
+        let hi = operating_point(&cfg(), 0.20, 28.0);
+        assert!(hi.mu_t < lo.mu_t, "higher bias → lower latency");
+        assert!(hi.pulse_sigma < lo.pulse_sigma, "higher bias → lower σ");
+        assert!(hi.energy_j < lo.energy_j, "higher bias → lower energy");
+    }
+
+    #[test]
+    fn temperature_dependence_matches_table1_directions() {
+        // Tab. I trends at the low-bias measurement point (long latencies):
+        // 28→60 °C: latency ÷2.49, pulse σ ×2.62.
+        let c = cfg();
+        // Find the bias giving ≈1.93 µs latency at 28 °C (Tab. I row 1).
+        let bias = find_bias_for_latency(&c, 1.931e-6, 28.0);
+        let cold = operating_point(&c, bias, 28.0);
+        let hot = operating_point(&c, bias, 60.0);
+        let latency_ratio = cold.mu_t / hot.mu_t;
+        let sigma_ratio = hot.pulse_sigma / cold.pulse_sigma;
+        assert!(
+            (2.0..=3.6).contains(&latency_ratio),
+            "latency ratio {latency_ratio:.2} should be ≈2.49"
+        );
+        // Closed form excludes the outlier-burst variance that the
+        // measured Tab. I σ includes (×~1.4 at 60 °C) — so the physics
+        // band sits below the paper's 2.62 measured ratio.
+        assert!(
+            (1.3..=3.8).contains(&sigma_ratio),
+            "sigma ratio {sigma_ratio:.2} must INCREASE toward ≈2.62/1.4"
+        );
+    }
+
+    /// Bisection for the bias voltage that hits a target latency.
+    pub(crate) fn find_bias_for_latency(cfg: &GrngConfig, target_s: f64, temp_c: f64) -> f64 {
+        let (mut lo, mut hi) = (0.0, 0.5);
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            let op = operating_point(cfg, mid, temp_c);
+            if op.mu_t > target_s {
+                lo = mid; // need more current → higher bias
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    #[test]
+    fn leakage_monotonic_in_bias_and_temp() {
+        let c = cfg();
+        let i1 = leakage_current(&c, 0.10, 300.0, 0.0);
+        let i2 = leakage_current(&c, 0.20, 300.0, 0.0);
+        let i3 = leakage_current(&c, 0.10, 330.0, 0.0);
+        assert!(i2 > i1);
+        assert!(i3 > i1);
+        // mismatch reduces current for positive ΔVth
+        assert!(leakage_current(&c, 0.10, 300.0, 0.02) < i1);
+    }
+
+    #[test]
+    fn energy_components_positive_and_dominated_by_inverter() {
+        let c = cfg();
+        let op = operating_point(&c, 0.18, 28.0);
+        let caps = 2.0 * c.cap_f * c.vdd * c.vdd;
+        assert!(caps < 5e-15);
+        assert!(op.energy_j > 100e-15, "inverter term should dominate");
+    }
+}

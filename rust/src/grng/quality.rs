@@ -1,0 +1,148 @@
+//! Normality / quality battery for GRNG output distributions.
+//!
+//! Bundles the statistics the paper reports (Q–Q r-value, pulse-width σ,
+//! latency) with additional tests (KS, Jarque–Bera, lag-1 autocorrelation)
+//! into one report used by the `grng` bench and the `grng-char` CLI.
+
+use crate::grng::circuit::GrngSample;
+use crate::util::stats::{self, Summary};
+
+/// Quality report for a batch of GRNG samples.
+#[derive(Clone, Debug)]
+pub struct QualityReport {
+    pub n: usize,
+    /// Pulse-width (signed) mean [s] — ≈0 for a calibrated cell.
+    pub mean_width_s: f64,
+    /// Pulse-width standard deviation [s] (paper Fig. 8 / Tab. I "T_D SD").
+    pub width_sd_s: f64,
+    /// Mean conversion latency [s].
+    pub mean_latency_s: f64,
+    /// Q–Q normal-probability-plot r-value (paper's normality metric).
+    pub qq_r: f64,
+    /// KS statistic against N(mean, sd).
+    pub ks_d: f64,
+    /// KS p-value.
+    pub ks_p: f64,
+    /// Jarque–Bera statistic.
+    pub jarque_bera: f64,
+    /// Lag-1 autocorrelation of the ε sequence (should be ≈0: each
+    /// conversion is physically independent).
+    pub lag1_autocorr: f64,
+    /// Mean energy per sample [J].
+    pub mean_energy_j: f64,
+    /// Fraction of outlier samples.
+    pub outlier_frac: f64,
+}
+
+impl QualityReport {
+    pub fn from_samples(samples: &[GrngSample]) -> Self {
+        assert!(samples.len() >= 8, "need a reasonable batch");
+        let widths: Vec<f64> = samples.iter().map(|s| s.signed_width_s).collect();
+        let lats: Vec<f64> = samples.iter().map(|s| s.latency_s).collect();
+        let eps: Vec<f64> = samples.iter().map(|s| s.eps).collect();
+        let sw = Summary::from_slice(&widths);
+        let sl = Summary::from_slice(&lats);
+        let ks_d = stats::ks_statistic_normal(&widths, sw.mean(), sw.sample_std());
+        Self {
+            n: samples.len(),
+            mean_width_s: sw.mean(),
+            width_sd_s: sw.sample_std(),
+            mean_latency_s: sl.mean(),
+            qq_r: stats::qq_r_value(&widths),
+            ks_d,
+            ks_p: stats::ks_p_value(ks_d, samples.len()),
+            jarque_bera: stats::jarque_bera(&widths),
+            lag1_autocorr: lag1(&eps),
+            mean_energy_j: samples.iter().map(|s| s.energy_j).sum::<f64>()
+                / samples.len() as f64,
+            outlier_frac: samples.iter().filter(|s| s.outlier).count() as f64
+                / samples.len() as f64,
+        }
+    }
+
+    /// One-line summary for CLI output.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "N={} | σ(T_D)={:.3} ns | latency={:.1} ns | Q-Q r={:.4} | KS p={:.3} | E={:.0} fJ/Sa",
+            self.n,
+            self.width_sd_s * 1e9,
+            self.mean_latency_s * 1e9,
+            self.qq_r,
+            self.ks_p,
+            self.mean_energy_j * 1e15
+        )
+    }
+}
+
+fn lag1(xs: &[f64]) -> f64 {
+    if xs.len() < 3 {
+        return 0.0;
+    }
+    let m = stats::mean(xs);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..xs.len() {
+        let d = xs[i] - m;
+        den += d * d;
+        if i + 1 < xs.len() {
+            num += d * (xs[i + 1] - m);
+        }
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GrngConfig;
+    use crate::grng::circuit::GrngCell;
+
+    #[test]
+    fn typical_point_quality_matches_fig8() {
+        // Fig. 8: Q–Q r = 0.9967 with N = 2500 at the typical bias.
+        let mut cell = GrngCell::ideal(&GrngConfig::default(), 11);
+        let samples: Vec<_> = (0..2500).map(|_| cell.sample_fast()).collect();
+        let q = QualityReport::from_samples(&samples);
+        assert!(q.qq_r > 0.985, "Q-Q r {:.4} should be ≈0.997", q.qq_r);
+        assert!(q.lag1_autocorr.abs() < 0.06, "lag1 {}", q.lag1_autocorr);
+        assert!(q.ks_p > 0.001, "KS p {}", q.ks_p);
+    }
+
+    #[test]
+    fn hot_die_quality_collapses() {
+        // Tab. I: r-value collapses at 60 °C.
+        let mut cfg = GrngConfig::default();
+        cfg.temp_c = 60.0;
+        // Tab. I operating point is a low bias (µs latencies).
+        cfg.bias_v = 0.05;
+        let mut cell = GrngCell::ideal(&cfg, 12);
+        let samples: Vec<_> = (0..2500).map(|_| cell.sample_fast()).collect();
+        let q = QualityReport::from_samples(&samples);
+        let mut cfg_cold = cfg.clone();
+        cfg_cold.temp_c = 28.0;
+        let mut cell_cold = GrngCell::ideal(&cfg_cold, 13);
+        let cold: Vec<_> = (0..2500).map(|_| cell_cold.sample_fast()).collect();
+        let qc = QualityReport::from_samples(&cold);
+        assert!(
+            q.qq_r < qc.qq_r,
+            "hot r {:.4} should be below cold r {:.4}",
+            q.qq_r,
+            qc.qq_r
+        );
+        assert!(q.outlier_frac > qc.outlier_frac);
+    }
+
+    #[test]
+    fn report_summary_formats() {
+        let mut cell = GrngCell::ideal(&GrngConfig::default(), 14);
+        let samples: Vec<_> = (0..64).map(|_| cell.sample_fast()).collect();
+        let q = QualityReport::from_samples(&samples);
+        let line = q.summary_line();
+        assert!(line.contains("N=64"));
+        assert!(line.contains("fJ/Sa"));
+    }
+}

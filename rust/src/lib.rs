@@ -1,0 +1,33 @@
+//! # bnn-cim
+//!
+//! Reproduction of *"A 65 nm Bayesian Neural Network Accelerator with
+//! 360 fJ/Sample In-Word GRNG for AI Uncertainty Estimation"* (CS.AR 2025)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — behavioral chip simulator (GRNG circuit, CIM
+//!   tile, energy/area model), quantized BNN inference engine, uncertainty
+//!   math, and a serving coordinator that executes AOT-compiled XLA
+//!   artifacts via PJRT.
+//! - **L2 (`python/compile/model.py`)** — JAX partial-Bayesian MobileNet,
+//!   trained and lowered to HLO text at build time.
+//! - **L1 (`python/compile/kernels/`)** — Pallas kernels for the decomposed
+//!   Bayesian MVM and the in-kernel counter-based GRNG.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod error;
+pub mod util;
+
+pub use error::{Error, Result};
+
+pub mod config;
+pub mod grng;
+pub mod cim;
+pub mod energy;
+pub mod bayes;
+pub mod data;
+pub mod nn;
+pub mod runtime;
+pub mod coordinator;
+pub mod experiments;

@@ -1,0 +1,316 @@
+//! bnn-cim CLI — leader entrypoint.
+//!
+//! Subcommands map 1:1 onto the paper's experiments (DESIGN.md §3) plus
+//! operational commands (`serve`, `infer`, `calibrate`).
+
+use bnn_cim::cim::{calibrate, CimTile};
+use bnn_cim::config::Config;
+use bnn_cim::coordinator::Coordinator;
+use bnn_cim::data::SyntheticPerson;
+use bnn_cim::experiments::{self, fig10_11::Arm};
+use bnn_cim::nn::Model;
+use bnn_cim::util::cli::{parse_args, render_cmd_help, render_help, Command, OptSpec};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args[0] == "--help" || args[0] == "help" {
+        print!("{}", render_help("bnn-cim", ABOUT, &commands()));
+        return;
+    }
+    let cmd = args.remove(0);
+    let parsed = parse_args(args);
+    if parsed.has_flag("help") {
+        if let Some(c) = commands().into_iter().find(|c| c.name == cmd) {
+            print!("{}", render_cmd_help("bnn-cim", &c));
+            return;
+        }
+    }
+    let result = match cmd.as_str() {
+        "grng-char" => cmd_grng_char(&parsed),
+        "sweep-bias" => cmd_sweep_bias(&parsed),
+        "sweep-temp" => cmd_sweep_temp(&parsed),
+        "breakdown" => cmd_breakdown(&parsed),
+        "compare" => cmd_compare(&parsed),
+        "calibrate" => cmd_calibrate(&parsed),
+        "uncertainty" => cmd_uncertainty(&parsed),
+        "infer" => cmd_infer(&parsed),
+        "serve" => cmd_serve(&parsed),
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print!("{}", render_help("bnn-cim", ABOUT, &commands()));
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+const ABOUT: &str =
+    "65 nm BNN accelerator with in-word GRNG — behavioral reproduction (CS.AR 2025)";
+
+fn commands() -> Vec<Command> {
+    vec![
+        Command {
+            name: "grng-char",
+            about: "Fig. 8: GRNG pulse/latency distributions + Q-Q r",
+            opts: vec![
+                opt("samples", "conversions to draw", Some("2500")),
+                opt("bias-mv", "gate bias V_R [mV]", Some("180")),
+                opt("temp", "temperature [°C]", Some("28")),
+                flag("fast", "closed-form sampling instead of circuit ODE"),
+            ],
+        },
+        Command {
+            name: "sweep-bias",
+            about: "Fig. 9: latency/σ/energy vs bias voltage",
+            opts: vec![
+                opt("mc", "circuit-ODE samples per point (0 = model only)", Some("300")),
+            ],
+        },
+        Command {
+            name: "sweep-temp",
+            about: "Tab. I: GRNG temperature stability",
+            opts: vec![
+                opt("samples", "samples per temperature", Some("2500")),
+                opt("temps", "comma-separated °C list", Some("28,40,50,60")),
+            ],
+        },
+        Command {
+            name: "breakdown",
+            about: "Fig. 12: tile energy & area breakdown",
+            opts: vec![],
+        },
+        Command {
+            name: "compare",
+            about: "Tab. II: comparison table incl. baseline RNG benches",
+            opts: vec![opt("sw-bench", "samples per software microbench", Some("2000000"))],
+        },
+        Command {
+            name: "calibrate",
+            about: "run the Eq. 8-10 calibration and report residuals",
+            opts: vec![
+                opt("adc-n", "conversions per ADC offset estimate", Some("16")),
+                opt("grng-n", "conversions per GRNG offset estimate", Some("64")),
+            ],
+        },
+        Command {
+            name: "uncertainty",
+            about: "Fig. 10/11: entropy, ECE, σ-precision & deferral sweeps",
+            opts: vec![
+                opt("n", "in-distribution eval samples", Some("200")),
+                opt("mc", "MC samples per inference", Some("16")),
+                flag("sigma-sweep", "also run the Fig. 11 σ-bit sweep"),
+            ],
+        },
+        Command {
+            name: "infer",
+            about: "classify one synthetic sample via the PJRT coordinator",
+            opts: vec![
+                opt("index", "dataset index to classify", Some("0")),
+                opt("mc", "MC samples", Some("32")),
+            ],
+        },
+        Command {
+            name: "serve",
+            about: "run the coordinator under synthetic load, report metrics",
+            opts: vec![
+                opt("duration", "seconds of load", Some("10")),
+                opt("rate", "offered requests/second", Some("50")),
+                opt("mc", "MC samples per request", Some("8")),
+            ],
+        },
+    ]
+}
+
+fn opt(name: &'static str, help: &'static str, default: Option<&'static str>) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default,
+        is_flag: false,
+    }
+}
+
+fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default: None,
+        is_flag: true,
+    }
+}
+
+type CmdResult = Result<(), Box<dyn std::error::Error>>;
+
+fn load_config(args: &bnn_cim::util::cli::Args) -> Result<Config, Box<dyn std::error::Error>> {
+    match args.get("config") {
+        Some(path) => Ok(Config::from_toml_file(Path::new(path))?),
+        None => Ok(Config::default()),
+    }
+}
+
+fn cmd_grng_char(args: &bnn_cim::util::cli::Args) -> CmdResult {
+    let mut cfg = load_config(args)?;
+    cfg.chip.grng.bias_v = args.get_f64("bias-mv", 180.0)? / 1e3;
+    cfg.chip.grng.temp_c = args.get_f64("temp", 28.0)?;
+    let n = args.get_usize("samples", 2500)?;
+    let rep = experiments::run_characterization(&cfg.chip.grng, n, 42, !args.has_flag("fast"));
+    println!("{}", rep.render());
+    Ok(())
+}
+
+fn cmd_sweep_bias(args: &bnn_cim::util::cli::Args) -> CmdResult {
+    let cfg = load_config(args)?;
+    let mc = args.get_usize("mc", 300)?;
+    let pts = experiments::run_bias_sweep(
+        &cfg.chip.grng,
+        &experiments::fig9::default_biases(),
+        mc,
+        7,
+    );
+    println!("{}", experiments::fig9::render(&pts));
+    Ok(())
+}
+
+fn cmd_sweep_temp(args: &bnn_cim::util::cli::Args) -> CmdResult {
+    let cfg = load_config(args)?;
+    let temps = args.get_f64_list("temps", &[28.0, 40.0, 50.0, 60.0])?;
+    let n = args.get_usize("samples", 2500)?;
+    let pts = experiments::run_temp_sweep(&cfg.chip.grng, &temps, n, 11);
+    println!("{}", experiments::tab1::render(&pts));
+    Ok(())
+}
+
+fn cmd_breakdown(args: &bnn_cim::util::cli::Args) -> CmdResult {
+    let cfg = load_config(args)?;
+    let rep = experiments::run_breakdown(&cfg.chip, 3);
+    println!("{}", rep.render());
+    Ok(())
+}
+
+fn cmd_compare(args: &bnn_cim::util::cli::Args) -> CmdResult {
+    let cfg = load_config(args)?;
+    let sw_n = args.get_usize("sw-bench", 2_000_000)?;
+    let (rows, m) = experiments::comparison_table(&cfg.chip, sw_n);
+    println!("{}", experiments::tab2::render(&rows, &m));
+    Ok(())
+}
+
+fn cmd_calibrate(args: &bnn_cim::util::cli::Args) -> CmdResult {
+    let cfg = load_config(args)?;
+    let mut tile = CimTile::new(&cfg.chip);
+    let raw_rms = {
+        let offs = tile.bank.true_offsets();
+        (offs.iter().map(|x| x * x).sum::<f64>() / offs.len() as f64).sqrt()
+    };
+    let rep = calibrate(
+        &mut tile,
+        args.get_usize("adc-n", 16)?,
+        args.get_usize("grng-n", 64)?,
+    )?;
+    println!(
+        "calibration (Eq. 8-10):\n  raw ε₀ RMS          {raw_rms:.3}\n  \
+         estimated ε₀ RMS    {:.3}\n  residual RMS        {:.3}\n  \
+         ADC offset RMS      {:.3} LSB\n  energy              {:.2} nJ (paper: 3.6 nJ)",
+        rep.grng_offset_rms,
+        rep.grng_residual_rms,
+        rep.adc_offset_rms_lsb,
+        rep.energy_j * 1e9
+    );
+    Ok(())
+}
+
+fn cmd_uncertainty(args: &bnn_cim::util::cli::Args) -> CmdResult {
+    let cfg = load_config(args)?;
+    let weights = Path::new(&cfg.model.artifacts_dir).join("weights.json");
+    if !weights.exists() {
+        return Err("artifacts/weights.json missing — run `make artifacts`".into());
+    }
+    let n = args.get_usize("n", 200)?;
+    let mc = args.get_usize("mc", 16)?;
+    println!("Fig. 10 — uncertainty arms ({n} ID + {} OOD, T={mc}):", n * 2 / 5);
+    for arm in [Arm::DetNn, Arm::BnnFloat, Arm::BnnHw] {
+        let mut model = Model::load(&weights)?;
+        let t = if arm == Arm::DetNn { 1 } else { mc };
+        let rep =
+            experiments::run_uncertainty(&mut model, &cfg.chip, arm, n, n * 2 / 5, t, 5);
+        println!("  {}", rep.render());
+    }
+    if args.has_flag("sigma-sweep") {
+        println!("\nFig. 11-left — σ precision sweep (hardware arm):");
+        for (bits, rep) in
+            experiments::sigma_bit_sweep(&weights, &cfg.chip, &[2, 3, 4], n / 2, mc / 2, 9)
+        {
+            println!("  σ = {bits} bits: {}", rep.render());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_infer(args: &bnn_cim::util::cli::Args) -> CmdResult {
+    let cfg = load_config(args)?;
+    let index = args.get_u64("index", 0)?;
+    let mc = args.get_usize("mc", 32)?;
+    let gen = SyntheticPerson::new(cfg.model.image_side, 123);
+    let sample = gen.sample(index);
+    let coord = Coordinator::start(cfg)?;
+    let resp = coord
+        .infer_blocking(sample.pixels, mc)
+        .map_err(|e| format!("inference rejected: {e}"))?;
+    println!(
+        "sample {index}: true={} pred={} probs={:?}\n\
+         entropy={:.3} nats (MI {:.3}) | deferred={} | latency={:.2} ms",
+        sample.label,
+        resp.pred.class,
+        resp.pred
+            .probs
+            .iter()
+            .map(|p| (p * 1000.0).round() / 1000.0)
+            .collect::<Vec<_>>(),
+        resp.pred.entropy,
+        resp.pred.mutual_information,
+        resp.deferred,
+        resp.latency.as_secs_f64() * 1e3
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_serve(args: &bnn_cim::util::cli::Args) -> CmdResult {
+    let mut cfg = load_config(args)?;
+    let duration = Duration::from_secs_f64(args.get_f64("duration", 10.0)?);
+    let rate = args.get_f64("rate", 50.0)?;
+    cfg.model.mc_samples = args.get_usize("mc", 8)?;
+    let coord = Coordinator::start(cfg.clone())?;
+    let gen = SyntheticPerson::new(cfg.model.image_side, 321);
+    let period = Duration::from_secs_f64(1.0 / rate.max(0.1));
+    let t0 = Instant::now();
+    let mut receivers = Vec::new();
+    let mut sent = 0u64;
+    while t0.elapsed() < duration {
+        let s = gen.sample(sent);
+        match coord.submit(s.pixels, 0) {
+            Ok(rx) => receivers.push(rx),
+            Err(_) => { /* backpressure: counted in metrics */ }
+        }
+        sent += 1;
+        std::thread::sleep(period);
+    }
+    let mut ok = 0;
+    for rx in receivers {
+        if rx.recv_timeout(Duration::from_secs(30)).is_ok() {
+            ok += 1;
+        }
+    }
+    println!(
+        "offered {sent} requests over {:.1} s ({rate}/s), {ok} completed\n{}",
+        t0.elapsed().as_secs_f64(),
+        coord.metrics().render()
+    );
+    coord.shutdown();
+    Ok(())
+}

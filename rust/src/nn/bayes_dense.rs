@@ -1,0 +1,289 @@
+//! The partial-Bayesian dense layer (§III-A, Eq. 4–5).
+//!
+//! Weight decomposition w = μ + σ·ε, executed three ways:
+//!
+//! - [`BayesDense::forward_hw`] — on the simulated CIM tile array
+//!   (quantized inputs, in-word GRNG ε, analog non-idealities): the
+//!   paper's chip.
+//! - [`BayesDense::forward_ref`] — float reference with software ε
+//!   (what the chip approximates).
+//! - [`BayesDense::forward_mean`] — deterministic μ-only pass.
+
+use crate::cim::{MvmOptions, TileArray, WeightScale};
+use crate::config::ChipConfig;
+use crate::nn::quant::ActQuantizer;
+use crate::util::rng::{Rng64, Xoshiro256};
+
+/// One Bayesian FC layer.
+pub struct BayesDense {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// Posterior means, row-major [in × out].
+    pub mu: Vec<f32>,
+    /// Posterior standard deviations (≥ 0), row-major [in × out].
+    pub sigma: Vec<f32>,
+    pub bias: Vec<f32>,
+    /// ReLU after this layer?
+    pub relu: bool,
+    /// Hardware mapping (lazy: built on first `forward_hw`).
+    hw: Option<HwMapping>,
+    rng: Xoshiro256,
+}
+
+struct HwMapping {
+    array: TileArray,
+    scale: WeightScale,
+    act_q: ActQuantizer,
+}
+
+impl BayesDense {
+    pub fn new(
+        in_dim: usize,
+        out_dim: usize,
+        mu: Vec<f32>,
+        sigma: Vec<f32>,
+        bias: Vec<f32>,
+        relu: bool,
+        seed: u64,
+    ) -> Self {
+        assert_eq!(mu.len(), in_dim * out_dim);
+        assert_eq!(sigma.len(), in_dim * out_dim);
+        assert_eq!(bias.len(), out_dim);
+        assert!(sigma.iter().all(|&s| s >= 0.0), "σ must be non-negative");
+        Self {
+            in_dim,
+            out_dim,
+            mu,
+            sigma,
+            bias,
+            relu,
+            hw: None,
+            rng: Xoshiro256::new(seed ^ 0xBA7E5),
+        }
+    }
+
+    /// Random layer for tests (He-scaled μ, small σ).
+    pub fn random(in_dim: usize, out_dim: usize, relu: bool, seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(seed);
+        let std = (2.0 / in_dim as f64).sqrt();
+        let mu = (0..in_dim * out_dim)
+            .map(|_| (rng.next_gaussian() * std) as f32)
+            .collect();
+        let sigma = (0..in_dim * out_dim)
+            .map(|_| (rng.next_f64() * 0.3 * std) as f32)
+            .collect();
+        let bias = vec![0.0; out_dim];
+        Self::new(in_dim, out_dim, mu, sigma, bias, relu, seed)
+    }
+
+    /// Map the layer onto CIM tiles with the given chip config and
+    /// activation range, and calibrate (the chip's bring-up procedure).
+    pub fn map_to_hardware(&mut self, chip: &ChipConfig, act_max: f32) {
+        let mu_abs_max = self.mu.iter().fold(0.0f32, |a, &b| a.max(b.abs())) as f64;
+        let sigma_max = self.sigma.iter().fold(0.0f32, |a, &b| a.max(b)) as f64;
+        let scale = WeightScale::fit(
+            mu_abs_max,
+            sigma_max,
+            chip.tile.mu_bits as u8,
+            chip.tile.sigma_bits as u8,
+        );
+        let mut array = TileArray::new(chip, self.in_dim, self.out_dim);
+        for t in array.tiles_mut() {
+            // Bring-up calibration per tile (ADC offsets + GRNG ε₀).
+            let _ = crate::cim::calibrate(t, 16, 32);
+        }
+        let mu_fixed: Vec<f64> = self
+            .mu
+            .iter()
+            .map(|&m| (m as f64 * scale.mu_scale))
+            .collect();
+        let sigma_fixed: Vec<f64> = self
+            .sigma
+            .iter()
+            .map(|&s| (s as f64 * scale.sigma_scale))
+            .collect();
+        array.program_matrix(&mu_fixed, &sigma_fixed);
+        self.hw = Some(HwMapping {
+            array,
+            scale,
+            act_q: ActQuantizer::new(chip.idac.bits, act_max),
+        });
+    }
+
+    pub fn is_mapped(&self) -> bool {
+        self.hw.is_some()
+    }
+
+    /// Hardware-simulated forward pass (one MC sample: fresh ε).
+    pub fn forward_hw(&mut self, x: &[f32], bayesian: bool) -> Vec<f32> {
+        assert_eq!(x.len(), self.in_dim);
+        let hw = self
+            .hw
+            .as_mut()
+            .expect("call map_to_hardware before forward_hw");
+        let codes = hw.act_q.quantize_vec(x);
+        let opts = MvmOptions {
+            bayesian,
+            refresh_epsilon: true,
+            ideal_analog: false,
+        };
+        let y_fixed = hw.array.mvm(&codes, opts);
+        // Recombine the two paths with their own scales (reduction-logic
+        // shifts), then convert codes → float activations.
+        let k_mu = hw.act_q.step as f64 / hw.scale.mu_scale;
+        let k_sigma = hw.act_q.step as f64 / hw.scale.sigma_scale;
+        let combined = y_fixed.combined_scaled(k_mu, k_sigma);
+        let mut y: Vec<f32> = combined
+            .iter()
+            .zip(self.bias.iter())
+            .map(|(&v, &b)| v as f32 + b)
+            .collect();
+        if self.relu {
+            for v in y.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+        y
+    }
+
+    /// Float reference forward pass with software ε ~ N(0,1).
+    pub fn forward_ref(&mut self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.in_dim);
+        let mut y = self.bias.clone();
+        for i in 0..self.in_dim {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for o in 0..self.out_dim {
+                let idx = i * self.out_dim + o;
+                let eps = self.rng.next_gaussian() as f32;
+                y[o] += xi * (self.mu[idx] + self.sigma[idx] * eps);
+            }
+        }
+        if self.relu {
+            for v in y.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+        y
+    }
+
+    /// Deterministic μ-only forward pass.
+    pub fn forward_mean(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.in_dim);
+        let mut y = self.bias.clone();
+        for i in 0..self.in_dim {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for o in 0..self.out_dim {
+                y[o] += xi * self.mu[i * self.out_dim + o];
+            }
+        }
+        if self.relu {
+            for v in y.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+        y
+    }
+
+    /// Aggregate energy ledger from the mapped tiles (empty if unmapped).
+    pub fn ledger(&self) -> crate::energy::EnergyLedger {
+        self.hw
+            .as_ref()
+            .map(|hw| hw.array.ledger())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{pearson, Summary};
+
+    fn small_chip() -> ChipConfig {
+        let mut chip = ChipConfig::default();
+        chip.tile.rows = 16;
+        chip.tile.words_per_row = 4;
+        chip
+    }
+
+    #[test]
+    fn hw_tracks_mean_path_when_sigma_zero() {
+        let mut layer = BayesDense::random(16, 4, false, 3);
+        layer.sigma.iter_mut().for_each(|s| *s = 0.0);
+        layer.map_to_hardware(&small_chip(), 6.0);
+        let mut rng = Xoshiro256::new(9);
+        let mut hw_out = Vec::new();
+        let mut ref_out = Vec::new();
+        for _ in 0..16 {
+            let x: Vec<f32> = (0..16).map(|_| rng.next_f32() * 6.0).collect();
+            hw_out.extend(layer.forward_hw(&x, true));
+            ref_out.extend(layer.forward_mean(&x));
+        }
+        let r = pearson(
+            &hw_out.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            &ref_out.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+        );
+        assert!(r > 0.97, "hw vs mean r={r}");
+    }
+
+    #[test]
+    fn hw_variance_matches_posterior_scale() {
+        let mut layer = BayesDense::random(16, 4, false, 5);
+        layer.map_to_hardware(&small_chip(), 6.0);
+        let x: Vec<f32> = (0..16).map(|i| (i % 7) as f32 * 0.8).collect();
+        // Hardware MC samples.
+        let hw: Vec<f64> = (0..200)
+            .map(|_| layer.forward_hw(&x, true)[1] as f64)
+            .collect();
+        // Reference MC samples.
+        let rf: Vec<f64> = (0..200).map(|_| layer.forward_ref(&x)[1] as f64).collect();
+        let s_hw = Summary::from_slice(&hw);
+        let s_rf = Summary::from_slice(&rf);
+        // Means should agree within combined error.
+        let tol = 4.0 * (s_hw.sem() + s_rf.sem()) + 0.1 * s_rf.std().max(0.05);
+        assert!(
+            (s_hw.mean() - s_rf.mean()).abs() < tol.max(0.15),
+            "hw mean {} vs ref mean {}",
+            s_hw.mean(),
+            s_rf.mean()
+        );
+        // Variance ratio within 2× (analog chain adds some noise).
+        let ratio = s_hw.std() / s_rf.std().max(1e-9);
+        assert!(
+            (0.5..2.5).contains(&ratio),
+            "σ ratio hw/ref = {ratio} ({} vs {})",
+            s_hw.std(),
+            s_rf.std()
+        );
+    }
+
+    #[test]
+    fn deterministic_pass_has_no_variance() {
+        let mut layer = BayesDense::random(16, 4, false, 7);
+        layer.map_to_hardware(&small_chip(), 6.0);
+        let x = vec![1.0f32; 16];
+        let a = layer.forward_mean(&x);
+        let b = layer.forward_mean(&x);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn relu_applied() {
+        let mut layer = BayesDense::random(8, 4, true, 11);
+        let x = vec![1.0f32; 8];
+        let y = layer.forward_ref(&x);
+        assert!(y.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "map_to_hardware")]
+    fn unmapped_hw_forward_panics() {
+        let mut layer = BayesDense::random(8, 4, false, 13);
+        let _ = layer.forward_hw(&vec![0.0; 8], true);
+    }
+}

@@ -1,0 +1,210 @@
+//! Deterministic NN layers (the non-Bayesian feature extractor path).
+//!
+//! These run the MobileNet-style backbone natively in Rust — the fallback
+//! / reference implementation of what the PJRT runtime executes from the
+//! AOT-compiled artifact. Layout: HWC, weights HWIO (matching the JAX
+//! model in `python/compile/model.py` so exported weights drop in).
+
+use crate::nn::tensor::Tensor;
+
+/// Standard 2-D convolution, stride `s`, SAME padding, weights HWIO.
+pub fn conv2d(input: &Tensor, weights: &Tensor, bias: &[f32], stride: usize) -> Tensor {
+    assert_eq!(input.shape.len(), 3, "conv2d expects HWC input");
+    assert_eq!(weights.shape.len(), 4, "conv2d expects HWIO weights");
+    let (h, w, cin) = (input.shape[0], input.shape[1], input.shape[2]);
+    let (kh, kw, wcin, cout) = (
+        weights.shape[0],
+        weights.shape[1],
+        weights.shape[2],
+        weights.shape[3],
+    );
+    assert_eq!(cin, wcin, "channel mismatch");
+    assert_eq!(bias.len(), cout);
+    let oh = h.div_ceil(stride);
+    let ow = w.div_ceil(stride);
+    let mut out = Tensor::zeros(&[oh, ow, cout]);
+    // SAME padding offsets (TF convention).
+    let pad_h = ((oh - 1) * stride + kh).saturating_sub(h) / 2;
+    let pad_w = ((ow - 1) * stride + kw).saturating_sub(w) / 2;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for co in 0..cout {
+                let mut acc = bias[co];
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad_h as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad_w as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        for ci in 0..cin {
+                            acc += input.at3(iy as usize, ix as usize, ci)
+                                * weights.data[((ky * kw + kx) * cin + ci) * cout + co];
+                        }
+                    }
+                }
+                *out.at3_mut(oy, ox, co) = acc;
+            }
+        }
+    }
+    out
+}
+
+/// Depthwise 3×3 convolution, stride `s`, SAME padding, weights HWC
+/// (one filter per channel) — the MobileNet workhorse.
+pub fn depthwise_conv(input: &Tensor, weights: &Tensor, bias: &[f32], stride: usize) -> Tensor {
+    assert_eq!(input.shape.len(), 3);
+    assert_eq!(weights.shape.len(), 3, "depthwise expects HWC weights");
+    let (h, w, c) = (input.shape[0], input.shape[1], input.shape[2]);
+    let (kh, kw, wc) = (weights.shape[0], weights.shape[1], weights.shape[2]);
+    assert_eq!(c, wc, "channel mismatch");
+    assert_eq!(bias.len(), c);
+    let oh = h.div_ceil(stride);
+    let ow = w.div_ceil(stride);
+    let pad_h = ((oh - 1) * stride + kh).saturating_sub(h) / 2;
+    let pad_w = ((ow - 1) * stride + kw).saturating_sub(w) / 2;
+    let mut out = Tensor::zeros(&[oh, ow, c]);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ch in 0..c {
+                let mut acc = bias[ch];
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pad_h as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pad_w as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        acc += input.at3(iy as usize, ix as usize, ch)
+                            * weights.data[(ky * kw + kx) * c + ch];
+                    }
+                }
+                *out.at3_mut(oy, ox, ch) = acc;
+            }
+        }
+    }
+    out
+}
+
+/// ReLU6 (MobileNet's bounded activation — important here because the
+/// 4-bit activation quantizer needs a bounded range).
+pub fn relu6(mut t: Tensor) -> Tensor {
+    for v in t.data.iter_mut() {
+        *v = v.clamp(0.0, 6.0);
+    }
+    t
+}
+
+/// Global average pooling: HWC → C.
+pub fn global_avg_pool(input: &Tensor) -> Tensor {
+    assert_eq!(input.shape.len(), 3);
+    let (h, w, c) = (input.shape[0], input.shape[1], input.shape[2]);
+    let mut out = vec![0.0f32; c];
+    for y in 0..h {
+        for x in 0..w {
+            for ch in 0..c {
+                out[ch] += input.at3(y, x, ch);
+            }
+        }
+    }
+    let norm = 1.0 / (h * w) as f32;
+    for v in out.iter_mut() {
+        *v *= norm;
+    }
+    Tensor::new(&[c], out)
+}
+
+/// Dense layer: y = W·x + b, weights [in × out] row-major.
+pub fn dense(x: &[f32], weights: &[f32], bias: &[f32], out_dim: usize) -> Vec<f32> {
+    let in_dim = x.len();
+    assert_eq!(weights.len(), in_dim * out_dim);
+    assert_eq!(bias.len(), out_dim);
+    let mut y = bias.to_vec();
+    for i in 0..in_dim {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &weights[i * out_dim..(i + 1) * out_dim];
+        for (o, &wv) in y.iter_mut().zip(row.iter()) {
+            *o += xi * wv;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv2d_identity_kernel() {
+        // 1×1 kernel with weight 1 reproduces the input.
+        let input = Tensor::new(&[2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = Tensor::new(&[1, 1, 1, 1], vec![1.0]);
+        let out = conv2d(&input, &w, &[0.0], 1);
+        assert_eq!(out.data, input.data);
+    }
+
+    #[test]
+    fn conv2d_stride_and_padding_shape() {
+        let input = Tensor::zeros(&[32, 32, 3]);
+        let w = Tensor::zeros(&[3, 3, 3, 8]);
+        let out = conv2d(&input, &w, &[0.0; 8], 2);
+        assert_eq!(out.shape, vec![16, 16, 8]);
+    }
+
+    #[test]
+    fn conv2d_known_sum() {
+        // 3×3 all-ones kernel over all-ones 3×3 input, stride 1:
+        // center output = 9, corner = 4 (SAME padding).
+        let input = Tensor::new(&[3, 3, 1], vec![1.0; 9]);
+        let w = Tensor::new(&[3, 3, 1, 1], vec![1.0; 9]);
+        let out = conv2d(&input, &w, &[0.0], 1);
+        assert_eq!(out.at3(1, 1, 0), 9.0);
+        assert_eq!(out.at3(0, 0, 0), 4.0);
+    }
+
+    #[test]
+    fn depthwise_keeps_channels_separate() {
+        // Channel 0 kernel zero, channel 1 kernel identity-ish.
+        let mut input = Tensor::zeros(&[3, 3, 2]);
+        for y in 0..3 {
+            for x in 0..3 {
+                *input.at3_mut(y, x, 0) = 1.0;
+                *input.at3_mut(y, x, 1) = 2.0;
+            }
+        }
+        let mut w = Tensor::zeros(&[3, 3, 2]);
+        w.data[(1 * 3 + 1) * 2 + 1] = 1.0; // center tap, channel 1
+        let out = depthwise_conv(&input, &w, &[0.0, 0.0], 1);
+        assert_eq!(out.at3(1, 1, 0), 0.0);
+        assert_eq!(out.at3(1, 1, 1), 2.0);
+    }
+
+    #[test]
+    fn relu6_clamps() {
+        let t = Tensor::new(&[3], vec![-1.0, 3.0, 9.0]);
+        assert_eq!(relu6(t).data, vec![0.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn gap_averages() {
+        let input = Tensor::new(&[2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let out = global_avg_pool(&input);
+        assert_eq!(out.data, vec![2.5]);
+    }
+
+    #[test]
+    fn dense_matches_manual() {
+        // W = [[1,2],[3,4]] (in=2, out=2), x = [1, 10], b = [0.5, -0.5]
+        let y = dense(&[1.0, 10.0], &[1.0, 2.0, 3.0, 4.0], &[0.5, -0.5], 2);
+        assert_eq!(y, vec![1.0 + 30.0 + 0.5, 2.0 + 40.0 - 0.5]);
+    }
+}

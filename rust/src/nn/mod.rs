@@ -1,0 +1,14 @@
+//! Quantized neural-network engine: the Rust-native reference path for
+//! the partial-Bayesian MobileNet (feature extractor, Bayesian head on
+//! the CIM simulator, activation quantization).
+
+pub mod bayes_dense;
+pub mod layers;
+pub mod model;
+pub mod quant;
+pub mod tensor;
+
+pub use bayes_dense::BayesDense;
+pub use model::{FeatLayer, Model};
+pub use quant::ActQuantizer;
+pub use tensor::Tensor;

@@ -1,0 +1,416 @@
+//! The partial-Bayesian MobileNet-mini model (§III-A): a deterministic
+//! depthwise-separable feature extractor + a Bayesian FC classifier head.
+//!
+//! Weights load from `artifacts/weights.json` (written by
+//! `python/compile/train.py`); [`Model::random`] builds an untrained model
+//! for tests and benches that must not depend on artifacts.
+
+use crate::bayes::{aggregate_mc, softmax, McPrediction};
+use crate::config::ChipConfig;
+use crate::error::{Error, Result};
+use crate::nn::bayes_dense::BayesDense;
+use crate::nn::layers;
+use crate::nn::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::{Rng64, Xoshiro256};
+use std::path::Path;
+
+/// One feature-extractor layer.
+pub enum FeatLayer {
+    /// Standard conv (weights HWIO) + bias + ReLU6.
+    Conv {
+        w: Tensor,
+        b: Vec<f32>,
+        stride: usize,
+    },
+    /// Depthwise conv (weights HWC) + bias + ReLU6.
+    Depthwise {
+        w: Tensor,
+        b: Vec<f32>,
+        stride: usize,
+    },
+    /// Global average pool.
+    Gap,
+}
+
+/// Full model: features + Bayesian head + deterministic comparison head.
+pub struct Model {
+    pub features: Vec<FeatLayer>,
+    /// Bayesian classifier head (the chip's CIM layers).
+    pub head: Vec<BayesDense>,
+    /// Deterministic head trained without VI (the "standard NN" arm of
+    /// Fig. 10–11).
+    pub det_head: Vec<(Vec<f32>, Vec<f32>, usize, usize, bool)>,
+    pub classes: usize,
+    pub feature_dim: usize,
+    pub image_side: usize,
+    /// Activation range fed to the quantizer (ReLU6 ⇒ 6.0).
+    pub act_max: f32,
+}
+
+impl Model {
+    // ------------------------------------------------------------------
+    // Construction
+    // ------------------------------------------------------------------
+
+    /// Load from a weights JSON artifact.
+    pub fn load(path: &Path) -> Result<Model> {
+        let doc = Json::read_file(path).map_err(|e| Error::Model(e.to_string()))?;
+        Self::from_json(&doc)
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Model> {
+        let meta = doc
+            .get("meta")
+            .ok_or_else(|| Error::Model("missing 'meta'".into()))?;
+        let classes = meta
+            .get("classes")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| Error::Model("meta.classes missing".into()))?;
+        let side = meta
+            .get("side")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| Error::Model("meta.side missing".into()))?;
+        let feature_dim = meta
+            .get("feature_dim")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| Error::Model("meta.feature_dim missing".into()))?;
+        let act_max = meta
+            .get("act_max")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(6.0) as f32;
+
+        let mut features = Vec::new();
+        for (i, l) in doc
+            .get("features")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| Error::Model("missing 'features'".into()))?
+            .iter()
+            .enumerate()
+        {
+            let kind = l
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| Error::Model(format!("features[{i}].kind missing")))?;
+            match kind {
+                "gap" => features.push(FeatLayer::Gap),
+                "conv" | "dw" => {
+                    let shape = l
+                        .get("w_shape")
+                        .and_then(|v| v.as_usize_vec())
+                        .ok_or_else(|| Error::Model(format!("features[{i}].w_shape")))?;
+                    let w = l
+                        .get("w")
+                        .and_then(|v| v.as_f32_vec())
+                        .ok_or_else(|| Error::Model(format!("features[{i}].w")))?;
+                    let b = l
+                        .get("b")
+                        .and_then(|v| v.as_f32_vec())
+                        .ok_or_else(|| Error::Model(format!("features[{i}].b")))?;
+                    let stride = l.get("stride").and_then(|v| v.as_usize()).unwrap_or(1);
+                    let t = Tensor::new(&shape, w);
+                    if kind == "conv" {
+                        features.push(FeatLayer::Conv { w: t, b, stride });
+                    } else {
+                        features.push(FeatLayer::Depthwise { w: t, b, stride });
+                    }
+                }
+                other => {
+                    return Err(Error::Model(format!("unknown feature layer kind '{other}'")))
+                }
+            }
+        }
+
+        let mut head = Vec::new();
+        for (i, l) in doc
+            .at(&["head", "layers"])
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| Error::Model("missing 'head.layers'".into()))?
+            .iter()
+            .enumerate()
+        {
+            let in_dim = l.get("in").and_then(|v| v.as_usize()).unwrap_or(0);
+            let out_dim = l.get("out").and_then(|v| v.as_usize()).unwrap_or(0);
+            let mu = l
+                .get("mu")
+                .and_then(|v| v.as_f32_vec())
+                .ok_or_else(|| Error::Model(format!("head[{i}].mu")))?;
+            let sigma = l
+                .get("sigma")
+                .and_then(|v| v.as_f32_vec())
+                .ok_or_else(|| Error::Model(format!("head[{i}].sigma")))?;
+            let bias = l
+                .get("bias")
+                .and_then(|v| v.as_f32_vec())
+                .ok_or_else(|| Error::Model(format!("head[{i}].bias")))?;
+            let relu = l.get("relu").and_then(|v| v.as_bool()).unwrap_or(false);
+            head.push(BayesDense::new(
+                in_dim,
+                out_dim,
+                mu,
+                sigma,
+                bias,
+                relu,
+                0xBA7E5 + i as u64,
+            ));
+        }
+
+        let mut det_head = Vec::new();
+        if let Some(layers) = doc.at(&["det_head", "layers"]).and_then(|v| v.as_arr()) {
+            for (i, l) in layers.iter().enumerate() {
+                let in_dim = l.get("in").and_then(|v| v.as_usize()).unwrap_or(0);
+                let out_dim = l.get("out").and_then(|v| v.as_usize()).unwrap_or(0);
+                let w = l
+                    .get("w")
+                    .and_then(|v| v.as_f32_vec())
+                    .ok_or_else(|| Error::Model(format!("det_head[{i}].w")))?;
+                let bias = l
+                    .get("bias")
+                    .and_then(|v| v.as_f32_vec())
+                    .ok_or_else(|| Error::Model(format!("det_head[{i}].bias")))?;
+                let relu = l.get("relu").and_then(|v| v.as_bool()).unwrap_or(false);
+                det_head.push((w, bias, in_dim, out_dim, relu));
+            }
+        }
+
+        Ok(Model {
+            features,
+            head,
+            det_head,
+            classes,
+            feature_dim,
+            image_side: side,
+            act_max,
+        })
+    }
+
+    /// Random (untrained) model with the canonical architecture —
+    /// conv(1→8,s2) dw(8) pw(8→16,s2) dw(16) pw(16→32,s2) dw(32)
+    /// pw(32→64) gap → head 64→32→classes.
+    pub fn random(side: usize, classes: usize, seed: u64) -> Model {
+        let mut rng = Xoshiro256::new(seed);
+        let mut conv = |kh: usize, kw: usize, cin: usize, cout: usize, stride: usize| {
+            let fan_in = (kh * kw * cin) as f64;
+            let std = (2.0 / fan_in).sqrt();
+            let w: Vec<f32> = (0..kh * kw * cin * cout)
+                .map(|_| (rng.next_gaussian() * std) as f32)
+                .collect();
+            FeatLayer::Conv {
+                w: Tensor::new(&[kh, kw, cin, cout], w),
+                b: vec![0.0; cout],
+                stride,
+            }
+        };
+        let mut rng2 = Xoshiro256::new(seed ^ 1);
+        let mut dw = |c: usize, stride: usize| {
+            let std = (2.0 / 9.0f64).sqrt();
+            let w: Vec<f32> = (0..9 * c)
+                .map(|_| (rng2.next_gaussian() * std) as f32)
+                .collect();
+            FeatLayer::Depthwise {
+                w: Tensor::new(&[3, 3, c], w),
+                b: vec![0.0; c],
+                stride,
+            }
+        };
+        let features = vec![
+            conv(3, 3, 1, 8, 2),
+            dw(8, 1),
+            conv(1, 1, 8, 16, 2),
+            dw(16, 1),
+            conv(1, 1, 16, 32, 2),
+            dw(32, 1),
+            conv(1, 1, 32, 64, 1),
+            FeatLayer::Gap,
+        ];
+        let head = vec![
+            BayesDense::random(64, 32, true, seed ^ 2),
+            BayesDense::random(32, classes, false, seed ^ 3),
+        ];
+        let mut rng3 = Xoshiro256::new(seed ^ 4);
+        let mut det = |in_dim: usize, out_dim: usize, relu: bool| {
+            let std = (2.0 / in_dim as f64).sqrt();
+            let w: Vec<f32> = (0..in_dim * out_dim)
+                .map(|_| (rng3.next_gaussian() * std) as f32)
+                .collect();
+            (w, vec![0.0; out_dim], in_dim, out_dim, relu)
+        };
+        let det_head = vec![det(64, 32, true), det(32, classes, false)];
+        Model {
+            features,
+            head,
+            det_head,
+            classes,
+            feature_dim: 64,
+            image_side: side,
+            act_max: 6.0,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Forward passes
+    // ------------------------------------------------------------------
+
+    /// Run the deterministic feature extractor on one image.
+    pub fn forward_features(&self, pixels: &[f32]) -> Vec<f32> {
+        assert_eq!(pixels.len(), self.image_side * self.image_side);
+        let mut t = Tensor::new(&[self.image_side, self.image_side, 1], pixels.to_vec());
+        for layer in &self.features {
+            t = match layer {
+                FeatLayer::Conv { w, b, stride } => {
+                    layers::relu6(layers::conv2d(&t, w, b, *stride))
+                }
+                FeatLayer::Depthwise { w, b, stride } => {
+                    layers::relu6(layers::depthwise_conv(&t, w, b, *stride))
+                }
+                FeatLayer::Gap => layers::global_avg_pool(&t),
+            };
+        }
+        t.data
+    }
+
+    /// Map the Bayesian head onto CIM hardware.
+    pub fn map_head_to_hardware(&mut self, chip: &ChipConfig) {
+        let act_max = self.act_max;
+        for layer in &mut self.head {
+            layer.map_to_hardware(chip, act_max);
+        }
+    }
+
+    pub fn head_is_mapped(&self) -> bool {
+        self.head.iter().all(|l| l.is_mapped())
+    }
+
+    /// One MC sample through the Bayesian head (hardware sim).
+    pub fn head_sample_hw(&mut self, features: &[f32]) -> Vec<f64> {
+        let mut x = features.to_vec();
+        for layer in &mut self.head {
+            x = layer.forward_hw(&x, true);
+        }
+        softmax(&x.iter().map(|&v| v as f64).collect::<Vec<_>>())
+    }
+
+    /// One MC sample through the Bayesian head (float reference).
+    pub fn head_sample_ref(&mut self, features: &[f32]) -> Vec<f64> {
+        let mut x = features.to_vec();
+        for layer in &mut self.head {
+            x = layer.forward_ref(&x);
+        }
+        softmax(&x.iter().map(|&v| v as f64).collect::<Vec<_>>())
+    }
+
+    /// Deterministic-head prediction (the standard-NN arm).
+    pub fn predict_det(&self, features: &[f32]) -> Vec<f64> {
+        let mut x = features.to_vec();
+        for (w, b, in_dim, out_dim, relu) in &self.det_head {
+            assert_eq!(x.len(), *in_dim);
+            x = layers::dense(&x, w, b, *out_dim);
+            if *relu {
+                for v in x.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+        }
+        softmax(&x.iter().map(|&v| v as f64).collect::<Vec<_>>())
+    }
+
+    /// Full Bayesian inference: features once, then T MC head samples.
+    pub fn predict_bayes(&mut self, pixels: &[f32], t: usize, hw: bool) -> McPrediction {
+        let features = self.forward_features(pixels);
+        let samples: Vec<Vec<f64>> = (0..t)
+            .map(|_| {
+                if hw {
+                    self.head_sample_hw(&features)
+                } else {
+                    self.head_sample_ref(&features)
+                }
+            })
+            .collect();
+        aggregate_mc(&samples)
+    }
+
+    /// μ-only prediction through the Bayesian head (ablation: BNN weights
+    /// without sampling).
+    pub fn predict_mean(&self, pixels: &[f32]) -> Vec<f64> {
+        let features = self.forward_features(pixels);
+        let mut x = features;
+        for layer in &self.head {
+            x = layer.forward_mean(&x);
+        }
+        softmax(&x.iter().map(|&v| v as f64).collect::<Vec<_>>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_model_shapes() {
+        let m = Model::random(32, 2, 1);
+        let px = vec![0.5f32; 32 * 32];
+        let f = m.forward_features(&px);
+        assert_eq!(f.len(), 64);
+        let p = m.predict_det(&f);
+        assert_eq!(p.len(), 2);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bayes_prediction_aggregates() {
+        let mut m = Model::random(32, 2, 2);
+        let px = vec![0.5f32; 32 * 32];
+        let pred = m.predict_bayes(&px, 8, false);
+        assert_eq!(pred.t, 8);
+        assert_eq!(pred.probs.len(), 2);
+        assert!(pred.entropy >= 0.0);
+        assert!(pred.confidence > 0.0 && pred.confidence <= 1.0);
+    }
+
+    #[test]
+    fn json_roundtrip_minimal() {
+        // Build a tiny model JSON by hand and load it.
+        let doc = Json::parse(
+            r#"{
+            "meta": {"classes": 2, "side": 16, "feature_dim": 4, "act_max": 6.0},
+            "features": [
+                {"kind": "conv", "stride": 2,
+                 "w_shape": [1, 1, 1, 4],
+                 "w": [0.1, -0.2, 0.3, 0.4], "b": [0, 0, 0, 0]},
+                {"kind": "gap"}
+            ],
+            "head": {"layers": [
+                {"in": 4, "out": 2, "relu": false,
+                 "mu": [0.1, 0.2, 0.3, -0.1, 0.0, 0.5, -0.5, 0.2],
+                 "sigma": [0.01, 0.01, 0.01, 0.01, 0.01, 0.01, 0.01, 0.01],
+                 "bias": [0.0, 0.0]}
+            ]},
+            "det_head": {"layers": [
+                {"in": 4, "out": 2, "relu": false,
+                 "w": [0.1, 0.2, 0.3, -0.1, 0.0, 0.5, -0.5, 0.2],
+                 "bias": [0.0, 0.0]}
+            ]}
+        }"#,
+        )
+        .unwrap();
+        let mut m = Model::from_json(&doc).unwrap();
+        assert_eq!(m.classes, 2);
+        assert_eq!(m.head.len(), 1);
+        let px = vec![0.3f32; 16 * 16];
+        let pred = m.predict_bayes(&px, 4, false);
+        assert_eq!(pred.probs.len(), 2);
+    }
+
+    #[test]
+    fn missing_fields_rejected() {
+        let doc = Json::parse(r#"{"meta": {"classes": 2}}"#).unwrap();
+        assert!(Model::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn mean_prediction_deterministic() {
+        let m = Model::random(32, 2, 7);
+        let px = vec![0.25f32; 32 * 32];
+        assert_eq!(m.predict_mean(&px), m.predict_mean(&px));
+    }
+}

@@ -1,0 +1,95 @@
+//! Activation quantization: float features → 4-bit IDAC input codes.
+//!
+//! The CIM tile consumes unsigned codes (the IDAC drives a wordline
+//! voltage), so activations are quantized asymmetrically over [0, amax].
+//! ReLU6 upstream guarantees non-negative bounded activations.
+
+/// Quantizer for a bounded non-negative activation range.
+#[derive(Clone, Copy, Debug)]
+pub struct ActQuantizer {
+    pub bits: usize,
+    /// Float value of one code step.
+    pub step: f32,
+}
+
+impl ActQuantizer {
+    /// Build for activations in [0, amax].
+    pub fn new(bits: usize, amax: f32) -> Self {
+        assert!(bits >= 1 && bits <= 8);
+        assert!(amax > 0.0);
+        let levels = (1u32 << bits) - 1;
+        Self {
+            bits,
+            step: amax / levels as f32,
+        }
+    }
+
+    pub fn max_code(&self) -> u8 {
+        ((1u32 << self.bits) - 1) as u8
+    }
+
+    #[inline]
+    pub fn quantize(&self, x: f32) -> u8 {
+        let code = (x / self.step).round();
+        code.clamp(0.0, self.max_code() as f32) as u8
+    }
+
+    #[inline]
+    pub fn dequantize(&self, code: u8) -> f32 {
+        code as f32 * self.step
+    }
+
+    pub fn quantize_vec(&self, xs: &[f32]) -> Vec<u8> {
+        xs.iter().map(|&x| self.quantize(x)).collect()
+    }
+
+    /// Mean-squared quantization error over a batch (diagnostics).
+    pub fn mse(&self, xs: &[f32]) -> f64 {
+        xs.iter()
+            .map(|&x| {
+                let e = x - self.dequantize(self.quantize(x));
+                (e * e) as f64
+            })
+            .sum::<f64>()
+            / xs.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_on_grid() {
+        let q = ActQuantizer::new(4, 6.0);
+        assert_eq!(q.max_code(), 15);
+        for code in 0..=15u8 {
+            assert_eq!(q.quantize(q.dequantize(code)), code);
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let q = ActQuantizer::new(4, 6.0);
+        assert_eq!(q.quantize(-1.0), 0);
+        assert_eq!(q.quantize(100.0), 15);
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let q = ActQuantizer::new(4, 6.0);
+        for i in 0..100 {
+            let x = i as f32 * 0.06;
+            let err = (x - q.dequantize(q.quantize(x))).abs();
+            assert!(err <= q.step / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn more_bits_less_mse() {
+        let xs: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.006) % 6.0).collect();
+        let q4 = ActQuantizer::new(4, 6.0);
+        let q2 = ActQuantizer::new(2, 6.0);
+        assert!(q4.mse(&xs) < q2.mse(&xs) / 4.0);
+    }
+}

@@ -1,0 +1,98 @@
+//! Minimal dense tensor (HWC layout for images, flat for vectors).
+
+/// A dense f32 tensor with explicit shape. Images use HWC layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// HWC accessor for 3-D tensors.
+    #[inline]
+    pub fn at3(&self, y: usize, x: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 3);
+        let (_h, w, ch) = (self.shape[0], self.shape[1], self.shape[2]);
+        self.data[(y * w + x) * ch + c]
+    }
+
+    #[inline]
+    pub fn at3_mut(&mut self, y: usize, x: usize, c: usize) -> &mut f32 {
+        debug_assert_eq!(self.shape.len(), 3);
+        let (_h, w, ch) = (self.shape[0], self.shape[1], self.shape[2]);
+        &mut self.data[(y * w + x) * ch + c]
+    }
+
+    /// Flatten into a 1-D tensor (moves data).
+    pub fn flatten(mut self) -> Tensor {
+        let n = self.data.len();
+        self.shape = vec![n];
+        self
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &b| a.max(b.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_check() {
+        let t = Tensor::new(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn bad_shape_panics() {
+        let _ = Tensor::new(&[2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn hwc_indexing() {
+        let mut t = Tensor::zeros(&[2, 2, 3]);
+        *t.at3_mut(1, 0, 2) = 5.0;
+        assert_eq!(t.at3(1, 0, 2), 5.0);
+        // position in flat data: (y*W + x)*C + c = (1*2+0)*3+2 = 8
+        assert_eq!(t.data[8], 5.0);
+    }
+
+    #[test]
+    fn flatten_preserves_data() {
+        let t = Tensor::new(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let f = t.flatten();
+        assert_eq!(f.shape, vec![4]);
+        assert_eq!(f.data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

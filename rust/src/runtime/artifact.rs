@@ -1,0 +1,112 @@
+//! Artifact manifest: discovery and shape metadata for the AOT outputs.
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lowered entry point (an HLO-text file plus its signature).
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: PathBuf,
+    /// (name, shape) per input, in call order.
+    pub inputs: Vec<(String, Vec<usize>)>,
+    /// (name, shape) per output.
+    pub outputs: Vec<(String, Vec<usize>)>,
+}
+
+impl ArtifactSpec {
+    pub fn input_len(&self, i: usize) -> usize {
+        self.inputs[i].1.iter().product()
+    }
+
+    pub fn output_len(&self, i: usize) -> usize {
+        self.outputs[i].1.iter().product()
+    }
+}
+
+/// The artifacts/manifest.json written by python/compile/aot.py.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch: usize,
+    pub side: usize,
+    pub feature_dim: usize,
+    pub classes: usize,
+    pub entry_points: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let doc = Json::read_file(&dir.join("manifest.json"))
+            .map_err(|e| Error::Artifact(format!("manifest: {e}")))?;
+        let get = |k: &str| -> Result<usize> {
+            doc.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| Error::Artifact(format!("manifest missing '{k}'")))
+        };
+        let mut entry_points = BTreeMap::new();
+        let eps = doc
+            .get("entry_points")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| Error::Artifact("manifest missing entry_points".into()))?;
+        for (name, spec) in eps {
+            let file = spec
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| Error::Artifact(format!("{name}: missing file")))?;
+            let parse_sig = |key: &str| -> Result<Vec<(String, Vec<usize>)>> {
+                spec.get(key)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| Error::Artifact(format!("{name}: missing {key}")))?
+                    .iter()
+                    .map(|pair| {
+                        let arr = pair
+                            .as_arr()
+                            .ok_or_else(|| Error::Artifact(format!("{name}: bad {key}")))?;
+                        let nm = arr[0]
+                            .as_str()
+                            .ok_or_else(|| Error::Artifact(format!("{name}: bad {key} name")))?
+                            .to_string();
+                        let shape = arr[1]
+                            .as_usize_vec()
+                            .ok_or_else(|| Error::Artifact(format!("{name}: bad {key} shape")))?;
+                        Ok((nm, shape))
+                    })
+                    .collect()
+            };
+            entry_points.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: dir.join(file),
+                    inputs: parse_sig("inputs")?,
+                    outputs: parse_sig("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            batch: get("batch")?,
+            side: get("side")?,
+            feature_dim: get("feature_dim")?,
+            classes: get("classes")?,
+            entry_points,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.entry_points
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("no entry point '{name}'")))
+    }
+
+    /// Path of the weights JSON exported alongside the HLO.
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join("weights.json")
+    }
+
+    /// Path of the shared eval batch (may not exist).
+    pub fn eval_batch_path(&self) -> PathBuf {
+        self.dir.join("eval_batch.json")
+    }
+}

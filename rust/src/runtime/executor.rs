@@ -1,0 +1,116 @@
+//! The execution engine: one PJRT CPU client + compiled executables per
+//! entry point, with f32 literal marshaling.
+
+use super::artifact::{ArtifactSpec, Manifest};
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A compiled entry point.
+pub struct LoadedEntry {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The runtime engine: owns the PJRT client and all executables.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    entries: BTreeMap<String, LoadedEntry>,
+    /// Executions performed (metrics).
+    pub executions: u64,
+}
+
+impl Engine {
+    /// Load every entry point in the manifest and compile it.
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        let mut entries = BTreeMap::new();
+        for (name, spec) in &manifest.entry_points {
+            let entry = Self::compile_entry(&client, spec)?;
+            entries.insert(name.clone(), entry);
+        }
+        Ok(Engine {
+            client,
+            manifest,
+            entries,
+            executions: 0,
+        })
+    }
+
+    fn compile_entry(client: &xla::PjRtClient, spec: &ArtifactSpec) -> Result<LoadedEntry> {
+        let path = spec
+            .file
+            .to_str()
+            .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| Error::Runtime(format!("parse {path}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {path}: {e}")))?;
+        Ok(LoadedEntry {
+            spec: spec.clone(),
+            exe,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    /// Execute an entry point with f32 inputs `(data, shape)`; returns the
+    /// first output flattened to f32 (all our artifacts return 1-tuples).
+    pub fn run(&mut self, entry: &str, inputs: &[(&[f32], &Vec<usize>)]) -> Result<Vec<f32>> {
+        let loaded = self
+            .entries
+            .get(entry)
+            .ok_or_else(|| Error::Runtime(format!("unknown entry '{entry}'")))?;
+        if inputs.len() != loaded.spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "entry '{entry}' expects {} inputs, got {}",
+                loaded.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().enumerate() {
+            let want: usize = loaded.spec.inputs[i].1.iter().product();
+            if data.len() != want {
+                return Err(Error::Runtime(format!(
+                    "entry '{entry}' input {i} ('{}') expects {} elements, got {}",
+                    loaded.spec.inputs[i].0,
+                    want,
+                    data.len()
+                )));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| Error::Runtime(format!("reshape input {i}: {e}")))?;
+            literals.push(lit);
+        }
+        let result = loaded
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute '{entry}': {e}")))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch '{entry}': {e}")))?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let first = out
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("untuple '{entry}': {e}")))?;
+        self.executions += 1;
+        first
+            .to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("to_vec '{entry}': {e}")))
+    }
+}

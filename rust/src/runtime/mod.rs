@@ -1,0 +1,83 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them
+//! on the request path (Python never runs at serving time).
+//!
+//! Pipeline: `HloModuleProto::from_text_file` → `XlaComputation` →
+//! `PjRtClient::compile` → `PjRtLoadedExecutable::execute`. HLO *text* is
+//! the interchange format (jax ≥ 0.5 protos use 64-bit instruction ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids — see
+//! /opt/xla-example/README.md and python/compile/aot.py).
+
+mod artifact;
+mod executor;
+
+pub use artifact::{ArtifactSpec, Manifest};
+pub use executor::{Engine, LoadedEntry};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn artifacts_ready() -> bool {
+        Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses_if_present() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+        let m = Manifest::load(Path::new("artifacts")).unwrap();
+        assert!(m.batch > 0);
+        for ep in ["features", "head", "full"] {
+            assert!(m.entry_points.contains_key(ep), "missing {ep}");
+        }
+        let head = m.entry("head").unwrap();
+        assert_eq!(head.inputs.len(), 3);
+        assert_eq!(head.outputs[0].1[1], m.classes);
+    }
+
+    #[test]
+    fn engine_executes_head_artifact() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+        let mut engine = Engine::load(Path::new("artifacts")).unwrap();
+        let m = engine.manifest().clone();
+        let b = m.batch;
+        let spec = m.entry("head").unwrap().clone();
+        let feats = vec![0.5f32; b * m.feature_dim];
+        let eps1 = vec![0.0f32; spec.input_len(1)];
+        let eps2 = vec![0.0f32; spec.input_len(2)];
+        let probs = engine
+            .run(
+                "head",
+                &[
+                    (&feats, &spec.inputs[0].1),
+                    (&eps1, &spec.inputs[1].1),
+                    (&eps2, &spec.inputs[2].1),
+                ],
+            )
+            .unwrap();
+        assert_eq!(probs.len(), b * m.classes);
+        for row in probs.chunks(m.classes) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-3, "softmax row sums to {sum}");
+        }
+        // With ε = 0 the pass is deterministic.
+        let probs2 = engine
+            .run(
+                "head",
+                &[
+                    (&feats, &spec.inputs[0].1),
+                    (&eps1, &spec.inputs[1].1),
+                    (&eps2, &spec.inputs[2].1),
+                ],
+            )
+            .unwrap();
+        assert_eq!(probs, probs2);
+        assert_eq!(engine.executions, 2);
+    }
+}

@@ -1,0 +1,295 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Each `[[bench]]` target in Cargo.toml sets `harness = false` and drives
+//! this module: warmup, calibrated iteration counts, robust statistics
+//! (median + MAD), and a machine-readable JSON report appended to
+//! `target/bench-results.json` so EXPERIMENTS.md numbers are traceable.
+
+use crate::util::json::Json;
+use crate::util::stats;
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Nanoseconds per iteration (median across measurement batches).
+    pub ns_per_iter: f64,
+    /// Median absolute deviation of the per-batch estimate, ns.
+    pub mad_ns: f64,
+    pub iters_total: u64,
+    /// Optional caller-supplied throughput denominator ("elements per iter").
+    pub elements_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> Option<f64> {
+        self.elements_per_iter
+            .map(|e| e * 1e9 / self.ns_per_iter.max(1e-12))
+    }
+}
+
+/// Bench runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub batches: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            batches: 12,
+        }
+    }
+}
+
+/// Quick options for long-running end-to-end cases.
+impl BenchOpts {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            batches: 6,
+        }
+    }
+}
+
+/// A bench suite accumulates results and prints a table at the end.
+pub struct Suite {
+    pub title: String,
+    pub results: Vec<BenchResult>,
+    pub notes: Vec<(String, String)>,
+    opts: BenchOpts,
+}
+
+impl Suite {
+    pub fn new(title: &str) -> Self {
+        // `cargo bench -- --quick` support.
+        let quick = std::env::args().any(|a| a == "--quick");
+        Self {
+            title: title.to_string(),
+            results: Vec::new(),
+            notes: Vec::new(),
+            opts: if quick {
+                BenchOpts::quick()
+            } else {
+                BenchOpts::default()
+            },
+        }
+    }
+
+    pub fn opts(&self) -> BenchOpts {
+        self.opts
+    }
+
+    /// Time `f` (called once per iteration). `black_box` its output yourself
+    /// if the compiler could elide the work.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_with_elements(name, None, &mut f)
+    }
+
+    /// Like [`bench`], reporting a throughput based on `elements` per iter.
+    pub fn bench_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        elements: f64,
+        mut f: F,
+    ) -> &BenchResult {
+        self.bench_with_elements(name, Some(elements), &mut f)
+    }
+
+    fn bench_with_elements(
+        &mut self,
+        name: &str,
+        elements: Option<f64>,
+        f: &mut dyn FnMut(),
+    ) -> &BenchResult {
+        // Warmup and iteration-count calibration.
+        let mut iters_per_batch = 1u64;
+        let warmup_end = Instant::now() + self.opts.warmup;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_batch {
+                f();
+            }
+            let dt = t0.elapsed();
+            if Instant::now() >= warmup_end {
+                // Aim for measure/batches per batch.
+                let target = self.opts.measure.as_nanos() as f64 / self.opts.batches as f64;
+                let per_iter = dt.as_nanos() as f64 / iters_per_batch as f64;
+                iters_per_batch = ((target / per_iter.max(1.0)).ceil() as u64).max(1);
+                break;
+            }
+            if dt < Duration::from_millis(5) {
+                iters_per_batch = iters_per_batch.saturating_mul(2);
+            }
+        }
+        // Measurement batches.
+        let mut estimates = Vec::with_capacity(self.opts.batches);
+        let mut total_iters = 0u64;
+        for _ in 0..self.opts.batches {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_batch {
+                f();
+            }
+            let dt = t0.elapsed();
+            estimates.push(dt.as_nanos() as f64 / iters_per_batch as f64);
+            total_iters += iters_per_batch;
+        }
+        let med = stats::median(&estimates);
+        let deviations: Vec<f64> = estimates.iter().map(|e| (e - med).abs()).collect();
+        let mad = stats::median(&deviations);
+        let result = BenchResult {
+            name: name.to_string(),
+            ns_per_iter: med,
+            mad_ns: mad,
+            iters_total: total_iters,
+            elements_per_iter: elements,
+        };
+        println!(
+            "  {:<44} {:>14}  ±{:<10} {}",
+            name,
+            fmt_ns(med),
+            fmt_ns(mad),
+            result
+                .throughput_per_sec()
+                .map(|t| format!("[{}/s]", fmt_si(t)))
+                .unwrap_or_default()
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Record a free-form derived metric (energy, area, accuracy) that the
+    /// report should carry alongside timings.
+    pub fn note(&mut self, key: &str, value: String) {
+        println!("  {key:<44} {value}");
+        self.notes.push((key.to_string(), value));
+    }
+
+    /// Print header. Call once at the start of a bench binary.
+    pub fn header(&self) {
+        println!("\n=== {} ===", self.title);
+    }
+
+    /// Append machine-readable results to `target/bench-results.json`.
+    pub fn finish(&self) {
+        let mut cases = Vec::new();
+        for r in &self.results {
+            let mut o = Json::obj();
+            o.set("name", Json::Str(r.name.clone()))
+                .set("ns_per_iter", Json::Num(r.ns_per_iter))
+                .set("mad_ns", Json::Num(r.mad_ns))
+                .set("iters", Json::Num(r.iters_total as f64));
+            if let Some(t) = r.throughput_per_sec() {
+                o.set("throughput_per_sec", Json::Num(t));
+            }
+            cases.push(o);
+        }
+        let mut notes = Json::obj();
+        for (k, v) in &self.notes {
+            notes.set(k, Json::Str(v.clone()));
+        }
+        let mut entry = Json::obj();
+        entry
+            .set("suite", Json::Str(self.title.clone()))
+            .set("cases", Json::Arr(cases))
+            .set("notes", notes);
+        let path = std::path::Path::new("target/bench-results.json");
+        let mut all = match Json::read_file(path) {
+            Ok(Json::Arr(a)) => a,
+            _ => Vec::new(),
+        };
+        // Replace any previous entry for this suite (idempotent re-runs).
+        all.retain(|e| e.get("suite").and_then(|s| s.as_str()) != Some(self.title.as_str()));
+        all.push(entry);
+        let _ = Json::Arr(all).write_file(path);
+        println!("=== {} done ({} cases) ===\n", self.title, self.results.len());
+    }
+}
+
+/// Prevent the optimizer from eliding a value (std::hint::black_box wrapper,
+/// kept here so bench code has a single import point).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Format a rate with SI prefixes.
+pub fn fmt_si(x: f64) -> String {
+    let (v, p) = if x >= 1e12 {
+        (x / 1e12, "T")
+    } else if x >= 1e9 {
+        (x / 1e9, "G")
+    } else if x >= 1e6 {
+        (x / 1e6, "M")
+    } else if x >= 1e3 {
+        (x / 1e3, "k")
+    } else {
+        (x, "")
+    };
+    format!("{v:.2} {p}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut suite = Suite::new("selftest");
+        suite.opts = BenchOpts {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            batches: 4,
+        };
+        let r = suite
+            .bench("spin", || {
+                let mut acc = 0u64;
+                for i in 0..1000u64 {
+                    acc = acc.wrapping_add(black_box(i));
+                }
+                black_box(acc);
+            })
+            .clone();
+        assert!(r.ns_per_iter > 0.0);
+        assert!(r.iters_total >= 4);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ns(12.3), "12.3 ns");
+        assert_eq!(fmt_ns(12_300.0), "12.30 µs");
+        assert!(fmt_si(5.12e9).starts_with("5.12 G"));
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            ns_per_iter: 100.0,
+            mad_ns: 0.0,
+            iters_total: 1,
+            elements_per_iter: Some(50.0),
+        };
+        // 50 elements / 100 ns = 5e8 per second
+        assert!((r.throughput_per_sec().unwrap() - 5e8).abs() < 1.0);
+    }
+}

@@ -1,0 +1,211 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with typed accessors and defaults, positional arguments, and generated
+//! `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Declarative option spec used for help text and validation.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub opts: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| CliError(format!("--{name} expects a number, got '{s}'"))),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| CliError(format!("--{name} expects an integer, got '{s}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| CliError(format!("--{name} expects an integer, got '{s}'"))),
+        }
+    }
+
+    /// Comma-separated list of floats, e.g. `--temps 28,40,50,60`.
+    pub fn get_f64_list(&self, name: &str, default: &[f64]) -> Result<Vec<f64>, CliError> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| CliError(format!("--{name}: bad number '{p}'")))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Parse a raw argument list (no program name) into [`Args`].
+///
+/// Grammar: `--name=value` | `--name value` | `--flag` (when `value` would
+/// start with `--` or the arg list ends) | positional.
+pub fn parse_args<I: IntoIterator<Item = String>>(raw: I) -> Args {
+    let mut args = Args::default();
+    let items: Vec<String> = raw.into_iter().collect();
+    let mut i = 0;
+    while i < items.len() {
+        let item = &items[i];
+        if let Some(name) = item.strip_prefix("--") {
+            if let Some(eq) = name.find('=') {
+                args.opts
+                    .insert(name[..eq].to_string(), name[eq + 1..].to_string());
+            } else if i + 1 < items.len() && !items[i + 1].starts_with("--") {
+                args.opts.insert(name.to_string(), items[i + 1].clone());
+                i += 1;
+            } else {
+                args.flags.push(name.to_string());
+            }
+        } else {
+            args.positional.push(item.clone());
+        }
+        i += 1;
+    }
+    args
+}
+
+/// A subcommand with its option specs (for help generation).
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+/// Render help text for a set of commands.
+pub fn render_help(program: &str, about: &str, commands: &[Command]) -> String {
+    let mut s = format!("{program} — {about}\n\nUSAGE:\n  {program} <COMMAND> [OPTIONS]\n\nCOMMANDS:\n");
+    for c in commands {
+        s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+    }
+    s.push_str("\nRun with <COMMAND> --help for command options.\n");
+    s
+}
+
+/// Render help for one command.
+pub fn render_cmd_help(program: &str, cmd: &Command) -> String {
+    let mut s = format!("{program} {} — {}\n\nOPTIONS:\n", cmd.name, cmd.about);
+    for o in &cmd.opts {
+        let left = if o.is_flag {
+            format!("--{}", o.name)
+        } else {
+            format!("--{} <v>", o.name)
+        };
+        let default = o
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  {:<22} {}{}\n", left, o.help, default));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // NB: a bare `--flag` followed by a non-`--` token consumes it as a
+        // value (documented grammar), so positionals come first.
+        let a = parse_args(sv(&[
+            "pos1", "--samples", "2500", "--bias=0.18", "--verbose", "--temps", "28,40",
+        ]));
+        assert_eq!(a.get("samples"), Some("2500"));
+        assert_eq!(a.get_f64("bias", 0.0).unwrap(), 0.18);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert_eq!(a.get_f64_list("temps", &[]).unwrap(), vec![28.0, 40.0]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse_args(sv(&["--n", "abc"]));
+        assert!(a.get_usize("n", 1).is_err());
+        assert_eq!(a.get_usize("m", 7).unwrap(), 7);
+        assert_eq!(a.get_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse_args(sv(&["--fast"]));
+        assert!(a.has_flag("fast"));
+        assert!(a.get("fast").is_none());
+    }
+
+    #[test]
+    fn help_renders() {
+        let cmds = [Command {
+            name: "grng-char",
+            about: "characterize GRNG",
+            opts: vec![OptSpec {
+                name: "samples",
+                help: "number of samples",
+                default: Some("2500"),
+                is_flag: false,
+            }],
+        }];
+        let h = render_help("bnn-cim", "BNN accelerator", &cmds);
+        assert!(h.contains("grng-char"));
+        let ch = render_cmd_help("bnn-cim", &cmds[0]);
+        assert!(ch.contains("--samples"));
+        assert!(ch.contains("default: 2500"));
+    }
+}

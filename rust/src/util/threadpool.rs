@@ -1,0 +1,352 @@
+//! Work-stealing-free, fixed-size thread pool plus a `scope`-style parallel
+//! map. Tokio is unavailable offline; the coordinator's event loop and the
+//! Monte-Carlo sweeps use these primitives (std threads + channels).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size thread pool. Jobs are closures; results flow back through
+/// whatever channel the caller captures.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// `n = 0` means "number of available CPUs".
+    pub fn new(n: usize) -> Self {
+        let n = if n == 0 {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+        } else {
+            n
+        };
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                std::thread::Builder::new()
+                    .name(format!("bnn-cim-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match msg {
+                            Ok(Msg::Run(job)) => {
+                                job();
+                                pending.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            tx,
+            workers,
+            pending,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.load(Ordering::SeqCst)
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.pending.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .send(Msg::Run(Box::new(f)))
+            .expect("thread pool has shut down");
+    }
+
+    /// Busy-ish wait until all submitted jobs have completed.
+    pub fn wait_idle(&self) {
+        while self.pending.load(Ordering::SeqCst) != 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Parallel map over an index range: applies `f(i)` for `i in 0..n` on up to
+/// `threads` OS threads, returning results in index order. Falls back to a
+/// serial loop for `threads <= 1` or tiny `n` (avoids spawn overhead — this
+/// matters on the single-core CI machine this reproduction targets).
+pub fn par_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let threads = threads.min(n);
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots = Mutex::new(&mut out);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                // Each index is written exactly once; the mutex serializes
+                // only the (cheap) pointer write, not `f`.
+                let mut guard = slots.lock().unwrap();
+                guard[i] = Some(v);
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("par_map slot")).collect()
+}
+
+/// A simple bounded MPMC channel built on std primitives, used by the
+/// coordinator for backpressure (send blocks when the queue is full).
+pub struct Bounded<T> {
+    inner: Arc<BoundedInner<T>>,
+}
+
+struct BoundedInner<T> {
+    queue: Mutex<std::collections::VecDeque<T>>,
+    cap: usize,
+    not_full: std::sync::Condvar,
+    not_empty: std::sync::Condvar,
+    closed: Mutex<bool>,
+}
+
+impl<T> Clone for Bounded<T> {
+    fn clone(&self) -> Self {
+        Self {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+}
+
+impl<T> Bounded<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Self {
+            inner: Arc::new(BoundedInner {
+                queue: Mutex::new(std::collections::VecDeque::new()),
+                cap,
+                not_full: std::sync::Condvar::new(),
+                not_empty: std::sync::Condvar::new(),
+                closed: Mutex::new(false),
+            }),
+        }
+    }
+
+    /// Blocking send; returns Err(item) if the channel is closed.
+    pub fn send(&self, item: T) -> Result<(), T> {
+        let mut q = self.inner.queue.lock().unwrap();
+        loop {
+            if *self.inner.closed.lock().unwrap() {
+                return Err(item);
+            }
+            if q.len() < self.inner.cap {
+                q.push_back(item);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            q = self.inner.not_full.wait(q).unwrap();
+        }
+    }
+
+    /// Non-blocking send; Err(item) if full or closed.
+    pub fn try_send(&self, item: T) -> Result<(), T> {
+        if *self.inner.closed.lock().unwrap() {
+            return Err(item);
+        }
+        let mut q = self.inner.queue.lock().unwrap();
+        if q.len() < self.inner.cap {
+            q.push_back(item);
+            self.inner.not_empty.notify_one();
+            Ok(())
+        } else {
+            Err(item)
+        }
+    }
+
+    /// Blocking receive; None when closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut q = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = q.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if *self.inner.closed.lock().unwrap() {
+                return None;
+            }
+            q = self.inner.not_empty.wait(q).unwrap();
+        }
+    }
+
+    /// Receive with a timeout; Ok(None) on timeout, Err(()) when closed.
+    pub fn recv_timeout(&self, dur: std::time::Duration) -> Result<Option<T>, ()> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut q = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = q.pop_front() {
+                self.inner.not_full.notify_one();
+                return Ok(Some(item));
+            }
+            if *self.inner.closed.lock().unwrap() {
+                return Err(());
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            let (guard, res) = self
+                .inner
+                .not_empty
+                .wait_timeout(q, deadline - now)
+                .unwrap();
+            q = guard;
+            if res.timed_out() && q.is_empty() {
+                return Ok(None);
+            }
+        }
+    }
+
+    /// Drain up to `max` items without blocking (batcher fast path).
+    pub fn drain_up_to(&self, max: usize) -> Vec<T> {
+        let mut q = self.inner.queue.lock().unwrap();
+        let take = q.len().min(max);
+        let items: Vec<T> = q.drain(..take).collect();
+        if take > 0 {
+            self.inner.not_full.notify_all();
+        }
+        items
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        *self.inner.closed.lock().unwrap() = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn par_map_ordered() {
+        let out = par_map(100, 4, |i| i * i);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn par_map_serial_fallback() {
+        let out = par_map(5, 1, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn bounded_backpressure() {
+        let ch = Bounded::new(2);
+        ch.send(1).unwrap();
+        ch.send(2).unwrap();
+        assert!(ch.try_send(3).is_err(), "queue should be full");
+        assert_eq!(ch.recv(), Some(1));
+        ch.try_send(3).unwrap();
+        assert_eq!(ch.drain_up_to(10), vec![2, 3]);
+        assert!(ch.is_empty());
+    }
+
+    #[test]
+    fn bounded_close_drains() {
+        let ch = Bounded::new(4);
+        ch.send("a").unwrap();
+        ch.close();
+        assert!(ch.send("b").is_err());
+        assert_eq!(ch.recv(), Some("a"));
+        assert_eq!(ch.recv(), None);
+    }
+
+    #[test]
+    fn bounded_cross_thread() {
+        let ch = Bounded::new(1);
+        let ch2 = ch.clone();
+        let h = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(v) = ch2.recv() {
+                got.push(v);
+            }
+            got
+        });
+        for i in 0..50 {
+            ch.send(i).unwrap();
+        }
+        ch.close();
+        let got = h.join().unwrap();
+        assert_eq!(got, (0..50).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn recv_timeout_returns_none() {
+        let ch: Bounded<u8> = Bounded::new(1);
+        let r = ch.recv_timeout(std::time::Duration::from_millis(10));
+        assert_eq!(r, Ok(None));
+    }
+}

@@ -1,0 +1,271 @@
+//! Minimal TOML-subset parser for configuration files.
+//!
+//! Supports the subset the config system needs: `[section]` and
+//! `[section.sub]` headers, `key = value` with string / integer / float /
+//! boolean / array values, comments, and basic inline arrays. Produces the
+//! same [`Json`] value tree the rest of the library consumes, so configs
+//! and artifacts share one data model.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TOML error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse TOML text into a Json::Obj tree.
+pub fn parse(input: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut section: Vec<String> = Vec::new();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let lineno = lineno + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| TomlError {
+                line: lineno,
+                msg: "unterminated section header".into(),
+            })?;
+            if name.starts_with('[') {
+                return Err(TomlError {
+                    line: lineno,
+                    msg: "array-of-tables ([[..]]) is not supported".into(),
+                });
+            }
+            section = name.split('.').map(|s| s.trim().to_string()).collect();
+            if section.iter().any(|s| s.is_empty()) {
+                return Err(TomlError {
+                    line: lineno,
+                    msg: "empty section path component".into(),
+                });
+            }
+            // Ensure the section object exists.
+            ensure_path(&mut root, &section, lineno)?;
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| TomlError {
+            line: lineno,
+            msg: format!("expected 'key = value', got '{line}'"),
+        })?;
+        let key = line[..eq].trim();
+        let val_text = line[eq + 1..].trim();
+        if key.is_empty() {
+            return Err(TomlError {
+                line: lineno,
+                msg: "empty key".into(),
+            });
+        }
+        let val = parse_value(val_text, lineno)?;
+        let target = navigate(&mut root, &section, lineno)?;
+        if target.contains_key(key) {
+            return Err(TomlError {
+                line: lineno,
+                msg: format!("duplicate key '{key}'"),
+            });
+        }
+        target.insert(key.trim_matches('"').to_string(), val);
+    }
+    Ok(Json::Obj(root))
+}
+
+/// Read and parse a TOML file.
+pub fn read_file(path: &std::path::Path) -> Result<Json, Box<dyn std::error::Error>> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("reading {}: {e}", path.display()))?;
+    Ok(parse(&text).map_err(|e| format!("parsing {}: {e}", path.display()))?)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside of a string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_path(
+    root: &mut BTreeMap<String, Json>,
+    path: &[String],
+    lineno: usize,
+) -> Result<(), TomlError> {
+    navigate(root, path, lineno).map(|_| ())
+}
+
+fn navigate<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut BTreeMap<String, Json>, TomlError> {
+    let mut cur = root;
+    for comp in path {
+        let entry = cur
+            .entry(comp.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Obj(m) => m,
+            _ => {
+                return Err(TomlError {
+                    line: lineno,
+                    msg: format!("'{comp}' is both a value and a section"),
+                })
+            }
+        };
+    }
+    Ok(cur)
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<Json, TomlError> {
+    let err = |msg: String| TomlError { line: lineno, msg };
+    if text.is_empty() {
+        return Err(err("missing value".into()));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string".into()))?;
+        // Basic escapes
+        let mut s = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => s.push('\n'),
+                    Some('t') => s.push('\t'),
+                    Some('"') => s.push('"'),
+                    Some('\\') => s.push('\\'),
+                    other => return Err(err(format!("bad escape: \\{other:?}"))),
+                }
+            } else {
+                s.push(c);
+            }
+        }
+        return Ok(Json::Str(s));
+    }
+    if text == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if text == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err("unterminated array (arrays must be single-line)".into()))?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim(), lineno)?);
+            }
+        }
+        return Ok(Json::Arr(items));
+    }
+    // Numbers: allow underscores per TOML.
+    let cleaned: String = text.chars().filter(|&c| c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| err(format!("cannot parse value '{text}'")))
+}
+
+/// Split a string on commas not nested inside brackets or strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < s.len() {
+        parts.push(&s[start..]);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let src = r#"
+# chip config
+name = "proto65"    # comment after value
+temp_c = 28.0
+
+[grng]
+vdd = 1.2
+bias_mv = 180
+enabled = true
+caps_ff = [1.0, 1.1]
+
+[tile.adc]
+bits = 6
+"#;
+        let v = parse(src).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("proto65"));
+        assert_eq!(v.at(&["grng", "bias_mv"]).unwrap().as_f64(), Some(180.0));
+        assert_eq!(v.at(&["grng", "enabled"]).unwrap().as_bool(), Some(true));
+        assert_eq!(
+            v.at(&["grng", "caps_ff"]).unwrap().as_f64_vec(),
+            Some(vec![1.0, 1.1])
+        );
+        assert_eq!(v.at(&["tile", "adc", "bits"]).unwrap().as_usize(), Some(6));
+    }
+
+    #[test]
+    fn underscore_numbers() {
+        let v = parse("n = 1_000_000").unwrap();
+        assert_eq!(v.get("n").unwrap().as_f64(), Some(1e6));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("a = 1\nb =\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse("a = 1\na = 2\n").unwrap_err();
+        assert!(e.msg.contains("duplicate"));
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let v = parse(r##"s = "a#b""##).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let v = parse("m = [[1, 2], [3, 4]]").unwrap();
+        let rows = v.get("m").unwrap().as_arr().unwrap();
+        assert_eq!(rows[1].as_f64_vec(), Some(vec![3.0, 4.0]));
+    }
+}

@@ -1,0 +1,192 @@
+//! Property-based invariants over the core data structures and the
+//! coordinator-adjacent math (propcheck mini-framework — proptest is
+//! unavailable offline; see DESIGN.md §6).
+
+use bnn_cim::bayes::{aggregate_mc, softmax};
+use bnn_cim::cim::{CimTile, MuWord, MvmOptions, SigmaWord, WeightScale};
+use bnn_cim::config::ChipConfig;
+use bnn_cim::util::json::Json;
+use bnn_cim::util::propcheck::{assert_close, property, Gen};
+
+#[test]
+fn json_roundtrips_arbitrary_trees() {
+    property("json roundtrip", 120, |g| {
+        let v = random_json(g, 3);
+        let text = v.to_string_pretty();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("reparse failed: {e}\n{text}"));
+        assert_eq!(v, back);
+        // compact form too
+        let back2 = Json::parse(&v.to_string_compact()).unwrap();
+        assert_eq!(v, back2);
+    });
+}
+
+fn random_json(g: &mut Gen, depth: usize) -> Json {
+    let choice = if depth == 0 {
+        g.usize_in(0, 3)
+    } else {
+        g.usize_in(0, 5)
+    };
+    match choice {
+        0 => Json::Null,
+        1 => Json::Bool(g.bool()),
+        2 => Json::Num((g.f64_in(-1e9, 1e9) * 1000.0).round() / 1000.0),
+        3 => Json::Str(random_string(g)),
+        4 => Json::Arr((0..g.usize_in(0, 4)).map(|_| random_json(g, depth - 1)).collect()),
+        _ => {
+            let mut o = Json::obj();
+            for _ in 0..g.usize_in(0, 4) {
+                o.set(&random_string(g), random_json(g, depth - 1));
+            }
+            o
+        }
+    }
+}
+
+fn random_string(g: &mut Gen) -> String {
+    let alphabet = ['a', 'Z', '0', ' ', '_', '"', '\\', 'é', '\n', '😀'];
+    (0..g.usize_in(0, 8))
+        .map(|_| *g.pick(&alphabet))
+        .collect()
+}
+
+#[test]
+fn mu_word_quantization_is_projection() {
+    // Quantizing twice = quantizing once, error ≤ grid step, sign kept.
+    property("mu quantize projection", 300, |g| {
+        let x = g.f64_in(-400.0, 400.0);
+        let w = MuWord::quantize(x, 8);
+        let v = w.value() as f64;
+        let w2 = MuWord::quantize(v, 8);
+        assert_eq!(w.value(), w2.value(), "idempotence");
+        if x.abs() <= 255.0 {
+            assert!((v - x).abs() <= 1.0 + 1e-9, "x={x} v={v}");
+        }
+        assert_eq!(v.abs() as i32 % 2, 1, "grid holds odd integers only");
+    });
+}
+
+#[test]
+fn sigma_word_monotone() {
+    property("sigma quantize monotone", 200, |g| {
+        let a = g.f64_in(0.0, 20.0);
+        let b = g.f64_in(0.0, 20.0);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        assert!(
+            SigmaWord::quantize(lo, 4).value() <= SigmaWord::quantize(hi, 4).value(),
+            "monotonicity at {lo} vs {hi}"
+        );
+    });
+}
+
+#[test]
+fn weight_scale_roundtrip_bounded_error() {
+    property("weight scale roundtrip", 200, |g| {
+        let mu_max = g.f64_in(0.05, 10.0);
+        let sg_max = g.f64_in(0.01, 2.0);
+        let ws = WeightScale::fit(mu_max, sg_max, 8, 4);
+        let mu = g.f64_in(-mu_max, mu_max);
+        let back = ws.decode_mu(ws.encode_mu(mu).value() as f64);
+        assert!(
+            (back - mu).abs() <= 1.01 / ws.mu_scale,
+            "μ={mu} back={back}"
+        );
+        let sg = g.f64_in(0.0, sg_max);
+        let back_s = ws.decode_sigma(ws.encode_sigma(sg).value() as f64);
+        assert!(
+            (back_s - sg).abs() <= 0.51 / ws.sigma_scale,
+            "σ={sg} back={back_s}"
+        );
+    });
+}
+
+#[test]
+fn softmax_and_aggregation_invariants() {
+    property("mc aggregation invariants", 150, |g| {
+        let k = g.usize_in(2, 5);
+        let t = g.usize_in(1, 8);
+        let samples: Vec<Vec<f64>> = (0..t)
+            .map(|_| softmax(&(0..k).map(|_| g.f64_in(-8.0, 8.0)).collect::<Vec<_>>()))
+            .collect();
+        let pred = aggregate_mc(&samples);
+        assert_close(pred.probs.iter().sum::<f64>(), 1.0, 1e-9, 1e-9);
+        assert!(pred.entropy >= -1e-12 && pred.entropy <= (k as f64).ln() + 1e-9);
+        assert!(pred.mutual_information >= 0.0, "MI must be non-negative");
+        assert!(pred.mutual_information <= pred.entropy + 1e-9);
+        assert!(pred.class < k);
+        assert_close(pred.confidence, pred.probs[pred.class], 1e-12, 1e-12);
+    });
+}
+
+#[test]
+fn tile_mvm_zero_input_is_silent() {
+    // X = 0 draws no current: both paths must read ≈ 0 after calibration
+    // regardless of programmed weights.
+    let mut chip = ChipConfig::default();
+    chip.tile.rows = 16;
+    chip.tile.words_per_row = 4;
+    let mut tile = CimTile::new(&chip);
+    bnn_cim::cim::calibrate(&mut tile, 32, 16).unwrap();
+    property("zero input silent", 20, |g| {
+        let n = 16 * 4;
+        let mu: Vec<f64> = (0..n).map(|_| g.f64_in(-255.0, 255.0)).collect();
+        let sg: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 15.0)).collect();
+        tile.program_matrix(&mu, &sg);
+        let y = tile.mvm(&[0u8; 16], MvmOptions::default());
+        for (m, s) in y.mu.iter().zip(y.sigma.iter()) {
+            // Residual = ADC noise (≤ ~0.5 LSB/plane) only.
+            assert!(m.abs() < 600.0, "μ path leaked {m}");
+            assert!(s.abs() < 600.0, "σε path leaked {s}");
+        }
+    });
+}
+
+#[test]
+fn tile_ideal_analog_tracks_reference_within_quantization() {
+    // NOTE: per-bit-plane ADCs with clipping are NOT monotone in the
+    // inputs (a saturated MSB plane can mask lower-plane increments), so
+    // the honest invariant is: with ideal converters and inputs that keep
+    // every plane inside full scale, the analog output equals the digital
+    // reference up to per-plane rounding.
+    let mut chip = ChipConfig::default();
+    chip.tile.rows = 8;
+    chip.tile.words_per_row = 2;
+    let mut tile = CimTile::new(&chip);
+    // Per-plane FS: rows·x_max·0.25 charge units; with x ≤ 3 the worst
+    // plane charge is 8·3 = 24 < 30, so nothing clips.
+    property("mvm ideal tracks reference", 40, |g| {
+        let n = 8 * 2;
+        let mu: Vec<f64> = (0..n).map(|_| g.f64_in(-255.0, 255.0)).collect();
+        tile.program_matrix(&mu, &vec![0.0; n]);
+        let opts = MvmOptions {
+            bayesian: false,
+            refresh_epsilon: false,
+            ideal_analog: true,
+        };
+        let x: Vec<u8> = (0..8).map(|_| g.usize_in(0, 3) as u8).collect();
+        let y = tile.mvm(&x, opts);
+        let r = tile.mvm_reference(&x, false);
+        // Max reconstruction error: Σ_b 2^b · lsb/2 over 8 planes.
+        let lsb = 8.0 * 15.0 * 0.25 / 32.0;
+        let bound = 255.0 * lsb / 2.0 + 1e-9;
+        for (a, b) in y.mu.iter().zip(r.mu.iter()) {
+            assert!(
+                (a - b).abs() <= bound,
+                "ideal-analog error {} exceeds quantization bound {bound}",
+                (a - b).abs()
+            );
+        }
+    });
+}
+
+#[test]
+fn toml_numbers_roundtrip_through_config() {
+    property("toml config override", 100, |g| {
+        let bias = (g.f64_in(0.01, 0.4) * 1e4).round() / 1e4;
+        let rows = g.usize_in(8, 128);
+        let text = format!("[chip.grng]\nbias_v = {bias}\n[chip.tile]\nrows = {rows}\n");
+        let cfg = bnn_cim::config::Config::from_toml_str(&text).unwrap();
+        assert_close(cfg.chip.grng.bias_v, bias, 1e-12, 1e-12);
+        assert_eq!(cfg.chip.tile.rows, rows);
+    });
+}
