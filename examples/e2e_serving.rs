@@ -2,7 +2,7 @@
 //! of the stack on a real small workload and reports the paper's
 //! headline quantities.
 //!
-//!   cargo run --release --example e2e_serving [n_requests] [mc_samples]
+//!   cargo run --release --example e2e_serving [n_requests] [mc_samples] [workers]
 //!
 //! Pipeline proven here:
 //!   python (build time): synthetic-person training → ELBO Bayesian head
@@ -26,6 +26,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().collect();
     let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
     let mc: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(16);
+    let workers: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(1);
     if !Path::new("artifacts/manifest.json").exists() {
         return Err("artifacts missing — run `make artifacts`".into());
     }
@@ -33,10 +34,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut cfg = Config::default();
     cfg.model.mc_samples = mc;
     cfg.server.max_batch = 8;
+    cfg.server.workers = workers;
     let coord = Coordinator::start(cfg.clone())?;
     let gen = SyntheticPerson::new(cfg.model.image_side, 2024);
 
-    println!("=== e2e serving: {n_requests} requests (+25% OOD), T={mc} MC samples ===");
+    println!(
+        "=== e2e serving: {n_requests} requests (+25% OOD), T={mc} MC samples, \
+         {workers} shard worker(s) ==="
+    );
     let t0 = Instant::now();
 
     // Offer the whole workload asynchronously (coordinator batches).
@@ -100,6 +105,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("  latency p50/p95      {:.1} / {:.1} ms", m.latency_p50_ms, m.latency_p95_ms);
     println!("  batches              {} (mean fill {:.2})", m.batches, m.mean_batch_fill);
     println!("  PJRT executions      {}", m.pjrt_executions);
+    if m.per_shard.len() > 1 {
+        for s in &m.per_shard {
+            println!(
+                "  shard {}              {} requests, {} batches, {} exec, {} ε",
+                s.shard, s.requests, s.batches, s.engine_executions, s.epsilon_samples
+            );
+        }
+    }
 
     // --- hardware-model energy of the ε stream ---
     let bank = GrngBank::for_chip(&cfg.chip);

@@ -10,12 +10,15 @@
 use bnn_cim::bayes::{accuracy, ape_by_group, EvalPoint};
 use bnn_cim::config::Config;
 use bnn_cim::coordinator::server::SourceFactory;
-use bnn_cim::coordinator::{BaselineSource, Coordinator, GrngBankSource, PhiloxSource};
+use bnn_cim::coordinator::{
+    BaselineSource, Coordinator, EpsilonSource, GrngBankSource, PhiloxSource,
+};
 use bnn_cim::data::SyntheticPerson;
 use bnn_cim::grng::baselines::{
     box_muller::FixedPointBoxMuller, clt_lfsr::CltLfsr, hadamard::TiHadamard, wallace::Wallace,
 };
 use std::path::Path;
+use std::sync::Arc;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     if !Path::new("artifacts/manifest.json").exists() {
@@ -29,23 +32,23 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut cfg = Config::default();
     cfg.model.mc_samples = 12;
 
+    // Factories receive the shard index; every arm here serves on the
+    // default single shard, so only the GRNG/Philox arms use it.
     let sources: Vec<(&str, SourceFactory)> = vec![
-        ("in-word GRNG (this work)", {
-            let chip = cfg.chip.clone();
-            Box::new(move || Box::new(GrngBankSource::new(&chip)))
-        }),
-        ("philox (L1 kernel mirror)", Box::new(|| Box::new(PhiloxSource::new(42)))),
-        ("wallace [11]", Box::new(|| {
-            Box::new(BaselineSource::new(Box::new(Wallace::new(1))))
+        ("in-word GRNG (this work)", GrngBankSource::shard_factory(&cfg.chip)),
+        ("philox (L1 kernel mirror)", PhiloxSource::shard_factory(42)),
+        ("wallace [11]", Arc::new(|_shard: usize| {
+            Box::new(BaselineSource::new(Box::new(Wallace::new(1)))) as Box<dyn EpsilonSource>
         })),
-        ("box-muller [12]", Box::new(|| {
+        ("box-muller [12]", Arc::new(|_shard: usize| {
             Box::new(BaselineSource::new(Box::new(FixedPointBoxMuller::new(2))))
+                as Box<dyn EpsilonSource>
         })),
-        ("ti-hadamard [9]", Box::new(|| {
-            Box::new(BaselineSource::new(Box::new(TiHadamard::new(3))))
+        ("ti-hadamard [9]", Arc::new(|_shard: usize| {
+            Box::new(BaselineSource::new(Box::new(TiHadamard::new(3)))) as Box<dyn EpsilonSource>
         })),
-        ("clt-lfsr (ablation)", Box::new(|| {
-            Box::new(BaselineSource::new(Box::new(CltLfsr::new(4))))
+        ("clt-lfsr (ablation)", Arc::new(|_shard: usize| {
+            Box::new(BaselineSource::new(Box::new(CltLfsr::new(4)))) as Box<dyn EpsilonSource>
         })),
     ];
 

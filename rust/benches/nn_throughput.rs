@@ -4,11 +4,17 @@
 //! rust-native layers, CIM-sim head, and the PJRT artifacts the
 //! coordinator actually serves.
 
-use bnn_cim::config::{ChipConfig, Config};
+use bnn_cim::config::ChipConfig;
+#[cfg(feature = "pjrt")]
+use bnn_cim::config::Config;
 use bnn_cim::data::SyntheticPerson;
 use bnn_cim::nn::Model;
+#[cfg(feature = "pjrt")]
 use bnn_cim::runtime::Engine;
-use bnn_cim::util::bench::{black_box, fmt_si, Suite};
+#[cfg(feature = "pjrt")]
+use bnn_cim::util::bench::fmt_si;
+use bnn_cim::util::bench::{black_box, Suite};
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
 fn main() {
@@ -36,6 +42,7 @@ fn main() {
     });
 
     // PJRT artifact path (what the coordinator serves).
+    #[cfg(feature = "pjrt")]
     if Path::new("artifacts/manifest.json").exists() {
         let mut engine = Engine::load(Path::new("artifacts")).unwrap();
         let m = engine.manifest().clone();
@@ -98,10 +105,18 @@ fn main() {
             ),
         );
         let snap = coord.metrics();
-        suite.note("coordinator batches", format!("{} (fill {:.2})", snap.batches, snap.mean_batch_fill));
+        suite.note(
+            "coordinator batches",
+            format!("{} (fill {:.2})", snap.batches, snap.mean_batch_fill),
+        );
         coord.shutdown();
     } else {
         suite.note("pjrt", "skipped (artifacts not built)".into());
     }
+    #[cfg(not(feature = "pjrt"))]
+    suite.note(
+        "pjrt",
+        "skipped (built without the `pjrt` feature — see benches/sharded_serving.rs)".into(),
+    );
     suite.finish();
 }

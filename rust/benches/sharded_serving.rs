@@ -1,0 +1,70 @@
+//! Bench: sharded serving — batched-request throughput vs. worker count.
+//!
+//! Runs the full coordinator (dispatcher → round-robin shard pool, each
+//! shard owning a SimEngine replica plus its own split-seeded GRNG bank)
+//! on the pure-Rust backend, so it needs no artifacts and no PJRT
+//! toolchain. The offered load is pre-queued so throughput measures the
+//! pool, not the client: expect req/s to scale monotonically 1 → 4
+//! workers (bounded by available cores).
+
+use bnn_cim::config::Config;
+use bnn_cim::coordinator::Coordinator;
+use bnn_cim::data::SyntheticPerson;
+use bnn_cim::util::bench::Suite;
+use std::time::{Duration, Instant};
+
+fn throughput_with_workers(workers: usize, n_req: usize, mc: usize) -> (f64, u64, f64) {
+    let mut cfg = Config::default();
+    cfg.model.mc_samples = mc;
+    cfg.server.workers = workers;
+    cfg.server.max_batch = 8;
+    cfg.server.queue_capacity = n_req + 8;
+    cfg.server.batch_deadline_ms = 0.5;
+    let coord = Coordinator::start_sim(cfg.clone()).unwrap();
+    let gen = SyntheticPerson::new(cfg.model.image_side, 7);
+    // Pre-generate so the dataset is not on the measured path.
+    let imgs: Vec<Vec<f32>> = (0..n_req as u64).map(|i| gen.sample(i).pixels).collect();
+    let t0 = Instant::now();
+    let receivers: Vec<_> = imgs
+        .into_iter()
+        .map(|px| coord.submit(px, 0).expect("queue sized for full load"))
+        .collect();
+    for rx in receivers {
+        rx.recv_timeout(Duration::from_secs(300)).expect("response");
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let m = coord.metrics();
+    coord.shutdown();
+    (n_req as f64 / dt, m.batches, m.mean_batch_fill)
+}
+
+fn main() {
+    let mut suite = Suite::new("sharded_serving (dispatcher + shard pool, sim engine)");
+    suite.header();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n_req = if quick { 64 } else { 256 };
+    let mc = if quick { 8 } else { 32 };
+
+    // Warm pass so page-cache/allocator effects don't bias workers=1.
+    let _ = throughput_with_workers(1, n_req / 4, mc);
+
+    let mut baseline = 0.0f64;
+    for &workers in &[1usize, 2, 4] {
+        let (rps, batches, fill) = throughput_with_workers(workers, n_req, mc);
+        if workers == 1 {
+            baseline = rps;
+        }
+        suite.note(
+            &format!("workers={workers} ({n_req} req, T={mc})"),
+            format!(
+                "{rps:.1} req/s ({:.2}x vs 1 worker), {batches} batches, fill {fill:.2}",
+                rps / baseline.max(1e-9)
+            ),
+        );
+    }
+    suite.note(
+        "epsilon sourcing",
+        "per-shard GRNG banks (SplitMix64 splits of die_seed), no shared RNG".into(),
+    );
+    suite.finish();
+}

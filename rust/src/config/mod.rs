@@ -61,6 +61,12 @@ impl Config {
         self.chip.validate()?;
         self.model.validate()?;
         self.server.validate()?;
+        if self.model.mc_samples > self.server.max_mc_samples {
+            return Err(Error::Config(format!(
+                "model.mc_samples ({}) exceeds server.max_mc_samples ({})",
+                self.model.mc_samples, self.server.max_mc_samples
+            )));
+        }
         Ok(())
     }
 }

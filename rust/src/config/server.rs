@@ -13,8 +13,13 @@ pub struct ServerConfig {
     pub batch_deadline_ms: f64,
     /// Request queue capacity (backpressure beyond this).
     pub queue_capacity: usize,
-    /// Worker threads executing batches.
+    /// Shard workers: each owns an engine plus an independent per-shard
+    /// GRNG bank (ε source) seeded via a SplitMix64 split of `die_seed`.
     pub workers: usize,
+    /// Upper bound on per-request `mc_samples`; larger requests are
+    /// rejected at submit so one request cannot inflate the MC pass count
+    /// of the whole fused batch.
+    pub max_mc_samples: usize,
     /// Per-request deadline [ms]; exceeded requests are rejected.
     pub request_timeout_ms: f64,
 }
@@ -26,6 +31,7 @@ impl Default for ServerConfig {
             batch_deadline_ms: 2.0,
             queue_capacity: 256,
             workers: 1,
+            max_mc_samples: 256,
             request_timeout_ms: 1000.0,
         }
     }
@@ -37,6 +43,7 @@ impl ServerConfig {
         f64_field(doc, "batch_deadline_ms", &mut self.batch_deadline_ms)?;
         usize_field(doc, "queue_capacity", &mut self.queue_capacity)?;
         usize_field(doc, "workers", &mut self.workers)?;
+        usize_field(doc, "max_mc_samples", &mut self.max_mc_samples)?;
         f64_field(doc, "request_timeout_ms", &mut self.request_timeout_ms)?;
         Ok(())
     }
@@ -50,6 +57,9 @@ impl ServerConfig {
         }
         if self.workers == 0 {
             return Err(Error::Config("server: workers must be > 0".into()));
+        }
+        if self.max_mc_samples == 0 {
+            return Err(Error::Config("server: max_mc_samples must be > 0".into()));
         }
         if self.batch_deadline_ms < 0.0 || self.request_timeout_ms <= 0.0 {
             return Err(Error::Config("server: invalid timeouts".into()));

@@ -1,0 +1,128 @@
+//! Pure batch-assembly and slot-packing cores, extracted from the serving
+//! loop so they are unit-testable without an engine, a queue, or a clock.
+//!
+//! The packing mirrors the chip's dataflow: every artifact call has
+//! `art_batch` slots and each slot carries one (request, MC-pass) pair, so
+//! the number of engine executions per fused batch is ceil(k·T / B)
+//! instead of T (§Perf in EXPERIMENTS.md: ~5× fewer head executions at
+//! k=1, T=32, B=8).
+
+use crate::coordinator::request::InferRequest;
+
+/// A fused batch of requests on its way from the dispatcher to a shard
+/// worker.
+pub struct Batch {
+    /// Monotone id assigned by the dispatcher (rides on
+    /// `InferResponse::batch_id`; also selects the round-robin shard).
+    pub id: u64,
+    pub requests: Vec<InferRequest>,
+}
+
+/// Effective Monte-Carlo pass count for a fused batch: the max over member
+/// requests, where `0` means "server default". `Coordinator::submit` bounds
+/// per-request values by `server.max_mc_samples`, so one request can no
+/// longer inflate `t` without limit for the whole batch.
+pub fn effective_t(mc_samples: &[usize], default_t: usize) -> usize {
+    mc_samples
+        .iter()
+        .map(|&m| if m == 0 { default_t } else { m })
+        .max()
+        .unwrap_or(default_t)
+}
+
+/// Slot-packing plan: returns, per engine call, the request index owning
+/// each occupied slot. Pairs are laid out request-major (request 0's T
+/// passes first), calls are filled front to back, and only the final call
+/// may be partial.
+pub fn plan_calls(n_requests: usize, t: usize, art_batch: usize) -> Vec<Vec<usize>> {
+    assert!(art_batch > 0, "artifact batch must be > 0");
+    let total_slots = n_requests * t;
+    let calls = total_slots.div_ceil(art_batch);
+    let mut plan = Vec::with_capacity(calls);
+    for call in 0..calls {
+        let mut owners = Vec::with_capacity(art_batch);
+        for slot in 0..art_batch {
+            let pair = call * art_batch + slot;
+            if pair < total_slots {
+                owners.push(pair / t);
+            }
+        }
+        plan.push(owners);
+    }
+    plan
+}
+
+/// Pad per-request images into the artifact's static batch (row-major;
+/// unused tail slots are zero-filled).
+pub fn pack_images(images: &[&[f32]], art_batch: usize, pixels_per_img: usize) -> Vec<f32> {
+    assert!(images.len() <= art_batch, "batch overflows artifact batch");
+    let mut out = vec![0.0f32; art_batch * pixels_per_img];
+    for (i, img) in images.iter().enumerate() {
+        out[i * pixels_per_img..(i + 1) * pixels_per_img].copy_from_slice(img);
+    }
+    out
+}
+
+/// Replicate each owning request's feature row into its slot of the next
+/// packed head call. Unoccupied tail slots keep their previous contents —
+/// their outputs are never read.
+pub fn scatter_features(feats: &[f32], owners: &[usize], feat_dim: usize, out: &mut [f32]) {
+    for (slot, &req) in owners.iter().enumerate() {
+        out[slot * feat_dim..(slot + 1) * feat_dim]
+            .copy_from_slice(&feats[req * feat_dim..(req + 1) * feat_dim]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_t_takes_max_with_default_substitution() {
+        assert_eq!(effective_t(&[0, 0], 8), 8);
+        assert_eq!(effective_t(&[4, 12, 2], 8), 12);
+        assert_eq!(effective_t(&[0, 4], 8), 8);
+        assert_eq!(effective_t(&[4, 2], 1), 4);
+        assert_eq!(effective_t(&[], 8), 8);
+    }
+
+    #[test]
+    fn plan_covers_every_pair_exactly_once() {
+        // 3 requests × 5 passes over batch-4 calls → 15 slots in 4 calls.
+        let plan = plan_calls(3, 5, 4);
+        assert_eq!(plan.len(), 4);
+        let mut per_request = vec![0usize; 3];
+        for owners in &plan {
+            assert!(owners.len() <= 4);
+            for &r in owners {
+                per_request[r] += 1;
+            }
+        }
+        assert_eq!(per_request, vec![5, 5, 5]);
+        assert_eq!(plan[0], vec![0, 0, 0, 0]);
+        assert_eq!(plan[3], vec![2, 2, 2]);
+    }
+
+    #[test]
+    fn plan_single_request_single_call() {
+        let plan = plan_calls(1, 6, 16);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0], vec![0; 6]);
+    }
+
+    #[test]
+    fn pack_images_zero_pads_tail_slots() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        let packed = pack_images(&[&a, &b], 4, 2);
+        assert_eq!(packed, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn scatter_features_replicates_owner_rows() {
+        let feats = [10.0f32, 11.0, 20.0, 21.0]; // 2 requests × feat_dim 2
+        let mut out = vec![0.0f32; 6]; // 3 slots
+        scatter_features(&feats, &[1, 0, 1], 2, &mut out);
+        assert_eq!(out, vec![20.0, 21.0, 10.0, 11.0, 20.0, 21.0]);
+    }
+}

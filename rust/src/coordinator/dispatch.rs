@@ -1,0 +1,202 @@
+//! Dispatcher and shard-worker loops.
+//!
+//! The front-end dispatcher owns batch assembly only — no engine, no ε.
+//! It drains the bounded request queue, fuses requests under the
+//! size/deadline policy, and hands each [`Batch`] to one of
+//! `server.workers` shard workers over per-shard bounded queues
+//! (round-robin on the batch id, so for a serial workload the
+//! request→shard routing — and therefore every response — is a pure
+//! function of `(die_seed, workers)`).
+//!
+//! Each shard worker constructs its own non-`Send` engine and its own
+//! independent ε source (a per-shard GRNG bank seeded from a SplitMix64
+//! split of `die_seed`), then runs: features once per batch → packed
+//! Monte-Carlo head passes with fresh ε per call → aggregate →
+//! defer/reply. This is the paper's parallelism in software: replicated
+//! in-word GRNG banks feed independent compute lanes with no shared RNG
+//! unit on a bus.
+
+use crate::bayes::aggregate_mc;
+use crate::config::Config;
+use crate::coordinator::batch::{effective_t, pack_images, plan_calls, scatter_features, Batch};
+use crate::coordinator::epsilon::EpsilonSource;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{InferRequest, InferResponse};
+use crate::runtime::{ArtifactSpec, InferenceEngine};
+use crate::util::threadpool::Bounded;
+use std::time::{Duration, Instant};
+
+/// Front-end loop: runs until the request queue closes, then closes every
+/// shard queue behind itself so the workers drain and exit.
+pub(crate) fn run_dispatcher(
+    requests: Bounded<InferRequest>,
+    shard_queues: Vec<Bounded<Batch>>,
+    max_batch: usize,
+    deadline: Duration,
+) {
+    let shards = shard_queues.len().max(1);
+    let mut next_batch_id: u64 = 0;
+    loop {
+        // Block for the first request (or shutdown).
+        let first = match requests.recv() {
+            Some(r) => r,
+            None => break,
+        };
+        let mut members = vec![first];
+        let mut closed = false;
+        // Fill up to max_batch until the deadline.
+        let cutoff = Instant::now() + deadline;
+        while members.len() < max_batch {
+            let now = Instant::now();
+            if now >= cutoff {
+                break;
+            }
+            match requests.recv_timeout(cutoff - now) {
+                Ok(Some(r)) => members.push(r),
+                Ok(None) => break, // deadline
+                Err(()) => {
+                    // Closed mid-assembly: ship what we have, then exit.
+                    closed = true;
+                    break;
+                }
+            }
+        }
+        next_batch_id += 1;
+        let target = ((next_batch_id - 1) % shards as u64) as usize;
+        let dead = shard_queues[target]
+            .send(Batch {
+                id: next_batch_id,
+                requests: members,
+            })
+            .is_err();
+        if dead || closed {
+            break;
+        }
+    }
+    for q in &shard_queues {
+        q.close();
+    }
+}
+
+/// Per-shard metadata resolved once from the engine's manifest.
+struct ShardPlan {
+    art_batch: usize,
+    pixels_per_img: usize,
+    classes: usize,
+    feat_spec: ArtifactSpec,
+    head_spec: ArtifactSpec,
+}
+
+/// Worker loop: owns this shard's engine and ε source for its lifetime.
+pub(crate) fn run_shard_worker(
+    shard: usize,
+    mut engine: Box<dyn InferenceEngine>,
+    mut source: Box<dyn EpsilonSource>,
+    batches: Bounded<Batch>,
+    metrics: Metrics,
+    cfg: Config,
+) {
+    let manifest = engine.manifest().clone();
+    let plan = ShardPlan {
+        art_batch: manifest.batch,
+        pixels_per_img: manifest.side * manifest.side,
+        classes: manifest.classes,
+        feat_spec: manifest.entry("features").expect("features entry").clone(),
+        head_spec: manifest.entry("head").expect("head entry").clone(),
+    };
+    while let Some(batch) = batches.recv() {
+        serve_batch(
+            shard,
+            engine.as_mut(),
+            source.as_mut(),
+            &batch,
+            &metrics,
+            &cfg,
+            &plan,
+        );
+        metrics.record_epsilon(shard, source.samples_drawn(), source.energy_j());
+    }
+}
+
+/// One fused batch: features once, then packed MC head passes with fresh ε
+/// per call, then aggregate/defer/reply.
+fn serve_batch(
+    shard: usize,
+    engine: &mut dyn InferenceEngine,
+    source: &mut dyn EpsilonSource,
+    batch: &Batch,
+    metrics: &Metrics,
+    cfg: &Config,
+    plan: &ShardPlan,
+) {
+    let reqs = &batch.requests;
+    let mc: Vec<usize> = reqs.iter().map(|r| r.mc_samples).collect();
+    let t = effective_t(&mc, cfg.model.mc_samples);
+
+    let images: Vec<&[f32]> = reqs.iter().map(|r| r.pixels.as_slice()).collect();
+    let packed = pack_images(&images, plan.art_batch, plan.pixels_per_img);
+
+    let exec_before = engine.executions();
+    let feats = match engine.run("features", &[(&packed, &plan.feat_spec.inputs[0].1)]) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("[bnn-cim shard {shard}] features execution failed: {e}");
+            return;
+        }
+    };
+
+    let feat_dim = feats.len() / plan.art_batch;
+    let mut eps1 = vec![0.0f32; plan.head_spec.input_len(1)];
+    let mut eps2 = vec![0.0f32; plan.head_spec.input_len(2)];
+    let mut packed_feats = vec![0.0f32; feats.len()];
+    let mut per_request: Vec<Vec<Vec<f64>>> = vec![Vec::with_capacity(t); reqs.len()];
+    for owners in plan_calls(reqs.len(), t, plan.art_batch) {
+        scatter_features(&feats, &owners, feat_dim, &mut packed_feats);
+        // Fresh ε for every call (each slot is an independent MC pass).
+        source.fill(&mut eps1);
+        source.fill(&mut eps2);
+        let probs = match engine.run(
+            "head",
+            &[
+                (&packed_feats, &plan.head_spec.inputs[0].1),
+                (&eps1, &plan.head_spec.inputs[1].1),
+                (&eps2, &plan.head_spec.inputs[2].1),
+            ],
+        ) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("[bnn-cim shard {shard}] head execution failed: {e}");
+                return;
+            }
+        };
+        for (slot, &req) in owners.iter().enumerate() {
+            per_request[req].push(
+                probs[slot * plan.classes..(slot + 1) * plan.classes]
+                    .iter()
+                    .map(|&v| v as f64)
+                    .collect(),
+            );
+        }
+    }
+    metrics.record_batch(
+        shard,
+        reqs.len(),
+        plan.art_batch,
+        t as u64,
+        engine.executions() - exec_before,
+    );
+
+    for (req, samples) in reqs.iter().zip(per_request.iter()) {
+        let pred = aggregate_mc(samples);
+        let deferred = pred.entropy > cfg.model.defer_threshold;
+        let latency = req.enqueued.elapsed();
+        metrics.record_response(latency, deferred);
+        let _ = req.reply.send(InferResponse {
+            id: req.id,
+            pred,
+            deferred,
+            latency,
+            batch_id: batch.id,
+        });
+    }
+}

@@ -15,9 +15,14 @@
 //!   for ablation serving (e.g. Wallace-fed BNN).
 
 use crate::config::ChipConfig;
+use crate::coordinator::server::SourceFactory;
 use crate::grng::baselines::GaussianSource;
 use crate::grng::GrngBank;
-use crate::util::rng::{Philox4x32, Rng64};
+use crate::util::rng::Philox4x32;
+use std::sync::Arc;
+
+// Per-shard seed derivation lives next to the bank it shards.
+pub use crate::grng::bank::{shard_chip, shard_die_seed};
 
 /// Anything that can fill ε buffers, one MC pass at a time.
 pub trait EpsilonSource: Send {
@@ -87,6 +92,21 @@ impl GrngBankSource {
         (self.offset_cal.iter().map(|x| x * x).sum::<f64>() / self.offset_cal.len() as f64)
             .sqrt()
     }
+
+    /// The bank for shard `shard`: an independent simulated die whose
+    /// seed is a [`shard_die_seed`] split of `chip.die_seed`.
+    pub fn for_shard(chip: &ChipConfig, shard: usize) -> Self {
+        Self::new(&shard_chip(chip, shard))
+    }
+
+    /// Factory handing each shard worker its own bank (the coordinator's
+    /// default ε sourcing).
+    pub fn shard_factory(chip: &ChipConfig) -> SourceFactory {
+        let chip = chip.clone();
+        Arc::new(move |shard| {
+            Box::new(GrngBankSource::for_shard(&chip, shard)) as Box<dyn EpsilonSource>
+        })
+    }
 }
 
 impl EpsilonSource for GrngBankSource {
@@ -134,6 +154,14 @@ impl PhiloxSource {
             counter: 0,
             drawn: 0,
         }
+    }
+
+    /// Factory giving each shard an independent key split of `key`
+    /// (shard 0 keeps `key` itself, mirroring [`shard_die_seed`]).
+    pub fn shard_factory(key: u64) -> SourceFactory {
+        Arc::new(move |shard| {
+            Box::new(PhiloxSource::new(shard_die_seed(key, shard))) as Box<dyn EpsilonSource>
+        })
     }
 }
 
@@ -256,6 +284,41 @@ mod tests {
         a.fill(&mut ba);
         b.fill(&mut bb);
         assert_eq!(ba, bb);
+    }
+
+    #[test]
+    fn shard_seeds_stable_and_distinct() {
+        assert_eq!(shard_die_seed(42, 0), 42, "shard 0 must keep the die seed");
+        let seeds: Vec<u64> = (0..8).map(|s| shard_die_seed(42, s)).collect();
+        let again: Vec<u64> = (0..8).map(|s| shard_die_seed(42, s)).collect();
+        assert_eq!(seeds, again, "derivation must be deterministic");
+        for i in 0..seeds.len() {
+            for j in (i + 1)..seeds.len() {
+                assert_ne!(seeds[i], seeds[j], "shards {i}/{j} collided");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_banks_draw_distinct_streams() {
+        let chip = ChipConfig::default();
+        let mut streams = Vec::new();
+        for shard in 0..4 {
+            let mut src = GrngBankSource::for_shard(&chip, shard);
+            let mut buf = vec![0.0f32; 128];
+            src.fill(&mut buf);
+            streams.push(buf);
+        }
+        for i in 0..streams.len() {
+            for j in (i + 1)..streams.len() {
+                assert_ne!(streams[i], streams[j], "shards {i}/{j} correlated");
+            }
+        }
+        // Shard 0 is bit-identical to the unsharded source.
+        let mut base = GrngBankSource::new(&chip);
+        let mut buf = vec![0.0f32; 128];
+        base.fill(&mut buf);
+        assert_eq!(buf, streams[0]);
     }
 
     #[test]

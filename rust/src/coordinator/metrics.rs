@@ -1,7 +1,24 @@
-//! Serving metrics registry (lock-protected, shared with the worker).
+//! Serving metrics registry (lock-protected, shared between the
+//! dispatcher and every shard worker). Aggregates stay global so existing
+//! consumers keep working; per-shard counters ride alongside so scaling
+//! behavior (and shard imbalance) is visible per engine.
 
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// Per-shard counters surfaced in [`MetricsSnapshot::per_shard`].
+#[derive(Clone, Debug, Default)]
+pub struct ShardSnapshot {
+    pub shard: usize,
+    /// Requests served by this shard (sum of its batch fills).
+    pub requests: u64,
+    pub batches: u64,
+    pub mc_passes: u64,
+    /// Engine executions (PJRT calls, or sim-engine calls).
+    pub engine_executions: u64,
+    pub epsilon_samples: u64,
+    pub epsilon_energy_j: f64,
+}
 
 #[derive(Clone, Debug, Default)]
 pub struct MetricsSnapshot {
@@ -10,6 +27,8 @@ pub struct MetricsSnapshot {
     pub requests_deferred: u64,
     pub batches: u64,
     pub mc_passes: u64,
+    /// Engine executions across all shards (historical name kept: the
+    /// default backend is PJRT).
     pub pjrt_executions: u64,
     pub epsilon_samples: u64,
     pub epsilon_energy_j: f64,
@@ -19,11 +38,12 @@ pub struct MetricsSnapshot {
     pub mean_batch_fill: f64,
     pub throughput_rps: f64,
     pub wall_s: f64,
+    pub per_shard: Vec<ShardSnapshot>,
 }
 
 impl MetricsSnapshot {
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "requests={} rejected={} deferred={} batches={} (fill {:.2})\n\
              mc_passes={} pjrt_exec={} eps_samples={} eps_energy={:.3} µJ\n\
              latency p50={:.2} ms p95={:.2} ms max={:.2} ms | throughput={:.1} req/s",
@@ -40,7 +60,21 @@ impl MetricsSnapshot {
             self.latency_p95_ms,
             self.latency_max_ms,
             self.throughput_rps,
-        )
+        );
+        if self.per_shard.len() > 1 {
+            for s in &self.per_shard {
+                out.push_str(&format!(
+                    "\n  shard {}: requests={} batches={} exec={} eps={} ({:.3} µJ)",
+                    s.shard,
+                    s.requests,
+                    s.batches,
+                    s.engine_executions,
+                    s.epsilon_samples,
+                    s.epsilon_energy_j * 1e6,
+                ));
+            }
+        }
+        out
     }
 }
 
@@ -50,41 +84,43 @@ pub struct Metrics {
     inner: Arc<Mutex<Inner>>,
 }
 
+#[derive(Default)]
+struct ShardInner {
+    requests: u64,
+    batches: u64,
+    mc_passes: u64,
+    engine_executions: u64,
+    epsilon_samples: u64,
+    epsilon_energy_j: f64,
+}
+
 struct Inner {
     requests_total: u64,
     requests_rejected: u64,
     requests_deferred: u64,
-    batches: u64,
     batch_fill_sum: f64,
-    mc_passes: u64,
-    pjrt_executions: u64,
-    epsilon_samples: u64,
-    epsilon_energy_j: f64,
     latencies_ms: Vec<f64>,
     started: std::time::Instant,
+    shards: Vec<ShardInner>,
 }
 
 impl Default for Metrics {
     fn default() -> Self {
-        Self::new()
+        Self::new(1)
     }
 }
 
 impl Metrics {
-    pub fn new() -> Self {
+    pub fn new(shards: usize) -> Self {
         Self {
             inner: Arc::new(Mutex::new(Inner {
                 requests_total: 0,
                 requests_rejected: 0,
                 requests_deferred: 0,
-                batches: 0,
                 batch_fill_sum: 0.0,
-                mc_passes: 0,
-                pjrt_executions: 0,
-                epsilon_samples: 0,
-                epsilon_energy_j: 0.0,
                 latencies_ms: Vec::new(),
                 started: std::time::Instant::now(),
+                shards: (0..shards.max(1)).map(|_| ShardInner::default()).collect(),
             })),
         }
     }
@@ -93,12 +129,21 @@ impl Metrics {
         self.inner.lock().unwrap().requests_rejected += 1;
     }
 
-    pub fn record_batch(&self, fill: usize, capacity: usize, mc_passes: u64, pjrt: u64) {
+    pub fn record_batch(
+        &self,
+        shard: usize,
+        fill: usize,
+        capacity: usize,
+        mc_passes: u64,
+        engine_executions: u64,
+    ) {
         let mut g = self.inner.lock().unwrap();
-        g.batches += 1;
         g.batch_fill_sum += fill as f64 / capacity.max(1) as f64;
-        g.mc_passes += mc_passes;
-        g.pjrt_executions += pjrt;
+        let s = &mut g.shards[shard];
+        s.requests += fill as u64;
+        s.batches += 1;
+        s.mc_passes += mc_passes;
+        s.engine_executions += engine_executions;
     }
 
     pub fn record_response(&self, latency: Duration, deferred: bool) {
@@ -112,10 +157,13 @@ impl Metrics {
         }
     }
 
-    pub fn record_epsilon(&self, samples: u64, energy_j: f64) {
+    /// Absolute ε counters for one shard (sources report totals, not
+    /// deltas); the global snapshot sums across shards.
+    pub fn record_epsilon(&self, shard: usize, samples: u64, energy_j: f64) {
         let mut g = self.inner.lock().unwrap();
-        g.epsilon_samples = samples;
-        g.epsilon_energy_j = energy_j;
+        let s = &mut g.shards[shard];
+        s.epsilon_samples = samples;
+        s.epsilon_energy_j = energy_j;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -130,20 +178,35 @@ impl Metrics {
             lat[idx]
         };
         let wall = g.started.elapsed().as_secs_f64();
+        let per_shard: Vec<ShardSnapshot> = g
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| ShardSnapshot {
+                shard: i,
+                requests: s.requests,
+                batches: s.batches,
+                mc_passes: s.mc_passes,
+                engine_executions: s.engine_executions,
+                epsilon_samples: s.epsilon_samples,
+                epsilon_energy_j: s.epsilon_energy_j,
+            })
+            .collect();
+        let batches: u64 = per_shard.iter().map(|s| s.batches).sum();
         MetricsSnapshot {
             requests_total: g.requests_total,
             requests_rejected: g.requests_rejected,
             requests_deferred: g.requests_deferred,
-            batches: g.batches,
-            mc_passes: g.mc_passes,
-            pjrt_executions: g.pjrt_executions,
-            epsilon_samples: g.epsilon_samples,
-            epsilon_energy_j: g.epsilon_energy_j,
+            batches,
+            mc_passes: per_shard.iter().map(|s| s.mc_passes).sum(),
+            pjrt_executions: per_shard.iter().map(|s| s.engine_executions).sum(),
+            epsilon_samples: per_shard.iter().map(|s| s.epsilon_samples).sum(),
+            epsilon_energy_j: per_shard.iter().map(|s| s.epsilon_energy_j).sum(),
             latency_p50_ms: pct(0.50),
             latency_p95_ms: pct(0.95),
             latency_max_ms: lat.last().copied().unwrap_or(0.0),
-            mean_batch_fill: if g.batches > 0 {
-                g.batch_fill_sum / g.batches as f64
+            mean_batch_fill: if batches > 0 {
+                g.batch_fill_sum / batches as f64
             } else {
                 0.0
             },
@@ -153,6 +216,7 @@ impl Metrics {
                 0.0
             },
             wall_s: wall,
+            per_shard,
         }
     }
 }
@@ -163,21 +227,42 @@ mod tests {
 
     #[test]
     fn metrics_accumulate_and_snapshot() {
-        let m = Metrics::new();
-        m.record_batch(6, 8, 32, 33);
-        m.record_batch(8, 8, 32, 33);
+        let m = Metrics::new(2);
+        m.record_batch(0, 6, 8, 32, 33);
+        m.record_batch(1, 8, 8, 32, 33);
         for i in 0..10 {
             m.record_response(Duration::from_millis(10 + i), i % 3 == 0);
         }
         m.record_reject();
-        m.record_epsilon(1000, 3.6e-7);
+        m.record_epsilon(0, 600, 2.0e-7);
+        m.record_epsilon(1, 400, 1.6e-7);
         let s = m.snapshot();
         assert_eq!(s.requests_total, 10);
         assert_eq!(s.requests_rejected, 1);
         assert_eq!(s.requests_deferred, 4);
         assert_eq!(s.batches, 2);
+        assert_eq!(s.mc_passes, 64);
+        assert_eq!(s.pjrt_executions, 66);
+        assert_eq!(s.epsilon_samples, 1000);
+        assert!((s.epsilon_energy_j - 3.6e-7).abs() < 1e-15);
         assert!((s.mean_batch_fill - 0.875).abs() < 1e-9);
         assert!(s.latency_p50_ms >= 10.0 && s.latency_p95_ms <= 20.0);
         assert!(s.render().contains("requests=10"));
+        // Per-shard counters line up with the aggregates.
+        assert_eq!(s.per_shard.len(), 2);
+        assert_eq!(s.per_shard[0].requests, 6);
+        assert_eq!(s.per_shard[1].requests, 8);
+        assert_eq!(s.per_shard[0].epsilon_samples, 600);
+        assert!(s.render().contains("shard 1"));
+    }
+
+    #[test]
+    fn absolute_epsilon_counters_overwrite_not_add() {
+        let m = Metrics::new(1);
+        m.record_epsilon(0, 100, 1e-8);
+        m.record_epsilon(0, 250, 3e-8);
+        let s = m.snapshot();
+        assert_eq!(s.epsilon_samples, 250);
+        assert!((s.epsilon_energy_j - 3e-8).abs() < 1e-18);
     }
 }

@@ -1,13 +1,26 @@
-//! L3 coordinator: the serving engine around the PJRT runtime — request
-//! router/batcher, Monte-Carlo sample scheduler, ε sourcing from the
-//! in-word GRNG bank, deferral policy, and metrics.
+//! L3 coordinator: the serving engine around the runtime — a front-end
+//! dispatcher (request router/batcher) feeding a pool of shard workers,
+//! each owning its own engine and its own per-shard in-word GRNG bank;
+//! Monte-Carlo sample scheduling, deferral policy, and per-shard metrics.
+//!
+//! Module layout:
+//! - [`batch`] — pure batch-assembly / slot-packing cores (no I/O).
+//! - [`dispatch`] — the dispatcher and shard-worker loops.
+//! - [`server`] — the [`Coordinator`] handle (start/submit/shutdown).
+//! - [`epsilon`] — ε sources, including per-shard seed derivation.
+//! - [`metrics`] — global + per-shard counters.
 
+pub mod batch;
+mod dispatch;
 pub mod epsilon;
 pub mod metrics;
 pub mod request;
 pub mod server;
 
-pub use epsilon::{BaselineSource, EpsilonSource, GrngBankSource, PhiloxSource};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use batch::Batch;
+pub use epsilon::{
+    shard_die_seed, BaselineSource, EpsilonSource, GrngBankSource, PhiloxSource,
+};
+pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
 pub use request::{InferRequest, InferResponse, RejectReason};
-pub use server::Coordinator;
+pub use server::{Coordinator, EngineFactory, SourceFactory};

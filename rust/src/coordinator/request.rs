@@ -35,6 +35,10 @@ pub struct InferResponse {
 pub enum RejectReason {
     QueueFull,
     WrongShape { expected: usize, got: usize },
+    /// `mc_samples` above `server.max_mc_samples` — rejected up front so
+    /// one greedy request cannot inflate the MC pass count of the whole
+    /// fused batch.
+    McSamplesTooLarge { max: usize, got: usize },
     ShuttingDown,
     Timeout,
 }
@@ -45,6 +49,9 @@ impl std::fmt::Display for RejectReason {
             RejectReason::QueueFull => write!(f, "queue full (backpressure)"),
             RejectReason::WrongShape { expected, got } => {
                 write!(f, "wrong input shape: expected {expected} pixels, got {got}")
+            }
+            RejectReason::McSamplesTooLarge { max, got } => {
+                write!(f, "mc_samples {got} exceeds server.max_mc_samples {max}")
             }
             RejectReason::ShuttingDown => write!(f, "server shutting down"),
             RejectReason::Timeout => write!(f, "request timed out"),

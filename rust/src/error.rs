@@ -1,24 +1,45 @@
-//! Library-wide error type.
-
-use thiserror::Error;
+//! Library-wide error type (hand-rolled — `thiserror` is unavailable in
+//! the offline build environment, like every other external crate).
 
 /// Unified error for the bnn-cim library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("configuration error: {0}")]
     Config(String),
-    #[error("artifact error: {0}")]
     Artifact(String),
-    #[error("runtime (PJRT) error: {0}")]
     Runtime(String),
-    #[error("model error: {0}")]
     Model(String),
-    #[error("coordinator error: {0}")]
     Coordinator(String),
-    #[error("calibration error: {0}")]
     Calibration(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(s) => write!(f, "configuration error: {s}"),
+            Error::Artifact(s) => write!(f, "artifact error: {s}"),
+            Error::Runtime(s) => write!(f, "runtime error: {s}"),
+            Error::Model(s) => write!(f, "model error: {s}"),
+            Error::Coordinator(s) => write!(f, "coordinator error: {s}"),
+            Error::Calibration(s) => write!(f, "calibration error: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;

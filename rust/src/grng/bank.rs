@@ -12,7 +12,37 @@
 use crate::config::{ChipConfig, GrngConfig};
 use crate::grng::circuit::GrngCell;
 use crate::grng::mismatch::DieVariation;
-use crate::util::rng::{Rng64, SplitMix64};
+use crate::util::rng::SplitMix64;
+
+/// Derive the die seed for shard `shard` of a sharded serving pool.
+///
+/// Shard 0 keeps `die_seed` unchanged, so a single-shard pool draws the
+/// exact ε stream of an unsharded bank (bit-for-bit). Higher shards get
+/// independent SplitMix64-split streams — the software mirror of
+/// replicating the in-word GRNG bank per compute lane (cf. VIBNN's
+/// parallel RNG banks): statistically independent ε, reproducible for a
+/// fixed `(die_seed, workers)` pair.
+pub fn shard_die_seed(die_seed: u64, shard: usize) -> u64 {
+    if shard == 0 {
+        return die_seed;
+    }
+    let mut splitter = SplitMix64::new(die_seed ^ 0xD1E5_EED5_0F5A_A5F1);
+    let mut seed = die_seed;
+    for _ in 0..shard {
+        seed = splitter.split();
+    }
+    seed
+}
+
+/// Chip config for shard `shard` of a serving pool: the same die family
+/// with its seed split by [`shard_die_seed`]. The single home of the
+/// reseed idiom, shared by [`GrngBank::for_shard`] and the coordinator's
+/// `GrngBankSource::for_shard`.
+pub fn shard_chip(chip: &ChipConfig, shard: usize) -> ChipConfig {
+    let mut chip = chip.clone();
+    chip.die_seed = shard_die_seed(chip.die_seed, shard);
+    chip
+}
 
 /// Bank of GRNG cells matching a tile's σε array layout.
 pub struct GrngBank {
@@ -51,6 +81,12 @@ impl GrngBank {
             chip.die_seed,
         );
         Self::new(&chip.grng, &die, chip.die_seed)
+    }
+
+    /// Bank for shard `shard` of a serving pool: an independent simulated
+    /// die seeded by [`shard_die_seed`]. Shard 0 is the chip's own die.
+    pub fn for_shard(chip: &ChipConfig, shard: usize) -> Self {
+        Self::for_chip(&shard_chip(chip, shard))
     }
 
     pub fn len(&self) -> usize {
@@ -176,6 +212,20 @@ mod tests {
         let offs = bank.true_offsets();
         let s = Summary::from_slice(&offs);
         assert!(s.std() > 0.05, "mismatch must spread offsets, σ={}", s.std());
+    }
+
+    #[test]
+    fn shard_banks_are_independent_dies() {
+        let chip = ChipConfig::default();
+        assert_eq!(shard_die_seed(chip.die_seed, 0), chip.die_seed);
+        let mut a = GrngBank::for_shard(&chip, 0);
+        let mut b = GrngBank::for_chip(&chip);
+        assert_eq!(a.epsilon_matrix(), b.epsilon_matrix());
+        let mut c = GrngBank::for_shard(&chip, 1);
+        let mut d = GrngBank::for_shard(&chip, 2);
+        let ec = c.epsilon_matrix();
+        assert_ne!(ec, d.epsilon_matrix());
+        assert_ne!(ec, a.epsilon_matrix());
     }
 
     #[test]

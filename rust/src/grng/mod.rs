@@ -9,7 +9,7 @@ pub mod mismatch;
 pub mod physics;
 pub mod quality;
 
-pub use bank::GrngBank;
+pub use bank::{shard_chip, shard_die_seed, GrngBank};
 pub use circuit::{CellParams, GrngCell, GrngSample};
 pub use mismatch::DieVariation;
 pub use quality::QualityReport;

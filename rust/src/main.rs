@@ -121,6 +121,8 @@ fn commands() -> Vec<Command> {
                 opt("duration", "seconds of load", Some("10")),
                 opt("rate", "offered requests/second", Some("50")),
                 opt("mc", "MC samples per request", Some("8")),
+                opt("workers", "shard workers (each owns an engine + GRNG bank)", Some("1")),
+                flag("sim", "serve the pure-Rust sim engine (no artifacts needed)"),
             ],
         },
     ]
@@ -285,7 +287,17 @@ fn cmd_serve(args: &bnn_cim::util::cli::Args) -> CmdResult {
     let duration = Duration::from_secs_f64(args.get_f64("duration", 10.0)?);
     let rate = args.get_f64("rate", 50.0)?;
     cfg.model.mc_samples = args.get_usize("mc", 8)?;
-    let coord = Coordinator::start(cfg.clone())?;
+    cfg.server.workers = args.get_usize("workers", cfg.server.workers)?;
+    let coord = if args.has_flag("sim") {
+        Coordinator::start_sim(cfg.clone())?
+    } else {
+        Coordinator::start(cfg.clone())?
+    };
+    println!(
+        "serving on {} shard worker(s), backend = {}",
+        cfg.server.workers,
+        if args.has_flag("sim") { "sim" } else { "pjrt" }
+    );
     let gen = SyntheticPerson::new(cfg.model.image_side, 321);
     let period = Duration::from_secs_f64(1.0 / rate.max(0.1));
     let t0 = Instant::now();

@@ -114,3 +114,21 @@ impl Engine {
             .map_err(|e| Error::Runtime(format!("to_vec '{entry}': {e}")))
     }
 }
+
+impl super::InferenceEngine for Engine {
+    fn manifest(&self) -> &Manifest {
+        Engine::manifest(self)
+    }
+
+    fn run(&mut self, entry: &str, inputs: &[(&[f32], &Vec<usize>)]) -> Result<Vec<f32>> {
+        Engine::run(self, entry, inputs)
+    }
+
+    fn executions(&self) -> u64 {
+        self.executions
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

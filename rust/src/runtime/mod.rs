@@ -1,17 +1,52 @@
-//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them
-//! on the request path (Python never runs at serving time).
+//! Execution engines behind the serving coordinator.
 //!
-//! Pipeline: `HloModuleProto::from_text_file` → `XlaComputation` →
-//! `PjRtClient::compile` → `PjRtLoadedExecutable::execute`. HLO *text* is
-//! the interchange format (jax ≥ 0.5 protos use 64-bit instruction ids
-//! that xla_extension 0.5.1 rejects; the text parser reassigns ids — see
-//! /opt/xla-example/README.md and python/compile/aot.py).
+//! Two backends implement [`InferenceEngine`]:
+//!
+//! - [`Engine`] (feature `pjrt`) — the real PJRT runtime: loads
+//!   AOT-compiled HLO-text artifacts and executes them on the request
+//!   path (Python never runs at serving time). Pipeline:
+//!   `HloModuleProto::from_text_file` → `XlaComputation` →
+//!   `PjRtClient::compile` → `PjRtLoadedExecutable::execute`. HLO *text*
+//!   is the interchange format (jax ≥ 0.5 protos use 64-bit instruction
+//!   ids that xla_extension 0.5.1 rejects; the text parser reassigns ids
+//!   — see /opt/xla-example/README.md and python/compile/aot.py).
+//! - [`SimEngine`] — a deterministic pure-Rust stand-in with the same
+//!   entry-point contract (`features` / `head` / `full`). It needs no
+//!   artifacts and no toolchain, so the sharded coordinator, its tests,
+//!   and `benches/sharded_serving.rs` exercise the full batching/ε path
+//!   in every build.
+//!
+//! Engines are *not* required to be `Send`: the coordinator constructs
+//! one engine inside each shard-worker thread (PJRT handles are not
+//! `Send`-safe by contract) and they never cross threads.
 
 mod artifact;
+#[cfg(feature = "pjrt")]
 mod executor;
+mod sim;
 
 pub use artifact::{ArtifactSpec, Manifest};
+#[cfg(feature = "pjrt")]
 pub use executor::{Engine, LoadedEntry};
+pub use sim::SimEngine;
+
+use crate::error::Result;
+
+/// A loaded inference backend: shape metadata plus entry-point execution.
+pub trait InferenceEngine {
+    /// Shape metadata for the loaded entry points.
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute an entry point with f32 inputs `(data, shape)`; returns the
+    /// first output flattened to f32 (all our artifacts return 1-tuples).
+    fn run(&mut self, entry: &str, inputs: &[(&[f32], &Vec<usize>)]) -> Result<Vec<f32>>;
+
+    /// Executions performed so far (metrics).
+    fn executions(&self) -> u64;
+
+    /// Backend tag for logs/metrics.
+    fn name(&self) -> &'static str;
+}
 
 #[cfg(test)]
 mod tests {
@@ -38,6 +73,7 @@ mod tests {
         assert_eq!(head.outputs[0].1[1], m.classes);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn engine_executes_head_artifact() {
         if !artifacts_ready() {

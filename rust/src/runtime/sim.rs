@@ -1,0 +1,308 @@
+//! Deterministic pure-Rust inference backend with the PJRT engine's
+//! entry-point contract (`features` / `head` / `full`).
+//!
+//! The model is a fixed random two-layer network: a tanh feature
+//! projection and a Bayesian-style linear head whose weights are
+//! perturbed by the ε inputs (`w = μ + σ·ε`), so the coordinator's
+//! Monte-Carlo loop exercises exactly the same dataflow as the compiled
+//! artifacts — features once per batch, fresh ε per head pass. Weights
+//! derive from a seed alone, so two `SimEngine`s built with the same
+//! parameters are bit-identical replicas: the shard pool shares "model
+//! weights" across workers just like replicated PJRT engines do.
+
+use super::artifact::{ArtifactSpec, Manifest};
+use super::InferenceEngine;
+use crate::config::Config;
+use crate::error::{Error, Result};
+use crate::util::rng::{Rng64, SplitMix64};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Weight seed shared by every shard of a simulated deployment.
+const SIM_WEIGHT_SEED: u64 = 0x51E0_C1A5_B00C_A571;
+
+/// Pure-Rust stand-in engine (no artifacts, no PJRT toolchain).
+pub struct SimEngine {
+    manifest: Manifest,
+    /// Feature projection, row-major `[feature_dim][pixels]`.
+    w1: Vec<f32>,
+    /// Head μ weights, row-major `[feature_dim][classes]`.
+    wmu: Vec<f32>,
+    /// Head μ bias, `[classes]`.
+    bmu: Vec<f32>,
+    /// Shared σ scale applied to the ε inputs.
+    sigma: f32,
+    executions: u64,
+}
+
+impl SimEngine {
+    /// Feature width used by [`SimEngine::from_config`].
+    pub const DEFAULT_FEATURE_DIM: usize = 32;
+
+    pub fn new(batch: usize, side: usize, feature_dim: usize, classes: usize, seed: u64) -> Self {
+        assert!(batch > 0 && side > 0 && feature_dim > 0 && classes > 0);
+        let pixels = side * side;
+        let mut rng = SplitMix64::new(seed);
+        let s1 = (2.0 / pixels as f64).sqrt();
+        let w1: Vec<f32> = (0..feature_dim * pixels)
+            .map(|_| ((rng.next_f64() - 0.5) * 2.0 * s1) as f32)
+            .collect();
+        let s2 = (2.0 / feature_dim as f64).sqrt();
+        let wmu: Vec<f32> = (0..feature_dim * classes)
+            .map(|_| ((rng.next_f64() - 0.5) * 2.0 * s2) as f32)
+            .collect();
+        let bmu: Vec<f32> = (0..classes)
+            .map(|_| ((rng.next_f64() - 0.5) * 0.2) as f32)
+            .collect();
+
+        let spec = |name: &str,
+                    inputs: Vec<(String, Vec<usize>)>,
+                    outputs: Vec<(String, Vec<usize>)>| ArtifactSpec {
+            file: PathBuf::from(format!("sim://{name}")),
+            inputs,
+            outputs,
+        };
+        let mut entry_points = BTreeMap::new();
+        entry_points.insert(
+            "features".to_string(),
+            spec(
+                "features",
+                vec![("pixels".to_string(), vec![batch, pixels])],
+                vec![("features".to_string(), vec![batch, feature_dim])],
+            ),
+        );
+        let eps_inputs = vec![
+            ("eps_w".to_string(), vec![feature_dim, classes]),
+            ("eps_b".to_string(), vec![classes]),
+        ];
+        entry_points.insert(
+            "head".to_string(),
+            spec(
+                "head",
+                {
+                    let mut v = vec![("features".to_string(), vec![batch, feature_dim])];
+                    v.extend(eps_inputs.clone());
+                    v
+                },
+                vec![("probs".to_string(), vec![batch, classes])],
+            ),
+        );
+        entry_points.insert(
+            "full".to_string(),
+            spec(
+                "full",
+                {
+                    let mut v = vec![("pixels".to_string(), vec![batch, pixels])];
+                    v.extend(eps_inputs);
+                    v
+                },
+                vec![("probs".to_string(), vec![batch, classes])],
+            ),
+        );
+        let manifest = Manifest {
+            batch,
+            side,
+            feature_dim,
+            classes,
+            entry_points,
+            dir: PathBuf::from("sim://"),
+        };
+        Self {
+            manifest,
+            w1,
+            wmu,
+            bmu,
+            sigma: 0.3,
+            executions: 0,
+        }
+    }
+
+    /// Engine matching a serving [`Config`]: the artifact batch is the
+    /// server's `max_batch` and input/class shapes come from the model
+    /// config. All shards share [`SIM_WEIGHT_SEED`].
+    pub fn from_config(cfg: &Config) -> Self {
+        Self::new(
+            cfg.server.max_batch.max(1),
+            cfg.model.image_side,
+            Self::DEFAULT_FEATURE_DIM,
+            cfg.model.classes,
+            SIM_WEIGHT_SEED,
+        )
+    }
+
+    fn run_features(&self, images: &[f32]) -> Vec<f32> {
+        let b = self.manifest.batch;
+        let p = self.manifest.side * self.manifest.side;
+        let fdim = self.manifest.feature_dim;
+        let mut out = vec![0.0f32; b * fdim];
+        for bi in 0..b {
+            let img = &images[bi * p..(bi + 1) * p];
+            for fi in 0..fdim {
+                let row = &self.w1[fi * p..(fi + 1) * p];
+                let mut acc = 0.0f32;
+                for (w, x) in row.iter().zip(img.iter()) {
+                    acc += w * x;
+                }
+                out[bi * fdim + fi] = acc.tanh();
+            }
+        }
+        out
+    }
+
+    fn run_head(&self, feats: &[f32], eps_w: &[f32], eps_b: &[f32]) -> Vec<f32> {
+        let b = self.manifest.batch;
+        let c = self.manifest.classes;
+        let fdim = self.manifest.feature_dim;
+        let mut out = vec![0.0f32; b * c];
+        let mut logits = vec![0.0f32; c];
+        for bi in 0..b {
+            let fr = &feats[bi * fdim..(bi + 1) * fdim];
+            for (ci, l) in logits.iter_mut().enumerate() {
+                let mut acc = self.bmu[ci] + self.sigma * eps_b[ci];
+                for (fi, &fv) in fr.iter().enumerate() {
+                    acc += fv * (self.wmu[fi * c + ci] + self.sigma * eps_w[fi * c + ci]);
+                }
+                *l = acc;
+            }
+            let max = logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+            let mut sum = 0.0f32;
+            for l in logits.iter_mut() {
+                *l = (*l - max).exp();
+                sum += *l;
+            }
+            for (ci, &l) in logits.iter().enumerate() {
+                out[bi * c + ci] = l / sum;
+            }
+        }
+        out
+    }
+}
+
+impl InferenceEngine for SimEngine {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn run(&mut self, entry: &str, inputs: &[(&[f32], &Vec<usize>)]) -> Result<Vec<f32>> {
+        let spec = self.manifest.entry(entry)?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "entry '{entry}' expects {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (data, _shape)) in inputs.iter().enumerate() {
+            let want: usize = spec.inputs[i].1.iter().product();
+            if data.len() != want {
+                return Err(Error::Runtime(format!(
+                    "entry '{entry}' input {i} ('{}') expects {} elements, got {}",
+                    spec.inputs[i].0,
+                    want,
+                    data.len()
+                )));
+            }
+        }
+        let out = match entry {
+            "features" => self.run_features(inputs[0].0),
+            "head" => self.run_head(inputs[0].0, inputs[1].0, inputs[2].0),
+            "full" => {
+                let feats = self.run_features(inputs[0].0);
+                self.run_head(&feats, inputs[1].0, inputs[2].0)
+            }
+            other => return Err(Error::Runtime(format!("unknown entry '{other}'"))),
+        };
+        self.executions += 1;
+        Ok(out)
+    }
+
+    fn executions(&self) -> u64 {
+        self.executions
+    }
+
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SimEngine {
+        SimEngine::new(4, 8, 6, 3, 99)
+    }
+
+    fn run_head_of(engine: &mut SimEngine, feats: &[f32], e1: f32, e2: f32) -> Vec<f32> {
+        let spec = engine.manifest().entry("head").unwrap().clone();
+        let eps1 = vec![e1; spec.input_len(1)];
+        let eps2 = vec![e2; spec.input_len(2)];
+        engine
+            .run(
+                "head",
+                &[
+                    (feats, &spec.inputs[0].1),
+                    (&eps1, &spec.inputs[1].1),
+                    (&eps2, &spec.inputs[2].1),
+                ],
+            )
+            .unwrap()
+    }
+
+    #[test]
+    fn manifest_contract_matches_artifacts() {
+        let e = tiny();
+        let m = e.manifest();
+        assert_eq!(m.batch, 4);
+        assert_eq!(m.classes, 3);
+        for ep in ["features", "head", "full"] {
+            assert!(m.entry_points.contains_key(ep), "missing {ep}");
+        }
+        let head = m.entry("head").unwrap();
+        assert_eq!(head.inputs.len(), 3);
+        assert_eq!(head.outputs[0].1[1], m.classes);
+    }
+
+    #[test]
+    fn probs_are_normalized_and_eps_sensitive() {
+        let mut e = tiny();
+        let m = e.manifest().clone();
+        let images = vec![0.25f32; m.batch * m.side * m.side];
+        let fspec = m.entry("features").unwrap().clone();
+        let feats = e
+            .run("features", &[(&images, &fspec.inputs[0].1)])
+            .unwrap();
+        assert_eq!(feats.len(), m.batch * m.feature_dim);
+        let p0 = run_head_of(&mut e, &feats, 0.0, 0.0);
+        for row in p0.chunks(m.classes) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "softmax row sums to {sum}");
+        }
+        // ε perturbs the head (σ > 0): that is the Bayesian dataflow.
+        let p1 = run_head_of(&mut e, &feats, 1.0, -1.0);
+        assert_ne!(p0, p1);
+        assert_eq!(e.executions(), 3);
+    }
+
+    #[test]
+    fn same_seed_is_bit_identical_across_instances() {
+        let mut a = tiny();
+        let mut b = tiny();
+        let m = a.manifest().clone();
+        let images = vec![0.5f32; m.batch * m.side * m.side];
+        let fspec = m.entry("features").unwrap().clone();
+        let fa = a.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
+        let fb = b.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
+        assert_eq!(fa, fb);
+        assert_eq!(run_head_of(&mut a, &fa, 0.5, 0.5), run_head_of(&mut b, &fb, 0.5, 0.5));
+    }
+
+    #[test]
+    fn rejects_wrong_input_shapes() {
+        let mut e = tiny();
+        let fspec = e.manifest().entry("features").unwrap().clone();
+        let short = vec![0.0f32; 3];
+        assert!(e.run("features", &[(&short, &fspec.inputs[0].1)]).is_err());
+        assert!(e.run("nope", &[]).is_err());
+    }
+}

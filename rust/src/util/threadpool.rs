@@ -1,6 +1,8 @@
 //! Work-stealing-free, fixed-size thread pool plus a `scope`-style parallel
-//! map. Tokio is unavailable offline; the coordinator's event loop and the
-//! Monte-Carlo sweeps use these primitives (std threads + channels).
+//! map. Tokio is unavailable offline; the Monte-Carlo sweeps use these
+//! primitives (std threads + channels), and the sharded coordinator is
+//! built on [`Bounded`]: one request queue in front of the dispatcher and
+//! one small batch queue per shard worker.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -261,6 +263,12 @@ impl<T> Bounded<T> {
         self.len() == 0
     }
 
+    /// True once [`Bounded::close`] has been called (queued items may
+    /// still be draining via `recv`).
+    pub fn is_closed(&self) -> bool {
+        *self.inner.closed.lock().unwrap()
+    }
+
     pub fn close(&self) {
         *self.inner.closed.lock().unwrap() = true;
         self.inner.not_empty.notify_all();
@@ -317,8 +325,10 @@ mod tests {
     #[test]
     fn bounded_close_drains() {
         let ch = Bounded::new(4);
+        assert!(!ch.is_closed());
         ch.send("a").unwrap();
         ch.close();
+        assert!(ch.is_closed());
         assert!(ch.send("b").is_err());
         assert_eq!(ch.recv(), Some("a"));
         assert_eq!(ch.recv(), None);

@@ -1,0 +1,177 @@
+//! Sharded-coordinator invariants (ISSUE 1 acceptance):
+//!
+//! 1. Per-shard ε independence: for a fixed `die_seed` and
+//!    `workers ∈ {1, 2, 4}`, shard streams are pairwise distinct.
+//! 2. Single-shard bit-compatibility: with `workers = 1` the pool
+//!    reproduces the pre-refactor single-worker coordinator bit for bit
+//!    (same ε stream, same batch assembly, same packed head calls).
+//! 3. Fixed `(die_seed, workers)` reproducibility for serial workloads
+//!    (routing is round-robin on the batch id, not racy work-stealing).
+//!
+//! Everything runs on the deterministic `SimEngine`, so these execute in
+//! every build — no artifacts, no PJRT toolchain.
+
+use bnn_cim::bayes::aggregate_mc;
+use bnn_cim::config::Config;
+use bnn_cim::coordinator::{
+    shard_die_seed, Coordinator, EngineFactory, EpsilonSource, GrngBankSource,
+};
+use bnn_cim::data::SyntheticPerson;
+use bnn_cim::runtime::{InferenceEngine, SimEngine};
+use std::sync::Arc;
+
+fn sim_engine_factory(cfg: &Config) -> EngineFactory {
+    let cfg = cfg.clone();
+    Arc::new(move |_shard| Ok(Box::new(SimEngine::from_config(&cfg)) as Box<dyn InferenceEngine>))
+}
+
+#[test]
+fn shard_epsilon_streams_are_pairwise_distinct() {
+    let cfg = Config::default();
+    for &workers in &[1usize, 2, 4] {
+        let mut streams = Vec::new();
+        for shard in 0..workers {
+            let mut src = GrngBankSource::for_shard(&cfg.chip, shard);
+            let mut buf = vec![0.0f32; 256];
+            src.fill(&mut buf);
+            streams.push(buf);
+        }
+        for i in 0..workers {
+            for j in (i + 1)..workers {
+                assert_ne!(
+                    streams[i], streams[j],
+                    "workers={workers}: shards {i}/{j} drew correlated ε"
+                );
+            }
+        }
+        // Shard 0 is always the unsharded die, independent of pool size.
+        let mut base = GrngBankSource::new(&cfg.chip);
+        let mut buf = vec![0.0f32; 256];
+        base.fill(&mut buf);
+        assert_eq!(buf, streams[0]);
+    }
+}
+
+#[test]
+fn shard_seed_derivation_is_stable() {
+    assert_eq!(shard_die_seed(0, 0), 0);
+    assert_eq!(shard_die_seed(7, 0), 7);
+    let a: Vec<u64> = (0..6).map(|s| shard_die_seed(7, s)).collect();
+    let b: Vec<u64> = (0..6).map(|s| shard_die_seed(7, s)).collect();
+    assert_eq!(a, b);
+    for i in 0..a.len() {
+        for j in (i + 1)..a.len() {
+            assert_ne!(a[i], a[j]);
+        }
+    }
+    // Different die seeds give different shard families.
+    assert_ne!(shard_die_seed(7, 3), shard_die_seed(8, 3));
+}
+
+/// Replays the pre-refactor single-worker loop by hand — one request per
+/// batch, features once, packed MC head calls with fresh ε per call — and
+/// demands the `workers = 1` pool produce the exact same bits.
+#[test]
+fn single_shard_is_bit_identical_to_unsharded_reference() {
+    let mut cfg = Config::default();
+    cfg.model.mc_samples = 6;
+    cfg.server.workers = 1;
+    let n: u64 = 5;
+    let gen = SyntheticPerson::new(cfg.model.image_side, 1234);
+
+    // --- reference: the seed coordinator's exact op sequence ---
+    let mut engine = SimEngine::from_config(&cfg);
+    let mut source = GrngBankSource::new(&cfg.chip);
+    let manifest = engine.manifest().clone();
+    let art_batch = manifest.batch;
+    let ppi = manifest.side * manifest.side;
+    let classes = manifest.classes;
+    let fspec = manifest.entry("features").unwrap().clone();
+    let hspec = manifest.entry("head").unwrap().clone();
+    let t = cfg.model.mc_samples;
+    let mut expected: Vec<Vec<f64>> = Vec::new();
+    for i in 0..n {
+        let s = gen.sample(i);
+        let mut images = vec![0.0f32; art_batch * ppi];
+        images[..ppi].copy_from_slice(&s.pixels);
+        let feats = engine
+            .run("features", &[(&images, &fspec.inputs[0].1)])
+            .unwrap();
+        let feat_dim = feats.len() / art_batch;
+        let mut eps1 = vec![0.0f32; hspec.input_len(1)];
+        let mut eps2 = vec![0.0f32; hspec.input_len(2)];
+        let mut packed = vec![0.0f32; feats.len()];
+        let mut samples: Vec<Vec<f64>> = Vec::new();
+        let calls = t.div_ceil(art_batch);
+        for call in 0..calls {
+            let mut occupied = 0usize;
+            for slot in 0..art_batch {
+                if call * art_batch + slot < t {
+                    occupied += 1;
+                    packed[slot * feat_dim..(slot + 1) * feat_dim]
+                        .copy_from_slice(&feats[..feat_dim]);
+                }
+            }
+            source.fill(&mut eps1);
+            source.fill(&mut eps2);
+            let probs = engine
+                .run(
+                    "head",
+                    &[
+                        (&packed, &hspec.inputs[0].1),
+                        (&eps1, &hspec.inputs[1].1),
+                        (&eps2, &hspec.inputs[2].1),
+                    ],
+                )
+                .unwrap();
+            for slot in 0..occupied {
+                samples.push(
+                    probs[slot * classes..(slot + 1) * classes]
+                        .iter()
+                        .map(|&v| v as f64)
+                        .collect(),
+                );
+            }
+        }
+        expected.push(aggregate_mc(&samples).probs);
+    }
+
+    // --- the pool, workers = 1, serial submits (one request per batch) ---
+    let coord = Coordinator::start_with(
+        cfg.clone(),
+        sim_engine_factory(&cfg),
+        GrngBankSource::shard_factory(&cfg.chip),
+    )
+    .unwrap();
+    for i in 0..n {
+        let s = gen.sample(i);
+        let resp = coord.infer_blocking(s.pixels, 0).unwrap();
+        assert_eq!(
+            resp.pred.probs, expected[i as usize],
+            "request {i} diverged from the unsharded reference"
+        );
+    }
+    coord.shutdown();
+}
+
+/// Serial workloads replay identically for a fixed (die_seed, workers)
+/// pair, including with a multi-worker pool: batch→shard routing is
+/// deterministic round-robin and every shard's ε stream is seeded from
+/// the die seed alone.
+#[test]
+fn fixed_seed_and_worker_count_reproduce_bitwise() {
+    let run = || {
+        let mut cfg = Config::default();
+        cfg.model.mc_samples = 4;
+        cfg.server.workers = 2;
+        let coord = Coordinator::start_sim(cfg.clone()).unwrap();
+        let gen = SyntheticPerson::new(cfg.model.image_side, 9);
+        let mut out = Vec::new();
+        for i in 0..6 {
+            out.push(coord.infer_blocking(gen.sample(i).pixels, 0).unwrap().pred.probs);
+        }
+        coord.shutdown();
+        out
+    };
+    assert_eq!(run(), run(), "fixed (die_seed, workers) must replay bitwise");
+}
