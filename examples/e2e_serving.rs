@@ -2,45 +2,70 @@
 //! of the stack on a real small workload and reports the paper's
 //! headline quantities.
 //!
-//!   cargo run --release --example e2e_serving [n_requests] [mc_samples] [workers]
+//!   cargo run --release --example e2e_serving -- \
+//!       [n_requests] [mc_samples] [workers] [--backend sim|cim|pjrt]
+//!
+//! (`--sim` is kept as a deprecated alias for `--backend sim`.)
 //!
 //! Pipeline proven here:
 //!   python (build time): synthetic-person training → ELBO Bayesian head
 //!     → quantization → Pallas-kernel inference graph → HLO text
-//!   rust (request path): coordinator batches requests → PJRT executes
-//!     the feature extractor once per batch → T Monte-Carlo head passes,
-//!     each fed fresh ε from the *simulated in-word GRNG bank* (die
-//!     mismatch + calibration included) → entropy/deferral policy.
+//!   rust (request path): coordinator batches requests → the backend
+//!     executes the feature extractor once per batch → T Monte-Carlo head
+//!     passes. On `pjrt`/`sim` each pass is fed fresh ε from the
+//!     *simulated in-word GRNG bank* (die mismatch + calibration
+//!     included); on `cim` the head runs through the behavioral tile
+//!     arrays whose in-word banks generate ε during the MVM and whose
+//!     ledgers meter energy → entropy/deferral policy.
 //!
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
 use bnn_cim::bayes::{accuracy, ape_by_group, ece_percent, EvalPoint};
-use bnn_cim::config::Config;
+use bnn_cim::config::{Backend, Config};
 use bnn_cim::coordinator::Coordinator;
 use bnn_cim::data::{OodKind, SyntheticPerson};
 use bnn_cim::grng::GrngBank;
+use bnn_cim::util::cli::parse_args;
 use std::path::Path;
 use std::time::Instant;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let args: Vec<String> = std::env::args().collect();
-    let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
-    let mc: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(16);
-    let workers: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(1);
-    if !Path::new("artifacts/manifest.json").exists() {
-        return Err("artifacts missing — run `make artifacts`".into());
-    }
+    // Same parser as the `bnn-cim` CLI: `--backend value`, `--backend=value`,
+    // bare `--sim` flag, positionals.
+    let args = parse_args(std::env::args().skip(1));
+    // `--backend` always wins over the deprecated alias (as in `serve`).
+    let backend: Option<Backend> = match args.get("backend") {
+        Some(b) => Some(Backend::parse(b)?),
+        None if args.has_flag("sim") => {
+            eprintln!("warning: --sim is deprecated; use --backend sim");
+            Some(Backend::Sim)
+        }
+        None => None,
+    };
+    let pos = |i: usize| args.positional.get(i).and_then(|s| s.parse().ok());
+    let n_requests: usize = pos(0).unwrap_or(200);
+    let mc: usize = pos(1).unwrap_or(16);
+    let workers: usize = pos(2).unwrap_or(1);
 
     let mut cfg = Config::default();
     cfg.model.mc_samples = mc;
     cfg.server.max_batch = 8;
     cfg.server.workers = workers;
-    let coord = Coordinator::start(cfg.clone())?;
+    if let Some(b) = backend {
+        cfg.server.backend = b;
+    }
+    if cfg.server.backend == Backend::Pjrt && !Path::new("artifacts/manifest.json").exists() {
+        return Err(
+            "artifacts missing — run `make artifacts`, or pass --backend sim|cim".into(),
+        );
+    }
+    let coord = Coordinator::start_backend(cfg.clone())?;
     let gen = SyntheticPerson::new(cfg.model.image_side, 2024);
 
     println!(
         "=== e2e serving: {n_requests} requests (+25% OOD), T={mc} MC samples, \
-         {workers} shard worker(s) ==="
+         {workers} shard worker(s), backend = {} ===",
+        cfg.server.backend.name()
     );
     let t0 = Instant::now();
 
@@ -82,7 +107,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let acc = accuracy(&points);
     let ece = ece_percent(&points, 15);
     let (ape_c, ape_i, ape_o) = ape_by_group(&points);
-    println!("\nquality (BNN over PJRT + in-word-GRNG ε):");
+    println!(
+        "\nquality (BNN over {} + in-word-GRNG ε):",
+        cfg.server.backend.name()
+    );
     println!("  accuracy (ID)        {:.3}", acc);
     println!("  ECE                  {:.2} %", ece);
     println!("  APE correct/incorrect/OOD   {ape_c:.3} / {ape_i:.3} / {ape_o:.3}");
@@ -127,6 +155,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "  GRNG bank rate       {:.2} GSa/s (paper 5.12)",
         bank.hardware_throughput_sa_s() / 1e9
     );
+    if m.engine_energy_j > 0.0 {
+        println!(
+            "  tile energy          {:.3} µJ over {} tile MVMs ({:.0} fJ/Op, paper 672)",
+            m.engine_energy_j * 1e6,
+            m.engine_mvms,
+            m.engine_j_per_op() * 1e15,
+        );
+    }
     coord.shutdown();
     Ok(())
 }

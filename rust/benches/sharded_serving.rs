@@ -1,70 +1,111 @@
-//! Bench: sharded serving — batched-request throughput vs. worker count.
+//! Bench: sharded serving — batched-request throughput vs. worker count,
+//! swept across engine backends (`sim` vs `cim`).
 //!
-//! Runs the full coordinator (dispatcher → round-robin shard pool, each
-//! shard owning a SimEngine replica plus its own split-seeded GRNG bank)
-//! on the pure-Rust backend, so it needs no artifacts and no PJRT
-//! toolchain. The offered load is pre-queued so throughput measures the
-//! pool, not the client: expect req/s to scale monotonically 1 → 4
-//! workers (bounded by available cores).
+//! Runs the full coordinator (dispatcher → round-robin shard pool) on the
+//! artifact-free backends, so it needs no PJRT toolchain:
+//!
+//! - `sim` — pure-Rust engine, ε supplied externally by per-shard GRNG
+//!   banks. Measures the coordination fabric itself.
+//! - `cim` — the behavioral chip model: head MVMs through calibrated tile
+//!   arrays with in-word ε and live energy ledgers. Measures the cost of
+//!   full-fidelity hardware serving (and reports fJ/Sample + fJ/Op).
+//!
+//! The offered load is pre-queued so throughput measures the pool, not
+//! the client. Besides the human-readable table, the sweep is written
+//! machine-readably to `BENCH_serving.json` at the repo root, seeding the
+//! perf trajectory across PRs.
 
-use bnn_cim::config::Config;
-use bnn_cim::coordinator::Coordinator;
-use bnn_cim::data::SyntheticPerson;
-use bnn_cim::util::bench::Suite;
-use std::time::{Duration, Instant};
+use bnn_cim::config::{Backend, Config};
+use bnn_cim::util::bench::{
+    is_calibrated_report, measure_serving_sweep, repo_root_artifact, ServingSweepPoint, Suite,
+};
+use bnn_cim::util::json::Json;
 
-fn throughput_with_workers(workers: usize, n_req: usize, mc: usize) -> (f64, u64, f64) {
+fn run_point(backend: Backend, workers: usize, n_req: usize, mc: usize) -> ServingSweepPoint {
     let mut cfg = Config::default();
+    cfg.server.backend = backend;
     cfg.model.mc_samples = mc;
     cfg.server.workers = workers;
     cfg.server.max_batch = 8;
-    cfg.server.queue_capacity = n_req + 8;
     cfg.server.batch_deadline_ms = 0.5;
-    let coord = Coordinator::start_sim(cfg.clone()).unwrap();
-    let gen = SyntheticPerson::new(cfg.model.image_side, 7);
-    // Pre-generate so the dataset is not on the measured path.
-    let imgs: Vec<Vec<f32>> = (0..n_req as u64).map(|i| gen.sample(i).pixels).collect();
-    let t0 = Instant::now();
-    let receivers: Vec<_> = imgs
-        .into_iter()
-        .map(|px| coord.submit(px, 0).expect("queue sized for full load"))
-        .collect();
-    for rx in receivers {
-        rx.recv_timeout(Duration::from_secs(300)).expect("response");
-    }
-    let dt = t0.elapsed().as_secs_f64();
-    let m = coord.metrics();
-    coord.shutdown();
-    (n_req as f64 / dt, m.batches, m.mean_batch_fill)
+    measure_serving_sweep(&cfg, n_req)
 }
 
 fn main() {
-    let mut suite = Suite::new("sharded_serving (dispatcher + shard pool, sim engine)");
+    let mut suite = Suite::new("sharded_serving (dispatcher + shard pool, sim vs cim)");
     suite.header();
     let quick = std::env::args().any(|a| a == "--quick");
-    let n_req = if quick { 64 } else { 256 };
+    let sim_req = if quick { 64 } else { 256 };
+    // The chip model runs the full analog chain per MVM: offer less load
+    // so the sweep finishes in bench time.
+    let cim_req = if quick { 16 } else { 48 };
     let mc = if quick { 8 } else { 32 };
 
-    // Warm pass so page-cache/allocator effects don't bias workers=1.
-    let _ = throughput_with_workers(1, n_req / 4, mc);
+    // Warm passes (both backends) so page-cache/allocator effects don't
+    // bias each sweep's workers=1 baseline.
+    let _ = run_point(Backend::Sim, 1, sim_req / 4, mc);
+    let _ = run_point(Backend::Cim, 1, cim_req / 4, mc);
 
-    let mut baseline = 0.0f64;
-    for &workers in &[1usize, 2, 4] {
-        let (rps, batches, fill) = throughput_with_workers(workers, n_req, mc);
-        if workers == 1 {
-            baseline = rps;
+    let mut sweeps: Vec<Json> = Vec::new();
+    for &(backend, n_req) in &[(Backend::Sim, sim_req), (Backend::Cim, cim_req)] {
+        let mut baseline = 0.0f64;
+        for &workers in &[1usize, 2, 4] {
+            let p = run_point(backend, workers, n_req, mc);
+            if workers == 1 {
+                baseline = p.req_per_s;
+            }
+            let mut line = format!(
+                "{:.1} req/s ({:.2}x vs 1 worker), {} batches, fill {:.2}",
+                p.req_per_s,
+                p.req_per_s / baseline.max(1e-9),
+                p.batches,
+                p.mean_fill
+            );
+            if p.engine_fj_per_op > 0.0 {
+                line.push_str(&format!(
+                    ", {:.0} fJ/Sa, {:.0} fJ/Op",
+                    p.eps_fj_per_sample, p.engine_fj_per_op
+                ));
+            }
+            suite.note(
+                &format!(
+                    "{} workers={workers} ({n_req} req, T={mc})",
+                    backend.name()
+                ),
+                line,
+            );
+            sweeps.push(p.to_json());
         }
-        suite.note(
-            &format!("workers={workers} ({n_req} req, T={mc})"),
-            format!(
-                "{rps:.1} req/s ({:.2}x vs 1 worker), {batches} batches, fill {fill:.2}",
-                rps / baseline.max(1e-9)
-            ),
-        );
     }
     suite.note(
         "epsilon sourcing",
-        "per-shard GRNG banks (SplitMix64 splits of die_seed), no shared RNG".into(),
+        "sim: per-shard GRNG-bank sources (external ε) | cim: in-word ε \
+         inside the engine's tile arrays, no coordinator supply"
+            .into(),
     );
+
+    // Machine-readable sweep at the repo root. Only a full-scale run may
+    // claim the calibrated mark (a `source` without "smoke", which
+    // `util::bench::is_calibrated_report` gives precedence); a --quick
+    // run is smoke-scale — it stays overwritable and must not replace an
+    // existing calibrated report.
+    let root = repo_root_artifact("BENCH_serving.json");
+    if quick && is_calibrated_report(&root) {
+        println!("  keeping calibrated {}", root.display());
+    } else {
+        let source = if quick {
+            "benches/sharded_serving.rs --quick (smoke-scale)"
+        } else {
+            "benches/sharded_serving.rs (calibrated, release profile)"
+        };
+        suite.write_report(
+            &root,
+            vec![
+                ("source", Json::Str(source.to_string())),
+                ("sweeps", Json::Arr(sweeps)),
+            ],
+        );
+        println!("  wrote {}", root.display());
+    }
     suite.finish();
 }

@@ -15,7 +15,7 @@ mod server;
 pub use chip::{AdcConfig, ChipConfig, GrngConfig, IdacConfig, TileConfig};
 pub use energy::{AreaTable, EnergyTable, TECH_NODE_NM};
 pub use model::ModelConfig;
-pub use server::ServerConfig;
+pub use server::{Backend, ServerConfig};
 
 use crate::error::{Error, Result};
 use crate::util::json::Json;
@@ -155,6 +155,18 @@ max_batch = 8
         assert_eq!(cfg.server.max_batch, 8);
         // untouched fields keep defaults
         assert_eq!(cfg.chip.tile.words_per_row, 8);
+    }
+
+    #[test]
+    fn backend_parses_and_rejects() {
+        assert_eq!(Config::default().server.backend, Backend::Pjrt);
+        let cfg = Config::from_toml_str("[server]\nbackend = \"cim\"\n").unwrap();
+        assert_eq!(cfg.server.backend, Backend::Cim);
+        let cfg = Config::from_toml_str("[server]\nbackend = \"sim\"\n").unwrap();
+        assert_eq!(cfg.server.backend, Backend::Sim);
+        assert!(Config::from_toml_str("[server]\nbackend = \"gpu\"\n").is_err());
+        assert_eq!(Backend::parse("PJRT").unwrap(), Backend::Pjrt);
+        assert_eq!(Backend::Cim.name(), "cim");
     }
 
     #[test]

@@ -4,9 +4,47 @@ use super::{f64_field, usize_field};
 use crate::error::{Error, Result};
 use crate::util::json::Json;
 
+/// Which `InferenceEngine` the coordinator boots per shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust deterministic stand-in (`runtime::SimEngine`); ε is an
+    /// external input supplied by per-shard GRNG-bank sources.
+    Sim,
+    /// Behavioral chip model (`runtime::CimEngine`): head MVMs on
+    /// simulated CIM tiles with in-word ε and live energy ledgers.
+    Cim,
+    /// AOT-compiled XLA artifacts over PJRT (feature `pjrt`); ε is an
+    /// external input, as with `Sim`.
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "sim" => Ok(Backend::Sim),
+            "cim" => Ok(Backend::Cim),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => Err(Error::Config(format!(
+                "server.backend must be one of sim | cim | pjrt, got '{other}'"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Sim => "sim",
+            Backend::Cim => "cim",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
 /// Coordinator (L3 serving engine) configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
+    /// Engine backend booted per shard (`serve --backend` overrides).
+    /// Default stays `pjrt`, the historical `Coordinator::start` path.
+    pub backend: Backend,
     /// Maximum requests fused into one batched executable call.
     pub max_batch: usize,
     /// Batching deadline [ms]: a partial batch is dispatched after this.
@@ -27,6 +65,7 @@ pub struct ServerConfig {
 impl Default for ServerConfig {
     fn default() -> Self {
         Self {
+            backend: Backend::Pjrt,
             max_batch: 16,
             batch_deadline_ms: 2.0,
             queue_capacity: 256,
@@ -39,6 +78,12 @@ impl Default for ServerConfig {
 
 impl ServerConfig {
     pub fn apply_json(&mut self, doc: &Json) -> Result<()> {
+        if let Some(v) = doc.get("backend") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| Error::Config("field 'backend' must be a string".into()))?;
+            self.backend = Backend::parse(s)?;
+        }
         usize_field(doc, "max_batch", &mut self.max_batch)?;
         f64_field(doc, "batch_deadline_ms", &mut self.batch_deadline_ms)?;
         usize_field(doc, "queue_capacity", &mut self.queue_capacity)?;

@@ -8,13 +8,16 @@
 //! request→shard routing — and therefore every response — is a pure
 //! function of `(die_seed, workers)`).
 //!
-//! Each shard worker constructs its own non-`Send` engine and its own
-//! independent ε source (a per-shard GRNG bank seeded from a SplitMix64
-//! split of `die_seed`), then runs: features once per batch → packed
-//! Monte-Carlo head passes with fresh ε per call → aggregate →
-//! defer/reply. This is the paper's parallelism in software: replicated
-//! in-word GRNG banks feed independent compute lanes with no shared RNG
-//! unit on a bus.
+//! Each shard worker constructs its own non-`Send` engine and — for
+//! external-ε backends — its own independent ε source (a per-shard GRNG
+//! bank seeded from a SplitMix64 split of `die_seed`), then runs:
+//! features once per batch → packed Monte-Carlo head passes → aggregate →
+//! defer/reply. Under `EpsilonMode::External` the worker fills ε buffers
+//! per head call; under `EpsilonMode::InWord` the engine's own memory
+//! arrays generate ε during the MVM (the chip's dataflow) and the worker
+//! reads ε/energy totals back from the engine. Either way this is the
+//! paper's parallelism in software: replicated in-word GRNG banks feed
+//! independent compute lanes with no shared RNG unit on a bus.
 
 use crate::bayes::aggregate_mc;
 use crate::config::Config;
@@ -22,7 +25,7 @@ use crate::coordinator::batch::{effective_t, pack_images, plan_calls, scatter_fe
 use crate::coordinator::epsilon::EpsilonSource;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{InferRequest, InferResponse};
-use crate::runtime::{ArtifactSpec, InferenceEngine};
+use crate::runtime::{ArtifactSpec, EpsilonMode, InferenceEngine};
 use crate::util::threadpool::Bounded;
 use std::time::{Duration, Instant};
 
@@ -87,11 +90,12 @@ struct ShardPlan {
     head_spec: ArtifactSpec,
 }
 
-/// Worker loop: owns this shard's engine and ε source for its lifetime.
+/// Worker loop: owns this shard's engine (and, for external-ε backends,
+/// its ε source) for its lifetime.
 pub(crate) fn run_shard_worker(
     shard: usize,
     mut engine: Box<dyn InferenceEngine>,
-    mut source: Box<dyn EpsilonSource>,
+    mut source: Option<Box<dyn EpsilonSource>>,
     batches: Bounded<Batch>,
     metrics: Metrics,
     cfg: Config,
@@ -108,22 +112,49 @@ pub(crate) fn run_shard_worker(
         serve_batch(
             shard,
             engine.as_mut(),
-            source.as_mut(),
+            &mut source,
             &batch,
             &metrics,
             &cfg,
             &plan,
         );
-        metrics.record_epsilon(shard, source.samples_drawn(), source.energy_j());
+        // serve_batch records before replying (so snapshots taken after a
+        // response are current); repeat here so ε/energy drawn by a batch
+        // that *failed* mid-way is still counted. Absolute totals make
+        // the double-record idempotent.
+        record_energy_counters(shard, engine.as_ref(), &source, &metrics);
     }
 }
 
-/// One fused batch: features once, then packed MC head passes with fresh ε
-/// per call, then aggregate/defer/reply.
+/// Record this shard's absolute ε/energy totals: external supplies report
+/// from the source, in-word engines from their own banks. Called *before*
+/// a batch's replies are sent, so a snapshot taken after receiving a
+/// response always includes that batch's counters (and two consecutive
+/// idle-time snapshots are identical).
+fn record_energy_counters(
+    shard: usize,
+    engine: &dyn InferenceEngine,
+    source: &Option<Box<dyn EpsilonSource>>,
+    metrics: &Metrics,
+) {
+    if let Some(src) = source.as_ref() {
+        metrics.record_epsilon(shard, src.samples_drawn(), src.energy_j());
+    }
+    if let Some(rep) = engine.energy_report() {
+        metrics.record_engine_energy(shard, rep.total_j, rep.mvm_count, rep.total_ops);
+        if engine.epsilon_mode() == EpsilonMode::InWord {
+            metrics.record_epsilon(shard, rep.grng_samples, rep.grng_j);
+        }
+    }
+}
+
+/// One fused batch: features once, then packed MC head passes — fresh
+/// external ε per call, or engine-internal in-word ε per MVM — then
+/// aggregate/defer/reply.
 fn serve_batch(
     shard: usize,
     engine: &mut dyn InferenceEngine,
-    source: &mut dyn EpsilonSource,
+    source: &mut Option<Box<dyn EpsilonSource>>,
     batch: &Batch,
     metrics: &Metrics,
     cfg: &Config,
@@ -137,6 +168,7 @@ fn serve_batch(
     let packed = pack_images(&images, plan.art_batch, plan.pixels_per_img);
 
     let exec_before = engine.executions();
+    let energy_before = engine.energy_report().map(|r| r.total_j).unwrap_or(0.0);
     let feats = match engine.run("features", &[(&packed, &plan.feat_spec.inputs[0].1)]) {
         Ok(f) => f,
         Err(e) => {
@@ -145,24 +177,41 @@ fn serve_batch(
         }
     };
 
+    let in_word = engine.epsilon_mode() == EpsilonMode::InWord;
     let feat_dim = feats.len() / plan.art_batch;
-    let mut eps1 = vec![0.0f32; plan.head_spec.input_len(1)];
-    let mut eps2 = vec![0.0f32; plan.head_spec.input_len(2)];
+    let (mut eps1, mut eps2) = if in_word {
+        // The engine's memory arrays generate ε; no buffers cross the
+        // boundary (the head entry takes features only).
+        (Vec::new(), Vec::new())
+    } else {
+        (
+            vec![0.0f32; plan.head_spec.input_len(1)],
+            vec![0.0f32; plan.head_spec.input_len(2)],
+        )
+    };
     let mut packed_feats = vec![0.0f32; feats.len()];
     let mut per_request: Vec<Vec<Vec<f64>>> = vec![Vec::with_capacity(t); reqs.len()];
     for owners in plan_calls(reqs.len(), t, plan.art_batch) {
         scatter_features(&feats, &owners, feat_dim, &mut packed_feats);
-        // Fresh ε for every call (each slot is an independent MC pass).
-        source.fill(&mut eps1);
-        source.fill(&mut eps2);
-        let probs = match engine.run(
-            "head",
-            &[
-                (&packed_feats, &plan.head_spec.inputs[0].1),
-                (&eps1, &plan.head_spec.inputs[1].1),
-                (&eps2, &plan.head_spec.inputs[2].1),
-            ],
-        ) {
+        let result = if in_word {
+            engine.run("head", &[(&packed_feats, &plan.head_spec.inputs[0].1)])
+        } else {
+            // Fresh ε for every call (each slot is an independent MC pass).
+            let src = source
+                .as_mut()
+                .expect("external-ε engine requires a source (startup handshake)");
+            src.fill(&mut eps1);
+            src.fill(&mut eps2);
+            engine.run(
+                "head",
+                &[
+                    (&packed_feats, &plan.head_spec.inputs[0].1),
+                    (&eps1, &plan.head_spec.inputs[1].1),
+                    (&eps2, &plan.head_spec.inputs[2].1),
+                ],
+            )
+        };
+        let probs = match result {
             Ok(p) => p,
             Err(e) => {
                 eprintln!("[bnn-cim shard {shard}] head execution failed: {e}");
@@ -186,6 +235,15 @@ fn serve_batch(
         engine.executions() - exec_before,
     );
 
+    // Per-request energy: this batch's tile-energy delta split across its
+    // members (each member contributed the same t MC passes). Computed as
+    // a delta of cumulative totals — the ledgers are never reset.
+    let energy_after = engine.energy_report().map(|r| r.total_j).unwrap_or(0.0);
+    let energy_per_req_j = (energy_after - energy_before).max(0.0) / reqs.len().max(1) as f64;
+
+    // Counters must be current before any reply unblocks a caller.
+    record_energy_counters(shard, engine, source, metrics);
+
     for (req, samples) in reqs.iter().zip(per_request.iter()) {
         let pred = aggregate_mc(samples);
         let deferred = pred.entropy > cfg.model.defer_threshold;
@@ -197,6 +255,7 @@ fn serve_batch(
             deferred,
             latency,
             batch_id: batch.id,
+            energy_j: energy_per_req_j,
         });
     }
 }

@@ -1,11 +1,17 @@
 //! ε sourcing for the Monte-Carlo scheduler.
 //!
-//! The architectural bridge of this reproduction: the AOT-compiled head
-//! takes ε as an *input*, and the coordinator supplies it from the
-//! simulated in-word GRNG bank — exactly the chip's dataflow, where the
-//! memory array itself produces the randomness the MVM consumes.
+//! Two ε-ownership modes exist (`runtime::EpsilonMode`), captured here as
+//! [`EpsilonSupply`]:
 //!
-//! Sources:
+//! - **External** — the engine's head takes ε as an *input* (AOT
+//!   artifacts, `SimEngine`): the coordinator owns ε and supplies it from
+//!   a per-shard [`EpsilonSource`], normally the simulated in-word GRNG
+//!   bank — the chip's dataflow re-created at the coordinator layer.
+//! - **InWord** — the engine *is* the chip model (`CimEngine`): ε
+//!   materializes inside the engine's own tile arrays, so the coordinator
+//!   supplies nothing and reads ε/energy counters back from the engine.
+//!
+//! Sources (External mode):
 //! - [`GrngBankSource`] — the paper's hardware: one simulated GRNG cell
 //!   per (row, word); successive fills are successive conversions.
 //!   Includes per-die mismatch (calibrated upstream) and outliers.
@@ -23,6 +29,36 @@ use std::sync::Arc;
 
 // Per-shard seed derivation lives next to the bank it shards.
 pub use crate::grng::bank::{shard_chip, shard_die_seed};
+pub use crate::runtime::EpsilonMode;
+
+/// How a shard worker's ε demand is met (the coordinator-side half of
+/// [`EpsilonMode`]). Replaces the hardwired per-shard GRNG-bank supply:
+/// external-ε backends get a source per shard, in-word backends get none.
+#[derive(Clone)]
+pub enum EpsilonSupply {
+    /// Coordinator-owned ε: `factory(shard)` builds the shard's source
+    /// inside its worker thread.
+    External(SourceFactory),
+    /// Engine-owned ε: the in-word GRNG lives inside the engine's memory
+    /// arrays; no coordinator source exists.
+    InWord,
+}
+
+impl EpsilonSupply {
+    /// The default external supply: one simulated in-word GRNG bank per
+    /// shard, seeded from a SplitMix64 split of `die_seed`.
+    pub fn grng_banks(chip: &ChipConfig) -> Self {
+        EpsilonSupply::External(GrngBankSource::shard_factory(chip))
+    }
+
+    /// The source for one shard (`None` for engine-owned ε).
+    pub(crate) fn source_for(&self, shard: usize) -> Option<Box<dyn EpsilonSource>> {
+        match self {
+            EpsilonSupply::External(factory) => Some(factory(shard)),
+            EpsilonSupply::InWord => None,
+        }
+    }
+}
 
 /// Anything that can fill ε buffers, one MC pass at a time.
 pub trait EpsilonSource: Send {

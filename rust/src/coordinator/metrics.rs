@@ -7,6 +7,11 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Per-shard counters surfaced in [`MetricsSnapshot::per_shard`].
+///
+/// All energy/ε counters are *absolute cumulative totals* reported by the
+/// shard's source or engine; snapshots are non-destructive — reading one
+/// never resets a ledger or a counter (pinned by
+/// `snapshot_is_non_destructive` below).
 #[derive(Clone, Debug, Default)]
 pub struct ShardSnapshot {
     pub shard: usize,
@@ -14,10 +19,39 @@ pub struct ShardSnapshot {
     pub requests: u64,
     pub batches: u64,
     pub mc_passes: u64,
-    /// Engine executions (PJRT calls, or sim-engine calls).
+    /// Engine executions (PJRT calls, sim-engine or cim-engine calls).
     pub engine_executions: u64,
     pub epsilon_samples: u64,
     pub epsilon_energy_j: f64,
+    /// Cumulative tile energy from the engine's `EnergyLedger`s [J]
+    /// (0 for backends without a hardware model).
+    pub engine_energy_j: f64,
+    /// Per-tile MVMs executed by the engine.
+    pub engine_mvms: u64,
+    /// MAC ops represented by those MVMs (J/Op denominator).
+    pub engine_ops: u64,
+}
+
+impl ShardSnapshot {
+    /// ε-generation energy per sample [fJ] — the paper's headline
+    /// fJ/Sample, live at serving time (NaN-free: 0 when no ε drawn).
+    pub fn epsilon_fj_per_sample(&self) -> f64 {
+        if self.epsilon_samples == 0 {
+            0.0
+        } else {
+            self.epsilon_energy_j / self.epsilon_samples as f64 * 1e15
+        }
+    }
+
+    /// NN efficiency [J/Op] over the engine's recorded MVMs (0 when the
+    /// backend has no energy model).
+    pub fn engine_j_per_op(&self) -> f64 {
+        if self.engine_ops == 0 {
+            0.0
+        } else {
+            self.engine_energy_j / self.engine_ops as f64
+        }
+    }
 }
 
 #[derive(Clone, Debug, Default)]
@@ -32,6 +66,12 @@ pub struct MetricsSnapshot {
     pub pjrt_executions: u64,
     pub epsilon_samples: u64,
     pub epsilon_energy_j: f64,
+    /// Cumulative engine tile energy across shards [J] (cim backend).
+    pub engine_energy_j: f64,
+    /// Per-tile MVMs executed by the engines across shards.
+    pub engine_mvms: u64,
+    /// MAC ops represented by the engines' MVMs across shards.
+    pub engine_ops: u64,
     pub latency_p50_ms: f64,
     pub latency_p95_ms: f64,
     pub latency_max_ms: f64,
@@ -42,6 +82,24 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
+    /// ε energy per sample [fJ] across all shards (paper headline).
+    pub fn epsilon_fj_per_sample(&self) -> f64 {
+        if self.epsilon_samples == 0 {
+            0.0
+        } else {
+            self.epsilon_energy_j / self.epsilon_samples as f64 * 1e15
+        }
+    }
+
+    /// NN efficiency [J/Op] across all shards (0 without an energy model).
+    pub fn engine_j_per_op(&self) -> f64 {
+        if self.engine_ops == 0 {
+            0.0
+        } else {
+            self.engine_energy_j / self.engine_ops as f64
+        }
+    }
+
     pub fn render(&self) -> String {
         let mut out = format!(
             "requests={} rejected={} deferred={} batches={} (fill {:.2})\n\
@@ -61,6 +119,19 @@ impl MetricsSnapshot {
             self.latency_max_ms,
             self.throughput_rps,
         );
+        if self.epsilon_samples > 0 {
+            out.push_str(&format!(
+                "\nepsilon {:.1} fJ/Sample (paper: 360)",
+                self.epsilon_fj_per_sample()
+            ));
+        }
+        if self.engine_energy_j > 0.0 {
+            out.push_str(&format!(
+                " | tile energy {:.3} µJ ({:.0} fJ/Op, paper: 672)",
+                self.engine_energy_j * 1e6,
+                self.engine_j_per_op() * 1e15,
+            ));
+        }
         if self.per_shard.len() > 1 {
             for s in &self.per_shard {
                 out.push_str(&format!(
@@ -72,6 +143,13 @@ impl MetricsSnapshot {
                     s.epsilon_samples,
                     s.epsilon_energy_j * 1e6,
                 ));
+                if s.engine_energy_j > 0.0 {
+                    out.push_str(&format!(
+                        " tiles {:.3} µJ, {:.0} fJ/Sa",
+                        s.engine_energy_j * 1e6,
+                        s.epsilon_fj_per_sample(),
+                    ));
+                }
             }
         }
         out
@@ -92,6 +170,9 @@ struct ShardInner {
     engine_executions: u64,
     epsilon_samples: u64,
     epsilon_energy_j: f64,
+    engine_energy_j: f64,
+    engine_mvms: u64,
+    engine_ops: u64,
 }
 
 struct Inner {
@@ -166,6 +247,17 @@ impl Metrics {
         s.epsilon_energy_j = energy_j;
     }
 
+    /// Absolute engine-energy counters for one shard (cumulative ledger
+    /// totals, never deltas — so snapshot reads stay non-destructive and
+    /// idempotent even if a report is recorded twice).
+    pub fn record_engine_energy(&self, shard: usize, total_j: f64, mvms: u64, ops: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let s = &mut g.shards[shard];
+        s.engine_energy_j = total_j;
+        s.engine_mvms = mvms;
+        s.engine_ops = ops;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         let mut lat = g.latencies_ms.clone();
@@ -190,6 +282,9 @@ impl Metrics {
                 engine_executions: s.engine_executions,
                 epsilon_samples: s.epsilon_samples,
                 epsilon_energy_j: s.epsilon_energy_j,
+                engine_energy_j: s.engine_energy_j,
+                engine_mvms: s.engine_mvms,
+                engine_ops: s.engine_ops,
             })
             .collect();
         let batches: u64 = per_shard.iter().map(|s| s.batches).sum();
@@ -202,6 +297,9 @@ impl Metrics {
             pjrt_executions: per_shard.iter().map(|s| s.engine_executions).sum(),
             epsilon_samples: per_shard.iter().map(|s| s.epsilon_samples).sum(),
             epsilon_energy_j: per_shard.iter().map(|s| s.epsilon_energy_j).sum(),
+            engine_energy_j: per_shard.iter().map(|s| s.engine_energy_j).sum(),
+            engine_mvms: per_shard.iter().map(|s| s.engine_mvms).sum(),
+            engine_ops: per_shard.iter().map(|s| s.engine_ops).sum(),
             latency_p50_ms: pct(0.50),
             latency_p95_ms: pct(0.95),
             latency_max_ms: lat.last().copied().unwrap_or(0.0),
@@ -264,5 +362,57 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.epsilon_samples, 250);
         assert!((s.epsilon_energy_j - 3e-8).abs() < 1e-18);
+    }
+
+    #[test]
+    fn engine_energy_counters_surface_headline_metrics() {
+        let m = Metrics::new(2);
+        // Shard 0: a cim-like engine reporting cumulative ledger totals —
+        // 10 MOp at the paper's 672 fJ/Op, ε at 360 fJ/Sample.
+        m.record_engine_energy(0, 6.72e-6, 5000, 10_000_000);
+        m.record_epsilon(0, 1000, 3.6e-10);
+        let s = m.snapshot();
+        assert!((s.engine_energy_j - 6.72e-6).abs() < 1e-17);
+        assert_eq!(s.engine_mvms, 5000);
+        assert_eq!(s.engine_ops, 10_000_000);
+        assert!((s.engine_j_per_op() - 672e-15).abs() < 1e-18);
+        assert!((s.epsilon_fj_per_sample() - 360.0).abs() < 1e-6);
+        assert!((s.per_shard[0].epsilon_fj_per_sample() - 360.0).abs() < 1e-6);
+        assert!((s.per_shard[0].engine_j_per_op() - 672e-15).abs() < 1e-18);
+        // Shard 1 has no energy model: derived metrics are 0, not NaN.
+        assert_eq!(s.per_shard[1].epsilon_fj_per_sample(), 0.0);
+        assert_eq!(s.per_shard[1].engine_j_per_op(), 0.0);
+        assert!(s.render().contains("fJ/Sample"));
+    }
+
+    /// Regression: reading a snapshot must not reset any counter — ε and
+    /// engine-energy totals are absolute, so two consecutive reads (and a
+    /// re-recorded identical report) return identical values.
+    #[test]
+    fn snapshot_is_non_destructive() {
+        let m = Metrics::new(2);
+        m.record_batch(0, 4, 8, 16, 17);
+        m.record_epsilon(0, 640, 2.3e-7);
+        m.record_engine_energy(0, 5.5e-9, 123, 456_000);
+        for i in 0..4 {
+            m.record_response(Duration::from_millis(5 + i), false);
+        }
+        let a = m.snapshot();
+        let b = m.snapshot();
+        assert_eq!(a.requests_total, b.requests_total);
+        assert_eq!(a.batches, b.batches);
+        assert_eq!(a.epsilon_samples, b.epsilon_samples);
+        assert_eq!(a.epsilon_energy_j, b.epsilon_energy_j);
+        assert_eq!(a.engine_energy_j, b.engine_energy_j);
+        assert_eq!(a.engine_ops, b.engine_ops);
+        assert_eq!(a.per_shard[0].engine_energy_j, b.per_shard[0].engine_energy_j);
+        assert_eq!(a.per_shard[0].engine_mvms, b.per_shard[0].engine_mvms);
+        // Recording the same cumulative totals again (idle worker loop)
+        // must not double-count either.
+        m.record_epsilon(0, 640, 2.3e-7);
+        m.record_engine_energy(0, 5.5e-9, 123, 456_000);
+        let c = m.snapshot();
+        assert_eq!(a.epsilon_energy_j, c.epsilon_energy_j);
+        assert_eq!(a.engine_energy_j, c.engine_energy_j);
     }
 }

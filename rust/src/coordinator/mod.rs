@@ -19,7 +19,8 @@ pub mod server;
 
 pub use batch::Batch;
 pub use epsilon::{
-    shard_die_seed, BaselineSource, EpsilonSource, GrngBankSource, PhiloxSource,
+    shard_die_seed, BaselineSource, EpsilonMode, EpsilonSource, EpsilonSupply, GrngBankSource,
+    PhiloxSource,
 };
 pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
 pub use request::{InferRequest, InferResponse, RejectReason};

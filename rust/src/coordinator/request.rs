@@ -28,6 +28,10 @@ pub struct InferResponse {
     pub latency: std::time::Duration,
     /// Which batch this request rode in (diagnostics).
     pub batch_id: u64,
+    /// Simulated hardware energy attributed to this request [J]: its
+    /// share of the batch's tile-`EnergyLedger` delta. 0 for backends
+    /// without an energy model (sim, pjrt).
+    pub energy_j: f64,
 }
 
 /// Failure modes surfaced to clients.

@@ -5,9 +5,11 @@
 //! batches (size/deadline policy, pure cores in `coordinator::batch`) and
 //! round-robins them over `cfg.server.workers` shard workers. Each shard
 //! worker constructs its *own* engine (PJRT handles are not `Send`-safe by
-//! contract, so engines are built inside the worker threads) and its own
-//! independent [`EpsilonSource`] — a per-shard GRNG bank seeded from a
-//! SplitMix64 split of `die_seed`.
+//! contract, so engines are built inside the worker threads); its ε demand
+//! is met per the pool's [`EpsilonSupply`] — an independent
+//! [`EpsilonSource`] per shard (a GRNG bank seeded from a SplitMix64 split
+//! of `die_seed`) for external-ε backends, or nothing at all for the cim
+//! backend, whose memory arrays generate ε in-word during the MVM.
 //!
 //! This mirrors the chip scaled out: each lane's memory array produces the
 //! randomness its MVMs consume, with no shared RNG unit on a bus, so ε
@@ -17,14 +19,14 @@
 //! workers)` pair replays identically for serial workloads (routing is
 //! round-robin on the batch id, not racy work-stealing).
 
-use crate::config::Config;
+use crate::config::{Backend, Config};
 use crate::coordinator::batch::Batch;
 use crate::coordinator::dispatch::{run_dispatcher, run_shard_worker};
-use crate::coordinator::epsilon::{EpsilonSource, GrngBankSource};
+use crate::coordinator::epsilon::{EpsilonSource, EpsilonSupply};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::request::{InferRequest, InferResponse, RejectReason};
 use crate::error::{Error, Result};
-use crate::runtime::{InferenceEngine, SimEngine};
+use crate::runtime::{CimEngine, EpsilonMode, InferenceEngine, SimEngine};
 use crate::util::threadpool::Bounded;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::channel;
@@ -53,23 +55,33 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Start with the default engine (the PJRT runtime; requires the
-    /// `pjrt` feature and built artifacts) and the default ε sources
-    /// (per-shard simulated in-word GRNG banks).
+    /// `pjrt` feature and built artifacts) and the default ε supply
+    /// (per-shard simulated in-word GRNG banks, coordinator-owned).
     pub fn start(cfg: Config) -> Result<Coordinator> {
         #[cfg(feature = "pjrt")]
         return Self::start_with(
             cfg.clone(),
             pjrt_engine_factory(&cfg),
-            GrngBankSource::shard_factory(&cfg.chip),
+            EpsilonSupply::grng_banks(&cfg.chip),
         );
         #[cfg(not(feature = "pjrt"))]
         {
             let _ = cfg;
             Err(Error::Runtime(
                 "built without the `pjrt` feature — use Coordinator::start_sim \
-                 (pure-Rust engine) or Coordinator::start_with"
+                 (pure-Rust engine), start_cim (chip model), or start_with"
                     .into(),
             ))
+        }
+    }
+
+    /// Start on the backend named by `cfg.server.backend` (the
+    /// `serve --backend {sim,cim,pjrt}` entry point).
+    pub fn start_backend(cfg: Config) -> Result<Coordinator> {
+        match cfg.server.backend {
+            Backend::Sim => Self::start_sim(cfg),
+            Backend::Cim => Self::start_cim(cfg),
+            Backend::Pjrt => Self::start(cfg),
         }
     }
 
@@ -81,15 +93,33 @@ impl Coordinator {
         let make_engine: EngineFactory = Arc::new(move |_shard| {
             Ok(Box::new(SimEngine::from_config(&engine_cfg)) as Box<dyn InferenceEngine>)
         });
-        let make_source = GrngBankSource::shard_factory(&cfg.chip);
-        Self::start_with(cfg, make_engine, make_source)
+        let supply = EpsilonSupply::grng_banks(&cfg.chip);
+        Self::start_with(cfg, make_engine, supply)
+    }
+
+    /// Start on the behavioral chip model ([`CimEngine`]): the Bayesian
+    /// head runs on simulated CIM tile arrays whose in-word GRNG banks
+    /// generate ε *inside* the engine — the coordinator supplies none —
+    /// and whose energy ledgers surface fJ/Sample + J/Op into metrics.
+    /// Weights are replicated across shards; each shard gets its own
+    /// simulated die (a `shard_die_seed` split of `chip.die_seed`).
+    pub fn start_cim(cfg: Config) -> Result<Coordinator> {
+        let engine_cfg = cfg.clone();
+        let make_engine: EngineFactory = Arc::new(move |shard| {
+            Ok(Box::new(CimEngine::for_shard(&engine_cfg, shard)) as Box<dyn InferenceEngine>)
+        });
+        Self::start_with(cfg, make_engine, EpsilonSupply::InWord)
     }
 
     /// Start with custom ε sources on the default engine (ablations:
     /// Philox mirror, Wallace…).
     pub fn start_with_source(cfg: Config, make_source: SourceFactory) -> Result<Coordinator> {
         #[cfg(feature = "pjrt")]
-        return Self::start_with(cfg.clone(), pjrt_engine_factory(&cfg), make_source);
+        return Self::start_with(
+            cfg.clone(),
+            pjrt_engine_factory(&cfg),
+            EpsilonSupply::External(make_source),
+        );
         #[cfg(not(feature = "pjrt"))]
         {
             let _ = (cfg, make_source);
@@ -102,11 +132,12 @@ impl Coordinator {
     }
 
     /// Start the full pool: `cfg.server.workers` shard workers, each with
-    /// its own engine and ε source from the factories.
+    /// its own engine from the factory and its ε demand met per `supply`
+    /// (external per-shard sources, or engine-owned in-word ε).
     pub fn start_with(
         cfg: Config,
         make_engine: EngineFactory,
-        make_source: SourceFactory,
+        supply: EpsilonSupply,
     ) -> Result<Coordinator> {
         cfg.validate()?;
         let shards = cfg.server.workers.max(1);
@@ -120,7 +151,7 @@ impl Coordinator {
         let mut workers = Vec::with_capacity(shards);
         for shard in 0..shards {
             let make_engine = Arc::clone(&make_engine);
-            let make_source = Arc::clone(&make_source);
+            let supply = supply.clone();
             let queue = shard_queues[shard].clone();
             let metrics = metrics.clone();
             let cfg = cfg.clone();
@@ -146,7 +177,21 @@ impl Coordinator {
                             return;
                         }
                     };
-                    let source = make_source(shard);
+                    // ε-ownership handshake: in-word engines draw their
+                    // own ε (any external supply is simply unused);
+                    // external-ε engines must be given a source.
+                    let source = match (engine.epsilon_mode(), supply.source_for(shard)) {
+                        (EpsilonMode::InWord, _) => None,
+                        (EpsilonMode::External, Some(s)) => Some(s),
+                        (EpsilonMode::External, None) => {
+                            let _ = ready_tx.send(Err(format!(
+                                "shard {shard}: engine '{}' consumes external ε \
+                                 but the supply is in-word",
+                                engine.name()
+                            )));
+                            return;
+                        }
+                    };
                     let _ = ready_tx.send(Ok(engine.manifest().batch));
                     run_shard_worker(shard, engine, source, queue, metrics, cfg);
                 })
@@ -310,6 +355,19 @@ mod tests {
         cfg.model.mc_samples = 4;
         cfg.server.batch_deadline_ms = 5.0;
         cfg
+    }
+
+    #[test]
+    fn start_backend_dispatches_on_config() {
+        let mut cfg = sim_cfg();
+        cfg.server.backend = crate::config::Backend::Sim;
+        let coord = Coordinator::start_backend(cfg).unwrap();
+        let gen = SyntheticPerson::new(32, 3);
+        let resp = coord.infer_blocking(gen.sample(0).pixels, 0).unwrap();
+        assert_eq!(resp.pred.probs.len(), 2);
+        // External-ε backend: no tile energy model, zero request energy.
+        assert_eq!(resp.energy_j, 0.0);
+        coord.shutdown();
     }
 
     #[test]

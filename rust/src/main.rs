@@ -4,7 +4,7 @@
 //! operational commands (`serve`, `infer`, `calibrate`).
 
 use bnn_cim::cim::{calibrate, CimTile};
-use bnn_cim::config::Config;
+use bnn_cim::config::{Backend, Config};
 use bnn_cim::coordinator::Coordinator;
 use bnn_cim::data::SyntheticPerson;
 use bnn_cim::experiments::{self, fig10_11::Arm};
@@ -122,7 +122,12 @@ fn commands() -> Vec<Command> {
                 opt("rate", "offered requests/second", Some("50")),
                 opt("mc", "MC samples per request", Some("8")),
                 opt("workers", "shard workers (each owns an engine + GRNG bank)", Some("1")),
-                flag("sim", "serve the pure-Rust sim engine (no artifacts needed)"),
+                opt(
+                    "backend",
+                    "engine backend: sim | cim | pjrt (cim = chip model, in-word ε + energy)",
+                    Some("pjrt"),
+                ),
+                flag("sim", "deprecated alias for --backend sim"),
             ],
         },
     ]
@@ -288,15 +293,17 @@ fn cmd_serve(args: &bnn_cim::util::cli::Args) -> CmdResult {
     let rate = args.get_f64("rate", 50.0)?;
     cfg.model.mc_samples = args.get_usize("mc", 8)?;
     cfg.server.workers = args.get_usize("workers", cfg.server.workers)?;
-    let coord = if args.has_flag("sim") {
-        Coordinator::start_sim(cfg.clone())?
-    } else {
-        Coordinator::start(cfg.clone())?
-    };
+    if let Some(b) = args.get("backend") {
+        cfg.server.backend = Backend::parse(b)?;
+    } else if args.has_flag("sim") {
+        eprintln!("warning: --sim is deprecated; use --backend sim");
+        cfg.server.backend = Backend::Sim;
+    }
+    let coord = Coordinator::start_backend(cfg.clone())?;
     println!(
         "serving on {} shard worker(s), backend = {}",
         cfg.server.workers,
-        if args.has_flag("sim") { "sim" } else { "pjrt" }
+        cfg.server.backend.name()
     );
     let gen = SyntheticPerson::new(cfg.model.image_side, 321);
     let period = Duration::from_secs_f64(1.0 / rate.max(0.1));

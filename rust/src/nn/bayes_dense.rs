@@ -197,6 +197,20 @@ impl BayesDense {
             .map(|hw| hw.array.ledger())
             .unwrap_or_default()
     }
+
+    /// Zero the mapped tiles' energy ledgers (e.g. to drop bring-up
+    /// programming/calibration costs before metering serving traffic).
+    pub fn reset_ledgers(&mut self) {
+        if let Some(hw) = self.hw.as_mut() {
+            hw.array.reset_ledgers();
+        }
+    }
+
+    /// Mutable access to the mapped tile array (fidelity tests and
+    /// hardware diagnostics; `None` until `map_to_hardware`).
+    pub fn hw_array_mut(&mut self) -> Option<&mut TileArray> {
+        self.hw.as_mut().map(|hw| &mut hw.array)
+    }
 }
 
 #[cfg(test)]

@@ -281,6 +281,25 @@ impl Model {
         self.head.iter().all(|l| l.is_mapped())
     }
 
+    /// Aggregate energy ledger across every mapped head layer's tiles
+    /// (empty if the head is unmapped). Non-destructive: repeated reads
+    /// return the same cumulative totals.
+    pub fn head_ledger(&self) -> crate::energy::EnergyLedger {
+        let mut total = crate::energy::EnergyLedger::new();
+        for layer in &self.head {
+            total.absorb(&layer.ledger());
+        }
+        total
+    }
+
+    /// Zero the mapped head layers' energy ledgers (drop bring-up costs
+    /// before metering serving traffic).
+    pub fn reset_head_ledgers(&mut self) {
+        for layer in &mut self.head {
+            layer.reset_ledgers();
+        }
+    }
+
     /// One MC sample through the Bayesian head (hardware sim).
     pub fn head_sample_hw(&mut self, features: &[f32]) -> Vec<f64> {
         let mut x = features.to_vec();

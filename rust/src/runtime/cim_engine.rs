@@ -1,0 +1,351 @@
+//! The behavioral chip model as a serving backend.
+//!
+//! `CimEngine` implements the coordinator's `InferenceEngine` contract by
+//! mapping the Bayesian head onto simulated `cim::TileArray`s
+//! (`Model::map_head_to_hardware`): μ/σ weights are quantized into the
+//! differential/magnitude word encodings, every tile is bring-up
+//! calibrated (Eq. 8–10), and each head MVM runs through the full analog
+//! chain — IDAC drives, σε subarray, SAR ADCs, reduction logic — with ε
+//! refreshed by the *in-word GRNG bank inside the engine*. This is the
+//! chip's dataflow: the memory array that stores σ produces the
+//! randomness the MVM consumes, so the engine declares
+//! [`EpsilonMode::InWord`] and the coordinator supplies no external ε.
+//!
+//! The deterministic feature extractor runs in Rust
+//! (`Model::forward_features`), mirroring the paper's partial-Bayesian
+//! split (§III-A): only the FC head lives on CIM tiles.
+//!
+//! Determinism: weights derive from [`CIM_WEIGHT_SEED`] alone (shared by
+//! every shard, like replicated PJRT engines), while the die — mismatch,
+//! ADC/IDAC non-idealities, GRNG streams — derives from the shard's
+//! `die_seed` split. Two engines built for the same `(cfg, shard)` replay
+//! bit-identically.
+//!
+//! Energy: every MVM deposits joules into the tiles' `EnergyLedger`s;
+//! [`CimEngine::energy_report`] exposes the cumulative totals (fJ/Sample,
+//! J/Op numerators) without ever resetting them. Bring-up costs
+//! (programming + calibration) are cleared at construction so the report
+//! meters serving traffic only.
+
+use super::artifact::{ArtifactSpec, Manifest};
+use super::{EngineEnergyReport, EpsilonMode, InferenceEngine};
+use crate::config::Config;
+use crate::energy::Component;
+use crate::error::{Error, Result};
+use crate::grng::shard_chip;
+use crate::nn::Model;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Weight seed shared by every shard of a simulated CIM deployment (the
+/// "model weights" replicated across lanes; dies still differ per shard).
+pub const CIM_WEIGHT_SEED: u64 = 0xC1BE_27F0_5EED_CA11;
+
+/// Chip-model inference backend (no artifacts, no PJRT toolchain).
+pub struct CimEngine {
+    manifest: Manifest,
+    model: Model,
+    /// MAC ops represented by one per-tile MVM (J/Op denominator).
+    ops_per_tile_mvm: u64,
+    executions: u64,
+}
+
+impl CimEngine {
+    /// Engine for shard `shard` of a serving pool: shared weights, an
+    /// independent die (`shard_die_seed` split of `chip.die_seed`), and
+    /// the head mapped + calibrated onto tile arrays.
+    pub fn for_shard(cfg: &Config, shard: usize) -> Self {
+        let chip = shard_chip(&cfg.chip, shard);
+        let batch = cfg.server.max_batch.max(1);
+        let side = cfg.model.image_side;
+        let classes = cfg.model.classes;
+        let mut model = Model::random(side, classes, CIM_WEIGHT_SEED);
+        model.map_head_to_hardware(&chip);
+        // Bring-up (programming + calibration) energy is a one-time cost;
+        // zero the ledgers so energy_report meters serving traffic only.
+        model.reset_head_ledgers();
+
+        let feature_dim = model.feature_dim;
+        let pixels = side * side;
+        let spec = |name: &str,
+                    inputs: Vec<(String, Vec<usize>)>,
+                    outputs: Vec<(String, Vec<usize>)>| ArtifactSpec {
+            file: PathBuf::from(format!("cim://{name}")),
+            inputs,
+            outputs,
+        };
+        let mut entry_points = BTreeMap::new();
+        entry_points.insert(
+            "features".to_string(),
+            spec(
+                "features",
+                vec![("pixels".to_string(), vec![batch, pixels])],
+                vec![("features".to_string(), vec![batch, feature_dim])],
+            ),
+        );
+        // In-word ε: the head takes features only — no ε inputs exist in
+        // this engine's contract (EpsilonMode::InWord).
+        entry_points.insert(
+            "head".to_string(),
+            spec(
+                "head",
+                vec![("features".to_string(), vec![batch, feature_dim])],
+                vec![("probs".to_string(), vec![batch, classes])],
+            ),
+        );
+        entry_points.insert(
+            "full".to_string(),
+            spec(
+                "full",
+                vec![("pixels".to_string(), vec![batch, pixels])],
+                vec![("probs".to_string(), vec![batch, classes])],
+            ),
+        );
+        let manifest = Manifest {
+            batch,
+            side,
+            feature_dim,
+            classes,
+            entry_points,
+            dir: PathBuf::from("cim://"),
+        };
+        Self {
+            manifest,
+            model,
+            ops_per_tile_mvm: chip.tile.ops_per_mvm() as u64,
+            executions: 0,
+        }
+    }
+
+    /// Engine matching a serving [`Config`] on the chip's own die
+    /// (shard 0 keeps `die_seed` unsplit).
+    pub fn from_config(cfg: &Config) -> Self {
+        Self::for_shard(cfg, 0)
+    }
+
+    /// The mapped model (fidelity tests / hardware diagnostics).
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+
+    /// Mutable access to the mapped model (fidelity tests drive the tile
+    /// arrays directly to compare MVMs against `mvm_reference`).
+    pub fn model_mut(&mut self) -> &mut Model {
+        &mut self.model
+    }
+
+    fn run_features(&self, images: &[f32]) -> Vec<f32> {
+        let b = self.manifest.batch;
+        let p = self.manifest.side * self.manifest.side;
+        let fdim = self.manifest.feature_dim;
+        let mut out = Vec::with_capacity(b * fdim);
+        for bi in 0..b {
+            out.extend(self.model.forward_features(&images[bi * p..(bi + 1) * p]));
+        }
+        out
+    }
+
+    fn run_head(&mut self, feats: &[f32]) -> Vec<f32> {
+        let b = self.manifest.batch;
+        let fdim = self.manifest.feature_dim;
+        let c = self.manifest.classes;
+        let mut out = Vec::with_capacity(b * c);
+        for bi in 0..b {
+            // One hardware MC pass per slot: each tile MVM refreshes ε
+            // from its in-word bank, so every slot draws fresh randomness.
+            // Padding slots execute too (the static-batch contract shared
+            // with the AOT artifacts), so a fused call's energy covers the
+            // whole array activation — fJ/Sample and J/Op stay normalized
+            // because their denominators scale with the same passes.
+            let probs = self.model.head_sample_hw(&feats[bi * fdim..(bi + 1) * fdim]);
+            out.extend(probs.iter().map(|&v| v as f32));
+        }
+        out
+    }
+}
+
+impl InferenceEngine for CimEngine {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn run(&mut self, entry: &str, inputs: &[(&[f32], &Vec<usize>)]) -> Result<Vec<f32>> {
+        let spec = self.manifest.entry(entry)?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "entry '{entry}' expects {} inputs, got {} (in-word ε: the \
+                 head takes features only)",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (data, _shape)) in inputs.iter().enumerate() {
+            let want: usize = spec.inputs[i].1.iter().product();
+            if data.len() != want {
+                return Err(Error::Runtime(format!(
+                    "entry '{entry}' input {i} ('{}') expects {} elements, got {}",
+                    spec.inputs[i].0,
+                    want,
+                    data.len()
+                )));
+            }
+        }
+        let out = match entry {
+            "features" => self.run_features(inputs[0].0),
+            "head" => self.run_head(inputs[0].0),
+            "full" => {
+                let feats = self.run_features(inputs[0].0);
+                self.run_head(&feats)
+            }
+            other => return Err(Error::Runtime(format!("unknown entry '{other}'"))),
+        };
+        self.executions += 1;
+        Ok(out)
+    }
+
+    fn executions(&self) -> u64 {
+        self.executions
+    }
+
+    fn name(&self) -> &'static str {
+        "cim"
+    }
+
+    fn epsilon_mode(&self) -> EpsilonMode {
+        EpsilonMode::InWord
+    }
+
+    fn energy_report(&self) -> Option<EngineEnergyReport> {
+        let ledger = self.model.head_ledger();
+        Some(EngineEnergyReport {
+            total_j: ledger.total_j(),
+            grng_j: ledger.component_j(Component::Grng),
+            grng_samples: ledger.grng_samples,
+            mvm_count: ledger.mvm_count,
+            total_ops: ledger.mvm_count * self.ops_per_tile_mvm,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Small tiles keep bring-up calibration cheap in debug builds.
+    fn tiny_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.chip.tile.rows = 16;
+        cfg.chip.tile.words_per_row = 4;
+        cfg.server.max_batch = 2;
+        cfg
+    }
+
+    #[test]
+    fn manifest_contract_declares_in_word_epsilon() {
+        let cfg = tiny_cfg();
+        let e = CimEngine::from_config(&cfg);
+        assert_eq!(e.epsilon_mode(), EpsilonMode::InWord);
+        let m = e.manifest();
+        assert_eq!(m.batch, 2);
+        assert_eq!(m.classes, cfg.model.classes);
+        for ep in ["features", "head", "full"] {
+            assert!(m.entry_points.contains_key(ep), "missing {ep}");
+        }
+        // The head consumes features only — ε never crosses the boundary.
+        assert_eq!(m.entry("head").unwrap().inputs.len(), 1);
+        assert_eq!(m.entry("full").unwrap().inputs.len(), 1);
+    }
+
+    #[test]
+    fn head_produces_normalized_stochastic_probs_and_meters_energy() {
+        let cfg = tiny_cfg();
+        let mut e = CimEngine::from_config(&cfg);
+        let m = e.manifest().clone();
+        let images = vec![0.4f32; m.batch * m.side * m.side];
+        let fspec = m.entry("features").unwrap().clone();
+        let feats = e.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
+        assert_eq!(feats.len(), m.batch * m.feature_dim);
+        // Feature extraction is software: no tile energy yet.
+        let r0 = e.energy_report().unwrap();
+        assert_eq!(r0.mvm_count, 0);
+        assert!(r0.total_j == 0.0, "bring-up energy must be cleared");
+
+        let hspec = m.entry("head").unwrap().clone();
+        let p0 = e.run("head", &[(&feats, &hspec.inputs[0].1)]).unwrap();
+        for row in p0.chunks(m.classes) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "softmax row sums to {sum}");
+        }
+        // Fresh in-word ε per pass ⇒ stochastic head.
+        let p1 = e.run("head", &[(&feats, &hspec.inputs[0].1)]).unwrap();
+        assert_ne!(p0, p1, "in-word ε must vary across MC passes");
+        // Every MVM deposited joules and drew ε from the in-word banks.
+        let r = e.energy_report().unwrap();
+        assert!(r.mvm_count > 0 && r.total_j > 0.0);
+        assert!(r.grng_samples > 0 && r.grng_j > 0.0);
+        assert!(r.total_ops >= r.mvm_count);
+        // Headline sanity: fJ/Sample in the hardware ballpark (≈360 fJ).
+        let fj_per_sample = r.grng_j / r.grng_samples as f64 * 1e15;
+        assert!(
+            (100.0..1000.0).contains(&fj_per_sample),
+            "fJ/Sample {fj_per_sample:.0} out of range"
+        );
+        assert_eq!(e.executions(), 3);
+    }
+
+    #[test]
+    fn same_shard_is_bit_identical_across_instances() {
+        let cfg = tiny_cfg();
+        let mut a = CimEngine::for_shard(&cfg, 0);
+        let mut b = CimEngine::for_shard(&cfg, 0);
+        let m = a.manifest().clone();
+        let images = vec![0.7f32; m.batch * m.side * m.side];
+        let fspec = m.entry("features").unwrap().clone();
+        let fa = a.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
+        let fb = b.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
+        assert_eq!(fa, fb);
+        let hspec = m.entry("head").unwrap().clone();
+        for _ in 0..3 {
+            let pa = a.run("head", &[(&fa, &hspec.inputs[0].1)]).unwrap();
+            let pb = b.run("head", &[(&fb, &hspec.inputs[0].1)]).unwrap();
+            assert_eq!(pa, pb, "same (weights, die) must replay bitwise");
+        }
+    }
+
+    #[test]
+    fn different_shards_draw_different_dies() {
+        let cfg = tiny_cfg();
+        let mut a = CimEngine::for_shard(&cfg, 0);
+        let mut b = CimEngine::for_shard(&cfg, 1);
+        let m = a.manifest().clone();
+        let images = vec![0.7f32; m.batch * m.side * m.side];
+        let fspec = m.entry("features").unwrap().clone();
+        let fa = a.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
+        // Weights are shared across shards: identical feature paths.
+        let fb = b.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
+        assert_eq!(fa, fb);
+        // Dies are not: ε streams (and analog chains) differ.
+        let hspec = m.entry("head").unwrap().clone();
+        let pa = a.run("head", &[(&fa, &hspec.inputs[0].1)]).unwrap();
+        let pb = b.run("head", &[(&fb, &hspec.inputs[0].1)]).unwrap();
+        assert_ne!(pa, pb, "independent dies must sample independently");
+    }
+
+    #[test]
+    fn rejects_wrong_shapes_and_epsilon_inputs() {
+        let cfg = tiny_cfg();
+        let mut e = CimEngine::from_config(&cfg);
+        let m = e.manifest().clone();
+        let fspec = m.entry("features").unwrap().clone();
+        let short = vec![0.0f32; 3];
+        assert!(e.run("features", &[(&short, &fspec.inputs[0].1)]).is_err());
+        // Passing external ε to an in-word engine is a contract error.
+        let feats = vec![0.0f32; m.batch * m.feature_dim];
+        let hspec = m.entry("head").unwrap().clone();
+        let eps = vec![0.0f32; 8];
+        let shape = &hspec.inputs[0].1;
+        let with_eps = [(&feats[..], shape), (&eps[..], shape)];
+        assert!(e.run("head", &with_eps).is_err());
+        assert!(e.run("nope", &[]).is_err());
+    }
+}

@@ -1,6 +1,6 @@
 //! Execution engines behind the serving coordinator.
 //!
-//! Two backends implement [`InferenceEngine`]:
+//! Three backends implement [`InferenceEngine`]:
 //!
 //! - [`Engine`] (feature `pjrt`) — the real PJRT runtime: loads
 //!   AOT-compiled HLO-text artifacts and executes them on the request
@@ -15,22 +15,58 @@
 //!   artifacts and no toolchain, so the sharded coordinator, its tests,
 //!   and `benches/sharded_serving.rs` exercise the full batching/ε path
 //!   in every build.
+//! - [`CimEngine`] — the behavioral chip model as a serving backend: the
+//!   Bayesian head runs on simulated `cim::TileArray`s whose in-word GRNG
+//!   banks generate ε *inside* the engine ([`EpsilonMode::InWord`]), and
+//!   tile `EnergyLedger`s meter every MVM.
 //!
 //! Engines are *not* required to be `Send`: the coordinator constructs
 //! one engine inside each shard-worker thread (PJRT handles are not
 //! `Send`-safe by contract) and they never cross threads.
 
 mod artifact;
+mod cim_engine;
 #[cfg(feature = "pjrt")]
 mod executor;
 mod sim;
 
 pub use artifact::{ArtifactSpec, Manifest};
+pub use cim_engine::CimEngine;
 #[cfg(feature = "pjrt")]
 pub use executor::{Engine, LoadedEntry};
 pub use sim::SimEngine;
 
 use crate::error::Result;
+
+/// Who produces the ε that the Bayesian head consumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EpsilonMode {
+    /// ε is an engine *input*: the coordinator fills buffers from a
+    /// per-shard `EpsilonSource` and passes them to `run` alongside the
+    /// features (the AOT-artifact and sim contracts).
+    External,
+    /// ε materializes inside the engine's memory arrays (in-word GRNG):
+    /// `run("head", …)` takes features only, and the engine reports its
+    /// own ε/energy counters via [`InferenceEngine::energy_report`].
+    InWord,
+}
+
+/// Cumulative hardware-energy counters for engines that model the chip.
+/// All values are absolute totals since engine construction (snapshots of
+/// them must therefore never reset anything — see `coordinator::metrics`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineEnergyReport {
+    /// Total tile energy deposited so far [J].
+    pub total_j: f64,
+    /// GRNG component of `total_j` [J] (the fJ/Sample numerator).
+    pub grng_j: f64,
+    /// ε samples drawn by the in-word banks so far.
+    pub grng_samples: u64,
+    /// Per-tile MVMs executed so far.
+    pub mvm_count: u64,
+    /// MAC ops represented by those MVMs (the J/Op denominator).
+    pub total_ops: u64,
+}
 
 /// A loaded inference backend: shape metadata plus entry-point execution.
 pub trait InferenceEngine {
@@ -46,6 +82,18 @@ pub trait InferenceEngine {
 
     /// Backend tag for logs/metrics.
     fn name(&self) -> &'static str;
+
+    /// Whether this engine consumes external ε inputs or generates ε in
+    /// its own memory arrays. Default: the historical artifact contract.
+    fn epsilon_mode(&self) -> EpsilonMode {
+        EpsilonMode::External
+    }
+
+    /// Cumulative energy/ε counters for engines that model hardware;
+    /// `None` for purely software backends.
+    fn energy_report(&self) -> Option<EngineEnergyReport> {
+        None
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,116 @@
+//! Property tests for the pure batch/slot-packing cores
+//! (`coordinator::batch`), via the offline `util::propcheck` harness:
+//!
+//! - slot packing round-trips requests: every (request, MC-pass) pair
+//!   occupies exactly one slot, requests laid out request-major;
+//! - no call ever exceeds the artifact batch capacity, and only the last
+//!   call may be partial;
+//! - `effective_t` respects `server.max_mc_samples` for arbitrary request
+//!   mixes that passed the submit-time bound.
+
+use bnn_cim::coordinator::batch::{effective_t, pack_images, plan_calls, scatter_features};
+use bnn_cim::util::propcheck::{property, Gen};
+
+#[test]
+fn plan_calls_round_trips_every_request_pass_pair() {
+    property("plan round-trips (request, pass) pairs", 300, |g| {
+        let n_requests = g.usize_in(1, 12);
+        let t = g.usize_in(1, 24);
+        let art_batch = g.usize_in(1, 16);
+        let plan = plan_calls(n_requests, t, art_batch);
+        // Exactly ceil(n·t / B) calls.
+        assert_eq!(plan.len(), (n_requests * t).div_ceil(art_batch));
+        let mut passes_per_request = vec![0usize; n_requests];
+        let mut flat = Vec::new();
+        for (ci, owners) in plan.iter().enumerate() {
+            // Capacity is never exceeded…
+            assert!(
+                owners.len() <= art_batch,
+                "call {ci} packs {} > {art_batch} slots",
+                owners.len()
+            );
+            // …and only the final call may be partial.
+            if ci + 1 < plan.len() {
+                assert_eq!(owners.len(), art_batch, "call {ci} under-filled early");
+            }
+            for &r in owners {
+                assert!(r < n_requests, "owner {r} out of range");
+                passes_per_request[r] += 1;
+                flat.push(r);
+            }
+        }
+        // Round trip: every request got exactly its t passes…
+        assert_eq!(passes_per_request, vec![t; n_requests]);
+        // …in request-major order (request 0's passes first).
+        let mut sorted = flat.clone();
+        sorted.sort_unstable();
+        assert_eq!(flat, sorted, "pairs must be laid out request-major");
+    });
+}
+
+#[test]
+fn effective_t_respects_max_mc_samples_for_arbitrary_mixes() {
+    property("effective_t bounded by max_mc_samples", 300, |g| {
+        let max_mc = g.usize_in(1, 64);
+        let default_t = g.usize_in(1, max_mc);
+        let n = g.usize_in(1, 10);
+        // Mixes that passed the submit-time bound: 0 (= server default)
+        // or 1..=max_mc.
+        let mc: Vec<usize> = (0..n)
+            .map(|_| {
+                if g.bool() {
+                    0
+                } else {
+                    g.usize_in(1, max_mc)
+                }
+            })
+            .collect();
+        let t = effective_t(&mc, default_t);
+        assert!(t >= 1, "a fused batch always runs at least one pass");
+        assert!(
+            t <= max_mc,
+            "effective t={t} exceeds max_mc_samples={max_mc} for mix {mc:?}"
+        );
+        // t is the max over substituted members.
+        let expect = mc
+            .iter()
+            .map(|&m| if m == 0 { default_t } else { m })
+            .max()
+            .unwrap();
+        assert_eq!(t, expect);
+    });
+}
+
+#[test]
+fn pack_and_scatter_round_trip_request_payloads() {
+    property("pack_images + scatter_features round-trip", 200, |g| {
+        let ppi = g.usize_in(1, 16);
+        let art_batch = g.usize_in(1, 8);
+        let n = g.usize_in(1, art_batch);
+        let images: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..ppi).map(|_| g.f32_in(-1.0, 1.0)).collect())
+            .collect();
+        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+        let packed = pack_images(&refs, art_batch, ppi);
+        assert_eq!(packed.len(), art_batch * ppi);
+        for (i, img) in images.iter().enumerate() {
+            assert_eq!(&packed[i * ppi..(i + 1) * ppi], img.as_slice());
+        }
+        // Tail slots are zero-filled.
+        assert!(packed[n * ppi..].iter().all(|&v| v == 0.0));
+
+        // Scattering replicates each owner's feature row into its slot.
+        let feat_dim = g.usize_in(1, 8);
+        let feats: Vec<f32> = (0..n * feat_dim).map(|_| g.f32_in(-2.0, 2.0)).collect();
+        let owners: Vec<usize> = (0..art_batch).map(|_| g.usize_in(0, n - 1)).collect();
+        let mut out = vec![0.0f32; art_batch * feat_dim];
+        scatter_features(&feats, &owners, feat_dim, &mut out);
+        for (slot, &owner) in owners.iter().enumerate() {
+            assert_eq!(
+                &out[slot * feat_dim..(slot + 1) * feat_dim],
+                &feats[owner * feat_dim..(owner + 1) * feat_dim],
+                "slot {slot} lost request {owner}'s features"
+            );
+        }
+    });
+}

@@ -14,7 +14,7 @@
 use bnn_cim::bayes::aggregate_mc;
 use bnn_cim::config::Config;
 use bnn_cim::coordinator::{
-    shard_die_seed, Coordinator, EngineFactory, EpsilonSource, GrngBankSource,
+    shard_die_seed, Coordinator, EngineFactory, EpsilonSource, EpsilonSupply, GrngBankSource,
 };
 use bnn_cim::data::SyntheticPerson;
 use bnn_cim::runtime::{InferenceEngine, SimEngine};
@@ -140,7 +140,7 @@ fn single_shard_is_bit_identical_to_unsharded_reference() {
     let coord = Coordinator::start_with(
         cfg.clone(),
         sim_engine_factory(&cfg),
-        GrngBankSource::shard_factory(&cfg.chip),
+        EpsilonSupply::grng_banks(&cfg.chip),
     )
     .unwrap();
     for i in 0..n {
