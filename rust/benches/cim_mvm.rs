@@ -1,0 +1,119 @@
+//! Bench: MVM hot path — pre-PR AoS baseline (`CimTile::mvm_legacy`) vs
+//! the bit-plane SoA fast path (`CimTile::mvm`) vs the MC-batched fast
+//! path (`CimTile::mvm_batch` / `TileArray::mvm_batch`), on the default
+//! 64×8 chip tile. Writes the calibrated `BENCH_cim_mvm.json` at the
+//! repo root (the smoke-scale seed comes from `tests/mvm_props.rs`), so
+//! the MVM perf trajectory across PRs is machine-readable.
+//!
+//! The two paths are bit-identical (pinned by tests/mvm_props.rs); this
+//! bench measures only the wallclock consequences of the layout change:
+//! contiguous branch-free multiply-accumulates, reusable scratch buffers,
+//! and batch-amortized IDAC drives / plane builds / ledger deposits.
+
+use bnn_cim::cim::{calibrate, CimTile, MvmOptions, TileArray};
+use bnn_cim::config::ChipConfig;
+use bnn_cim::util::bench::{
+    black_box, repo_root_artifact, write_mvm_report, MvmBenchCase, Suite,
+};
+use bnn_cim::util::rng::{Pcg64, Rng64};
+
+fn main() {
+    let mut suite = Suite::new("cim_mvm (AoS legacy vs SoA fast path vs MC batch)");
+    suite.header();
+    let chip = ChipConfig::default();
+    let ops = chip.tile.ops_per_mvm() as f64;
+    let mut tile = CimTile::new(&chip);
+    calibrate(&mut tile, 16, 32).unwrap();
+    let mut rng = Pcg64::new(3);
+    let n = chip.tile.rows * chip.tile.words_per_row;
+    let mu: Vec<f64> = (0..n).map(|_| (rng.next_f64() * 2.0 - 1.0) * 200.0).collect();
+    let sg: Vec<f64> = (0..n).map(|_| rng.next_f64() * 12.0).collect();
+    tile.program_matrix(&mu, &sg);
+    let x: Vec<u8> = (0..chip.tile.rows).map(|_| rng.next_below(16) as u8).collect();
+
+    let fresh = MvmOptions::default();
+    let held = MvmOptions {
+        refresh_epsilon: false,
+        ..MvmOptions::default()
+    };
+    let batch = 32usize;
+
+    let legacy_fresh = suite
+        .bench_throughput("legacy AoS mvm (fresh ε)", ops, || {
+            black_box(tile.mvm_legacy(&x, fresh));
+        })
+        .ns_per_iter;
+    let soa_fresh = suite
+        .bench_throughput("SoA mvm (fresh ε)", ops, || {
+            black_box(tile.mvm(&x, fresh));
+        })
+        .ns_per_iter;
+    let batch_fresh = suite
+        .bench_throughput("SoA mvm_batch/32 (fresh ε)", ops * batch as f64, || {
+            black_box(tile.mvm_batch(&x, batch, fresh));
+        })
+        .ns_per_iter
+        / batch as f64;
+    let legacy_held = suite
+        .bench_throughput("legacy AoS mvm (held ε)", ops, || {
+            black_box(tile.mvm_legacy(&x, held));
+        })
+        .ns_per_iter;
+    let soa_held = suite
+        .bench_throughput("SoA mvm (held ε)", ops, || {
+            black_box(tile.mvm(&x, held));
+        })
+        .ns_per_iter;
+    let batch_held = suite
+        .bench_throughput("SoA mvm_batch/32 (held ε)", ops * batch as f64, || {
+            black_box(tile.mvm_batch(&x, batch, held));
+        })
+        .ns_per_iter
+        / batch as f64;
+
+    // Array-level batching (the serving head's layer-0 shape, 64→32).
+    let mut arr = TileArray::new(&chip, 64, 32);
+    arr.program_matrix(&vec![100.0; 64 * 32], &vec![6.0; 64 * 32]);
+    let x64: Vec<u8> = (0..64).map(|_| rng.next_below(16) as u8).collect();
+    suite.bench_throughput("array 64x32 mvm_batch/32 (fresh ε)", 64.0 * 32.0 * 2.0 * batch as f64, || {
+        black_box(arr.mvm_batch(&x64, batch, fresh));
+    });
+
+    let speedup_single_thread = legacy_held / batch_held.max(1e-9);
+    let speedup_fresh = legacy_fresh / batch_fresh.max(1e-9);
+    suite.note(
+        "held-ε speedup (batched SoA vs legacy)",
+        format!("{speedup_single_thread:.2}x"),
+    );
+    suite.note(
+        "fresh-ε speedup (batched SoA vs legacy)",
+        format!("{speedup_fresh:.2}x"),
+    );
+
+    let cases = [
+        MvmBenchCase::new("legacy_aos_fresh_eps", legacy_fresh, ops),
+        MvmBenchCase::new("soa_fresh_eps", soa_fresh, ops),
+        MvmBenchCase::new("soa_batch32_fresh_eps", batch_fresh, ops),
+        MvmBenchCase::new("legacy_aos_held_eps", legacy_held, ops),
+        MvmBenchCase::new("soa_held_eps", soa_held, ops),
+        MvmBenchCase::new("soa_batch32_held_eps", batch_held, ops),
+    ];
+    let quick = std::env::args().any(|a| a == "--quick");
+    let source = if quick {
+        "benches/cim_mvm.rs --quick (calibrated, release profile)"
+    } else {
+        "benches/cim_mvm.rs (calibrated, release profile)"
+    };
+    write_mvm_report(
+        &repo_root_artifact("BENCH_cim_mvm.json"),
+        source,
+        chip.tile.rows,
+        chip.tile.words_per_row,
+        &cases,
+        &[
+            ("speedup_single_thread", speedup_single_thread),
+            ("speedup_fresh_eps", speedup_fresh),
+        ],
+    );
+    suite.finish();
+}

@@ -21,11 +21,18 @@ use bnn_cim::util::bench::{
 };
 use bnn_cim::util::json::Json;
 
-fn run_point(backend: Backend, workers: usize, n_req: usize, mc: usize) -> ServingSweepPoint {
+fn run_point(
+    backend: Backend,
+    workers: usize,
+    mc_workers: usize,
+    n_req: usize,
+    mc: usize,
+) -> ServingSweepPoint {
     let mut cfg = Config::default();
     cfg.server.backend = backend;
     cfg.model.mc_samples = mc;
     cfg.server.workers = workers;
+    cfg.server.mc_workers = mc_workers;
     cfg.server.max_batch = 8;
     cfg.server.batch_deadline_ms = 0.5;
     measure_serving_sweep(&cfg, n_req)
@@ -43,38 +50,47 @@ fn main() {
 
     // Warm passes (both backends) so page-cache/allocator effects don't
     // bias each sweep's workers=1 baseline.
-    let _ = run_point(Backend::Sim, 1, sim_req / 4, mc);
-    let _ = run_point(Backend::Cim, 1, cim_req / 4, mc);
+    let _ = run_point(Backend::Sim, 1, 1, sim_req / 4, mc);
+    let _ = run_point(Backend::Cim, 1, 1, cim_req / 4, mc);
 
     let mut sweeps: Vec<Json> = Vec::new();
-    for &(backend, n_req) in &[(Backend::Sim, sim_req), (Backend::Cim, cim_req)] {
+    // For cim, also sweep the engine-level MC fan-out (`mc_workers`):
+    // shard workers scale across requests, MC replicas scale across the
+    // Monte-Carlo samples *inside* each fused batch.
+    let plans: [(Backend, usize, &[usize]); 2] = [
+        (Backend::Sim, sim_req, &[1]),
+        (Backend::Cim, cim_req, &[1, 4]),
+    ];
+    for &(backend, n_req, mc_worker_sweep) in &plans {
         let mut baseline = 0.0f64;
-        for &workers in &[1usize, 2, 4] {
-            let p = run_point(backend, workers, n_req, mc);
-            if workers == 1 {
-                baseline = p.req_per_s;
+        for &mc_workers in mc_worker_sweep {
+            for &workers in &[1usize, 2, 4] {
+                let p = run_point(backend, workers, mc_workers, n_req, mc);
+                if workers == 1 && mc_workers == mc_worker_sweep[0] {
+                    baseline = p.req_per_s;
+                }
+                let mut line = format!(
+                    "{:.1} req/s ({:.2}x vs 1 worker), {} batches, fill {:.2}",
+                    p.req_per_s,
+                    p.req_per_s / baseline.max(1e-9),
+                    p.batches,
+                    p.mean_fill
+                );
+                if p.engine_fj_per_op > 0.0 {
+                    line.push_str(&format!(
+                        ", {:.0} fJ/Sa, {:.0} fJ/Op",
+                        p.eps_fj_per_sample, p.engine_fj_per_op
+                    ));
+                }
+                suite.note(
+                    &format!(
+                        "{} workers={workers} mc_workers={mc_workers} ({n_req} req, T={mc})",
+                        backend.name()
+                    ),
+                    line,
+                );
+                sweeps.push(p.to_json());
             }
-            let mut line = format!(
-                "{:.1} req/s ({:.2}x vs 1 worker), {} batches, fill {:.2}",
-                p.req_per_s,
-                p.req_per_s / baseline.max(1e-9),
-                p.batches,
-                p.mean_fill
-            );
-            if p.engine_fj_per_op > 0.0 {
-                line.push_str(&format!(
-                    ", {:.0} fJ/Sa, {:.0} fJ/Op",
-                    p.eps_fj_per_sample, p.engine_fj_per_op
-                ));
-            }
-            suite.note(
-                &format!(
-                    "{} workers={workers} ({n_req} req, T={mc})",
-                    backend.name()
-                ),
-                line,
-            );
-            sweeps.push(p.to_json());
         }
     }
     suite.note(

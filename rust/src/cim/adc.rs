@@ -36,6 +36,12 @@ impl SarAdc {
         (noisy.round() as i64).clamp(lo, hi)
     }
 
+    /// Replace the per-conversion noise stream, keeping the static offset
+    /// (an MC-parallel replica of the same physical ADC).
+    pub fn reseed_noise(&mut self, seed: u64) {
+        self.noise_rng = Xoshiro256::new(seed ^ 0xADC1);
+    }
+
     /// Ideal conversion (no offset/noise) — ablation reference.
     pub fn convert_ideal(&self, v_lsb: f64) -> i64 {
         let (lo, hi) = self.cfg.code_range();

@@ -8,6 +8,7 @@ use crate::config::ChipConfig;
 use crate::energy::EnergyLedger;
 
 /// A grid of CIM tiles implementing a `in_dim × out_dim` matrix.
+#[derive(Clone)]
 pub struct TileArray {
     pub chip: ChipConfig,
     pub in_dim: usize,
@@ -16,6 +17,8 @@ pub struct TileArray {
     tiles_y: usize,
     /// Row-major over (tile_row, tile_col) = (input chunk, output chunk).
     tiles: Vec<CimTile>,
+    /// Reusable zero-padded input chunk (no per-MVM allocation).
+    chunk: Vec<u8>,
 }
 
 impl TileArray {
@@ -39,6 +42,17 @@ impl TileArray {
             tiles_x,
             tiles_y,
             tiles,
+            chunk: vec![0u8; rows],
+        }
+    }
+
+    /// Reseed every tile's stochastic streams (GRNG cells, ADC noise)
+    /// from SplitMix64 splits of `seed`; static die state is untouched.
+    /// See [`CimTile::reseed_streams`].
+    pub fn reseed_streams(&mut self, seed: u64) {
+        let mut seeder = crate::util::rng::SplitMix64::new(seed ^ 0xA88A_F1E1_D5E2_0B17);
+        for t in &mut self.tiles {
+            t.reseed_streams(seeder.split());
         }
     }
 
@@ -92,15 +106,9 @@ impl TileArray {
         let words = self.chip.tile.words_per_row;
         let mut out_mu = vec![0.0f64; self.out_dim];
         let mut out_sigma = vec![0.0f64; self.out_dim];
+        let mut chunk = std::mem::take(&mut self.chunk);
         for tx in 0..self.tiles_x {
-            // Input chunk, zero-padded.
-            let mut chunk = vec![0u8; rows];
-            for r in 0..rows {
-                let gi = tx * rows + r;
-                if gi < self.in_dim {
-                    chunk[r] = x_codes[gi];
-                }
-            }
+            fill_chunk(&mut chunk, rows, x_codes, tx);
             for ty in 0..self.tiles_y {
                 let tile = &mut self.tiles[tx * self.tiles_y + ty];
                 let y = tile.mvm(&chunk, opts);
@@ -113,10 +121,53 @@ impl TileArray {
                 }
             }
         }
+        self.chunk = chunk;
         crate::cim::tile::MvmResult {
             mu: out_mu,
             sigma: out_sigma,
         }
+    }
+
+    /// `t` Monte-Carlo MVMs of the same input across the whole array.
+    /// Each tile runs its `t` samples back to back ([`CimTile::mvm_batch`]
+    /// — drives and plane caches amortized); because every tile owns its
+    /// private RNG streams, the per-tile stream order is identical to `t`
+    /// sequential [`TileArray::mvm`] calls, so result `s` is bit-identical
+    /// to the `s`-th sequential call.
+    pub fn mvm_batch(
+        &mut self,
+        x_codes: &[u8],
+        t: usize,
+        opts: MvmOptions,
+    ) -> Vec<crate::cim::tile::MvmResult> {
+        assert_eq!(x_codes.len(), self.in_dim, "input length mismatch");
+        let rows = self.chip.tile.rows;
+        let words = self.chip.tile.words_per_row;
+        let mut out: Vec<crate::cim::tile::MvmResult> = (0..t)
+            .map(|_| crate::cim::tile::MvmResult {
+                mu: vec![0.0f64; self.out_dim],
+                sigma: vec![0.0f64; self.out_dim],
+            })
+            .collect();
+        let mut chunk = std::mem::take(&mut self.chunk);
+        for tx in 0..self.tiles_x {
+            fill_chunk(&mut chunk, rows, x_codes, tx);
+            for ty in 0..self.tiles_y {
+                let tile = &mut self.tiles[tx * self.tiles_y + ty];
+                let ys = tile.mvm_batch(&chunk, t, opts);
+                for (s, y) in ys.iter().enumerate() {
+                    for w in 0..words {
+                        let go = ty * words + w;
+                        if go < self.out_dim {
+                            out[s].mu[go] += y.mu[w];
+                            out[s].sigma[go] += y.sigma[w];
+                        }
+                    }
+                }
+            }
+        }
+        self.chunk = chunk;
+        out
     }
 
     /// Exact digital reference across the array (same ε as last mvm).
@@ -163,6 +214,18 @@ impl TileArray {
     pub fn reset_ledgers(&mut self) {
         for t in &mut self.tiles {
             t.ledger.reset();
+        }
+    }
+}
+
+/// Zero-padded input chunk for tile row-block `tx` (reusable buffer).
+fn fill_chunk(chunk: &mut Vec<u8>, rows: usize, x_codes: &[u8], tx: usize) {
+    chunk.clear();
+    chunk.resize(rows, 0);
+    for (r, slot) in chunk.iter_mut().enumerate() {
+        let gi = tx * rows + r;
+        if gi < x_codes.len() {
+            *slot = x_codes[gi];
         }
     }
 }
@@ -235,6 +298,31 @@ mod tests {
         let ledger = arr.ledger();
         assert_eq!(ledger.mvm_count, arr.tile_count() as u64);
         assert!(ledger.total_j() > 0.0);
+    }
+
+    #[test]
+    fn array_mvm_batch_matches_sequential_bitwise() {
+        let chip = small_chip();
+        let in_dim = 40;
+        let out_dim = 10;
+        let mut batched = TileArray::new(&chip, in_dim, out_dim);
+        let mut serial = TileArray::new(&chip, in_dim, out_dim);
+        let mut rng = Pcg64::new(11);
+        let mu: Vec<f64> = (0..in_dim * out_dim)
+            .map(|_| (rng.next_f64() * 2.0 - 1.0) * 150.0)
+            .collect();
+        let sg: Vec<f64> = (0..in_dim * out_dim).map(|_| rng.next_f64() * 9.0).collect();
+        batched.program_matrix(&mu, &sg);
+        serial.program_matrix(&mu, &sg);
+        let x: Vec<u8> = (0..in_dim).map(|_| rng.next_below(16) as u8).collect();
+        let t = 5;
+        let ys = batched.mvm_batch(&x, t, MvmOptions::default());
+        for y in &ys {
+            let r = serial.mvm(&x, MvmOptions::default());
+            assert_eq!(y.mu, r.mu);
+            assert_eq!(y.sigma, r.sigma);
+        }
+        assert_eq!(batched.ledger().mvm_count, serial.ledger().mvm_count);
     }
 
     #[test]

@@ -104,8 +104,10 @@ pub fn calibrate(tile: &mut CimTile, adc_avg_n: usize, grng_avg_n: usize) -> Res
         }
     }
     // Install corrections: the register stores ε₀ per cell; the MVM
-    // subtracts drive·σ·ε₀ per active row (numerically Eq. 10).
-    tile.grng_offset_cal.copy_from_slice(&grng_est);
+    // subtracts drive·σ·ε₀ per active row (numerically Eq. 10). The
+    // registers are read live by the SoA fast path, so installing them
+    // does not invalidate the plane cache.
+    tile.set_grng_offset_cal(&grng_est);
 
     // Residual vs ground truth.
     let truth = tile.bank.true_offsets();

@@ -75,7 +75,79 @@ impl MvmResult {
     }
 }
 
+/// Precomputed structure-of-arrays view of the tile's words — the MVM
+/// fast path. Built lazily from the AoS `MuWord`/`SigmaWord` storage and
+/// invalidated by every word write (`program`, `write_sigma_raw`), so the
+/// inner loop of an MVM is a branch-free contiguous multiply-accumulate
+/// instead of per-element struct accessor calls.
+///
+/// Layouts (all row-contiguous, i.e. the MVM reduction dimension is the
+/// fastest-moving index):
+/// - `mu`:         `[word][bit-plane][row]`, digits as ±1.0
+/// - `sigma_mask`: `[word][bit-plane][row]`, bits as 0.0/1.0
+/// - `sigma_val`:  `[word][row]`, σ codes as f64 (ε₀ offset correction)
+///
+/// Exactness contract: ±1.0 factors equal `digit as f64` and masking by
+/// 1.0/0.0 is an exact multiply, so the fast path reproduces the legacy
+/// per-word path bit for bit (pinned by `tests/mvm_props.rs`).
+#[derive(Clone, Debug, Default)]
+struct TilePlanes {
+    mu: Vec<f64>,
+    sigma_mask: Vec<f64>,
+    sigma_val: Vec<f64>,
+}
+
+/// Reusable per-MVM scratch buffers — no `vec!` on the hot path.
+#[derive(Clone, Debug, Default)]
+struct MvmScratch {
+    /// IDAC output per row.
+    drives: Vec<f64>,
+    /// ε transposed to `[word][row]` (matches the plane layout).
+    eps_t: Vec<f64>,
+    /// drives[r]·ε[r][w] for the word currently being converted, shared
+    /// across that word's σ bit-planes.
+    row_terms: Vec<f64>,
+}
+
+/// The tile's fixed column-charge reduction spec: eight interleaved
+/// partial sums (lane = row mod 8) combined pairwise,
+/// `q = ((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))`. Physically the column
+/// charge is an order-independent analog sum; the spec just fixes one
+/// reproducible order. *Both* MVM implementations follow it, so they
+/// stay bit-identical — while the SoA fast path's contiguous loops map
+/// the lanes onto SIMD registers instead of one latency-bound serial FP
+/// add chain.
+#[inline]
+fn lane_combine(s: &[f64; 8]) -> f64 {
+    ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]))
+}
+
+/// Lane-interleaved dot product over contiguous slices (the fast path's
+/// inner loop). Bit-identical to walking `a[r]*b[r]` into lane `r & 7`
+/// in ascending row order and combining with [`lane_combine`].
+#[inline]
+fn lane_dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = [0.0f64; 8];
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for l in 0..8 {
+            s[l] += xa[l] * xb[l];
+        }
+    }
+    for (l, (x, y)) in ca
+        .remainder()
+        .iter()
+        .zip(cb.remainder().iter())
+        .enumerate()
+    {
+        s[l] += x * y;
+    }
+    lane_combine(&s)
+}
+
 /// One CIM tile: `rows` inputs × `words` outputs.
+#[derive(Clone)]
 pub struct CimTile {
     pub chip: ChipConfig,
     rows: usize,
@@ -103,6 +175,12 @@ pub struct CimTile {
     /// ADC full-scale: LSB size in "drive·digit" charge units.
     adc_lsb_mu: f64,
     adc_lsb_sigma: f64,
+    /// SoA fast-path cache; `None` after any word write.
+    planes: Option<TilePlanes>,
+    /// Reusable MVM scratch buffers.
+    scratch: MvmScratch,
+    /// True when `scratch.eps_t` no longer mirrors `eps`.
+    eps_t_stale: bool,
 }
 
 impl CimTile {
@@ -145,6 +223,9 @@ impl CimTile {
             ledger: EnergyLedger::new(),
             adc_lsb_mu,
             adc_lsb_sigma,
+            planes: None,
+            scratch: MvmScratch::default(),
+            eps_t_stale: true,
         }
     }
 
@@ -162,6 +243,7 @@ impl CimTile {
         let idx = row * self.words + word;
         self.mu[idx] = MuWord::quantize(mu_fixed, self.chip.tile.mu_bits as u8);
         self.sigma[idx] = SigmaWord::quantize(sigma_fixed, self.chip.tile.sigma_bits as u8);
+        self.planes = None;
         let cells = 2 * self.chip.tile.mu_bits + self.chip.tile.sigma_bits;
         self.ledger.deposit(
             Component::SramWrite,
@@ -198,6 +280,7 @@ impl CimTile {
             code: code.min(((1u16 << self.chip.tile.sigma_bits) - 1) as u8),
             bits: self.chip.tile.sigma_bits as u8,
         };
+        self.planes = None;
         self.ledger.deposit(
             Component::SramWrite,
             self.chip.tile.sigma_bits as f64 * self.chip.energy.sram_cell_write_j,
@@ -209,21 +292,95 @@ impl CimTile {
         &self.eps
     }
 
-    /// Perform one matrix-vector multiplication.
+    /// Perform one matrix-vector multiplication (SoA fast path).
     ///
     /// `x`: input codes (len = rows, values < 2^input_bits).
     /// Returns the two subarray outputs (`mu` ≈ Σ X_i·μ_ij,
     /// `sigma` ≈ Σ X_i·σ_ij·ε_ij, each in its own fixed-point units).
+    ///
+    /// Bit-identical to [`CimTile::mvm_legacy`]: the plane cache stores
+    /// exactly the factors the per-word path computes, accumulated in the
+    /// same row order, and all RNG streams (ε refresh, ADC noise) are
+    /// consumed in the same sequence.
     pub fn mvm(&mut self, x: &[u8], opts: MvmOptions) -> MvmResult {
         assert_eq!(x.len(), self.rows, "input length must equal tile rows");
         let max_code = (self.chip.idac.levels() - 1) as u8;
         debug_assert!(x.iter().all(|&c| c <= max_code), "input code overflow");
 
         if opts.bayesian && opts.refresh_epsilon {
-            self.bank.fill_epsilon(&mut self.eps);
-            self.ledger.grng_samples += self.eps.len() as u64;
-            let grng_j = self.bank.mean_energy_per_sample() * self.eps.len() as f64;
-            self.ledger.deposit(Component::Grng, grng_j);
+            self.refresh_epsilon();
+        }
+        let planes = self.take_planes();
+        let mut scratch = std::mem::take(&mut self.scratch);
+        self.fill_drives(x, opts.ideal_analog, &mut scratch.drives);
+        if opts.bayesian {
+            self.sync_eps_t(&mut scratch.eps_t);
+        }
+
+        let mut out_mu = vec![0.0f64; self.words];
+        let mut out_sigma = vec![0.0f64; self.words];
+        self.convert_words(opts, &planes, &mut scratch, &mut out_mu, &mut out_sigma);
+        self.deposit_mvm_energy(opts, 1);
+
+        self.scratch = scratch;
+        self.planes = Some(planes);
+        MvmResult {
+            mu: out_mu,
+            sigma: out_sigma,
+        }
+    }
+
+    /// `t` Monte-Carlo MVMs of the same input vector: the IDAC drives and
+    /// the SoA plane cache are computed once and the energy-ledger
+    /// deposits are batched, while ε is still refreshed per Bayesian
+    /// sample. Output `s` is bit-identical to the `s`-th of `t`
+    /// back-to-back [`CimTile::mvm`] calls (the per-tile RNG streams are
+    /// consumed in the same order); only the ledger's floating-point
+    /// totals may differ in the last ulp (one `t`-scaled deposit instead
+    /// of `t` small ones).
+    pub fn mvm_batch(&mut self, x: &[u8], t: usize, opts: MvmOptions) -> Vec<MvmResult> {
+        assert_eq!(x.len(), self.rows, "input length must equal tile rows");
+        let max_code = (self.chip.idac.levels() - 1) as u8;
+        debug_assert!(x.iter().all(|&c| c <= max_code), "input code overflow");
+
+        let planes = self.take_planes();
+        let mut scratch = std::mem::take(&mut self.scratch);
+        self.fill_drives(x, opts.ideal_analog, &mut scratch.drives);
+
+        let mut out = Vec::with_capacity(t);
+        for _ in 0..t {
+            if opts.bayesian && opts.refresh_epsilon {
+                self.refresh_epsilon();
+            }
+            if opts.bayesian {
+                self.sync_eps_t(&mut scratch.eps_t);
+            }
+            let mut out_mu = vec![0.0f64; self.words];
+            let mut out_sigma = vec![0.0f64; self.words];
+            self.convert_words(opts, &planes, &mut scratch, &mut out_mu, &mut out_sigma);
+            out.push(MvmResult {
+                mu: out_mu,
+                sigma: out_sigma,
+            });
+        }
+        self.deposit_mvm_energy(opts, t as u64);
+
+        self.scratch = scratch;
+        self.planes = Some(planes);
+        out
+    }
+
+    /// The pre-SoA reference implementation: walks the AoS
+    /// `MuWord`/`SigmaWord` storage per element and allocates per call.
+    /// Kept as the A/B baseline for `tests/mvm_props.rs` (bit-exactness)
+    /// and `benches/cim_mvm.rs` / `BENCH_cim_mvm.json` (speedup).
+    pub fn mvm_legacy(&mut self, x: &[u8], opts: MvmOptions) -> MvmResult {
+        assert_eq!(x.len(), self.rows, "input length must equal tile rows");
+        let max_code = (self.chip.idac.levels() - 1) as u8;
+        debug_assert!(x.iter().all(|&c| c <= max_code), "input code overflow");
+
+        if opts.bayesian && opts.refresh_epsilon {
+            self.refresh_epsilon();
         }
 
         // Row drives through the IDACs (energy: one conversion per row).
@@ -236,10 +393,6 @@ impl CimTile {
                 self.idacs[r].drive(x[r]) * x_fs
             };
         }
-        self.ledger.deposit(
-            Component::Idac,
-            self.rows as f64 * self.chip.idac.energy_j,
-        );
 
         let mu_bits = self.chip.tile.mu_bits;
         let sigma_bits = self.chip.tile.sigma_bits;
@@ -251,10 +404,11 @@ impl CimTile {
             // ---- μ subarray: one differential column per bit-plane ----
             let mut y_mu = 0.0f64;
             for b in 0..mu_bits {
-                let mut q = 0.0f64;
+                let mut s = [0.0f64; 8];
                 for r in 0..self.rows {
-                    q += drives[r] * self.mu[r * self.words + w].digit(b) as f64;
+                    s[r & 7] += drives[r] * self.mu[r * self.words + w].digit(b) as f64;
                 }
+                let q = lane_combine(&s);
                 let v_lsb = q / self.adc_lsb_mu;
                 let adc_idx = w * adc_per_word + b;
                 let code = if opts.ideal_analog {
@@ -270,13 +424,14 @@ impl CimTile {
             let mut y_sigma = 0.0f64;
             if opts.bayesian {
                 for b in 0..sigma_bits {
-                    let mut q = 0.0f64;
+                    let mut s = [0.0f64; 8];
                     for r in 0..self.rows {
                         let i = r * self.words + w;
                         if self.sigma[i].bit(b) == 1 {
-                            q += drives[r] * self.eps[i];
+                            s[r & 7] += drives[r] * self.eps[i];
                         }
                     }
+                    let q = lane_combine(&s);
                     let v_lsb = q / self.adc_lsb_sigma;
                     let adc_idx = w * adc_per_word + mu_bits + b;
                     let code = if opts.ideal_analog {
@@ -305,44 +460,209 @@ impl CimTile {
             out_sigma[w] = y_sigma;
         }
 
-        // ---- energy bookkeeping ----
-        let e = &self.chip.energy;
-        let cells_active = self.rows * self.words * (2 * mu_bits + sigma_bits);
-        self.ledger
-            .deposit(Component::Sram, cells_active as f64 * e.sram_cell_read_j);
-        let adc_count = self.words * adc_per_word;
-        let adc_used = if opts.bayesian {
-            adc_count
-        } else {
-            self.words * mu_bits
-        };
-        self.ledger
-            .deposit(Component::Adc, adc_used as f64 * self.chip.adc.energy_j);
-        // Differential: 2 bitlines per column.
-        self.ledger.deposit(
-            Component::Bitline,
-            2.0 * adc_used as f64 * e.bitline_precharge_j,
-        );
-        self.ledger.deposit(
-            Component::Reduction,
-            self.words as f64 * e.reduction_word_j,
-        );
-        if opts.bayesian {
-            self.ledger.deposit(
-                Component::Switches,
-                (self.rows * self.words) as f64 * e.switch_word_j,
-            );
-        }
-        self.ledger.deposit(
-            Component::Leakage,
-            e.tile_leakage_w / self.chip.tile.clock_hz,
-        );
-        self.ledger.mvm_count += 1;
+        self.deposit_mvm_energy(opts, 1);
 
         MvmResult {
             mu: out_mu,
             sigma: out_sigma,
         }
+    }
+
+    /// Take the plane cache (building it if a word write invalidated it).
+    fn take_planes(&mut self) -> TilePlanes {
+        match self.planes.take() {
+            Some(p) => p,
+            None => self.build_planes(),
+        }
+    }
+
+    /// Lower the AoS word storage into the SoA plane layout.
+    fn build_planes(&self) -> TilePlanes {
+        let rows = self.rows;
+        let words = self.words;
+        let mu_bits = self.chip.tile.mu_bits;
+        let sigma_bits = self.chip.tile.sigma_bits;
+        let mut mu = vec![0.0f64; words * mu_bits * rows];
+        let mut sigma_mask = vec![0.0f64; words * sigma_bits * rows];
+        let mut sigma_val = vec![0.0f64; words * rows];
+        for w in 0..words {
+            for b in 0..mu_bits {
+                let base = (w * mu_bits + b) * rows;
+                for r in 0..rows {
+                    mu[base + r] = self.mu[r * words + w].digit_f64(b);
+                }
+            }
+            for b in 0..sigma_bits {
+                let base = (w * sigma_bits + b) * rows;
+                for r in 0..rows {
+                    sigma_mask[base + r] = self.sigma[r * words + w].bit_f64(b);
+                }
+            }
+            for r in 0..rows {
+                sigma_val[w * rows + r] = self.sigma[r * words + w].value() as f64;
+            }
+        }
+        TilePlanes {
+            mu,
+            sigma_mask,
+            sigma_val,
+        }
+    }
+
+    /// Compute the row drives into a reusable buffer (IDAC transfer, or
+    /// the raw code under `ideal_analog`).
+    fn fill_drives(&self, x: &[u8], ideal_analog: bool, drives: &mut Vec<f64>) {
+        drives.clear();
+        drives.resize(self.rows, 0.0);
+        let x_fs = (self.chip.idac.levels() - 1) as f64;
+        for r in 0..self.rows {
+            drives[r] = if ideal_analog {
+                x[r] as f64
+            } else {
+                self.idacs[r].drive(x[r]) * x_fs
+            };
+        }
+    }
+
+    /// Mirror `eps` (row-major) into the `[word][row]` transpose the σ
+    /// fast path consumes; no-op while ε is unchanged.
+    fn sync_eps_t(&mut self, eps_t: &mut Vec<f64>) {
+        if !self.eps_t_stale && eps_t.len() == self.eps.len() {
+            return;
+        }
+        eps_t.clear();
+        eps_t.resize(self.eps.len(), 0.0);
+        for w in 0..self.words {
+            for r in 0..self.rows {
+                eps_t[w * self.rows + r] = self.eps[r * self.words + w];
+            }
+        }
+        self.eps_t_stale = false;
+    }
+
+    /// Convert every word's bit-plane columns through the ADCs and
+    /// recombine (the shift-add reduction), reading weights from the SoA
+    /// planes. The contiguous inner loops accumulate in the same row
+    /// order as the legacy path, so outputs are bit-identical.
+    fn convert_words(
+        &mut self,
+        opts: MvmOptions,
+        planes: &TilePlanes,
+        scratch: &mut MvmScratch,
+        out_mu: &mut [f64],
+        out_sigma: &mut [f64],
+    ) {
+        let rows = self.rows;
+        let mu_bits = self.chip.tile.mu_bits;
+        let sigma_bits = self.chip.tile.sigma_bits;
+        let adc_per_word = mu_bits + sigma_bits;
+        let drives = &scratch.drives;
+        scratch.row_terms.clear();
+        scratch.row_terms.resize(rows, 0.0);
+        for w in 0..self.words {
+            // ---- μ subarray: one differential column per bit-plane ----
+            let mut y_mu = 0.0f64;
+            for b in 0..mu_bits {
+                let plane = &planes.mu[(w * mu_bits + b) * rows..(w * mu_bits + b + 1) * rows];
+                let q = lane_dot(drives, plane);
+                let v_lsb = q / self.adc_lsb_mu;
+                let adc_idx = w * adc_per_word + b;
+                let code = if opts.ideal_analog {
+                    self.adcs[adc_idx].convert_ideal(v_lsb)
+                } else {
+                    self.adcs[adc_idx].convert(v_lsb)
+                };
+                let corrected = code as f64 - self.adc_offset_cal[adc_idx];
+                y_mu += (1u64 << b) as f64 * corrected * self.adc_lsb_mu;
+            }
+
+            // ---- σε subarray ----
+            let mut y_sigma = 0.0f64;
+            if opts.bayesian {
+                // drives[r]·ε[r][w] once per word, shared by its planes.
+                let eps_col = &scratch.eps_t[w * rows..(w + 1) * rows];
+                for ((t, d), e) in scratch
+                    .row_terms
+                    .iter_mut()
+                    .zip(drives.iter())
+                    .zip(eps_col.iter())
+                {
+                    *t = d * e;
+                }
+                for b in 0..sigma_bits {
+                    let base = (w * sigma_bits + b) * rows;
+                    let mask = &planes.sigma_mask[base..base + rows];
+                    let q = lane_dot(&scratch.row_terms, mask);
+                    let v_lsb = q / self.adc_lsb_sigma;
+                    let adc_idx = w * adc_per_word + mu_bits + b;
+                    let code = if opts.ideal_analog {
+                        self.adcs[adc_idx].convert_ideal(v_lsb)
+                    } else {
+                        self.adcs[adc_idx].convert(v_lsb)
+                    };
+                    let corrected = code as f64 - self.adc_offset_cal[adc_idx];
+                    y_sigma += (1u64 << b) as f64 * corrected * self.adc_lsb_sigma;
+                }
+                // GRNG static-offset correction (Eq. 10): subtract the
+                // calibrated Σ_i X_i·σ_ij·ε₀_ij estimate.
+                let vals = &planes.sigma_val[w * rows..(w + 1) * rows];
+                let mut corr = 0.0f64;
+                for r in 0..rows {
+                    let c = self.grng_offset_cal[r * self.words + w];
+                    if c != 0.0 {
+                        corr += drives[r] * vals[r] * c;
+                    }
+                }
+                y_sigma -= corr;
+            }
+
+            out_mu[w] = y_mu;
+            out_sigma[w] = y_sigma;
+        }
+    }
+
+    /// Energy bookkeeping for `n` MVMs (batched: one deposit per
+    /// component instead of `n`). ε energy is deposited at refresh time.
+    fn deposit_mvm_energy(&mut self, opts: MvmOptions, n: u64) {
+        let nf = n as f64;
+        let mu_bits = self.chip.tile.mu_bits;
+        let sigma_bits = self.chip.tile.sigma_bits;
+        let adc_per_word = mu_bits + sigma_bits;
+        self.ledger.deposit(
+            Component::Idac,
+            nf * self.rows as f64 * self.chip.idac.energy_j,
+        );
+        let e = &self.chip.energy;
+        let cells_active = self.rows * self.words * (2 * mu_bits + sigma_bits);
+        self.ledger
+            .deposit(Component::Sram, nf * cells_active as f64 * e.sram_cell_read_j);
+        let adc_used = if opts.bayesian {
+            self.words * adc_per_word
+        } else {
+            self.words * mu_bits
+        };
+        self.ledger
+            .deposit(Component::Adc, nf * adc_used as f64 * self.chip.adc.energy_j);
+        // Differential: 2 bitlines per column.
+        self.ledger.deposit(
+            Component::Bitline,
+            nf * 2.0 * adc_used as f64 * e.bitline_precharge_j,
+        );
+        self.ledger.deposit(
+            Component::Reduction,
+            nf * self.words as f64 * e.reduction_word_j,
+        );
+        if opts.bayesian {
+            self.ledger.deposit(
+                Component::Switches,
+                nf * (self.rows * self.words) as f64 * e.switch_word_j,
+            );
+        }
+        self.ledger.deposit(
+            Component::Leakage,
+            nf * e.tile_leakage_w / self.chip.tile.clock_hz,
+        );
+        self.ledger.mvm_count += n;
     }
 
     /// Raw (uncorrected) column codes for one conversion with input `x` —
@@ -357,10 +677,8 @@ impl CimTile {
         let mu_bits = self.chip.tile.mu_bits;
         let sigma_bits = self.chip.tile.sigma_bits;
         let adc_per_word = mu_bits + sigma_bits;
-        let x_fs = (self.chip.idac.levels() - 1) as f64;
-        let drives: Vec<f64> = (0..self.rows)
-            .map(|r| self.idacs[r].drive(x[r]) * x_fs)
-            .collect();
+        let mut drives = std::mem::take(&mut self.scratch.drives);
+        self.fill_drives(x, false, &mut drives);
         let mut codes = vec![0i64; self.words * adc_per_word];
         for w in 0..self.words {
             for b in 0..mu_bits {
@@ -383,6 +701,7 @@ impl CimTile {
                 codes[idx] = self.adcs[idx].convert(q / self.adc_lsb_sigma);
             }
         }
+        self.scratch.drives = drives;
         self.ledger
             .deposit(Component::Adc, codes.len() as f64 * self.chip.adc.energy_j);
         Ok(codes)
@@ -399,12 +718,38 @@ impl CimTile {
         self.idacs[row].drive(code) * x_fs
     }
 
-    /// Draw a fresh ε matrix without running an MVM (calibration).
+    /// Draw a fresh ε matrix without running an MVM (also the per-sample
+    /// refresh inside `mvm`/`mvm_batch`).
     pub fn refresh_epsilon(&mut self) {
         self.bank.fill_epsilon(&mut self.eps);
+        self.eps_t_stale = true;
         self.ledger.grng_samples += self.eps.len() as u64;
         let grng_j = self.bank.mean_energy_per_sample() * self.eps.len() as f64;
         self.ledger.deposit(Component::Grng, grng_j);
+    }
+
+    /// Reseed every stochastic stream in the tile (GRNG cells, ADC noise)
+    /// from SplitMix64 splits of `seed`, leaving all *static* die state —
+    /// ADC offsets, IDAC bows, programmed words, calibration registers —
+    /// untouched. This is how an MC-parallel replica models the same
+    /// silicon drawing an independent sample sequence (cf. VIBNN's
+    /// parallel RNG banks): clone the calibrated tile, reseed its streams.
+    pub fn reseed_streams(&mut self, seed: u64) {
+        let mut seeder = SplitMix64::new(seed ^ 0x5EED_57EA_4A11_0C95);
+        self.bank.reseed_cells(seeder.split());
+        for adc in &mut self.adcs {
+            adc.reseed_noise(seeder.split());
+        }
+        self.eps_t_stale = true;
+    }
+
+    /// Install the calibrated per-cell ε₀ registers (len = rows × words,
+    /// row-major). The canonical setter used by the calibration
+    /// controller; the registers are read live by every MVM, so no plane
+    /// invalidation is needed.
+    pub fn set_grng_offset_cal(&mut self, est: &[f64]) {
+        assert_eq!(est.len(), self.grng_offset_cal.len());
+        self.grng_offset_cal.copy_from_slice(est);
     }
 
     /// ADC LSB size of the σε path in charge units (calibration math).
@@ -613,5 +958,72 @@ mod tests {
     fn wrong_input_length_panics() {
         let mut tile = make_tile();
         let _ = tile.mvm(&[0u8; 3], MvmOptions::default());
+    }
+
+    #[test]
+    fn fast_path_matches_legacy_bitwise() {
+        // Two identically seeded tiles: the SoA fast path and the AoS
+        // legacy path must consume the same RNG streams and produce
+        // bit-identical results (deeper sweep in tests/mvm_props.rs).
+        let chip = ChipConfig::default();
+        let mut fast = CimTile::new(&chip);
+        let mut legacy = CimTile::new(&chip);
+        random_program(&mut fast, 21, 9.0);
+        random_program(&mut legacy, 21, 9.0);
+        for s in 0..4 {
+            let x = random_input(&fast, 31 + s);
+            let a = fast.mvm(&x, MvmOptions::default());
+            let b = legacy.mvm_legacy(&x, MvmOptions::default());
+            assert_eq!(a.mu, b.mu);
+            assert_eq!(a.sigma, b.sigma);
+        }
+    }
+
+    #[test]
+    fn mvm_batch_matches_sequential_bitwise() {
+        let chip = ChipConfig::default();
+        let mut batched = CimTile::new(&chip);
+        let mut serial = CimTile::new(&chip);
+        random_program(&mut batched, 22, 7.0);
+        random_program(&mut serial, 22, 7.0);
+        let x = random_input(&batched, 5);
+        let t = 6;
+        let ys = batched.mvm_batch(&x, t, MvmOptions::default());
+        assert_eq!(ys.len(), t);
+        for y in &ys {
+            let r = serial.mvm(&x, MvmOptions::default());
+            assert_eq!(y.mu, r.mu);
+            assert_eq!(y.sigma, r.sigma);
+        }
+        assert_eq!(batched.ledger.mvm_count, serial.ledger.mvm_count);
+        assert_eq!(batched.ledger.grng_samples, serial.ledger.grng_samples);
+    }
+
+    #[test]
+    fn reseed_streams_changes_samples_not_statics() {
+        let chip = ChipConfig::default();
+        let mut a = CimTile::new(&chip);
+        let mut b = CimTile::new(&chip);
+        random_program(&mut a, 23, 8.0);
+        random_program(&mut b, 23, 8.0);
+        b.reseed_streams(0xFEED);
+        // Static die state unchanged: μ-only ideal MVMs agree bitwise.
+        let x = random_input(&a, 9);
+        let det = MvmOptions {
+            bayesian: false,
+            refresh_epsilon: false,
+            ideal_analog: true,
+        };
+        assert_eq!(a.mvm(&x, det).mu, b.mvm(&x, det).mu);
+        // Stochastic streams diverge: fresh ε differs.
+        a.refresh_epsilon();
+        b.refresh_epsilon();
+        assert_ne!(a.last_epsilon(), b.last_epsilon());
+        // Reseeding is deterministic: same seed → same stream.
+        let mut c = CimTile::new(&chip);
+        random_program(&mut c, 23, 8.0);
+        c.reseed_streams(0xFEED);
+        c.refresh_epsilon();
+        assert_eq!(b.last_epsilon(), c.last_epsilon());
     }
 }

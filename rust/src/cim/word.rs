@@ -39,6 +39,15 @@ impl MuWord {
         }
     }
 
+    /// Digit of bit-plane `b` as ±1.0 — the value the SoA plane cache
+    /// stores so the MVM inner loop is a branch-free multiply-accumulate.
+    /// Must stay exactly `digit(b) as f64` (the fast path is pinned
+    /// bit-identical to the per-word path).
+    #[inline]
+    pub fn digit_f64(&self, b: usize) -> f64 {
+        self.digit(b) as f64
+    }
+
     /// Encode the nearest representable value to `x`.
     ///
     /// The representable set for B bits is the odd integers in
@@ -81,6 +90,14 @@ impl SigmaWord {
     #[inline]
     pub fn bit(&self, b: usize) -> u32 {
         ((self.code >> b) & 1) as u32
+    }
+
+    /// Bit of plane `b` as 0.0/1.0 — the mask the SoA plane cache stores.
+    /// Multiplying by 1.0 is exact, so masking keeps the fast path
+    /// bit-identical to the skip-if-zero per-word path.
+    #[inline]
+    pub fn bit_f64(&self, b: usize) -> f64 {
+        self.bit(b) as f64
     }
 
     /// Quantize a non-negative σ to the code grid.
@@ -167,6 +184,18 @@ mod tests {
         // Clamps at the rails.
         assert_eq!(MuWord::quantize(1e9, 8).value(), 255);
         assert_eq!(MuWord::quantize(-1e9, 8).value(), -255);
+    }
+
+    #[test]
+    fn f64_views_match_integer_accessors() {
+        let w = MuWord::quantize(-101.0, 8);
+        for b in 0..8 {
+            assert_eq!(w.digit_f64(b), w.digit(b) as f64);
+        }
+        let s = SigmaWord::quantize(11.0, 4);
+        for b in 0..4 {
+            assert_eq!(s.bit_f64(b), s.bit(b) as f64);
+        }
     }
 
     #[test]

@@ -145,6 +145,7 @@ mc_samples = 16
 
 [server]
 max_batch = 8
+mc_workers = 3
 "#,
         )
         .unwrap();
@@ -153,8 +154,10 @@ max_batch = 8
         assert_eq!(cfg.chip.tile.rows, 32);
         assert_eq!(cfg.model.mc_samples, 16);
         assert_eq!(cfg.server.max_batch, 8);
+        assert_eq!(cfg.server.mc_workers, 3);
         // untouched fields keep defaults
         assert_eq!(cfg.chip.tile.words_per_row, 8);
+        assert!(Config::from_toml_str("[server]\nmc_workers = 0\n").is_err());
     }
 
     #[test]

@@ -58,6 +58,13 @@ pub struct ServerConfig {
     /// rejected at submit so one request cannot inflate the MC pass count
     /// of the whole fused batch.
     pub max_mc_samples: usize,
+    /// MC-parallel replicas per `cim` engine: each shard's engine clones
+    /// its calibrated head arrays this many times with split ε/noise
+    /// streams and fans batch slots (independent MC passes) across them
+    /// on scoped threads. Part of the determinism contract: replay is
+    /// bit-identical for a fixed `(die_seed, workers, mc_workers)` — a
+    /// *fixed* default (never host CPU count) keeps replay portable.
+    pub mc_workers: usize,
     /// Per-request deadline [ms]; exceeded requests are rejected.
     pub request_timeout_ms: f64,
 }
@@ -71,6 +78,7 @@ impl Default for ServerConfig {
             queue_capacity: 256,
             workers: 1,
             max_mc_samples: 256,
+            mc_workers: 4,
             request_timeout_ms: 1000.0,
         }
     }
@@ -89,6 +97,7 @@ impl ServerConfig {
         usize_field(doc, "queue_capacity", &mut self.queue_capacity)?;
         usize_field(doc, "workers", &mut self.workers)?;
         usize_field(doc, "max_mc_samples", &mut self.max_mc_samples)?;
+        usize_field(doc, "mc_workers", &mut self.mc_workers)?;
         f64_field(doc, "request_timeout_ms", &mut self.request_timeout_ms)?;
         Ok(())
     }
@@ -105,6 +114,9 @@ impl ServerConfig {
         }
         if self.max_mc_samples == 0 {
             return Err(Error::Config("server: max_mc_samples must be > 0".into()));
+        }
+        if self.mc_workers == 0 {
+            return Err(Error::Config("server: mc_workers must be > 0".into()));
         }
         if self.batch_deadline_ms < 0.0 || self.request_timeout_ms <= 0.0 {
             return Err(Error::Config("server: invalid timeouts".into()));

@@ -45,6 +45,7 @@ pub fn shard_chip(chip: &ChipConfig, shard: usize) -> ChipConfig {
 }
 
 /// Bank of GRNG cells matching a tile's σε array layout.
+#[derive(Clone)]
 pub struct GrngBank {
     pub rows: usize,
     pub words: usize,
@@ -133,14 +134,32 @@ impl GrngBank {
             .collect()
     }
 
-    /// Mean per-sample energy across the bank [J].
+    /// Reseed every cell's sampling stream from SplitMix64 splits of
+    /// `seed`, keeping the die's physics (mismatch, energy, latency).
+    /// With [`GrngCell::reseed`], this is how an MC-parallel replica of a
+    /// calibrated tile gets an independent ε stream on the *same* die.
+    pub fn reseed_cells(&mut self, seed: u64) {
+        let mut seeder = SplitMix64::new(seed ^ 0x6BA4_57B1);
+        for cell in &mut self.cells {
+            cell.reseed(seeder.split());
+        }
+    }
+
+    /// Mean per-sample energy across the bank [J]; 0.0 for an empty bank.
     pub fn mean_energy_per_sample(&self) -> f64 {
+        if self.cells.is_empty() {
+            return 0.0;
+        }
         let total: f64 = self.cells.iter().map(|c| c.params.energy_j).sum();
         total / self.cells.len() as f64
     }
 
-    /// Mean conversion latency (≈ slowest-branch mean) across the bank [s].
+    /// Mean conversion latency (≈ slowest-branch mean) across the bank
+    /// [s]; 0.0 for an empty bank.
     pub fn mean_latency(&self) -> f64 {
+        if self.cells.is_empty() {
+            return 0.0;
+        }
         let total: f64 = self
             .cells
             .iter()
@@ -151,9 +170,16 @@ impl GrngBank {
 
     /// Aggregate hardware sample throughput [Sa/s]: all cells convert in
     /// parallel, one sample per cell per conversion. (The paper's
-    /// 5.12 GSa/s: 512 cells ÷ ~100 ns cycle.)
+    /// 5.12 GSa/s: 512 cells ÷ ~100 ns cycle.) An empty bank produces no
+    /// samples: 0.0, not a panic.
     pub fn hardware_throughput_sa_s(&self) -> f64 {
-        let latency = self.mean_latency() + self.cells[0].params.cfg.dff_reset_window_s * 2.0;
+        let Some(first) = self.cells.first() else {
+            return 0.0;
+        };
+        let latency = self.mean_latency() + first.params.cfg.dff_reset_window_s * 2.0;
+        if latency <= 0.0 {
+            return 0.0;
+        }
         self.cells.len() as f64 / latency
     }
 
@@ -212,6 +238,35 @@ mod tests {
         let offs = bank.true_offsets();
         let s = Summary::from_slice(&offs);
         assert!(s.std() > 0.05, "mismatch must spread offsets, σ={}", s.std());
+    }
+
+    #[test]
+    fn empty_bank_reports_zero_not_panic() {
+        let chip = ChipConfig::default();
+        let die = crate::grng::DieVariation::draw(&chip.grng, 0, 0, 1);
+        let mut bank = GrngBank::new(&chip.grng, &die, 1);
+        assert!(bank.is_empty());
+        assert_eq!(bank.len(), 0);
+        assert_eq!(bank.hardware_throughput_sa_s(), 0.0);
+        assert_eq!(bank.mean_energy_per_sample(), 0.0);
+        assert_eq!(bank.mean_latency(), 0.0);
+        let mut out: [f64; 0] = [];
+        bank.fill_epsilon(&mut out);
+        assert_eq!(bank.samples_drawn(), 0);
+    }
+
+    #[test]
+    fn reseeded_cells_draw_new_streams_on_same_die() {
+        let chip = ChipConfig::default();
+        let mut a = GrngBank::for_chip(&chip);
+        let mut b = GrngBank::for_chip(&chip);
+        b.reseed_cells(0xD1CE);
+        assert_eq!(a.true_offsets(), b.true_offsets(), "same die physics");
+        let eps_b = b.epsilon_matrix();
+        assert_ne!(a.epsilon_matrix(), eps_b, "new streams");
+        let mut c = GrngBank::for_chip(&chip);
+        c.reseed_cells(0xD1CE);
+        assert_eq!(eps_b, c.epsilon_matrix(), "deterministic reseed");
     }
 
     #[test]

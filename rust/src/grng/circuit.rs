@@ -133,6 +133,13 @@ impl GrngCell {
         Self::new(CellParams::derive(cfg, 0.0, 0.0), seed)
     }
 
+    /// Replace the sampling stream, keeping the cell's physics (mismatch,
+    /// energy, latency). Used to split ε streams for MC-parallel replicas
+    /// of the same die.
+    pub fn reseed(&mut self, seed: u64) {
+        self.rng = Xoshiro256::new(seed);
+    }
+
     // -------------------------------------------------------------------
     // Full transient simulation
     // -------------------------------------------------------------------

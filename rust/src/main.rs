@@ -123,6 +123,11 @@ fn commands() -> Vec<Command> {
                 opt("mc", "MC samples per request", Some("8")),
                 opt("workers", "shard workers (each owns an engine + GRNG bank)", Some("1")),
                 opt(
+                    "mc-workers",
+                    "MC-parallel replicas per cim engine (split ε streams)",
+                    Some("4"),
+                ),
+                opt(
                     "backend",
                     "engine backend: sim | cim | pjrt (cim = chip model, in-word ε + energy)",
                     Some("pjrt"),
@@ -293,6 +298,7 @@ fn cmd_serve(args: &bnn_cim::util::cli::Args) -> CmdResult {
     let rate = args.get_f64("rate", 50.0)?;
     cfg.model.mc_samples = args.get_usize("mc", 8)?;
     cfg.server.workers = args.get_usize("workers", cfg.server.workers)?;
+    cfg.server.mc_workers = args.get_usize("mc-workers", cfg.server.mc_workers)?;
     if let Some(b) = args.get("backend") {
         cfg.server.backend = Backend::parse(b)?;
     } else if args.has_flag("sim") {

@@ -15,6 +15,12 @@ use crate::nn::quant::ActQuantizer;
 use crate::util::rng::{Rng64, Xoshiro256};
 
 /// One Bayesian FC layer.
+///
+/// `Clone` copies the full state — weights, the mapped (calibrated)
+/// tile arrays, and the RNG positions. An MC-parallel replica is a clone
+/// followed by [`BayesDense::reseed_streams`]: same die, independent
+/// sample streams.
+#[derive(Clone)]
 pub struct BayesDense {
     pub in_dim: usize,
     pub out_dim: usize,
@@ -30,6 +36,7 @@ pub struct BayesDense {
     rng: Xoshiro256,
 }
 
+#[derive(Clone)]
 struct HwMapping {
     array: TileArray,
     scale: WeightScale,
@@ -132,18 +139,44 @@ impl BayesDense {
         // shifts), then convert codes → float activations.
         let k_mu = hw.act_q.step as f64 / hw.scale.mu_scale;
         let k_sigma = hw.act_q.step as f64 / hw.scale.sigma_scale;
-        let combined = y_fixed.combined_scaled(k_mu, k_sigma);
-        let mut y: Vec<f32> = combined
+        finish_activation(&y_fixed, k_mu, k_sigma, &self.bias, self.relu)
+    }
+
+    /// `t` hardware MC samples of the *same* input — the batched fast
+    /// path: activation quantization, IDAC drives, SoA plane caches and
+    /// ledger deposits are amortized across the batch via
+    /// [`TileArray::mvm_batch`], while ε is refreshed per sample. Sample
+    /// `s` is bit-identical to the `s`-th of `t` sequential
+    /// [`BayesDense::forward_hw`] calls.
+    pub fn forward_hw_mc(&mut self, x: &[f32], t: usize, bayesian: bool) -> Vec<Vec<f32>> {
+        assert_eq!(x.len(), self.in_dim);
+        let hw = self
+            .hw
+            .as_mut()
+            .expect("call map_to_hardware before forward_hw_mc");
+        let codes = hw.act_q.quantize_vec(x);
+        let opts = MvmOptions {
+            bayesian,
+            refresh_epsilon: true,
+            ideal_analog: false,
+        };
+        let k_mu = hw.act_q.step as f64 / hw.scale.mu_scale;
+        let k_sigma = hw.act_q.step as f64 / hw.scale.sigma_scale;
+        let results = hw.array.mvm_batch(&codes, t, opts);
+        results
             .iter()
-            .zip(self.bias.iter())
-            .map(|(&v, &b)| v as f32 + b)
-            .collect();
-        if self.relu {
-            for v in y.iter_mut() {
-                *v = v.max(0.0);
-            }
+            .map(|y_fixed| finish_activation(y_fixed, k_mu, k_sigma, &self.bias, self.relu))
+            .collect()
+    }
+
+    /// Reseed this layer's stochastic streams — the software ε RNG and,
+    /// when mapped, every tile's GRNG/ADC-noise streams — from `seed`.
+    /// Static die state (calibration, offsets, programmed words) is kept.
+    pub fn reseed_streams(&mut self, seed: u64) {
+        self.rng = Xoshiro256::new(seed ^ 0xBA7E5);
+        if let Some(hw) = self.hw.as_mut() {
+            hw.array.reseed_streams(seed ^ 0x4D43_5EED);
         }
-        y
     }
 
     /// Float reference forward pass with software ε ~ N(0,1).
@@ -213,6 +246,31 @@ impl BayesDense {
     }
 }
 
+/// Recombine a fixed-point MVM result into float activations (reduction
+/// shifts → bias add → optional ReLU). The single post-MVM pipeline
+/// shared by `forward_hw` and `forward_hw_mc`, so the batched and
+/// sequential paths cannot drift apart.
+fn finish_activation(
+    y_fixed: &crate::cim::tile::MvmResult,
+    k_mu: f64,
+    k_sigma: f64,
+    bias: &[f32],
+    relu: bool,
+) -> Vec<f32> {
+    let combined = y_fixed.combined_scaled(k_mu, k_sigma);
+    let mut y: Vec<f32> = combined
+        .iter()
+        .zip(bias.iter())
+        .map(|(&v, &b)| v as f32 + b)
+        .collect();
+    if relu {
+        for v in y.iter_mut() {
+            *v = v.max(0.0);
+        }
+    }
+    y
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,6 +332,40 @@ mod tests {
             s_hw.std(),
             s_rf.std()
         );
+    }
+
+    #[test]
+    fn forward_hw_mc_matches_sequential_bitwise() {
+        let mut batched = BayesDense::random(16, 4, true, 19);
+        let mut serial = BayesDense::random(16, 4, true, 19);
+        batched.map_to_hardware(&small_chip(), 6.0);
+        serial.map_to_hardware(&small_chip(), 6.0);
+        let x: Vec<f32> = (0..16).map(|i| (i % 5) as f32 * 1.1).collect();
+        let t = 7;
+        let ys = batched.forward_hw_mc(&x, t, true);
+        assert_eq!(ys.len(), t);
+        for y in &ys {
+            assert_eq!(y, &serial.forward_hw(&x, true));
+        }
+    }
+
+    #[test]
+    fn reseeded_replica_keeps_statics_changes_samples() {
+        let mut a = BayesDense::random(16, 4, false, 23);
+        a.map_to_hardware(&small_chip(), 6.0);
+        let mut b = a.clone();
+        b.reseed_streams(0x5A5A);
+        let x = vec![1.5f32; 16];
+        // μ-only passes share the static die (ADC noise differs, so
+        // compare the deterministic mean path instead).
+        assert_eq!(a.forward_mean(&x), b.forward_mean(&x));
+        // Bayesian samples diverge (independent ε streams).
+        let yb = b.forward_hw(&x, true);
+        assert_ne!(a.forward_hw(&x, true), yb);
+        // Replica construction is deterministic (reseed resets streams).
+        let mut c = a.clone();
+        c.reseed_streams(0x5A5A);
+        assert_eq!(yb, c.forward_hw(&x, true));
     }
 
     #[test]

@@ -302,11 +302,31 @@ impl Model {
 
     /// One MC sample through the Bayesian head (hardware sim).
     pub fn head_sample_hw(&mut self, features: &[f32]) -> Vec<f64> {
-        let mut x = features.to_vec();
-        for layer in &mut self.head {
-            x = layer.forward_hw(&x, true);
+        head_sample_layers(&mut self.head, features)
+    }
+
+    /// `t` hardware MC samples of the same features — the batched fast
+    /// path. The first head layer (whose input is shared by every sample)
+    /// runs through [`BayesDense::forward_hw_mc`], amortizing IDAC drives,
+    /// plane caches and ledger deposits across the batch; deeper layers
+    /// see per-sample activations and run per sample. Sample `s` is
+    /// bit-identical to the `s`-th of `t` sequential
+    /// [`Model::head_sample_hw`] calls (each layer's tile streams are
+    /// consumed in the same sample order either way).
+    pub fn head_samples_hw(&mut self, features: &[f32], t: usize) -> Vec<Vec<f64>> {
+        let Some((first, rest)) = self.head.split_first_mut() else {
+            let logits: Vec<f64> = features.iter().map(|&v| v as f64).collect();
+            return (0..t).map(|_| softmax(&logits)).collect();
+        };
+        let mut acts = first.forward_hw_mc(features, t, true);
+        for layer in rest.iter_mut() {
+            for a in acts.iter_mut() {
+                *a = layer.forward_hw(a, true);
+            }
         }
-        softmax(&x.iter().map(|&v| v as f64).collect::<Vec<_>>())
+        acts.iter()
+            .map(|x| softmax(&x.iter().map(|&v| v as f64).collect::<Vec<_>>()))
+            .collect()
     }
 
     /// One MC sample through the Bayesian head (float reference).
@@ -333,18 +353,16 @@ impl Model {
         softmax(&x.iter().map(|&v| v as f64).collect::<Vec<_>>())
     }
 
-    /// Full Bayesian inference: features once, then T MC head samples.
+    /// Full Bayesian inference: features once, then T MC head samples
+    /// (the hardware arm takes the batched [`Model::head_samples_hw`]
+    /// fast path — bit-identical to T sequential samples).
     pub fn predict_bayes(&mut self, pixels: &[f32], t: usize, hw: bool) -> McPrediction {
         let features = self.forward_features(pixels);
-        let samples: Vec<Vec<f64>> = (0..t)
-            .map(|_| {
-                if hw {
-                    self.head_sample_hw(&features)
-                } else {
-                    self.head_sample_ref(&features)
-                }
-            })
-            .collect();
+        let samples: Vec<Vec<f64>> = if hw {
+            self.head_samples_hw(&features, t)
+        } else {
+            (0..t).map(|_| self.head_sample_ref(&features)).collect()
+        };
         aggregate_mc(&samples)
     }
 
@@ -358,6 +376,18 @@ impl Model {
         }
         softmax(&x.iter().map(|&v| v as f64).collect::<Vec<_>>())
     }
+}
+
+/// One MC sample through a stack of Bayesian layers (hardware sim).
+/// Free function so MC-parallel engine replicas — plain `Vec<BayesDense>`
+/// clones with reseeded streams — share the exact sampling code of
+/// [`Model::head_sample_hw`].
+pub fn head_sample_layers(layers: &mut [BayesDense], features: &[f32]) -> Vec<f64> {
+    let mut x = features.to_vec();
+    for layer in layers.iter_mut() {
+        x = layer.forward_hw(&x, true);
+    }
+    softmax(&x.iter().map(|&v| v as f64).collect::<Vec<_>>())
 }
 
 #[cfg(test)]
@@ -424,6 +454,25 @@ mod tests {
     fn missing_fields_rejected() {
         let doc = Json::parse(r#"{"meta": {"classes": 2}}"#).unwrap();
         assert!(Model::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn batched_head_samples_match_sequential_bitwise() {
+        let mut chip = ChipConfig::default();
+        chip.tile.rows = 16;
+        chip.tile.words_per_row = 4;
+        let mut batched = Model::random(16, 2, 5);
+        let mut serial = Model::random(16, 2, 5);
+        batched.map_head_to_hardware(&chip);
+        serial.map_head_to_hardware(&chip);
+        let px = vec![0.5f32; 16 * 16];
+        let f = batched.forward_features(&px);
+        let t = 4;
+        let ys = batched.head_samples_hw(&f, t);
+        assert_eq!(ys.len(), t);
+        for y in &ys {
+            assert_eq!(y, &serial.head_sample_hw(&f));
+        }
     }
 
     #[test]

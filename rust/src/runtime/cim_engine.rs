@@ -33,7 +33,10 @@ use crate::config::Config;
 use crate::energy::Component;
 use crate::error::{Error, Result};
 use crate::grng::shard_chip;
-use crate::nn::Model;
+use crate::nn::model::head_sample_layers;
+use crate::nn::{BayesDense, Model};
+use crate::util::rng::SplitMix64;
+use crate::util::threadpool::par_map_mut;
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
@@ -42,9 +45,32 @@ use std::path::PathBuf;
 pub const CIM_WEIGHT_SEED: u64 = 0xC1BE_27F0_5EED_CA11;
 
 /// Chip-model inference backend (no artifacts, no PJRT toolchain).
+///
+/// # MC-parallel sampling (`server.mc_workers`)
+///
+/// Every slot of a fused `head` call is an independent Monte-Carlo pass,
+/// so the engine keeps `mc_workers` *replicas* of the calibrated head —
+/// clones of the same mapped-and-calibrated tile arrays whose stochastic
+/// streams (in-word GRNG cells, ADC noise) are reseeded from SplitMix64
+/// splits of the shard's `die_seed`. Same die, independent sample
+/// sequences: the software mirror of spatially unrolling MC samples
+/// across compute lanes (VIBNN's parallel RNG banks; Fan et al.'s
+/// unrolled FPGA sampler).
+///
+/// Determinism contract: slot `b` always runs on replica `b % mc_workers`,
+/// each replica processes its slots in ascending order on its own thread
+/// (`util::threadpool::par_map_mut` hands each replica to exactly one
+/// worker), and outputs are gathered by slot index. Replica streams are
+/// private, so the result is a pure function of
+/// `(die_seed, workers, mc_workers)` — thread scheduling never leaks in —
+/// and replay is bit-identical (pinned by `tests/cim_fidelity.rs`).
 pub struct CimEngine {
     manifest: Manifest,
     model: Model,
+    /// MC-parallel head replicas (same die as `model`, split streams).
+    /// Serving traffic runs here; `model` stays the reference instance
+    /// for fidelity tests and hardware diagnostics.
+    replicas: Vec<Vec<BayesDense>>,
     /// MAC ops represented by one per-tile MVM (J/Op denominator).
     ops_per_tile_mvm: u64,
     executions: u64,
@@ -64,6 +90,27 @@ impl CimEngine {
         // Bring-up (programming + calibration) energy is a one-time cost;
         // zero the ledgers so energy_report meters serving traffic only.
         model.reset_head_ledgers();
+
+        // MC-parallel replicas: clone the calibrated head (cheap — no
+        // recalibration) and reseed each clone's stochastic streams from
+        // a split of this shard's die seed. Replica ledgers start at zero
+        // (cloned after the bring-up reset).
+        let mc_workers = cfg.server.mc_workers.max(1);
+        let mut replica_seeder = SplitMix64::new(chip.die_seed ^ 0x4D43_5052_11CA_5EED);
+        let replicas: Vec<Vec<BayesDense>> = (0..mc_workers)
+            .map(|_| {
+                let mut layer_seeder = SplitMix64::new(replica_seeder.split());
+                model
+                    .head
+                    .iter()
+                    .map(|layer| {
+                        let mut rep = layer.clone();
+                        rep.reseed_streams(layer_seeder.split());
+                        rep
+                    })
+                    .collect()
+            })
+            .collect();
 
         let feature_dim = model.feature_dim;
         let pixels = side * side;
@@ -112,6 +159,7 @@ impl CimEngine {
         Self {
             manifest,
             model,
+            replicas,
             ops_per_tile_mvm: chip.tile.ops_per_mvm() as u64,
             executions: 0,
         }
@@ -149,16 +197,38 @@ impl CimEngine {
         let b = self.manifest.batch;
         let fdim = self.manifest.feature_dim;
         let c = self.manifest.classes;
-        let mut out = Vec::with_capacity(b * c);
-        for bi in 0..b {
-            // One hardware MC pass per slot: each tile MVM refreshes ε
-            // from its in-word bank, so every slot draws fresh randomness.
-            // Padding slots execute too (the static-batch contract shared
-            // with the AOT artifacts), so a fused call's energy covers the
-            // whole array activation — fJ/Sample and J/Op stay normalized
-            // because their denominators scale with the same passes.
-            let probs = self.model.head_sample_hw(&feats[bi * fdim..(bi + 1) * fdim]);
-            out.extend(probs.iter().map(|&v| v as f32));
+        let replica_count = self.replicas.len();
+        // One hardware MC pass per slot: each tile MVM refreshes ε from
+        // its in-word bank, so every slot draws fresh randomness. Padding
+        // slots execute too (the static-batch contract shared with the
+        // AOT artifacts), so a fused call's energy covers the whole array
+        // activation — fJ/Sample and J/Op stay normalized because their
+        // denominators scale with the same passes.
+        //
+        // Deterministic fan-out (see the type-level docs): slot bi runs on
+        // replica bi % mc_workers; each replica walks its slots in
+        // ascending order; results are gathered by slot index. Scoped
+        // threads (spawned per call) are a deliberate tradeoff: the
+        // replicas' &mut borrows stay lifetime-checked with no channel
+        // plumbing, and the spawn cost is small against a fused call's
+        // tile work at the default chip size.
+        let per_replica = par_map_mut(&mut self.replicas, replica_count, |r, layers| {
+            let mut samples = Vec::new();
+            let mut bi = r;
+            while bi < b {
+                let probs = head_sample_layers(layers, &feats[bi * fdim..(bi + 1) * fdim]);
+                samples.push((bi, probs));
+                bi += replica_count;
+            }
+            samples
+        });
+        let mut out = vec![0.0f32; b * c];
+        for samples in per_replica {
+            for (bi, probs) in samples {
+                for (j, &v) in probs.iter().enumerate() {
+                    out[bi * c + j] = v as f32;
+                }
+            }
         }
         out
     }
@@ -216,7 +286,15 @@ impl InferenceEngine for CimEngine {
     }
 
     fn energy_report(&self) -> Option<EngineEnergyReport> {
-        let ledger = self.model.head_ledger();
+        // Serving traffic deposits into the MC replicas; the reference
+        // model's tiles only move when fidelity tests drive them
+        // directly. Aggregate both so nothing is lost.
+        let mut ledger = self.model.head_ledger();
+        for replica in &self.replicas {
+            for layer in replica {
+                ledger.absorb(&layer.ledger());
+            }
+        }
         Some(EngineEnergyReport {
             total_j: ledger.total_j(),
             grng_j: ledger.component_j(Component::Grng),
@@ -329,6 +407,47 @@ mod tests {
         let pa = a.run("head", &[(&fa, &hspec.inputs[0].1)]).unwrap();
         let pb = b.run("head", &[(&fb, &hspec.inputs[0].1)]).unwrap();
         assert_ne!(pa, pb, "independent dies must sample independently");
+    }
+
+    #[test]
+    fn mc_fanout_covers_all_slots_and_replays_bitwise() {
+        // More slots than replicas (5 % 3): some replicas own two slots,
+        // one owns one — every slot must still be filled, and replay must
+        // be bit-identical for the fixed (die_seed, mc_workers).
+        let mut cfg = tiny_cfg();
+        cfg.server.max_batch = 5;
+        cfg.server.mc_workers = 3;
+        let mut a = CimEngine::from_config(&cfg);
+        let mut b = CimEngine::from_config(&cfg);
+        let m = a.manifest().clone();
+        let images = vec![0.6f32; m.batch * m.side * m.side];
+        let fspec = m.entry("features").unwrap().clone();
+        let feats = a.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
+        let _ = b.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
+        let hspec = m.entry("head").unwrap().clone();
+        for _ in 0..3 {
+            let pa = a.run("head", &[(&feats, &hspec.inputs[0].1)]).unwrap();
+            let pb = b.run("head", &[(&feats, &hspec.inputs[0].1)]).unwrap();
+            assert_eq!(pa, pb, "MC fan-out must be schedule-independent");
+            // Every slot filled: all rows are valid softmax outputs.
+            for row in pa.chunks(m.classes) {
+                let sum: f32 = row.iter().sum();
+                assert!((sum - 1.0).abs() < 1e-4, "slot left empty: {row:?}");
+            }
+        }
+        // Different mc_workers ⇒ a different (still deterministic)
+        // slot→replica assignment: the contract pins the triple
+        // (die_seed, workers, mc_workers), not the samples themselves.
+        let mut cfg1 = tiny_cfg();
+        cfg1.server.max_batch = 5;
+        cfg1.server.mc_workers = 1;
+        let mut c = CimEngine::from_config(&cfg1);
+        let _ = c.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
+        let pc = c.run("head", &[(&feats, &hspec.inputs[0].1)]).unwrap();
+        let mut d = CimEngine::from_config(&cfg);
+        let _ = d.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
+        let pd = d.run("head", &[(&feats, &hspec.inputs[0].1)]).unwrap();
+        assert_ne!(pd, pc, "slot→replica assignment must depend on mc_workers");
     }
 
     #[test]

@@ -250,6 +250,8 @@ pub fn repo_root_artifact(name: &str) -> std::path::PathBuf {
 pub struct ServingSweepPoint {
     pub backend: &'static str,
     pub workers: usize,
+    /// MC-parallel replicas per cim engine (`server.mc_workers`).
+    pub mc_workers: usize,
     pub requests: usize,
     pub mc_samples: usize,
     pub req_per_s: f64,
@@ -264,6 +266,7 @@ impl ServingSweepPoint {
         let mut o = Json::obj();
         o.set("backend", Json::Str(self.backend.to_string()))
             .set("workers", Json::Num(self.workers as f64))
+            .set("mc_workers", Json::Num(self.mc_workers as f64))
             .set("requests", Json::Num(self.requests as f64))
             .set("mc_samples", Json::Num(self.mc_samples as f64))
             .set("req_per_s", Json::Num(self.req_per_s))
@@ -307,6 +310,7 @@ pub fn measure_serving_sweep(cfg: &crate::config::Config, n_req: usize) -> Servi
     ServingSweepPoint {
         backend: cfg.server.backend.name(),
         workers: cfg.server.workers,
+        mc_workers: cfg.server.mc_workers,
         requests: n_req,
         mc_samples: cfg.model.mc_samples,
         req_per_s: n_req as f64 / dt.max(1e-9),
@@ -314,6 +318,92 @@ pub fn measure_serving_sweep(cfg: &crate::config::Config, n_req: usize) -> Servi
         mean_fill: m.mean_batch_fill,
         eps_fj_per_sample: m.epsilon_fj_per_sample(),
         engine_fj_per_op: m.engine_j_per_op() * 1e15,
+    }
+}
+
+/// Quick-and-dirty wallclock estimate: run `f` until `target` elapses
+/// (at least `min_iters` times) and return ns/iter. Coarser than
+/// [`Suite::bench`] but cheap enough to run inside `cargo test`, where
+/// the smoke-scale `BENCH_cim_mvm.json` seed is produced.
+pub fn quick_ns_per_iter<F: FnMut()>(mut f: F, min_iters: u64, target: Duration) -> f64 {
+    // Untimed warmup so lazy caches (e.g. the tile plane cache) and
+    // branch predictors settle before measurement.
+    for _ in 0..min_iters.clamp(1, 16) {
+        f();
+    }
+    let t0 = Instant::now();
+    let mut iters = 0u64;
+    loop {
+        f();
+        iters += 1;
+        if iters >= min_iters && t0.elapsed() >= target {
+            break;
+        }
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+/// One measured case of the MVM hot-path comparison — the single
+/// authoritative schema for `BENCH_cim_mvm.json` cases, shared by
+/// `benches/cim_mvm.rs` (calibrated, release) and `tests/mvm_props.rs`
+/// (smoke-scale seed emitted by `cargo test`).
+pub struct MvmBenchCase {
+    /// e.g. "legacy_aos", "soa", "soa_batch" — suffixed by ε mode.
+    pub case: String,
+    pub ns_per_mvm: f64,
+    pub mvm_per_s: f64,
+    pub ops_per_s: f64,
+}
+
+impl MvmBenchCase {
+    pub fn new(case: &str, ns_per_mvm: f64, ops_per_mvm: f64) -> Self {
+        let mvm_per_s = 1e9 / ns_per_mvm.max(1e-9);
+        Self {
+            case: case.to_string(),
+            ns_per_mvm,
+            mvm_per_s,
+            ops_per_s: mvm_per_s * ops_per_mvm,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("case", Json::Str(self.case.clone()))
+            .set("ns_per_mvm", Json::Num(self.ns_per_mvm))
+            .set("mvm_per_s", Json::Num(self.mvm_per_s))
+            .set("ops_per_s", Json::Num(self.ops_per_s));
+        o
+    }
+}
+
+/// Write the repo-root `BENCH_cim_mvm.json` report: the measured cases
+/// plus the headline single-thread speedups of the SoA fast path over the
+/// pre-PR legacy AoS baseline (same tile, same options). Respects the
+/// calibrated-over-smoke precedence via [`is_calibrated_report`] at the
+/// caller.
+pub fn write_mvm_report(
+    path: &std::path::Path,
+    source: &str,
+    rows: usize,
+    words: usize,
+    cases: &[MvmBenchCase],
+    speedups: &[(&str, f64)],
+) {
+    let mut doc = Json::obj();
+    doc.set("source", Json::Str(source.to_string()))
+        .set("rows", Json::Num(rows as f64))
+        .set("words", Json::Num(words as f64))
+        .set(
+            "cases",
+            Json::Arr(cases.iter().map(|c| c.to_json()).collect()),
+        );
+    for (k, v) in speedups {
+        doc.set(k, Json::Num(*v));
+    }
+    if let Err(e) = doc.write_file(path) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("  wrote {}", path.display());
     }
 }
 
@@ -427,6 +517,7 @@ mod tests {
         let point = ServingSweepPoint {
             backend: "cim",
             workers: 2,
+            mc_workers: 4,
             requests: 24,
             mc_samples: 4,
             req_per_s: 100.0,

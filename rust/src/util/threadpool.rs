@@ -134,6 +134,52 @@ where
     out.into_iter().map(|v| v.expect("par_map slot")).collect()
 }
 
+/// Parallel map over *disjoint mutable slots*: applies `f(i, &mut items[i])`
+/// for every slot on up to `threads` OS threads, returning results in slot
+/// order. Each slot is handed to exactly one worker (a mutex-guarded
+/// `iter_mut` dispenses disjoint `&mut` borrows), so stateful items — e.g.
+/// MC-sampling replicas that advance private RNG streams — run in parallel
+/// without interior mutability. Results depend only on which slots each
+/// item processes, never on thread scheduling. Serial fallback for
+/// `threads <= 1` or a single slot (avoids spawn overhead on the
+/// single-core CI machine).
+pub fn par_map_mut<T, R, F>(items: &mut [T], threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let n = items.len();
+    if threads <= 1 || n <= 1 {
+        return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let threads = threads.min(n);
+    let dispenser = Mutex::new(items.iter_mut().enumerate());
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots = Mutex::new(&mut out);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let next = {
+                    let mut it = dispenser.lock().unwrap();
+                    it.next()
+                };
+                match next {
+                    Some((i, item)) => {
+                        let v = f(i, item);
+                        // One writer per index; the mutex serializes only
+                        // the (cheap) slot write, not `f`.
+                        let mut guard = slots.lock().unwrap();
+                        guard[i] = Some(v);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("par_map_mut slot")).collect()
+}
+
 /// A simple bounded MPMC channel built on std primitives, used by the
 /// coordinator for backpressure (send blocks when the queue is full).
 pub struct Bounded<T> {
@@ -308,6 +354,28 @@ mod tests {
     fn par_map_serial_fallback() {
         let out = par_map(5, 1, |i| i + 1);
         assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn par_map_mut_mutates_each_slot_once_in_order() {
+        let mut items: Vec<u64> = (0..64).collect();
+        let out = par_map_mut(&mut items, 4, |i, v| {
+            *v += 100;
+            (i as u64, *v)
+        });
+        assert_eq!(out.len(), 64);
+        for (i, (idx, v)) in out.iter().enumerate() {
+            assert_eq!(*idx, i as u64);
+            assert_eq!(*v, i as u64 + 100);
+        }
+        assert_eq!(items, (100..164).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn par_map_mut_serial_fallback() {
+        let mut items = vec![1, 2, 3];
+        let out = par_map_mut(&mut items, 1, |_, v| *v * 2);
+        assert_eq!(out, vec![2, 4, 6]);
     }
 
     #[test]

@@ -91,10 +91,14 @@ fn cim_mvm_tracks_reference_within_calibration_tolerance() {
 
 #[test]
 fn cim_backend_replays_bitwise_for_fixed_die_seed_and_workers() {
+    // The determinism triple now includes the engine-level MC fan-out:
+    // replay is bit-identical for a fixed (die_seed, workers, mc_workers)
+    // even though each shard's head samples run on 3 parallel replicas.
     let run = || {
         let mut cfg = small_cfg();
         cfg.server.backend = Backend::Cim;
         cfg.server.workers = 2;
+        cfg.server.mc_workers = 3;
         let coord = Coordinator::start_backend(cfg.clone()).unwrap();
         let gen = SyntheticPerson::new(cfg.model.image_side, 44);
         let mut out = Vec::new();

@@ -1,0 +1,216 @@
+//! Property tests for the SoA MVM fast path (ISSUE 3):
+//!
+//! 1. `CimTile::mvm` (precomputed bit-plane SoA) is *bit-identical* to
+//!    `CimTile::mvm_legacy` (per-word AoS walk) across random tiles,
+//!    programs and inputs — ideal and non-ideal analog, Bayesian and
+//!    μ-only, calibrated and raw.
+//! 2. The plane cache is correctly invalidated by word writes
+//!    (`write_sigma_raw`, `program`): interleaving writes with MVMs never
+//!    lets a stale cache leak into a result.
+//! 3. `mvm_batch` is bit-identical to the same number of sequential
+//!    `mvm` calls (tile and array level), while amortizing drives, plane
+//!    builds and ledger deposits.
+//!
+//! The file also seeds the repo-root `BENCH_cim_mvm.json` perf artifact
+//! at smoke scale (the calibrated writer is `benches/cim_mvm.rs`).
+
+use bnn_cim::cim::{CimTile, MvmOptions};
+use bnn_cim::config::ChipConfig;
+use bnn_cim::util::bench::{
+    is_calibrated_report, quick_ns_per_iter, repo_root_artifact, write_mvm_report, MvmBenchCase,
+};
+use bnn_cim::util::propcheck::{property, Gen};
+use bnn_cim::util::rng::{Pcg64, Rng64};
+
+/// Random small-tile chip (cheap per property case, physics unchanged).
+fn random_chip(g: &mut Gen) -> ChipConfig {
+    let mut chip = ChipConfig::default();
+    chip.tile.rows = g.usize_in(4, 24);
+    chip.tile.words_per_row = g.usize_in(2, 6);
+    chip.die_seed = g.u64();
+    chip
+}
+
+fn random_program(tile: &mut CimTile, seed: u64, sigma_scale: f64) {
+    let mut rng = Pcg64::new(seed);
+    for r in 0..tile.rows() {
+        for w in 0..tile.words() {
+            let mu = (rng.next_f64() * 2.0 - 1.0) * 200.0;
+            let sg = rng.next_f64() * sigma_scale;
+            tile.program(r, w, mu, sg);
+        }
+    }
+}
+
+fn random_input(rows: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Pcg64::new(seed ^ 0xF00D);
+    (0..rows).map(|_| rng.next_below(16) as u8).collect()
+}
+
+fn assert_same(a: &bnn_cim::cim::tile::MvmResult, b: &bnn_cim::cim::tile::MvmResult, ctx: &str) {
+    assert_eq!(a.mu, b.mu, "μ path diverged ({ctx})");
+    assert_eq!(a.sigma, b.sigma, "σε path diverged ({ctx})");
+}
+
+#[test]
+fn soa_fast_path_is_bit_identical_to_legacy() {
+    property("soa == legacy (bitwise)", 24, |g| {
+        let chip = random_chip(g);
+        // Two tiles with identical die seeds and identical histories:
+        // every RNG stream advances in lockstep, so any divergence is a
+        // fast-path bug, not noise.
+        let mut fast = CimTile::new(&chip);
+        let mut legacy = CimTile::new(&chip);
+        let program_seed = g.u64();
+        let sigma_scale = g.f64_in(0.0, 15.0);
+        random_program(&mut fast, program_seed, sigma_scale);
+        random_program(&mut legacy, program_seed, sigma_scale);
+        if g.bool() {
+            // Half the cases run calibrated (ADC offset + ε₀ registers
+            // populated — exercises the live-register correction path).
+            bnn_cim::cim::calibrate(&mut fast, 4, 4).unwrap();
+            bnn_cim::cim::calibrate(&mut legacy, 4, 4).unwrap();
+        }
+        for case in 0..4 {
+            let opts = MvmOptions {
+                bayesian: g.bool() || case == 0,
+                refresh_epsilon: g.bool() || case == 1,
+                ideal_analog: g.bool(),
+            };
+            let x = random_input(fast.rows(), g.u64());
+            let a = fast.mvm(&x, opts);
+            let b = legacy.mvm_legacy(&x, opts);
+            assert_same(&a, &b, &format!("case {case}, opts {opts:?}"));
+        }
+        assert_eq!(fast.ledger.grng_samples, legacy.ledger.grng_samples);
+        assert_eq!(fast.ledger.mvm_count, legacy.ledger.mvm_count);
+    });
+}
+
+#[test]
+fn plane_cache_invalidates_on_word_writes() {
+    property("plane cache invalidation", 16, |g| {
+        let chip = random_chip(g);
+        let mut fast = CimTile::new(&chip);
+        let mut legacy = CimTile::new(&chip);
+        let seed = g.u64();
+        random_program(&mut fast, seed, 10.0);
+        random_program(&mut legacy, seed, 10.0);
+        let opts = MvmOptions::default();
+        // Interleave MVMs (which build/use the cache) with σ-word and
+        // full-word writes (which must invalidate it). The legacy tile
+        // reads the AoS words directly, so staleness shows up as a
+        // divergence on the very next MVM.
+        for round in 0..4u64 {
+            let x = random_input(fast.rows(), g.u64());
+            assert_same(&fast.mvm(&x, opts), &legacy.mvm_legacy(&x, opts), "pre-write");
+            let r = g.usize_in(0, fast.rows() - 1);
+            let w = g.usize_in(0, fast.words() - 1);
+            if g.bool() {
+                let code = g.usize_in(0, 15) as u8;
+                fast.write_sigma_raw(r, w, code);
+                legacy.write_sigma_raw(r, w, code);
+            } else {
+                let mu = g.f64_in(-200.0, 200.0);
+                let sg = g.f64_in(0.0, 15.0);
+                fast.program(r, w, mu, sg);
+                legacy.program(r, w, mu, sg);
+            }
+            let x = random_input(fast.rows(), g.u64() ^ round);
+            assert_same(&fast.mvm(&x, opts), &legacy.mvm_legacy(&x, opts), "post-write");
+        }
+    });
+}
+
+#[test]
+fn mvm_batch_is_bit_identical_to_sequential() {
+    property("mvm_batch == sequential", 12, |g| {
+        let chip = random_chip(g);
+        let mut batched = CimTile::new(&chip);
+        let mut serial = CimTile::new(&chip);
+        let seed = g.u64();
+        random_program(&mut batched, seed, 12.0);
+        random_program(&mut serial, seed, 12.0);
+        let opts = MvmOptions {
+            bayesian: g.bool(),
+            refresh_epsilon: g.bool(),
+            ideal_analog: g.bool(),
+        };
+        let t = g.usize_in(1, 6);
+        let x = random_input(batched.rows(), g.u64());
+        let ys = batched.mvm_batch(&x, t, opts);
+        assert_eq!(ys.len(), t);
+        for (s, y) in ys.iter().enumerate() {
+            let r = serial.mvm(&x, opts);
+            assert_same(y, &r, &format!("sample {s}/{t}"));
+        }
+        assert_eq!(batched.ledger.mvm_count, serial.ledger.mvm_count);
+        assert_eq!(batched.ledger.grng_samples, serial.ledger.grng_samples);
+    });
+}
+
+/// Smoke-scale seed of the repo-root `BENCH_cim_mvm.json` perf artifact:
+/// single-thread MVM throughput of the pre-PR AoS baseline vs the SoA
+/// fast path (fresh-ε and held-ε) and the batched fast path, on the
+/// default 64×8 chip tile. The calibrated (release, longer-running)
+/// writer is `benches/cim_mvm.rs`; a calibrated report is never
+/// overwritten by this smoke seed.
+#[test]
+fn bench_cim_mvm_smoke_seed() {
+    let chip = ChipConfig::default();
+    let ops = chip.tile.ops_per_mvm() as f64;
+    let mut tile = CimTile::new(&chip);
+    random_program(&mut tile, 42, 10.0);
+    let x = random_input(tile.rows(), 7);
+    let fresh = MvmOptions::default();
+    let held = MvmOptions {
+        refresh_epsilon: false,
+        ..MvmOptions::default()
+    };
+    let target = std::time::Duration::from_millis(120);
+    let batch = 16;
+
+    let legacy_fresh = quick_ns_per_iter(|| drop(tile.mvm_legacy(&x, fresh)), 8, target);
+    let soa_fresh = quick_ns_per_iter(|| drop(tile.mvm(&x, fresh)), 8, target);
+    let legacy_held = quick_ns_per_iter(|| drop(tile.mvm_legacy(&x, held)), 8, target);
+    let soa_held = quick_ns_per_iter(|| drop(tile.mvm(&x, held)), 8, target);
+    let batch_held =
+        quick_ns_per_iter(|| drop(tile.mvm_batch(&x, batch, held)), 2, target) / batch as f64;
+    let batch_fresh =
+        quick_ns_per_iter(|| drop(tile.mvm_batch(&x, batch, fresh)), 2, target) / batch as f64;
+
+    let cases = [
+        MvmBenchCase::new("legacy_aos_fresh_eps", legacy_fresh, ops),
+        MvmBenchCase::new("soa_fresh_eps", soa_fresh, ops),
+        MvmBenchCase::new("soa_batch16_fresh_eps", batch_fresh, ops),
+        MvmBenchCase::new("legacy_aos_held_eps", legacy_held, ops),
+        MvmBenchCase::new("soa_held_eps", soa_held, ops),
+        MvmBenchCase::new("soa_batch16_held_eps", batch_held, ops),
+    ];
+    // Headline: MVM compute throughput (held ε — both arms would pay the
+    // identical in-word sampling cost, so it cancels), batched SoA vs the
+    // pre-PR per-call AoS path. Fresh-ε speedup reported alongside.
+    let speedup_single_thread = legacy_held / batch_held.max(1e-9);
+    let speedup_fresh = legacy_fresh / batch_fresh.max(1e-9);
+    println!(
+        "cim mvm smoke: held-ε speedup {speedup_single_thread:.2}x, \
+         fresh-ε speedup {speedup_fresh:.2}x"
+    );
+
+    let root = repo_root_artifact("BENCH_cim_mvm.json");
+    if is_calibrated_report(&root) {
+        println!("  keeping calibrated {}", root.display());
+        return;
+    }
+    write_mvm_report(
+        &root,
+        "tests/mvm_props.rs bench_cim_mvm_smoke_seed (smoke-scale, test profile)",
+        chip.tile.rows,
+        chip.tile.words_per_row,
+        &cases,
+        &[
+            ("speedup_single_thread", speedup_single_thread),
+            ("speedup_fresh_eps", speedup_fresh),
+        ],
+    );
+}
