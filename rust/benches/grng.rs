@@ -1,14 +1,19 @@
 //! Bench: GRNG subsystem — regenerates Fig. 8 (characterization),
 //! Fig. 9 (bias sweep) and Tab. I (temperature sweep), plus wallclock
-//! throughput of the two simulation modes.
+//! throughput of the two simulation modes and the bank-level fill paths
+//! (SoA block sampler vs the retained per-cell AoS walk), written to the
+//! repo-root `BENCH_grng_fill.json` (calibrated; the smoke-scale seed is
+//! `tests/grng_props.rs`).
 
-use bnn_cim::config::GrngConfig;
+use bnn_cim::config::{ChipConfig, GrngConfig};
 use bnn_cim::experiments::{self, fig9, tab1};
-use bnn_cim::grng::GrngCell;
-use bnn_cim::util::bench::{black_box, Suite};
+use bnn_cim::grng::{GrngBank, GrngCell};
+use bnn_cim::util::bench::{
+    black_box, repo_root_artifact, write_grng_fill_report, GrngFillCase, Suite,
+};
 
 fn main() {
-    let mut suite = Suite::new("grng (Fig. 8, Fig. 9, Tab. I)");
+    let mut suite = Suite::new("grng (Fig. 8, Fig. 9, Tab. I, bank fill)");
     suite.header();
     let cfg = GrngConfig::default();
 
@@ -21,6 +26,63 @@ fn main() {
     suite.bench_throughput("sample_circuit (stochastic ODE)", 1.0, || {
         black_box(cell2.sample_circuit());
     });
+
+    // --- bank fill: SoA block sampler vs retained AoS walk ---
+    // All three paths are bit-identical (tests/grng_props.rs); this
+    // measures only the layout change. One iteration = one whole-bank
+    // conversion (rows × words fresh ε), the unit the chip delivers per
+    // cycle.
+    let chip = ChipConfig::default();
+    let cells = chip.tile.rows * chip.tile.words_per_row;
+    let mut buf = vec![0.0f64; cells];
+    let mut bank_block = GrngBank::for_chip(&chip);
+    let block = suite
+        .bench_throughput("bank fill_epsilon (SoA block)", cells as f64, || {
+            bank_block.fill_epsilon(black_box(&mut buf));
+        })
+        .ns_per_iter;
+    let mut bank_planes = GrngBank::for_chip(&chip);
+    let planes = suite
+        .bench_throughput("bank fill_epsilon_planes (plane-major)", cells as f64, || {
+            bank_planes.fill_epsilon_planes(black_box(&mut buf));
+        })
+        .ns_per_iter;
+    let mut bank_legacy = GrngBank::for_chip(&chip);
+    let legacy = suite
+        .bench_throughput("bank fill_epsilon_legacy (AoS walk)", cells as f64, || {
+            bank_legacy.fill_epsilon_legacy(black_box(&mut buf));
+        })
+        .ns_per_iter;
+    let gsa_per_s = cells as f64 / block.max(1e-9);
+    let speedup_block_vs_legacy = legacy / block.max(1e-9);
+    let speedup_planes_vs_legacy = legacy / planes.max(1e-9);
+    suite.note(
+        "block speedup vs legacy",
+        format!("{speedup_block_vs_legacy:.2}x"),
+    );
+    suite.note("block software rate", format!("{gsa_per_s:.4} GSa/s"));
+    let quick = std::env::args().any(|a| a == "--quick");
+    let source = if quick {
+        "benches/grng.rs --quick (calibrated, release profile)"
+    } else {
+        "benches/grng.rs (calibrated, release profile)"
+    };
+    write_grng_fill_report(
+        &repo_root_artifact("BENCH_grng_fill.json"),
+        source,
+        chip.tile.rows,
+        chip.tile.words_per_row,
+        &[
+            GrngFillCase::new("block_soa", block, cells),
+            GrngFillCase::new("block_soa_planes", planes, cells),
+            GrngFillCase::new("legacy_aos", legacy, cells),
+        ],
+        &[
+            ("gsa_per_s", gsa_per_s),
+            ("speedup_block_vs_legacy", speedup_block_vs_legacy),
+            ("speedup_planes_vs_legacy", speedup_planes_vs_legacy),
+        ],
+    );
 
     // --- Fig. 8 ---
     let rep = experiments::run_characterization(&cfg, 2500, 42, true);

@@ -130,10 +130,12 @@ impl TileArray {
 
     /// `t` Monte-Carlo MVMs of the same input across the whole array.
     /// Each tile runs its `t` samples back to back ([`CimTile::mvm_batch`]
-    /// — drives and plane caches amortized); because every tile owns its
-    /// private RNG streams, the per-tile stream order is identical to `t`
-    /// sequential [`TileArray::mvm`] calls, so result `s` is bit-identical
-    /// to the `s`-th sequential call.
+    /// — drives and plane caches amortized, and for `t >= 4` on
+    /// full-size banks each tile
+    /// double-buffers ε generation against its conversions); because
+    /// every tile owns its private RNG streams, the per-tile stream order
+    /// is identical to `t` sequential [`TileArray::mvm`] calls, so result
+    /// `s` is bit-identical to the `s`-th sequential call.
     pub fn mvm_batch(
         &mut self,
         x_codes: &[u8],

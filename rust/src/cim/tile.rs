@@ -102,12 +102,25 @@ struct TilePlanes {
 struct MvmScratch {
     /// IDAC output per row.
     drives: Vec<f64>,
-    /// ε transposed to `[word][row]` (matches the plane layout).
-    eps_t: Vec<f64>,
     /// drives[r]·ε[r][w] for the word currently being converted, shared
     /// across that word's σ bit-planes.
     row_terms: Vec<f64>,
 }
+
+/// Engagement gate for the ε/MVM pipeline in [`CimTile::mvm_batch`]: the
+/// batch must be at least this deep *and* the bank at least
+/// [`EPSILON_PIPELINE_MIN_CELLS`] cells before ε generation moves onto a
+/// producer thread. Below either bound the scoped-thread spawn (~tens of
+/// µs) costs more than the overlap saves (one whole-bank fill per extra
+/// sample — ~5-10 µs at the default 64×8 bank, far less on the tiny
+/// tiles unit tests use). The pipelined and serial arms are
+/// bit-identical, so both thresholds are pure performance knobs;
+/// recalibrate against `benches/cim_mvm.rs` fresh-ε batch cases.
+const EPSILON_PIPELINE_MIN_T: usize = 4;
+
+/// Minimum bank size (rows × words) for the ε/MVM pipeline; the default
+/// 64×8 = 512-cell chip qualifies, sub-tile test geometries do not.
+const EPSILON_PIPELINE_MIN_CELLS: usize = 256;
 
 /// The tile's fixed column-charge reduction spec: eight interleaved
 /// partial sums (lane = row mod 8) combined pairwise,
@@ -146,6 +159,109 @@ fn lane_dot(a: &[f64], b: &[f64]) -> f64 {
     lane_combine(&s)
 }
 
+/// The tile's ADC conversion chain with its borrows split away from the
+/// GRNG bank: everything `convert_words` needs — ADCs (mutable: each
+/// conversion advances its private noise stream), correction registers,
+/// geometry and full-scale factors — and nothing the ε producer touches.
+/// This is what lets `mvm_batch` overlap sample k's conversion with
+/// sample k+1's ε generation without any shared state.
+struct ConvertUnit<'a> {
+    rows: usize,
+    words: usize,
+    mu_bits: usize,
+    sigma_bits: usize,
+    adc_lsb_mu: f64,
+    adc_lsb_sigma: f64,
+    adcs: &'a mut [SarAdc],
+    adc_offset_cal: &'a [f64],
+    grng_offset_cal: &'a [f64],
+}
+
+impl ConvertUnit<'_> {
+    /// Convert every word's bit-plane columns through the ADCs and
+    /// recombine (the shift-add reduction), reading weights from the SoA
+    /// planes and ε from the plane-major `eps_t` (`[word][row]`). The
+    /// contiguous inner loops accumulate in the same row order as the
+    /// legacy path, so outputs are bit-identical.
+    fn convert_words(
+        &mut self,
+        opts: MvmOptions,
+        planes: &TilePlanes,
+        scratch: &mut MvmScratch,
+        eps_t: &[f64],
+        out_mu: &mut [f64],
+        out_sigma: &mut [f64],
+    ) {
+        let rows = self.rows;
+        let mu_bits = self.mu_bits;
+        let sigma_bits = self.sigma_bits;
+        let adc_per_word = mu_bits + sigma_bits;
+        let drives = &scratch.drives;
+        scratch.row_terms.clear();
+        scratch.row_terms.resize(rows, 0.0);
+        for w in 0..self.words {
+            // ---- μ subarray: one differential column per bit-plane ----
+            let mut y_mu = 0.0f64;
+            for b in 0..mu_bits {
+                let plane = &planes.mu[(w * mu_bits + b) * rows..(w * mu_bits + b + 1) * rows];
+                let q = lane_dot(drives, plane);
+                let v_lsb = q / self.adc_lsb_mu;
+                let adc_idx = w * adc_per_word + b;
+                let code = if opts.ideal_analog {
+                    self.adcs[adc_idx].convert_ideal(v_lsb)
+                } else {
+                    self.adcs[adc_idx].convert(v_lsb)
+                };
+                let corrected = code as f64 - self.adc_offset_cal[adc_idx];
+                y_mu += (1u64 << b) as f64 * corrected * self.adc_lsb_mu;
+            }
+
+            // ---- σε subarray ----
+            let mut y_sigma = 0.0f64;
+            if opts.bayesian {
+                // drives[r]·ε[r][w] once per word, shared by its planes.
+                let eps_col = &eps_t[w * rows..(w + 1) * rows];
+                for ((t, d), e) in scratch
+                    .row_terms
+                    .iter_mut()
+                    .zip(drives.iter())
+                    .zip(eps_col.iter())
+                {
+                    *t = d * e;
+                }
+                for b in 0..sigma_bits {
+                    let base = (w * sigma_bits + b) * rows;
+                    let mask = &planes.sigma_mask[base..base + rows];
+                    let q = lane_dot(&scratch.row_terms, mask);
+                    let v_lsb = q / self.adc_lsb_sigma;
+                    let adc_idx = w * adc_per_word + mu_bits + b;
+                    let code = if opts.ideal_analog {
+                        self.adcs[adc_idx].convert_ideal(v_lsb)
+                    } else {
+                        self.adcs[adc_idx].convert(v_lsb)
+                    };
+                    let corrected = code as f64 - self.adc_offset_cal[adc_idx];
+                    y_sigma += (1u64 << b) as f64 * corrected * self.adc_lsb_sigma;
+                }
+                // GRNG static-offset correction (Eq. 10): subtract the
+                // calibrated Σ_i X_i·σ_ij·ε₀_ij estimate.
+                let vals = &planes.sigma_val[w * rows..(w + 1) * rows];
+                let mut corr = 0.0f64;
+                for r in 0..rows {
+                    let c = self.grng_offset_cal[r * self.words + w];
+                    if c != 0.0 {
+                        corr += drives[r] * vals[r] * c;
+                    }
+                }
+                y_sigma -= corr;
+            }
+
+            out_mu[w] = y_mu;
+            out_sigma[w] = y_sigma;
+        }
+    }
+}
+
 /// One CIM tile: `rows` inputs × `words` outputs.
 #[derive(Clone)]
 pub struct CimTile {
@@ -158,8 +274,14 @@ pub struct CimTile {
     sigma: Vec<SigmaWord>,
     /// In-word GRNG bank (one cell per σ word).
     pub bank: GrngBank,
-    /// Cached ε matrix (refreshed per MVM unless told otherwise).
-    eps: Vec<f64>,
+    /// Current ε matrix in plane-major `[word][row]` layout — filled
+    /// directly by the bank's block sampler
+    /// (`GrngBank::fill_epsilon_planes`), exactly the layout the σε fast
+    /// path consumes, so no row-major intermediate or transpose exists.
+    eps_t: Vec<f64>,
+    /// Second ε buffer for the double-buffered `mvm_batch` pipeline
+    /// (sample k runs from buffer k % 2 while k+1 fills).
+    eps_spare: Vec<f64>,
     /// Row IDACs.
     idacs: Vec<Idac>,
     /// Column ADCs: [words × (mu_bits + sigma_bits)].
@@ -179,8 +301,6 @@ pub struct CimTile {
     planes: Option<TilePlanes>,
     /// Reusable MVM scratch buffers.
     scratch: MvmScratch,
-    /// True when `scratch.eps_t` no longer mirrors `eps`.
-    eps_t_stale: bool,
 }
 
 impl CimTile {
@@ -215,7 +335,8 @@ impl CimTile {
             mu: vec![MuWord { digits: 0, bits: chip.tile.mu_bits as u8 }; rows * words],
             sigma: vec![SigmaWord { code: 0, bits: chip.tile.sigma_bits as u8 }; rows * words],
             bank,
-            eps: vec![0.0; rows * words],
+            eps_t: vec![0.0; rows * words],
+            eps_spare: Vec::new(),
             idacs,
             adcs,
             adc_offset_cal: vec![0.0; words * adc_per_word],
@@ -225,7 +346,6 @@ impl CimTile {
             adc_lsb_sigma,
             planes: None,
             scratch: MvmScratch::default(),
-            eps_t_stale: true,
         }
     }
 
@@ -287,9 +407,11 @@ impl CimTile {
         );
     }
 
-    /// The ε matrix used by the last MVM (row-major) — for tests/debug.
+    /// The ε matrix used by the last MVM, in the tile's native plane-major
+    /// `[word][row]` layout (cell (r, w) at `w * rows + r`) — for
+    /// tests/debug.
     pub fn last_epsilon(&self) -> &[f64] {
-        &self.eps
+        &self.eps_t
     }
 
     /// Perform one matrix-vector multiplication (SoA fast path).
@@ -313,13 +435,11 @@ impl CimTile {
         let planes = self.take_planes();
         let mut scratch = std::mem::take(&mut self.scratch);
         self.fill_drives(x, opts.ideal_analog, &mut scratch.drives);
-        if opts.bayesian {
-            self.sync_eps_t(&mut scratch.eps_t);
-        }
 
         let mut out_mu = vec![0.0f64; self.words];
         let mut out_sigma = vec![0.0f64; self.words];
-        self.convert_words(opts, &planes, &mut scratch, &mut out_mu, &mut out_sigma);
+        let (mut unit, eps_t) = self.convert_unit();
+        unit.convert_words(opts, &planes, &mut scratch, eps_t, &mut out_mu, &mut out_sigma);
         self.deposit_mvm_energy(opts, 1);
 
         self.scratch = scratch;
@@ -338,6 +458,19 @@ impl CimTile {
     /// consumed in the same order); only the ledger's floating-point
     /// totals may differ in the last ulp (one `t`-scaled deposit instead
     /// of `t` small ones).
+    ///
+    /// # ε/MVM pipeline (double buffering)
+    ///
+    /// For `t >= EPSILON_PIPELINE_MIN_T` fresh-ε Bayesian batches, ε
+    /// generation is pipelined into the MVM: one scoped producer thread
+    /// runs the bank's block sampler while this thread converts, with two
+    /// ε buffers in flight (sample k always consumes the k-th conversion
+    /// of the bank's streams and runs from buffer k % 2 — the slot →
+    /// buffer assignment is static). The GRNG streams live only on the
+    /// producer and the ADC streams only on the consumer, each advancing
+    /// in the same order as the serial loop, so outputs stay bit-identical
+    /// (pinned by `tests/mvm_props.rs`) and replay is still a pure
+    /// function of the die seed — thread scheduling cannot leak in.
     pub fn mvm_batch(&mut self, x: &[u8], t: usize, opts: MvmOptions) -> Vec<MvmResult> {
         assert_eq!(x.len(), self.rows, "input length must equal tile rows");
         let max_code = (self.chip.idac.levels() - 1) as u8;
@@ -348,26 +481,142 @@ impl CimTile {
         self.fill_drives(x, opts.ideal_analog, &mut scratch.drives);
 
         let mut out = Vec::with_capacity(t);
-        for _ in 0..t {
-            if opts.bayesian && opts.refresh_epsilon {
-                self.refresh_epsilon();
+        let refresh = opts.bayesian && opts.refresh_epsilon;
+        if refresh
+            && t >= EPSILON_PIPELINE_MIN_T
+            && self.rows * self.words >= EPSILON_PIPELINE_MIN_CELLS
+            && !self.bank.is_empty()
+        {
+            self.run_batch_pipelined(t, opts, &planes, &mut scratch, &mut out);
+        } else {
+            for _ in 0..t {
+                if refresh {
+                    self.refresh_epsilon();
+                }
+                let mut out_mu = vec![0.0f64; self.words];
+                let mut out_sigma = vec![0.0f64; self.words];
+                let (mut unit, eps_t) = self.convert_unit();
+                unit.convert_words(opts, &planes, &mut scratch, eps_t, &mut out_mu, &mut out_sigma);
+                out.push(MvmResult {
+                    mu: out_mu,
+                    sigma: out_sigma,
+                });
             }
-            if opts.bayesian {
-                self.sync_eps_t(&mut scratch.eps_t);
-            }
-            let mut out_mu = vec![0.0f64; self.words];
-            let mut out_sigma = vec![0.0f64; self.words];
-            self.convert_words(opts, &planes, &mut scratch, &mut out_mu, &mut out_sigma);
-            out.push(MvmResult {
-                mu: out_mu,
-                sigma: out_sigma,
-            });
         }
         self.deposit_mvm_energy(opts, t as u64);
 
         self.scratch = scratch;
         self.planes = Some(planes);
         out
+    }
+
+    /// The double-buffered ε pipeline behind [`CimTile::mvm_batch`]: a
+    /// producer thread fills ε buffers from the in-word bank while this
+    /// thread runs the ADC conversion chain — the software mirror of the
+    /// chip generating next-sample randomness in parallel with the
+    /// current MVM. Channels carry two buffers round-robin; the last
+    /// sample's buffer is kept as the tile's current ε (so
+    /// `last_epsilon`/`mvm_reference` see the final sample, exactly like
+    /// the serial loop).
+    fn run_batch_pipelined(
+        &mut self,
+        t: usize,
+        opts: MvmOptions,
+        planes: &TilePlanes,
+        scratch: &mut MvmScratch,
+        out: &mut Vec<MvmResult>,
+    ) {
+        use std::sync::mpsc::sync_channel;
+        let rows = self.rows;
+        let words = self.words;
+        let mu_bits = self.chip.tile.mu_bits;
+        let sigma_bits = self.chip.tile.sigma_bits;
+        let (adc_lsb_mu, adc_lsb_sigma) = (self.adc_lsb_mu, self.adc_lsb_sigma);
+        let cells = rows * words;
+        if self.eps_spare.len() != cells {
+            self.eps_spare.resize(cells, 0.0);
+        }
+        let buf_a = std::mem::take(&mut self.eps_t);
+        let buf_b = std::mem::take(&mut self.eps_spare);
+
+        // Split disjoint borrows: the bank samples on the producer thread
+        // while the ADC chain converts on this one.
+        let Self {
+            ref mut bank,
+            ref mut adcs,
+            ref adc_offset_cal,
+            ref grng_offset_cal,
+            ..
+        } = *self;
+        let mut unit = ConvertUnit {
+            rows,
+            words,
+            mu_bits,
+            sigma_bits,
+            adc_lsb_mu,
+            adc_lsb_sigma,
+            adcs: adcs.as_mut_slice(),
+            adc_offset_cal: adc_offset_cal.as_slice(),
+            grng_offset_cal: grng_offset_cal.as_slice(),
+        };
+
+        let (filled_tx, filled_rx) = sync_channel::<Vec<f64>>(2);
+        let (free_tx, free_rx) = sync_channel::<Vec<f64>>(2);
+        free_tx.send(buf_a).expect("fresh channel");
+        free_tx.send(buf_b).expect("fresh channel");
+        let mut last_eps: Option<Vec<f64>> = None;
+        let mut spare: Option<Vec<f64>> = None;
+        std::thread::scope(|sc| {
+            let producer = sc.spawn(move || {
+                for _ in 0..t {
+                    let Ok(mut buf) = free_rx.recv() else {
+                        return None;
+                    };
+                    bank.fill_epsilon_planes(&mut buf);
+                    // Never blocks: the channel capacity covers both
+                    // circulating buffers.
+                    if filled_tx.send(buf).is_err() {
+                        return None;
+                    }
+                }
+                // Exactly one consumer recycle (the s = t-2 return) is
+                // still in flight after the t-th fill; claim it so the
+                // buffer survives for the next batch. Errors only if the
+                // consumer unwound and dropped its sender.
+                free_rx.recv().ok()
+            });
+            // Owned by this closure so an unwind drops it, releasing the
+            // producer's `free_rx.recv()` before the scope joins.
+            let recycle = free_tx;
+            for s in 0..t {
+                let eps = filled_rx.recv().expect("ε pipeline producer died");
+                let mut out_mu = vec![0.0f64; words];
+                let mut out_sigma = vec![0.0f64; words];
+                unit.convert_words(opts, planes, scratch, &eps, &mut out_mu, &mut out_sigma);
+                out.push(MvmResult {
+                    mu: out_mu,
+                    sigma: out_sigma,
+                });
+                if s + 1 == t {
+                    last_eps = Some(eps);
+                } else if let Err(ret) = recycle.send(eps) {
+                    // Producer died mid-batch (panic path); keep the
+                    // buffer for the next batch.
+                    spare = Some(ret.0);
+                }
+            }
+            drop(recycle);
+            if let Ok(Some(buf)) = producer.join() {
+                spare = Some(buf);
+            }
+        });
+        self.eps_t = last_eps.expect("t >= 1 in pipelined batch");
+        if let Some(b) = spare {
+            self.eps_spare = b;
+        }
+        // One batched GRNG deposit for the t refreshes (the serial path's
+        // per-refresh deposits differ only in the last ulp).
+        self.deposit_grng_energy(t as u64);
     }
 
     /// The pre-SoA reference implementation: walks the AoS
@@ -428,7 +677,7 @@ impl CimTile {
                     for r in 0..self.rows {
                         let i = r * self.words + w;
                         if self.sigma[i].bit(b) == 1 {
-                            s[r & 7] += drives[r] * self.eps[i];
+                            s[r & 7] += drives[r] * self.eps_t[w * self.rows + r];
                         }
                     }
                     let q = lane_combine(&s);
@@ -524,101 +773,25 @@ impl CimTile {
         }
     }
 
-    /// Mirror `eps` (row-major) into the `[word][row]` transpose the σ
-    /// fast path consumes; no-op while ε is unchanged.
-    fn sync_eps_t(&mut self, eps_t: &mut Vec<f64>) {
-        if !self.eps_t_stale && eps_t.len() == self.eps.len() {
-            return;
-        }
-        eps_t.clear();
-        eps_t.resize(self.eps.len(), 0.0);
-        for w in 0..self.words {
-            for r in 0..self.rows {
-                eps_t[w * self.rows + r] = self.eps[r * self.words + w];
-            }
-        }
-        self.eps_t_stale = false;
-    }
-
-    /// Convert every word's bit-plane columns through the ADCs and
-    /// recombine (the shift-add reduction), reading weights from the SoA
-    /// planes. The contiguous inner loops accumulate in the same row
-    /// order as the legacy path, so outputs are bit-identical.
-    fn convert_words(
-        &mut self,
-        opts: MvmOptions,
-        planes: &TilePlanes,
-        scratch: &mut MvmScratch,
-        out_mu: &mut [f64],
-        out_sigma: &mut [f64],
-    ) {
-        let rows = self.rows;
-        let mu_bits = self.chip.tile.mu_bits;
-        let sigma_bits = self.chip.tile.sigma_bits;
-        let adc_per_word = mu_bits + sigma_bits;
-        let drives = &scratch.drives;
-        scratch.row_terms.clear();
-        scratch.row_terms.resize(rows, 0.0);
-        for w in 0..self.words {
-            // ---- μ subarray: one differential column per bit-plane ----
-            let mut y_mu = 0.0f64;
-            for b in 0..mu_bits {
-                let plane = &planes.mu[(w * mu_bits + b) * rows..(w * mu_bits + b + 1) * rows];
-                let q = lane_dot(drives, plane);
-                let v_lsb = q / self.adc_lsb_mu;
-                let adc_idx = w * adc_per_word + b;
-                let code = if opts.ideal_analog {
-                    self.adcs[adc_idx].convert_ideal(v_lsb)
-                } else {
-                    self.adcs[adc_idx].convert(v_lsb)
-                };
-                let corrected = code as f64 - self.adc_offset_cal[adc_idx];
-                y_mu += (1u64 << b) as f64 * corrected * self.adc_lsb_mu;
-            }
-
-            // ---- σε subarray ----
-            let mut y_sigma = 0.0f64;
-            if opts.bayesian {
-                // drives[r]·ε[r][w] once per word, shared by its planes.
-                let eps_col = &scratch.eps_t[w * rows..(w + 1) * rows];
-                for ((t, d), e) in scratch
-                    .row_terms
-                    .iter_mut()
-                    .zip(drives.iter())
-                    .zip(eps_col.iter())
-                {
-                    *t = d * e;
-                }
-                for b in 0..sigma_bits {
-                    let base = (w * sigma_bits + b) * rows;
-                    let mask = &planes.sigma_mask[base..base + rows];
-                    let q = lane_dot(&scratch.row_terms, mask);
-                    let v_lsb = q / self.adc_lsb_sigma;
-                    let adc_idx = w * adc_per_word + mu_bits + b;
-                    let code = if opts.ideal_analog {
-                        self.adcs[adc_idx].convert_ideal(v_lsb)
-                    } else {
-                        self.adcs[adc_idx].convert(v_lsb)
-                    };
-                    let corrected = code as f64 - self.adc_offset_cal[adc_idx];
-                    y_sigma += (1u64 << b) as f64 * corrected * self.adc_lsb_sigma;
-                }
-                // GRNG static-offset correction (Eq. 10): subtract the
-                // calibrated Σ_i X_i·σ_ij·ε₀_ij estimate.
-                let vals = &planes.sigma_val[w * rows..(w + 1) * rows];
-                let mut corr = 0.0f64;
-                for r in 0..rows {
-                    let c = self.grng_offset_cal[r * self.words + w];
-                    if c != 0.0 {
-                        corr += drives[r] * vals[r] * c;
-                    }
-                }
-                y_sigma -= corr;
-            }
-
-            out_mu[w] = y_mu;
-            out_sigma[w] = y_sigma;
-        }
+    /// The ADC conversion chain's borrow of the tile, split from the GRNG
+    /// bank so the ε pipeline can sample on another thread while this
+    /// converts. Paired with the tile's current ε by
+    /// [`CimTile::convert_unit`].
+    fn convert_unit(&mut self) -> (ConvertUnit<'_>, &[f64]) {
+        (
+            ConvertUnit {
+                rows: self.rows,
+                words: self.words,
+                mu_bits: self.chip.tile.mu_bits,
+                sigma_bits: self.chip.tile.sigma_bits,
+                adc_lsb_mu: self.adc_lsb_mu,
+                adc_lsb_sigma: self.adc_lsb_sigma,
+                adcs: self.adcs.as_mut_slice(),
+                adc_offset_cal: self.adc_offset_cal.as_slice(),
+                grng_offset_cal: self.grng_offset_cal.as_slice(),
+            },
+            self.eps_t.as_slice(),
+        )
     }
 
     /// Energy bookkeeping for `n` MVMs (batched: one deposit per
@@ -692,9 +865,8 @@ impl CimTile {
             for b in 0..sigma_bits {
                 let mut q = 0.0;
                 for r in 0..self.rows {
-                    let i = r * self.words + w;
-                    if self.sigma[i].bit(b) == 1 {
-                        q += drives[r] * self.eps[i];
+                    if self.sigma[r * self.words + w].bit(b) == 1 {
+                        q += drives[r] * self.eps_t[w * self.rows + r];
                     }
                 }
                 let idx = w * adc_per_word + mu_bits + b;
@@ -719,12 +891,18 @@ impl CimTile {
     }
 
     /// Draw a fresh ε matrix without running an MVM (also the per-sample
-    /// refresh inside `mvm`/`mvm_batch`).
+    /// refresh inside `mvm` and the serial arm of `mvm_batch`). The bank
+    /// writes straight into the plane-major layout the MVM consumes.
     pub fn refresh_epsilon(&mut self) {
-        self.bank.fill_epsilon(&mut self.eps);
-        self.eps_t_stale = true;
-        self.ledger.grng_samples += self.eps.len() as u64;
-        let grng_j = self.bank.mean_energy_per_sample() * self.eps.len() as f64;
+        self.bank.fill_epsilon_planes(&mut self.eps_t);
+        self.deposit_grng_energy(1);
+    }
+
+    /// GRNG energy bookkeeping for `t` whole-bank refreshes.
+    fn deposit_grng_energy(&mut self, t: u64) {
+        let n = self.eps_t.len() as u64 * t;
+        self.ledger.grng_samples += n;
+        let grng_j = self.bank.mean_energy_per_sample() * n as f64;
         self.ledger.deposit(Component::Grng, grng_j);
     }
 
@@ -740,7 +918,6 @@ impl CimTile {
         for adc in &mut self.adcs {
             adc.reseed_noise(seeder.split());
         }
-        self.eps_t_stale = true;
     }
 
     /// Install the calibrated per-cell ε₀ registers (len = rows × words,
@@ -772,7 +949,9 @@ impl CimTile {
                 let i = r * self.words + w;
                 out_mu[w] += x[r] as f64 * self.mu[i].value() as f64;
                 if bayesian {
-                    out_sigma[w] += x[r] as f64 * self.sigma[i].value() as f64 * self.eps[i];
+                    out_sigma[w] += x[r] as f64
+                        * self.sigma[i].value() as f64
+                        * self.eps_t[w * self.rows + r];
                 }
             }
         }
@@ -997,6 +1176,33 @@ mod tests {
         }
         assert_eq!(batched.ledger.mvm_count, serial.ledger.mvm_count);
         assert_eq!(batched.ledger.grng_samples, serial.ledger.grng_samples);
+    }
+
+    #[test]
+    fn mvm_batch_pipelined_matches_sequential_bitwise() {
+        // t ≥ EPSILON_PIPELINE_MIN_T engages the double-buffered ε
+        // pipeline; outputs must stay bit-identical to back-to-back
+        // serial mvm calls, and the tile's final ε must be the last
+        // sample's (the mvm_reference/last_epsilon contract).
+        let chip = ChipConfig::default();
+        let mut batched = CimTile::new(&chip);
+        let mut serial = CimTile::new(&chip);
+        random_program(&mut batched, 29, 9.0);
+        random_program(&mut serial, 29, 9.0);
+        let x = random_input(&batched, 31);
+        let t = 8;
+        assert!(t >= super::EPSILON_PIPELINE_MIN_T);
+        assert!(chip.tile.rows * chip.tile.words_per_row >= super::EPSILON_PIPELINE_MIN_CELLS);
+        let ys = batched.mvm_batch(&x, t, MvmOptions::default());
+        assert_eq!(ys.len(), t);
+        for y in &ys {
+            let r = serial.mvm(&x, MvmOptions::default());
+            assert_eq!(y.mu, r.mu);
+            assert_eq!(y.sigma, r.sigma);
+        }
+        assert_eq!(batched.last_epsilon(), serial.last_epsilon());
+        assert_eq!(batched.ledger.grng_samples, serial.ledger.grng_samples);
+        assert_eq!(batched.ledger.mvm_count, serial.ledger.mvm_count);
     }
 
     #[test]

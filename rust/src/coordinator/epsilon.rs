@@ -13,7 +13,8 @@
 //!
 //! Sources (External mode):
 //! - [`GrngBankSource`] — the paper's hardware: one simulated GRNG cell
-//!   per (row, word); successive fills are successive conversions.
+//!   per (row, word); successive fills are successive whole-bank
+//!   conversions through the SoA block sampler (`GrngBank::fill_epsilon`).
 //!   Includes per-die mismatch (calibrated upstream) and outliers.
 //! - [`PhiloxSource`] — bit-exact mirror of the L1 Pallas kernel's
 //!   in-kernel sampler (key/counter), for cross-layer reproducibility.
@@ -147,7 +148,14 @@ impl GrngBankSource {
 
 impl EpsilonSource for GrngBankSource {
     fn fill(&mut self, out: &mut [f32]) {
-        for slot in out.iter_mut() {
+        if out.is_empty() {
+            return;
+        }
+        assert!(!self.scratch.is_empty(), "empty GRNG bank cannot source ε");
+        // Whole-conversion block fills, then contiguous chunk copies out
+        // of the scratch (same values and order as a per-slot walk).
+        let mut filled = 0;
+        while filled < out.len() {
             if self.cursor >= self.scratch.len() {
                 self.bank.fill_epsilon(&mut self.scratch);
                 for (v, o) in self.scratch.iter_mut().zip(self.offset_cal.iter()) {
@@ -155,8 +163,15 @@ impl EpsilonSource for GrngBankSource {
                 }
                 self.cursor = 0;
             }
-            *slot = self.scratch[self.cursor] as f32;
-            self.cursor += 1;
+            let take = (out.len() - filled).min(self.scratch.len() - self.cursor);
+            for (dst, src) in out[filled..filled + take]
+                .iter_mut()
+                .zip(self.scratch[self.cursor..self.cursor + take].iter())
+            {
+                *dst = *src as f32;
+            }
+            self.cursor += take;
+            filled += take;
         }
         self.drawn += out.len() as u64;
     }

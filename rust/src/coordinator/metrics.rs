@@ -6,6 +6,13 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+/// Age [s] after which a shard's measured ε rate is considered stale and
+/// snapshots report 0 instead of the last interval's value. Generous
+/// enough that slow steady record cadences (one record per fused batch)
+/// still surface a rate; short enough that an idle shard stops claiming
+/// throughput.
+const EPSILON_RATE_STALE_S: f64 = 30.0;
+
 /// Per-shard counters surfaced in [`MetricsSnapshot::per_shard`].
 ///
 /// All energy/ε counters are *absolute cumulative totals* reported by the
@@ -23,6 +30,13 @@ pub struct ShardSnapshot {
     pub engine_executions: u64,
     pub epsilon_samples: u64,
     pub epsilon_energy_j: f64,
+    /// Measured ε generation rate [Sa/s]: `samples_drawn` delta over the
+    /// most recent inter-record interval (delivered throughput with a
+    /// wall-clock denominator, analogous to `throughput_rps`; 0 until
+    /// two records with increasing totals exist, and decays to 0 after
+    /// ~30 s without fresh samples). The live counterpart of the paper's
+    /// Tab. II 5.12 GSa/s hardware throughput.
+    pub epsilon_sa_per_s: f64,
     /// Cumulative tile energy from the engine's `EnergyLedger`s [J]
     /// (0 for backends without a hardware model).
     pub engine_energy_j: f64,
@@ -52,6 +66,11 @@ impl ShardSnapshot {
             self.engine_energy_j / self.engine_ops as f64
         }
     }
+
+    /// Measured ε generation rate [GSa/s] (paper Tab. II headline: 5.12).
+    pub fn epsilon_gsa_per_s(&self) -> f64 {
+        self.epsilon_sa_per_s / 1e9
+    }
 }
 
 #[derive(Clone, Debug, Default)]
@@ -66,6 +85,9 @@ pub struct MetricsSnapshot {
     pub pjrt_executions: u64,
     pub epsilon_samples: u64,
     pub epsilon_energy_j: f64,
+    /// Aggregate measured ε rate across shards [Sa/s] — parallel banks
+    /// add throughput, so this is the sum of the per-shard rates.
+    pub epsilon_sa_per_s: f64,
     /// Cumulative engine tile energy across shards [J] (cim backend).
     pub engine_energy_j: f64,
     /// Per-tile MVMs executed by the engines across shards.
@@ -100,6 +122,11 @@ impl MetricsSnapshot {
         }
     }
 
+    /// Aggregate measured ε rate [GSa/s] (paper Tab. II hardware: 5.12).
+    pub fn epsilon_gsa_per_s(&self) -> f64 {
+        self.epsilon_sa_per_s / 1e9
+    }
+
     pub fn render(&self) -> String {
         let mut out = format!(
             "requests={} rejected={} deferred={} batches={} (fill {:.2})\n\
@@ -124,6 +151,12 @@ impl MetricsSnapshot {
                 "\nepsilon {:.1} fJ/Sample (paper: 360)",
                 self.epsilon_fj_per_sample()
             ));
+            if self.epsilon_sa_per_s > 0.0 {
+                out.push_str(&format!(
+                    " | {:.4} GSa/s measured (paper hw: 5.12)",
+                    self.epsilon_gsa_per_s()
+                ));
+            }
         }
         if self.engine_energy_j > 0.0 {
             out.push_str(&format!(
@@ -170,6 +203,11 @@ struct ShardInner {
     engine_executions: u64,
     epsilon_samples: u64,
     epsilon_energy_j: f64,
+    /// Measured ε rate [Sa/s] from the last pair of records with an
+    /// increasing `samples_drawn` total.
+    epsilon_sa_per_s: f64,
+    /// (when, total) of the last ε record — the delta base.
+    epsilon_last: Option<(std::time::Instant, u64)>,
     engine_energy_j: f64,
     engine_mvms: u64,
     engine_ops: u64,
@@ -239,10 +277,32 @@ impl Metrics {
     }
 
     /// Absolute ε counters for one shard (sources report totals, not
-    /// deltas); the global snapshot sums across shards.
+    /// deltas); the global snapshot sums across shards. The measured
+    /// sample *rate* (the paper's GSa/s headline, live) is derived from
+    /// the `samples_drawn` delta between consecutive records; re-records
+    /// of an unchanged total (idle worker loops) keep the last rate, so
+    /// snapshots stay idempotent.
     pub fn record_epsilon(&self, shard: usize, samples: u64, energy_j: f64) {
+        let now = std::time::Instant::now();
         let mut g = self.inner.lock().unwrap();
         let s = &mut g.shards[shard];
+        match s.epsilon_last {
+            Some((t0, prev)) if samples > prev => {
+                let dt = now.duration_since(t0).as_secs_f64();
+                // Mean rate over the most recent inter-record interval —
+                // the *delivered* sample throughput, wall-clock
+                // denominator included, analogous to `throughput_rps`.
+                // dt == 0 (same timer tick) keeps the old base, so those
+                // samples land in the next measurable delta instead of
+                // silently dropping out of the rate.
+                if dt > 0.0 {
+                    s.epsilon_sa_per_s = (samples - prev) as f64 / dt;
+                    s.epsilon_last = Some((now, samples));
+                }
+            }
+            Some(_) => {} // unchanged total: keep rate and delta base
+            None => s.epsilon_last = Some((now, samples)),
+        }
         s.epsilon_samples = samples;
         s.epsilon_energy_j = energy_j;
     }
@@ -282,6 +342,15 @@ impl Metrics {
                 engine_executions: s.engine_executions,
                 epsilon_samples: s.epsilon_samples,
                 epsilon_energy_j: s.epsilon_energy_j,
+                // A *current* rate: decay to 0 once the shard has drawn
+                // nothing for EPSILON_RATE_STALE_S, so idle shards stop
+                // reporting their last burst as live throughput.
+                epsilon_sa_per_s: match s.epsilon_last {
+                    Some((t0, _)) if t0.elapsed().as_secs_f64() < EPSILON_RATE_STALE_S => {
+                        s.epsilon_sa_per_s
+                    }
+                    _ => 0.0,
+                },
                 engine_energy_j: s.engine_energy_j,
                 engine_mvms: s.engine_mvms,
                 engine_ops: s.engine_ops,
@@ -297,6 +366,7 @@ impl Metrics {
             pjrt_executions: per_shard.iter().map(|s| s.engine_executions).sum(),
             epsilon_samples: per_shard.iter().map(|s| s.epsilon_samples).sum(),
             epsilon_energy_j: per_shard.iter().map(|s| s.epsilon_energy_j).sum(),
+            epsilon_sa_per_s: per_shard.iter().map(|s| s.epsilon_sa_per_s).sum(),
             engine_energy_j: per_shard.iter().map(|s| s.engine_energy_j).sum(),
             engine_mvms: per_shard.iter().map(|s| s.engine_mvms).sum(),
             engine_ops: per_shard.iter().map(|s| s.engine_ops).sum(),
@@ -352,6 +422,27 @@ mod tests {
         assert_eq!(s.per_shard[1].requests, 8);
         assert_eq!(s.per_shard[0].epsilon_samples, 600);
         assert!(s.render().contains("shard 1"));
+    }
+
+    #[test]
+    fn epsilon_rate_derives_from_sample_deltas() {
+        let m = Metrics::new(2);
+        // First record only sets the delta base: no rate yet.
+        m.record_epsilon(0, 1000, 1e-9);
+        assert_eq!(m.snapshot().epsilon_sa_per_s, 0.0);
+        std::thread::sleep(Duration::from_millis(20));
+        m.record_epsilon(0, 513_000, 2e-9);
+        let s = m.snapshot();
+        let rate = s.per_shard[0].epsilon_sa_per_s;
+        assert!(rate > 0.0, "rate must be measured after a delta");
+        // 512k samples over ≥20 ms: bounded above by 512k/0.02 Sa/s.
+        assert!(rate <= 512_000.0 / 0.020 * 1.01, "rate {rate} too high");
+        assert_eq!(s.epsilon_sa_per_s, rate, "global = sum of shards");
+        assert!((s.epsilon_gsa_per_s() - rate / 1e9).abs() < 1e-12);
+        // Re-recording the same total (idle loop) keeps the rate.
+        m.record_epsilon(0, 513_000, 2e-9);
+        assert_eq!(m.snapshot().per_shard[0].epsilon_sa_per_s, rate);
+        assert!(s.render().contains("GSa/s"));
     }
 
     #[test]

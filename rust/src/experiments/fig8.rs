@@ -3,7 +3,7 @@
 //! r-value (paper: r = 0.9967, N = 2500, sub-1 ns pulses unmeasurable).
 
 use crate::config::GrngConfig;
-use crate::grng::{GrngCell, QualityReport};
+use crate::grng::{GrngCell, GrngSample, QualityReport};
 use crate::util::stats::Histogram;
 
 #[derive(Clone, Debug)]
@@ -28,13 +28,28 @@ pub fn run_characterization(
     seed: u64,
     circuit_mode: bool,
 ) -> CharacterizationReport {
+    let mut samples = Vec::new();
+    run_characterization_into(cfg, n, seed, circuit_mode, &mut samples)
+}
+
+/// Into-buffer variant of [`run_characterization`]: reuses `samples`'
+/// allocation, so sweep drivers (the `grng` bench, Fig. 9 / Tab. I style
+/// loops) characterize many operating points without a fresh
+/// `Vec<GrngSample>` per point.
+pub fn run_characterization_into(
+    cfg: &GrngConfig,
+    n: usize,
+    seed: u64,
+    circuit_mode: bool,
+    samples: &mut Vec<GrngSample>,
+) -> CharacterizationReport {
     let mut cell = GrngCell::ideal(cfg, seed);
-    let samples: Vec<_> = if circuit_mode {
-        cell.characterize(n)
+    if circuit_mode {
+        cell.characterize_into(n, samples);
     } else {
-        (0..n).map(|_| cell.sample_fast()).collect()
-    };
-    let quality = QualityReport::from_samples(&samples);
+        cell.sample_fast_into(n, samples);
+    }
+    let quality = QualityReport::from_samples(samples);
     // Histogram ranges framed around the measured spread.
     let w_span = 4.5 * quality.width_sd_s * 1e9;
     let mut width_hist = Histogram::new(-w_span, w_span, 40);
@@ -46,7 +61,7 @@ pub fn run_characterization(
         40,
     );
     let mut sub_1ns = 0usize;
-    for s in &samples {
+    for s in samples.iter() {
         width_hist.push(s.signed_width_s * 1e9);
         latency_hist.push(s.latency_s * 1e9);
         if s.signed_width_s.abs() < 1e-9 {

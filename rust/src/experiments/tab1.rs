@@ -4,7 +4,7 @@
 //! 60 °C, with the r-value collapsing at 60 °C.
 
 use crate::config::GrngConfig;
-use crate::grng::{GrngCell, QualityReport};
+use crate::grng::{GrngCell, GrngSample, QualityReport};
 
 #[derive(Clone, Debug)]
 pub struct TempPoint {
@@ -42,6 +42,9 @@ pub fn bias_for_latency(cfg: &GrngConfig, target_s: f64, temp_c: f64) -> f64 {
 /// lands on the paper's 1.93 µs latency).
 pub fn run_temp_sweep(cfg: &GrngConfig, temps_c: &[f64], n: usize, seed: u64) -> Vec<TempPoint> {
     let bias = bias_for_latency(cfg, 1.931e-6, 28.0);
+    // One sample buffer reused across the whole sweep (into-buffer
+    // characterization — no fresh Vec<GrngSample> per temperature).
+    let mut samples: Vec<GrngSample> = Vec::new();
     temps_c
         .iter()
         .enumerate()
@@ -53,7 +56,7 @@ pub fn run_temp_sweep(cfg: &GrngConfig, temps_c: &[f64], n: usize, seed: u64) ->
             // cross-temperature σ are comparable in absolute time.
             c.sigma_unit_s = 1e-9;
             let mut cell = GrngCell::ideal(&c, seed ^ ((i as u64) << 12));
-            let samples: Vec<_> = (0..n).map(|_| cell.sample_fast()).collect();
+            cell.sample_fast_into(n, &mut samples);
             let q = QualityReport::from_samples(&samples);
             TempPoint {
                 temp_c: t,

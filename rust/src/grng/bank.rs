@@ -6,13 +6,32 @@
 //! unit on the far side of a bus. The bank exposes:
 //!
 //! - [`GrngBank::fill_epsilon`] — one fresh ε per cell (one MVM's worth),
+//! - [`GrngBank::fill_epsilon_planes`] — the same conversion written
+//!   directly into the plane-major `[word][row]` layout the CIM tile's
+//!   SoA MVM fast path consumes (no row-major intermediate),
 //! - per-cell offsets for the calibration controller,
 //! - aggregate throughput/energy accounting for Tab. II.
+//!
+//! §Perf — block sampling layout. The pre-PR bank walked a
+//! `Vec<GrngCell>` of AoS structs: every draw chased a ~300-byte cell
+//! (params embed a full `GrngConfig`) and ran the branchy scalar
+//! `eps_fast` per cell. The bank now lowers the hot parameters into
+//! contiguous per-bank SoA lanes (`diff_mean_s`, `diff_sigma_s`,
+//! `sigma_unit_s`, `p_outlier`, `outlier_scale_s`) plus a flat lane of
+//! Xoshiro256 states, and samples in three passes: a contiguous
+//! branch-free Gaussian block, a rare sparse outlier pass (only
+//! outlier-capable cells draw the uniform, exactly as the scalar path
+//! does), and a contiguous normalization. Each cell's draw *sequence* is
+//! unchanged — cell i still consumes (gaussian, [uniform, [exp, sign]])
+//! from its own private state — so the block path is **bit-identical** to
+//! the retained per-cell walk ([`GrngBank::fill_epsilon_legacy`], pinned
+//! by `tests/grng_props.rs`), and both paths share one state lane so they
+//! can be interleaved on a live bank.
 
 use crate::config::{ChipConfig, GrngConfig};
-use crate::grng::circuit::GrngCell;
+use crate::grng::circuit::{eps_fast_step, CellParams};
 use crate::grng::mismatch::DieVariation;
-use crate::util::rng::SplitMix64;
+use crate::util::rng::{Rng64, SplitMix64, Xoshiro256};
 
 /// Derive the die seed for shard `shard` of a sharded serving pool.
 ///
@@ -22,16 +41,18 @@ use crate::util::rng::SplitMix64;
 /// replicating the in-word GRNG bank per compute lane (cf. VIBNN's
 /// parallel RNG banks): statistically independent ε, reproducible for a
 /// fixed `(die_seed, workers)` pair.
+///
+/// O(1): SplitMix64's state is a Weyl sequence, so the `shard`-th split
+/// is reached by one [`SplitMix64::jump`] instead of looping `shard`
+/// times through the splitter (bit-identical to the loop, pinned by
+/// `tests/grng_props.rs`).
 pub fn shard_die_seed(die_seed: u64, shard: usize) -> u64 {
     if shard == 0 {
         return die_seed;
     }
     let mut splitter = SplitMix64::new(die_seed ^ 0xD1E5_EED5_0F5A_A5F1);
-    let mut seed = die_seed;
-    for _ in 0..shard {
-        seed = splitter.split();
-    }
-    seed
+    splitter.jump(shard as u64 - 1);
+    splitter.split()
 }
 
 /// Chip config for shard `shard` of a serving pool: the same die family
@@ -45,11 +66,33 @@ pub fn shard_chip(chip: &ChipConfig, shard: usize) -> ChipConfig {
 }
 
 /// Bank of GRNG cells matching a tile's σε array layout.
+///
+/// Cell (row, word) lives at flat index `row * words + word` in every
+/// per-cell lane; [`GrngBank::fill_epsilon_planes`] additionally exposes
+/// the transposed `word * rows + row` view.
 #[derive(Clone)]
 pub struct GrngBank {
     pub rows: usize,
     pub words: usize,
-    cells: Vec<GrngCell>,
+    /// Full per-cell params (AoS) — construction-time source of truth for
+    /// the SoA lanes, metadata queries (offsets, energy, latency), and
+    /// the retained legacy sampler.
+    params: Vec<CellParams>,
+    /// Flat lane of per-cell sampling states, shared by the block and
+    /// legacy paths (interleaving them continues one stream per cell).
+    states: Vec<Xoshiro256>,
+    // ---- SoA hot lanes (copies of `params` fields, row-major) ----
+    diff_mean_s: Vec<f64>,
+    diff_sigma_s: Vec<f64>,
+    sigma_unit_s: Vec<f64>,
+    /// σ_unit lane in plane-major (`[word][row]`) order, so the
+    /// plane-major normalization pass is contiguous too.
+    sigma_unit_t: Vec<f64>,
+    p_outlier: Vec<f64>,
+    outlier_scale_s: Vec<f64>,
+    /// Flat indices of outlier-capable cells (p_outlier > 0) — the sparse
+    /// second pass. Usually all cells (hot die) or none (p clamped to 0).
+    outlier_cells: Vec<u32>,
     /// Total samples drawn (for energy/throughput accounting).
     samples_drawn: u64,
 }
@@ -57,19 +100,50 @@ pub struct GrngBank {
 impl GrngBank {
     /// Build the bank for a die.
     pub fn new(cfg: &GrngConfig, die: &DieVariation, seed: u64) -> Self {
+        let n = die.rows * die.words;
         let mut seeder = SplitMix64::new(seed ^ 0x6BA4_57B1);
-        let cells = (0..die.rows * die.words)
-            .map(|i| {
-                let row = i / die.words;
-                let word = i % die.words;
-                GrngCell::new(die.cell_params(cfg, row, word), seeder.split())
-            })
-            .collect();
-        Self {
+        let mut params = Vec::with_capacity(n);
+        let mut states = Vec::with_capacity(n);
+        for i in 0..n {
+            let row = i / die.words;
+            let word = i % die.words;
+            params.push(die.cell_params(cfg, row, word));
+            states.push(Xoshiro256::new(seeder.split()));
+        }
+        let mut bank = Self {
             rows: die.rows,
             words: die.words,
-            cells,
+            params,
+            states,
+            diff_mean_s: Vec::new(),
+            diff_sigma_s: Vec::new(),
+            sigma_unit_s: Vec::new(),
+            sigma_unit_t: Vec::new(),
+            p_outlier: Vec::new(),
+            outlier_scale_s: Vec::new(),
+            outlier_cells: Vec::new(),
             samples_drawn: 0,
+        };
+        bank.rebuild_lanes();
+        bank
+    }
+
+    /// Lower the AoS params into the contiguous SoA sampling lanes.
+    fn rebuild_lanes(&mut self) {
+        let n = self.params.len();
+        self.diff_mean_s = self.params.iter().map(|p| p.diff_mean_s).collect();
+        self.diff_sigma_s = self.params.iter().map(|p| p.diff_sigma_s).collect();
+        self.sigma_unit_s = self.params.iter().map(|p| p.sigma_unit_s).collect();
+        self.p_outlier = self.params.iter().map(|p| p.p_outlier).collect();
+        self.outlier_scale_s = self.params.iter().map(|p| p.outlier_scale_s).collect();
+        self.outlier_cells = (0..n as u32)
+            .filter(|&i| self.p_outlier[i as usize] > 0.0)
+            .collect();
+        self.sigma_unit_t = vec![0.0; n];
+        for r in 0..self.rows {
+            for w in 0..self.words {
+                self.sigma_unit_t[w * self.rows + r] = self.sigma_unit_s[r * self.words + w];
+            }
         }
     }
 
@@ -91,81 +165,153 @@ impl GrngBank {
     }
 
     pub fn len(&self) -> usize {
-        self.cells.len()
+        self.states.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.cells.is_empty()
+        self.states.is_empty()
     }
 
+    /// The derived parameters of cell (row, word).
     #[inline]
-    pub fn cell(&self, row: usize, word: usize) -> &GrngCell {
-        &self.cells[row * self.words + word]
-    }
-
-    #[inline]
-    pub fn cell_mut(&mut self, row: usize, word: usize) -> &mut GrngCell {
-        &mut self.cells[row * self.words + word]
+    pub fn cell_params(&self, row: usize, word: usize) -> &CellParams {
+        &self.params[row * self.words + word]
     }
 
     /// Fill `out` (len = rows × words, row-major) with one fresh ε per
-    /// cell — the parallel sampling that accompanies every MVM. Uses the
-    /// fast closed-form path.
+    /// cell — the parallel sampling that accompanies every MVM. Block
+    /// path: contiguous Gaussian pass over the SoA lanes, sparse outlier
+    /// pass, contiguous normalization. Bit-identical to
+    /// [`GrngBank::fill_epsilon_legacy`].
     pub fn fill_epsilon(&mut self, out: &mut [f64]) {
-        assert_eq!(out.len(), self.cells.len());
-        for (o, cell) in out.iter_mut().zip(self.cells.iter_mut()) {
-            *o = cell.eps_fast();
+        assert_eq!(out.len(), self.states.len());
+        // Pass 1: one Gaussian per cell, streaming through the lanes.
+        for (((o, st), dm), ds) in out
+            .iter_mut()
+            .zip(self.states.iter_mut())
+            .zip(self.diff_mean_s.iter())
+            .zip(self.diff_sigma_s.iter())
+        {
+            *o = dm + ds * st.next_gaussian();
         }
-        self.samples_drawn += self.cells.len() as u64;
+        // Pass 2: outlier-capable cells draw their uniform (keeping each
+        // cell's sequence aligned with the scalar path); the heavy tail
+        // itself is the rare branch.
+        for &cell in &self.outlier_cells {
+            let i = cell as usize;
+            let st = &mut self.states[i];
+            if st.next_f64() < self.p_outlier[i] {
+                let extra = -st.next_f64_open().ln() * self.outlier_scale_s[i];
+                if st.next_bool(0.5) {
+                    out[i] += extra;
+                } else {
+                    out[i] -= extra;
+                }
+            }
+        }
+        // Pass 3: normalize pulse widths to ε units (the same `d / σ_unit`
+        // division the scalar path performs).
+        for (o, su) in out.iter_mut().zip(self.sigma_unit_s.iter()) {
+            *o /= *su;
+        }
+        self.samples_drawn += out.len() as u64;
+    }
+
+    /// Fill `out` (len = rows × words) with one fresh ε per cell in the
+    /// plane-major `[word][row]` layout the tile's SoA MVM fast path
+    /// consumes — cell (r, w) lands at `w * rows + r`. Skips the
+    /// row-major intermediate and the transpose/scatter the tile used to
+    /// do. Per-cell streams are private, so the values are bit-identical
+    /// to a [`GrngBank::fill_epsilon`] conversion viewed transposed
+    /// (pinned by `tests/grng_props.rs`).
+    pub fn fill_epsilon_planes(&mut self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.states.len());
+        let rows = self.rows;
+        let words = self.words;
+        // Pass 1: contiguous over the lanes, writes transposed (the 4 KB
+        // output stays cache-resident at tile scale).
+        let mut i = 0usize;
+        for r in 0..rows {
+            for w in 0..words {
+                out[w * rows + r] =
+                    self.diff_mean_s[i] + self.diff_sigma_s[i] * self.states[i].next_gaussian();
+                i += 1;
+            }
+        }
+        // Pass 2: sparse outliers, transposed targets.
+        for &cell in &self.outlier_cells {
+            let i = cell as usize;
+            let t = (i % words) * rows + i / words;
+            let st = &mut self.states[i];
+            if st.next_f64() < self.p_outlier[i] {
+                let extra = -st.next_f64_open().ln() * self.outlier_scale_s[i];
+                if st.next_bool(0.5) {
+                    out[t] += extra;
+                } else {
+                    out[t] -= extra;
+                }
+            }
+        }
+        // Pass 3: contiguous normalization against the transposed lane.
+        for (o, su) in out.iter_mut().zip(self.sigma_unit_t.iter()) {
+            *o /= *su;
+        }
+        self.samples_drawn += out.len() as u64;
+    }
+
+    /// The pre-SoA reference sampler: per-cell scalar walk through the
+    /// AoS params, exactly the old `Vec<GrngCell>` loop (same arithmetic
+    /// via [`eps_fast_step`], same per-cell states). Kept as the A/B
+    /// baseline for `tests/grng_props.rs` (bit-exactness) and
+    /// `benches/grng.rs` / `BENCH_grng_fill.json` (speedup).
+    pub fn fill_epsilon_legacy(&mut self, out: &mut [f64]) {
+        assert_eq!(out.len(), self.states.len());
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = eps_fast_step(&self.params[i], &mut self.states[i]);
+        }
+        self.samples_drawn += out.len() as u64;
     }
 
     /// Allocate-and-fill variant.
     pub fn epsilon_matrix(&mut self) -> Vec<f64> {
-        let mut out = vec![0.0; self.cells.len()];
+        let mut out = vec![0.0; self.states.len()];
         self.fill_epsilon(&mut out);
         out
     }
 
     /// True per-cell static offsets (ground truth for calibration tests).
     pub fn true_offsets(&self) -> Vec<f64> {
-        self.cells
-            .iter()
-            .map(|c| c.params.epsilon_offset())
-            .collect()
+        self.params.iter().map(|p| p.epsilon_offset()).collect()
     }
 
     /// Reseed every cell's sampling stream from SplitMix64 splits of
     /// `seed`, keeping the die's physics (mismatch, energy, latency).
-    /// With [`GrngCell::reseed`], this is how an MC-parallel replica of a
-    /// calibrated tile gets an independent ε stream on the *same* die.
+    /// This is how an MC-parallel replica of a calibrated tile gets an
+    /// independent ε stream on the *same* die.
     pub fn reseed_cells(&mut self, seed: u64) {
         let mut seeder = SplitMix64::new(seed ^ 0x6BA4_57B1);
-        for cell in &mut self.cells {
-            cell.reseed(seeder.split());
+        for st in &mut self.states {
+            *st = Xoshiro256::new(seeder.split());
         }
     }
 
     /// Mean per-sample energy across the bank [J]; 0.0 for an empty bank.
     pub fn mean_energy_per_sample(&self) -> f64 {
-        if self.cells.is_empty() {
+        if self.params.is_empty() {
             return 0.0;
         }
-        let total: f64 = self.cells.iter().map(|c| c.params.energy_j).sum();
-        total / self.cells.len() as f64
+        let total: f64 = self.params.iter().map(|p| p.energy_j).sum();
+        total / self.params.len() as f64
     }
 
     /// Mean conversion latency (≈ slowest-branch mean) across the bank
     /// [s]; 0.0 for an empty bank.
     pub fn mean_latency(&self) -> f64 {
-        if self.cells.is_empty() {
+        if self.params.is_empty() {
             return 0.0;
         }
-        let total: f64 = self
-            .cells
-            .iter()
-            .map(|c| c.params.mu_p.max(c.params.mu_n))
-            .sum();
-        total / self.cells.len() as f64
+        let total: f64 = self.params.iter().map(|p| p.mu_p.max(p.mu_n)).sum();
+        total / self.params.len() as f64
     }
 
     /// Aggregate hardware sample throughput [Sa/s]: all cells convert in
@@ -173,14 +319,14 @@ impl GrngBank {
     /// 5.12 GSa/s: 512 cells ÷ ~100 ns cycle.) An empty bank produces no
     /// samples: 0.0, not a panic.
     pub fn hardware_throughput_sa_s(&self) -> f64 {
-        let Some(first) = self.cells.first() else {
+        let Some(first) = self.params.first() else {
             return 0.0;
         };
-        let latency = self.mean_latency() + first.params.cfg.dff_reset_window_s * 2.0;
+        let latency = self.mean_latency() + first.cfg.dff_reset_window_s * 2.0;
         if latency <= 0.0 {
             return 0.0;
         }
-        self.cells.len() as f64 / latency
+        self.params.len() as f64 / latency
     }
 
     pub fn samples_drawn(&self) -> u64 {
@@ -252,6 +398,8 @@ mod tests {
         assert_eq!(bank.mean_latency(), 0.0);
         let mut out: [f64; 0] = [];
         bank.fill_epsilon(&mut out);
+        bank.fill_epsilon_legacy(&mut out);
+        bank.fill_epsilon_planes(&mut out);
         assert_eq!(bank.samples_drawn(), 0);
     }
 
@@ -293,5 +441,28 @@ mod tests {
         chip2.die_seed = 1;
         let mut c = GrngBank::for_chip(&chip2);
         assert_ne!(a.epsilon_matrix(), c.epsilon_matrix());
+    }
+
+    #[test]
+    fn block_and_legacy_paths_share_one_stream() {
+        // Both samplers advance the same per-cell states, so interleaving
+        // them on one bank draws the same sequence as either path alone
+        // on a twin bank.
+        let chip = ChipConfig::default();
+        let mut mixed = GrngBank::for_chip(&chip);
+        let mut pure = GrngBank::for_chip(&chip);
+        let n = mixed.len();
+        let mut a = vec![0.0; n];
+        let mut b = vec![0.0; n];
+        for round in 0..4 {
+            if round % 2 == 0 {
+                mixed.fill_epsilon(&mut a);
+            } else {
+                mixed.fill_epsilon_legacy(&mut a);
+            }
+            pure.fill_epsilon_legacy(&mut b);
+            assert_eq!(a, b, "round {round}");
+        }
+        assert_eq!(mixed.samples_drawn(), pure.samples_drawn());
     }
 }

@@ -146,9 +146,12 @@ impl GrngCell {
 
     /// Simulate one complete conversion with the stochastic ODE.
     pub fn sample_circuit(&mut self) -> GrngSample {
-        let p = self.params.clone();
-        let t_p = self.simulate_branch(p.i_p, p.mu_p);
-        let t_n = self.simulate_branch(p.i_n, p.mu_n);
+        // Copy out the four branch scalars instead of cloning the whole
+        // CellParams (which embeds a full GrngConfig) per conversion.
+        let (i_p, mu_p) = (self.params.i_p, self.params.mu_p);
+        let (i_n, mu_n) = (self.params.i_n, self.params.mu_n);
+        let t_p = self.simulate_branch(i_p, mu_p);
+        let t_n = self.simulate_branch(i_n, mu_n);
         self.finish_sample(t_p, t_n)
     }
 
@@ -203,25 +206,10 @@ impl GrngCell {
     }
 
     /// Fast path returning only ε (no bookkeeping) — the MVM hot loop.
-    ///
-    /// §Perf: t_n − t_p of two independent Gaussians IS a Gaussian with
-    /// precomputed (diff_mean, diff_sigma), so one draw replaces two
-    /// (distribution unchanged; verified by `eps_is_approximately_
-    /// standard_normal` and the circuit-vs-fast pinning test). Outliers
-    /// are the rare path: skip the uniform draw entirely when p = 0.
+    /// Delegates to [`eps_fast_step`], the shared sampling arithmetic.
     #[inline]
     pub fn eps_fast(&mut self) -> f64 {
-        let p = &self.params;
-        let mut d = p.diff_mean_s + p.diff_sigma_s * self.rng.next_gaussian();
-        if p.p_outlier > 0.0 && self.rng.next_f64() < p.p_outlier {
-            let extra = -self.rng.next_f64_open().ln() * p.outlier_scale_s;
-            if self.rng.next_bool(0.5) {
-                d += extra;
-            } else {
-                d -= extra;
-            }
-        }
-        d / p.sigma_unit_s
+        eps_fast_step(&self.params, &mut self.rng)
     }
 
     fn finish_sample(&mut self, t_p: f64, t_n: f64) -> GrngSample {
@@ -247,8 +235,54 @@ impl GrngCell {
 
     /// Batch characterization: n circuit-level samples.
     pub fn characterize(&mut self, n: usize) -> Vec<GrngSample> {
-        (0..n).map(|_| self.sample_circuit()).collect()
+        let mut out = Vec::new();
+        self.characterize_into(n, &mut out);
+        out
     }
+
+    /// Into-buffer characterization: reuses `out`'s allocation, so sweep
+    /// drivers (Fig. 8/9, Tab. I, the `grng` bench) draw millions of
+    /// samples without a fresh `Vec<GrngSample>` per point.
+    pub fn characterize_into(&mut self, n: usize, out: &mut Vec<GrngSample>) {
+        out.clear();
+        out.reserve(n);
+        for _ in 0..n {
+            out.push(self.sample_circuit());
+        }
+    }
+
+    /// Into-buffer fast sampling (closed-form mode of the same sweeps).
+    pub fn sample_fast_into(&mut self, n: usize, out: &mut Vec<GrngSample>) {
+        out.clear();
+        out.reserve(n);
+        for _ in 0..n {
+            out.push(self.sample_fast());
+        }
+    }
+}
+
+/// One ε draw from precomputed cell params and an explicit RNG state —
+/// the single source of the hot-path sampling arithmetic, shared by
+/// [`GrngCell::eps_fast`] and [`crate::grng::GrngBank`]'s retained
+/// per-cell legacy sampler (so the two can never drift apart).
+///
+/// §Perf: t_n − t_p of two independent Gaussians IS a Gaussian with
+/// precomputed (diff_mean, diff_sigma), so one draw replaces two
+/// (distribution unchanged; verified by `eps_is_approximately_
+/// standard_normal` and the circuit-vs-fast pinning test). Outliers
+/// are the rare path: skip the uniform draw entirely when p = 0.
+#[inline]
+pub(crate) fn eps_fast_step(p: &CellParams, rng: &mut Xoshiro256) -> f64 {
+    let mut d = p.diff_mean_s + p.diff_sigma_s * rng.next_gaussian();
+    if p.p_outlier > 0.0 && rng.next_f64() < p.p_outlier {
+        let extra = -rng.next_f64_open().ln() * p.outlier_scale_s;
+        if rng.next_bool(0.5) {
+            d += extra;
+        } else {
+            d -= extra;
+        }
+    }
+    d / p.sigma_unit_s
 }
 
 #[cfg(test)]

@@ -145,8 +145,11 @@ impl BayesDense {
     /// `t` hardware MC samples of the *same* input — the batched fast
     /// path: activation quantization, IDAC drives, SoA plane caches and
     /// ledger deposits are amortized across the batch via
-    /// [`TileArray::mvm_batch`], while ε is refreshed per sample. Sample
-    /// `s` is bit-identical to the `s`-th of `t` sequential
+    /// [`TileArray::mvm_batch`], while ε is refreshed per sample (and,
+    /// for `t >= 4` on full-size banks, generated on a producer thread
+    /// in parallel with the previous sample's MVM — the tiles'
+    /// double-buffered ε pipeline).
+    /// Sample `s` is bit-identical to the `s`-th of `t` sequential
     /// [`BayesDense::forward_hw`] calls.
     pub fn forward_hw_mc(&mut self, x: &[f32], t: usize, bayesian: bool) -> Vec<Vec<f32>> {
         assert_eq!(x.len(), self.in_dim);

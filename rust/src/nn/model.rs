@@ -314,19 +314,7 @@ impl Model {
     /// [`Model::head_sample_hw`] calls (each layer's tile streams are
     /// consumed in the same sample order either way).
     pub fn head_samples_hw(&mut self, features: &[f32], t: usize) -> Vec<Vec<f64>> {
-        let Some((first, rest)) = self.head.split_first_mut() else {
-            let logits: Vec<f64> = features.iter().map(|&v| v as f64).collect();
-            return (0..t).map(|_| softmax(&logits)).collect();
-        };
-        let mut acts = first.forward_hw_mc(features, t, true);
-        for layer in rest.iter_mut() {
-            for a in acts.iter_mut() {
-                *a = layer.forward_hw(a, true);
-            }
-        }
-        acts.iter()
-            .map(|x| softmax(&x.iter().map(|&v| v as f64).collect::<Vec<_>>()))
-            .collect()
+        head_sample_layers_mc(&mut self.head, features, t)
     }
 
     /// One MC sample through the Bayesian head (float reference).
@@ -388,6 +376,37 @@ pub fn head_sample_layers(layers: &mut [BayesDense], features: &[f32]) -> Vec<f6
         x = layer.forward_hw(&x, true);
     }
     softmax(&x.iter().map(|&v| v as f64).collect::<Vec<_>>())
+}
+
+/// `t` MC samples of the same features through a stack of Bayesian
+/// layers — the batched fast path behind [`Model::head_samples_hw`] and
+/// the cim engine's MC fan-out. The first layer (shared input across
+/// samples) runs through `BayesDense::forward_hw_mc`, which amortizes
+/// activation quantization, IDAC drives, plane caches and ledger deposits
+/// and — at `t >= 4` on full-size banks — double-buffers ε generation
+/// against the MVM;
+/// deeper layers see per-sample activations and run per sample. Sample
+/// `s` is bit-identical to the `s`-th of `t` sequential
+/// [`head_sample_layers`] calls (each layer's tile streams advance in the
+/// same sample order either way).
+pub fn head_sample_layers_mc(
+    layers: &mut [BayesDense],
+    features: &[f32],
+    t: usize,
+) -> Vec<Vec<f64>> {
+    let Some((first, rest)) = layers.split_first_mut() else {
+        let logits: Vec<f64> = features.iter().map(|&v| v as f64).collect();
+        return (0..t).map(|_| softmax(&logits)).collect();
+    };
+    let mut acts = first.forward_hw_mc(features, t, true);
+    for layer in rest.iter_mut() {
+        for a in acts.iter_mut() {
+            *a = layer.forward_hw(a, true);
+        }
+    }
+    acts.iter()
+        .map(|x| softmax(&x.iter().map(|&v| v as f64).collect::<Vec<_>>()))
+        .collect()
 }
 
 #[cfg(test)]

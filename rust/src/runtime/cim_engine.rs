@@ -33,7 +33,7 @@ use crate::config::Config;
 use crate::energy::Component;
 use crate::error::{Error, Result};
 use crate::grng::shard_chip;
-use crate::nn::model::head_sample_layers;
+use crate::nn::model::{head_sample_layers, head_sample_layers_mc};
 use crate::nn::{BayesDense, Model};
 use crate::util::rng::SplitMix64;
 use crate::util::threadpool::par_map_mut;
@@ -212,13 +212,36 @@ impl CimEngine {
         // replicas' &mut borrows stay lifetime-checked with no channel
         // plumbing, and the spawn cost is small against a fused call's
         // tile work at the default chip size.
+        //
+        // Batched MC runs: the slot packer replicates one request's
+        // features across its MC-pass slots, so a replica's consecutive
+        // slots often carry the *same* feature row. Those runs collapse
+        // into one `head_sample_layers_mc` call — the first head layer
+        // then rides `mvm_batch`'s amortized drives/planes and (for runs
+        // ≥ 4 on full-size banks) the double-buffered ε pipeline, where
+        // the in-word banks
+        // generate sample k+1's ε while sample k's MVM converts. Batched
+        // == sequential bit-for-bit (pinned at every level), so the
+        // replay contract below is unchanged.
         let per_replica = par_map_mut(&mut self.replicas, replica_count, |r, layers| {
+            let row = |i: usize| &feats[i * fdim..(i + 1) * fdim];
             let mut samples = Vec::new();
             let mut bi = r;
             while bi < b {
-                let probs = head_sample_layers(layers, &feats[bi * fdim..(bi + 1) * fdim]);
-                samples.push((bi, probs));
-                bi += replica_count;
+                let feat = row(bi);
+                let mut run = 1;
+                while bi + run * replica_count < b && row(bi + run * replica_count) == feat {
+                    run += 1;
+                }
+                if run == 1 {
+                    samples.push((bi, head_sample_layers(layers, feat)));
+                } else {
+                    let probs = head_sample_layers_mc(layers, feat, run);
+                    for (k, p) in probs.into_iter().enumerate() {
+                        samples.push((bi + k * replica_count, p));
+                    }
+                }
+                bi += run * replica_count;
             }
             samples
         });

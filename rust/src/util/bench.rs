@@ -407,6 +407,71 @@ pub fn write_mvm_report(
     }
 }
 
+/// One measured case of the GRNG bank fill comparison — the single
+/// authoritative schema for `BENCH_grng_fill.json` cases, shared by
+/// `benches/grng.rs` (calibrated, release) and `tests/grng_props.rs`
+/// (smoke-scale seed emitted by `cargo test`).
+pub struct GrngFillCase {
+    /// e.g. "block_soa", "block_soa_planes", "legacy_aos".
+    pub case: String,
+    /// Wallclock per whole-bank conversion (rows × words samples).
+    pub ns_per_fill: f64,
+    pub ns_per_sample: f64,
+    pub sa_per_s: f64,
+}
+
+impl GrngFillCase {
+    pub fn new(case: &str, ns_per_fill: f64, cells: usize) -> Self {
+        let ns_per_sample = ns_per_fill / (cells as f64).max(1.0);
+        Self {
+            case: case.to_string(),
+            ns_per_fill,
+            ns_per_sample,
+            sa_per_s: 1e9 / ns_per_sample.max(1e-12),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("case", Json::Str(self.case.clone()))
+            .set("ns_per_fill", Json::Num(self.ns_per_fill))
+            .set("ns_per_sample", Json::Num(self.ns_per_sample))
+            .set("sa_per_s", Json::Num(self.sa_per_s));
+        o
+    }
+}
+
+/// Write the repo-root `BENCH_grng_fill.json` report: measured bank-fill
+/// cases plus headline fields — at minimum `gsa_per_s` (block-path
+/// software throughput, comparable against the paper's 5.12 GSa/s
+/// hardware number) and `speedup_block_vs_legacy` (SoA block sampler vs
+/// the retained per-cell AoS walk, same streams, bit-identical outputs).
+pub fn write_grng_fill_report(
+    path: &std::path::Path,
+    source: &str,
+    rows: usize,
+    words: usize,
+    cases: &[GrngFillCase],
+    headlines: &[(&str, f64)],
+) {
+    let mut doc = Json::obj();
+    doc.set("source", Json::Str(source.to_string()))
+        .set("rows", Json::Num(rows as f64))
+        .set("words", Json::Num(words as f64))
+        .set(
+            "cases",
+            Json::Arr(cases.iter().map(|c| c.to_json()).collect()),
+        );
+    for (k, v) in headlines {
+        doc.set(k, Json::Num(*v));
+    }
+    if let Err(e) = doc.write_file(path) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("  wrote {}", path.display());
+    }
+}
+
 /// True when `path` already holds a calibrated (bench-written) serving
 /// report that a smoke-scale writer must not overwrite. The precedence
 /// rule lives here, in one place: calibrated reports mark themselves with

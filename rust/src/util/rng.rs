@@ -99,6 +99,9 @@ pub struct SplitMix64 {
     state: u64,
 }
 
+/// The golden-ratio increment of SplitMix64's Weyl sequence.
+const SPLITMIX_GAMMA: u64 = 0x9E3779B97F4A7C15;
+
 impl SplitMix64 {
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
@@ -108,12 +111,20 @@ impl SplitMix64 {
     pub fn split(&mut self) -> u64 {
         self.next_u64()
     }
+
+    /// Advance the stream by `n` draws in O(1): the state is a Weyl
+    /// sequence (`state += γ` per draw), so jumping is one multiply.
+    /// `jump(n)` followed by `split()` returns exactly the `(n+1)`-th
+    /// sequential `split()`.
+    pub fn jump(&mut self, n: u64) {
+        self.state = self.state.wrapping_add(SPLITMIX_GAMMA.wrapping_mul(n));
+    }
 }
 
 impl Rng64 for SplitMix64 {
     #[inline]
     fn next_u64(&mut self) -> u64 {
-        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        self.state = self.state.wrapping_add(SPLITMIX_GAMMA);
         let mut z = self.state;
         z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
         z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
@@ -583,6 +594,19 @@ mod tests {
         assert_eq!(sm.next_u64(), 0xE220A8397B1DCDAF);
         assert_eq!(sm.next_u64(), 0x6E789E6AA1B965F4);
         assert_eq!(sm.next_u64(), 0x06C45D188009454F);
+    }
+
+    #[test]
+    fn splitmix_jump_matches_sequential_draws() {
+        for &seed in &[0u64, 1, 42, 0xDEAD_BEEF, u64::MAX] {
+            let mut serial = SplitMix64::new(seed);
+            let draws: Vec<u64> = (0..16).map(|_| serial.split()).collect();
+            for (n, &want) in draws.iter().enumerate() {
+                let mut jumped = SplitMix64::new(seed);
+                jumped.jump(n as u64);
+                assert_eq!(jumped.split(), want, "seed {seed} jump {n}");
+            }
+        }
     }
 
     #[test]

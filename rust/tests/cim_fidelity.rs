@@ -6,7 +6,10 @@
 //!    mathematical MVM it approximates, deterministic and Bayesian paths
 //!    both.
 //! 2. The cim serving backend is bit-deterministic for a fixed
-//!    `(die_seed, workers)` pair: serial workloads replay identically.
+//!    `(die_seed, workers, mc_workers)` triple: serial workloads replay
+//!    identically — including through the double-buffered ε pipeline
+//!    (same-feature MC slots batched per replica, ε for sample k+1
+//!    produced while sample k's MVM converts).
 //! 3. Serving through `--backend cim` surfaces nonzero per-shard energy
 //!    (fJ/Sample) in `MetricsSnapshot`, and snapshot reads never reset
 //!    the counters.
@@ -36,6 +39,19 @@ fn small_cfg() -> Config {
 fn random_codes(n: usize, max_excl: u64, seed: u64) -> Vec<u8> {
     let mut rng = Pcg64::new(seed);
     (0..n).map(|_| rng.next_below(max_excl) as u8).collect()
+}
+
+/// Full-size (64×8) tiles with small serving parameters: the ε/MVM
+/// pipeline only engages on banks of at least `EPSILON_PIPELINE_MIN_CELLS`
+/// cells, so the double-buffered-path pins below must run the real tile
+/// geometry (bring-up calibration is slower but still sub-second under
+/// the test profile's opt-level).
+fn full_tile_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.model.mc_samples = 4;
+    cfg.server.max_batch = 4;
+    cfg.server.batch_deadline_ms = 1.0;
+    cfg
 }
 
 #[test]
@@ -113,6 +129,61 @@ fn cim_backend_replays_bitwise_for_fixed_die_seed_and_workers() {
         run(),
         run(),
         "cim backend must replay bitwise for a fixed (die_seed, workers)"
+    );
+}
+
+#[test]
+fn double_buffered_head_batch_matches_sequential_bitwise() {
+    // The engine's batched MC path (head_samples_hw → forward_hw_mc →
+    // the tiles' double-buffered mvm_batch pipeline; t = 6 ≥ the
+    // pipeline threshold, full-size 512-cell banks ≥ the cells floor)
+    // must be bit-identical to sequential single-sample head passes on
+    // a twin engine.
+    let cfg = full_tile_cfg();
+    let mut batched = CimEngine::from_config(&cfg);
+    let mut serial = CimEngine::from_config(&cfg);
+    let px = vec![0.45f32; cfg.model.image_side * cfg.model.image_side];
+    let feats = batched.model().forward_features(&px);
+    let t = 6;
+    let ys = batched.model_mut().head_samples_hw(&feats, t);
+    assert_eq!(ys.len(), t);
+    for (s, y) in ys.iter().enumerate() {
+        assert_eq!(
+            y,
+            &serial.model_mut().head_sample_hw(&feats),
+            "sample {s}/{t} diverged through the ε pipeline"
+        );
+    }
+}
+
+#[test]
+fn cim_backend_replays_bitwise_through_the_batched_mc_path() {
+    // mc_workers = 1 gives each fused head call one replica owning all
+    // its slots; the packer replicates one request's features across its
+    // MC-pass slots, so the replica collapses them into a single batched
+    // run (t = 4 ≥ the pipeline threshold, on full-size banks ≥ the
+    // cells floor) — the serving-side double-buffered engine path.
+    // Replay must stay bit-identical for the fixed
+    // (die_seed, workers, mc_workers) triple.
+    let run = || {
+        let mut cfg = full_tile_cfg();
+        cfg.server.backend = Backend::Cim;
+        cfg.server.workers = 2;
+        cfg.server.mc_workers = 1;
+        let coord = Coordinator::start_backend(cfg.clone()).unwrap();
+        let gen = SyntheticPerson::new(cfg.model.image_side, 91);
+        let mut out = Vec::new();
+        for i in 0..6 {
+            let resp = coord.infer_blocking(gen.sample(i).pixels, 0).unwrap();
+            out.push(resp.pred.probs);
+        }
+        coord.shutdown();
+        out
+    };
+    assert_eq!(
+        run(),
+        run(),
+        "double-buffered cim path must replay bitwise for a fixed triple"
     );
 }
 

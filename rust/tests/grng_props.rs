@@ -1,0 +1,191 @@
+//! Property tests for the SoA block-sampled GRNG bank (ISSUE 4):
+//!
+//! 1. `GrngBank::fill_epsilon` (contiguous block sampler over the SoA
+//!    lanes) is *bit-identical* to `GrngBank::fill_epsilon_legacy` (the
+//!    retained per-cell AoS walk) across random die geometries, die
+//!    seeds, mismatch configs, hot dies with `p_outlier > 0`, and after
+//!    `reseed_cells` — each cell's draw sequence is unchanged.
+//! 2. `GrngBank::fill_epsilon_planes` (the plane-major `[word][row]`
+//!    variant the CIM tile consumes directly) is the exact transpose of
+//!    the row-major conversion, cell for cell, bit for bit.
+//! 3. `shard_die_seed` (now an O(1) SplitMix64 jump) matches the pre-PR
+//!    O(shard) split loop bit-for-bit.
+//!
+//! The file also seeds the repo-root `BENCH_grng_fill.json` perf artifact
+//! at smoke scale (the calibrated writer is `benches/grng.rs`).
+
+use bnn_cim::config::ChipConfig;
+use bnn_cim::grng::{shard_die_seed, GrngBank};
+use bnn_cim::util::bench::{
+    is_calibrated_report, quick_ns_per_iter, repo_root_artifact, write_grng_fill_report,
+    GrngFillCase,
+};
+use bnn_cim::util::propcheck::{property, Gen};
+use bnn_cim::util::rng::SplitMix64;
+
+/// Random small-bank chip (cheap per property case, physics unchanged).
+/// Half the cases run a hot die (60 °C), where the outlier probability is
+/// no longer negligible, so the sparse outlier pass genuinely fires.
+fn random_chip(g: &mut Gen) -> ChipConfig {
+    let mut chip = ChipConfig::default();
+    chip.tile.rows = g.usize_in(2, 24);
+    chip.tile.words_per_row = g.usize_in(1, 6);
+    chip.die_seed = g.u64();
+    if g.bool() {
+        chip.grng.temp_c = 60.0;
+    }
+    if g.bool() {
+        chip.grng.mismatch_rel_sigma = g.f64_in(0.0, 0.05);
+    }
+    chip
+}
+
+#[test]
+fn block_fill_is_bit_identical_to_legacy() {
+    property("fill_epsilon == fill_epsilon_legacy (bitwise)", 24, |g| {
+        let chip = random_chip(g);
+        let mut block = GrngBank::for_chip(&chip);
+        let mut legacy = GrngBank::for_chip(&chip);
+        let n = block.len();
+        let mut a = vec![0.0; n];
+        let mut b = vec![0.0; n];
+        for round in 0..3 {
+            block.fill_epsilon(&mut a);
+            legacy.fill_epsilon_legacy(&mut b);
+            assert_eq!(a, b, "round {round} (chip {:?})", chip.grng.temp_c);
+        }
+        // Reseeded streams stay pinned too.
+        let seed = g.u64();
+        block.reseed_cells(seed);
+        legacy.reseed_cells(seed);
+        for round in 0..2 {
+            block.fill_epsilon(&mut a);
+            legacy.fill_epsilon_legacy(&mut b);
+            assert_eq!(a, b, "post-reseed round {round}");
+        }
+        assert_eq!(block.samples_drawn(), legacy.samples_drawn());
+    });
+}
+
+#[test]
+fn plane_major_fill_is_the_exact_transpose() {
+    property("fill_epsilon_planes == transpose(fill_epsilon)", 20, |g| {
+        let chip = random_chip(g);
+        let mut row_major = GrngBank::for_chip(&chip);
+        let mut planes = GrngBank::for_chip(&chip);
+        let rows = chip.tile.rows;
+        let words = chip.tile.words_per_row;
+        let n = rows * words;
+        let mut a = vec![0.0; n];
+        let mut b = vec![0.0; n];
+        for round in 0..3 {
+            row_major.fill_epsilon(&mut a);
+            planes.fill_epsilon_planes(&mut b);
+            for r in 0..rows {
+                for w in 0..words {
+                    assert_eq!(
+                        a[r * words + w].to_bits(),
+                        b[w * rows + r].to_bits(),
+                        "cell ({r},{w}) round {round}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn hot_die_block_path_produces_outlier_tails() {
+    // At 60 °C the outlier probability is ≈1.5 %, so a few hundred
+    // whole-bank conversions must show heavy tails — proof the sparse
+    // second pass of the block sampler actually executes in this suite.
+    let mut chip = ChipConfig::default();
+    chip.grng.temp_c = 60.0;
+    let mut bank = GrngBank::for_chip(&chip);
+    let n = bank.len();
+    let mut buf = vec![0.0; n];
+    let mut extremes = 0usize;
+    for _ in 0..20 {
+        bank.fill_epsilon(&mut buf);
+        extremes += buf.iter().filter(|v| v.abs() > 5.0).count();
+    }
+    assert!(extremes > 0, "60 °C bank must produce outlier tails");
+}
+
+#[test]
+fn shard_die_seed_jump_matches_the_split_loop() {
+    // Reference: the pre-PR O(shard) implementation, looping the
+    // splitter `shard` times.
+    fn reference(die_seed: u64, shard: usize) -> u64 {
+        if shard == 0 {
+            return die_seed;
+        }
+        let mut splitter = SplitMix64::new(die_seed ^ 0xD1E5_EED5_0F5A_A5F1);
+        let mut seed = die_seed;
+        for _ in 0..shard {
+            seed = splitter.split();
+        }
+        seed
+    }
+    for &seed in &[0u64, 1, 42, 0xC0FFEE, u64::MAX] {
+        for shard in 0..64 {
+            assert_eq!(
+                shard_die_seed(seed, shard),
+                reference(seed, shard),
+                "seed {seed} shard {shard}"
+            );
+        }
+    }
+}
+
+/// Smoke-scale seed of the repo-root `BENCH_grng_fill.json` perf
+/// artifact: whole-bank fill throughput of the SoA block sampler
+/// (row-major and plane-major) vs the retained AoS walk, on the default
+/// 64×8 chip bank. The calibrated (release, longer-running) writer is
+/// `benches/grng.rs`; a calibrated report is never overwritten by this
+/// smoke seed.
+#[test]
+fn bench_grng_fill_smoke_seed() {
+    let chip = ChipConfig::default();
+    let cells = chip.tile.rows * chip.tile.words_per_row;
+    let mut buf = vec![0.0f64; cells];
+    let target = std::time::Duration::from_millis(100);
+
+    let mut bank_block = GrngBank::for_chip(&chip);
+    let block = quick_ns_per_iter(|| bank_block.fill_epsilon(&mut buf), 16, target);
+    let mut bank_planes = GrngBank::for_chip(&chip);
+    let planes = quick_ns_per_iter(|| bank_planes.fill_epsilon_planes(&mut buf), 16, target);
+    let mut bank_legacy = GrngBank::for_chip(&chip);
+    let legacy = quick_ns_per_iter(|| bank_legacy.fill_epsilon_legacy(&mut buf), 16, target);
+
+    let gsa_per_s = cells as f64 / block.max(1e-9);
+    let speedup_block_vs_legacy = legacy / block.max(1e-9);
+    let speedup_planes_vs_legacy = legacy / planes.max(1e-9);
+    println!(
+        "grng fill smoke: block {block:.0} ns/fill, planes {planes:.0} ns/fill, \
+         legacy {legacy:.0} ns/fill, speedup {speedup_block_vs_legacy:.2}x, \
+         {gsa_per_s:.4} GSa/s"
+    );
+
+    let root = repo_root_artifact("BENCH_grng_fill.json");
+    if is_calibrated_report(&root) {
+        println!("  keeping calibrated {}", root.display());
+        return;
+    }
+    write_grng_fill_report(
+        &root,
+        "tests/grng_props.rs bench_grng_fill_smoke_seed (smoke-scale, test profile)",
+        chip.tile.rows,
+        chip.tile.words_per_row,
+        &[
+            GrngFillCase::new("block_soa", block, cells),
+            GrngFillCase::new("block_soa_planes", planes, cells),
+            GrngFillCase::new("legacy_aos", legacy, cells),
+        ],
+        &[
+            ("gsa_per_s", gsa_per_s),
+            ("speedup_block_vs_legacy", speedup_block_vs_legacy),
+            ("speedup_planes_vs_legacy", speedup_planes_vs_legacy),
+        ],
+    );
+}

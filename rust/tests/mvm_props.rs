@@ -149,6 +149,42 @@ fn mvm_batch_is_bit_identical_to_sequential() {
     });
 }
 
+#[test]
+fn pipelined_mvm_batch_is_bit_identical_to_sequential() {
+    // Full-size geometries (≥ 256 cells) with t ≥ 4 engage mvm_batch's
+    // double-buffered ε pipeline; this randomizes program/input/options
+    // over the *concurrent* arm (the small-tile batch property above
+    // stays on the serial arm by design, below the cells gate).
+    property("pipelined mvm_batch == sequential", 6, |g| {
+        let mut chip = ChipConfig::default();
+        chip.tile.rows = g.usize_in(32, 64);
+        chip.tile.words_per_row = g.usize_in(8, 10);
+        chip.die_seed = g.u64();
+        let mut batched = CimTile::new(&chip);
+        let mut serial = CimTile::new(&chip);
+        let seed = g.u64();
+        let sigma_scale = g.f64_in(0.0, 15.0);
+        random_program(&mut batched, seed, sigma_scale);
+        random_program(&mut serial, seed, sigma_scale);
+        let opts = MvmOptions {
+            bayesian: true,
+            refresh_epsilon: true,
+            ideal_analog: g.bool(),
+        };
+        let t = g.usize_in(4, 8);
+        let x = random_input(batched.rows(), g.u64());
+        let ys = batched.mvm_batch(&x, t, opts);
+        assert_eq!(ys.len(), t);
+        for (s, y) in ys.iter().enumerate() {
+            let r = serial.mvm(&x, opts);
+            assert_same(y, &r, &format!("pipelined sample {s}/{t}"));
+        }
+        assert_eq!(batched.last_epsilon(), serial.last_epsilon());
+        assert_eq!(batched.ledger.grng_samples, serial.ledger.grng_samples);
+        assert_eq!(batched.ledger.mvm_count, serial.ledger.mvm_count);
+    });
+}
+
 /// Smoke-scale seed of the repo-root `BENCH_cim_mvm.json` perf artifact:
 /// single-thread MVM throughput of the pre-PR AoS baseline vs the SoA
 /// fast path (fresh-ε and held-ε) and the batched fast path, on the
