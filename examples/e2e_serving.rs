@@ -10,7 +10,8 @@
 //! Pipeline proven here:
 //!   python (build time): synthetic-person training → ELBO Bayesian head
 //!     → quantization → Pallas-kernel inference graph → HLO text
-//!   rust (request path): coordinator batches requests → the backend
+//!   rust (request path, client API v1: builder → submit_many → Tickets):
+//!     coordinator batches requests → the backend
 //!     executes the feature extractor once per batch → T Monte-Carlo head
 //!     passes. On `pjrt`/`sim` each pass is fed fresh ε from the
 //!     *simulated in-word GRNG bank* (die mismatch + calibration
@@ -21,8 +22,7 @@
 //! Results are recorded in EXPERIMENTS.md §End-to-end.
 
 use bnn_cim::bayes::{accuracy, ape_by_group, ece_percent, EvalPoint};
-use bnn_cim::config::{Backend, Config};
-use bnn_cim::coordinator::Coordinator;
+use bnn_cim::client::{Backend, Config, Coordinator, Infer};
 use bnn_cim::data::{OodKind, SyntheticPerson};
 use bnn_cim::grng::GrngBank;
 use bnn_cim::util::cli::parse_args;
@@ -59,7 +59,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             "artifacts missing — run `make artifacts`, or pass --backend sim|cim".into(),
         );
     }
-    let coord = Coordinator::start_backend(cfg.clone())?;
+    let coord = Coordinator::builder(cfg.clone()).start()?;
     let gen = SyntheticPerson::new(cfg.model.image_side, 2024);
 
     println!(
@@ -69,9 +69,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
     let t0 = Instant::now();
 
-    // Offer the whole workload asynchronously (coordinator batches).
+    // Offer the whole workload asynchronously: `submit_many` enqueues
+    // back to back, so the coordinator fuses batches exactly as a burst
+    // of individual `submit` calls would.
     let mut expected = Vec::new();
-    let mut receivers = Vec::new();
+    let mut workload = Vec::new();
     let kinds = [
         OodKind::Fragment,
         OodKind::Texture,
@@ -81,18 +83,19 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     for i in 0..n_requests as u64 {
         let s = gen.sample(i);
         expected.push((s.label, false));
-        receivers.push(coord.submit(s.pixels, 0).map_err(|e| format!("{e}"))?);
+        workload.push(Infer::new(s.pixels));
         if i % 4 == 0 {
             let o = gen.ood_sample(i, kinds[(i / 4 % 4) as usize]);
             expected.push((0, true));
-            receivers.push(coord.submit(o.pixels, 0).map_err(|e| format!("{e}"))?);
+            workload.push(Infer::new(o.pixels));
         }
     }
+    let tickets = coord.submit_many(workload)?;
     let mut points = Vec::new();
     let mut deferred = 0usize;
-    for (rx, &(label, ood)) in receivers.into_iter().zip(expected.iter()) {
-        let resp = rx.recv()?;
-        if resp.deferred {
+    for (ticket, &(label, ood)) in tickets.into_iter().zip(expected.iter()) {
+        let resp = ticket.wait()?;
+        if resp.deferred() {
             deferred += 1;
         }
         points.push(EvalPoint {

@@ -4,12 +4,15 @@
 //!
 //! 1. Characterize one in-word GRNG cell (the paper's entropy source).
 //! 2. Program a CIM tile, calibrate it, run a Bayesian MVM.
-//! 3. If artifacts are built: one classification through the full
-//!    AOT-compiled (JAX+Pallas → PJRT) serving path.
+//! 3. One classification through the serving surface (client API v1):
+//!    `Coordinator::builder(cfg)…start()` boots the pool,
+//!    `coord.infer(Infer::new(px))` returns an `InferResponse` whose
+//!    `UncertaintyReport` says *why* a prediction would be deferred.
+//!    Uses the PJRT artifacts when built (`make artifacts`), else the
+//!    behavioral chip model (`Backend::Cim`) — no toolchain needed.
 
 use bnn_cim::cim::{calibrate, CimTile, MvmOptions};
-use bnn_cim::config::Config;
-use bnn_cim::coordinator::Coordinator;
+use bnn_cim::client::{Backend, Config, Coordinator, Infer};
 use bnn_cim::data::SyntheticPerson;
 use bnn_cim::experiments::run_characterization;
 use std::path::Path;
@@ -53,24 +56,30 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
     println!("tile energy so far:\n{}", tile.ledger.ascii_breakdown());
 
-    // --- 3. Full serving path (needs `make artifacts`) ---
-    if Path::new("artifacts/manifest.json").exists() {
-        let coord = Coordinator::start(cfg.clone())?;
-        let sample = SyntheticPerson::new(cfg.model.image_side, 7).sample(1);
-        let resp = coord
-            .infer_blocking(sample.pixels, 16)
-            .map_err(|e| format!("{e}"))?;
-        println!(
-            "served inference: true={} pred={} entropy={:.3} deferred={} ({:.1} ms)",
-            sample.label,
-            resp.pred.class,
-            resp.pred.entropy,
-            resp.deferred,
-            resp.latency.as_secs_f64() * 1e3
-        );
-        coord.shutdown();
+    // --- 3. Full serving path (client API v1) ---
+    let backend = if Path::new("artifacts/manifest.json").exists() {
+        Backend::Pjrt
     } else {
-        println!("(skip serving demo: run `make artifacts` first)");
-    }
+        println!("(artifacts not built: serving on the behavioral chip model)");
+        Backend::Cim
+    };
+    let coord = Coordinator::builder(cfg.clone()).backend(backend).start()?;
+    let sample = SyntheticPerson::new(cfg.model.image_side, 7).sample(1);
+    let resp = coord.infer(Infer::new(sample.pixels).mc_samples(16))?;
+    let u = &resp.uncertainty;
+    println!(
+        "served inference: true={} pred={} ({:.1} ms)\n\
+         uncertainty: entropy {:.3} = aleatoric {:.3} + epistemic {:.3} \
+         | threshold {:.2} → deferred={}",
+        sample.label,
+        resp.pred.class,
+        resp.latency.as_secs_f64() * 1e3,
+        u.entropy,
+        u.aleatoric,
+        u.epistemic,
+        u.threshold,
+        resp.deferred()
+    );
+    coord.shutdown();
     Ok(())
 }

@@ -8,11 +8,8 @@
 //!   cargo run --release --example rng_ablation [n_requests]
 
 use bnn_cim::bayes::{accuracy, ape_by_group, EvalPoint};
-use bnn_cim::config::Config;
-use bnn_cim::coordinator::server::SourceFactory;
-use bnn_cim::coordinator::{
-    BaselineSource, Coordinator, EpsilonSource, GrngBankSource, PhiloxSource,
-};
+use bnn_cim::client::{Backend, Config, Coordinator, Infer, SourceFactory};
+use bnn_cim::coordinator::{BaselineSource, EpsilonSource, GrngBankSource, PhiloxSource};
 use bnn_cim::data::SyntheticPerson;
 use bnn_cim::grng::baselines::{
     box_muller::FixedPointBoxMuller, clt_lfsr::CltLfsr, hadamard::TiHadamard, wallace::Wallace,
@@ -57,21 +54,24 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "ε source", "acc", "APE-inc", "APE-ood", "eps-draws", "model energy"
     );
     for (name, factory) in sources {
-        let coord = Coordinator::start_with_source(cfg.clone(), factory)?;
+        let coord = Coordinator::builder(cfg.clone())
+            .backend(Backend::Pjrt)
+            .source_factory(factory)
+            .start()?;
         let gen = SyntheticPerson::new(cfg.model.image_side, 9);
         let mut points = Vec::new();
-        let mut rx = Vec::new();
+        let mut tickets = Vec::new();
         for i in 0..n as u64 {
             let s = gen.sample(i);
-            rx.push((s.label, false, coord.submit(s.pixels, 0).map_err(|e| format!("{e}"))?));
+            tickets.push((s.label, false, coord.submit(Infer::new(s.pixels))?));
             if i % 4 == 0 {
                 let o = gen.ood_sample(i, bnn_cim::data::OodKind::Fragment);
-                rx.push((0, true, coord.submit(o.pixels, 0).map_err(|e| format!("{e}"))?));
+                tickets.push((0, true, coord.submit(Infer::new(o.pixels))?));
             }
         }
-        for (label, ood, r) in rx {
+        for (label, ood, ticket) in tickets {
             points.push(EvalPoint {
-                pred: r.recv()?.pred,
+                pred: ticket.wait()?.pred,
                 label,
                 ood,
             });

@@ -82,19 +82,23 @@ fn main() {
                     .unwrap(),
             );
         });
-        // End-to-end serving throughput via the coordinator.
+        // End-to-end serving throughput via the client API v1 surface.
+        use bnn_cim::client::{Backend, Coordinator, Infer};
         let mut cfg = Config::default();
         cfg.model.mc_samples = 8;
-        let coord = bnn_cim::coordinator::Coordinator::start(cfg).unwrap();
+        let coord = Coordinator::builder(cfg)
+            .backend(Backend::Pjrt)
+            .start()
+            .unwrap();
         let opts = suite.opts();
         let _ = opts;
         let t0 = std::time::Instant::now();
         let n_req = 48;
-        let rx: Vec<_> = (0..n_req)
-            .map(|i| coord.submit(gen.sample(i).pixels, 0).unwrap())
-            .collect();
-        for r in rx {
-            let _ = r.recv();
+        let tickets = coord
+            .submit_many((0..n_req).map(|i| Infer::new(gen.sample(i).pixels)))
+            .unwrap();
+        for ticket in tickets {
+            let _ = ticket.wait();
         }
         let dt = t0.elapsed();
         suite.note(

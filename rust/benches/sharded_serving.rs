@@ -10,8 +10,10 @@
 //!   arrays with in-word ε and live energy ledgers. Measures the cost of
 //!   full-fidelity hardware serving (and reports fJ/Sample + fJ/Op).
 //!
-//! The offered load is pre-queued so throughput measures the pool, not
-//! the client. Besides the human-readable table, the sweep is written
+//! The offered load is pre-queued through the client API v1 surface
+//! (`Coordinator::builder` + `submit_many`, via
+//! `util::bench::measure_serving_sweep`) so throughput measures the
+//! pool, not the client. Besides the human-readable table, the sweep is written
 //! machine-readably to `BENCH_serving.json` at the repo root, seeding the
 //! perf trajectory across PRs.
 

@@ -11,11 +11,11 @@ use crate::util::stats::entropy_nats;
 pub struct McPrediction {
     /// Mean predictive distribution (softmax averaged over samples).
     pub probs: Vec<f64>,
-    /// Predictive entropy H[E[p]] in nats.
+    /// Predictive entropy H[E\[p\]] in nats.
     pub entropy: f64,
-    /// Expected entropy E[H[p]] (aleatoric part) in nats.
+    /// Expected entropy E[H\[p\]] (aleatoric part) in nats.
     pub expected_entropy: f64,
-    /// Mutual information (epistemic part): H[E[p]] − E[H[p]].
+    /// Mutual information (epistemic part): H[E\[p\]] − E[H\[p\]].
     pub mutual_information: f64,
     /// argmax class.
     pub class: usize,
@@ -23,6 +23,46 @@ pub struct McPrediction {
     pub confidence: f64,
     /// Number of MC samples aggregated.
     pub t: usize,
+}
+
+/// Client-facing uncertainty decomposition plus the deferral verdict for
+/// one prediction — the paper's Fig. 1 defer-to-human loop made
+/// first-class on [`crate::coordinator::InferResponse`].
+///
+/// Identity: `epistemic == (entropy − aleatoric).max(0)` — predictive
+/// entropy splits into expected entropy (aleatoric: irreducible data
+/// noise) plus mutual information (epistemic: model disagreement across
+/// MC samples), clamped at zero against MC estimation noise.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UncertaintyReport {
+    /// Predictive entropy H\[E\[p\]\] in nats.
+    pub entropy: f64,
+    /// Aleatoric part: expected entropy E\[H\[p\]\] in nats.
+    pub aleatoric: f64,
+    /// Epistemic part: mutual information H\[E\[p\]\] − E\[H\[p\]\] (≥ 0).
+    pub epistemic: f64,
+    /// The threshold \[nats\] this prediction was judged against —
+    /// `model.defer_threshold`, or the per-request override.
+    pub threshold: f64,
+    /// The deferral policy's verdict: `entropy > threshold` (strict, so
+    /// a threshold of exactly the observed entropy keeps the sample).
+    pub deferred: bool,
+}
+
+impl UncertaintyReport {
+    /// Judge `pred` against `threshold`. This is *the* deferral policy:
+    /// the serving loop calls it per request, so clients see not just
+    /// whether a prediction was deferred but which uncertainty component
+    /// drove it and what bar it was measured against.
+    pub fn from_prediction(pred: &McPrediction, threshold: f64) -> Self {
+        Self {
+            entropy: pred.entropy,
+            aleatoric: pred.expected_entropy,
+            epistemic: pred.mutual_information,
+            threshold,
+            deferred: pred.entropy > threshold,
+        }
+    }
 }
 
 /// Aggregate per-sample softmax outputs (T × classes).
@@ -238,6 +278,37 @@ mod tests {
         assert!(unsure.mutual_information < 1e-9);
         assert!((disagree.entropy - unsure.entropy).abs() < 1e-9); // same mean
         assert_eq!(disagree.t, 2);
+    }
+
+    #[test]
+    fn uncertainty_report_decomposition_identity() {
+        let pred = aggregate_mc(&[vec![0.9, 0.1], vec![0.6, 0.4]]);
+        let rep = UncertaintyReport::from_prediction(&pred, 0.2);
+        assert_eq!(rep.entropy, pred.entropy);
+        assert_eq!(rep.aleatoric, pred.expected_entropy);
+        assert_eq!(rep.epistemic, (rep.entropy - rep.aleatoric).max(0.0));
+        assert_eq!(rep.threshold, 0.2);
+        // Agreeing-but-unsure samples: MI clamps to exactly 0, never
+        // negative under MC estimation noise.
+        let unsure = aggregate_mc(&[vec![0.5, 0.5], vec![0.5, 0.5]]);
+        let rep = UncertaintyReport::from_prediction(&unsure, 0.1);
+        assert_eq!(rep.epistemic, 0.0);
+        assert!(rep.deferred, "ln 2 entropy must exceed a 0.1 bar");
+    }
+
+    #[test]
+    fn uncertainty_report_threshold_boundary_is_strict() {
+        let pred = aggregate_mc(&[vec![0.8, 0.2], vec![0.7, 0.3]]);
+        assert!(pred.entropy > 0.0);
+        // Exactly at the bar: kept (policy is entropy > threshold).
+        let at = UncertaintyReport::from_prediction(&pred, pred.entropy);
+        assert!(!at.deferred);
+        // Strictly below: deferred.
+        let below = UncertaintyReport::from_prediction(&pred, pred.entropy * 0.999_999);
+        assert!(below.deferred);
+        // Far above: kept.
+        let above = UncertaintyReport::from_prediction(&pred, 10.0);
+        assert!(!above.deferred);
     }
 
     #[test]

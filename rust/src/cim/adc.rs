@@ -13,7 +13,7 @@ use crate::util::rng::{Pcg64, Rng64, Xoshiro256};
 #[derive(Clone, Debug)]
 pub struct SarAdc {
     cfg: AdcConfig,
-    /// Static input-referred offset [LSB].
+    /// Static input-referred offset \[LSB\].
     pub offset_lsb: f64,
     noise_rng: Xoshiro256,
 }

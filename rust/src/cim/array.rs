@@ -68,7 +68,7 @@ impl TileArray {
         &mut self.tiles
     }
 
-    /// Program from fixed-point μ/σ matrices (row-major [in_dim][out_dim]).
+    /// Program from fixed-point μ/σ matrices (row-major \[in_dim\]\[out_dim\]).
     /// Out-of-matrix tile cells are zero-padded (σ=0, μ≈0).
     pub fn program_matrix(&mut self, mu_fixed: &[f64], sigma_fixed: &[f64]) {
         assert_eq!(mu_fixed.len(), self.in_dim * self.out_dim);

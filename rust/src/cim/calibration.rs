@@ -28,13 +28,13 @@ pub struct CalibrationReport {
     pub adc_avg_n: usize,
     /// Conversions used per GRNG cell offset estimate.
     pub grng_avg_n: usize,
-    /// RMS of the estimated ADC offsets [LSB].
+    /// RMS of the estimated ADC offsets \[LSB\].
     pub adc_offset_rms_lsb: f64,
     /// RMS of the estimated ε₀ offsets.
     pub grng_offset_rms: f64,
     /// Residual RMS error of the ε₀ estimates vs the die's ground truth.
     pub grng_residual_rms: f64,
-    /// Total energy consumed by calibration [J] (paper: 3.6 nJ).
+    /// Total energy consumed by calibration \[J\] (paper: 3.6 nJ).
     pub energy_j: f64,
 }
 

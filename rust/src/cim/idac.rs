@@ -40,12 +40,12 @@ impl Idac {
         (x * (1.0 + self.gain_err) + bow).max(0.0)
     }
 
-    /// Cell current for a given input code [A] (per unit cell conductance).
+    /// Cell current for a given input code \[A\] (per unit cell conductance).
     pub fn current(&self, code: u8) -> f64 {
         self.drive(code) * self.cfg.lsb_current_a * (self.cfg.levels() - 1) as f64
     }
 
-    /// Per-conversion energy [J].
+    /// Per-conversion energy \[J\].
     pub fn energy_j(&self) -> f64 {
         self.cfg.energy_j
     }

@@ -102,7 +102,7 @@ struct TilePlanes {
 struct MvmScratch {
     /// IDAC output per row.
     drives: Vec<f64>,
-    /// drives[r]·ε[r][w] for the word currently being converted, shared
+    /// drives\[r\]·ε\[r\]\[w\] for the word currently being converted, shared
     /// across that word's σ bit-planes.
     row_terms: Vec<f64>,
 }
@@ -286,7 +286,7 @@ pub struct CimTile {
     idacs: Vec<Idac>,
     /// Column ADCs: [words × (mu_bits + sigma_bits)].
     adcs: Vec<SarAdc>,
-    /// Digital offset-correction registers per ADC [LSB], set by
+    /// Digital offset-correction registers per ADC \[LSB\], set by
     /// calibration (zeros when uncalibrated).
     pub adc_offset_cal: Vec<f64>,
     /// μ-side correction for GRNG static offsets ε₀ (Eq. 10): value to
@@ -371,7 +371,7 @@ impl CimTile {
         );
     }
 
-    /// Program a full weight matrix (row-major [rows][words]).
+    /// Program a full weight matrix (row-major \[rows\]\[words\]).
     pub fn program_matrix(&mut self, mu_fixed: &[f64], sigma_fixed: &[f64]) {
         assert_eq!(mu_fixed.len(), self.rows * self.words);
         assert_eq!(sigma_fixed.len(), self.rows * self.words);
@@ -961,7 +961,7 @@ impl CimTile {
         }
     }
 
-    /// Per-MVM energy at steady state [J] (one fresh-ε Bayesian MVM).
+    /// Per-MVM energy at steady state \[J\] (one fresh-ε Bayesian MVM).
     pub fn energy_per_mvm(&mut self) -> f64 {
         let x = vec![((self.chip.idac.levels() - 1) / 2) as u8; self.rows];
         self.ledger.reset();

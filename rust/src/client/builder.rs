@@ -1,0 +1,163 @@
+//! [`CoordinatorBuilder`] — the single way to boot a serving pool.
+//!
+//! Replaces the six historical `Coordinator::start*` constructors with
+//! one fluent surface: backend, pool shape, and ε ownership are
+//! orthogonal knobs instead of a constructor per combination. The
+//! resolution rules are documented on [`CoordinatorBuilder::start`].
+
+use crate::client::ServeError;
+use crate::config::{Backend, Config};
+use crate::coordinator::epsilon::EpsilonSupply;
+use crate::coordinator::server::{Coordinator, EngineFactory, SourceFactory};
+use crate::runtime::{CimEngine, EpsilonMode, InferenceEngine, SimEngine};
+use std::sync::Arc;
+
+/// Fluent configuration of a [`Coordinator`] pool. Build with
+/// `Coordinator::builder(cfg)`, then chain overrides and call `start`.
+pub struct CoordinatorBuilder {
+    cfg: Config,
+    engine_factory: Option<EngineFactory>,
+    source_factory: Option<SourceFactory>,
+    epsilon: Option<EpsilonMode>,
+}
+
+impl CoordinatorBuilder {
+    pub(crate) fn new(cfg: Config) -> Self {
+        Self {
+            cfg,
+            engine_factory: None,
+            source_factory: None,
+            epsilon: None,
+        }
+    }
+
+    /// Engine backend booted per shard (overrides `cfg.server.backend`).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.cfg.server.backend = backend;
+        self
+    }
+
+    /// Shard workers in the pool (overrides `cfg.server.workers`).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.server.workers = n;
+        self
+    }
+
+    /// MC-parallel replicas per cim engine (overrides
+    /// `cfg.server.mc_workers`). Part of the determinism triple
+    /// `(die_seed, workers, mc_workers)`.
+    pub fn mc_workers(mut self, n: usize) -> Self {
+        self.cfg.server.mc_workers = n;
+        self
+    }
+
+    /// Force the ε-ownership mode instead of the backend default:
+    /// `External` supplies the default per-shard GRNG-bank sources (what
+    /// `sim`/`pjrt` already default to), `InWord` supplies nothing (the
+    /// engine's memory arrays must generate ε — the startup handshake
+    /// rejects an external-ε engine under an in-word supply). ε
+    /// ownership is ultimately the *engine's* property: an external
+    /// supply can never be forced onto an in-word engine, so pairing
+    /// `External` (or a source factory) with the stock `cim` backend is
+    /// rejected at [`Self::start`] instead of being silently ignored.
+    pub fn epsilon(mut self, mode: EpsilonMode) -> Self {
+        self.epsilon = Some(mode);
+        self
+    }
+
+    /// Custom per-shard ε sources (ablations: Philox kernel mirror,
+    /// Wallace, Box–Muller…). Implies [`EpsilonMode::External`].
+    pub fn source_factory(mut self, f: SourceFactory) -> Self {
+        self.source_factory = Some(f);
+        self
+    }
+
+    /// Custom per-shard engines (tests, out-of-tree backends). The
+    /// configured `backend` then only selects the default ε supply.
+    pub fn engine_factory(mut self, f: EngineFactory) -> Self {
+        self.engine_factory = Some(f);
+        self
+    }
+
+    /// Boot the pool.
+    ///
+    /// Resolution: the engine comes from [`Self::engine_factory`] if
+    /// set, else from `cfg.server.backend` (`sim` → [`SimEngine`],
+    /// `cim` → [`CimEngine`] per shard die, `pjrt` → the AOT-artifact
+    /// engine, which requires the `pjrt` feature). The ε supply comes
+    /// from [`Self::source_factory`] if set, else from
+    /// [`Self::epsilon`], else from the backend default (in-word for
+    /// `cim`, per-shard GRNG banks otherwise).
+    pub fn start(self) -> Result<Coordinator, ServeError> {
+        let CoordinatorBuilder {
+            cfg,
+            engine_factory,
+            source_factory,
+            epsilon,
+        } = self;
+        // The stock cim engine generates ε inside its tile arrays; the
+        // worker handshake would silently ignore an external supply, so
+        // the caller would believe they measured their source (e.g. a
+        // Philox ablation) while serving in-word ε. Reject up front. A
+        // custom engine factory may still pair the cim *backend name*
+        // with an external-ε engine.
+        if cfg.server.backend == Backend::Cim
+            && engine_factory.is_none()
+            && (source_factory.is_some() || epsilon == Some(EpsilonMode::External))
+        {
+            return Err(ServeError::Config(
+                "external ε supply conflicts with the in-word cim backend: its tile \
+                 arrays generate ε in-word and would never consume the source — use \
+                 backend sim/pjrt for ε ablations, or a custom engine_factory"
+                    .into(),
+            ));
+        }
+        let make_engine = match engine_factory {
+            Some(f) => f,
+            None => default_engine_factory(&cfg)?,
+        };
+        let supply = match (source_factory, epsilon) {
+            (Some(_), Some(EpsilonMode::InWord)) => {
+                return Err(ServeError::Config(
+                    "source_factory conflicts with epsilon(InWord): an in-word \
+                     engine draws its own ε and would never consume the source"
+                        .into(),
+                ))
+            }
+            (Some(f), _) => EpsilonSupply::External(f),
+            (None, Some(EpsilonMode::External)) => EpsilonSupply::grng_banks(&cfg.chip),
+            (None, Some(EpsilonMode::InWord)) => EpsilonSupply::InWord,
+            (None, None) => match cfg.server.backend {
+                Backend::Cim => EpsilonSupply::InWord,
+                Backend::Sim | Backend::Pjrt => EpsilonSupply::grng_banks(&cfg.chip),
+            },
+        };
+        Coordinator::boot(cfg, make_engine, supply).map_err(ServeError::from)
+    }
+}
+
+/// The stock engine factory for `cfg.server.backend`.
+fn default_engine_factory(cfg: &Config) -> Result<EngineFactory, ServeError> {
+    match cfg.server.backend {
+        Backend::Sim => {
+            let cfg = cfg.clone();
+            Ok(Arc::new(move |_shard| {
+                Ok(Box::new(SimEngine::from_config(&cfg)) as Box<dyn InferenceEngine>)
+            }))
+        }
+        Backend::Cim => {
+            let cfg = cfg.clone();
+            Ok(Arc::new(move |shard| {
+                Ok(Box::new(CimEngine::for_shard(&cfg, shard)) as Box<dyn InferenceEngine>)
+            }))
+        }
+        #[cfg(feature = "pjrt")]
+        Backend::Pjrt => Ok(crate::coordinator::server::pjrt_engine_factory(cfg)),
+        #[cfg(not(feature = "pjrt"))]
+        Backend::Pjrt => Err(ServeError::Startup(
+            "built without the `pjrt` feature — use .backend(Backend::Sim) \
+             (pure-Rust engine) or .backend(Backend::Cim) (behavioral chip model)"
+                .into(),
+        )),
+    }
+}

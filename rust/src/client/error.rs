@@ -1,0 +1,152 @@
+//! [`ServeError`] — the one error type the serving surface speaks.
+//!
+//! Before API v1 a client saw three failure languages at once:
+//! [`RejectReason`] values from `submit`, `crate::error::Error` (or
+//! stringly `Box<dyn Error>`) from the constructors, and silent channel
+//! drops from workers that died mid-batch. `ServeError` absorbs all
+//! three behind one `std::error::Error` implementation, so `?` works
+//! end to end and callers can still match on the precise failure mode.
+
+use crate::coordinator::RejectReason;
+
+/// Unified client-facing serving error: admission, wait, and startup
+/// failures of the coordinator pool.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// Request queue at capacity (backpressure) — retry later.
+    QueueFull,
+    /// Pixel payload does not match `model.image_side²`.
+    WrongShape { expected: usize, got: usize },
+    /// Per-request `mc_samples` above `server.max_mc_samples` — rejected
+    /// up front so one greedy request cannot inflate the MC pass count
+    /// of the whole fused batch.
+    McSamplesTooLarge { max: usize, got: usize },
+    /// Per-request `defer_threshold` outside the valid `[0, 10]` nats
+    /// range (or non-finite) — same bound `Config::validate` enforces
+    /// for the server-wide default.
+    InvalidDeferThreshold { got: f64 },
+    /// The pool is shutting down; no new work is admitted.
+    ShuttingDown,
+    /// No response within the deadline. The request may still complete
+    /// server-side; its reply is then counted as `requests_orphaned`.
+    Timeout,
+    /// The serving side dropped the reply channel (worker death or
+    /// engine failure mid-batch) — the response will never arrive.
+    Disconnected,
+    /// Invalid configuration or an inconsistent builder combination.
+    Config(String),
+    /// The pool failed to boot: engine load, worker spawn, or a backend
+    /// compiled out (e.g. `pjrt` without the feature).
+    Startup(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::QueueFull => write!(f, "queue full (backpressure)"),
+            ServeError::WrongShape { expected, got } => {
+                write!(f, "wrong input shape: expected {expected} pixels, got {got}")
+            }
+            ServeError::McSamplesTooLarge { max, got } => {
+                write!(f, "mc_samples {got} exceeds server.max_mc_samples {max}")
+            }
+            ServeError::InvalidDeferThreshold { got } => {
+                write!(f, "defer_threshold {got} outside [0, 10] nats")
+            }
+            ServeError::ShuttingDown => write!(f, "server shutting down"),
+            ServeError::Timeout => write!(f, "request timed out"),
+            ServeError::Disconnected => {
+                write!(f, "serving side dropped the reply channel")
+            }
+            ServeError::Config(s) => write!(f, "configuration error: {s}"),
+            ServeError::Startup(s) => write!(f, "startup error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<RejectReason> for ServeError {
+    fn from(r: RejectReason) -> Self {
+        match r {
+            RejectReason::QueueFull => ServeError::QueueFull,
+            RejectReason::WrongShape { expected, got } => {
+                ServeError::WrongShape { expected, got }
+            }
+            RejectReason::McSamplesTooLarge { max, got } => {
+                ServeError::McSamplesTooLarge { max, got }
+            }
+            RejectReason::ShuttingDown => ServeError::ShuttingDown,
+            RejectReason::Timeout => ServeError::Timeout,
+        }
+    }
+}
+
+impl From<crate::error::Error> for ServeError {
+    fn from(e: crate::error::Error) -> Self {
+        match e {
+            crate::error::Error::Config(s) => ServeError::Config(s),
+            other => ServeError::Startup(other.to_string()),
+        }
+    }
+}
+
+/// Reverse direction: keeps the deprecated `Coordinator::start*`
+/// constructors' historical `crate::error::Result` signatures compiling
+/// as one-line shims over the builder.
+impl From<ServeError> for crate::error::Error {
+    fn from(e: ServeError) -> Self {
+        match e {
+            ServeError::Config(s) => crate::error::Error::Config(s),
+            other => crate::error::Error::Coordinator(other.to_string()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absorbs_every_reject_reason() {
+        let pairs: Vec<(RejectReason, ServeError)> = vec![
+            (RejectReason::QueueFull, ServeError::QueueFull),
+            (
+                RejectReason::WrongShape { expected: 4, got: 5 },
+                ServeError::WrongShape { expected: 4, got: 5 },
+            ),
+            (
+                RejectReason::McSamplesTooLarge { max: 8, got: 9 },
+                ServeError::McSamplesTooLarge { max: 8, got: 9 },
+            ),
+            (RejectReason::ShuttingDown, ServeError::ShuttingDown),
+            (RejectReason::Timeout, ServeError::Timeout),
+        ];
+        for (reason, expected) in pairs {
+            let display = reason.to_string();
+            let converted = ServeError::from(reason);
+            assert_eq!(converted, expected);
+            // Messages stay stable across the migration.
+            assert_eq!(converted.to_string(), display);
+        }
+    }
+
+    #[test]
+    fn config_errors_round_trip_their_category() {
+        let e = ServeError::from(crate::error::Error::Config("bad".into()));
+        assert_eq!(e, ServeError::Config("bad".into()));
+        match crate::error::Error::from(e) {
+            crate::error::Error::Config(s) => assert_eq!(s, "bad"),
+            other => panic!("lost the config category: {other}"),
+        }
+    }
+
+    #[test]
+    fn is_a_std_error() {
+        fn assert_error<E: std::error::Error + Send + Sync + 'static>() {}
+        assert_error::<ServeError>();
+        // `?` into the examples' Box<dyn Error> works.
+        let boxed: Box<dyn std::error::Error> = ServeError::Timeout.into();
+        assert!(boxed.to_string().contains("timed out"));
+    }
+}

@@ -1,0 +1,62 @@
+//! [`Infer`] — the typed request builder.
+
+/// One classification request, built fluently and handed to
+/// [`crate::coordinator::Coordinator::submit`] /
+/// [`crate::coordinator::Coordinator::submit_many`] /
+/// [`crate::coordinator::Coordinator::infer`].
+///
+/// Defaults mirror the server config: `mc_samples = 0` means "use
+/// `model.mc_samples`", and an unset `defer_threshold` means "judge
+/// against `model.defer_threshold`". The per-request threshold override
+/// is the scenario-diversity knob: one fleet, per-caller risk tolerance
+/// (a triage caller defers aggressively at 0.1 nats while a batch
+/// labeler accepts everything at 2.0, against the same pool).
+#[derive(Clone, Debug)]
+pub struct Infer {
+    pub(crate) pixels: Vec<f32>,
+    pub(crate) mc_samples: usize,
+    pub(crate) defer_threshold: Option<f64>,
+}
+
+impl Infer {
+    /// A request for `pixels` (grayscale, row-major, side×side in
+    /// \[0,1\]) with the server's default MC sample count and deferral
+    /// threshold.
+    pub fn new(pixels: Vec<f32>) -> Self {
+        Self {
+            pixels,
+            mc_samples: 0,
+            defer_threshold: None,
+        }
+    }
+
+    /// Monte-Carlo samples for this request (0 = `model.mc_samples`).
+    /// Values above `server.max_mc_samples` are rejected at submit.
+    pub fn mc_samples(mut self, t: usize) -> Self {
+        self.mc_samples = t;
+        self
+    }
+
+    /// Per-request deferral threshold \[nats\], overriding
+    /// `model.defer_threshold`. Must be finite and within `[0, 10]`
+    /// (checked at submit, like the config default).
+    pub fn defer_threshold(mut self, nats: f64) -> Self {
+        self.defer_threshold = Some(nats);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_defer_to_the_server() {
+        let req = Infer::new(vec![0.0; 4]);
+        assert_eq!(req.mc_samples, 0);
+        assert_eq!(req.defer_threshold, None);
+        let req = Infer::new(vec![0.0; 4]).mc_samples(12).defer_threshold(0.3);
+        assert_eq!(req.mc_samples, 12);
+        assert_eq!(req.defer_threshold, Some(0.3));
+    }
+}

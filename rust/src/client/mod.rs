@@ -1,0 +1,101 @@
+//! # Client API v1 — the serving surface.
+//!
+//! Everything a caller needs lives behind this one module: boot a pool
+//! with [`Coordinator::builder`], describe work with [`Infer`], follow
+//! it with a [`Ticket`], read the verdict in the response's
+//! [`UncertaintyReport`], and handle exactly one error type,
+//! [`ServeError`]. The CLI, the examples, and the serving benches all
+//! route through this surface, so the engines underneath (sim, cim,
+//! pjrt) can keep evolving without touching client code.
+//!
+//! ```no_run
+//! use bnn_cim::client::{Backend, Config, Coordinator, Infer};
+//!
+//! fn main() -> Result<(), Box<dyn std::error::Error>> {
+//!     let coord = Coordinator::builder(Config::default())
+//!         .backend(Backend::Cim)
+//!         .workers(2)
+//!         .start()?;
+//!     let resp = coord.infer(Infer::new(vec![0.0; 32 * 32]).mc_samples(16))?;
+//!     println!(
+//!         "class {} | entropy {:.3} nats | deferred: {}",
+//!         resp.pred.class,
+//!         resp.uncertainty.entropy,
+//!         resp.deferred()
+//!     );
+//!     coord.shutdown();
+//!     Ok(())
+//! }
+//! ```
+//!
+//! ## Determinism contract
+//!
+//! For a fixed `(die_seed, workers, mc_workers)` triple, serial
+//! workloads replay bit-identically (DESIGN.md §4/§7), and
+//! [`Coordinator::submit_many`] is defined as *exactly* a loop of
+//! [`Coordinator::submit`] — same admission order, same queue, same
+//! batch fusion — so switching a client between the two never moves a
+//! single bit.
+
+mod builder;
+mod error;
+mod infer;
+mod ticket;
+
+pub use builder::CoordinatorBuilder;
+pub use error::ServeError;
+pub use infer::Infer;
+pub use ticket::Ticket;
+
+// The rest of the v1 surface: one import path for client code.
+pub use crate::bayes::{McPrediction, UncertaintyReport};
+pub use crate::config::{Backend, Config};
+pub use crate::coordinator::{
+    Coordinator, EngineFactory, InferResponse, MetricsSnapshot, ShardSnapshot, SourceFactory,
+};
+pub use crate::runtime::EpsilonMode;
+
+impl Coordinator {
+    /// Entry point of the v1 surface: a fluent builder over backend,
+    /// pool shape, and ε ownership. See [`CoordinatorBuilder::start`]
+    /// for the resolution rules.
+    pub fn builder(cfg: Config) -> CoordinatorBuilder {
+        CoordinatorBuilder::new(cfg)
+    }
+
+    /// Submit asynchronously; the [`Ticket`] follows the request.
+    pub fn submit(&self, req: Infer) -> Result<Ticket, ServeError> {
+        let (id, rx) = self.submit_request(req)?;
+        Ok(Ticket::new(id, rx))
+    }
+
+    /// Submit a whole workload back to back, preserving batch fusion
+    /// (requests land in the queue without waiting in between, so the
+    /// dispatcher fuses them under the size/deadline policy exactly as
+    /// it would a burst of [`Coordinator::submit`] calls — the replay is
+    /// pinned bit-identical in `tests/cim_fidelity.rs`).
+    ///
+    /// On the first admission failure the error is returned and the
+    /// already-issued tickets are dropped; their responses are counted
+    /// as `requests_orphaned`, never leaked.
+    pub fn submit_many(
+        &self,
+        reqs: impl IntoIterator<Item = Infer>,
+    ) -> Result<Vec<Ticket>, ServeError> {
+        let iter = reqs.into_iter();
+        let mut tickets = Vec::with_capacity(iter.size_hint().0);
+        for req in iter {
+            tickets.push(self.submit(req)?);
+        }
+        Ok(tickets)
+    }
+
+    /// Blocking convenience: submit and wait up to
+    /// `server.request_timeout_ms`. On [`ServeError::Timeout`] the
+    /// ticket is dropped, so the eventual reply is counted as orphaned
+    /// rather than leaking into a dead channel unnoticed.
+    pub fn infer(&self, req: Infer) -> Result<InferResponse, ServeError> {
+        let ticket = self.submit(req)?;
+        ticket.wait_timeout(self.request_timeout())
+    }
+}

@@ -1,0 +1,58 @@
+//! [`Ticket`] — the typed handle to one in-flight request.
+
+use crate::client::ServeError;
+use crate::coordinator::InferResponse;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::time::Duration;
+
+/// Handle returned by `Coordinator::submit`: the response for request
+/// `id` arrives through it exactly once.
+///
+/// Lifecycle: `wait` consumes the ticket and blocks; `wait_timeout` and
+/// `try_wait` borrow it, so a caller can poll or re-arm a deadline
+/// without losing the handle. Dropping a ticket abandons the response —
+/// the shard worker then finds a dead reply channel, counts the request
+/// under `requests_orphaned` in the metrics, and carries on serving.
+pub struct Ticket {
+    /// Request id (matches [`InferResponse::id`] on the response).
+    pub id: u64,
+    rx: Receiver<InferResponse>,
+}
+
+impl Ticket {
+    pub(crate) fn new(id: u64, rx: Receiver<InferResponse>) -> Self {
+        Self { id, rx }
+    }
+
+    /// Block until the response arrives. [`ServeError::Disconnected`]
+    /// means the serving side dropped the reply channel (worker death or
+    /// engine failure mid-batch) and the response will never come.
+    pub fn wait(self) -> Result<InferResponse, ServeError> {
+        self.rx.recv().map_err(|_| ServeError::Disconnected)
+    }
+
+    /// Block up to `timeout`. On [`ServeError::Timeout`] the ticket is
+    /// still live: keep waiting, or drop it to abandon the request (the
+    /// late reply is then counted as orphaned, not leaked).
+    pub fn wait_timeout(&self, timeout: Duration) -> Result<InferResponse, ServeError> {
+        self.rx.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => ServeError::Timeout,
+            RecvTimeoutError::Disconnected => ServeError::Disconnected,
+        })
+    }
+
+    /// Non-blocking poll: `Ok(None)` while the request is in flight.
+    pub fn try_wait(&self) -> Result<Option<InferResponse>, ServeError> {
+        match self.rx.try_recv() {
+            Ok(resp) => Ok(Some(resp)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(ServeError::Disconnected),
+        }
+    }
+}
+
+impl std::fmt::Debug for Ticket {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Ticket").field("id", &self.id).finish_non_exhaustive()
+    }
+}

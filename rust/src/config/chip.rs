@@ -13,19 +13,19 @@ use crate::util::json::Json;
 /// GRNG cell configuration (Fig. 4 circuit).
 #[derive(Clone, Debug)]
 pub struct GrngConfig {
-    /// Supply voltage [V]. 65 nm nominal.
+    /// Supply voltage \[V\]. 65 nm nominal.
     pub vdd: f64,
-    /// Inverter switching threshold V_Thr [V].
+    /// Inverter switching threshold V_Thr \[V\].
     pub v_thr: f64,
-    /// Discharge capacitor C_p = C_n [F] (metal fringe, ~1 fF).
+    /// Discharge capacitor C_p = C_n \[F\] (metal fringe, ~1 fF).
     pub cap_f: f64,
-    /// Gate bias V_R on the discharge transistors [V]. Typical 0.18 V.
+    /// Gate bias V_R on the discharge transistors \[V\]. Typical 0.18 V.
     pub bias_v: f64,
     /// Ambient temperature [°C].
     pub temp_c: f64,
-    /// Subthreshold leakage prefactor I_0 [A] (fit: 69 ns latency @ 180 mV).
+    /// Subthreshold leakage prefactor I_0 \[A\] (fit: 69 ns latency @ 180 mV).
     pub i0_a: f64,
-    /// NMOS threshold voltage V_th at 25 °C [V].
+    /// NMOS threshold voltage V_th at 25 °C \[V\].
     pub v_th: f64,
     /// Threshold temperature coefficient [V/K] (negative).
     pub v_th_tc: f64,
@@ -40,15 +40,15 @@ pub struct GrngConfig {
     pub rtn_rel_amplitude: f64,
     /// RTN latency exponent p (superlinear growth of low-freq noise).
     pub rtn_exponent: f64,
-    /// RTN amplitude temperature scale [K]: a(T) = a₀·exp((T−T₀)/scale).
+    /// RTN amplitude temperature scale \[K\]: a(T) = a₀·exp((T−T₀)/scale).
     pub rtn_t_scale_k: f64,
-    /// RTN reference time constant τ_ref [s].
+    /// RTN reference time constant τ_ref \[s\].
     pub rtn_tau_s: f64,
     /// Outlier (DFF mis-reset / trap burst) probability at 28 °C.
     /// Thermally activated with a sharp onset: ≈0.3 at 60 °C where the
     /// measured Q-Q r-value collapses (Tab. I), negligible at ≤50 °C.
     pub outlier_p0: f64,
-    /// Outlier probability temperature scale [K] (Tab. I: Q–Q r-value
+    /// Outlier probability temperature scale \[K\] (Tab. I: Q–Q r-value
     /// collapses at 60 °C).
     pub outlier_t_scale_k: f64,
     /// Outlier magnitude, in units of the nominal pulse σ.
@@ -56,16 +56,16 @@ pub struct GrngConfig {
     /// Inverter short-circuit energy coefficient [J·A] — E_inv = k/I_L.
     /// (Crossing window ∝ C/I_L, so slower discharge burns more.)
     pub inverter_sc_coeff: f64,
-    /// Fixed per-sample digital energy: DFF reset + latch [J].
+    /// Fixed per-sample digital energy: DFF reset + latch \[J\].
     pub dff_energy_j: f64,
-    /// DFF minimum reset window [s]; pulses shorter than this risk a
+    /// DFF minimum reset window \[s\]; pulses shorter than this risk a
     /// mis-reset that produces an outlier sample (observed as the Q–Q
     /// r-value collapse at 60 °C, Tab. I).
     pub dff_reset_window_s: f64,
     /// Euler–Maruyama timestep for the full circuit sim, as a fraction of
     /// the mean crossing time (adaptive: dt = μ_T · sim_dt_frac).
     pub sim_dt_frac: f64,
-    /// Pulse-width → ε normalization [s]: pulse widths are divided by this
+    /// Pulse-width → ε normalization \[s\]: pulse widths are divided by this
     /// to produce ε. `0.0` = auto-calibrate to the closed-form pulse σ at
     /// the configured operating point (what the chip's IDAC-bias tuning
     /// achieves, §IV-A).
@@ -193,11 +193,11 @@ pub struct TileConfig {
     pub rows: usize,
     /// Words per row (output vector width). Prototype: 8.
     pub words_per_row: usize,
-    /// μ precision [bits] (differential: 2 SRAM cells/bit). Prototype: 8.
+    /// μ precision \[bits\] (differential: 2 SRAM cells/bit). Prototype: 8.
     pub mu_bits: usize,
-    /// σ precision [bits] (single cell/bit; sign from GRNG). Prototype: 4.
+    /// σ precision \[bits\] (single cell/bit; sign from GRNG). Prototype: 4.
     pub sigma_bits: usize,
-    /// MVM clock frequency [Hz] — single-cycle MVM per §III-B.
+    /// MVM clock frequency \[Hz\] — single-cycle MVM per §III-B.
     pub clock_hz: f64,
 }
 
@@ -266,13 +266,13 @@ impl TileConfig {
 /// Input current-DAC (IDAC) model: 4-bit digital input → wordline current.
 #[derive(Clone, Debug)]
 pub struct IdacConfig {
-    /// Input precision [bits]. Prototype: 4.
+    /// Input precision \[bits\]. Prototype: 4.
     pub bits: usize,
-    /// Full-scale cell current per LSB step [A].
+    /// Full-scale cell current per LSB step \[A\].
     pub lsb_current_a: f64,
     /// Integral nonlinearity, relative (fraction of full scale).
     pub inl_rel: f64,
-    /// Per-conversion energy [J].
+    /// Per-conversion energy \[J\].
     pub energy_j: f64,
 }
 
@@ -314,13 +314,13 @@ impl IdacConfig {
 /// SAR ADC model (6-bit differential, shared synchronous controller).
 #[derive(Clone, Debug)]
 pub struct AdcConfig {
-    /// Resolution [bits]. Prototype: 6.
+    /// Resolution \[bits\]. Prototype: 6.
     pub bits: usize,
     /// Input-referred offset σ, in LSBs (corrected by reduction logic).
     pub offset_lsb_sigma: f64,
     /// Input-referred noise σ, in LSBs (per conversion, uncorrectable).
     pub noise_lsb_sigma: f64,
-    /// Per-conversion energy [J].
+    /// Per-conversion energy \[J\].
     pub energy_j: f64,
 }
 

@@ -13,31 +13,31 @@ use super::f64_field;
 use crate::error::Result;
 use crate::util::json::Json;
 
-/// The prototype's technology node [nm].
+/// The prototype's technology node \[nm\].
 pub const TECH_NODE_NM: f64 = 65.0;
 
-/// Per-operation energies [J]. "One MVM" means the single-cycle 64-row
+/// Per-operation energies \[J\]. "One MVM" means the single-cycle 64-row
 /// parallel operation of §III-B.
 #[derive(Clone, Debug)]
 pub struct EnergyTable {
-    /// SRAM cell read contribution during one MVM, per cell [J]
+    /// SRAM cell read contribution during one MVM, per cell \[J\]
     /// (bitline discharge share of one 8T cell conducting for the
     /// integration window).
     pub sram_cell_read_j: f64,
-    /// SRAM cell write [J] (used during programming / calibration).
+    /// SRAM cell write \[J\] (used during programming / calibration).
     pub sram_cell_write_j: f64,
-    /// Bitline precharge per column per MVM [J] (C_BL · V_DD²).
+    /// Bitline precharge per column per MVM \[J\] (C_BL · V_DD²).
     pub bitline_precharge_j: f64,
-    /// Digital reduction logic per output word per MVM [J].
+    /// Digital reduction logic per output word per MVM \[J\].
     pub reduction_word_j: f64,
-    /// Transmission-gate / switch overhead per σε word per MVM [J].
+    /// Transmission-gate / switch overhead per σε word per MVM \[J\].
     pub switch_word_j: f64,
-    /// Leakage power of the tile [W] (counted against MVM time).
+    /// Leakage power of the tile \[W\] (counted against MVM time).
     pub tile_leakage_w: f64,
-    /// Host-side DRAM access per byte [J] — used for the conventional-BNN
+    /// Host-side DRAM access per byte \[J\] — used for the conventional-BNN
     /// comparison in Fig. 2 (weights streamed per sample).
     pub dram_access_per_byte_j: f64,
-    /// Generic digital 8-bit MAC at 65 nm [J] — baseline NN cost model.
+    /// Generic digital 8-bit MAC at 65 nm \[J\] — baseline NN cost model.
     pub digital_mac8_j: f64,
 }
 

@@ -12,11 +12,11 @@ pub struct ModelConfig {
     pub artifacts_dir: String,
     /// Monte-Carlo forward passes per inference.
     pub mc_samples: usize,
-    /// Activation (input) precision [bits] — matches the IDAC.
+    /// Activation (input) precision \[bits\] — matches the IDAC.
     pub input_bits: usize,
-    /// μ weight precision [bits].
+    /// μ weight precision \[bits\].
     pub mu_bits: usize,
-    /// σ weight precision [bits].
+    /// σ weight precision \[bits\].
     pub sigma_bits: usize,
     /// Entropy threshold above which a classification is deferred
     /// (Fig. 11-right sweeps 0.0–0.6; default mid-range).

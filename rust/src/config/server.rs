@@ -47,7 +47,7 @@ pub struct ServerConfig {
     pub backend: Backend,
     /// Maximum requests fused into one batched executable call.
     pub max_batch: usize,
-    /// Batching deadline [ms]: a partial batch is dispatched after this.
+    /// Batching deadline \[ms\]: a partial batch is dispatched after this.
     pub batch_deadline_ms: f64,
     /// Request queue capacity (backpressure beyond this).
     pub queue_capacity: usize,
@@ -65,7 +65,7 @@ pub struct ServerConfig {
     /// bit-identical for a fixed `(die_seed, workers, mc_workers)` — a
     /// *fixed* default (never host CPU count) keeps replay portable.
     pub mc_workers: usize,
-    /// Per-request deadline [ms]; exceeded requests are rejected.
+    /// Per-request deadline \[ms\]; exceeded requests are rejected.
     pub request_timeout_ms: f64,
 }
 

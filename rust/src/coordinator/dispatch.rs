@@ -12,14 +12,17 @@
 //! external-ε backends — its own independent ε source (a per-shard GRNG
 //! bank seeded from a SplitMix64 split of `die_seed`), then runs:
 //! features once per batch → packed Monte-Carlo head passes → aggregate →
-//! defer/reply. Under `EpsilonMode::External` the worker fills ε buffers
+//! judge (`bayes::UncertaintyReport`, per-request threshold) → reply.
+//! Replies into dead channels (dropped `Ticket`s, timed-out blocking
+//! calls) are counted as `requests_orphaned` — the worker never crashes
+//! on an absent reader. Under `EpsilonMode::External` the worker fills ε buffers
 //! per head call; under `EpsilonMode::InWord` the engine's own memory
 //! arrays generate ε during the MVM (the chip's dataflow) and the worker
 //! reads ε/energy totals back from the engine. Either way this is the
 //! paper's parallelism in software: replicated in-word GRNG banks feed
 //! independent compute lanes with no shared RNG unit on a bus.
 
-use crate::bayes::aggregate_mc;
+use crate::bayes::{aggregate_mc, UncertaintyReport};
 use crate::config::Config;
 use crate::coordinator::batch::{effective_t, pack_images, plan_calls, scatter_features, Batch};
 use crate::coordinator::epsilon::EpsilonSource;
@@ -246,16 +249,29 @@ fn serve_batch(
 
     for (req, samples) in reqs.iter().zip(per_request.iter()) {
         let pred = aggregate_mc(samples);
-        let deferred = pred.entropy > cfg.model.defer_threshold;
+        // The deferral policy lives in `UncertaintyReport`, judged per
+        // request: a caller's threshold override beats the server-wide
+        // default (one fleet, per-caller risk tolerance).
+        let threshold = req.defer_threshold.unwrap_or(cfg.model.defer_threshold);
+        let uncertainty = UncertaintyReport::from_prediction(&pred, threshold);
         let latency = req.enqueued.elapsed();
-        metrics.record_response(latency, deferred);
-        let _ = req.reply.send(InferResponse {
-            id: req.id,
-            pred,
-            deferred,
-            latency,
-            batch_id: batch.id,
-            energy_j: energy_per_req_j,
-        });
+        metrics.record_response(latency, uncertainty.deferred);
+        // A dead reply channel means the caller dropped its Ticket (or
+        // timed out): count the served-but-undeliverable response
+        // instead of silently discarding the send error.
+        let orphaned = req
+            .reply
+            .send(InferResponse {
+                id: req.id,
+                pred,
+                uncertainty,
+                latency,
+                batch_id: batch.id,
+                energy_j: energy_per_req_j,
+            })
+            .is_err();
+        if orphaned {
+            metrics.record_orphaned(shard);
+        }
     }
 }

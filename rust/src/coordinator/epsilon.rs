@@ -69,7 +69,7 @@ pub trait EpsilonSource: Send {
     /// Total samples drawn so far.
     fn samples_drawn(&self) -> u64;
 
-    /// Energy cost so far [J] (per the source's hardware model).
+    /// Energy cost so far \[J\] (per the source's hardware model).
     fn energy_j(&self) -> f64;
 
     fn name(&self) -> &'static str;

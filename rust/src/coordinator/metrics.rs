@@ -6,7 +6,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// Age [s] after which a shard's measured ε rate is considered stale and
+/// Age \[s\] after which a shard's measured ε rate is considered stale and
 /// snapshots report 0 instead of the last interval's value. Generous
 /// enough that slow steady record cadences (one record per fused batch)
 /// still surface a rate; short enough that an idle shard stops claiming
@@ -24,6 +24,11 @@ pub struct ShardSnapshot {
     pub shard: usize,
     /// Requests served by this shard (sum of its batch fills).
     pub requests: u64,
+    /// Responses this shard computed but could not deliver: the caller
+    /// had already dropped its `Ticket` (or timed out in `infer`), so
+    /// the reply channel was dead when the worker sent. Served work with
+    /// no reader — a leak indicator, not a failure.
+    pub requests_orphaned: u64,
     pub batches: u64,
     pub mc_passes: u64,
     /// Engine executions (PJRT calls, sim-engine or cim-engine calls).
@@ -37,7 +42,7 @@ pub struct ShardSnapshot {
     /// ~30 s without fresh samples). The live counterpart of the paper's
     /// Tab. II 5.12 GSa/s hardware throughput.
     pub epsilon_sa_per_s: f64,
-    /// Cumulative tile energy from the engine's `EnergyLedger`s [J]
+    /// Cumulative tile energy from the engine's `EnergyLedger`s \[J\]
     /// (0 for backends without a hardware model).
     pub engine_energy_j: f64,
     /// Per-tile MVMs executed by the engine.
@@ -47,7 +52,7 @@ pub struct ShardSnapshot {
 }
 
 impl ShardSnapshot {
-    /// ε-generation energy per sample [fJ] — the paper's headline
+    /// ε-generation energy per sample \[fJ\] — the paper's headline
     /// fJ/Sample, live at serving time (NaN-free: 0 when no ε drawn).
     pub fn epsilon_fj_per_sample(&self) -> f64 {
         if self.epsilon_samples == 0 {
@@ -77,6 +82,9 @@ impl ShardSnapshot {
 pub struct MetricsSnapshot {
     pub requests_total: u64,
     pub requests_rejected: u64,
+    /// Responses computed but sent into dead reply channels (dropped
+    /// `Ticket`s / timed-out blocking calls), summed across shards.
+    pub requests_orphaned: u64,
     pub requests_deferred: u64,
     pub batches: u64,
     pub mc_passes: u64,
@@ -88,7 +96,7 @@ pub struct MetricsSnapshot {
     /// Aggregate measured ε rate across shards [Sa/s] — parallel banks
     /// add throughput, so this is the sum of the per-shard rates.
     pub epsilon_sa_per_s: f64,
-    /// Cumulative engine tile energy across shards [J] (cim backend).
+    /// Cumulative engine tile energy across shards \[J\] (cim backend).
     pub engine_energy_j: f64,
     /// Per-tile MVMs executed by the engines across shards.
     pub engine_mvms: u64,
@@ -104,7 +112,7 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
-    /// ε energy per sample [fJ] across all shards (paper headline).
+    /// ε energy per sample \[fJ\] across all shards (paper headline).
     pub fn epsilon_fj_per_sample(&self) -> f64 {
         if self.epsilon_samples == 0 {
             0.0
@@ -129,11 +137,12 @@ impl MetricsSnapshot {
 
     pub fn render(&self) -> String {
         let mut out = format!(
-            "requests={} rejected={} deferred={} batches={} (fill {:.2})\n\
+            "requests={} rejected={} orphaned={} deferred={} batches={} (fill {:.2})\n\
              mc_passes={} pjrt_exec={} eps_samples={} eps_energy={:.3} µJ\n\
              latency p50={:.2} ms p95={:.2} ms max={:.2} ms | throughput={:.1} req/s",
             self.requests_total,
             self.requests_rejected,
+            self.requests_orphaned,
             self.requests_deferred,
             self.batches,
             self.mean_batch_fill,
@@ -176,6 +185,9 @@ impl MetricsSnapshot {
                     s.epsilon_samples,
                     s.epsilon_energy_j * 1e6,
                 ));
+                if s.requests_orphaned > 0 {
+                    out.push_str(&format!(" orphaned={}", s.requests_orphaned));
+                }
                 if s.engine_energy_j > 0.0 {
                     out.push_str(&format!(
                         " tiles {:.3} µJ, {:.0} fJ/Sa",
@@ -198,6 +210,7 @@ pub struct Metrics {
 #[derive(Default)]
 struct ShardInner {
     requests: u64,
+    requests_orphaned: u64,
     batches: u64,
     mc_passes: u64,
     engine_executions: u64,
@@ -246,6 +259,13 @@ impl Metrics {
 
     pub fn record_reject(&self) {
         self.inner.lock().unwrap().requests_rejected += 1;
+    }
+
+    /// A shard computed a response but the reply channel was dead (the
+    /// caller dropped its `Ticket` or timed out): served work with no
+    /// reader. Counted per shard and summed globally.
+    pub fn record_orphaned(&self, shard: usize) {
+        self.inner.lock().unwrap().shards[shard].requests_orphaned += 1;
     }
 
     pub fn record_batch(
@@ -337,6 +357,7 @@ impl Metrics {
             .map(|(i, s)| ShardSnapshot {
                 shard: i,
                 requests: s.requests,
+                requests_orphaned: s.requests_orphaned,
                 batches: s.batches,
                 mc_passes: s.mc_passes,
                 engine_executions: s.engine_executions,
@@ -360,6 +381,7 @@ impl Metrics {
         MetricsSnapshot {
             requests_total: g.requests_total,
             requests_rejected: g.requests_rejected,
+            requests_orphaned: per_shard.iter().map(|s| s.requests_orphaned).sum(),
             requests_deferred: g.requests_deferred,
             batches,
             mc_passes: per_shard.iter().map(|s| s.mc_passes).sum(),
@@ -422,6 +444,21 @@ mod tests {
         assert_eq!(s.per_shard[1].requests, 8);
         assert_eq!(s.per_shard[0].epsilon_samples, 600);
         assert!(s.render().contains("shard 1"));
+    }
+
+    #[test]
+    fn orphaned_responses_count_per_shard_and_globally() {
+        let m = Metrics::new(2);
+        m.record_orphaned(1);
+        m.record_orphaned(1);
+        m.record_orphaned(0);
+        let s = m.snapshot();
+        assert_eq!(s.requests_orphaned, 3);
+        assert_eq!(s.per_shard[0].requests_orphaned, 1);
+        assert_eq!(s.per_shard[1].requests_orphaned, 2);
+        assert!(s.render().contains("orphaned=3"));
+        // The per-shard render line surfaces nonzero orphan counts.
+        assert!(s.render().contains("orphaned=2"));
     }
 
     #[test]

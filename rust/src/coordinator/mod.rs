@@ -3,10 +3,13 @@
 //! each owning its own engine and its own per-shard in-word GRNG bank;
 //! Monte-Carlo sample scheduling, deferral policy, and per-shard metrics.
 //!
+//! Client code should use [`crate::client`] (API v1: builder, typed
+//! tickets, `ServeError`) rather than these internals directly.
+//!
 //! Module layout:
 //! - [`batch`] — pure batch-assembly / slot-packing cores (no I/O).
-//! - [`dispatch`] — the dispatcher and shard-worker loops.
-//! - [`server`] — the [`Coordinator`] handle (start/submit/shutdown).
+//! - `dispatch` — the dispatcher and shard-worker loops (private).
+//! - [`server`] — the [`Coordinator`] handle (boot/admission/shutdown).
 //! - [`epsilon`] — ε sources, including per-shard seed derivation.
 //! - [`metrics`] — global + per-shard counters.
 

@@ -1,16 +1,24 @@
 //! Request/response types for the serving engine.
+//!
+//! Clients build requests through [`crate::client::Infer`] and receive
+//! [`InferResponse`]s through [`crate::client::Ticket`]s; the types here
+//! are the wire format between the coordinator's queues and the shard
+//! workers.
 
-use crate::bayes::McPrediction;
+use crate::bayes::{McPrediction, UncertaintyReport};
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
-/// A classification request entering the coordinator.
+/// A classification request in flight inside the coordinator.
 pub struct InferRequest {
     pub id: u64,
-    /// Grayscale image, row-major, side×side in [0,1].
+    /// Grayscale image, row-major, side×side in \[0,1\].
     pub pixels: Vec<f32>,
     /// Monte-Carlo samples requested (0 = server default).
     pub mc_samples: usize,
+    /// Per-request deferral-threshold override \[nats\]
+    /// (`None` = `model.defer_threshold`).
+    pub defer_threshold: Option<f64>,
     pub enqueued: Instant,
     /// Reply channel.
     pub reply: Sender<InferResponse>,
@@ -21,20 +29,33 @@ pub struct InferRequest {
 pub struct InferResponse {
     pub id: u64,
     pub pred: McPrediction,
-    /// Entropy exceeded the deferral threshold → route to human /
-    /// secondary model (Fig. 1's safety-critical loop).
-    pub deferred: bool,
+    /// Why (and whether) this prediction should be deferred to a human /
+    /// secondary model: entropy, aleatoric/epistemic split, the
+    /// threshold actually used, and the verdict (Fig. 1's
+    /// safety-critical loop, made first-class).
+    pub uncertainty: UncertaintyReport,
     /// Queue + compute latency.
     pub latency: std::time::Duration,
     /// Which batch this request rode in (diagnostics).
     pub batch_id: u64,
-    /// Simulated hardware energy attributed to this request [J]: its
+    /// Simulated hardware energy attributed to this request \[J\]: its
     /// share of the batch's tile-`EnergyLedger` delta. 0 for backends
     /// without an energy model (sim, pjrt).
     pub energy_j: f64,
 }
 
-/// Failure modes surfaced to clients.
+impl InferResponse {
+    /// The deferral verdict, straight from [`InferResponse::uncertainty`].
+    pub fn deferred(&self) -> bool {
+        self.uncertainty.deferred
+    }
+}
+
+/// Admission failure modes (the pre-v1 vocabulary). The client surface
+/// absorbs these into [`crate::client::ServeError`] (`From` impl there,
+/// messages unchanged); the type remains for one release as the error
+/// vocabulary of the deprecated `infer_blocking` shim and of downstream
+/// code mid-migration.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum RejectReason {
     QueueFull,
@@ -62,3 +83,5 @@ impl std::fmt::Display for RejectReason {
         }
     }
 }
+
+impl std::error::Error for RejectReason {}

@@ -18,7 +18,13 @@
 //! single-worker coordinator bit for bit, and a fixed `(die_seed,
 //! workers)` pair replays identically for serial workloads (routing is
 //! round-robin on the batch id, not racy work-stealing).
+//!
+//! Client-facing construction and submission live in [`crate::client`]
+//! (API v1): `Coordinator::builder(cfg)…start()`, `submit(Infer) →
+//! Ticket`. The historical `start*` constructors remain below as
+//! `#[deprecated]` one-line shims over the builder for one release.
 
+use crate::client::{Infer, ServeError};
 use crate::config::{Backend, Config};
 use crate::coordinator::batch::Batch;
 use crate::coordinator::dispatch::{run_dispatcher, run_shard_worker};
@@ -26,17 +32,18 @@ use crate::coordinator::epsilon::{EpsilonSource, EpsilonSupply};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::request::{InferRequest, InferResponse, RejectReason};
 use crate::error::{Error, Result};
-use crate::runtime::{CimEngine, EpsilonMode, InferenceEngine, SimEngine};
+use crate::runtime::EpsilonMode;
 use crate::util::threadpool::Bounded;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::channel;
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Factory building one engine per shard, called inside the shard's own
 /// worker thread (engines need not be `Send`). The argument is the shard
 /// index.
-pub type EngineFactory = Arc<dyn Fn(usize) -> Result<Box<dyn InferenceEngine>> + Send + Sync>;
+pub type EngineFactory =
+    Arc<dyn Fn(usize) -> Result<Box<dyn crate::runtime::InferenceEngine>> + Send + Sync>;
 
 /// Factory building one ε source per shard, called inside the shard's own
 /// worker thread. The argument is the shard index.
@@ -54,87 +61,12 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start with the default engine (the PJRT runtime; requires the
-    /// `pjrt` feature and built artifacts) and the default ε supply
-    /// (per-shard simulated in-word GRNG banks, coordinator-owned).
-    pub fn start(cfg: Config) -> Result<Coordinator> {
-        #[cfg(feature = "pjrt")]
-        return Self::start_with(
-            cfg.clone(),
-            pjrt_engine_factory(&cfg),
-            EpsilonSupply::grng_banks(&cfg.chip),
-        );
-        #[cfg(not(feature = "pjrt"))]
-        {
-            let _ = cfg;
-            Err(Error::Runtime(
-                "built without the `pjrt` feature — use Coordinator::start_sim \
-                 (pure-Rust engine), start_cim (chip model), or start_with"
-                    .into(),
-            ))
-        }
-    }
-
-    /// Start on the backend named by `cfg.server.backend` (the
-    /// `serve --backend {sim,cim,pjrt}` entry point).
-    pub fn start_backend(cfg: Config) -> Result<Coordinator> {
-        match cfg.server.backend {
-            Backend::Sim => Self::start_sim(cfg),
-            Backend::Cim => Self::start_cim(cfg),
-            Backend::Pjrt => Self::start(cfg),
-        }
-    }
-
-    /// Start on the pure-Rust [`SimEngine`] backend: no artifacts, no
-    /// PJRT toolchain. Every shard replicates the same deterministic
-    /// weights; ε still comes from per-shard GRNG banks.
-    pub fn start_sim(cfg: Config) -> Result<Coordinator> {
-        let engine_cfg = cfg.clone();
-        let make_engine: EngineFactory = Arc::new(move |_shard| {
-            Ok(Box::new(SimEngine::from_config(&engine_cfg)) as Box<dyn InferenceEngine>)
-        });
-        let supply = EpsilonSupply::grng_banks(&cfg.chip);
-        Self::start_with(cfg, make_engine, supply)
-    }
-
-    /// Start on the behavioral chip model ([`CimEngine`]): the Bayesian
-    /// head runs on simulated CIM tile arrays whose in-word GRNG banks
-    /// generate ε *inside* the engine — the coordinator supplies none —
-    /// and whose energy ledgers surface fJ/Sample + J/Op into metrics.
-    /// Weights are replicated across shards; each shard gets its own
-    /// simulated die (a `shard_die_seed` split of `chip.die_seed`).
-    pub fn start_cim(cfg: Config) -> Result<Coordinator> {
-        let engine_cfg = cfg.clone();
-        let make_engine: EngineFactory = Arc::new(move |shard| {
-            Ok(Box::new(CimEngine::for_shard(&engine_cfg, shard)) as Box<dyn InferenceEngine>)
-        });
-        Self::start_with(cfg, make_engine, EpsilonSupply::InWord)
-    }
-
-    /// Start with custom ε sources on the default engine (ablations:
-    /// Philox mirror, Wallace…).
-    pub fn start_with_source(cfg: Config, make_source: SourceFactory) -> Result<Coordinator> {
-        #[cfg(feature = "pjrt")]
-        return Self::start_with(
-            cfg.clone(),
-            pjrt_engine_factory(&cfg),
-            EpsilonSupply::External(make_source),
-        );
-        #[cfg(not(feature = "pjrt"))]
-        {
-            let _ = (cfg, make_source);
-            Err(Error::Runtime(
-                "built without the `pjrt` feature — use Coordinator::start_with \
-                 with an explicit engine factory"
-                    .into(),
-            ))
-        }
-    }
-
-    /// Start the full pool: `cfg.server.workers` shard workers, each with
+    /// Boot the full pool: `cfg.server.workers` shard workers, each with
     /// its own engine from the factory and its ε demand met per `supply`
-    /// (external per-shard sources, or engine-owned in-word ε).
-    pub fn start_with(
+    /// (external per-shard sources, or engine-owned in-word ε). The
+    /// engine/supply resolution in front of this lives in
+    /// [`crate::client::CoordinatorBuilder`].
+    pub(crate) fn boot(
         cfg: Config,
         make_engine: EngineFactory,
         supply: EpsilonSupply,
@@ -185,9 +117,11 @@ impl Coordinator {
                         (EpsilonMode::External, Some(s)) => Some(s),
                         (EpsilonMode::External, None) => {
                             let _ = ready_tx.send(Err(format!(
-                                "shard {shard}: engine '{}' consumes external ε \
-                                 but the supply is in-word",
-                                engine.name()
+                                "shard {shard}: engine '{}' consumes {} ε \
+                                 but the supply is {}",
+                                engine.name(),
+                                EpsilonMode::External.name(),
+                                EpsilonMode::InWord.name(),
                             )));
                             return;
                         }
@@ -248,16 +182,22 @@ impl Coordinator {
         })
     }
 
-    /// Submit asynchronously; the returned receiver yields the response.
-    pub fn submit(
+    /// Admission core behind `client::Coordinator::{submit, infer}`:
+    /// validate, allocate an id, enqueue. Kept here so the queue and
+    /// config stay private to this module.
+    pub(crate) fn submit_request(
         &self,
-        pixels: Vec<f32>,
-        mc_samples: usize,
-    ) -> std::result::Result<std::sync::mpsc::Receiver<InferResponse>, RejectReason> {
+        req: Infer,
+    ) -> std::result::Result<(u64, Receiver<InferResponse>), ServeError> {
+        let Infer {
+            pixels,
+            mc_samples,
+            defer_threshold,
+        } = req;
         let expected = self.cfg.model.image_side * self.cfg.model.image_side;
         if pixels.len() != expected {
             self.metrics.record_reject();
-            return Err(RejectReason::WrongShape {
+            return Err(ServeError::WrongShape {
                 expected,
                 got: pixels.len(),
             });
@@ -266,37 +206,46 @@ impl Coordinator {
         // pass count for every batch-mate it gets fused with.
         if mc_samples > self.cfg.server.max_mc_samples {
             self.metrics.record_reject();
-            return Err(RejectReason::McSamplesTooLarge {
+            return Err(ServeError::McSamplesTooLarge {
                 max: self.cfg.server.max_mc_samples,
                 got: mc_samples,
             });
+        }
+        // Same bound Config::validate applies to the server default.
+        if let Some(h) = defer_threshold {
+            if !h.is_finite() || !(0.0..=10.0).contains(&h) {
+                self.metrics.record_reject();
+                return Err(ServeError::InvalidDeferThreshold { got: h });
+            }
         }
         let (tx, rx) = channel();
         let req = InferRequest {
             id: self.next_id.fetch_add(1, Ordering::SeqCst),
             pixels,
             mc_samples,
+            defer_threshold,
             enqueued: Instant::now(),
             reply: tx,
         };
+        let id = req.id;
         match self.requests.try_send(req) {
-            Ok(()) => Ok(rx),
+            Ok(()) => Ok((id, rx)),
             Err(_) => {
                 self.metrics.record_reject();
-                Err(RejectReason::QueueFull)
+                // A closed queue (pool tearing down) is not "try again
+                // later" — distinguish it from backpressure.
+                Err(if self.requests.is_closed() {
+                    ServeError::ShuttingDown
+                } else {
+                    ServeError::QueueFull
+                })
             }
         }
     }
 
-    /// Blocking convenience wrapper.
-    pub fn infer_blocking(
-        &self,
-        pixels: Vec<f32>,
-        mc_samples: usize,
-    ) -> std::result::Result<InferResponse, RejectReason> {
-        let rx = self.submit(pixels, mc_samples)?;
-        let timeout = Duration::from_secs_f64(self.cfg.server.request_timeout_ms / 1e3);
-        rx.recv_timeout(timeout).map_err(|_| RejectReason::Timeout)
+    /// The blocking-call deadline (`server.request_timeout_ms`).
+    pub(crate) fn request_timeout(&self) -> Duration {
+        Duration::from_secs_f64(self.cfg.server.request_timeout_ms / 1e3)
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -330,6 +279,96 @@ impl Coordinator {
     }
 }
 
+/// Deprecated constructors (pre-v1 surface): one-line shims over
+/// [`crate::client::CoordinatorBuilder`], kept for one release so
+/// downstream code migrates on its own schedule. Referenced only by the
+/// shim-equivalence test in `tests/api_surface.rs`.
+impl Coordinator {
+    /// Start with the default engine (PJRT artifacts).
+    #[deprecated(note = "use Coordinator::builder(cfg).backend(Backend::Pjrt).start()")]
+    pub fn start(cfg: Config) -> Result<Coordinator> {
+        Self::builder(cfg)
+            .backend(Backend::Pjrt)
+            .start()
+            .map_err(Error::from)
+    }
+
+    /// Start on the backend named by `cfg.server.backend`.
+    #[deprecated(note = "use Coordinator::builder(cfg).start()")]
+    pub fn start_backend(cfg: Config) -> Result<Coordinator> {
+        Self::builder(cfg).start().map_err(Error::from)
+    }
+
+    /// Start on the pure-Rust [`crate::runtime::SimEngine`] backend.
+    #[deprecated(note = "use Coordinator::builder(cfg).backend(Backend::Sim).start()")]
+    pub fn start_sim(cfg: Config) -> Result<Coordinator> {
+        Self::builder(cfg)
+            .backend(Backend::Sim)
+            .start()
+            .map_err(Error::from)
+    }
+
+    /// Start on the behavioral chip model ([`crate::runtime::CimEngine`]).
+    #[deprecated(note = "use Coordinator::builder(cfg).backend(Backend::Cim).start()")]
+    pub fn start_cim(cfg: Config) -> Result<Coordinator> {
+        Self::builder(cfg)
+            .backend(Backend::Cim)
+            .start()
+            .map_err(Error::from)
+    }
+
+    /// Start with custom ε sources on the default (PJRT) engine.
+    #[deprecated(note = "use Coordinator::builder(cfg).source_factory(f).start()")]
+    pub fn start_with_source(cfg: Config, make_source: SourceFactory) -> Result<Coordinator> {
+        Self::builder(cfg)
+            .backend(Backend::Pjrt)
+            .source_factory(make_source)
+            .start()
+            .map_err(Error::from)
+    }
+
+    /// Start with explicit engine factory and ε supply.
+    #[deprecated(
+        note = "use builder(cfg).engine_factory(f) with .source_factory(s) or .epsilon(mode)"
+    )]
+    pub fn start_with(
+        cfg: Config,
+        make_engine: EngineFactory,
+        supply: EpsilonSupply,
+    ) -> Result<Coordinator> {
+        let builder = Self::builder(cfg).engine_factory(make_engine);
+        match supply {
+            EpsilonSupply::External(f) => builder.source_factory(f),
+            EpsilonSupply::InWord => builder.epsilon(EpsilonMode::InWord),
+        }
+        .start()
+        .map_err(Error::from)
+    }
+
+    /// Blocking convenience wrapper, with its historical signature: the
+    /// pre-v1 error vocabulary ([`RejectReason`]) and the pre-v1
+    /// behavior of folding every wait failure into `Timeout`.
+    #[deprecated(note = "use Coordinator::infer(Infer::new(pixels).mc_samples(t))")]
+    pub fn infer_blocking(
+        &self,
+        pixels: Vec<f32>,
+        mc_samples: usize,
+    ) -> std::result::Result<InferResponse, RejectReason> {
+        self.infer(Infer::new(pixels).mc_samples(mc_samples))
+            .map_err(|e| match e {
+                ServeError::QueueFull => RejectReason::QueueFull,
+                ServeError::WrongShape { expected, got } => {
+                    RejectReason::WrongShape { expected, got }
+                }
+                ServeError::McSamplesTooLarge { max, got } => {
+                    RejectReason::McSamplesTooLarge { max, got }
+                }
+                ServeError::ShuttingDown => RejectReason::ShuttingDown,
+                _ => RejectReason::Timeout,
+            })
+    }
+}
+
 impl Drop for Coordinator {
     fn drop(&mut self) {
         self.stop();
@@ -337,11 +376,11 @@ impl Drop for Coordinator {
 }
 
 #[cfg(feature = "pjrt")]
-fn pjrt_engine_factory(cfg: &Config) -> EngineFactory {
+pub(crate) fn pjrt_engine_factory(cfg: &Config) -> EngineFactory {
     let artifacts = std::path::PathBuf::from(&cfg.model.artifacts_dir);
     Arc::new(move |_shard| {
         let engine = crate::runtime::Engine::load(&artifacts)?;
-        Ok(Box::new(engine) as Box<dyn InferenceEngine>)
+        Ok(Box::new(engine) as Box<dyn crate::runtime::InferenceEngine>)
     })
 }
 
@@ -358,12 +397,12 @@ mod tests {
     }
 
     #[test]
-    fn start_backend_dispatches_on_config() {
+    fn builder_dispatches_on_config_backend() {
         let mut cfg = sim_cfg();
         cfg.server.backend = crate::config::Backend::Sim;
-        let coord = Coordinator::start_backend(cfg).unwrap();
+        let coord = Coordinator::builder(cfg).start().unwrap();
         let gen = SyntheticPerson::new(32, 3);
-        let resp = coord.infer_blocking(gen.sample(0).pixels, 0).unwrap();
+        let resp = coord.infer(Infer::new(gen.sample(0).pixels)).unwrap();
         assert_eq!(resp.pred.probs.len(), 2);
         // External-ε backend: no tile energy model, zero request energy.
         assert_eq!(resp.energy_j, 0.0);
@@ -373,11 +412,14 @@ mod tests {
     #[test]
     fn coordinator_serves_on_sim_engine() {
         let cfg = sim_cfg();
-        let coord = Coordinator::start_sim(cfg).unwrap();
+        let coord = Coordinator::builder(cfg)
+            .backend(Backend::Sim)
+            .start()
+            .unwrap();
         let gen = SyntheticPerson::new(32, 77);
         for i in 0..6 {
             let s = gen.sample(i);
-            let resp = coord.infer_blocking(s.pixels, 0).unwrap();
+            let resp = coord.infer(Infer::new(s.pixels)).unwrap();
             assert_eq!(resp.pred.probs.len(), 2);
             assert!((resp.pred.probs.iter().sum::<f64>() - 1.0).abs() < 1e-5);
         }
@@ -391,38 +433,77 @@ mod tests {
     }
 
     #[test]
-    fn coordinator_rejects_bad_shapes_and_oversized_mc() {
+    fn coordinator_rejects_bad_shapes_oversized_mc_and_bad_thresholds() {
         let mut cfg = sim_cfg();
         cfg.server.max_mc_samples = 16;
-        let coord = Coordinator::start_sim(cfg).unwrap();
-        let err = coord.submit(vec![0.0; 7], 0).unwrap_err();
-        assert!(matches!(err, RejectReason::WrongShape { .. }));
-        let err = coord.submit(vec![0.0; 32 * 32], 17).unwrap_err();
+        let coord = Coordinator::builder(cfg)
+            .backend(Backend::Sim)
+            .start()
+            .unwrap();
+        let err = coord.submit(Infer::new(vec![0.0; 7])).unwrap_err();
+        assert!(matches!(err, ServeError::WrongShape { .. }));
+        let err = coord
+            .submit(Infer::new(vec![0.0; 32 * 32]).mc_samples(17))
+            .unwrap_err();
         assert!(matches!(
             err,
-            RejectReason::McSamplesTooLarge { max: 16, got: 17 }
+            ServeError::McSamplesTooLarge { max: 16, got: 17 }
         ));
-        // At the bound is still accepted.
-        let rx = coord.submit(vec![0.0; 32 * 32], 16).unwrap();
-        rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let err = coord
+            .submit(Infer::new(vec![0.0; 32 * 32]).defer_threshold(f64::NAN))
+            .unwrap_err();
+        assert!(matches!(err, ServeError::InvalidDeferThreshold { .. }));
+        let err = coord
+            .submit(Infer::new(vec![0.0; 32 * 32]).defer_threshold(-0.5))
+            .unwrap_err();
+        assert!(matches!(err, ServeError::InvalidDeferThreshold { .. }));
+        // At the bounds is still accepted.
+        let ticket = coord
+            .submit(Infer::new(vec![0.0; 32 * 32]).mc_samples(16).defer_threshold(10.0))
+            .unwrap();
+        ticket.wait_timeout(Duration::from_secs(30)).unwrap();
         let m = coord.metrics();
-        assert_eq!(m.requests_rejected, 2);
+        assert_eq!(m.requests_rejected, 4);
         assert_eq!(m.requests_total, 1);
         coord.shutdown();
+    }
+
+    #[test]
+    fn builder_rejects_external_epsilon_on_stock_cim_backend() {
+        use crate::coordinator::epsilon::GrngBankSource;
+        // The stock cim engine owns its ε; a supplied source would be
+        // silently unused by the worker handshake — the builder must
+        // refuse instead (an ablation believing it measured its source).
+        let cfg = sim_cfg();
+        let err = Coordinator::builder(cfg.clone())
+            .backend(Backend::Cim)
+            .source_factory(GrngBankSource::shard_factory(&cfg.chip))
+            .start()
+            .unwrap_err();
+        assert!(matches!(err, ServeError::Config(_)), "got {err:?}");
+        let err = Coordinator::builder(cfg)
+            .backend(Backend::Cim)
+            .epsilon(crate::runtime::EpsilonMode::External)
+            .start()
+            .unwrap_err();
+        assert!(matches!(err, ServeError::Config(_)), "got {err:?}");
     }
 
     #[test]
     fn coordinator_batches_concurrent_requests() {
         let mut cfg = sim_cfg();
         cfg.server.batch_deadline_ms = 30.0;
-        let coord = Coordinator::start_sim(cfg).unwrap();
+        let coord = Coordinator::builder(cfg)
+            .backend(Backend::Sim)
+            .start()
+            .unwrap();
         let gen = SyntheticPerson::new(32, 5);
-        let receivers: Vec<_> = (0..8)
-            .map(|i| coord.submit(gen.sample(i).pixels, 0).unwrap())
-            .collect();
-        let responses: Vec<_> = receivers
+        let tickets = coord
+            .submit_many((0..8).map(|i| Infer::new(gen.sample(i).pixels)))
+            .unwrap();
+        let responses: Vec<_> = tickets
             .into_iter()
-            .map(|rx| rx.recv_timeout(Duration::from_secs(30)).unwrap())
+            .map(|t| t.wait_timeout(Duration::from_secs(30)).unwrap())
             .collect();
         let m = coord.metrics();
         // 8 requests in ≤ a few batches (deadline batching).
@@ -440,16 +521,19 @@ mod tests {
     #[test]
     fn multi_worker_pool_serves_everything() {
         let mut cfg = sim_cfg();
-        cfg.server.workers = 4;
         cfg.server.batch_deadline_ms = 1.0;
-        let coord = Coordinator::start_sim(cfg).unwrap();
+        let coord = Coordinator::builder(cfg)
+            .backend(Backend::Sim)
+            .workers(4)
+            .start()
+            .unwrap();
         assert_eq!(coord.workers(), 4);
         let gen = SyntheticPerson::new(32, 11);
-        let receivers: Vec<_> = (0..32)
-            .map(|i| coord.submit(gen.sample(i).pixels, 0).unwrap())
-            .collect();
-        for rx in receivers {
-            rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        let tickets = coord
+            .submit_many((0..32).map(|i| Infer::new(gen.sample(i).pixels)))
+            .unwrap();
+        for t in tickets {
+            t.wait_timeout(Duration::from_secs(30)).unwrap();
         }
         let m = coord.metrics();
         assert_eq!(m.requests_total, 32);
@@ -463,6 +547,32 @@ mod tests {
         coord.shutdown();
     }
 
+    #[test]
+    fn ticket_try_wait_polls_without_blocking() {
+        let cfg = sim_cfg();
+        let coord = Coordinator::builder(cfg)
+            .backend(Backend::Sim)
+            .start()
+            .unwrap();
+        let gen = SyntheticPerson::new(32, 13);
+        let ticket = coord.submit(Infer::new(gen.sample(0).pixels)).unwrap();
+        let t0 = Instant::now();
+        let resp = loop {
+            match ticket.try_wait().unwrap() {
+                Some(resp) => break resp,
+                None => {
+                    assert!(t0.elapsed() < Duration::from_secs(60), "response never came");
+                    std::thread::yield_now();
+                }
+            }
+        };
+        assert_eq!(resp.id, ticket.id);
+        // Drained: the channel reports Disconnected after shutdown, not
+        // a second response.
+        coord.shutdown();
+        assert!(matches!(ticket.try_wait(), Err(ServeError::Disconnected)));
+    }
+
     #[cfg(feature = "pjrt")]
     #[test]
     fn coordinator_end_to_end_on_artifacts() {
@@ -472,13 +582,16 @@ mod tests {
         }
         let mut cfg = Config::default();
         cfg.model.mc_samples = 8;
-        let coord = Coordinator::start(cfg).unwrap();
+        let coord = Coordinator::builder(cfg)
+            .backend(Backend::Pjrt)
+            .start()
+            .unwrap();
         let gen = SyntheticPerson::new(32, 77);
         let mut correct = 0;
         let n = 12;
         for i in 0..n {
             let s = gen.sample(i);
-            let resp = coord.infer_blocking(s.pixels, 0).unwrap();
+            let resp = coord.infer(Infer::new(s.pixels)).unwrap();
             assert_eq!(resp.pred.probs.len(), 2);
             assert!((resp.pred.probs.iter().sum::<f64>() - 1.0).abs() < 1e-6);
             if resp.pred.class == s.label {

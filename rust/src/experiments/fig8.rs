@@ -9,9 +9,9 @@ use crate::util::stats::Histogram;
 #[derive(Clone, Debug)]
 pub struct CharacterizationReport {
     pub quality: QualityReport,
-    /// Pulse-width histogram [ns].
+    /// Pulse-width histogram \[ns\].
     pub width_hist: Histogram,
-    /// Latency histogram [ns].
+    /// Latency histogram \[ns\].
     pub latency_hist: Histogram,
     /// Fraction of pulses below the 1 ns IO measurement floor.
     pub sub_1ns_frac: f64,

@@ -261,7 +261,7 @@ impl GrngBank {
 
     /// The pre-SoA reference sampler: per-cell scalar walk through the
     /// AoS params, exactly the old `Vec<GrngCell>` loop (same arithmetic
-    /// via [`eps_fast_step`], same per-cell states). Kept as the A/B
+    /// via `circuit::eps_fast_step`, same per-cell states). Kept as the A/B
     /// baseline for `tests/grng_props.rs` (bit-exactness) and
     /// `benches/grng.rs` / `BENCH_grng_fill.json` (speedup).
     pub fn fill_epsilon_legacy(&mut self, out: &mut [f64]) {
@@ -295,7 +295,7 @@ impl GrngBank {
         }
     }
 
-    /// Mean per-sample energy across the bank [J]; 0.0 for an empty bank.
+    /// Mean per-sample energy across the bank \[J\]; 0.0 for an empty bank.
     pub fn mean_energy_per_sample(&self) -> f64 {
         if self.params.is_empty() {
             return 0.0;
@@ -305,7 +305,7 @@ impl GrngBank {
     }
 
     /// Mean conversion latency (≈ slowest-branch mean) across the bank
-    /// [s]; 0.0 for an empty bank.
+    /// \[s\]; 0.0 for an empty bank.
     pub fn mean_latency(&self) -> f64 {
         if self.params.is_empty() {
             return 0.0;

@@ -32,7 +32,7 @@ pub struct SourceCost {
     pub published_gsa_s: Option<f64>,
     /// Published area [mm²] (ASICs only).
     pub published_area_mm2: Option<f64>,
-    /// Technology node of the published design [nm].
+    /// Technology node of the published design \[nm\].
     pub tech_nm: f64,
     /// Approximate digital op count per sample (for our own estimate).
     pub ops_per_sample: f64,

@@ -21,29 +21,29 @@ use crate::util::rng::{Rng64, Xoshiro256};
 #[derive(Clone, Debug)]
 pub struct CellParams {
     pub cfg: GrngConfig,
-    /// Per-branch threshold-voltage mismatch [V] (static, per die).
+    /// Per-branch threshold-voltage mismatch \[V\] (static, per die).
     pub dvth_p: f64,
     pub dvth_n: f64,
-    /// Derived: per-branch leakage currents [A].
+    /// Derived: per-branch leakage currents \[A\].
     pub i_p: f64,
     pub i_n: f64,
-    /// Derived: per-branch mean crossing times [s].
+    /// Derived: per-branch mean crossing times \[s\].
     pub mu_p: f64,
     pub mu_n: f64,
-    /// Derived: per-branch crossing σ [s].
+    /// Derived: per-branch crossing σ \[s\].
     pub sigma_p: f64,
     pub sigma_n: f64,
     /// Outlier probability per sample.
     pub p_outlier: f64,
-    /// Outlier mean magnitude [s].
+    /// Outlier mean magnitude \[s\].
     pub outlier_scale_s: f64,
-    /// ε normalization unit [s].
+    /// ε normalization unit \[s\].
     pub sigma_unit_s: f64,
-    /// Energy per sample [J].
+    /// Energy per sample \[J\].
     pub energy_j: f64,
-    /// Precomputed pulse-width mean μ_n − μ_p [s] (hot-path).
+    /// Precomputed pulse-width mean μ_n − μ_p \[s\] (hot-path).
     pub diff_mean_s: f64,
-    /// Precomputed pulse-width σ = √(σ_p² + σ_n²) [s] (hot-path).
+    /// Precomputed pulse-width σ = √(σ_p² + σ_n²) \[s\] (hot-path).
     pub diff_sigma_s: f64,
 }
 
@@ -100,14 +100,14 @@ impl CellParams {
 /// One GRNG output sample.
 #[derive(Clone, Copy, Debug)]
 pub struct GrngSample {
-    /// Signed time-domain value (t_n − t_p) [s]; the pulse width is its
+    /// Signed time-domain value (t_n − t_p) \[s\]; the pulse width is its
     /// magnitude, the sign selects BL_P vs BL_N steering (§III-D).
     pub signed_width_s: f64,
     /// Normalized ε = signed_width / σ_unit.
     pub eps: f64,
-    /// Conversion latency (both branches crossed) [s].
+    /// Conversion latency (both branches crossed) \[s\].
     pub latency_s: f64,
-    /// Energy consumed [J].
+    /// Energy consumed \[J\].
     pub energy_j: f64,
     /// Whether an outlier event (trap burst / DFF mis-reset) occurred.
     pub outlier: bool,
@@ -206,7 +206,7 @@ impl GrngCell {
     }
 
     /// Fast path returning only ε (no bookkeeping) — the MVM hot loop.
-    /// Delegates to [`eps_fast_step`], the shared sampling arithmetic.
+    /// Delegates to `eps_fast_step`, the shared sampling arithmetic.
     #[inline]
     pub fn eps_fast(&mut self) -> f64 {
         eps_fast_step(&self.params, &mut self.rng)

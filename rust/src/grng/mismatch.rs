@@ -15,9 +15,9 @@ use crate::util::rng::{Pcg64, Rng64};
 pub struct DieVariation {
     pub rows: usize,
     pub words: usize,
-    /// Per-cell ΔVth for the P branch [V].
+    /// Per-cell ΔVth for the P branch \[V\].
     pub dvth_p: Vec<f64>,
-    /// Per-cell ΔVth for the N branch [V].
+    /// Per-cell ΔVth for the N branch \[V\].
     pub dvth_n: Vec<f64>,
 }
 

@@ -29,18 +29,18 @@ use crate::config::GrngConfig;
 
 /// Boltzmann constant [J/K].
 pub const K_B: f64 = 1.380649e-23;
-/// Elementary charge [C].
+/// Elementary charge \[C\].
 pub const Q_E: f64 = 1.602176634e-19;
-/// Reference temperature for I_0 calibration [K] (28 °C).
+/// Reference temperature for I_0 calibration \[K\] (28 °C).
 pub const T_REF_K: f64 = 301.15;
 
-/// Thermal voltage kT/q [V].
+/// Thermal voltage kT/q \[V\].
 #[inline]
 pub fn thermal_voltage(temp_k: f64) -> f64 {
     K_B * temp_k / Q_E
 }
 
-/// Subthreshold leakage current of one discharge branch [A].
+/// Subthreshold leakage current of one discharge branch \[A\].
 ///
 /// `delta_vth` is the per-device static mismatch on the threshold voltage
 /// (Eq. 8's origin); positive `delta_vth` → less current.
@@ -51,18 +51,18 @@ pub fn leakage_current(cfg: &GrngConfig, bias_v: f64, temp_k: f64, delta_vth: f6
     cfg.i0_a * (temp_k / T_REF_K).powi(2) * exponent.exp()
 }
 
-/// Mean crossing time μ_T [s] (Eq. 6).
+/// Mean crossing time μ_T \[s\] (Eq. 6).
 pub fn mean_crossing_time(cfg: &GrngConfig, i_leak: f64) -> f64 {
     cfg.cap_f * (cfg.vdd - cfg.v_thr) / i_leak
 }
 
-/// Shot-noise crossing-time standard deviation [s] (Eq. 7, with the
+/// Shot-noise crossing-time standard deviation \[s\] (Eq. 7, with the
 /// configurable calibration scale κ).
 pub fn shot_sigma(cfg: &GrngConfig, mu_t: f64, i_leak: f64) -> f64 {
     (mu_t * Q_E / (2.0 * i_leak) * cfg.noise_scale).sqrt()
 }
 
-/// kTC-noise contribution to crossing-time σ [s]: sampled initial-voltage
+/// kTC-noise contribution to crossing-time σ \[s\]: sampled initial-voltage
 /// noise √(kT/C) divided by the ramp slope I/C.
 pub fn ktc_sigma(cfg: &GrngConfig, temp_k: f64, i_leak: f64) -> f64 {
     let sigma_v = (K_B * temp_k / cfg.cap_f).sqrt();
@@ -94,7 +94,7 @@ pub fn outlier_magnitude_scale(_cfg: &GrngConfig, _temp_k: f64) -> f64 {
     1.0
 }
 
-/// RTN/flicker contribution to crossing-time σ [s].
+/// RTN/flicker contribution to crossing-time σ \[s\].
 ///
 /// Low-frequency noise accumulates superlinearly with integration time:
 /// σ_rtn/μ_T = a(T) · (μ_T/τ_ref)^p. Fitted to Tab. I (p ≈ 0.7): at the
@@ -105,7 +105,7 @@ pub fn rtn_sigma(cfg: &GrngConfig, temp_k: f64, mu_t: f64) -> f64 {
     a * mu_t * (mu_t / cfg.rtn_tau_s).powf(cfg.rtn_exponent)
 }
 
-/// Total single-branch crossing-time σ [s]: independent contributions add
+/// Total single-branch crossing-time σ \[s\]: independent contributions add
 /// in quadrature.
 pub fn total_sigma(cfg: &GrngConfig, temp_k: f64, mu_t: f64, i_leak: f64) -> f64 {
     let s2 = shot_sigma(cfg, mu_t, i_leak).powi(2)
@@ -120,14 +120,14 @@ pub fn total_sigma(cfg: &GrngConfig, temp_k: f64, mu_t: f64, i_leak: f64) -> f64
 pub struct OperatingPoint {
     pub bias_v: f64,
     pub temp_c: f64,
-    /// Per-branch leakage current [A].
+    /// Per-branch leakage current \[A\].
     pub i_leak: f64,
-    /// Mean single-branch crossing time (≈ average latency) [s].
+    /// Mean single-branch crossing time (≈ average latency) \[s\].
     pub mu_t: f64,
-    /// Pulse-width standard deviation [s]: √2 × single-branch σ (the pulse
+    /// Pulse-width standard deviation \[s\]: √2 × single-branch σ (the pulse
     /// is the *difference* of two independent crossings).
     pub pulse_sigma: f64,
-    /// Energy per sample [J].
+    /// Energy per sample \[J\].
     pub energy_j: f64,
 }
 
@@ -148,7 +148,7 @@ pub fn operating_point(cfg: &GrngConfig, bias_v: f64, temp_c: f64) -> OperatingP
     }
 }
 
-/// Energy per GRNG sample [J] (§III-C.2):
+/// Energy per GRNG sample \[J\] (§III-C.2):
 /// - recharging both fringe caps: 2·C·V_DD²
 /// - inverter short-circuit while V_C crosses V_Thr: ∝ C/I_L (slower ramp
 ///   → longer conduction window) — the dominant term, mitigated but not

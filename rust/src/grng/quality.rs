@@ -11,11 +11,11 @@ use crate::util::stats::{self, Summary};
 #[derive(Clone, Debug)]
 pub struct QualityReport {
     pub n: usize,
-    /// Pulse-width (signed) mean [s] — ≈0 for a calibrated cell.
+    /// Pulse-width (signed) mean \[s\] — ≈0 for a calibrated cell.
     pub mean_width_s: f64,
-    /// Pulse-width standard deviation [s] (paper Fig. 8 / Tab. I "T_D SD").
+    /// Pulse-width standard deviation \[s\] (paper Fig. 8 / Tab. I "T_D SD").
     pub width_sd_s: f64,
-    /// Mean conversion latency [s].
+    /// Mean conversion latency \[s\].
     pub mean_latency_s: f64,
     /// Q–Q normal-probability-plot r-value (paper's normality metric).
     pub qq_r: f64,
@@ -28,7 +28,7 @@ pub struct QualityReport {
     /// Lag-1 autocorrelation of the ε sequence (should be ≈0: each
     /// conversion is physically independent).
     pub lag1_autocorr: f64,
-    /// Mean energy per sample [J].
+    /// Mean energy per sample \[J\].
     pub mean_energy_j: f64,
     /// Fraction of outlier samples.
     pub outlier_frac: f64,

@@ -13,6 +13,11 @@
 //! - **L1 (`python/compile/kernels/`)** — Pallas kernels for the decomposed
 //!   Bayesian MVM and the in-kernel counter-based GRNG.
 //!
+//! Serving callers should start at [`client`] — the versioned API v1
+//! surface (builder, typed tickets, one error type) that the CLI,
+//! examples, and benches all route through; DESIGN.md §7 documents the
+//! migration from the pre-v1 constructors.
+//!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
@@ -30,4 +35,5 @@ pub mod data;
 pub mod nn;
 pub mod runtime;
 pub mod coordinator;
+pub mod client;
 pub mod experiments;

@@ -4,8 +4,7 @@
 //! operational commands (`serve`, `infer`, `calibrate`).
 
 use bnn_cim::cim::{calibrate, CimTile};
-use bnn_cim::config::{Backend, Config};
-use bnn_cim::coordinator::Coordinator;
+use bnn_cim::client::{Backend, Config, Coordinator, Infer};
 use bnn_cim::data::SyntheticPerson;
 use bnn_cim::experiments::{self, fig10_11::Arm};
 use bnn_cim::nn::Model;
@@ -108,10 +107,20 @@ fn commands() -> Vec<Command> {
         },
         Command {
             name: "infer",
-            about: "classify one synthetic sample via the PJRT coordinator",
+            about: "classify one synthetic sample via the serving coordinator",
             opts: vec![
                 opt("index", "dataset index to classify", Some("0")),
                 opt("mc", "MC samples", Some("32")),
+                opt(
+                    "defer-threshold",
+                    "per-request deferral threshold [nats] (default: model.defer_threshold)",
+                    None,
+                ),
+                opt(
+                    "backend",
+                    "engine backend: sim | cim | pjrt (default: config server.backend)",
+                    None,
+                ),
             ],
         },
         Command {
@@ -264,18 +273,26 @@ fn cmd_uncertainty(args: &bnn_cim::util::cli::Args) -> CmdResult {
 }
 
 fn cmd_infer(args: &bnn_cim::util::cli::Args) -> CmdResult {
-    let cfg = load_config(args)?;
+    let mut cfg = load_config(args)?;
     let index = args.get_u64("index", 0)?;
     let mc = args.get_usize("mc", 32)?;
+    if let Some(b) = args.get("backend") {
+        cfg.server.backend = Backend::parse(b)?;
+    }
     let gen = SyntheticPerson::new(cfg.model.image_side, 123);
     let sample = gen.sample(index);
-    let coord = Coordinator::start(cfg)?;
-    let resp = coord
-        .infer_blocking(sample.pixels, mc)
-        .map_err(|e| format!("inference rejected: {e}"))?;
+    let coord = Coordinator::builder(cfg).start()?;
+    let mut req = Infer::new(sample.pixels).mc_samples(mc);
+    if let Some(h) = args.get("defer-threshold") {
+        req = req.defer_threshold(h.parse::<f64>().map_err(|e| format!("defer-threshold: {e}"))?);
+    }
+    let resp = coord.infer(req)?;
+    let u = &resp.uncertainty;
     println!(
         "sample {index}: true={} pred={} probs={:?}\n\
-         entropy={:.3} nats (MI {:.3}) | deferred={} | latency={:.2} ms",
+         entropy={:.3} nats = aleatoric {:.3} + epistemic {:.3} | \
+         threshold={:.3} → deferred={}\n\
+         latency={:.2} ms",
         sample.label,
         resp.pred.class,
         resp.pred
@@ -283,9 +300,11 @@ fn cmd_infer(args: &bnn_cim::util::cli::Args) -> CmdResult {
             .iter()
             .map(|p| (p * 1000.0).round() / 1000.0)
             .collect::<Vec<_>>(),
-        resp.pred.entropy,
-        resp.pred.mutual_information,
-        resp.deferred,
+        u.entropy,
+        u.aleatoric,
+        u.epistemic,
+        u.threshold,
+        u.deferred,
         resp.latency.as_secs_f64() * 1e3
     );
     coord.shutdown();
@@ -305,7 +324,7 @@ fn cmd_serve(args: &bnn_cim::util::cli::Args) -> CmdResult {
         eprintln!("warning: --sim is deprecated; use --backend sim");
         cfg.server.backend = Backend::Sim;
     }
-    let coord = Coordinator::start_backend(cfg.clone())?;
+    let coord = Coordinator::builder(cfg.clone()).start()?;
     println!(
         "serving on {} shard worker(s), backend = {}",
         cfg.server.workers,
@@ -314,20 +333,20 @@ fn cmd_serve(args: &bnn_cim::util::cli::Args) -> CmdResult {
     let gen = SyntheticPerson::new(cfg.model.image_side, 321);
     let period = Duration::from_secs_f64(1.0 / rate.max(0.1));
     let t0 = Instant::now();
-    let mut receivers = Vec::new();
+    let mut tickets = Vec::new();
     let mut sent = 0u64;
     while t0.elapsed() < duration {
         let s = gen.sample(sent);
-        match coord.submit(s.pixels, 0) {
-            Ok(rx) => receivers.push(rx),
+        match coord.submit(Infer::new(s.pixels)) {
+            Ok(ticket) => tickets.push(ticket),
             Err(_) => { /* backpressure: counted in metrics */ }
         }
         sent += 1;
         std::thread::sleep(period);
     }
     let mut ok = 0;
-    for rx in receivers {
-        if rx.recv_timeout(Duration::from_secs(30)).is_ok() {
+    for ticket in tickets {
+        if ticket.wait_timeout(Duration::from_secs(30)).is_ok() {
             ok += 1;
         }
     }

@@ -22,7 +22,7 @@
 //! bit-identically.
 //!
 //! Energy: every MVM deposits joules into the tiles' `EnergyLedger`s;
-//! [`CimEngine::energy_report`] exposes the cumulative totals (fJ/Sample,
+//! [`InferenceEngine::energy_report`] exposes the cumulative totals (fJ/Sample,
 //! J/Op numerators) without ever resetting them. Bring-up costs
 //! (programming + calibration) are cleared at construction so the report
 //! meters serving traffic only.

@@ -2,7 +2,7 @@
 //!
 //! Three backends implement [`InferenceEngine`]:
 //!
-//! - [`Engine`] (feature `pjrt`) — the real PJRT runtime: loads
+//! - `Engine` (feature `pjrt`) — the real PJRT runtime: loads
 //!   AOT-compiled HLO-text artifacts and executes them on the request
 //!   path (Python never runs at serving time). Pipeline:
 //!   `HloModuleProto::from_text_file` → `XlaComputation` →
@@ -22,7 +22,9 @@
 //!
 //! Engines are *not* required to be `Send`: the coordinator constructs
 //! one engine inside each shard-worker thread (PJRT handles are not
-//! `Send`-safe by contract) and they never cross threads.
+//! `Send`-safe by contract) and they never cross threads. Which backend
+//! boots is a client-surface decision: `cfg.server.backend` or
+//! `client::CoordinatorBuilder::backend`.
 
 mod artifact;
 mod cim_engine;
@@ -51,14 +53,25 @@ pub enum EpsilonMode {
     InWord,
 }
 
+impl EpsilonMode {
+    /// Short tag for logs and error messages (also the vocabulary of
+    /// `client::CoordinatorBuilder::epsilon`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EpsilonMode::External => "external",
+            EpsilonMode::InWord => "in-word",
+        }
+    }
+}
+
 /// Cumulative hardware-energy counters for engines that model the chip.
 /// All values are absolute totals since engine construction (snapshots of
 /// them must therefore never reset anything — see `coordinator::metrics`).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EngineEnergyReport {
-    /// Total tile energy deposited so far [J].
+    /// Total tile energy deposited so far \[J\].
     pub total_j: f64,
-    /// GRNG component of `total_j` [J] (the fJ/Sample numerator).
+    /// GRNG component of `total_j` \[J\] (the fJ/Sample numerator).
     pub grng_j: f64,
     /// ε samples drawn by the in-word banks so far.
     pub grng_samples: u64,

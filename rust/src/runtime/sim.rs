@@ -119,7 +119,7 @@ impl SimEngine {
 
     /// Engine matching a serving [`Config`]: the artifact batch is the
     /// server's `max_batch` and input/class shapes come from the model
-    /// config. All shards share [`SIM_WEIGHT_SEED`].
+    /// config. All shards share `SIM_WEIGHT_SEED`.
     pub fn from_config(cfg: &Config) -> Self {
         Self::new(
             cfg.server.max_batch.max(1),

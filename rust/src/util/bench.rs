@@ -92,7 +92,7 @@ impl Suite {
         self.bench_with_elements(name, None, &mut f)
     }
 
-    /// Like [`bench`], reporting a throughput based on `elements` per iter.
+    /// Like [`Suite::bench`], reporting a throughput based on `elements` per iter.
     pub fn bench_throughput<F: FnMut()>(
         &mut self,
         name: &str,
@@ -282,27 +282,26 @@ impl ServingSweepPoint {
 /// coordinator pool on `cfg.server.backend` and return the measured sweep
 /// point. The single measurement harness behind both writers of
 /// `BENCH_serving.json` (`benches/sharded_serving.rs` and
-/// `tests/backend_smoke.rs`): engine bring-up happens inside
-/// `start_backend`, excluded from the timed window; the queue is sized so
-/// the whole load pre-queues and throughput measures the pool, not the
-/// client.
+/// `tests/backend_smoke.rs`): engine bring-up happens inside the builder's
+/// `start`, excluded from the timed window; the queue is sized so the
+/// whole load pre-queues (`submit_many` preserves batch fusion) and
+/// throughput measures the pool, not the client.
 pub fn measure_serving_sweep(cfg: &crate::config::Config, n_req: usize) -> ServingSweepPoint {
-    use crate::coordinator::Coordinator;
+    use crate::client::{Coordinator, Infer};
     use crate::data::SyntheticPerson;
 
     let mut cfg = cfg.clone();
     cfg.server.queue_capacity = cfg.server.queue_capacity.max(n_req + 8);
-    let coord = Coordinator::start_backend(cfg.clone()).expect("boot backend");
+    let coord = Coordinator::builder(cfg.clone()).start().expect("boot backend");
     let gen = SyntheticPerson::new(cfg.model.image_side, 7);
     // Pre-generate so the dataset is not on the measured path.
     let imgs: Vec<Vec<f32>> = (0..n_req as u64).map(|i| gen.sample(i).pixels).collect();
     let t0 = Instant::now();
-    let receivers: Vec<_> = imgs
-        .into_iter()
-        .map(|px| coord.submit(px, 0).expect("queue sized for full load"))
-        .collect();
-    for rx in receivers {
-        rx.recv_timeout(Duration::from_secs(600)).expect("response");
+    let tickets = coord
+        .submit_many(imgs.into_iter().map(Infer::new))
+        .expect("queue sized for full load");
+    for ticket in tickets {
+        ticket.wait_timeout(Duration::from_secs(600)).expect("response");
     }
     let dt = t0.elapsed().as_secs_f64();
     let m = coord.metrics();

@@ -1,0 +1,232 @@
+//! Compile-time snapshot of the client API v1 surface (ISSUE 5).
+//!
+//! Two layers of protection:
+//!
+//! 1. `v1_*` tests pin every v1 export by name *and* signature through
+//!    function-pointer coercions and struct destructuring — an
+//!    accidental breaking change (renamed method, moved field, changed
+//!    error type) stops this file from compiling.
+//! 2. The shim-equivalence tests pin the `#[deprecated]` pre-v1
+//!    constructors bit-identical to their builder replacements, so the
+//!    deprecation window cannot drift. They are the only remaining
+//!    callers of the old constructors.
+#![allow(deprecated)]
+
+use bnn_cim::client::{
+    Backend, Config, Coordinator, CoordinatorBuilder, EngineFactory, EpsilonMode, Infer,
+    InferResponse, McPrediction, MetricsSnapshot, ServeError, ShardSnapshot, SourceFactory,
+    Ticket, UncertaintyReport,
+};
+use bnn_cim::coordinator::GrngBankSource;
+use bnn_cim::data::SyntheticPerson;
+use bnn_cim::runtime::{InferenceEngine, SimEngine};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Every v1 entry point, frozen by signature.
+#[test]
+fn v1_signatures_compile() {
+    let _builder: fn(Config) -> CoordinatorBuilder = Coordinator::builder;
+    let _backend: fn(CoordinatorBuilder, Backend) -> CoordinatorBuilder =
+        CoordinatorBuilder::backend;
+    let _workers: fn(CoordinatorBuilder, usize) -> CoordinatorBuilder =
+        CoordinatorBuilder::workers;
+    let _mc_workers: fn(CoordinatorBuilder, usize) -> CoordinatorBuilder =
+        CoordinatorBuilder::mc_workers;
+    let _epsilon: fn(CoordinatorBuilder, EpsilonMode) -> CoordinatorBuilder =
+        CoordinatorBuilder::epsilon;
+    let _source: fn(CoordinatorBuilder, SourceFactory) -> CoordinatorBuilder =
+        CoordinatorBuilder::source_factory;
+    let _engine: fn(CoordinatorBuilder, EngineFactory) -> CoordinatorBuilder =
+        CoordinatorBuilder::engine_factory;
+    let _start: fn(CoordinatorBuilder) -> Result<Coordinator, ServeError> =
+        CoordinatorBuilder::start;
+
+    let _submit: fn(&Coordinator, Infer) -> Result<Ticket, ServeError> = Coordinator::submit;
+    let _infer: fn(&Coordinator, Infer) -> Result<InferResponse, ServeError> =
+        Coordinator::infer;
+    let _metrics: fn(&Coordinator) -> MetricsSnapshot = Coordinator::metrics;
+    let _pool_size: fn(&Coordinator) -> usize = Coordinator::workers;
+    let _shutdown: fn(Coordinator) = Coordinator::shutdown;
+    // `submit_many` is generic over its iterator; pin the monomorphic
+    // Vec<Infer> shape.
+    let _submit_many = |c: &Coordinator, v: Vec<Infer>| -> Result<Vec<Ticket>, ServeError> {
+        c.submit_many(v)
+    };
+
+    let _new: fn(Vec<f32>) -> Infer = Infer::new;
+    let _mc: fn(Infer, usize) -> Infer = Infer::mc_samples;
+    let _thr: fn(Infer, f64) -> Infer = Infer::defer_threshold;
+
+    let _wait: fn(Ticket) -> Result<InferResponse, ServeError> = Ticket::wait;
+    let _wait_timeout: fn(&Ticket, Duration) -> Result<InferResponse, ServeError> =
+        Ticket::wait_timeout;
+    let _try_wait: fn(&Ticket) -> Result<Option<InferResponse>, ServeError> = Ticket::try_wait;
+}
+
+/// The v1 data types, frozen structurally: exhaustive destructuring
+/// breaks this test when a public field is renamed, retyped, or removed.
+#[test]
+fn v1_data_types_are_structurally_pinned() {
+    fn report_fields(u: UncertaintyReport) -> (f64, f64, f64, f64, bool) {
+        let UncertaintyReport {
+            entropy,
+            aleatoric,
+            epistemic,
+            threshold,
+            deferred,
+        } = u;
+        (entropy, aleatoric, epistemic, threshold, deferred)
+    }
+    fn response_fields(
+        r: InferResponse,
+    ) -> (u64, McPrediction, UncertaintyReport, Duration, u64, f64) {
+        let InferResponse {
+            id,
+            pred,
+            uncertainty,
+            latency,
+            batch_id,
+            energy_j,
+        } = r;
+        (id, pred, uncertainty, latency, batch_id, energy_j)
+    }
+    let _ = report_fields as fn(_) -> _;
+    let _ = response_fields as fn(_) -> _;
+    let _deferred: fn(&InferResponse) -> bool = InferResponse::deferred;
+    let _shard_orphans = |s: &ShardSnapshot| s.requests_orphaned;
+    let _global_orphans = |m: &MetricsSnapshot| m.requests_orphaned;
+
+    // ServeError: a std error with every v1 failure mode nameable.
+    fn assert_error<E: std::error::Error + Send + Sync + 'static>() {}
+    assert_error::<ServeError>();
+    let _variants = [
+        ServeError::QueueFull,
+        ServeError::WrongShape { expected: 0, got: 0 },
+        ServeError::McSamplesTooLarge { max: 0, got: 0 },
+        ServeError::InvalidDeferThreshold { got: 0.0 },
+        ServeError::ShuttingDown,
+        ServeError::Timeout,
+        ServeError::Disconnected,
+        ServeError::Config(String::new()),
+        ServeError::Startup(String::new()),
+    ];
+}
+
+fn sim_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.model.mc_samples = 4;
+    cfg.server.batch_deadline_ms = 1.0;
+    cfg
+}
+
+/// Serve a short serial workload and collect the probability vectors.
+fn serve(coord: Coordinator) -> Vec<Vec<f64>> {
+    let gen = SyntheticPerson::new(32, 1234);
+    let out: Vec<Vec<f64>> = (0..4)
+        .map(|i| {
+            coord
+                .infer(Infer::new(gen.sample(i).pixels))
+                .unwrap()
+                .pred
+                .probs
+        })
+        .collect();
+    coord.shutdown();
+    out
+}
+
+#[test]
+fn deprecated_sim_constructors_are_builder_shims() {
+    let via_builder = serve(
+        Coordinator::builder(sim_cfg())
+            .backend(Backend::Sim)
+            .start()
+            .unwrap(),
+    );
+    let via_start_sim = serve(Coordinator::start_sim(sim_cfg()).unwrap());
+    assert_eq!(via_builder, via_start_sim, "start_sim must shim the builder");
+
+    let mut cfg = sim_cfg();
+    cfg.server.backend = Backend::Sim;
+    let via_start_backend = serve(Coordinator::start_backend(cfg).unwrap());
+    assert_eq!(via_builder, via_start_backend, "start_backend must shim the builder");
+
+    // start_with: explicit engine factory + external ε supply.
+    let cfg = sim_cfg();
+    let engine_cfg = cfg.clone();
+    let factory: EngineFactory = Arc::new(move |_shard| {
+        Ok(Box::new(SimEngine::from_config(&engine_cfg)) as Box<dyn InferenceEngine>)
+    });
+    let via_start_with = serve(
+        Coordinator::start_with(
+            cfg.clone(),
+            factory,
+            bnn_cim::coordinator::EpsilonSupply::External(GrngBankSource::shard_factory(
+                &cfg.chip,
+            )),
+        )
+        .unwrap(),
+    );
+    assert_eq!(via_builder, via_start_with, "start_with must shim the builder");
+}
+
+#[test]
+fn deprecated_cim_constructor_is_a_builder_shim() {
+    // Small tiles keep bring-up calibration cheap in debug builds.
+    let mk = || {
+        let mut cfg = sim_cfg();
+        cfg.chip.tile.rows = 16;
+        cfg.chip.tile.words_per_row = 4;
+        cfg
+    };
+    let via_builder = serve(
+        Coordinator::builder(mk())
+            .backend(Backend::Cim)
+            .start()
+            .unwrap(),
+    );
+    let via_start_cim = serve(Coordinator::start_cim(mk()).unwrap());
+    assert_eq!(via_builder, via_start_cim, "start_cim must shim the builder");
+}
+
+#[test]
+fn deprecated_infer_blocking_is_an_infer_shim() {
+    let gen = SyntheticPerson::new(32, 9);
+    let old = {
+        let coord = Coordinator::builder(sim_cfg())
+            .backend(Backend::Sim)
+            .start()
+            .unwrap();
+        let resp = coord.infer_blocking(gen.sample(0).pixels, 3).unwrap();
+        coord.shutdown();
+        resp.pred.probs
+    };
+    let new = {
+        let coord = Coordinator::builder(sim_cfg())
+            .backend(Backend::Sim)
+            .start()
+            .unwrap();
+        let resp = coord
+            .infer(Infer::new(gen.sample(0).pixels).mc_samples(3))
+            .unwrap();
+        coord.shutdown();
+        resp.pred.probs
+    };
+    assert_eq!(old, new, "infer_blocking must shim infer(Infer…)");
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn pjrt_constructors_error_cleanly_without_the_feature() {
+    use bnn_cim::coordinator::PhiloxSource;
+    // Builder and shims agree: booting the pjrt backend without the
+    // feature is a startup error, not a panic.
+    let err = Coordinator::builder(sim_cfg())
+        .backend(Backend::Pjrt)
+        .start()
+        .unwrap_err();
+    assert!(matches!(err, ServeError::Startup(_)));
+    assert!(Coordinator::start(sim_cfg()).is_err());
+    assert!(Coordinator::start_with_source(sim_cfg(), PhiloxSource::shard_factory(1)).is_err());
+}

@@ -9,8 +9,7 @@
 //! `cargo bench --bench sharded_serving` overwrites it with calibrated
 //! release-profile numbers.
 
-use bnn_cim::config::{Backend, Config};
-use bnn_cim::coordinator::Coordinator;
+use bnn_cim::client::{Backend, Config, Coordinator, Infer};
 use bnn_cim::data::SyntheticPerson;
 use bnn_cim::util::bench::{
     is_calibrated_report, measure_serving_sweep, repo_root_artifact, Suite,
@@ -36,16 +35,17 @@ fn smoke_cfg(backend: Backend) -> Config {
     cfg
 }
 
-fn serve_small_batch(backend: Backend) -> bnn_cim::coordinator::MetricsSnapshot {
+fn serve_small_batch(backend: Backend) -> bnn_cim::client::MetricsSnapshot {
     let cfg = smoke_cfg(backend);
-    let coord = Coordinator::start_backend(cfg.clone())
+    let coord = Coordinator::builder(cfg.clone())
+        .start()
         .unwrap_or_else(|e| panic!("boot {} backend: {e}", backend.name()));
     let gen = SyntheticPerson::new(cfg.model.image_side, 99);
-    let receivers: Vec<_> = (0..8)
-        .map(|i| coord.submit(gen.sample(i).pixels, 0).unwrap())
-        .collect();
-    for rx in receivers {
-        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    let tickets = coord
+        .submit_many((0..8).map(|i| Infer::new(gen.sample(i).pixels)))
+        .unwrap();
+    for ticket in tickets {
+        let resp = ticket.wait_timeout(Duration::from_secs(120)).unwrap();
         assert_eq!(resp.pred.probs.len(), cfg.model.classes);
         assert!((resp.pred.probs.iter().sum::<f64>() - 1.0).abs() < 1e-5);
     }

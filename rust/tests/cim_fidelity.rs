@@ -13,13 +13,15 @@
 //! 3. Serving through `--backend cim` surfaces nonzero per-shard energy
 //!    (fJ/Sample) in `MetricsSnapshot`, and snapshot reads never reset
 //!    the counters.
+//! 4. The client API v1 determinism contract: `submit_many` replays
+//!    bit-identical to a sequential `submit` loop for the same fixed
+//!    triple.
 //!
 //! Everything runs artifact-free on small tiles so bring-up calibration
 //! stays cheap in debug builds.
 
 use bnn_cim::cim::MvmOptions;
-use bnn_cim::config::{Backend, Config};
-use bnn_cim::coordinator::Coordinator;
+use bnn_cim::client::{Backend, Config, Coordinator, Infer};
 use bnn_cim::data::SyntheticPerson;
 use bnn_cim::runtime::CimEngine;
 use bnn_cim::util::rng::{Pcg64, Rng64};
@@ -111,15 +113,17 @@ fn cim_backend_replays_bitwise_for_fixed_die_seed_and_workers() {
     // replay is bit-identical for a fixed (die_seed, workers, mc_workers)
     // even though each shard's head samples run on 3 parallel replicas.
     let run = || {
-        let mut cfg = small_cfg();
-        cfg.server.backend = Backend::Cim;
-        cfg.server.workers = 2;
-        cfg.server.mc_workers = 3;
-        let coord = Coordinator::start_backend(cfg.clone()).unwrap();
+        let cfg = small_cfg();
+        let coord = Coordinator::builder(cfg.clone())
+            .backend(Backend::Cim)
+            .workers(2)
+            .mc_workers(3)
+            .start()
+            .unwrap();
         let gen = SyntheticPerson::new(cfg.model.image_side, 44);
         let mut out = Vec::new();
         for i in 0..6 {
-            let resp = coord.infer_blocking(gen.sample(i).pixels, 0).unwrap();
+            let resp = coord.infer(Infer::new(gen.sample(i).pixels)).unwrap();
             out.push(resp.pred.probs);
         }
         coord.shutdown();
@@ -166,15 +170,17 @@ fn cim_backend_replays_bitwise_through_the_batched_mc_path() {
     // Replay must stay bit-identical for the fixed
     // (die_seed, workers, mc_workers) triple.
     let run = || {
-        let mut cfg = full_tile_cfg();
-        cfg.server.backend = Backend::Cim;
-        cfg.server.workers = 2;
-        cfg.server.mc_workers = 1;
-        let coord = Coordinator::start_backend(cfg.clone()).unwrap();
+        let cfg = full_tile_cfg();
+        let coord = Coordinator::builder(cfg.clone())
+            .backend(Backend::Cim)
+            .workers(2)
+            .mc_workers(1)
+            .start()
+            .unwrap();
         let gen = SyntheticPerson::new(cfg.model.image_side, 91);
         let mut out = Vec::new();
         for i in 0..6 {
-            let resp = coord.infer_blocking(gen.sample(i).pixels, 0).unwrap();
+            let resp = coord.infer(Infer::new(gen.sample(i).pixels)).unwrap();
             out.push(resp.pred.probs);
         }
         coord.shutdown();
@@ -187,15 +193,71 @@ fn cim_backend_replays_bitwise_through_the_batched_mc_path() {
     );
 }
 
+/// `submit_many` is defined as exactly a loop of `submit`: same admission
+/// order, same queue, same batch fusion. Pin the contract bit-exactly on
+/// the cim backend for a fixed `(die_seed, workers, mc_workers)` triple.
+/// Batch assembly is made deterministic by sizing `max_batch` to the
+/// workload and giving the dispatcher a generous deadline, so each arm
+/// fuses all requests into one batch regardless of timing.
+#[test]
+fn submit_many_replays_bit_identical_to_sequential_submit() {
+    let n: usize = 4;
+    let mk = |n: usize| {
+        let mut cfg = small_cfg();
+        cfg.server.backend = Backend::Cim;
+        cfg.server.workers = 2;
+        cfg.server.mc_workers = 2;
+        cfg.server.max_batch = n;
+        cfg.server.batch_deadline_ms = 2000.0;
+        cfg
+    };
+    let gen = SyntheticPerson::new(mk(n).model.image_side, 44);
+    let workload = |gen: &SyntheticPerson| -> Vec<Infer> {
+        (0..n as u64)
+            .map(|i| Infer::new(gen.sample(i).pixels).mc_samples(3))
+            .collect()
+    };
+
+    let via_many = {
+        let coord = Coordinator::builder(mk(n)).start().unwrap();
+        let tickets = coord.submit_many(workload(&gen)).unwrap();
+        let out: Vec<Vec<f64>> = tickets
+            .into_iter()
+            .map(|t| t.wait().unwrap().pred.probs)
+            .collect();
+        coord.shutdown();
+        out
+    };
+    let via_sequential = {
+        let coord = Coordinator::builder(mk(n)).start().unwrap();
+        let tickets: Vec<_> = workload(&gen)
+            .into_iter()
+            .map(|req| coord.submit(req).unwrap())
+            .collect();
+        let out: Vec<Vec<f64>> = tickets
+            .into_iter()
+            .map(|t| t.wait().unwrap().pred.probs)
+            .collect();
+        coord.shutdown();
+        out
+    };
+    assert_eq!(
+        via_many, via_sequential,
+        "submit_many must be bit-identical to a sequential submit loop"
+    );
+}
+
 #[test]
 fn cim_backend_serves_with_nonzero_per_shard_energy() {
-    let mut cfg = small_cfg();
-    cfg.server.backend = Backend::Cim;
-    cfg.server.workers = 2;
-    let coord = Coordinator::start_backend(cfg.clone()).unwrap();
+    let cfg = small_cfg();
+    let coord = Coordinator::builder(cfg.clone())
+        .backend(Backend::Cim)
+        .workers(2)
+        .start()
+        .unwrap();
     let gen = SyntheticPerson::new(cfg.model.image_side, 7);
     for i in 0..6 {
-        let resp = coord.infer_blocking(gen.sample(i).pixels, 0).unwrap();
+        let resp = coord.infer(Infer::new(gen.sample(i).pixels)).unwrap();
         assert_eq!(resp.pred.probs.len(), cfg.model.classes);
         assert!(
             resp.energy_j > 0.0,

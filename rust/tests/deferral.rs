@@ -1,0 +1,94 @@
+//! Coordinator-level deferral-path coverage (ISSUE 5): the Fig. 1
+//! defer-to-human loop, end to end through the serving surface.
+//!
+//! Pins three things no other test exercised:
+//! 1. The policy identity — `deferred == (entropy > threshold)`, strict
+//!    at the boundary — judged *inside* the serving loop and surfaced in
+//!    the response's `UncertaintyReport`.
+//! 2. The per-request `defer_threshold` override beating the server-wide
+//!    `model.defer_threshold` (one fleet, per-caller risk tolerance).
+//! 3. The decomposition identity on served responses:
+//!    `epistemic == (entropy − aleatoric).max(0)`.
+//!
+//! Everything runs on the deterministic `SimEngine` (fixed `die_seed`,
+//! one worker, serial submits), so replayed requests land bit-identical
+//! entropies — the boundary test relies on that.
+
+use bnn_cim::client::{Backend, Config, Coordinator, Infer};
+use bnn_cim::data::SyntheticPerson;
+
+fn sim_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.model.mc_samples = 8;
+    cfg.server.batch_deadline_ms = 1.0;
+    cfg
+}
+
+fn pixels() -> Vec<f32> {
+    SyntheticPerson::new(32, 71).sample(3).pixels
+}
+
+/// One blocking request on a fresh single-worker sim pool; the fixed
+/// seeds make repeated calls bit-identical.
+fn infer_once(req: Infer) -> bnn_cim::client::InferResponse {
+    let coord = Coordinator::builder(sim_cfg())
+        .backend(Backend::Sim)
+        .start()
+        .unwrap();
+    let resp = coord.infer(req).unwrap();
+    coord.shutdown();
+    resp
+}
+
+#[test]
+fn report_carries_the_server_default_threshold_and_the_identities() {
+    let cfg = sim_cfg();
+    let resp = infer_once(Infer::new(pixels()));
+    let u = &resp.uncertainty;
+    // Threshold used = the server default (no override given).
+    assert_eq!(u.threshold, cfg.model.defer_threshold);
+    // Policy identity, as served.
+    assert_eq!(u.deferred, u.entropy > u.threshold);
+    assert_eq!(resp.deferred(), u.deferred);
+    // The report mirrors the prediction's decomposition…
+    assert_eq!(u.entropy, resp.pred.entropy);
+    assert_eq!(u.aleatoric, resp.pred.expected_entropy);
+    assert_eq!(u.epistemic, resp.pred.mutual_information);
+    // …and the decomposition identity holds, clamped at zero.
+    assert_eq!(u.epistemic, (u.entropy - u.aleatoric).max(0.0));
+    assert!(u.epistemic >= 0.0);
+    // MC over a stochastic head never collapses to a point mass.
+    assert!(u.entropy > 0.0, "sim-engine MC entropy must be positive");
+}
+
+#[test]
+fn per_request_override_beats_the_server_default() {
+    // Max-lax caller: nothing defers at the top of the valid range.
+    let lax = infer_once(Infer::new(pixels()).defer_threshold(10.0));
+    assert_eq!(lax.uncertainty.threshold, 10.0);
+    assert!(!lax.deferred());
+    // Zero-tolerance caller: any positive entropy defers.
+    let strict = infer_once(Infer::new(pixels()).defer_threshold(0.0));
+    assert_eq!(strict.uncertainty.threshold, 0.0);
+    assert!(strict.uncertainty.entropy > 0.0);
+    assert!(strict.deferred(), "entropy > 0 must defer at threshold 0");
+    // Same die, same request: only the judgment differed.
+    assert_eq!(lax.uncertainty.entropy, strict.uncertainty.entropy);
+    assert_eq!(lax.pred.probs, strict.pred.probs);
+}
+
+#[test]
+fn threshold_boundary_is_strict_end_to_end() {
+    // Probe the entropy this exact request produces…
+    let probe = infer_once(Infer::new(pixels()));
+    let h = probe.uncertainty.entropy;
+    assert!(h > 0.0 && h < 10.0, "probe entropy {h} outside testable range");
+    // …then replay with the bar at exactly that entropy: kept (strict >).
+    let at = infer_once(Infer::new(pixels()).defer_threshold(h));
+    assert_eq!(at.uncertainty.entropy, h, "fixed seeds must replay bitwise");
+    assert!(!at.deferred(), "entropy == threshold must NOT defer");
+    // One float step below the entropy: deferred.
+    let below = f64::from_bits(h.to_bits() - 1);
+    let just_under = infer_once(Infer::new(pixels()).defer_threshold(below));
+    assert!(just_under.deferred(), "entropy > threshold by 1 ulp must defer");
+}

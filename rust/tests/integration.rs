@@ -4,8 +4,7 @@
 //! pipeline); they skip gracefully when artifacts are absent so
 //! `cargo test` stays green on a fresh checkout.
 
-use bnn_cim::config::Config;
-use bnn_cim::coordinator::Coordinator;
+use bnn_cim::client::{Backend, Config, Coordinator, Infer};
 use bnn_cim::data::SyntheticPerson;
 use bnn_cim::nn::Model;
 use bnn_cim::util::stats::pearson;
@@ -57,7 +56,7 @@ fn pjrt_features_match_rust_native_layers() {
 
 /// Predictions through the coordinator with a deterministic ε source are
 /// reproducible end to end (batching, padding, MC loop included).
-/// Needs the PJRT engine: `start_with_source` uses the default backend.
+/// Needs the PJRT engine behind the custom ε source factory.
 #[cfg(feature = "pjrt")]
 #[test]
 fn coordinator_deterministic_with_philox_source() {
@@ -69,19 +68,22 @@ fn coordinator_deterministic_with_philox_source() {
     let run = || {
         let mut cfg = Config::default();
         cfg.model.mc_samples = 6;
-        let coord =
-            Coordinator::start_with_source(cfg, PhiloxSource::shard_factory(7)).unwrap();
+        let coord = Coordinator::builder(cfg)
+            .backend(Backend::Pjrt)
+            .source_factory(PhiloxSource::shard_factory(7))
+            .start()
+            .unwrap();
         let gen = SyntheticPerson::new(32, 3);
         let mut probs = Vec::new();
         for i in 0..6 {
-            let r = coord.infer_blocking(gen.sample(i).pixels, 0).unwrap();
+            let r = coord.infer(Infer::new(gen.sample(i).pixels)).unwrap();
             probs.push(r.pred.probs.clone());
         }
         coord.shutdown();
         probs
     };
     // NOTE: identical results require identical batching; serial
-    // infer_blocking guarantees one request per batch on both runs.
+    // blocking `infer` guarantees one request per batch on both runs.
     let a = run();
     let b = run();
     for (x, y) in a.iter().zip(b.iter()) {
@@ -158,22 +160,56 @@ fn coordinator_backpressure_rejects_cleanly() {
     cfg.server.queue_capacity = 2;
     cfg.model.mc_samples = 2;
     cfg.server.batch_deadline_ms = 50.0;
-    let coord = Coordinator::start_sim(cfg).unwrap();
+    let coord = Coordinator::builder(cfg)
+        .backend(Backend::Sim)
+        .start()
+        .unwrap();
     let gen = SyntheticPerson::new(32, 23);
     let mut accepted = Vec::new();
     let mut rejected = 0;
     for i in 0..64 {
-        match coord.submit(gen.sample(i).pixels, 0) {
-            Ok(rx) => accepted.push(rx),
+        match coord.submit(Infer::new(gen.sample(i).pixels)) {
+            Ok(ticket) => accepted.push(ticket),
             Err(_) => rejected += 1,
         }
     }
     // Everything accepted must complete.
-    for rx in accepted {
-        rx.recv_timeout(std::time::Duration::from_secs(60)).unwrap();
+    for ticket in accepted {
+        ticket
+            .wait_timeout(std::time::Duration::from_secs(60))
+            .unwrap();
     }
     let m = coord.metrics();
     assert_eq!(m.requests_total + m.requests_rejected, 64);
     assert_eq!(m.requests_rejected, rejected);
+    coord.shutdown();
+}
+
+/// A dropped [`bnn_cim::client::Ticket`] (or a timed-out blocking call)
+/// leaves the shard worker replying into a dead channel. The worker must
+/// survive, and the served-but-undeliverable response must surface as
+/// `requests_orphaned` (per-shard and globally) instead of vanishing.
+#[test]
+fn dropped_ticket_counts_as_orphaned_not_a_crash() {
+    let mut cfg = Config::default();
+    cfg.model.mc_samples = 2;
+    cfg.server.batch_deadline_ms = 1.0;
+    let coord = Coordinator::builder(cfg)
+        .backend(Backend::Sim)
+        .start()
+        .unwrap();
+    let gen = SyntheticPerson::new(32, 5);
+    // Abandon the first request before its response arrives.
+    drop(coord.submit(Infer::new(gen.sample(0).pixels)).unwrap());
+    // A following blocking request on the same single-shard pool proves
+    // the worker survived; batches are served in order, so by the time
+    // this response arrives the orphaned reply has been counted.
+    let resp = coord.infer(Infer::new(gen.sample(1).pixels)).unwrap();
+    assert_eq!(resp.pred.probs.len(), 2);
+    let m = coord.metrics();
+    assert_eq!(m.requests_orphaned, 1, "orphaned reply must be counted");
+    assert_eq!(m.per_shard[0].requests_orphaned, 1);
+    assert_eq!(m.requests_total, 2, "the orphaned request was still served");
+    assert!(m.render().contains("orphaned=1"));
     coord.shutdown();
 }

@@ -12,10 +12,8 @@
 //! every build — no artifacts, no PJRT toolchain.
 
 use bnn_cim::bayes::aggregate_mc;
-use bnn_cim::config::Config;
-use bnn_cim::coordinator::{
-    shard_die_seed, Coordinator, EngineFactory, EpsilonSource, EpsilonSupply, GrngBankSource,
-};
+use bnn_cim::client::{Backend, Config, Coordinator, EngineFactory, Infer};
+use bnn_cim::coordinator::{shard_die_seed, EpsilonSource, GrngBankSource};
 use bnn_cim::data::SyntheticPerson;
 use bnn_cim::runtime::{InferenceEngine, SimEngine};
 use std::sync::Arc;
@@ -136,16 +134,17 @@ fn single_shard_is_bit_identical_to_unsharded_reference() {
         expected.push(aggregate_mc(&samples).probs);
     }
 
-    // --- the pool, workers = 1, serial submits (one request per batch) ---
-    let coord = Coordinator::start_with(
-        cfg.clone(),
-        sim_engine_factory(&cfg),
-        EpsilonSupply::grng_banks(&cfg.chip),
-    )
-    .unwrap();
+    // --- the pool, workers = 1, serial submits (one request per batch);
+    // custom engine factory + the default GRNG-bank ε sources, through
+    // the v1 builder ---
+    let coord = Coordinator::builder(cfg.clone())
+        .engine_factory(sim_engine_factory(&cfg))
+        .source_factory(GrngBankSource::shard_factory(&cfg.chip))
+        .start()
+        .unwrap();
     for i in 0..n {
         let s = gen.sample(i);
-        let resp = coord.infer_blocking(s.pixels, 0).unwrap();
+        let resp = coord.infer(Infer::new(s.pixels)).unwrap();
         assert_eq!(
             resp.pred.probs, expected[i as usize],
             "request {i} diverged from the unsharded reference"
@@ -163,12 +162,15 @@ fn fixed_seed_and_worker_count_reproduce_bitwise() {
     let run = || {
         let mut cfg = Config::default();
         cfg.model.mc_samples = 4;
-        cfg.server.workers = 2;
-        let coord = Coordinator::start_sim(cfg.clone()).unwrap();
+        let coord = Coordinator::builder(cfg.clone())
+            .backend(Backend::Sim)
+            .workers(2)
+            .start()
+            .unwrap();
         let gen = SyntheticPerson::new(cfg.model.image_side, 9);
         let mut out = Vec::new();
         for i in 0..6 {
-            out.push(coord.infer_blocking(gen.sample(i).pixels, 0).unwrap().pred.probs);
+            out.push(coord.infer(Infer::new(gen.sample(i).pixels)).unwrap().pred.probs);
         }
         coord.shutdown();
         out
