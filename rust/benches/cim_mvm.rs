@@ -9,7 +9,11 @@
 //! bench measures only the wallclock consequences of the layout change:
 //! contiguous branch-free multiply-accumulates, reusable scratch buffers,
 //! and batch-amortized IDAC drives / plane builds / ledger deposits.
+//! The SIMD cases (ISSUE 6) A/B the runtime-dispatched vector arm against
+//! the forced-scalar oracle on the same tile — also bit-identical, so the
+//! delta is pure kernel throughput.
 
+use bnn_cim::arch::{detected_level, lane_dot_at, ForcedLevelGuard, SimdLevel};
 use bnn_cim::cim::{calibrate, CimTile, MvmOptions, TileArray};
 use bnn_cim::config::ChipConfig;
 use bnn_cim::util::bench::{
@@ -71,6 +75,39 @@ fn main() {
         .ns_per_iter
         / batch as f64;
 
+    // SIMD arm vs forced-scalar arm on the identical SoA path (held ε
+    // isolates the lane_dot/mul_into kernels), end-to-end and at the raw
+    // lane_dot kernel over one 64-row plane.
+    let soa_held_scalar = {
+        let _scalar = ForcedLevelGuard::new(SimdLevel::Scalar);
+        suite
+            .bench_throughput("SoA mvm (held ε, forced scalar)", ops, || {
+                black_box(tile.mvm(&x, held));
+            })
+            .ns_per_iter
+    };
+    let soa_held_simd = {
+        let _vector = ForcedLevelGuard::new(detected_level());
+        suite
+            .bench_throughput("SoA mvm (held ε, SIMD)", ops, || {
+                black_box(tile.mvm(&x, held));
+            })
+            .ns_per_iter
+    };
+    let rows = chip.tile.rows;
+    let ka: Vec<f64> = (0..rows).map(|_| rng.next_f64() - 0.5).collect();
+    let kb: Vec<f64> = (0..rows).map(|_| rng.next_f64() - 0.5).collect();
+    let lane_dot_scalar_ns = suite
+        .bench_throughput("lane_dot kernel 64 rows (scalar)", rows as f64, || {
+            black_box(lane_dot_at(SimdLevel::Scalar, black_box(&ka), black_box(&kb)));
+        })
+        .ns_per_iter;
+    let lane_dot_simd_ns = suite
+        .bench_throughput("lane_dot kernel 64 rows (SIMD)", rows as f64, || {
+            black_box(lane_dot_at(detected_level(), black_box(&ka), black_box(&kb)));
+        })
+        .ns_per_iter;
+
     // Array-level batching (the serving head's layer-0 shape, 64→32).
     let mut arr = TileArray::new(&chip, 64, 32);
     arr.program_matrix(&vec![100.0; 64 * 32], &vec![6.0; 64 * 32]);
@@ -81,6 +118,8 @@ fn main() {
 
     let speedup_single_thread = legacy_held / batch_held.max(1e-9);
     let speedup_fresh = legacy_fresh / batch_fresh.max(1e-9);
+    let speedup_simd_vs_scalar = soa_held_scalar / soa_held_simd.max(1e-9);
+    let speedup_lane_dot = lane_dot_scalar_ns / lane_dot_simd_ns.max(1e-9);
     suite.note(
         "held-ε speedup (batched SoA vs legacy)",
         format!("{speedup_single_thread:.2}x"),
@@ -88,6 +127,14 @@ fn main() {
     suite.note(
         "fresh-ε speedup (batched SoA vs legacy)",
         format!("{speedup_fresh:.2}x"),
+    );
+    suite.note(
+        "SIMD speedup (held-ε mvm, vs forced scalar)",
+        format!("{speedup_simd_vs_scalar:.2}x at {}", detected_level()),
+    );
+    suite.note(
+        "SIMD speedup (lane_dot kernel, 64 rows)",
+        format!("{speedup_lane_dot:.2}x at {}", detected_level()),
     );
 
     let cases = [
@@ -97,6 +144,8 @@ fn main() {
         MvmBenchCase::new("legacy_aos_held_eps", legacy_held, ops),
         MvmBenchCase::new("soa_held_eps", soa_held, ops),
         MvmBenchCase::new("soa_batch32_held_eps", batch_held, ops),
+        MvmBenchCase::new("soa_held_eps_forced_scalar", soa_held_scalar, ops),
+        MvmBenchCase::new("soa_held_eps_simd", soa_held_simd, ops),
     ];
     let quick = std::env::args().any(|a| a == "--quick");
     let source = if quick {
@@ -113,6 +162,8 @@ fn main() {
         &[
             ("speedup_single_thread", speedup_single_thread),
             ("speedup_fresh_eps", speedup_fresh),
+            ("speedup_simd_vs_scalar", speedup_simd_vs_scalar),
+            ("speedup_lane_dot_simd_vs_scalar", speedup_lane_dot),
         ],
     );
     suite.finish();

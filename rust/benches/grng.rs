@@ -5,6 +5,7 @@
 //! repo-root `BENCH_grng_fill.json` (calibrated; the smoke-scale seed is
 //! `tests/grng_props.rs`).
 
+use bnn_cim::arch::{detected_level, ForcedLevelGuard, SimdLevel};
 use bnn_cim::config::{ChipConfig, GrngConfig};
 use bnn_cim::experiments::{self, fig9, tab1};
 use bnn_cim::grng::{GrngBank, GrngCell};
@@ -53,14 +54,40 @@ fn main() {
             bank_legacy.fill_epsilon_legacy(black_box(&mut buf));
         })
         .ns_per_iter;
+    // SIMD arm vs forced-scalar arm of the identical block fill (ISSUE 6:
+    // vectorized xoshiro sweep + dispatched normalize; the ziggurat
+    // finish stays scalar on both arms).
+    let mut bank_scalar = GrngBank::for_chip(&chip);
+    let block_scalar = {
+        let _scalar = ForcedLevelGuard::new(SimdLevel::Scalar);
+        suite
+            .bench_throughput("bank fill_epsilon_planes (forced scalar)", cells as f64, || {
+                bank_scalar.fill_epsilon_planes(black_box(&mut buf));
+            })
+            .ns_per_iter
+    };
+    let mut bank_simd = GrngBank::for_chip(&chip);
+    let block_simd = {
+        let _vector = ForcedLevelGuard::new(detected_level());
+        suite
+            .bench_throughput("bank fill_epsilon_planes (SIMD)", cells as f64, || {
+                bank_simd.fill_epsilon_planes(black_box(&mut buf));
+            })
+            .ns_per_iter
+    };
     let gsa_per_s = cells as f64 / block.max(1e-9);
     let speedup_block_vs_legacy = legacy / block.max(1e-9);
     let speedup_planes_vs_legacy = legacy / planes.max(1e-9);
+    let speedup_simd_vs_scalar = block_scalar / block_simd.max(1e-9);
     suite.note(
         "block speedup vs legacy",
         format!("{speedup_block_vs_legacy:.2}x"),
     );
     suite.note("block software rate", format!("{gsa_per_s:.4} GSa/s"));
+    suite.note(
+        "SIMD speedup (plane fill, vs forced scalar)",
+        format!("{speedup_simd_vs_scalar:.2}x at {}", detected_level()),
+    );
     let quick = std::env::args().any(|a| a == "--quick");
     let source = if quick {
         "benches/grng.rs --quick (calibrated, release profile)"
@@ -76,11 +103,14 @@ fn main() {
             GrngFillCase::new("block_soa", block, cells),
             GrngFillCase::new("block_soa_planes", planes, cells),
             GrngFillCase::new("legacy_aos", legacy, cells),
+            GrngFillCase::new("block_soa_planes_forced_scalar", block_scalar, cells),
+            GrngFillCase::new("block_soa_planes_simd", block_simd, cells),
         ],
         &[
             ("gsa_per_s", gsa_per_s),
             ("speedup_block_vs_legacy", speedup_block_vs_legacy),
             ("speedup_planes_vs_legacy", speedup_planes_vs_legacy),
+            ("speedup_simd_vs_scalar", speedup_simd_vs_scalar),
         ],
     );
 

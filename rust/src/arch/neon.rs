@@ -1,0 +1,132 @@
+//! NEON kernels (aarch64, where NEON is baseline — no runtime probe).
+//! See the module docs in `arch/mod.rs` for the determinism contract;
+//! every function here is bit-identical to its scalar oracle. As on
+//! x86, fused multiply-add is deliberately avoided: the scalar spec
+//! rounds multiply and add separately.
+
+use core::arch::aarch64::*;
+
+use super::lane_combine;
+use crate::util::rng::xoshiro_lane_step;
+
+/// Vector [`super::lane_dot`]: four 2×f64 accumulators hold the eight
+/// interleaved lanes; each 8-row chunk contributes one mul+add per
+/// accumulator in the same ascending row order as the scalar walk.
+#[target_feature(enable = "neon")]
+pub unsafe fn lane_dot_neon(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let zero = vdupq_n_f64(0.0);
+    let mut acc0 = zero;
+    let mut acc1 = zero;
+    let mut acc2 = zero;
+    let mut acc3 = zero;
+    for k in 0..chunks {
+        let i = k * 8;
+        acc0 = vaddq_f64(acc0, vmulq_f64(vld1q_f64(pa.add(i)), vld1q_f64(pb.add(i))));
+        acc1 = vaddq_f64(
+            acc1,
+            vmulq_f64(vld1q_f64(pa.add(i + 2)), vld1q_f64(pb.add(i + 2))),
+        );
+        acc2 = vaddq_f64(
+            acc2,
+            vmulq_f64(vld1q_f64(pa.add(i + 4)), vld1q_f64(pb.add(i + 4))),
+        );
+        acc3 = vaddq_f64(
+            acc3,
+            vmulq_f64(vld1q_f64(pa.add(i + 6)), vld1q_f64(pb.add(i + 6))),
+        );
+    }
+    let mut s = [0.0f64; 8];
+    vst1q_f64(s.as_mut_ptr(), acc0);
+    vst1q_f64(s.as_mut_ptr().add(2), acc1);
+    vst1q_f64(s.as_mut_ptr().add(4), acc2);
+    vst1q_f64(s.as_mut_ptr().add(6), acc3);
+    for (l, i) in (chunks * 8..n).enumerate() {
+        s[l] += *pa.add(i) * *pb.add(i);
+    }
+    lane_combine(&s)
+}
+
+/// Vector [`super::mul_into`]: elementwise product, 2 lanes at a time.
+#[target_feature(enable = "neon")]
+pub unsafe fn mul_into_neon(dst: &mut [f64], a: &[f64], b: &[f64]) {
+    debug_assert_eq!(dst.len(), a.len());
+    debug_assert_eq!(dst.len(), b.len());
+    let n = dst.len();
+    let pd = dst.as_mut_ptr();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut i = 0;
+    while i + 2 <= n {
+        vst1q_f64(pd.add(i), vmulq_f64(vld1q_f64(pa.add(i)), vld1q_f64(pb.add(i))));
+        i += 2;
+    }
+    if i < n {
+        *pd.add(i) = *pa.add(i) * *pb.add(i);
+    }
+}
+
+/// Vector [`super::div_assign`]: elementwise quotient, 2 lanes at a time.
+#[target_feature(enable = "neon")]
+pub unsafe fn div_assign_neon(dst: &mut [f64], by: &[f64]) {
+    debug_assert_eq!(dst.len(), by.len());
+    let n = dst.len();
+    let pd = dst.as_mut_ptr();
+    let pb = by.as_ptr();
+    let mut i = 0;
+    while i + 2 <= n {
+        vst1q_f64(pd.add(i), vdivq_f64(vld1q_f64(pd.add(i)), vld1q_f64(pb.add(i))));
+        i += 2;
+    }
+    if i < n {
+        *pd.add(i) /= *pb.add(i);
+    }
+}
+
+/// Vector [`super::xoshiro_block`]: one xoshiro256++ step on two lanes at
+/// a time, integer-exact; a trailing odd lane steps scalar. rotl(v, k)
+/// is `(v << k) | (v >> (64 - k))`.
+#[target_feature(enable = "neon")]
+pub unsafe fn xoshiro_block_neon(
+    s0: &mut [u64],
+    s1: &mut [u64],
+    s2: &mut [u64],
+    s3: &mut [u64],
+    out: &mut [u64],
+) {
+    let n = out.len();
+    debug_assert!(s0.len() == n && s1.len() == n && s2.len() == n && s3.len() == n);
+    let chunks = n / 2;
+    for k in 0..chunks {
+        let i = k * 2;
+        let v0 = vld1q_u64(s0.as_ptr().add(i));
+        let v1 = vld1q_u64(s1.as_ptr().add(i));
+        let v2 = vld1q_u64(s2.as_ptr().add(i));
+        let v3 = vld1q_u64(s3.as_ptr().add(i));
+        // result = rotl(s0 + s3, 23) + s0   (wrapping adds)
+        let sum = vaddq_u64(v0, v3);
+        let rot = vorrq_u64(vshlq_n_u64::<23>(sum), vshrq_n_u64::<41>(sum));
+        vst1q_u64(out.as_mut_ptr().add(i), vaddq_u64(rot, v0));
+        // t = s1 << 17; s2 ^= s0; s3 ^= s1; s1 ^= s2; s0 ^= s3;
+        // s2 ^= t; s3 = rotl(s3, 45)
+        let t = vshlq_n_u64::<17>(v1);
+        let v2 = veorq_u64(v2, v0);
+        let v3 = veorq_u64(v3, v1);
+        let v1 = veorq_u64(v1, v2);
+        let v0 = veorq_u64(v0, v3);
+        let v2 = veorq_u64(v2, t);
+        let v3 = vorrq_u64(vshlq_n_u64::<45>(v3), vshrq_n_u64::<19>(v3));
+        vst1q_u64(s0.as_mut_ptr().add(i), v0);
+        vst1q_u64(s1.as_mut_ptr().add(i), v1);
+        vst1q_u64(s2.as_mut_ptr().add(i), v2);
+        vst1q_u64(s3.as_mut_ptr().add(i), v3);
+    }
+    if n % 2 == 1 {
+        let i = n - 1;
+        out[i] = xoshiro_lane_step(&mut s0[i], &mut s1[i], &mut s2[i], &mut s3[i]);
+    }
+}

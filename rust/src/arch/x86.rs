@@ -1,0 +1,140 @@
+//! AVX2 kernels (x86-64, runtime-detected). See the module docs in
+//! `arch/mod.rs` for the determinism contract; every function here is
+//! bit-identical to its scalar oracle.
+//!
+//! # Safety
+//!
+//! Every function carries `#[target_feature(enable = "avx2")]` and must
+//! only be called after `is_x86_feature_detected!("avx2")` succeeded —
+//! the safe wrappers in `arch/mod.rs` enforce that via `clamp_supported`.
+//!
+//! FMA is deliberately **not** used even where the host has it: the
+//! scalar spec rounds the multiply and the add separately, and a fused
+//! multiply-add rounds once, which would break bit-identity. The
+//! `_mm256_mul_pd`/`_mm256_add_pd` pairs below lower to plain vector
+//! `fmul`/`fadd` (rustc does not enable floating-point contraction), so
+//! the compiler cannot re-fuse them.
+
+use core::arch::x86_64::*;
+
+use super::lane_combine;
+use crate::util::rng::xoshiro_lane_step;
+
+/// Vector [`super::lane_dot`]: two 4×f64 accumulators hold the eight
+/// interleaved lanes (acc0 = lanes 0–3, acc1 = lanes 4–7); each 8-row
+/// chunk contributes one mul+add per accumulator, in the same ascending
+/// row order as the scalar walk. The remainder (rows mod 8) is scalar
+/// into lanes 0..rem, then the fixed pairwise [`lane_combine`].
+#[target_feature(enable = "avx2")]
+pub unsafe fn lane_dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    for k in 0..chunks {
+        let i = k * 8;
+        let prod0 = _mm256_mul_pd(_mm256_loadu_pd(pa.add(i)), _mm256_loadu_pd(pb.add(i)));
+        acc0 = _mm256_add_pd(acc0, prod0);
+        let prod1 = _mm256_mul_pd(_mm256_loadu_pd(pa.add(i + 4)), _mm256_loadu_pd(pb.add(i + 4)));
+        acc1 = _mm256_add_pd(acc1, prod1);
+    }
+    let mut s = [0.0f64; 8];
+    _mm256_storeu_pd(s.as_mut_ptr(), acc0);
+    _mm256_storeu_pd(s.as_mut_ptr().add(4), acc1);
+    for (l, i) in (chunks * 8..n).enumerate() {
+        s[l] += *pa.add(i) * *pb.add(i);
+    }
+    lane_combine(&s)
+}
+
+/// Vector [`super::mul_into`]: elementwise product, 4 lanes at a time.
+#[target_feature(enable = "avx2")]
+pub unsafe fn mul_into_avx2(dst: &mut [f64], a: &[f64], b: &[f64]) {
+    debug_assert_eq!(dst.len(), a.len());
+    debug_assert_eq!(dst.len(), b.len());
+    let n = dst.len();
+    let pd = dst.as_mut_ptr();
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut i = 0;
+    while i + 4 <= n {
+        let v = _mm256_mul_pd(_mm256_loadu_pd(pa.add(i)), _mm256_loadu_pd(pb.add(i)));
+        _mm256_storeu_pd(pd.add(i), v);
+        i += 4;
+    }
+    while i < n {
+        *pd.add(i) = *pa.add(i) * *pb.add(i);
+        i += 1;
+    }
+}
+
+/// Vector [`super::div_assign`]: elementwise quotient, 4 lanes at a time.
+#[target_feature(enable = "avx2")]
+pub unsafe fn div_assign_avx2(dst: &mut [f64], by: &[f64]) {
+    debug_assert_eq!(dst.len(), by.len());
+    let n = dst.len();
+    let pd = dst.as_mut_ptr();
+    let pb = by.as_ptr();
+    let mut i = 0;
+    while i + 4 <= n {
+        let v = _mm256_div_pd(_mm256_loadu_pd(pd.add(i)), _mm256_loadu_pd(pb.add(i)));
+        _mm256_storeu_pd(pd.add(i), v);
+        i += 4;
+    }
+    while i < n {
+        *pd.add(i) /= *pb.add(i);
+        i += 1;
+    }
+}
+
+/// Vector [`super::xoshiro_block`]: one xoshiro256++ step on four lanes
+/// at a time, integer-exact; remainder lanes step scalar. AVX2 has no
+/// 64-bit lane rotate (vprolq is AVX-512), so rotl(v, k) is composed as
+/// `(v << k) | (v >> (64 - k))`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn xoshiro_block_avx2(
+    s0: &mut [u64],
+    s1: &mut [u64],
+    s2: &mut [u64],
+    s3: &mut [u64],
+    out: &mut [u64],
+) {
+    let n = out.len();
+    debug_assert!(s0.len() == n && s1.len() == n && s2.len() == n && s3.len() == n);
+    let chunks = n / 4;
+    for k in 0..chunks {
+        let i = k * 4;
+        let p0 = s0.as_mut_ptr().add(i) as *mut __m256i;
+        let p1 = s1.as_mut_ptr().add(i) as *mut __m256i;
+        let p2 = s2.as_mut_ptr().add(i) as *mut __m256i;
+        let p3 = s3.as_mut_ptr().add(i) as *mut __m256i;
+        let v0 = _mm256_loadu_si256(p0 as *const __m256i);
+        let v1 = _mm256_loadu_si256(p1 as *const __m256i);
+        let v2 = _mm256_loadu_si256(p2 as *const __m256i);
+        let v3 = _mm256_loadu_si256(p3 as *const __m256i);
+        // result = rotl(s0 + s3, 23) + s0   (wrapping adds)
+        let sum = _mm256_add_epi64(v0, v3);
+        let rot = _mm256_or_si256(_mm256_slli_epi64::<23>(sum), _mm256_srli_epi64::<41>(sum));
+        let result = _mm256_add_epi64(rot, v0);
+        _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, result);
+        // t = s1 << 17; s2 ^= s0; s3 ^= s1; s1 ^= s2; s0 ^= s3;
+        // s2 ^= t; s3 = rotl(s3, 45)
+        let t = _mm256_slli_epi64::<17>(v1);
+        let v2 = _mm256_xor_si256(v2, v0);
+        let v3 = _mm256_xor_si256(v3, v1);
+        let v1 = _mm256_xor_si256(v1, v2);
+        let v0 = _mm256_xor_si256(v0, v3);
+        let v2 = _mm256_xor_si256(v2, t);
+        let v3 = _mm256_or_si256(_mm256_slli_epi64::<45>(v3), _mm256_srli_epi64::<19>(v3));
+        _mm256_storeu_si256(p0, v0);
+        _mm256_storeu_si256(p1, v1);
+        _mm256_storeu_si256(p2, v2);
+        _mm256_storeu_si256(p3, v3);
+    }
+    for i in chunks * 4..n {
+        out[i] = xoshiro_lane_step(&mut s0[i], &mut s1[i], &mut s2[i], &mut s3[i]);
+    }
+}

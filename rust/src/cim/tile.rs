@@ -14,6 +14,7 @@
 //! the ADC model, are offset-corrected and shift-added by the reduction
 //! logic, and finally scaled back to fixed-point weight units.
 
+use crate::arch::{lane_combine, lane_dot, mul_into};
 use crate::cim::adc::SarAdc;
 use crate::cim::idac::Idac;
 use crate::cim::word::{MuWord, SigmaWord};
@@ -122,42 +123,14 @@ const EPSILON_PIPELINE_MIN_T: usize = 4;
 /// 64×8 = 512-cell chip qualifies, sub-tile test geometries do not.
 const EPSILON_PIPELINE_MIN_CELLS: usize = 256;
 
-/// The tile's fixed column-charge reduction spec: eight interleaved
-/// partial sums (lane = row mod 8) combined pairwise,
-/// `q = ((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))`. Physically the column
-/// charge is an order-independent analog sum; the spec just fixes one
-/// reproducible order. *Both* MVM implementations follow it, so they
-/// stay bit-identical — while the SoA fast path's contiguous loops map
-/// the lanes onto SIMD registers instead of one latency-bound serial FP
-/// add chain.
-#[inline]
-fn lane_combine(s: &[f64; 8]) -> f64 {
-    ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]))
-}
-
-/// Lane-interleaved dot product over contiguous slices (the fast path's
-/// inner loop). Bit-identical to walking `a[r]*b[r]` into lane `r & 7`
-/// in ascending row order and combining with [`lane_combine`].
-#[inline]
-fn lane_dot(a: &[f64], b: &[f64]) -> f64 {
-    let mut s = [0.0f64; 8];
-    let mut ca = a.chunks_exact(8);
-    let mut cb = b.chunks_exact(8);
-    for (xa, xb) in (&mut ca).zip(&mut cb) {
-        for l in 0..8 {
-            s[l] += xa[l] * xb[l];
-        }
-    }
-    for (l, (x, y)) in ca
-        .remainder()
-        .iter()
-        .zip(cb.remainder().iter())
-        .enumerate()
-    {
-        s[l] += x * y;
-    }
-    lane_combine(&s)
-}
+// The tile's fixed column-charge reduction spec — eight interleaved
+// partial sums (lane = row mod 8) combined pairwise,
+// `q = ((s0+s1)+(s2+s3)) + ((s4+s5)+(s6+s7))` — now lives in
+// [`crate::arch`] as `lane_combine`/`lane_dot`, where the runtime SIMD
+// dispatch maps the eight lanes onto AVX2/NEON registers bit-identically
+// to the scalar walk. Both MVM implementations here follow that spec, so
+// the legacy word-walk and the SoA fast path stay bit-identical at every
+// dispatch level.
 
 /// The tile's ADC conversion chain with its borrows split away from the
 /// GRNG bank: everything `convert_words` needs — ADCs (mutable: each
@@ -219,16 +192,11 @@ impl ConvertUnit<'_> {
             // ---- σε subarray ----
             let mut y_sigma = 0.0f64;
             if opts.bayesian {
-                // drives[r]·ε[r][w] once per word, shared by its planes.
+                // drives[r]·ε[r][w] once per word, shared by its planes
+                // (dispatched elementwise product, bit-identical: one
+                // rounding per element on every arch arm).
                 let eps_col = &eps_t[w * rows..(w + 1) * rows];
-                for ((t, d), e) in scratch
-                    .row_terms
-                    .iter_mut()
-                    .zip(drives.iter())
-                    .zip(eps_col.iter())
-                {
-                    *t = d * e;
-                }
+                mul_into(&mut scratch.row_terms, drives, eps_col);
                 for b in 0..sigma_bits {
                     let base = (w * sigma_bits + b) * rows;
                     let mask = &planes.sigma_mask[base..base + rows];

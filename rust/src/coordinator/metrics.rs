@@ -6,12 +6,18 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// Age \[s\] after which a shard's measured ε rate is considered stale and
-/// snapshots report 0 instead of the last interval's value. Generous
-/// enough that slow steady record cadences (one record per fused batch)
-/// still surface a rate; short enough that an idle shard stops claiming
-/// throughput.
+/// Age \[s\] after which a shard's measured ε (or engine-op) rate is
+/// considered stale and snapshots report 0 instead of the last interval's
+/// value. Generous enough that slow steady record cadences (one record
+/// per fused batch) still surface a rate; short enough that an idle shard
+/// stops claiming throughput.
 const EPSILON_RATE_STALE_S: f64 = 30.0;
+
+/// Paper headline (Tab. II): aggregate GRNG hardware throughput [GSa/s].
+pub const PAPER_GSA_PER_S: f64 = 5.12;
+
+/// Paper headline (Tab. II): peak engine compute throughput [GOp/s].
+pub const PAPER_GOP_PER_S: f64 = 102.0;
 
 /// Per-shard counters surfaced in [`MetricsSnapshot::per_shard`].
 ///
@@ -49,6 +55,11 @@ pub struct ShardSnapshot {
     pub engine_mvms: u64,
     /// MAC ops represented by those MVMs (J/Op denominator).
     pub engine_ops: u64,
+    /// Measured engine compute rate [Op/s]: `engine_ops` delta over the
+    /// most recent inter-record interval, same semantics as
+    /// `epsilon_sa_per_s` (0 until two increasing records, ~30 s decay).
+    /// The live counterpart of the paper's 102 GOp/s peak throughput.
+    pub engine_ops_per_s: f64,
 }
 
 impl ShardSnapshot {
@@ -76,6 +87,11 @@ impl ShardSnapshot {
     pub fn epsilon_gsa_per_s(&self) -> f64 {
         self.epsilon_sa_per_s / 1e9
     }
+
+    /// Measured engine compute rate [GOp/s] (paper Tab. II peak: 102).
+    pub fn gop_per_s(&self) -> f64 {
+        self.engine_ops_per_s / 1e9
+    }
 }
 
 #[derive(Clone, Debug, Default)]
@@ -102,6 +118,8 @@ pub struct MetricsSnapshot {
     pub engine_mvms: u64,
     /// MAC ops represented by the engines' MVMs across shards.
     pub engine_ops: u64,
+    /// Aggregate measured engine compute rate across shards [Op/s].
+    pub engine_ops_per_s: f64,
     pub latency_p50_ms: f64,
     pub latency_p95_ms: f64,
     pub latency_max_ms: f64,
@@ -133,6 +151,11 @@ impl MetricsSnapshot {
     /// Aggregate measured ε rate [GSa/s] (paper Tab. II hardware: 5.12).
     pub fn epsilon_gsa_per_s(&self) -> f64 {
         self.epsilon_sa_per_s / 1e9
+    }
+
+    /// Aggregate measured engine compute rate [GOp/s] (paper peak: 102).
+    pub fn gop_per_s(&self) -> f64 {
+        self.engine_ops_per_s / 1e9
     }
 
     pub fn render(&self) -> String {
@@ -174,6 +197,16 @@ impl MetricsSnapshot {
                 self.engine_j_per_op() * 1e15,
             ));
         }
+        // Always-on gap to the paper's Tab. II throughput headlines, so
+        // every render answers "how far is software from the silicon".
+        out.push_str(&format!(
+            "\npaper gap: epsilon {:.4} GSa/s measured vs {PAPER_GSA_PER_S} hw ({:.1}%) | \
+             engine {:.4} GOp/s measured vs {PAPER_GOP_PER_S} hw ({:.1}%)",
+            self.epsilon_gsa_per_s(),
+            self.epsilon_gsa_per_s() / PAPER_GSA_PER_S * 100.0,
+            self.gop_per_s(),
+            self.gop_per_s() / PAPER_GOP_PER_S * 100.0,
+        ));
         if self.per_shard.len() > 1 {
             for s in &self.per_shard {
                 out.push_str(&format!(
@@ -224,6 +257,11 @@ struct ShardInner {
     engine_energy_j: f64,
     engine_mvms: u64,
     engine_ops: u64,
+    /// Measured engine compute rate [Op/s] from the last pair of records
+    /// with an increasing `engine_ops` total.
+    engine_ops_per_s: f64,
+    /// (when, total ops) of the last engine record — the delta base.
+    engine_last: Option<(std::time::Instant, u64)>,
 }
 
 struct Inner {
@@ -329,10 +367,25 @@ impl Metrics {
 
     /// Absolute engine-energy counters for one shard (cumulative ledger
     /// totals, never deltas — so snapshot reads stay non-destructive and
-    /// idempotent even if a report is recorded twice).
+    /// idempotent even if a report is recorded twice). The measured
+    /// compute *rate* (the paper's GOp/s headline, live) is derived from
+    /// the `ops` delta between consecutive records, exactly like
+    /// [`Metrics::record_epsilon`] derives the GSa/s rate.
     pub fn record_engine_energy(&self, shard: usize, total_j: f64, mvms: u64, ops: u64) {
+        let now = std::time::Instant::now();
         let mut g = self.inner.lock().unwrap();
         let s = &mut g.shards[shard];
+        match s.engine_last {
+            Some((t0, prev)) if ops > prev => {
+                let dt = now.duration_since(t0).as_secs_f64();
+                if dt > 0.0 {
+                    s.engine_ops_per_s = (ops - prev) as f64 / dt;
+                    s.engine_last = Some((now, ops));
+                }
+            }
+            Some(_) => {} // unchanged total: keep rate and delta base
+            None => s.engine_last = Some((now, ops)),
+        }
         s.engine_energy_j = total_j;
         s.engine_mvms = mvms;
         s.engine_ops = ops;
@@ -375,6 +428,12 @@ impl Metrics {
                 engine_energy_j: s.engine_energy_j,
                 engine_mvms: s.engine_mvms,
                 engine_ops: s.engine_ops,
+                engine_ops_per_s: match s.engine_last {
+                    Some((t0, _)) if t0.elapsed().as_secs_f64() < EPSILON_RATE_STALE_S => {
+                        s.engine_ops_per_s
+                    }
+                    _ => 0.0,
+                },
             })
             .collect();
         let batches: u64 = per_shard.iter().map(|s| s.batches).sum();
@@ -392,6 +451,7 @@ impl Metrics {
             engine_energy_j: per_shard.iter().map(|s| s.engine_energy_j).sum(),
             engine_mvms: per_shard.iter().map(|s| s.engine_mvms).sum(),
             engine_ops: per_shard.iter().map(|s| s.engine_ops).sum(),
+            engine_ops_per_s: per_shard.iter().map(|s| s.engine_ops_per_s).sum(),
             latency_p50_ms: pct(0.50),
             latency_p95_ms: pct(0.95),
             latency_max_ms: lat.last().copied().unwrap_or(0.0),
@@ -480,6 +540,40 @@ mod tests {
         m.record_epsilon(0, 513_000, 2e-9);
         assert_eq!(m.snapshot().per_shard[0].epsilon_sa_per_s, rate);
         assert!(s.render().contains("GSa/s"));
+    }
+
+    #[test]
+    fn engine_ops_rate_derives_from_op_deltas() {
+        let m = Metrics::new(2);
+        // First record only sets the delta base: no rate yet.
+        m.record_engine_energy(0, 1e-9, 10, 1_000_000);
+        assert_eq!(m.snapshot().engine_ops_per_s, 0.0);
+        std::thread::sleep(Duration::from_millis(20));
+        m.record_engine_energy(0, 2e-9, 20, 103_000_000);
+        let s = m.snapshot();
+        let rate = s.per_shard[0].engine_ops_per_s;
+        assert!(rate > 0.0, "rate must be measured after a delta");
+        // 102M ops over ≥20 ms: bounded above by 102M/0.02 Op/s.
+        assert!(rate <= 102.0e6 / 0.020 * 1.01, "rate {rate} too high");
+        assert_eq!(s.engine_ops_per_s, rate, "global = sum of shards");
+        assert!((s.gop_per_s() - rate / 1e9).abs() < 1e-12);
+        assert!((s.per_shard[0].gop_per_s() - rate / 1e9).abs() < 1e-12);
+        // Re-recording the same total (idle loop) keeps the rate.
+        m.record_engine_energy(0, 2e-9, 20, 103_000_000);
+        assert_eq!(m.snapshot().per_shard[0].engine_ops_per_s, rate);
+    }
+
+    #[test]
+    fn render_always_reports_paper_gap() {
+        // Even a fresh, empty snapshot states the distance to the paper's
+        // 5.12 GSa/s and 102 GOp/s headlines — the gap line is
+        // unconditional, not gated on traffic.
+        let empty = Metrics::new(1).snapshot();
+        let r = empty.render();
+        assert!(r.contains("paper gap:"), "missing gap line:\n{r}");
+        assert!(r.contains("5.12"), "missing GSa/s headline:\n{r}");
+        assert!(r.contains("102"), "missing GOp/s headline:\n{r}");
+        assert!(r.contains("GOp/s"), "missing GOp/s unit:\n{r}");
     }
 
     #[test]

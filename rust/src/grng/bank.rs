@@ -27,11 +27,22 @@
 //! the retained per-cell walk ([`GrngBank::fill_epsilon_legacy`], pinned
 //! by `tests/grng_props.rs`), and both paths share one state lane so they
 //! can be interleaved on a live bank.
+//!
+//! §SIMD (ISSUE 6). The per-cell states now live in a
+//! [`XoshiroLanes`] SoA bank, so the Gaussian pass starts with one
+//! *vertical* SIMD sweep (`crate::arch::xoshiro_block`, AVX2/NEON with a
+//! scalar oracle) that draws the first uniform for every cell at once;
+//! each cell then finishes its ziggurat accept/reject scalar on its own
+//! lane (`rng::ziggurat_step`), and the normalization pass is a
+//! dispatched elementwise divide. Because the uniform step is integer
+//! and the divide is correctly rounded, the SIMD block fill stays
+//! **bit-identical** to the legacy walk at every dispatch level — the
+//! same property tests pin it no matter which arm runs.
 
 use crate::config::{ChipConfig, GrngConfig};
 use crate::grng::circuit::{eps_fast_step, CellParams};
 use crate::grng::mismatch::DieVariation;
-use crate::util::rng::{Rng64, SplitMix64, Xoshiro256};
+use crate::util::rng::{ziggurat_normal, ziggurat_step, Rng64, SplitMix64, Xoshiro256, XoshiroLanes};
 
 /// Derive the die seed for shard `shard` of a sharded serving pool.
 ///
@@ -78,9 +89,14 @@ pub struct GrngBank {
     /// the SoA lanes, metadata queries (offsets, energy, latency), and
     /// the retained legacy sampler.
     params: Vec<CellParams>,
-    /// Flat lane of per-cell sampling states, shared by the block and
-    /// legacy paths (interleaving them continues one stream per cell).
-    states: Vec<Xoshiro256>,
+    /// Per-cell sampling states in SoA lanes (state word k of every cell
+    /// contiguous), shared by the block and legacy paths (interleaving
+    /// them continues one stream per cell). The layout is what lets the
+    /// block fill draw all cells' uniforms in one SIMD sweep.
+    states: XoshiroLanes,
+    /// Reused scratch for the block fill's uniform sweep (one u64 per
+    /// cell; no allocation on the hot path).
+    bits_scratch: Vec<u64>,
     // ---- SoA hot lanes (copies of `params` fields, row-major) ----
     diff_mean_s: Vec<f64>,
     diff_sigma_s: Vec<f64>,
@@ -103,18 +119,19 @@ impl GrngBank {
         let n = die.rows * die.words;
         let mut seeder = SplitMix64::new(seed ^ 0x6BA4_57B1);
         let mut params = Vec::with_capacity(n);
-        let mut states = Vec::with_capacity(n);
+        let mut states = XoshiroLanes::with_capacity(n);
         for i in 0..n {
             let row = i / die.words;
             let word = i % die.words;
             params.push(die.cell_params(cfg, row, word));
-            states.push(Xoshiro256::new(seeder.split()));
+            states.push_seed(seeder.split());
         }
         let mut bank = Self {
             rows: die.rows,
             words: die.words,
             params,
             states,
+            bits_scratch: Vec::new(),
             diff_mean_s: Vec::new(),
             diff_sigma_s: Vec::new(),
             sigma_unit_s: Vec::new(),
@@ -185,21 +202,15 @@ impl GrngBank {
     /// [`GrngBank::fill_epsilon_legacy`].
     pub fn fill_epsilon(&mut self, out: &mut [f64]) {
         assert_eq!(out.len(), self.states.len());
-        // Pass 1: one Gaussian per cell, streaming through the lanes.
-        for (((o, st), dm), ds) in out
-            .iter_mut()
-            .zip(self.states.iter_mut())
-            .zip(self.diff_mean_s.iter())
-            .zip(self.diff_sigma_s.iter())
-        {
-            *o = dm + ds * st.next_gaussian();
-        }
+        // Pass 1: one Gaussian per cell (SIMD uniform sweep + per-lane
+        // ziggurat finish).
+        self.fill_gaussian_block(false, out);
         // Pass 2: outlier-capable cells draw their uniform (keeping each
         // cell's sequence aligned with the scalar path); the heavy tail
         // itself is the rare branch.
         for &cell in &self.outlier_cells {
             let i = cell as usize;
-            let st = &mut self.states[i];
+            let mut st = self.states.lane(i);
             if st.next_f64() < self.p_outlier[i] {
                 let extra = -st.next_f64_open().ln() * self.outlier_scale_s[i];
                 if st.next_bool(0.5) {
@@ -210,11 +221,38 @@ impl GrngBank {
             }
         }
         // Pass 3: normalize pulse widths to ε units (the same `d / σ_unit`
-        // division the scalar path performs).
-        for (o, su) in out.iter_mut().zip(self.sigma_unit_s.iter()) {
-            *o /= *su;
-        }
+        // division the scalar path performs, dispatched; `_mm256_div_pd`
+        // / `vdivq_f64` are correctly rounded, so still bit-identical).
+        crate::arch::div_assign(out, &self.sigma_unit_s);
         self.samples_drawn += out.len() as u64;
+    }
+
+    /// Shared Gaussian pass: one SIMD sweep draws every cell's first
+    /// uniform from the SoA state lanes, then each cell finishes its
+    /// ziggurat accept/reject scalar on its own lane (the common case
+    /// accepts the pre-drawn bits immediately; rejected cells continue
+    /// their private stream exactly as the scalar sampler would).
+    /// `transposed` selects row-major (`i`) vs plane-major
+    /// (`(i % words) * rows + i / words`) write targets.
+    fn fill_gaussian_block(&mut self, transposed: bool, out: &mut [f64]) {
+        let n = self.states.len();
+        let mut bits = std::mem::take(&mut self.bits_scratch);
+        bits.resize(n, 0);
+        self.states.fill_next_u64(&mut bits);
+        let rows = self.rows;
+        let words = self.words;
+        for (i, &b) in bits.iter().enumerate() {
+            let z = {
+                let mut lane = self.states.lane(i);
+                match ziggurat_step(&mut lane, b) {
+                    Some(z) => z,
+                    None => ziggurat_normal(&mut lane),
+                }
+            };
+            let t = if transposed { (i % words) * rows + i / words } else { i };
+            out[t] = self.diff_mean_s[i] + self.diff_sigma_s[i] * z;
+        }
+        self.bits_scratch = bits;
     }
 
     /// Fill `out` (len = rows × words) with one fresh ε per cell in the
@@ -228,21 +266,14 @@ impl GrngBank {
         assert_eq!(out.len(), self.states.len());
         let rows = self.rows;
         let words = self.words;
-        // Pass 1: contiguous over the lanes, writes transposed (the 4 KB
-        // output stays cache-resident at tile scale).
-        let mut i = 0usize;
-        for r in 0..rows {
-            for w in 0..words {
-                out[w * rows + r] =
-                    self.diff_mean_s[i] + self.diff_sigma_s[i] * self.states[i].next_gaussian();
-                i += 1;
-            }
-        }
+        // Pass 1: SIMD uniform sweep + per-lane ziggurat finish, writes
+        // transposed (the 4 KB output stays cache-resident at tile scale).
+        self.fill_gaussian_block(true, out);
         // Pass 2: sparse outliers, transposed targets.
         for &cell in &self.outlier_cells {
             let i = cell as usize;
             let t = (i % words) * rows + i / words;
-            let st = &mut self.states[i];
+            let mut st = self.states.lane(i);
             if st.next_f64() < self.p_outlier[i] {
                 let extra = -st.next_f64_open().ln() * self.outlier_scale_s[i];
                 if st.next_bool(0.5) {
@@ -253,9 +284,7 @@ impl GrngBank {
             }
         }
         // Pass 3: contiguous normalization against the transposed lane.
-        for (o, su) in out.iter_mut().zip(self.sigma_unit_t.iter()) {
-            *o /= *su;
-        }
+        crate::arch::div_assign(out, &self.sigma_unit_t);
         self.samples_drawn += out.len() as u64;
     }
 
@@ -267,7 +296,8 @@ impl GrngBank {
     pub fn fill_epsilon_legacy(&mut self, out: &mut [f64]) {
         assert_eq!(out.len(), self.states.len());
         for (i, o) in out.iter_mut().enumerate() {
-            *o = eps_fast_step(&self.params[i], &mut self.states[i]);
+            let mut lane = self.states.lane(i);
+            *o = eps_fast_step(&self.params[i], &mut lane);
         }
         self.samples_drawn += out.len() as u64;
     }
@@ -290,8 +320,8 @@ impl GrngBank {
     /// independent ε stream on the *same* die.
     pub fn reseed_cells(&mut self, seed: u64) {
         let mut seeder = SplitMix64::new(seed ^ 0x6BA4_57B1);
-        for st in &mut self.states {
-            *st = Xoshiro256::new(seeder.split());
+        for i in 0..self.states.len() {
+            self.states.set(i, &Xoshiro256::new(seeder.split()));
         }
     }
 

@@ -271,8 +271,10 @@ impl GrngCell {
 /// (distribution unchanged; verified by `eps_is_approximately_
 /// standard_normal` and the circuit-vs-fast pinning test). Outliers
 /// are the rare path: skip the uniform draw entirely when p = 0.
+/// Generic over [`Rng64`] so the bank's SoA state lanes can feed a
+/// borrowed per-lane view (`XoshiroLane`) through the same arithmetic.
 #[inline]
-pub(crate) fn eps_fast_step(p: &CellParams, rng: &mut Xoshiro256) -> f64 {
+pub(crate) fn eps_fast_step<R: Rng64>(p: &CellParams, rng: &mut R) -> f64 {
     let mut d = p.diff_mean_s + p.diff_sigma_s * rng.next_gaussian();
     if p.p_outlier > 0.0 && rng.next_f64() < p.p_outlier {
         let extra = -rng.next_f64_open().ln() * p.outlier_scale_s;

@@ -21,6 +21,7 @@
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod arch;
 pub mod error;
 pub mod util;
 

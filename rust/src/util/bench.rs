@@ -379,7 +379,9 @@ impl MvmBenchCase {
 /// plus the headline single-thread speedups of the SoA fast path over the
 /// pre-PR legacy AoS baseline (same tile, same options). Respects the
 /// calibrated-over-smoke precedence via [`is_calibrated_report`] at the
-/// caller.
+/// caller. The report self-stamps `simd_level` — the dispatch arm active
+/// when it was written (`crate::arch::active_level`), which is what the
+/// CI bench gate keys its SIMD-speedup requirement on.
 pub fn write_mvm_report(
     path: &std::path::Path,
     source: &str,
@@ -390,6 +392,10 @@ pub fn write_mvm_report(
 ) {
     let mut doc = Json::obj();
     doc.set("source", Json::Str(source.to_string()))
+        .set(
+            "simd_level",
+            Json::Str(crate::arch::active_level().to_string()),
+        )
         .set("rows", Json::Num(rows as f64))
         .set("words", Json::Num(words as f64))
         .set(
@@ -445,6 +451,7 @@ impl GrngFillCase {
 /// software throughput, comparable against the paper's 5.12 GSa/s
 /// hardware number) and `speedup_block_vs_legacy` (SoA block sampler vs
 /// the retained per-cell AoS walk, same streams, bit-identical outputs).
+/// Self-stamps `simd_level` like [`write_mvm_report`].
 pub fn write_grng_fill_report(
     path: &std::path::Path,
     source: &str,
@@ -455,6 +462,10 @@ pub fn write_grng_fill_report(
 ) {
     let mut doc = Json::obj();
     doc.set("source", Json::Str(source.to_string()))
+        .set(
+            "simd_level",
+            Json::Str(crate::arch::active_level().to_string()),
+        )
         .set("rows", Json::Num(rows as f64))
         .set("words", Json::Num(words as f64))
         .set(

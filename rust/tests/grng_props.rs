@@ -10,10 +10,17 @@
 //!    the row-major conversion, cell for cell, bit for bit.
 //! 3. `shard_die_seed` (now an O(1) SplitMix64 jump) matches the pre-PR
 //!    O(shard) split loop bit-for-bit.
+//! 4. (ISSUE 6) The vectorized Gaussian block pass (SIMD xoshiro sweep +
+//!    per-lane ziggurat finish + dispatched normalize) is bit-identical
+//!    to the forced-scalar arm, replays deterministically, and passes
+//!    distributional gates (moments, normal QQ correlation, lag-1
+//!    autocorrelation) — both arms run on every host, since an
+//!    unsupported forced level degrades to scalar.
 //!
 //! The file also seeds the repo-root `BENCH_grng_fill.json` perf artifact
 //! at smoke scale (the calibrated writer is `benches/grng.rs`).
 
+use bnn_cim::arch::{detected_level, ForcedLevelGuard, SimdLevel};
 use bnn_cim::config::ChipConfig;
 use bnn_cim::grng::{shard_die_seed, GrngBank};
 use bnn_cim::util::bench::{
@@ -22,6 +29,7 @@ use bnn_cim::util::bench::{
 };
 use bnn_cim::util::propcheck::{property, Gen};
 use bnn_cim::util::rng::SplitMix64;
+use bnn_cim::util::stats::{pearson, qq_r_value, Summary};
 
 /// Random small-bank chip (cheap per property case, physics unchanged).
 /// Half the cases run a hot die (60 °C), where the outlier probability is
@@ -113,6 +121,102 @@ fn hot_die_block_path_produces_outlier_tails() {
 }
 
 #[test]
+fn forced_scalar_and_vector_fills_are_bit_identical() {
+    // Dispatch-boundary pin: twin banks (same die, same streams) run the
+    // block fill under forced-scalar vs the detected vector level. The
+    // vector arm's SIMD xoshiro sweep and dispatched normalize must not
+    // shift a single bit, in either output layout.
+    property("fill scalar arm == vector arm (bitwise)", 12, |g| {
+        let chip = random_chip(g);
+        let mut scalar_bank = GrngBank::for_chip(&chip);
+        let mut vector_bank = GrngBank::for_chip(&chip);
+        let n = scalar_bank.len();
+        let mut a = vec![0.0; n];
+        let mut b = vec![0.0; n];
+        for round in 0..3 {
+            let planes = round % 2 == 1;
+            {
+                let _scalar = ForcedLevelGuard::new(SimdLevel::Scalar);
+                if planes {
+                    scalar_bank.fill_epsilon_planes(&mut a);
+                } else {
+                    scalar_bank.fill_epsilon(&mut a);
+                }
+            }
+            {
+                let _vector = ForcedLevelGuard::new(detected_level());
+                if planes {
+                    vector_bank.fill_epsilon_planes(&mut b);
+                } else {
+                    vector_bank.fill_epsilon(&mut b);
+                }
+            }
+            assert_eq!(a, b, "round {round} (planes={planes})");
+        }
+    });
+}
+
+#[test]
+fn vectorized_fill_replays_deterministically() {
+    // Replay gate: two identically-seeded banks under the dispatched
+    // (vector where available) arm must produce the same ε stream fill
+    // after fill; a reseed re-pins the stream.
+    let chip = ChipConfig::default();
+    let _vector = ForcedLevelGuard::new(detected_level());
+    let mut a_bank = GrngBank::for_chip(&chip);
+    let mut b_bank = GrngBank::for_chip(&chip);
+    let n = a_bank.len();
+    let mut a = vec![0.0; n];
+    let mut b = vec![0.0; n];
+    for round in 0..5 {
+        a_bank.fill_epsilon_planes(&mut a);
+        b_bank.fill_epsilon_planes(&mut b);
+        assert_eq!(a, b, "replay diverged at round {round}");
+    }
+    a_bank.reseed_cells(0xCAFE);
+    b_bank.reseed_cells(0xCAFE);
+    a_bank.fill_epsilon(&mut a);
+    b_bank.fill_epsilon(&mut b);
+    assert_eq!(a, b, "replay diverged after reseed");
+}
+
+#[test]
+fn vectorized_fill_passes_correlation_gates() {
+    // Distributional gate on the vectorized arm: ε over many conversions
+    // of the default cold 64×8 die must look standard-normal — moments,
+    // normal QQ correlation, and no lag-1 autocorrelation (a vertical
+    // SIMD sweep that cross-wired adjacent lanes' states would light this
+    // up immediately).
+    let chip = ChipConfig::default();
+    let _vector = ForcedLevelGuard::new(detected_level());
+    let mut bank = GrngBank::for_chip(&chip);
+    let n = bank.len();
+    let mut buf = vec![0.0; n];
+    let mut stream = Vec::with_capacity(n * 200);
+    for _ in 0..200 {
+        bank.fill_epsilon(&mut buf);
+        stream.extend_from_slice(&buf);
+    }
+    let s = Summary::from_slice(&stream);
+    // The mean carries the die's fixed per-cell offsets (they do not
+    // average out with more fills), so the gate is on the die scale.
+    assert!(s.mean().abs() < 0.1, "ε mean {} drifted", s.mean());
+    assert!(
+        (0.8..1.3).contains(&s.std()),
+        "ε std {} out of range",
+        s.std()
+    );
+    // Same threshold as the chip-sample gate in `grng::quality`.
+    let qq = qq_r_value(&stream);
+    assert!(qq > 0.985, "normal QQ correlation {qq} too low");
+    let lag1 = pearson(&stream[..stream.len() - 1], &stream[1..]);
+    assert!(
+        lag1.abs() < 0.05,
+        "lag-1 autocorrelation {lag1} — lanes are cross-correlated"
+    );
+}
+
+#[test]
 fn shard_die_seed_jump_matches_the_split_loop() {
     // Reference: the pre-PR O(shard) implementation, looping the
     // splitter `shard` times.
@@ -157,14 +261,27 @@ fn bench_grng_fill_smoke_seed() {
     let planes = quick_ns_per_iter(|| bank_planes.fill_epsilon_planes(&mut buf), 16, target);
     let mut bank_legacy = GrngBank::for_chip(&chip);
     let legacy = quick_ns_per_iter(|| bank_legacy.fill_epsilon_legacy(&mut buf), 16, target);
+    // SIMD arm vs forced-scalar arm of the identical block fill.
+    let mut bank_scalar = GrngBank::for_chip(&chip);
+    let block_scalar = {
+        let _scalar = ForcedLevelGuard::new(SimdLevel::Scalar);
+        quick_ns_per_iter(|| bank_scalar.fill_epsilon_planes(&mut buf), 16, target)
+    };
+    let mut bank_simd = GrngBank::for_chip(&chip);
+    let block_simd = {
+        let _vector = ForcedLevelGuard::new(detected_level());
+        quick_ns_per_iter(|| bank_simd.fill_epsilon_planes(&mut buf), 16, target)
+    };
 
     let gsa_per_s = cells as f64 / block.max(1e-9);
     let speedup_block_vs_legacy = legacy / block.max(1e-9);
     let speedup_planes_vs_legacy = legacy / planes.max(1e-9);
+    let speedup_simd_vs_scalar = block_scalar / block_simd.max(1e-9);
     println!(
         "grng fill smoke: block {block:.0} ns/fill, planes {planes:.0} ns/fill, \
          legacy {legacy:.0} ns/fill, speedup {speedup_block_vs_legacy:.2}x, \
-         {gsa_per_s:.4} GSa/s"
+         simd({}) vs scalar {speedup_simd_vs_scalar:.2}x, {gsa_per_s:.4} GSa/s",
+        detected_level()
     );
 
     let root = repo_root_artifact("BENCH_grng_fill.json");
@@ -181,11 +298,14 @@ fn bench_grng_fill_smoke_seed() {
             GrngFillCase::new("block_soa", block, cells),
             GrngFillCase::new("block_soa_planes", planes, cells),
             GrngFillCase::new("legacy_aos", legacy, cells),
+            GrngFillCase::new("block_soa_planes_forced_scalar", block_scalar, cells),
+            GrngFillCase::new("block_soa_planes_simd", block_simd, cells),
         ],
         &[
             ("gsa_per_s", gsa_per_s),
             ("speedup_block_vs_legacy", speedup_block_vs_legacy),
             ("speedup_planes_vs_legacy", speedup_planes_vs_legacy),
+            ("speedup_simd_vs_scalar", speedup_simd_vs_scalar),
         ],
     );
 }

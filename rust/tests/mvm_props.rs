@@ -10,14 +10,22 @@
 //! 3. `mvm_batch` is bit-identical to the same number of sequential
 //!    `mvm` calls (tile and array level), while amortizing drives, plane
 //!    builds and ledger deposits.
+//! 4. (ISSUE 6) The runtime-dispatched SIMD arm of the MVM is
+//!    bit-identical to the forced-scalar arm — at the `lane_dot` kernel
+//!    level across geometries/remainders, and end-to-end through
+//!    `CimTile::mvm` — so both arms run in this suite on every host
+//!    regardless of its ISA (an unsupported forced level degrades to
+//!    scalar, making the comparison a no-op rather than a skip).
 //!
 //! The file also seeds the repo-root `BENCH_cim_mvm.json` perf artifact
 //! at smoke scale (the calibrated writer is `benches/cim_mvm.rs`).
 
+use bnn_cim::arch::{detected_level, lane_dot_at, ForcedLevelGuard, SimdLevel};
 use bnn_cim::cim::{CimTile, MvmOptions};
 use bnn_cim::config::ChipConfig;
 use bnn_cim::util::bench::{
-    is_calibrated_report, quick_ns_per_iter, repo_root_artifact, write_mvm_report, MvmBenchCase,
+    black_box, is_calibrated_report, quick_ns_per_iter, repo_root_artifact, write_mvm_report,
+    MvmBenchCase,
 };
 use bnn_cim::util::propcheck::{property, Gen};
 use bnn_cim::util::rng::{Pcg64, Rng64};
@@ -185,6 +193,71 @@ fn pipelined_mvm_batch_is_bit_identical_to_sequential() {
     });
 }
 
+#[test]
+fn lane_dot_vector_arm_matches_scalar_across_geometries() {
+    // Kernel-level pin: the dispatched vector lane_dot must agree with the
+    // scalar oracle bit-for-bit on every length class mod 8 (full AVX2/NEON
+    // chunks, partial chunks, empty). On a scalar-only host both arms are
+    // the oracle and the property degenerates to reflexivity.
+    property("lane_dot vector arm == scalar arm (bitwise)", 48, |g| {
+        let n = g.usize_in(0, 131);
+        let mk = |g: &mut Gen, n: usize| -> Vec<f64> {
+            (0..n)
+                .map(|_| match g.usize_in(0, 7) {
+                    0 => 0.0,
+                    1 => g.f64_in(-1e-12, 1e-12),
+                    2 => g.f64_in(-1e12, 1e12),
+                    _ => g.f64_in(-200.0, 200.0),
+                })
+                .collect()
+        };
+        let a = mk(g, n);
+        let b = mk(g, n);
+        let scalar = lane_dot_at(SimdLevel::Scalar, &a, &b);
+        let vector = lane_dot_at(detected_level(), &a, &b);
+        assert_eq!(
+            scalar.to_bits(),
+            vector.to_bits(),
+            "lane_dot diverged at n={n} ({} vs scalar)",
+            detected_level()
+        );
+    });
+}
+
+#[test]
+fn forced_scalar_and_vector_mvms_are_bit_identical() {
+    // End-to-end pin across the dispatch boundary: one tile runs every
+    // MVM under a forced-scalar guard, its twin under the detected vector
+    // level. Same die, same streams — any divergence is a vector kernel
+    // breaking the determinism contract, not noise.
+    property("mvm scalar arm == vector arm (bitwise)", 12, |g| {
+        let chip = random_chip(g);
+        let mut scalar_tile = CimTile::new(&chip);
+        let mut vector_tile = CimTile::new(&chip);
+        let program_seed = g.u64();
+        let sigma_scale = g.f64_in(0.0, 15.0);
+        random_program(&mut scalar_tile, program_seed, sigma_scale);
+        random_program(&mut vector_tile, program_seed, sigma_scale);
+        for case in 0..3 {
+            let opts = MvmOptions {
+                bayesian: g.bool() || case == 0,
+                refresh_epsilon: g.bool() || case == 1,
+                ideal_analog: g.bool(),
+            };
+            let x = random_input(scalar_tile.rows(), g.u64());
+            let a = {
+                let _scalar = ForcedLevelGuard::new(SimdLevel::Scalar);
+                scalar_tile.mvm(&x, opts)
+            };
+            let b = {
+                let _vector = ForcedLevelGuard::new(detected_level());
+                vector_tile.mvm(&x, opts)
+            };
+            assert_same(&a, &b, &format!("case {case}, opts {opts:?}"));
+        }
+    });
+}
+
 /// Smoke-scale seed of the repo-root `BENCH_cim_mvm.json` perf artifact:
 /// single-thread MVM throughput of the pre-PR AoS baseline vs the SoA
 /// fast path (fresh-ε and held-ε) and the batched fast path, on the
@@ -215,6 +288,36 @@ fn bench_cim_mvm_smoke_seed() {
     let batch_fresh =
         quick_ns_per_iter(|| drop(tile.mvm_batch(&x, batch, fresh)), 2, target) / batch as f64;
 
+    // SIMD arm vs forced-scalar arm on the identical SoA path (held ε, so
+    // the comparison isolates the lane_dot/mul_into kernels): end-to-end
+    // MVM and the raw lane_dot kernel at the tile's row depth.
+    let soa_held_scalar = {
+        let _scalar = ForcedLevelGuard::new(SimdLevel::Scalar);
+        quick_ns_per_iter(|| drop(tile.mvm(&x, held)), 8, target)
+    };
+    let soa_held_simd = {
+        let _vector = ForcedLevelGuard::new(detected_level());
+        quick_ns_per_iter(|| drop(tile.mvm(&x, held)), 8, target)
+    };
+    let mut kernel_rng = Pcg64::new(0x5EED_D07);
+    let ka: Vec<f64> = (0..chip.tile.rows).map(|_| kernel_rng.next_f64() - 0.5).collect();
+    let kb: Vec<f64> = (0..chip.tile.rows).map(|_| kernel_rng.next_f64() - 0.5).collect();
+    let kernel_target = std::time::Duration::from_millis(40);
+    let lane_dot_scalar_ns = quick_ns_per_iter(
+        || {
+            black_box(lane_dot_at(SimdLevel::Scalar, black_box(&ka), black_box(&kb)));
+        },
+        10_000,
+        kernel_target,
+    );
+    let lane_dot_simd_ns = quick_ns_per_iter(
+        || {
+            black_box(lane_dot_at(detected_level(), black_box(&ka), black_box(&kb)));
+        },
+        10_000,
+        kernel_target,
+    );
+
     let cases = [
         MvmBenchCase::new("legacy_aos_fresh_eps", legacy_fresh, ops),
         MvmBenchCase::new("soa_fresh_eps", soa_fresh, ops),
@@ -222,15 +325,22 @@ fn bench_cim_mvm_smoke_seed() {
         MvmBenchCase::new("legacy_aos_held_eps", legacy_held, ops),
         MvmBenchCase::new("soa_held_eps", soa_held, ops),
         MvmBenchCase::new("soa_batch16_held_eps", batch_held, ops),
+        MvmBenchCase::new("soa_held_eps_forced_scalar", soa_held_scalar, ops),
+        MvmBenchCase::new("soa_held_eps_simd", soa_held_simd, ops),
     ];
     // Headline: MVM compute throughput (held ε — both arms would pay the
     // identical in-word sampling cost, so it cancels), batched SoA vs the
     // pre-PR per-call AoS path. Fresh-ε speedup reported alongside.
     let speedup_single_thread = legacy_held / batch_held.max(1e-9);
     let speedup_fresh = legacy_fresh / batch_fresh.max(1e-9);
+    let speedup_simd_vs_scalar = soa_held_scalar / soa_held_simd.max(1e-9);
+    let speedup_lane_dot = lane_dot_scalar_ns / lane_dot_simd_ns.max(1e-9);
     println!(
         "cim mvm smoke: held-ε speedup {speedup_single_thread:.2}x, \
-         fresh-ε speedup {speedup_fresh:.2}x"
+         fresh-ε speedup {speedup_fresh:.2}x, \
+         simd({}) vs scalar {speedup_simd_vs_scalar:.2}x \
+         (lane_dot kernel {speedup_lane_dot:.2}x)",
+        detected_level()
     );
 
     let root = repo_root_artifact("BENCH_cim_mvm.json");
@@ -247,6 +357,8 @@ fn bench_cim_mvm_smoke_seed() {
         &[
             ("speedup_single_thread", speedup_single_thread),
             ("speedup_fresh_eps", speedup_fresh),
+            ("speedup_simd_vs_scalar", speedup_simd_vs_scalar),
+            ("speedup_lane_dot_simd_vs_scalar", speedup_lane_dot),
         ],
     );
 }
