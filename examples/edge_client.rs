@@ -1,0 +1,111 @@
+//! `edge_client` — prove the wire format from the outside.
+//!
+//! A deliberately std-only HTTP client: the request bytes are written by
+//! hand (no `edge::http::MiniClient`, no JSON library) so this example
+//! demonstrates that any language with a TCP socket can talk to the
+//! edge. It submits one synthetic image to `POST /v1/infer` and prints
+//! the `UncertaintyReport` verdict fields scanned straight out of the
+//! response text.
+//!
+//! Start a server first, then point the example at it:
+//!
+//! ```text
+//! cargo run --release -- serve --listen 127.0.0.1:8080 --backend sim --workers 2
+//! cargo run --release --example edge_client 127.0.0.1:8080
+//! ```
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Pull the value following `"key":` out of a flat JSON response — good
+/// enough for a demo whose point is the wire bytes, not a parser.
+fn scan_field<'a>(body: &'a str, key: &str) -> Option<&'a str> {
+    let needle = format!("\"{key}\":");
+    let start = body.find(&needle)? + needle.len();
+    let rest = &body[start..];
+    let end = rest
+        .find(|c| c == ',' || c == '}')
+        .unwrap_or(rest.len());
+    Some(rest[..end].trim())
+}
+
+fn main() {
+    let addr = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "127.0.0.1:8080".to_string());
+
+    // A 32×32 synthetic "image": a radial gradient, just plausible enough
+    // to classify. Any f32 vector of length image_side² works.
+    let side = 32usize;
+    let mut body = String::from("{\"pixels\":[");
+    for y in 0..side {
+        for x in 0..side {
+            if y + x > 0 {
+                body.push(',');
+            }
+            let dx = x as f64 - side as f64 / 2.0;
+            let dy = y as f64 - side as f64 / 2.0;
+            let v = (1.0 - (dx * dx + dy * dy).sqrt() / side as f64).max(0.0);
+            body.push_str(&format!("{v:.4}"));
+        }
+    }
+    body.push_str("],\"mc_samples\":16,\"defer_threshold\":0.45}");
+
+    let mut stream = match TcpStream::connect(&addr) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!(
+                "could not connect to {addr}: {e}\n\
+                 start a server first:\n  \
+                 cargo run --release -- serve --listen {addr} --backend sim --workers 2"
+            );
+            std::process::exit(1);
+        }
+    };
+
+    // The whole request, by hand: request line, framing headers, body.
+    let request = format!(
+        "POST /v1/infer HTTP/1.1\r\n\
+         Host: {addr}\r\n\
+         Content-Type: application/json\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(request.as_bytes()).expect("send request");
+
+    let mut response = String::new();
+    stream.read_to_string(&mut response).expect("read response");
+    let (head, resp_body) = response
+        .split_once("\r\n\r\n")
+        .unwrap_or((response.as_str(), ""));
+    let status_line = head.lines().next().unwrap_or("");
+    println!("{status_line}");
+
+    if !status_line.contains(" 200 ") {
+        println!("{resp_body}");
+        std::process::exit(1);
+    }
+
+    let deferred = scan_field(resp_body, "deferred").unwrap_or("?");
+    println!(
+        "class     = {}\nconfidence= {}\nentropy   = {} nats \
+         (aleatoric {} + epistemic {})\nthreshold = {}\ndegraded  = {} | escalated = {}",
+        scan_field(resp_body, "class").unwrap_or("?"),
+        scan_field(resp_body, "confidence").unwrap_or("?"),
+        scan_field(resp_body, "entropy").unwrap_or("?"),
+        scan_field(resp_body, "aleatoric").unwrap_or("?"),
+        scan_field(resp_body, "epistemic").unwrap_or("?"),
+        scan_field(resp_body, "threshold").unwrap_or("?"),
+        scan_field(resp_body, "degraded").unwrap_or("?"),
+        scan_field(resp_body, "escalated").unwrap_or("?"),
+    );
+    println!(
+        "verdict   = {}",
+        if deferred == "true" {
+            "DEFER — entropy above threshold, route to a human / full pass"
+        } else {
+            "ACCEPT — uncertainty within budget"
+        }
+    );
+}

@@ -1,0 +1,297 @@
+//! Bench: `edge_load` — the network edge under open-loop offered load.
+//!
+//! Boots a full coordinator (sim backend) plus the HTTP edge on an
+//! ephemeral loopback port, then drives it the way real traffic arrives:
+//! an *open-loop* schedule (request i is due at `t0 + i/rate` whether or
+//! not earlier requests finished — no accidental self-throttling) with a
+//! heavy-tailed `mc_samples` mix (mostly cheap, a few expensive). Each
+//! offered rate is one sweep point; the report is the measured load
+//! curve: completed rps, p50/p99 latency, and the admission counters
+//! (shed / degraded / escalated) as overload sets in.
+//!
+//! Rates are calibrated against the server's own measured closed-loop
+//! capacity, so the sweep brackets saturation on any host: below it the
+//! edge admits everything, above it the shed/degrade/escalate machine
+//! carries the overflow. `--quick` runs two points (0.5× and 3×
+//! capacity) at CI scale; results land in `BENCH_edge.json` at the repo
+//! root (`scripts/bench_gate.py` gates on them in the edge-smoke job).
+
+use bnn_cim::client::{Backend, Config, Coordinator, EdgeServer};
+use bnn_cim::data::SyntheticPerson;
+use bnn_cim::edge::MiniClient;
+use bnn_cim::util::bench::{is_calibrated_report, repo_root_artifact, Suite};
+use bnn_cim::util::json::Json;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Heavy-tail fidelity mix, deterministic by request index: 80% cheap
+/// (mc=4), 15% medium (mc=16), 5% heavy (mc=64).
+fn mc_mix(i: usize) -> usize {
+    match i % 20 {
+        0..=15 => 4,
+        16..=18 => 16,
+        _ => 64,
+    }
+}
+
+fn request_body(pixels_json: &str, mc: usize) -> String {
+    format!("{{\"pixels\":{pixels_json},\"mc_samples\":{mc}}}")
+}
+
+#[derive(Default, Clone, Debug)]
+struct PointTally {
+    completed: u64,
+    shed: u64,
+    degraded: u64,
+    escalated: u64,
+    errors: u64,
+    latencies_ms: Vec<f64>,
+}
+
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+/// Drive one open-loop point at `rate` req/s for `window` seconds.
+fn run_point(
+    addr: std::net::SocketAddr,
+    pixels_json: &str,
+    rate: f64,
+    window: Duration,
+    clients: usize,
+    timeout: Duration,
+) -> PointTally {
+    let tally = Arc::new(Mutex::new(PointTally::default()));
+    let next = Arc::new(AtomicUsize::new(0));
+    let total = (rate * window.as_secs_f64()).ceil() as usize;
+    let t0 = Instant::now();
+    let threads: Vec<_> = (0..clients)
+        .map(|_| {
+            let tally = Arc::clone(&tally);
+            let next = Arc::clone(&next);
+            let pixels_json = pixels_json.to_string();
+            std::thread::spawn(move || {
+                let mut conn = MiniClient::connect(addr, timeout).ok();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= total {
+                        return;
+                    }
+                    // Open-loop: request i is due at t0 + i/rate.
+                    let due = Duration::from_secs_f64(i as f64 / rate);
+                    if let Some(wait) = due.checked_sub(t0.elapsed()) {
+                        std::thread::sleep(wait);
+                    }
+                    let body = request_body(&pixels_json, mc_mix(i));
+                    let sent = Instant::now();
+                    // Reconnect once if the pooled connection went away
+                    // (server closed an idle keep-alive, earlier error).
+                    let result = match conn.as_mut() {
+                        Some(c) => c.request("POST", "/v1/infer", Some(&body)),
+                        None => Err(std::io::ErrorKind::NotConnected.into()),
+                    };
+                    let result = match result {
+                        Ok(r) => Ok(r),
+                        Err(_) => {
+                            conn = MiniClient::connect(addr, timeout).ok();
+                            match conn.as_mut() {
+                                Some(c) => c.request("POST", "/v1/infer", Some(&body)),
+                                None => Err(std::io::ErrorKind::NotConnected.into()),
+                            }
+                        }
+                    };
+                    let mut t = tally.lock().unwrap();
+                    match result {
+                        Ok((200, resp)) => {
+                            t.completed += 1;
+                            t.latencies_ms.push(sent.elapsed().as_secs_f64() * 1e3);
+                            // Cheap flag scan — the wire encoder emits
+                            // these exact tokens.
+                            if resp.contains("\"degraded\":true") {
+                                t.degraded += 1;
+                            }
+                            if resp.contains("\"escalated\":true") {
+                                t.escalated += 1;
+                            }
+                        }
+                        Ok((429, _)) => t.shed += 1,
+                        Ok(_) | Err(_) => {
+                            t.errors += 1;
+                            conn = None; // force reconnect next round
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for th in threads {
+        let _ = th.join();
+    }
+    Arc::into_inner(tally).unwrap().into_inner().unwrap()
+}
+
+fn main() {
+    let mut suite = Suite::new("edge_load (HTTP edge: open-loop offered load vs admission)");
+    suite.header();
+    let quick = std::env::args().any(|a| a == "--quick");
+
+    let mut cfg = Config::default();
+    cfg.server.backend = Backend::Sim;
+    cfg.server.workers = 2;
+    cfg.server.mc_workers = 1;
+    cfg.server.max_batch = 8;
+    cfg.server.batch_deadline_ms = 0.5;
+    // Small queue so the load curve actually bends at bench scale.
+    cfg.server.queue_capacity = 32;
+    cfg.server.request_timeout_ms = 5000.0;
+    cfg.model.mc_samples = 8;
+    // Low deferral threshold: plenty of uncertain verdicts, so degraded
+    // passes exercise the escalation path, not just the cheap exit.
+    cfg.model.defer_threshold = 0.05;
+    cfg.server.edge_degrade_load = 0.3;
+    cfg.server.edge_shed_load = 0.85;
+    cfg.server.edge_degraded_mc_samples = 2;
+    cfg.server.edge_threads = 8;
+
+    let coord = Arc::new(
+        Coordinator::builder(cfg.clone())
+            .start()
+            .expect("coordinator boot"),
+    );
+    let edge = EdgeServer::bind("127.0.0.1:0", Arc::clone(&coord)).expect("edge bind");
+    let addr = edge.local_addr();
+    let timeout = Duration::from_secs(10);
+
+    let gen = SyntheticPerson::new(cfg.model.image_side, 2024);
+    let pixels = gen.sample(0).pixels;
+    let mut pixels_json = String::from("[");
+    for (i, p) in pixels.iter().enumerate() {
+        if i > 0 {
+            pixels_json.push(',');
+        }
+        pixels_json.push_str(&format!("{p}"));
+    }
+    pixels_json.push(']');
+
+    // Closed-loop calibration: sequential requests over one connection
+    // measure the per-request service capacity this host can sustain.
+    let mut conn = MiniClient::connect(addr, timeout).expect("calibration connect");
+    let cal_start = Instant::now();
+    let mut cal_done = 0u64;
+    while cal_start.elapsed() < Duration::from_millis(if quick { 300 } else { 1000 }) {
+        let body = request_body(&pixels_json, 4);
+        if conn.request("POST", "/v1/infer", Some(&body)).is_err() {
+            conn = MiniClient::connect(addr, timeout).expect("calibration reconnect");
+        }
+        cal_done += 1;
+    }
+    let capacity_rps = (cal_done as f64 / cal_start.elapsed().as_secs_f64()).max(1.0);
+    suite.note(
+        "calibration",
+        format!("closed-loop capacity ≈ {capacity_rps:.0} req/s (single connection)"),
+    );
+
+    let multipliers: &[f64] = if quick {
+        &[0.5, 3.0]
+    } else {
+        &[0.5, 1.0, 2.0, 4.0]
+    };
+    let window = Duration::from_secs_f64(if quick { 1.5 } else { 4.0 });
+    let clients = 16;
+
+    let mut points: Vec<Json> = Vec::new();
+    let mut peak_completed_rps = 0.0f64;
+    let mut overload: Option<Json> = None;
+    for &mult in multipliers {
+        let offered = capacity_rps * mult;
+        let t = run_point(addr, &pixels_json, offered, window, clients, timeout);
+        let mut lat = t.latencies_ms.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let achieved = t.completed as f64 / window.as_secs_f64();
+        peak_completed_rps = peak_completed_rps.max(achieved);
+        let p50 = pct(&lat, 0.50);
+        let p99 = pct(&lat, 0.99);
+        let p99_bounded = p99 <= cfg.server.request_timeout_ms;
+        // Live throughput counters from the server's own metrics route.
+        let (gop_per_s, gsa_per_s) = match MiniClient::connect(addr, timeout)
+            .and_then(|mut c| c.request("GET", "/v1/metrics", None))
+        {
+            Ok((200, body)) => match Json::parse(&body) {
+                Ok(doc) => (
+                    doc.get("gop_per_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    doc.get("epsilon_gsa_per_s")
+                        .and_then(|v| v.as_f64())
+                        .unwrap_or(0.0),
+                ),
+                Err(_) => (0.0, 0.0),
+            },
+            _ => (0.0, 0.0),
+        };
+        suite.note(
+            &format!("offered {offered:.0} rps ({mult}x capacity)"),
+            format!(
+                "completed {achieved:.0} rps, p50 {p50:.1} ms, p99 {p99:.1} ms, shed {} / \
+                 degraded {} / escalated {} / errors {}",
+                t.shed, t.degraded, t.escalated, t.errors
+            ),
+        );
+        let point = Json::Obj(
+            [
+                ("offered_rps".to_string(), Json::Num(offered)),
+                ("achieved_rps".to_string(), Json::Num(achieved)),
+                ("completed".to_string(), Json::Num(t.completed as f64)),
+                ("shed".to_string(), Json::Num(t.shed as f64)),
+                ("degraded".to_string(), Json::Num(t.degraded as f64)),
+                ("escalated".to_string(), Json::Num(t.escalated as f64)),
+                ("errors".to_string(), Json::Num(t.errors as f64)),
+                ("p50_ms".to_string(), Json::Num(p50)),
+                ("p99_ms".to_string(), Json::Num(p99)),
+                ("p99_bounded".to_string(), Json::Bool(p99_bounded)),
+                ("gop_per_s".to_string(), Json::Num(gop_per_s)),
+                ("epsilon_gsa_per_s".to_string(), Json::Num(gsa_per_s)),
+            ]
+            .into_iter()
+            .collect(),
+        );
+        if mult > 1.0 {
+            overload = Some(point.clone());
+        }
+        points.push(point);
+    }
+
+    edge.shutdown();
+    drop(coord);
+
+    let root = repo_root_artifact("BENCH_edge.json");
+    if quick && is_calibrated_report(&root) {
+        println!("  keeping calibrated {}", root.display());
+    } else {
+        let source = if quick {
+            "benches/edge_load.rs --quick (smoke-scale)"
+        } else {
+            "benches/edge_load.rs (calibrated, release profile)"
+        };
+        let mut extra = vec![
+            ("source", Json::Str(source.to_string())),
+            ("suite", Json::Str("edge".to_string())),
+            ("capacity_rps", Json::Num(capacity_rps)),
+            ("peak_completed_rps", Json::Num(peak_completed_rps)),
+            (
+                "request_timeout_ms",
+                Json::Num(cfg.server.request_timeout_ms),
+            ),
+            ("points", Json::Arr(points)),
+        ];
+        if let Some(o) = overload {
+            extra.push(("overload", o));
+        }
+        suite.write_report(&root, extra);
+        println!("  wrote {}", root.display());
+    }
+    suite.finish();
+}

@@ -36,6 +36,16 @@
 //! [`Coordinator::submit`] — same admission order, same queue, same
 //! batch fusion — so switching a client between the two never moves a
 //! single bit.
+//!
+//! ## Over the wire
+//!
+//! The same surface is served over HTTP by the network edge
+//! ([`EdgeServer`], re-exported here): `POST /v1/infer` carries
+//! [`Infer`]'s fields as JSON, responses carry the full
+//! [`UncertaintyReport`] with floats encoded losslessly, and every
+//! [`ServeError`] maps to a fixed status code
+//! ([`crate::edge::status_for`]). Start it with `serve --listen ADDR`
+//! or [`EdgeServer::bind`]; DESIGN.md §8 specifies the wire contract.
 
 mod builder;
 mod error;
@@ -53,6 +63,7 @@ pub use crate::config::{Backend, Config};
 pub use crate::coordinator::{
     Coordinator, EngineFactory, InferResponse, MetricsSnapshot, ShardSnapshot, SourceFactory,
 };
+pub use crate::edge::EdgeServer;
 pub use crate::runtime::EpsilonMode;
 
 impl Coordinator {

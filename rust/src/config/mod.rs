@@ -161,6 +161,43 @@ mc_workers = 3
     }
 
     #[test]
+    fn edge_knobs_parse_and_validate() {
+        let cfg = Config::from_toml_str(
+            r#"
+[server]
+listen = "127.0.0.1:8080"
+edge_threads = 2
+edge_degrade_load = 0.5
+edge_shed_load = 0.8
+edge_degraded_mc_samples = 2
+edge_retry_after_ms = 100
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.server.listen, "127.0.0.1:8080");
+        assert_eq!(cfg.server.edge_threads, 2);
+        assert_eq!(cfg.server.edge_degrade_load, 0.5);
+        assert_eq!(cfg.server.edge_shed_load, 0.8);
+        assert_eq!(cfg.server.edge_degraded_mc_samples, 2);
+        assert_eq!(cfg.server.edge_retry_after_ms, 100);
+        // Defaults: no edge unless a listen address is configured.
+        assert!(Config::default().server.listen.is_empty());
+        // Band ordering is the invariant: shed < degrade is rejected.
+        assert!(Config::from_toml_str(
+            "[server]\nedge_degrade_load = 0.9\nedge_shed_load = 0.5\n"
+        )
+        .is_err());
+        // Degraded passes must stay within the hard mc_samples bound.
+        assert!(Config::from_toml_str(
+            "[server]\nmax_mc_samples = 8\nedge_degraded_mc_samples = 16\n"
+        )
+        .is_err());
+        // 0.0 thresholds are legal: degrade/shed-everything test modes.
+        Config::from_toml_str("[server]\nedge_degrade_load = 0.0\nedge_shed_load = 0.0\n")
+            .unwrap();
+    }
+
+    #[test]
     fn backend_parses_and_rejects() {
         assert_eq!(Config::default().server.backend, Backend::Pjrt);
         let cfg = Config::from_toml_str("[server]\nbackend = \"cim\"\n").unwrap();

@@ -1,6 +1,6 @@
 //! Serving / coordinator configuration.
 
-use super::{f64_field, usize_field};
+use super::{f64_field, string_field, u64_field, usize_field};
 use crate::error::{Error, Result};
 use crate::util::json::Json;
 
@@ -67,6 +67,25 @@ pub struct ServerConfig {
     pub mc_workers: usize,
     /// Per-request deadline \[ms\]; exceeded requests are rejected.
     pub request_timeout_ms: f64,
+    /// Network-edge listen address (`host:port`; port 0 = ephemeral).
+    /// Empty string (the default) means no edge: in-process serving only.
+    /// `serve --listen` overrides.
+    pub listen: String,
+    /// Edge HTTP worker threads (connections served concurrently).
+    pub edge_threads: usize,
+    /// Load fraction (`queue_depth / queue_capacity`) at or above which
+    /// the edge degrades requests to `edge_degraded_mc_samples` cheap
+    /// passes and lets the `UncertaintyReport` verdict decide escalation.
+    pub edge_degrade_load: f64,
+    /// Load fraction at or above which the edge sheds requests outright
+    /// (429 + `Retry-After`). Must be ≥ `edge_degrade_load`.
+    pub edge_shed_load: f64,
+    /// MC passes used for a degraded (cheap) admission pass.
+    pub edge_degraded_mc_samples: usize,
+    /// `Retry-After` hint \[ms\] sent with shed (429) responses.
+    pub edge_retry_after_ms: u64,
+    /// Largest accepted request body \[bytes\] (413 beyond this).
+    pub edge_max_body_bytes: usize,
 }
 
 impl Default for ServerConfig {
@@ -80,6 +99,13 @@ impl Default for ServerConfig {
             max_mc_samples: 256,
             mc_workers: 4,
             request_timeout_ms: 1000.0,
+            listen: String::new(),
+            edge_threads: 4,
+            edge_degrade_load: 0.6,
+            edge_shed_load: 0.9,
+            edge_degraded_mc_samples: 4,
+            edge_retry_after_ms: 250,
+            edge_max_body_bytes: 8 << 20,
         }
     }
 }
@@ -99,6 +125,17 @@ impl ServerConfig {
         usize_field(doc, "max_mc_samples", &mut self.max_mc_samples)?;
         usize_field(doc, "mc_workers", &mut self.mc_workers)?;
         f64_field(doc, "request_timeout_ms", &mut self.request_timeout_ms)?;
+        string_field(doc, "listen", &mut self.listen)?;
+        usize_field(doc, "edge_threads", &mut self.edge_threads)?;
+        f64_field(doc, "edge_degrade_load", &mut self.edge_degrade_load)?;
+        f64_field(doc, "edge_shed_load", &mut self.edge_shed_load)?;
+        usize_field(
+            doc,
+            "edge_degraded_mc_samples",
+            &mut self.edge_degraded_mc_samples,
+        )?;
+        u64_field(doc, "edge_retry_after_ms", &mut self.edge_retry_after_ms)?;
+        usize_field(doc, "edge_max_body_bytes", &mut self.edge_max_body_bytes)?;
         Ok(())
     }
 
@@ -120,6 +157,31 @@ impl ServerConfig {
         }
         if self.batch_deadline_ms < 0.0 || self.request_timeout_ms <= 0.0 {
             return Err(Error::Config("server: invalid timeouts".into()));
+        }
+        if self.edge_threads == 0 {
+            return Err(Error::Config("server: edge_threads must be > 0".into()));
+        }
+        // 0.0 thresholds are legal (degrade/shed everything — used by
+        // overload tests); the invariant is only the band ordering.
+        if !self.edge_degrade_load.is_finite()
+            || !self.edge_shed_load.is_finite()
+            || self.edge_degrade_load < 0.0
+            || self.edge_shed_load < self.edge_degrade_load
+        {
+            return Err(Error::Config(
+                "server: edge loads must satisfy 0 <= edge_degrade_load <= edge_shed_load".into(),
+            ));
+        }
+        if self.edge_degraded_mc_samples == 0 || self.edge_degraded_mc_samples > self.max_mc_samples
+        {
+            return Err(Error::Config(
+                "server: edge_degraded_mc_samples must be in [1, max_mc_samples]".into(),
+            ));
+        }
+        if self.edge_max_body_bytes == 0 {
+            return Err(Error::Config(
+                "server: edge_max_body_bytes must be > 0".into(),
+            ));
         }
         Ok(())
     }

@@ -35,6 +35,17 @@ pub struct ShardSnapshot {
     /// the reply channel was dead when the worker sent. Served work with
     /// no reader — a leak indicator, not a failure.
     pub requests_orphaned: u64,
+    /// Requests the network edge refused outright under overload
+    /// (429 + `Retry-After`). Shed requests never reach a shard, so the
+    /// edge attributes them round-robin for balance — the per-shard split
+    /// is advisory; the global sum is exact.
+    pub requests_shed: u64,
+    /// Requests the edge admitted at reduced fidelity (cheap low-
+    /// `mc_samples` pass) because load sat in the degrade band.
+    pub requests_degraded: u64,
+    /// Degraded requests whose cheap-pass `UncertaintyReport` came back
+    /// uncertain and which the edge re-ran at full fidelity.
+    pub requests_escalated: u64,
     pub batches: u64,
     pub mc_passes: u64,
     /// Engine executions (PJRT calls, sim-engine or cim-engine calls).
@@ -101,6 +112,14 @@ pub struct MetricsSnapshot {
     /// Responses computed but sent into dead reply channels (dropped
     /// `Ticket`s / timed-out blocking calls), summed across shards.
     pub requests_orphaned: u64,
+    /// Requests the network edge shed under overload (429), summed
+    /// across shards (per-shard attribution is round-robin/advisory).
+    pub requests_shed: u64,
+    /// Requests the edge served at reduced `mc_samples` fidelity.
+    pub requests_degraded: u64,
+    /// Degraded requests escalated back to full sampling after an
+    /// uncertain cheap-pass verdict.
+    pub requests_escalated: u64,
     pub requests_deferred: u64,
     pub batches: u64,
     pub mc_passes: u64,
@@ -161,6 +180,7 @@ impl MetricsSnapshot {
     pub fn render(&self) -> String {
         let mut out = format!(
             "requests={} rejected={} orphaned={} deferred={} batches={} (fill {:.2})\n\
+             edge shed={} degraded={} escalated={}\n\
              mc_passes={} pjrt_exec={} eps_samples={} eps_energy={:.3} µJ\n\
              latency p50={:.2} ms p95={:.2} ms max={:.2} ms | throughput={:.1} req/s",
             self.requests_total,
@@ -169,6 +189,9 @@ impl MetricsSnapshot {
             self.requests_deferred,
             self.batches,
             self.mean_batch_fill,
+            self.requests_shed,
+            self.requests_degraded,
+            self.requests_escalated,
             self.mc_passes,
             self.pjrt_executions,
             self.epsilon_samples,
@@ -221,6 +244,12 @@ impl MetricsSnapshot {
                 if s.requests_orphaned > 0 {
                     out.push_str(&format!(" orphaned={}", s.requests_orphaned));
                 }
+                if s.requests_shed + s.requests_degraded + s.requests_escalated > 0 {
+                    out.push_str(&format!(
+                        " shed={} degraded={} escalated={}",
+                        s.requests_shed, s.requests_degraded, s.requests_escalated
+                    ));
+                }
                 if s.engine_energy_j > 0.0 {
                     out.push_str(&format!(
                         " tiles {:.3} µJ, {:.0} fJ/Sa",
@@ -244,6 +273,9 @@ pub struct Metrics {
 struct ShardInner {
     requests: u64,
     requests_orphaned: u64,
+    requests_shed: u64,
+    requests_degraded: u64,
+    requests_escalated: u64,
     batches: u64,
     mc_passes: u64,
     engine_executions: u64,
@@ -304,6 +336,26 @@ impl Metrics {
     /// reader. Counted per shard and summed globally.
     pub fn record_orphaned(&self, shard: usize) {
         self.inner.lock().unwrap().shards[shard].requests_orphaned += 1;
+    }
+
+    /// The network edge refused a request under overload (429 +
+    /// `Retry-After`). Shed requests never reach a shard; the edge passes
+    /// a round-robin shard hint so per-shard counters stay balanced and
+    /// the global sum stays exact.
+    pub fn record_shed(&self, shard: usize) {
+        self.inner.lock().unwrap().shards[shard].requests_shed += 1;
+    }
+
+    /// The edge admitted a request at reduced `mc_samples` fidelity.
+    /// Shard is derived from the response's `batch_id` routing.
+    pub fn record_degraded(&self, shard: usize) {
+        self.inner.lock().unwrap().shards[shard].requests_degraded += 1;
+    }
+
+    /// A degraded request's cheap-pass verdict was uncertain and the edge
+    /// re-ran it at full fidelity.
+    pub fn record_escalated(&self, shard: usize) {
+        self.inner.lock().unwrap().shards[shard].requests_escalated += 1;
     }
 
     pub fn record_batch(
@@ -411,6 +463,9 @@ impl Metrics {
                 shard: i,
                 requests: s.requests,
                 requests_orphaned: s.requests_orphaned,
+                requests_shed: s.requests_shed,
+                requests_degraded: s.requests_degraded,
+                requests_escalated: s.requests_escalated,
                 batches: s.batches,
                 mc_passes: s.mc_passes,
                 engine_executions: s.engine_executions,
@@ -441,6 +496,9 @@ impl Metrics {
             requests_total: g.requests_total,
             requests_rejected: g.requests_rejected,
             requests_orphaned: per_shard.iter().map(|s| s.requests_orphaned).sum(),
+            requests_shed: per_shard.iter().map(|s| s.requests_shed).sum(),
+            requests_degraded: per_shard.iter().map(|s| s.requests_degraded).sum(),
+            requests_escalated: per_shard.iter().map(|s| s.requests_escalated).sum(),
             requests_deferred: g.requests_deferred,
             batches,
             mc_passes: per_shard.iter().map(|s| s.mc_passes).sum(),
@@ -519,6 +577,33 @@ mod tests {
         assert!(s.render().contains("orphaned=3"));
         // The per-shard render line surfaces nonzero orphan counts.
         assert!(s.render().contains("orphaned=2"));
+    }
+
+    #[test]
+    fn edge_admission_counters_count_per_shard_and_globally() {
+        let m = Metrics::new(2);
+        m.record_shed(0);
+        m.record_shed(1);
+        m.record_shed(1);
+        m.record_degraded(0);
+        m.record_degraded(0);
+        m.record_escalated(0);
+        let s = m.snapshot();
+        assert_eq!(s.requests_shed, 3);
+        assert_eq!(s.requests_degraded, 2);
+        assert_eq!(s.requests_escalated, 1);
+        assert_eq!(s.per_shard[0].requests_shed, 1);
+        assert_eq!(s.per_shard[1].requests_shed, 2);
+        assert_eq!(s.per_shard[0].requests_degraded, 2);
+        assert_eq!(s.per_shard[1].requests_degraded, 0);
+        assert_eq!(s.per_shard[0].requests_escalated, 1);
+        let r = s.render();
+        assert!(r.contains("shed=3 degraded=2 escalated=1"), "global:\n{r}");
+        // Per-shard render line surfaces nonzero admission counters.
+        assert!(r.contains("shed=1 degraded=2 escalated=1"), "shard 0:\n{r}");
+        // A quiet registry still renders the edge line (zeros, no gating).
+        let quiet = Metrics::new(1).snapshot().render();
+        assert!(quiet.contains("shed=0 degraded=0 escalated=0"), "{quiet}");
     }
 
     #[test]

@@ -257,6 +257,31 @@ impl Coordinator {
         self.workers.len()
     }
 
+    /// Requests currently waiting in the admission queue. The network
+    /// edge's load signal: `queue_depth() / queue_capacity()` is the
+    /// instantaneous load fraction its shed/degrade thresholds act on.
+    pub fn queue_depth(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Capacity of the admission queue (`server.queue_capacity`).
+    pub fn queue_capacity(&self) -> usize {
+        self.cfg.server.queue_capacity
+    }
+
+    /// Live handle to the shared metrics registry, so out-of-band
+    /// observers (the network edge's admission counters) can record into
+    /// the same ledger the shard workers use. Snapshots stay
+    /// non-destructive; this is a `Clone` of the `Arc`ed registry.
+    pub fn metrics_registry(&self) -> Metrics {
+        self.metrics.clone()
+    }
+
+    /// The resolved configuration this pool was booted with (read-only).
+    pub fn config(&self) -> &Config {
+        &self.cfg
+    }
+
     /// Graceful shutdown: close the request queue, let the dispatcher
     /// flush and close the shard queues, join everything.
     pub fn shutdown(mut self) {

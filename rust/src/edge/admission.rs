@@ -1,0 +1,166 @@
+//! Admission control for the network edge: backpressure plus
+//! uncertainty-aware load shedding.
+//!
+//! The load signal is the coordinator's own bound —
+//! `queue_depth / queue_capacity` — so the edge's thresholds compose with
+//! the queue-capacity backpressure that already exists (`try_send` →
+//! `QueueFull`) instead of inventing a second accounting. Three bands:
+//!
+//! ```text
+//!   load < degrade_load             → Admit   (full-fidelity pass)
+//!   degrade_load <= load < shed     → Degrade (cheap low-mc pass first)
+//!   shed_load <= load               → Shed    (429 + Retry-After)
+//! ```
+//!
+//! Degraded requests get the paper's headline feature pointed back at the
+//! serving system: the cheap pass's [`UncertaintyReport`] verdict decides
+//! what happens next. A confident cheap answer ships as-is (marked
+//! `degraded`); an uncertain one is *escalated* to the originally
+//! requested fidelity if capacity has recovered, and otherwise ships as
+//! an explicit deferral — the response says the system declined to look
+//! closer, rather than silently returning a low-quality answer.
+//!
+//! [`UncertaintyReport`]: crate::client::UncertaintyReport
+//!
+//! Decision functions are pure (load in, verdict out) so the state
+//! machine is pinned by deterministic unit tests; the router samples the
+//! live queue depth and applies them.
+
+use crate::config::ServerConfig;
+
+/// Thresholds governing the edge state machine (from `[server]` config).
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionPolicy {
+    /// Load fraction at which requests degrade to cheap passes.
+    pub degrade_load: f64,
+    /// Load fraction at which requests are refused outright.
+    pub shed_load: f64,
+    /// MC passes used for a degraded pass.
+    pub degraded_mc_samples: usize,
+    /// `Retry-After` hint \[ms\] for shed responses.
+    pub retry_after_ms: u64,
+}
+
+/// What admission decided for one request at one load sample.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Run at the requested fidelity.
+    Admit,
+    /// Run a cheap pass at `mc_samples` first; the uncertainty verdict
+    /// picks escalation vs explicit deferral.
+    Degrade { mc_samples: usize },
+    /// Refuse with 429; the client should retry after the hint.
+    Shed { retry_after_ms: u64 },
+}
+
+impl AdmissionPolicy {
+    pub fn from_config(cfg: &ServerConfig) -> Self {
+        Self {
+            degrade_load: cfg.edge_degrade_load,
+            shed_load: cfg.edge_shed_load,
+            degraded_mc_samples: cfg.edge_degraded_mc_samples,
+            retry_after_ms: cfg.edge_retry_after_ms,
+        }
+    }
+
+    /// Pure admission decision. `load` is the instantaneous queue-load
+    /// fraction; `effective_mc` is the fidelity the request would run at
+    /// if admitted (the requested `mc_samples`, or the model default when
+    /// the request left it 0). Requests already at or below the degraded
+    /// fidelity are admitted as-is inside the degrade band — degrading
+    /// them would change nothing.
+    pub fn decide(&self, load: f64, effective_mc: usize) -> Decision {
+        if load >= self.shed_load {
+            Decision::Shed {
+                retry_after_ms: self.retry_after_ms,
+            }
+        } else if load >= self.degrade_load && effective_mc > self.degraded_mc_samples {
+            Decision::Degrade {
+                mc_samples: self.degraded_mc_samples,
+            }
+        } else {
+            Decision::Admit
+        }
+    }
+
+    /// After a degraded pass: escalate to full fidelity only when the
+    /// cheap verdict came back uncertain (`deferred`) *and* the load has
+    /// dropped back out of the shed band — otherwise the response ships
+    /// as an explicit deferral.
+    pub fn escalate(&self, load: f64, cheap_verdict_deferred: bool) -> bool {
+        cheap_verdict_deferred && load < self.shed_load
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> AdmissionPolicy {
+        AdmissionPolicy {
+            degrade_load: 0.6,
+            shed_load: 0.9,
+            degraded_mc_samples: 4,
+            retry_after_ms: 250,
+        }
+    }
+
+    #[test]
+    fn bands_partition_the_load_axis() {
+        let p = policy();
+        assert_eq!(p.decide(0.0, 64), Decision::Admit);
+        assert_eq!(p.decide(0.59, 64), Decision::Admit);
+        // Band edges are inclusive: load == threshold trips the band.
+        assert_eq!(p.decide(0.6, 64), Decision::Degrade { mc_samples: 4 });
+        assert_eq!(p.decide(0.89, 64), Decision::Degrade { mc_samples: 4 });
+        assert_eq!(p.decide(0.9, 64), Decision::Shed { retry_after_ms: 250 });
+        assert_eq!(p.decide(2.0, 64), Decision::Shed { retry_after_ms: 250 });
+    }
+
+    #[test]
+    fn cheap_requests_never_degrade() {
+        let p = policy();
+        // Already at/below the degraded fidelity: nothing to cut.
+        assert_eq!(p.decide(0.7, 4), Decision::Admit);
+        assert_eq!(p.decide(0.7, 1), Decision::Admit);
+        assert_eq!(p.decide(0.7, 5), Decision::Degrade { mc_samples: 4 });
+        // But shedding still applies regardless of fidelity.
+        assert_eq!(p.decide(0.95, 1), Decision::Shed { retry_after_ms: 250 });
+    }
+
+    #[test]
+    fn escalation_needs_uncertainty_and_headroom() {
+        let p = policy();
+        assert!(p.escalate(0.2, true), "uncertain + headroom → escalate");
+        assert!(p.escalate(0.89, true), "below shed band still escalates");
+        assert!(!p.escalate(0.9, true), "shed band → explicit deferral");
+        assert!(!p.escalate(0.2, false), "confident cheap pass ships as-is");
+        assert!(!p.escalate(1.5, false));
+    }
+
+    #[test]
+    fn degenerate_thresholds_are_total() {
+        // degrade == shed == 0: everything sheds (drain mode).
+        let drain = AdmissionPolicy {
+            degrade_load: 0.0,
+            shed_load: 0.0,
+            degraded_mc_samples: 1,
+            retry_after_ms: 1,
+        };
+        assert_eq!(drain.decide(0.0, 8), Decision::Shed { retry_after_ms: 1 });
+        // degrade 0, shed huge: everything (non-cheap) degrades, nothing
+        // sheds, every uncertain verdict escalates — the overload test's
+        // deterministic forcing mode.
+        let degrade_all = AdmissionPolicy {
+            degrade_load: 0.0,
+            shed_load: 1e9,
+            degraded_mc_samples: 2,
+            retry_after_ms: 1,
+        };
+        assert_eq!(
+            degrade_all.decide(0.0, 8),
+            Decision::Degrade { mc_samples: 2 }
+        );
+        assert!(degrade_all.escalate(0.0, true));
+    }
+}

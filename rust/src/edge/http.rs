@@ -1,0 +1,600 @@
+//! Minimal HTTP/1.1 server on `std::net` — no crates, no async runtime.
+//!
+//! One blocking accept thread feeds a bounded connection queue drained by
+//! a small worker pool (`edge_threads`); each worker serves its
+//! connection with keep-alive, `Content-Length` framing, and per-read
+//! timeouts. The queue is the same [`Bounded`] MPMC channel the
+//! coordinator uses, so saturation backpressure propagates to the TCP
+//! accept backlog instead of spawning unbounded threads.
+//!
+//! Scope is deliberately narrow — exactly what the `/v1` routes need:
+//! no chunked transfer encoding (411 when a body has no length), no TLS,
+//! no HTTP/2. Anything malformed is answered with a 4xx and the
+//! connection closed; handler panics are caught and turned into 500s so
+//! one bad request can never take a worker thread down.
+
+use crate::util::threadpool::Bounded;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Tuning for [`HttpServer::bind`]; [`HttpOptions::default`] matches the
+/// `ServerConfig` defaults.
+#[derive(Clone, Debug)]
+pub struct HttpOptions {
+    /// Worker threads (concurrent connections being served).
+    pub threads: usize,
+    /// Per-read socket timeout; also bounds how long an idle keep-alive
+    /// connection is held open.
+    pub read_timeout: Duration,
+    /// Largest accepted request body (413 beyond).
+    pub max_body_bytes: usize,
+    /// Largest accepted request head — request line + headers (431).
+    pub max_head_bytes: usize,
+    /// Requests served per connection before the server closes it.
+    pub keep_alive_max: usize,
+}
+
+impl Default for HttpOptions {
+    fn default() -> Self {
+        Self {
+            threads: 4,
+            read_timeout: Duration::from_secs(5),
+            max_body_bytes: 8 << 20,
+            max_head_bytes: 16 << 10,
+            keep_alive_max: 1024,
+        }
+    }
+}
+
+/// A parsed request as handed to the route handler.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    /// Full request target (path + optional query).
+    pub target: String,
+    /// Header names lowercased at parse time.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Target with any `?query` stripped.
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or(&self.target)
+    }
+
+    /// First header with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    /// Extra headers (`Content-Length`/`Connection` are added by the
+    /// server when writing).
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Self {
+        Self {
+            status,
+            headers: vec![("Content-Type".into(), "application/json".into())],
+            body: body.into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> Self {
+        Self {
+            status,
+            headers: vec![("Content-Type".into(), "text/plain".into())],
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    pub fn with_header(mut self, name: &str, value: &str) -> Self {
+        self.headers.push((name.into(), value.into()));
+        self
+    }
+}
+
+pub(crate) fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Content Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "",
+    }
+}
+
+/// Route handler: pure request → response (shared across workers).
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+pub struct HttpServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    conns: Bounded<TcpStream>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// the accept thread + worker pool.
+    pub fn bind(addr: &str, opts: HttpOptions, handler: Handler) -> std::io::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        // Small queue: excess connections wait in the TCP accept backlog,
+        // which is the backpressure we want under connection floods.
+        let conns: Bounded<TcpStream> = Bounded::new(opts.threads.max(1) * 2);
+
+        let accept_thread = {
+            let conns = conns.clone();
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::Builder::new()
+                .name("edge-accept".into())
+                .spawn(move || loop {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            if shutdown.load(Ordering::SeqCst) {
+                                return; // wake-up connection from shutdown()
+                            }
+                            if conns.send(stream).is_err() {
+                                return;
+                            }
+                        }
+                        Err(_) => {
+                            if shutdown.load(Ordering::SeqCst) {
+                                return;
+                            }
+                            // Transient accept error (EMFILE, aborted
+                            // handshake): brief pause, keep accepting.
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                    }
+                })?
+        };
+
+        let workers = (0..opts.threads.max(1))
+            .map(|i| {
+                let conns = conns.clone();
+                let opts = opts.clone();
+                let handler = Arc::clone(&handler);
+                std::thread::Builder::new()
+                    .name(format!("edge-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(stream) = conns.recv() {
+                            // A hung peer only ever costs this worker its
+                            // read timeout; errors just drop the stream.
+                            let _ = serve_connection(stream, &opts, &handler);
+                        }
+                    })
+            })
+            .collect::<std::io::Result<Vec<_>>>()?;
+
+        Ok(HttpServer {
+            addr: local,
+            shutdown,
+            accept_thread: Some(accept_thread),
+            workers,
+            conns,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain workers, join all threads.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock the accept() call with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        self.conns.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Head parse outcome: a request, or the status to answer before closing.
+enum HeadError {
+    /// Peer closed (or idle keep-alive timed out) before a first byte —
+    /// close silently.
+    Closed,
+    /// Malformed/oversized head: answer this status, then close.
+    Reply(u16, &'static str),
+}
+
+/// Serve one connection until close/keep-alive limit/error.
+fn serve_connection(
+    mut stream: TcpStream,
+    opts: &HttpOptions,
+    handler: &Handler,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(opts.read_timeout))?;
+    stream.set_nodelay(true).ok();
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    for _ in 0..opts.keep_alive_max {
+        let req = match read_request(&mut stream, &mut buf, opts) {
+            Ok(req) => req,
+            Err(HeadError::Closed) => return Ok(()),
+            Err(HeadError::Reply(status, msg)) => {
+                write_response(&mut stream, &Response::text(status, msg), false)?;
+                return Ok(());
+            }
+        };
+        let keep_alive = req
+            .header("connection")
+            .map(|v| !v.eq_ignore_ascii_case("close"))
+            .unwrap_or(true);
+        // One bad request must not take the worker thread down.
+        let resp = catch_unwind(AssertUnwindSafe(|| handler(&req)))
+            .unwrap_or_else(|_| Response::text(500, "handler panicked"));
+        write_response(&mut stream, &resp, keep_alive)?;
+        if !keep_alive {
+            return Ok(());
+        }
+    }
+    Ok(())
+}
+
+/// Read one request (head + body) from the stream. `buf` carries bytes
+/// read past the previous request's end (pipelining/keep-alive).
+fn read_request(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    opts: &HttpOptions,
+) -> Result<Request, HeadError> {
+    // Accumulate until the blank line ending the head.
+    let head_end = loop {
+        if let Some(pos) = find_head_end(buf) {
+            break pos;
+        }
+        if buf.len() > opts.max_head_bytes {
+            return Err(HeadError::Reply(431, "request head too large"));
+        }
+        let mut chunk = [0u8; 4096];
+        match stream.read(&mut chunk) {
+            Ok(0) => return Err(HeadError::Closed),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if buf.is_empty() {
+                    return Err(HeadError::Closed); // idle keep-alive
+                }
+                return Err(HeadError::Reply(408, "timed out reading request"));
+            }
+            Err(_) => return Err(HeadError::Closed),
+        }
+    };
+
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v)) if !m.is_empty() && t.starts_with('/') => {
+            (m.to_string(), t.to_string(), v)
+        }
+        _ => return Err(HeadError::Reply(400, "malformed request line")),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HeadError::Reply(400, "unsupported HTTP version"));
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        match line.split_once(':') {
+            Some((k, v)) => headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string())),
+            None => return Err(HeadError::Reply(400, "malformed header line")),
+        }
+    }
+    let req_head = Request {
+        method,
+        target,
+        headers,
+        body: Vec::new(),
+    };
+
+    // Body framing: Content-Length only (no chunked support).
+    if req_head
+        .header("transfer-encoding")
+        .is_some_and(|v| !v.eq_ignore_ascii_case("identity"))
+    {
+        return Err(HeadError::Reply(411, "chunked bodies not supported"));
+    }
+    let content_length = match req_head.header("content-length") {
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => return Err(HeadError::Reply(400, "bad content-length")),
+        },
+        None if req_head.method == "POST" || req_head.method == "PUT" => {
+            return Err(HeadError::Reply(411, "content-length required"));
+        }
+        None => 0,
+    };
+    if content_length > opts.max_body_bytes {
+        return Err(HeadError::Reply(413, "request body too large"));
+    }
+
+    // The client may be waiting for permission before sending the body.
+    if req_head
+        .header("expect")
+        .is_some_and(|v| v.eq_ignore_ascii_case("100-continue"))
+        && stream.write_all(b"HTTP/1.1 100 Continue\r\n\r\n").is_err()
+    {
+        return Err(HeadError::Closed);
+    }
+
+    // Consume the head; read the remainder of the body.
+    let body_start = head_end + 4;
+    let mut body: Vec<u8> = buf[body_start.min(buf.len())..].to_vec();
+    buf.clear();
+    while body.len() < content_length {
+        let mut chunk = [0u8; 8192];
+        match stream.read(&mut chunk) {
+            Ok(0) => return Err(HeadError::Closed),
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                return Err(HeadError::Reply(408, "timed out reading body"));
+            }
+            Err(_) => return Err(HeadError::Closed),
+        }
+    }
+    // Bytes past the body belong to the next pipelined request.
+    if body.len() > content_length {
+        buf.extend_from_slice(&body[content_length..]);
+        body.truncate(content_length);
+    }
+    let mut req = req_head;
+    req.body = body;
+    Ok(req)
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    resp: &Response,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let mut head = format!("HTTP/1.1 {} {}\r\n", resp.status, reason(resp.status));
+    for (k, v) in &resp.headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str(&format!("Content-Length: {}\r\n", resp.body.len()));
+    head.push_str(if keep_alive {
+        "Connection: keep-alive\r\n\r\n"
+    } else {
+        "Connection: close\r\n\r\n"
+    });
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&resp.body)?;
+    stream.flush()
+}
+
+/// Tiny blocking HTTP/1.1 client over one keep-alive connection —
+/// `Content-Length` framing only, matching the server. Used by the
+/// loopback tests and the `edge_load` generator; handy for ops debugging
+/// too. (The `edge_client` example deliberately does *not* use it: it
+/// hand-writes its bytes to prove the wire format from outside the
+/// crate.)
+pub struct MiniClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl MiniClient {
+    pub fn connect(addr: SocketAddr, timeout: Duration) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_nodelay(true).ok();
+        Ok(Self {
+            stream,
+            buf: Vec::new(),
+        })
+    }
+
+    /// Send one request and read the full response → `(status, body)`.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> std::io::Result<(u16, String)> {
+        let mut req = format!("{method} {path} HTTP/1.1\r\nHost: edge\r\n");
+        if let Some(b) = body {
+            req.push_str(&format!(
+                "Content-Type: application/json\r\nContent-Length: {}\r\n",
+                b.len()
+            ));
+        }
+        req.push_str("\r\n");
+        if let Some(b) = body {
+            req.push_str(b);
+        }
+        self.stream.write_all(req.as_bytes())?;
+
+        let head_end = loop {
+            if let Some(p) = find_head_end(&self.buf) {
+                break p;
+            }
+            let mut chunk = [0u8; 4096];
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(ErrorKind::UnexpectedEof.into());
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        };
+        let head = String::from_utf8_lossy(&self.buf[..head_end]).into_owned();
+        let status: u16 = head
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| std::io::Error::new(ErrorKind::InvalidData, "bad status line"))?;
+        let content_length: usize = head
+            .lines()
+            .find_map(|l| {
+                let (k, v) = l.split_once(':')?;
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    v.trim().parse().ok()
+                } else {
+                    None
+                }
+            })
+            .unwrap_or(0);
+        let mut rest = self.buf[head_end + 4..].to_vec();
+        self.buf.clear();
+        while rest.len() < content_length {
+            let mut chunk = [0u8; 8192];
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(ErrorKind::UnexpectedEof.into());
+            }
+            rest.extend_from_slice(&chunk[..n]);
+        }
+        if rest.len() > content_length {
+            self.buf = rest[content_length..].to_vec();
+            rest.truncate(content_length);
+        }
+        Ok((status, String::from_utf8_lossy(&rest).into_owned()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> HttpServer {
+        let handler: Handler = Arc::new(|req: &Request| {
+            Response::text(200, &format!("{} {} {}", req.method, req.path(), req.body.len()))
+        });
+        HttpServer::bind("127.0.0.1:0", HttpOptions::default(), handler).unwrap()
+    }
+
+    fn roundtrip(addr: SocketAddr, raw: &[u8]) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw).unwrap();
+        let mut out = Vec::new();
+        s.read_to_end(&mut out).unwrap();
+        String::from_utf8_lossy(&out).into_owned()
+    }
+
+    #[test]
+    fn serves_and_keeps_alive() {
+        let srv = echo_server();
+        let addr = srv.local_addr();
+        // Two requests on one connection; second closes.
+        let raw = b"GET /a HTTP/1.1\r\nHost: x\r\n\r\n\
+                    POST /b?q=1 HTTP/1.1\r\nHost: x\r\nContent-Length: 3\r\nConnection: close\r\n\r\nxyz";
+        let out = roundtrip(addr, raw);
+        assert!(out.contains("GET /a 0"), "{out}");
+        assert!(out.contains("POST /b 3"), "{out}");
+        assert!(out.matches("HTTP/1.1 200 OK").count() == 2, "{out}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn mini_client_round_trips_keep_alive() {
+        let srv = echo_server();
+        let mut c = MiniClient::connect(srv.local_addr(), Duration::from_secs(5)).unwrap();
+        let (status, body) = c.request("GET", "/one", None).unwrap();
+        assert_eq!((status, body.as_str()), (200, "GET /one 0"));
+        let (status, body) = c.request("POST", "/two", Some("abcd")).unwrap();
+        assert_eq!((status, body.as_str()), (200, "POST /two 4"));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn rejects_malformed_and_oversized() {
+        let opts = HttpOptions {
+            max_body_bytes: 16,
+            ..HttpOptions::default()
+        };
+        let handler: Handler = Arc::new(|_req: &Request| Response::text(200, "ok"));
+        let srv = HttpServer::bind("127.0.0.1:0", opts, handler).unwrap();
+        let addr = srv.local_addr();
+        let out = roundtrip(addr, b"BOGUS\r\n\r\n");
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+        let out = roundtrip(addr, b"POST /x HTTP/1.1\r\nContent-Length: 999\r\n\r\n");
+        assert!(out.starts_with("HTTP/1.1 413"), "{out}");
+        let out = roundtrip(addr, b"POST /x HTTP/1.1\r\nHost: a\r\n\r\n");
+        assert!(out.starts_with("HTTP/1.1 411"), "{out}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn handler_panic_becomes_500() {
+        let handler: Handler = Arc::new(|req: &Request| {
+            if req.path() == "/boom" {
+                panic!("kaboom");
+            }
+            Response::text(200, "fine")
+        });
+        let srv = HttpServer::bind("127.0.0.1:0", HttpOptions::default(), handler).unwrap();
+        let addr = srv.local_addr();
+        let out = roundtrip(addr, b"GET /boom HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(out.starts_with("HTTP/1.1 500"), "{out}");
+        // The worker survived: a fresh request still works.
+        let out = roundtrip(addr, b"GET /ok HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(out.starts_with("HTTP/1.1 200"), "{out}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let srv = echo_server();
+        let addr = srv.local_addr();
+        srv.shutdown();
+        // Bind again on the same port to prove the listener is gone.
+        let _srv2 = HttpServer::bind(
+            &addr.to_string(),
+            HttpOptions::default(),
+            Arc::new(|_: &Request| Response::text(200, "x")),
+        )
+        .expect("port should be released after shutdown");
+    }
+}

@@ -1,0 +1,653 @@
+//! Wire JSON for the network edge: a hand-rolled encoder plus a lazy
+//! partial-field request scanner — no serde, no new crates.
+//!
+//! Encoding reuses the lossless number/string writers from
+//! [`crate::util::json`], so every float on the wire is the shortest
+//! round-trippable form: parse it back and you get the same bits. That is
+//! what lets the loopback e2e test assert a wire `infer` response is
+//! bit-identical to the in-process `Ticket::wait` result.
+//!
+//! Decoding follows the mik-sdk ADR: the request path never builds a JSON
+//! tree. [`scan_infer_batch`] walks the body bytes once, extracts only
+//! the fields an inference request needs (`pixels`, `mc_samples`,
+//! `defer_threshold`), and skips everything else by token — ~constant
+//! work per unknown byte instead of tree allocation. Malformed input of
+//! any shape is an `Err` (mapped to HTTP 400 by the router), never a
+//! panic: all indexing is bounds-checked and container skipping is
+//! iterative (depth-counted), so adversarial nesting cannot blow the
+//! stack.
+
+use crate::client::InferResponse;
+use crate::coordinator::{MetricsSnapshot, ShardSnapshot};
+use crate::util::json::{write_escaped, write_number};
+
+/// A decoded wire inference request (pre-admission: fidelity knobs are
+/// still the caller's ask, not the admitted values).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireInfer {
+    pub pixels: Vec<f32>,
+    /// 0 = use the server's configured default (same as `Infer::new`).
+    pub mc_samples: usize,
+    pub defer_threshold: Option<f64>,
+}
+
+/// How the admission policy disposed of a request — carried into the
+/// response body so callers can tell a full-fidelity answer from a cheap
+/// degraded pass and an escalated re-run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Disposition {
+    pub degraded: bool,
+    pub escalated: bool,
+}
+
+// ---------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------
+
+fn push_key(out: &mut String, first: bool, key: &str) {
+    if !first {
+        out.push(',');
+    }
+    write_escaped(out, key);
+    out.push(':');
+}
+
+fn push_f64_arr(out: &mut String, xs: impl IntoIterator<Item = f64>) {
+    out.push('[');
+    for (i, x) in xs.into_iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        write_number(out, x);
+    }
+    out.push(']');
+}
+
+/// One `InferResponse` as a wire JSON object. Field set and order are
+/// part of the wire format (documented in DESIGN.md §8).
+pub fn infer_response_json(resp: &InferResponse, disp: Disposition) -> String {
+    let mut o = String::with_capacity(256 + resp.pred.probs.len() * 24);
+    o.push('{');
+    push_key(&mut o, true, "id");
+    write_number(&mut o, resp.id as f64);
+    push_key(&mut o, false, "class");
+    write_number(&mut o, resp.pred.class as f64);
+    push_key(&mut o, false, "confidence");
+    write_number(&mut o, resp.pred.confidence);
+    push_key(&mut o, false, "probs");
+    push_f64_arr(&mut o, resp.pred.probs.iter().copied());
+    push_key(&mut o, false, "mc_samples");
+    write_number(&mut o, resp.pred.t as f64);
+    push_key(&mut o, false, "uncertainty");
+    {
+        let u = &resp.uncertainty;
+        o.push('{');
+        push_key(&mut o, true, "entropy");
+        write_number(&mut o, u.entropy);
+        push_key(&mut o, false, "aleatoric");
+        write_number(&mut o, u.aleatoric);
+        push_key(&mut o, false, "epistemic");
+        write_number(&mut o, u.epistemic);
+        push_key(&mut o, false, "threshold");
+        write_number(&mut o, u.threshold);
+        push_key(&mut o, false, "deferred");
+        o.push_str(if u.deferred { "true" } else { "false" });
+        o.push('}');
+    }
+    push_key(&mut o, false, "degraded");
+    o.push_str(if disp.degraded { "true" } else { "false" });
+    push_key(&mut o, false, "escalated");
+    o.push_str(if disp.escalated { "true" } else { "false" });
+    push_key(&mut o, false, "latency_ms");
+    write_number(&mut o, resp.latency.as_secs_f64() * 1e3);
+    push_key(&mut o, false, "batch_id");
+    write_number(&mut o, resp.batch_id as f64);
+    push_key(&mut o, false, "energy_j");
+    write_number(&mut o, resp.energy_j);
+    o.push('}');
+    o
+}
+
+/// A batch of responses: `{"responses": [...]}`.
+pub fn infer_batch_json(items: &[(InferResponse, Disposition)]) -> String {
+    let mut o = String::from("{\"responses\":[");
+    for (i, (resp, disp)) in items.iter().enumerate() {
+        if i > 0 {
+            o.push(',');
+        }
+        o.push_str(&infer_response_json(resp, *disp));
+    }
+    o.push_str("]}");
+    o
+}
+
+fn shard_json(o: &mut String, s: &ShardSnapshot) {
+    o.push('{');
+    push_key(o, true, "shard");
+    write_number(o, s.shard as f64);
+    push_key(o, false, "requests");
+    write_number(o, s.requests as f64);
+    push_key(o, false, "requests_orphaned");
+    write_number(o, s.requests_orphaned as f64);
+    push_key(o, false, "requests_shed");
+    write_number(o, s.requests_shed as f64);
+    push_key(o, false, "requests_degraded");
+    write_number(o, s.requests_degraded as f64);
+    push_key(o, false, "requests_escalated");
+    write_number(o, s.requests_escalated as f64);
+    push_key(o, false, "batches");
+    write_number(o, s.batches as f64);
+    push_key(o, false, "mc_passes");
+    write_number(o, s.mc_passes as f64);
+    push_key(o, false, "engine_executions");
+    write_number(o, s.engine_executions as f64);
+    push_key(o, false, "epsilon_samples");
+    write_number(o, s.epsilon_samples as f64);
+    push_key(o, false, "epsilon_fj_per_sample");
+    write_number(o, s.epsilon_fj_per_sample());
+    push_key(o, false, "gop_per_s");
+    write_number(o, s.gop_per_s());
+    o.push('}');
+}
+
+/// `GET /v1/metrics` body: the full [`MetricsSnapshot`] as JSON plus the
+/// human `render()` text under `"render"`.
+pub fn metrics_json(s: &MetricsSnapshot) -> String {
+    let mut o = String::with_capacity(1024);
+    o.push('{');
+    push_key(&mut o, true, "requests_total");
+    write_number(&mut o, s.requests_total as f64);
+    push_key(&mut o, false, "requests_rejected");
+    write_number(&mut o, s.requests_rejected as f64);
+    push_key(&mut o, false, "requests_orphaned");
+    write_number(&mut o, s.requests_orphaned as f64);
+    push_key(&mut o, false, "requests_shed");
+    write_number(&mut o, s.requests_shed as f64);
+    push_key(&mut o, false, "requests_degraded");
+    write_number(&mut o, s.requests_degraded as f64);
+    push_key(&mut o, false, "requests_escalated");
+    write_number(&mut o, s.requests_escalated as f64);
+    push_key(&mut o, false, "requests_deferred");
+    write_number(&mut o, s.requests_deferred as f64);
+    push_key(&mut o, false, "batches");
+    write_number(&mut o, s.batches as f64);
+    push_key(&mut o, false, "mc_passes");
+    write_number(&mut o, s.mc_passes as f64);
+    push_key(&mut o, false, "epsilon_samples");
+    write_number(&mut o, s.epsilon_samples as f64);
+    push_key(&mut o, false, "epsilon_fj_per_sample");
+    write_number(&mut o, s.epsilon_fj_per_sample());
+    push_key(&mut o, false, "epsilon_gsa_per_s");
+    write_number(&mut o, s.epsilon_gsa_per_s());
+    push_key(&mut o, false, "gop_per_s");
+    write_number(&mut o, s.gop_per_s());
+    push_key(&mut o, false, "latency_p50_ms");
+    write_number(&mut o, s.latency_p50_ms);
+    push_key(&mut o, false, "latency_p95_ms");
+    write_number(&mut o, s.latency_p95_ms);
+    push_key(&mut o, false, "throughput_rps");
+    write_number(&mut o, s.throughput_rps);
+    push_key(&mut o, false, "mean_batch_fill");
+    write_number(&mut o, s.mean_batch_fill);
+    push_key(&mut o, false, "wall_s");
+    write_number(&mut o, s.wall_s);
+    push_key(&mut o, false, "per_shard");
+    o.push('[');
+    for (i, sh) in s.per_shard.iter().enumerate() {
+        if i > 0 {
+            o.push(',');
+        }
+        shard_json(&mut o, sh);
+    }
+    o.push(']');
+    push_key(&mut o, false, "render");
+    write_escaped(&mut o, &s.render());
+    o.push('}');
+    o
+}
+
+/// Error body: `{"error":{"kind":..,"message":..}}` (+ optional
+/// `retry_after_ms` for shed responses).
+pub fn error_json(kind: &str, message: &str, retry_after_ms: Option<u64>) -> String {
+    let mut o = String::from("{\"error\":{");
+    push_key(&mut o, true, "kind");
+    write_escaped(&mut o, kind);
+    push_key(&mut o, false, "message");
+    write_escaped(&mut o, message);
+    if let Some(ms) = retry_after_ms {
+        push_key(&mut o, false, "retry_after_ms");
+        write_number(&mut o, ms as f64);
+    }
+    o.push_str("}}");
+    o
+}
+
+// ---------------------------------------------------------------------
+// Lazy request scanner
+// ---------------------------------------------------------------------
+
+/// Iterative-skip depth bound: far above any legitimate request body,
+/// low enough that a hostile `[[[[...` costs only cheap loop iterations.
+const MAX_SKIP_DEPTH: usize = 64;
+
+struct Scan<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+type ScanResult<T> = Result<T, String>;
+
+impl<'a> Scan<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, pos: 0 }
+    }
+
+    fn err<T>(&self, msg: &str) -> ScanResult<T> {
+        Err(format!("{msg} at byte {}", self.pos))
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> ScanResult<()> {
+        self.skip_ws();
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            self.err(&format!("expected '{}'", c as char))
+        }
+    }
+
+    fn at_end(&mut self) -> bool {
+        self.skip_ws();
+        self.pos >= self.b.len()
+    }
+
+    /// Parse a string token and return its unescaped text. Only used for
+    /// object keys (we match against known ASCII names); `\uXXXX` escapes
+    /// are validated and decoded enough to stay well-formed.
+    fn parse_string(&mut self) -> ScanResult<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return self.err("unterminated string"),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex = self
+                                .b
+                                .get(self.pos + 1..self.pos + 5)
+                                .ok_or_else(|| "truncated \\u escape".to_string())?;
+                            let s = std::str::from_utf8(hex)
+                                .map_err(|_| "non-utf8 \\u escape".to_string())?;
+                            let cp = u32::from_str_radix(s, 16)
+                                .map_err(|_| "bad \\u escape".to_string())?;
+                            // Surrogates can't match a known key; U+FFFD
+                            // keeps the scan well-formed without pairing.
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            self.pos += 4;
+                        }
+                        _ => return self.err("bad escape"),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // Copy a run of plain bytes; body must be UTF-8.
+                    let start = self.pos;
+                    while let Some(c) = self.peek() {
+                        if c == b'"' || c == b'\\' {
+                            break;
+                        }
+                        self.pos += 1;
+                    }
+                    let chunk = std::str::from_utf8(&self.b[start..self.pos])
+                        .map_err(|_| "non-utf8 string".to_string())?;
+                    out.push_str(chunk);
+                }
+            }
+        }
+    }
+
+    fn parse_f64(&mut self) -> ScanResult<f64> {
+        self.skip_ws();
+        let start = self.pos;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        if start == self.pos {
+            return self.err("expected number");
+        }
+        let s = std::str::from_utf8(&self.b[start..self.pos])
+            .map_err(|_| "non-utf8 number".to_string())?;
+        let x: f64 = s.parse().map_err(|_| format!("bad number '{s}'"))?;
+        if !x.is_finite() {
+            return Err(format!("non-finite number '{s}'"));
+        }
+        Ok(x)
+    }
+
+    fn parse_usize(&mut self) -> ScanResult<usize> {
+        let x = self.parse_f64()?;
+        if x < 0.0 || x.fract() != 0.0 || x > u32::MAX as f64 {
+            return Err(format!("expected a small non-negative integer, got {x}"));
+        }
+        Ok(x as usize)
+    }
+
+    /// `[1, 2.5, ...]` directly into a `Vec<f32>` — the fast path for
+    /// `pixels`, no intermediate tree.
+    fn parse_f32_array(&mut self) -> ScanResult<Vec<f32>> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(out);
+        }
+        loop {
+            out.push(self.parse_f64()? as f32);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                _ => return self.err("expected ',' or ']'"),
+            }
+        }
+    }
+
+    fn skip_literal(&mut self, lit: &str) -> ScanResult<()> {
+        if self.b[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(())
+        } else {
+            self.err("bad literal")
+        }
+    }
+
+    /// Skip a string token without building its text (for skipped values
+    /// and container interiors).
+    fn skip_string(&mut self) -> ScanResult<()> {
+        self.expect(b'"')?;
+        loop {
+            match self.peek() {
+                None => return self.err("unterminated string"),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                Some(b'\\') => {
+                    // Any escaped byte is consumed blindly; \u needs 4
+                    // more bytes but they can't contain an unescaped '"'
+                    // we'd miss — hex digits only if valid, and if
+                    // invalid the request is malformed anyway and fails
+                    // later or terminates harmlessly.
+                    self.pos += 2;
+                }
+                Some(_) => self.pos += 1,
+            }
+        }
+    }
+
+    /// Skip any JSON value iteratively (depth-counted, no recursion), so
+    /// adversarial nesting in an unknown field costs cheap loop
+    /// iterations instead of stack. Lenient inside skipped containers
+    /// (e.g. a trailing comma passes) — this is a skipper, not a
+    /// validator; known fields are parsed strictly.
+    fn skip_value(&mut self) -> ScanResult<()> {
+        let mut depth: usize = 0;
+        loop {
+            self.skip_ws();
+            match self.peek() {
+                None => return self.err("truncated value"),
+                Some(b'"') => self.skip_string()?,
+                Some(b't') => self.skip_literal("true")?,
+                Some(b'f') => self.skip_literal("false")?,
+                Some(b'n') => self.skip_literal("null")?,
+                Some(b'{' | b'[') => {
+                    depth += 1;
+                    if depth > MAX_SKIP_DEPTH {
+                        return self.err("value nested too deeply");
+                    }
+                    self.pos += 1;
+                    continue; // next token is a value (or empty close)
+                }
+                Some(b'}' | b']') if depth > 0 => {
+                    // Empty container closing straight away.
+                    depth -= 1;
+                    self.pos += 1;
+                }
+                Some(c) if c.is_ascii_digit() || c == b'-' => {
+                    self.parse_f64()?;
+                }
+                Some(_) => return self.err("unexpected token"),
+            }
+            if depth == 0 {
+                return Ok(());
+            }
+            // A token was consumed inside a container: unwind closers and
+            // separators until the next value position (or the end).
+            loop {
+                self.skip_ws();
+                match self.peek() {
+                    Some(b']' | b'}') => {
+                        depth -= 1;
+                        self.pos += 1;
+                        if depth == 0 {
+                            return Ok(());
+                        }
+                    }
+                    // ',' precedes the next element (or an object key:
+                    // the outer loop consumes it as a string and lands
+                    // on the ':' arm below).
+                    Some(b',') | Some(b':') => {
+                        self.pos += 1;
+                        break;
+                    }
+                    _ => return self.err("bad container"),
+                }
+            }
+        }
+    }
+
+    /// Scan one flat request object, extracting only the known fields.
+    fn scan_one(&mut self) -> ScanResult<WireInfer> {
+        self.expect(b'{')?;
+        let mut pixels: Option<Vec<f32>> = None;
+        let mut mc_samples = 0usize;
+        let mut defer_threshold = None;
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+        } else {
+            loop {
+                let key = self.parse_string()?;
+                self.expect(b':')?;
+                match key.as_str() {
+                    "pixels" => pixels = Some(self.parse_f32_array()?),
+                    "mc_samples" => mc_samples = self.parse_usize()?,
+                    "defer_threshold" => defer_threshold = Some(self.parse_f64()?),
+                    _ => self.skip_value()?,
+                }
+                self.skip_ws();
+                match self.peek() {
+                    Some(b',') => {
+                        self.pos += 1;
+                        self.skip_ws();
+                    }
+                    Some(b'}') => {
+                        self.pos += 1;
+                        break;
+                    }
+                    _ => return self.err("expected ',' or '}'"),
+                }
+            }
+        }
+        let pixels = pixels.ok_or_else(|| "missing required field 'pixels'".to_string())?;
+        Ok(WireInfer {
+            pixels,
+            mc_samples,
+            defer_threshold,
+        })
+    }
+}
+
+/// Decode a `POST /v1/infer` body. Two accepted shapes:
+///
+/// - a single request object `{"pixels": [...], ...}` → one-element vec;
+/// - a batch `{"requests": [{...}, {...}]}` → one entry per element
+///   (submitted via `submit_many`, preserving batch-fusion semantics).
+///
+/// Returns `(requests, was_batch)`; `was_batch` picks the response shape.
+pub fn scan_infer_batch(body: &[u8]) -> Result<(Vec<WireInfer>, bool), String> {
+    let mut s = Scan::new(body);
+    s.skip_ws();
+    // Disambiguate by the first key: a leading "requests" key means batch.
+    // Save/restore position so single-object scanning re-reads the key.
+    let start = s.pos;
+    s.expect(b'{')?;
+    s.skip_ws();
+    let is_batch = match s.peek() {
+        Some(b'"') => s.parse_string()? == "requests",
+        Some(b'}') => false,
+        _ => return Err("expected an object key".into()),
+    };
+    if is_batch {
+        s.expect(b':')?;
+        s.expect(b'[')?;
+        let mut out = Vec::new();
+        s.skip_ws();
+        if s.peek() == Some(b']') {
+            s.pos += 1;
+        } else {
+            loop {
+                out.push(s.scan_one()?);
+                s.skip_ws();
+                match s.peek() {
+                    Some(b',') => s.pos += 1,
+                    Some(b']') => {
+                        s.pos += 1;
+                        break;
+                    }
+                    _ => return Err("expected ',' or ']' in requests".into()),
+                }
+            }
+        }
+        s.expect(b'}')?;
+        if !s.at_end() {
+            return Err("trailing bytes after batch body".into());
+        }
+        if out.is_empty() {
+            return Err("batch body has no requests".into());
+        }
+        Ok((out, true))
+    } else {
+        s.pos = start;
+        let one = s.scan_one()?;
+        if !s.at_end() {
+            return Err("trailing bytes after request body".into());
+        }
+        Ok((vec![one], false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scans_single_request_with_unknown_fields() {
+        let body = br#" { "client": {"v": [1, {"x": "}"}]}, "pixels": [0.5, -1, 2e-3],
+                         "mc_samples": 8, "note": "hi\n\"there\"", "defer_threshold": 0.25 } "#;
+        let (reqs, was_batch) = scan_infer_batch(body).unwrap();
+        assert!(!was_batch);
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(reqs[0].pixels, vec![0.5, -1.0, 2e-3]);
+        assert_eq!(reqs[0].mc_samples, 8);
+        assert_eq!(reqs[0].defer_threshold, Some(0.25));
+    }
+
+    #[test]
+    fn scans_batch_shape() {
+        let body = br#"{"requests": [{"pixels": [1]}, {"pixels": [2], "mc_samples": 4}]}"#;
+        let (reqs, was_batch) = scan_infer_batch(body).unwrap();
+        assert!(was_batch);
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0].pixels, vec![1.0]);
+        assert_eq!(reqs[0].mc_samples, 0, "absent = server default");
+        assert_eq!(reqs[1].mc_samples, 4);
+    }
+
+    #[test]
+    fn rejects_malformed_without_panicking() {
+        let evil: &[&[u8]] = &[
+            b"",
+            b"{",
+            b"[]",
+            b"null",
+            b"{\"pixels\": }",
+            b"{\"pixels\": \"abc\"}",
+            b"{\"pixels\": [1,]}",
+            b"{\"pixels\": [1] \"x\": 2}",
+            b"{\"pixels\": [1]} trailing",
+            b"{\"mc_samples\": 4}",
+            b"{\"pixels\": [1], \"mc_samples\": -3}",
+            b"{\"pixels\": [1], \"mc_samples\": 2.5}",
+            b"{\"pixels\": [1e999]}",
+            b"{\"requests\": []}",
+            b"{\"requests\": [{}]}",
+            b"{\"requests\": {\"pixels\": [1]}}",
+            b"{\"pixels\": [1], \"x\": \xff\xfe}",
+            b"{\"pixels\": [NaN]}",
+        ];
+        for body in evil {
+            assert!(
+                scan_infer_batch(body).is_err(),
+                "accepted malformed body {:?}",
+                String::from_utf8_lossy(body)
+            );
+        }
+        // Hostile nesting in a *skipped* field: error, not a stack blow.
+        let mut deep = br#"{"pixels": [1], "junk": "#.to_vec();
+        deep.extend(std::iter::repeat(b'[').take(100_000));
+        assert!(scan_infer_batch(&deep).is_err());
+    }
+
+    #[test]
+    fn skips_nested_unknown_values() {
+        let body = br#"{"a": {"b": [1, [2, {"c": null}], "]}"], "d": true},
+                       "pixels": [3], "e": false}"#;
+        let (reqs, _) = scan_infer_batch(body).unwrap();
+        assert_eq!(reqs[0].pixels, vec![3.0]);
+    }
+}

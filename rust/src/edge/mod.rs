@@ -1,0 +1,88 @@
+//! L4 network edge: the v1 client API served over the wire.
+//!
+//! Everything here is `std`-only — `TcpListener`, hand-rolled HTTP/1.1,
+//! hand-rolled JSON — because the build environment has no crates.io (see
+//! DESIGN.md §8 for the wire format and the shedding state machine). The
+//! subsystem splits the same way the serving stack below it does:
+//!
+//! - [`http`] — transport: accept/worker thread pool, keep-alive,
+//!   `Content-Length` framing, timeouts. Knows nothing about inference.
+//! - [`json`] — wire codec: lossless encoder (floats round-trip
+//!   bit-identically) and a lazy partial-field request scanner.
+//! - [`admission`] — pure shed/degrade/escalate policy over the
+//!   coordinator's queue-load signal.
+//! - [`routes`] — `/v1/*` handlers binding the three together onto
+//!   [`Coordinator`](crate::client::Coordinator).
+//!
+//! ```no_run
+//! use bnn_cim::client::{Backend, Config, Coordinator};
+//! use bnn_cim::edge::EdgeServer;
+//! use std::sync::Arc;
+//!
+//! let cfg = Config::default();
+//! let coord = Arc::new(
+//!     Coordinator::builder(cfg).backend(Backend::Sim).start().unwrap(),
+//! );
+//! let edge = EdgeServer::bind("127.0.0.1:0", coord).unwrap();
+//! println!("listening on http://{}", edge.local_addr());
+//! edge.shutdown();
+//! ```
+
+pub mod admission;
+pub mod http;
+pub mod json;
+pub mod routes;
+
+pub use admission::{AdmissionPolicy, Decision};
+pub use http::{Handler, HttpOptions, HttpServer, MiniClient, Request, Response};
+pub use json::{scan_infer_batch, Disposition, WireInfer};
+pub use routes::{status_for, Router};
+
+use crate::client::{Coordinator, ServeError};
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The network edge: an [`HttpServer`] wired to a [`Router`] over a
+/// running [`Coordinator`]. Dropping (or [`EdgeServer::shutdown`]) stops
+/// the listener and joins the HTTP workers; the coordinator itself is
+/// owned via `Arc` and shuts down when the last handle drops.
+pub struct EdgeServer {
+    http: HttpServer,
+}
+
+impl EdgeServer {
+    /// Bind `listen` (`host:port`; port 0 picks an ephemeral port) and
+    /// serve the coordinator's `/v1` API. HTTP tuning comes from the
+    /// coordinator's own `[server]` config (`edge_threads`,
+    /// `edge_max_body_bytes`, `request_timeout_ms`).
+    pub fn bind(listen: &str, coord: Arc<Coordinator>) -> Result<EdgeServer, ServeError> {
+        let cfg = coord.config();
+        let opts = HttpOptions {
+            threads: cfg.server.edge_threads,
+            // Socket reads get the same deadline as blocking waits; the
+            // floor keeps pathological configs from busy-looping reads.
+            read_timeout: Duration::from_secs_f64(
+                (cfg.server.request_timeout_ms / 1e3).max(0.05),
+            ),
+            max_body_bytes: cfg.server.edge_max_body_bytes,
+            ..HttpOptions::default()
+        };
+        let router = Arc::new(Router::new(coord));
+        let handler: Handler = Arc::new(move |req: &Request| router.handle(req));
+        let http = HttpServer::bind(listen, opts, handler)
+            .map_err(|e| ServeError::Startup(format!("edge bind {listen}: {e}")))?;
+        Ok(EdgeServer { http })
+    }
+
+    /// The bound address (resolves an ephemeral port request).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.http.local_addr()
+    }
+
+    /// Stop accepting and join the HTTP threads (in-flight requests get
+    /// their responses first — workers only exit between requests).
+    pub fn shutdown(self) {
+        self.http.shutdown();
+    }
+}

@@ -1,0 +1,290 @@
+//! Route table for the network edge: maps the `/v1` wire surface onto
+//! the in-process client API (`Coordinator::submit_many` + `Ticket`s),
+//! applying the admission policy on the way in.
+//!
+//! - `POST /v1/infer` — single object or `{"requests": [...]}` batch.
+//! - `GET  /v1/metrics` — [`MetricsSnapshot`] as JSON (+ `render` text).
+//! - `GET  /v1/health` — liveness + queue state.
+//!
+//! Every [`ServeError`] has a fixed HTTP status (the taxonomy is part of
+//! the wire contract, tested and documented in DESIGN.md §8): `QueueFull`
+//! → 429, shape/bounds validation → 400, `ShuttingDown` → 503, `Timeout`
+//! → 504, `Disconnected` → 502, config/startup faults → 500.
+
+use crate::client::{Coordinator, Infer, InferResponse, ServeError, Ticket};
+use crate::coordinator::Metrics;
+use crate::edge::admission::{AdmissionPolicy, Decision};
+use crate::edge::http::{Request, Response};
+use crate::edge::json::{
+    error_json, infer_batch_json, infer_response_json, metrics_json, scan_infer_batch, Disposition,
+    WireInfer,
+};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+pub struct Router {
+    coord: Arc<Coordinator>,
+    policy: AdmissionPolicy,
+    metrics: Metrics,
+    shards: usize,
+    /// Round-robin cursor for attributing shed requests (they never
+    /// reach a shard, so the split is advisory; the global sum is exact).
+    shed_rr: AtomicUsize,
+    /// Model-default MC passes (what `mc_samples: 0` resolves to).
+    default_mc: usize,
+    request_timeout: Duration,
+}
+
+impl Router {
+    pub fn new(coord: Arc<Coordinator>) -> Self {
+        let cfg = coord.config();
+        let policy = AdmissionPolicy::from_config(&cfg.server);
+        let metrics = coord.metrics_registry();
+        let shards = coord.workers();
+        let default_mc = cfg.model.mc_samples;
+        let request_timeout = Duration::from_secs_f64(cfg.server.request_timeout_ms / 1e3);
+        Self {
+            coord,
+            policy,
+            metrics,
+            shards,
+            shed_rr: AtomicUsize::new(0),
+            default_mc,
+            request_timeout,
+        }
+    }
+
+    pub fn handle(&self, req: &Request) -> Response {
+        match (req.method.as_str(), req.path()) {
+            ("POST", "/v1/infer") => self.infer(req),
+            ("GET", "/v1/metrics") => {
+                Response::json(200, metrics_json(&self.coord.metrics()))
+            }
+            ("GET", "/v1/health") => self.health(),
+            (_, "/v1/infer") => method_not_allowed("POST"),
+            (_, "/v1/metrics") | (_, "/v1/health") => method_not_allowed("GET"),
+            _ => Response::json(
+                404,
+                error_json("not_found", "unknown path (try /v1/infer)", None),
+            ),
+        }
+    }
+
+    fn health(&self) -> Response {
+        let cfg = self.coord.config();
+        let body = format!(
+            "{{\"status\":\"ok\",\"backend\":\"{}\",\"workers\":{},\
+             \"queue_depth\":{},\"queue_capacity\":{}}}",
+            cfg.server.backend.name(),
+            self.shards,
+            self.coord.queue_depth(),
+            self.coord.queue_capacity(),
+        );
+        Response::json(200, body)
+    }
+
+    /// Instantaneous queue-load fraction — the admission signal.
+    fn load(&self) -> f64 {
+        self.coord.queue_depth() as f64 / self.coord.queue_capacity().max(1) as f64
+    }
+
+    /// The fidelity a wire request runs at if admitted unmodified.
+    fn effective_mc(&self, w: &WireInfer) -> usize {
+        if w.mc_samples == 0 {
+            self.default_mc
+        } else {
+            w.mc_samples
+        }
+    }
+
+    /// Shard a response was computed on: batches route round-robin on
+    /// batch id (`target = (batch_id - 1) % shards`), so attribution is
+    /// derivable without plumbing shard ids through the reply path.
+    fn shard_of(&self, batch_id: u64) -> usize {
+        (batch_id.saturating_sub(1) % self.shards.max(1) as u64) as usize
+    }
+
+    fn record_shed(&self, n: usize) {
+        for _ in 0..n {
+            let shard = self.shed_rr.fetch_add(1, Ordering::Relaxed) % self.shards.max(1);
+            self.metrics.record_shed(shard);
+        }
+    }
+
+    fn infer(&self, req: &Request) -> Response {
+        let (wire, was_batch) = match scan_infer_batch(&req.body) {
+            Ok(parsed) => parsed,
+            Err(msg) => return Response::json(400, error_json("bad_request", &msg, None)),
+        };
+
+        // One admission decision per HTTP request (the batch is one
+        // caller): the most expensive member sets the band.
+        let load = self.load();
+        let max_mc = wire.iter().map(|w| self.effective_mc(w)).max().unwrap_or(0);
+        let decision = self.policy.decide(load, max_mc);
+
+        if let Decision::Shed { retry_after_ms } = decision {
+            self.record_shed(wire.len());
+            return shed_response(retry_after_ms, load);
+        }
+
+        // Build the admitted submissions; degraded members are clamped to
+        // the cheap fidelity (members already at/below it keep their ask).
+        let degraded_mc = match decision {
+            Decision::Degrade { mc_samples } => Some(mc_samples),
+            _ => None,
+        };
+        let mut admitted_mc = Vec::with_capacity(wire.len());
+        let mut was_degraded = Vec::with_capacity(wire.len());
+        for w in &wire {
+            let eff = self.effective_mc(w);
+            match degraded_mc {
+                Some(cheap) if eff > cheap => {
+                    admitted_mc.push(cheap);
+                    was_degraded.push(true);
+                }
+                _ => {
+                    admitted_mc.push(w.mc_samples);
+                    was_degraded.push(false);
+                }
+            }
+        }
+
+        let submissions: Vec<Infer> = wire
+            .iter()
+            .zip(&admitted_mc)
+            .map(|(w, &mc)| build_infer(w, mc))
+            .collect();
+        let mut responses = match self.submit_and_wait(submissions) {
+            Ok(r) => r,
+            Err(e) => return self.error_response(&e, wire.len()),
+        };
+
+        // Uncertainty-aware escalation: a degraded member whose cheap
+        // verdict is uncertain gets the full pass it originally asked
+        // for — if the load has stayed out of the shed band. Otherwise
+        // the degraded response ships as an explicit deferral.
+        let mut disposition = vec![Disposition::default(); wire.len()];
+        let escalation_load = self.load();
+        let mut escalate_idx = Vec::new();
+        for (i, resp) in responses.iter().enumerate() {
+            if was_degraded[i] {
+                self.metrics.record_degraded(self.shard_of(resp.batch_id));
+                disposition[i].degraded = true;
+                if self
+                    .policy
+                    .escalate(escalation_load, resp.uncertainty.deferred)
+                {
+                    escalate_idx.push(i);
+                }
+            }
+        }
+        if !escalate_idx.is_empty() {
+            let full: Vec<Infer> = escalate_idx
+                .iter()
+                .map(|&i| build_infer(&wire[i], wire[i].mc_samples))
+                .collect();
+            // Escalation is best-effort: if capacity vanished between the
+            // load sample and the resubmit, the degraded deferral stands.
+            if let Ok(upgraded) = self.submit_and_wait(full) {
+                for (&i, up) in escalate_idx.iter().zip(upgraded) {
+                    self.metrics.record_escalated(self.shard_of(up.batch_id));
+                    disposition[i].escalated = true;
+                    responses[i] = up;
+                }
+            }
+        }
+
+        let items: Vec<(InferResponse, Disposition)> =
+            responses.into_iter().zip(disposition).collect();
+        if was_batch {
+            Response::json(200, infer_batch_json(&items))
+        } else {
+            Response::json(200, infer_response_json(&items[0].0, items[0].1))
+        }
+    }
+
+    /// `submit_many` + sequential waits (each gets the full request
+    /// deadline — the coordinator already bounds per-request latency).
+    fn submit_and_wait(
+        &self,
+        submissions: Vec<Infer>,
+    ) -> Result<Vec<InferResponse>, ServeError> {
+        let tickets: Vec<Ticket> = self.coord.submit_many(submissions)?;
+        tickets
+            .iter()
+            .map(|t| t.wait_timeout(self.request_timeout))
+            .collect()
+    }
+
+    fn error_response(&self, e: &ServeError, n_requests: usize) -> Response {
+        let status = status_for(e);
+        if status == 429 {
+            // Queue-capacity backpressure is a shed, observably: the
+            // admission bands and the hard bound share one ledger.
+            self.record_shed(n_requests);
+            return shed_response(self.policy.retry_after_ms, self.load());
+        }
+        Response::json(status, error_json(error_kind(e), &e.to_string(), None))
+    }
+}
+
+fn build_infer(w: &WireInfer, mc_samples: usize) -> Infer {
+    let mut inf = Infer::new(w.pixels.clone()).mc_samples(mc_samples);
+    if let Some(t) = w.defer_threshold {
+        inf = inf.defer_threshold(t);
+    }
+    inf
+}
+
+fn method_not_allowed(allow: &str) -> Response {
+    Response::json(
+        405,
+        error_json("method_not_allowed", &format!("use {allow}"), None),
+    )
+    .with_header("Allow", allow)
+}
+
+fn shed_response(retry_after_ms: u64, load: f64) -> Response {
+    // The HTTP header speaks whole seconds; the body carries the exact
+    // millisecond hint.
+    let secs = retry_after_ms.div_ceil(1000).max(1);
+    Response::json(
+        429,
+        error_json(
+            "shed",
+            &format!("overloaded (queue load {load:.2}); retry after {retry_after_ms} ms"),
+            Some(retry_after_ms),
+        ),
+    )
+    .with_header("Retry-After", &secs.to_string())
+}
+
+/// The `ServeError` → HTTP status taxonomy (wire contract).
+pub fn status_for(e: &ServeError) -> u16 {
+    match e {
+        ServeError::QueueFull => 429,
+        ServeError::WrongShape { .. }
+        | ServeError::McSamplesTooLarge { .. }
+        | ServeError::InvalidDeferThreshold { .. } => 400,
+        ServeError::ShuttingDown => 503,
+        ServeError::Timeout => 504,
+        ServeError::Disconnected => 502,
+        ServeError::Config(_) | ServeError::Startup(_) => 500,
+    }
+}
+
+fn error_kind(e: &ServeError) -> &'static str {
+    match e {
+        ServeError::QueueFull => "queue_full",
+        ServeError::WrongShape { .. } => "wrong_shape",
+        ServeError::McSamplesTooLarge { .. } => "mc_samples_too_large",
+        ServeError::InvalidDeferThreshold { .. } => "invalid_defer_threshold",
+        ServeError::ShuttingDown => "shutting_down",
+        ServeError::Timeout => "timeout",
+        ServeError::Disconnected => "disconnected",
+        ServeError::Config(_) => "config",
+        ServeError::Startup(_) => "startup",
+    }
+}

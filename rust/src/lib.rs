@@ -37,4 +37,5 @@ pub mod nn;
 pub mod runtime;
 pub mod coordinator;
 pub mod client;
+pub mod edge;
 pub mod experiments;

@@ -142,6 +142,12 @@ fn commands() -> Vec<Command> {
                     Some("pjrt"),
                 ),
                 flag("sim", "deprecated alias for --backend sim"),
+                opt(
+                    "listen",
+                    "serve the /v1 HTTP API on host:port (port 0 = ephemeral) instead of \
+                     synthetic load; --duration bounds the run, omit it to run until killed",
+                    None,
+                ),
             ],
         },
     ]
@@ -324,6 +330,17 @@ fn cmd_serve(args: &bnn_cim::util::cli::Args) -> CmdResult {
         eprintln!("warning: --sim is deprecated; use --backend sim");
         cfg.server.backend = Backend::Sim;
     }
+    // --listen (or [server] listen in the config) switches from the
+    // synthetic-load loop to the network edge.
+    let listen = args
+        .get("listen")
+        .map(str::to_string)
+        .unwrap_or_else(|| cfg.server.listen.clone());
+    if !listen.is_empty() {
+        // No explicit --duration means run until killed.
+        let bound = args.get("duration").map(|_| duration);
+        return serve_listen(cfg, &listen, bound);
+    }
     let coord = Coordinator::builder(cfg.clone()).start()?;
     println!(
         "serving on {} shard worker(s), backend = {}",
@@ -356,5 +373,42 @@ fn cmd_serve(args: &bnn_cim::util::cli::Args) -> CmdResult {
         coord.metrics().render()
     );
     coord.shutdown();
+    Ok(())
+}
+
+/// `serve --listen`: boot the coordinator plus the network edge and hold
+/// until the duration elapses (`None` = until killed), printing a metrics
+/// render every ~10 s.
+fn serve_listen(cfg: Config, listen: &str, duration: Option<Duration>) -> CmdResult {
+    use bnn_cim::client::EdgeServer;
+    use std::sync::Arc;
+
+    let coord = Arc::new(Coordinator::builder(cfg.clone()).start()?);
+    let edge = EdgeServer::bind(listen, Arc::clone(&coord))?;
+    println!(
+        "edge listening on http://{} — {} shard worker(s), backend = {}, \
+         degrade/shed at {:.0}%/{:.0}% queue load",
+        edge.local_addr(),
+        cfg.server.workers,
+        cfg.server.backend.name(),
+        cfg.server.edge_degrade_load * 100.0,
+        cfg.server.edge_shed_load * 100.0,
+    );
+    let t0 = Instant::now();
+    let mut ticks = 0u64;
+    loop {
+        std::thread::sleep(Duration::from_secs(1));
+        ticks += 1;
+        if let Some(d) = duration {
+            if t0.elapsed() >= d {
+                break;
+            }
+        }
+        if ticks % 10 == 0 {
+            println!("{}", coord.metrics().render());
+        }
+    }
+    println!("{}", coord.metrics().render());
+    edge.shutdown();
     Ok(())
 }

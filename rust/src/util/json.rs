@@ -271,7 +271,10 @@ impl Json {
     }
 }
 
-fn write_number(out: &mut String, x: f64) {
+/// Lossless f64 → JSON number text (shortest round-trippable form;
+/// NaN/Inf become `null`). `pub(crate)` so the network edge's hand-rolled
+/// encoder emits bit-identical floats to this tree writer.
+pub(crate) fn write_number(out: &mut String, x: f64) {
     if x.is_nan() || x.is_infinite() {
         // JSON has no NaN/Inf; persist as null (read back as Null).
         out.push_str("null");
@@ -290,7 +293,9 @@ fn write_number(out: &mut String, x: f64) {
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
+/// JSON string literal writer (quotes + escapes); shared with the edge
+/// encoder for the same reason as [`write_number`].
+pub(crate) fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {

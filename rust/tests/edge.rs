@@ -1,0 +1,587 @@
+//! Network-edge integration tests: the wire contract end to end.
+//!
+//! Three layers of guarantees, each pinned here:
+//!
+//! 1. **Codec** — every float in a wire response round-trips
+//!    bit-identically (`util::json::write_number` shortest form), and the
+//!    lazy request scanner agrees with the tree parser on every valid
+//!    body while rejecting (never panicking on) malformed ones.
+//! 2. **Transport** — malformed bodies become HTTP 400 over a live
+//!    socket and the server keeps serving; the `ServeError` → status
+//!    taxonomy is fixed.
+//! 3. **Semantics** — a wire `POST /v1/infer` response is bit-identical
+//!    to the in-process `Ticket::wait` result for a fixed
+//!    `(die_seed, workers, mc_workers)` triple, and under overload the
+//!    shed/degrade/escalate machine visibly engages (nonzero counters,
+//!    bounded latency).
+
+use bnn_cim::bayes::{McPrediction, UncertaintyReport};
+use bnn_cim::client::{Backend, Config, Coordinator, EdgeServer, Infer, InferResponse, ServeError};
+use bnn_cim::data::SyntheticPerson;
+use bnn_cim::edge::json::{error_json, infer_batch_json, infer_response_json};
+use bnn_cim::edge::{scan_infer_batch, status_for, Disposition, MiniClient};
+use bnn_cim::runtime::{InferenceEngine, Manifest, SimEngine};
+use bnn_cim::util::json::Json;
+use bnn_cim::util::propcheck::property;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(60);
+
+// ---------------------------------------------------------------------
+// 1. Codec
+// ---------------------------------------------------------------------
+
+/// A response stuffed with awkward floats: values whose decimal
+/// representation is not exact, subnormals, huge magnitudes, and a
+/// one-ULP neighbor of ln 2 that naive formatting would collapse.
+fn awkward_response() -> InferResponse {
+    let ln2_plus_ulp = f64::from_bits(std::f64::consts::LN_2.to_bits() + 1);
+    InferResponse {
+        id: 7,
+        pred: McPrediction {
+            probs: vec![0.1, 1.0 / 3.0, 2.0f64.powi(-1074), 1e300, 0.3f64 + 0.2],
+            entropy: ln2_plus_ulp,
+            expected_entropy: 1e-17,
+            mutual_information: 0.1 + 0.2,
+            class: 1,
+            confidence: 1.0 / 7.0,
+            t: 12,
+        },
+        uncertainty: UncertaintyReport {
+            entropy: ln2_plus_ulp,
+            aleatoric: 1e-17,
+            epistemic: 0.1 + 0.2,
+            threshold: 0.45000000000000001,
+            deferred: true,
+        },
+        latency: Duration::from_micros(12345),
+        batch_id: 3,
+        energy_j: 3.6e-13,
+    }
+}
+
+#[test]
+fn wire_response_floats_round_trip_bit_identically() {
+    let resp = awkward_response();
+    let disp = Disposition {
+        degraded: true,
+        escalated: false,
+    };
+    let body = infer_response_json(&resp, disp);
+    let doc = Json::parse(&body).expect("wire response must be valid JSON");
+
+    let bits = |v: Option<&Json>| v.and_then(Json::as_f64).map(f64::to_bits);
+    let probs = doc.get("probs").and_then(Json::as_f64_vec).unwrap();
+    assert_eq!(probs.len(), resp.pred.probs.len());
+    for (wire, orig) in probs.iter().zip(&resp.pred.probs) {
+        assert_eq!(wire.to_bits(), orig.to_bits(), "probs lost bits");
+    }
+    assert_eq!(
+        bits(doc.get("confidence")),
+        Some(resp.pred.confidence.to_bits())
+    );
+    let u = doc.get("uncertainty").expect("uncertainty object");
+    assert_eq!(bits(u.get("entropy")), Some(resp.uncertainty.entropy.to_bits()));
+    assert_eq!(
+        bits(u.get("aleatoric")),
+        Some(resp.uncertainty.aleatoric.to_bits())
+    );
+    assert_eq!(
+        bits(u.get("epistemic")),
+        Some(resp.uncertainty.epistemic.to_bits())
+    );
+    assert_eq!(
+        bits(u.get("threshold")),
+        Some(resp.uncertainty.threshold.to_bits())
+    );
+    assert_eq!(u.get("deferred").and_then(Json::as_bool), Some(true));
+    assert_eq!(bits(doc.get("energy_j")), Some(resp.energy_j.to_bits()));
+    assert_eq!(doc.get("id").and_then(Json::as_f64), Some(7.0));
+    assert_eq!(doc.get("class").and_then(Json::as_f64), Some(1.0));
+    assert_eq!(doc.get("mc_samples").and_then(Json::as_f64), Some(12.0));
+    assert_eq!(doc.get("degraded").and_then(Json::as_bool), Some(true));
+    assert_eq!(doc.get("escalated").and_then(Json::as_bool), Some(false));
+
+    // Batch shape wraps the same objects.
+    let batch = infer_batch_json(&[(resp.clone(), disp), (resp, Disposition::default())]);
+    let doc = Json::parse(&batch).unwrap();
+    let items = doc.get("responses").and_then(Json::as_arr).unwrap();
+    assert_eq!(items.len(), 2);
+    assert_eq!(items[1].get("degraded").and_then(Json::as_bool), Some(false));
+
+    // Non-finite energy must degrade to null, not invalid JSON.
+    let mut nan = awkward_response();
+    nan.energy_j = f64::NAN;
+    let doc = Json::parse(&infer_response_json(&nan, Disposition::default())).unwrap();
+    assert!(matches!(doc.get("energy_j"), Some(Json::Null)));
+
+    // Error bodies parse and carry the retry hint.
+    let doc = Json::parse(&error_json("shed", "overloaded \"now\"\n", Some(250))).unwrap();
+    let err = doc.get("error").unwrap();
+    assert_eq!(err.get("kind").and_then(Json::as_str), Some("shed"));
+    assert_eq!(err.get("retry_after_ms").and_then(Json::as_f64), Some(250.0));
+}
+
+#[test]
+fn scanner_agrees_with_tree_parser() {
+    property("scan matches tree parse", 150, |g| {
+        let pixels = g.vec_f32_nonempty(48, -16.0, 16.0);
+        let mc = g.usize_in(0, 300);
+        let threshold = if g.bool() {
+            Some(g.f64_in(0.0, 10.0))
+        } else {
+            None
+        };
+        let n_reqs = g.usize_in(1, 4);
+        let batch = g.bool();
+
+        let mut one = String::from("{\"junk\":{\"a\":[1,{\"b\":\"}]\\\"\"},null,[]],\"c\":true},");
+        one.push_str("\"pixels\":[");
+        for (i, p) in pixels.iter().enumerate() {
+            if i > 0 {
+                one.push(',');
+            }
+            one.push_str(&format!("{p}"));
+        }
+        one.push(']');
+        if mc > 0 {
+            one.push_str(&format!(",\"mc_samples\":{mc}"));
+        }
+        if let Some(t) = threshold {
+            one.push_str(&format!(",\"defer_threshold\":{t}"));
+        }
+        one.push('}');
+
+        let body = if batch {
+            let mut b = String::from("{\"requests\":[");
+            for i in 0..n_reqs {
+                if i > 0 {
+                    b.push(',');
+                }
+                b.push_str(&one);
+            }
+            b.push_str("]}");
+            b
+        } else {
+            one.clone()
+        };
+
+        let (reqs, was_batch) = scan_infer_batch(body.as_bytes()).expect("valid body");
+        assert_eq!(was_batch, batch);
+        assert_eq!(reqs.len(), if batch { n_reqs } else { 1 });
+        for r in &reqs {
+            assert_eq!(r.pixels.len(), pixels.len());
+            for (got, want) in r.pixels.iter().zip(&pixels) {
+                // Shortest-form f32 text through the f64 scanner must land
+                // back on the same f32 bits.
+                assert_eq!(got.to_bits(), want.to_bits(), "pixel lost bits");
+            }
+            assert_eq!(r.mc_samples, mc);
+            assert_eq!(
+                r.defer_threshold.map(f64::to_bits),
+                threshold.map(f64::to_bits)
+            );
+        }
+
+        // The strict tree parser accepts the same body and agrees on
+        // pixels (scanner is a projection, not a different grammar).
+        let tree = Json::parse(&body).expect("tree parser agrees body is valid");
+        let obj = if batch {
+            &tree.get("requests").and_then(Json::as_arr).unwrap()[0]
+        } else {
+            &tree
+        };
+        let tree_pixels = obj.get("pixels").and_then(Json::as_f32_vec).unwrap();
+        assert_eq!(tree_pixels.len(), reqs[0].pixels.len());
+    });
+}
+
+#[test]
+fn scanner_never_panics_on_hostile_bytes() {
+    // Pure random bytes: any outcome but a panic.
+    property("random bytes never panic the scanner", 300, |g| {
+        let n = g.usize_in(0, 256);
+        let bytes: Vec<u8> = (0..n).map(|_| g.usize_in(0, 255) as u8).collect();
+        let _ = scan_infer_batch(&bytes);
+    });
+    // Truncations and single-byte corruptions of a valid body: the
+    // harder adversary, because prefixes are nearly-well-formed.
+    let valid = br#"{"requests":[{"pixels":[0.5,-1.25,3e-2],"mc_samples":8,"defer_threshold":0.4,"x":{"y":[1,"}"]}}]}"#;
+    property("mutated valid bodies never panic", 300, |g| {
+        let mut b = valid.to_vec();
+        if g.bool() {
+            b.truncate(g.usize_in(0, b.len()));
+        } else {
+            let i = g.usize_in(0, b.len() - 1);
+            b[i] = g.usize_in(0, 255) as u8;
+        }
+        let _ = scan_infer_batch(&b);
+    });
+}
+
+// ---------------------------------------------------------------------
+// 2. Transport + taxonomy
+// ---------------------------------------------------------------------
+
+#[test]
+fn serve_error_status_taxonomy_is_fixed() {
+    assert_eq!(status_for(&ServeError::QueueFull), 429);
+    assert_eq!(
+        status_for(&ServeError::WrongShape {
+            expected: 1024,
+            got: 3
+        }),
+        400
+    );
+    assert_eq!(
+        status_for(&ServeError::McSamplesTooLarge { max: 256, got: 999 }),
+        400
+    );
+    assert_eq!(
+        status_for(&ServeError::InvalidDeferThreshold { got: f64::NAN }),
+        400
+    );
+    assert_eq!(status_for(&ServeError::ShuttingDown), 503);
+    assert_eq!(status_for(&ServeError::Timeout), 504);
+    assert_eq!(status_for(&ServeError::Disconnected), 502);
+    assert_eq!(status_for(&ServeError::Config("x".into())), 500);
+    assert_eq!(status_for(&ServeError::Startup("x".into())), 500);
+}
+
+fn edge_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.server.backend = Backend::Sim;
+    cfg.server.workers = 2;
+    cfg.server.mc_workers = 1;
+    cfg.model.mc_samples = 4;
+    cfg.server.request_timeout_ms = 30_000.0;
+    cfg
+}
+
+fn pixels_json(pixels: &[f32]) -> String {
+    let mut s = String::from("[");
+    for (i, p) in pixels.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("{p}"));
+    }
+    s.push(']');
+    s
+}
+
+#[test]
+fn edge_http_surface_serves_and_survives_malformed() {
+    let cfg = edge_cfg();
+    let coord = Arc::new(Coordinator::builder(cfg.clone()).start().unwrap());
+    let edge = EdgeServer::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    let mut client = MiniClient::connect(edge.local_addr(), CLIENT_TIMEOUT).unwrap();
+
+    // Liveness and routing.
+    let (status, body) = client.request("GET", "/v1/health", None).unwrap();
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(doc.get("backend").and_then(Json::as_str), Some("sim"));
+    assert_eq!(doc.get("workers").and_then(Json::as_f64), Some(2.0));
+    let (status, _) = client.request("GET", "/v1/nope", None).unwrap();
+    assert_eq!(status, 404);
+    let (status, _) = client.request("GET", "/v1/infer", None).unwrap();
+    assert_eq!(status, 405);
+
+    // Malformed bodies: 400 each, connection and server stay healthy.
+    let mut deep = String::from(r#"{"pixels":[1],"junk":"#);
+    deep.push_str(&"[".repeat(100_000));
+    deep.push('}');
+    for bad in [
+        "{",
+        "null",
+        r#"{"mc_samples":4}"#,
+        r#"{"pixels":[1,]}"#,
+        r#"{"pixels":[1]}trailing"#,
+        r#"{"requests":[]}"#,
+        deep.as_str(),
+    ] {
+        let (status, body) = client.request("POST", "/v1/infer", Some(bad)).unwrap();
+        assert_eq!(status, 400, "body {bad:.40} must be rejected");
+        let doc = Json::parse(&body).unwrap();
+        assert_eq!(
+            doc.get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+            Some("bad_request")
+        );
+    }
+
+    // Well-formed JSON that fails admission validation: 400 with the
+    // specific taxonomy kind, not a generic parse error.
+    let (status, body) = client
+        .request("POST", "/v1/infer", Some(r#"{"pixels":[1,2,3]}"#))
+        .unwrap();
+    assert_eq!(status, 400);
+    assert!(body.contains("wrong_shape"), "got {body}");
+    let big = format!(
+        "{{\"pixels\":{},\"mc_samples\":99999}}",
+        pixels_json(&vec![0.0; cfg.model.image_side * cfg.model.image_side])
+    );
+    let (status, body) = client.request("POST", "/v1/infer", Some(&big)).unwrap();
+    assert_eq!(status, 400);
+    assert!(body.contains("mc_samples_too_large"), "got {body}");
+
+    // The same connection still serves a valid request...
+    let person = SyntheticPerson::new(cfg.model.image_side, 42).sample(0);
+    let good = format!("{{\"pixels\":{}}}", pixels_json(&person.pixels));
+    let (status, body) = client.request("POST", "/v1/infer", Some(&good)).unwrap();
+    assert_eq!(status, 200, "got {body}");
+    let doc = Json::parse(&body).unwrap();
+    assert!(doc.get("uncertainty").is_some());
+    assert_eq!(doc.get("mc_samples").and_then(Json::as_f64), Some(4.0));
+
+    // ...and the metrics route reports it, per shard and globally.
+    let (status, body) = client.request("GET", "/v1/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).unwrap();
+    assert!(doc.get("requests_total").and_then(Json::as_f64).unwrap() >= 1.0);
+    assert_eq!(doc.get("per_shard").and_then(Json::as_arr).unwrap().len(), 2);
+    let render = doc.get("render").and_then(Json::as_str).unwrap();
+    assert!(render.contains("edge shed="), "render: {render}");
+
+    edge.shutdown();
+    drop(coord); // Drop shuts the pool down
+}
+
+// ---------------------------------------------------------------------
+// 3. Semantics: bit-identity and the admission machine
+// ---------------------------------------------------------------------
+
+#[test]
+fn wire_infer_is_bit_identical_to_in_process() {
+    let cfg = edge_cfg();
+    let gen = SyntheticPerson::new(cfg.model.image_side, 7);
+    let samples: Vec<Vec<f32>> = (0..3).map(|i| gen.sample(i).pixels).collect();
+
+    // Reference: an in-process pool serving the same serial workload.
+    let coord = Coordinator::builder(cfg.clone()).start().unwrap();
+    let tickets = coord
+        .submit_many(vec![
+            Infer::new(samples[0].clone()).mc_samples(8),
+            Infer::new(samples[1].clone()),
+            Infer::new(samples[2].clone()).mc_samples(8).defer_threshold(0.45),
+        ])
+        .unwrap();
+    let reference: Vec<InferResponse> = tickets
+        .into_iter()
+        .map(|t| t.wait_timeout(Duration::from_secs(120)).unwrap())
+        .collect();
+    coord.shutdown();
+
+    // A fresh, identically-configured pool behind the HTTP edge. Same
+    // (die_seed, workers, mc_workers) triple => the determinism contract
+    // says the wire must not move a single bit.
+    let coord = Arc::new(Coordinator::builder(cfg.clone()).start().unwrap());
+    let edge = EdgeServer::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    let mut client = MiniClient::connect(edge.local_addr(), CLIENT_TIMEOUT).unwrap();
+    let body = format!(
+        "{{\"requests\":[{{\"pixels\":{},\"mc_samples\":8}},{{\"pixels\":{}}},\
+         {{\"pixels\":{},\"mc_samples\":8,\"defer_threshold\":0.45}}]}}",
+        pixels_json(&samples[0]),
+        pixels_json(&samples[1]),
+        pixels_json(&samples[2]),
+    );
+    let (status, resp) = client.request("POST", "/v1/infer", Some(&body)).unwrap();
+    assert_eq!(status, 200, "got {resp}");
+    let doc = Json::parse(&resp).unwrap();
+    let wire = doc.get("responses").and_then(Json::as_arr).unwrap();
+    assert_eq!(wire.len(), reference.len());
+
+    for (w, r) in wire.iter().zip(&reference) {
+        let probs = w.get("probs").and_then(Json::as_f64_vec).unwrap();
+        assert_eq!(probs.len(), r.pred.probs.len());
+        for (a, b) in probs.iter().zip(&r.pred.probs) {
+            assert_eq!(a.to_bits(), b.to_bits(), "probs moved over the wire");
+        }
+        let bits = |v: Option<&Json>| v.and_then(Json::as_f64).map(f64::to_bits);
+        assert_eq!(
+            bits(w.get("confidence")),
+            Some(r.pred.confidence.to_bits())
+        );
+        let u = w.get("uncertainty").unwrap();
+        assert_eq!(bits(u.get("entropy")), Some(r.uncertainty.entropy.to_bits()));
+        assert_eq!(
+            bits(u.get("aleatoric")),
+            Some(r.uncertainty.aleatoric.to_bits())
+        );
+        assert_eq!(
+            bits(u.get("epistemic")),
+            Some(r.uncertainty.epistemic.to_bits())
+        );
+        assert_eq!(
+            bits(u.get("threshold")),
+            Some(r.uncertainty.threshold.to_bits())
+        );
+        assert_eq!(
+            u.get("deferred").and_then(Json::as_bool),
+            Some(r.uncertainty.deferred)
+        );
+        assert_eq!(
+            w.get("class").and_then(Json::as_f64),
+            Some(r.pred.class as f64)
+        );
+        assert_eq!(
+            w.get("mc_samples").and_then(Json::as_f64),
+            Some(r.pred.t as f64)
+        );
+        assert_eq!(w.get("degraded").and_then(Json::as_bool), Some(false));
+        assert_eq!(w.get("escalated").and_then(Json::as_bool), Some(false));
+    }
+
+    edge.shutdown();
+    drop(coord); // Drop shuts the pool down
+}
+
+/// A `SimEngine` that takes its time: every entry-point execution sleeps
+/// first, so a small queue actually backs up at test scale.
+struct SlowEngine {
+    inner: SimEngine,
+    delay: Duration,
+}
+
+impl InferenceEngine for SlowEngine {
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn run(&mut self, entry: &str, inputs: &[(&[f32], &Vec<usize>)]) -> bnn_cim::Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        self.inner.run(entry, inputs)
+    }
+
+    fn executions(&self) -> u64 {
+        self.inner.executions()
+    }
+
+    fn name(&self) -> &'static str {
+        "slow-sim"
+    }
+}
+
+#[test]
+fn overload_sheds_degrades_escalates_with_bounded_p99() {
+    let mut cfg = Config::default();
+    cfg.server.backend = Backend::Sim;
+    cfg.server.workers = 1;
+    cfg.server.mc_workers = 1;
+    cfg.server.max_batch = 1;
+    cfg.server.queue_capacity = 4;
+    cfg.server.request_timeout_ms = 30_000.0;
+    cfg.model.mc_samples = 4;
+    // Every verdict defers (entropy is strictly positive), so every
+    // degraded pass wants escalation.
+    cfg.model.defer_threshold = 0.0;
+    // Degrade band starts at load 0 => every expensive request takes the
+    // cheap pass first; shed band at 0.5 of a 4-deep queue.
+    cfg.server.edge_degrade_load = 0.0;
+    cfg.server.edge_shed_load = 0.5;
+    cfg.server.edge_degraded_mc_samples = 1;
+    cfg.server.edge_threads = 8;
+
+    let factory_cfg = cfg.clone();
+    let coord = Arc::new(
+        Coordinator::builder(cfg.clone())
+            .engine_factory(Arc::new(move |_shard| {
+                Ok(Box::new(SlowEngine {
+                    inner: SimEngine::from_config(&factory_cfg),
+                    delay: Duration::from_millis(10),
+                }) as Box<dyn InferenceEngine>)
+            }))
+            .start()
+            .unwrap(),
+    );
+    let edge = EdgeServer::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    let addr = edge.local_addr();
+
+    let person = SyntheticPerson::new(cfg.model.image_side, 11).sample(0);
+    let body = Arc::new(format!(
+        "{{\"pixels\":{},\"mc_samples\":4}}",
+        pixels_json(&person.pixels)
+    ));
+
+    // Phase A: a burst far beyond the queue. Every outcome must be a
+    // clean 200 or a shed 429 — no dropped connections, no panics.
+    let mut ok = 0u64;
+    let mut shed = 0u64;
+    let mut latencies: Vec<f64> = Vec::new();
+    let handles: Vec<_> = (0..16)
+        .map(|_| {
+            let body = Arc::clone(&body);
+            std::thread::spawn(move || {
+                let mut out = Vec::new();
+                let mut client = MiniClient::connect(addr, CLIENT_TIMEOUT).unwrap();
+                for _ in 0..2 {
+                    let t0 = Instant::now();
+                    let (status, _) = client.request("POST", "/v1/infer", Some(&body)).unwrap();
+                    out.push((status, t0.elapsed().as_secs_f64() * 1e3));
+                }
+                out
+            })
+        })
+        .collect();
+    for h in handles {
+        for (status, ms) in h.join().unwrap() {
+            match status {
+                200 => {
+                    ok += 1;
+                    latencies.push(ms);
+                }
+                429 => shed += 1,
+                other => panic!("unexpected status {other} under overload"),
+            }
+        }
+    }
+    assert!(ok > 0, "overload must still complete some requests");
+    assert!(shed > 0, "a 4-deep queue under a 32-request burst must shed");
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99 = latencies[(latencies.len() - 1) * 99 / 100];
+    // Completed requests are bounded by the per-submission deadline
+    // (cheap pass + best-effort escalation = at most two waits).
+    assert!(
+        p99 <= 2.5 * cfg.server.request_timeout_ms,
+        "p99 {p99} ms unbounded under overload"
+    );
+
+    // Phase B: quiet again (all clients joined => nothing in flight).
+    // With the degrade band at 0 and plenty of shed headroom, one probe
+    // deterministically walks degrade -> deferred cheap verdict ->
+    // escalate back to its full 4-sample fidelity.
+    let mut client = MiniClient::connect(addr, CLIENT_TIMEOUT).unwrap();
+    let (status, resp) = client.request("POST", "/v1/infer", Some(&body)).unwrap();
+    assert_eq!(status, 200, "got {resp}");
+    assert!(resp.contains("\"degraded\":true"), "probe not degraded: {resp}");
+    assert!(resp.contains("\"escalated\":true"), "probe not escalated: {resp}");
+    let doc = Json::parse(&resp).unwrap();
+    assert_eq!(
+        doc.get("mc_samples").and_then(Json::as_f64),
+        Some(4.0),
+        "escalation must restore the original fidelity"
+    );
+
+    // The ledger saw all three dispositions, and the per-shard split
+    // sums to the globals (one shard here => exact equality).
+    let (status, body) = client.request("GET", "/v1/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    let doc = Json::parse(&body).unwrap();
+    let global = |k: &str| doc.get(k).and_then(Json::as_f64).unwrap();
+    assert!(global("requests_shed") >= shed as f64);
+    assert!(global("requests_degraded") >= 1.0);
+    assert!(global("requests_escalated") >= 1.0);
+    let shard = &doc.get("per_shard").and_then(Json::as_arr).unwrap()[0];
+    for k in ["requests_shed", "requests_degraded", "requests_escalated"] {
+        assert_eq!(
+            shard.get(k).and_then(Json::as_f64),
+            Some(global(k)),
+            "per-shard {k} must sum to the global"
+        );
+    }
+
+    edge.shutdown();
+    drop(coord); // Drop shuts the pool down
+}

@@ -1,29 +1,36 @@
 #!/usr/bin/env python3
 """CI regression gate for the repo-root BENCH_*.json perf artifacts.
 
-Run from the repo root after the bench-smoke suite has regenerated the
-reports (tests/mvm_props.rs, tests/grng_props.rs, tests/backend_smoke.rs
-write smoke-scale seeds; benches/* write calibrated reports):
+Run from the repo root after a bench suite has regenerated its reports
+(tests/mvm_props.rs, tests/grng_props.rs, tests/backend_smoke.rs write
+smoke-scale seeds; benches/* write calibrated reports; benches/edge_load.rs
+writes the HTTP load curve):
 
-    python3 scripts/bench_gate.py
+    python3 scripts/bench_gate.py                  # gate every report
+    python3 scripts/bench_gate.py BENCH_edge.json  # gate only these files
+
+CI jobs pass the files their suite actually regenerates, so a job never
+fails on a placeholder another job owns (bench-smoke gates the kernel
+reports, edge-smoke gates BENCH_edge.json).
 
 Rules:
 
-- BENCH_cim_mvm.json must report a nonzero `speedup_single_thread`;
-  BENCH_grng_fill.json must report a nonzero `speedup_block_vs_legacy`.
-  A 0.0 (or missing) headline means the bench never actually ran — the
-  placeholder state this gate exists to forbid.
-- Each fresh headline is compared against the checked-in baseline
-  (`git show HEAD:<file>`): a drop below REGRESSION_FRACTION of the
-  baseline fails. Placeholder baselines (0.0, or a "smoke"-free source
-  missing) only get the nonzero check, so the very first real numbers
-  can land.
-- When the fresh MVM report was produced with a vector `simd_level`
-  (not "scalar"), the kernel-level `speedup_lane_dot_simd_vs_scalar`
-  must be at least MIN_SIMD_KERNEL_SPEEDUP — the ISSUE 6 acceptance bar
-  for the vectorized lane_dot on the 64-row geometry. End-to-end MVM
-  numbers are dominated by ADC/ziggurat scalar work, so the bar sits on
-  the kernel, where the vector arm actually runs.
+- A report carrying `"placeholder": true` is a checked-in seed that never
+  came from a measurement run. A *fresh* placeholder fails its gate (the
+  suite did not regenerate it); a placeholder *baseline* merely skips the
+  regression comparison so the first real numbers can land.
+- Each gated file has a headline field that must be a positive number.
+- The fresh headline is compared against the checked-in baseline
+  (`git show HEAD:<file>`): a drop below REGRESSION_FRACTION fails.
+- BENCH_cim_mvm.json only: when the fresh report ran on a vector
+  `simd_level` (not "scalar"), the kernel-level
+  `speedup_lane_dot_simd_vs_scalar` must be at least
+  MIN_SIMD_KERNEL_SPEEDUP — the ISSUE 6 acceptance bar for the
+  vectorized lane_dot on the 64-row geometry.
+- BENCH_edge.json only: the `overload` point (the sweep point offered
+  above measured capacity) must show the admission machine engaging —
+  `shed + degraded + escalated > 0` — while `p99_bounded` stays true
+  (p99 latency within the configured request timeout).
 
 Exit code 0 = all gates pass; 1 = any gate fails (fails the CI job).
 """
@@ -35,11 +42,12 @@ import sys
 REGRESSION_FRACTION = 0.8  # fresh must be >= 80% of a real baseline
 MIN_SIMD_KERNEL_SPEEDUP = 1.5
 
-GATES = [
-    # (file, headline field that must be nonzero and non-regressing)
-    ("BENCH_cim_mvm.json", "speedup_single_thread"),
-    ("BENCH_grng_fill.json", "speedup_block_vs_legacy"),
-]
+# file -> headline field that must be positive and non-regressing
+GATES = {
+    "BENCH_cim_mvm.json": "speedup_single_thread",
+    "BENCH_grng_fill.json": "speedup_block_vs_legacy",
+    "BENCH_edge.json": "peak_completed_rps",
+}
 
 failures = []
 
@@ -68,66 +76,130 @@ def load_baseline(path):
 
 
 def is_placeholder(doc):
-    """A report that never came from a real measurement run."""
+    """A report that never came from a real measurement run. The explicit
+    `placeholder` field is authoritative; the source-string fallback keeps
+    pre-field baselines in history recognizable."""
     if doc is None:
         return True
-    src = doc.get("source", "")
-    return "placeholder" in src or not doc.get("cases")
+    if doc.get("placeholder") is True:
+        return True
+    return "placeholder" in doc.get("source", "") and "placeholder" not in doc
 
 
-def main():
-    for path, field in GATES:
-        fresh = load_fresh(path)
-        if fresh is None:
-            continue
-        value = fresh.get(field, 0.0)
-        if not isinstance(value, (int, float)) or value <= 0.0:
+def gate_headline(path, field):
+    fresh = load_fresh(path)
+    if fresh is None:
+        return None
+    if is_placeholder(fresh):
+        failures.append(
+            f"{path}: still a placeholder — the bench suite did not "
+            f"regenerate it"
+        )
+        return None
+    value = fresh.get(field, 0.0)
+    if not isinstance(value, (int, float)) or value <= 0.0:
+        failures.append(
+            f"{path}: {field} = {value!r} — bench did not produce a real "
+            f"number"
+        )
+        return fresh
+    print(f"{path}: {field} = {value:.3f}")
+
+    baseline = load_baseline(path)
+    if is_placeholder(baseline):
+        print(f"{path}: baseline is a placeholder — nonzero check only")
+        return fresh
+    base = baseline.get(field, 0.0)
+    if isinstance(base, (int, float)) and base > 0.0:
+        floor = base * REGRESSION_FRACTION
+        if value < floor:
             failures.append(
-                f"{path}: {field} = {value!r} — bench did not produce a real "
-                f"number (placeholder not regenerated?)"
+                f"{path}: {field} regressed: {value:.3f} < {floor:.3f} "
+                f"({REGRESSION_FRACTION:.0%} of baseline {base:.3f})"
             )
+        else:
+            print(
+                f"{path}: within {REGRESSION_FRACTION:.0%} of baseline "
+                f"{base:.3f}"
+            )
+    return fresh
+
+
+def gate_simd_kernel(mvm):
+    """SIMD kernel bar: only when the fresh report ran on a vector arm."""
+    level = mvm.get("simd_level", "scalar")
+    if level == "scalar":
+        print("BENCH_cim_mvm.json: scalar host — SIMD kernel bar skipped")
+        return
+    kernel = mvm.get("speedup_lane_dot_simd_vs_scalar", 0.0)
+    if not isinstance(kernel, (int, float)) or kernel < MIN_SIMD_KERNEL_SPEEDUP:
+        failures.append(
+            f"BENCH_cim_mvm.json: simd_level={level} but "
+            f"speedup_lane_dot_simd_vs_scalar = {kernel!r} < "
+            f"{MIN_SIMD_KERNEL_SPEEDUP} — vectorized lane_dot is not "
+            f"pulling its weight"
+        )
+    else:
+        print(
+            f"BENCH_cim_mvm.json: lane_dot {level} speedup {kernel:.2f}x "
+            f">= {MIN_SIMD_KERNEL_SPEEDUP}x"
+        )
+
+
+def gate_edge_overload(edge):
+    """The admission machine must visibly engage at the overload point
+    while keeping tail latency bounded."""
+    overload = edge.get("overload")
+    if not isinstance(overload, dict):
+        failures.append(
+            "BENCH_edge.json: no overload point — the sweep never offered "
+            "load above measured capacity"
+        )
+        return
+    engaged = sum(
+        overload.get(k, 0) or 0 for k in ("shed", "degraded", "escalated")
+    )
+    if engaged <= 0:
+        failures.append(
+            f"BENCH_edge.json: overload point shows no admission activity "
+            f"(shed={overload.get('shed')!r}, "
+            f"degraded={overload.get('degraded')!r}, "
+            f"escalated={overload.get('escalated')!r}) at "
+            f"{overload.get('offered_rps', 0):.0f} rps offered"
+        )
+    else:
+        print(
+            f"BENCH_edge.json: overload engaged admission "
+            f"(shed+degraded+escalated = {engaged:.0f})"
+        )
+    if overload.get("p99_bounded") is not True:
+        failures.append(
+            f"BENCH_edge.json: overload p99 {overload.get('p99_ms', 0):.1f} ms "
+            f"exceeded the request timeout (p99_bounded = "
+            f"{overload.get('p99_bounded')!r})"
+        )
+    else:
+        print(
+            f"BENCH_edge.json: overload p99 {overload.get('p99_ms', 0):.1f} ms "
+            f"within the request timeout"
+        )
+
+
+def main(argv):
+    selected = argv[1:] or list(GATES)
+    unknown = [p for p in selected if p not in GATES]
+    if unknown:
+        print(f"unknown gate files: {unknown}; known: {list(GATES)}", file=sys.stderr)
+        return 1
+
+    for path in selected:
+        fresh = gate_headline(path, GATES[path])
+        if fresh is None or is_placeholder(fresh):
             continue
-        print(f"{path}: {field} = {value:.3f}")
-
-        baseline = load_baseline(path)
-        if is_placeholder(baseline):
-            print(f"{path}: baseline is a placeholder — nonzero check only")
-        else:
-            base = baseline.get(field, 0.0)
-            if isinstance(base, (int, float)) and base > 0.0:
-                floor = base * REGRESSION_FRACTION
-                if value < floor:
-                    failures.append(
-                        f"{path}: {field} regressed: {value:.3f} < "
-                        f"{floor:.3f} ({REGRESSION_FRACTION:.0%} of baseline "
-                        f"{base:.3f})"
-                    )
-                else:
-                    print(
-                        f"{path}: within {REGRESSION_FRACTION:.0%} of "
-                        f"baseline {base:.3f}"
-                    )
-
-    # SIMD kernel bar: only when the fresh report ran on a vector arm.
-    mvm = load_fresh("BENCH_cim_mvm.json")
-    if mvm is not None:
-        level = mvm.get("simd_level", "scalar")
-        if level != "scalar":
-            kernel = mvm.get("speedup_lane_dot_simd_vs_scalar", 0.0)
-            if not isinstance(kernel, (int, float)) or kernel < MIN_SIMD_KERNEL_SPEEDUP:
-                failures.append(
-                    f"BENCH_cim_mvm.json: simd_level={level} but "
-                    f"speedup_lane_dot_simd_vs_scalar = {kernel!r} < "
-                    f"{MIN_SIMD_KERNEL_SPEEDUP} — vectorized lane_dot is not "
-                    f"pulling its weight"
-                )
-            else:
-                print(
-                    f"BENCH_cim_mvm.json: lane_dot {level} speedup "
-                    f"{kernel:.2f}x >= {MIN_SIMD_KERNEL_SPEEDUP}x"
-                )
-        else:
-            print("BENCH_cim_mvm.json: scalar host — SIMD kernel bar skipped")
+        if path == "BENCH_cim_mvm.json":
+            gate_simd_kernel(fresh)
+        elif path == "BENCH_edge.json":
+            gate_edge_overload(fresh)
 
     if failures:
         print("\nBENCH GATE FAILURES:", file=sys.stderr)
@@ -139,4 +211,4 @@ def main():
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(main(sys.argv))
