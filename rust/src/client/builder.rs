@@ -9,6 +9,7 @@ use crate::client::ServeError;
 use crate::config::{Backend, Config};
 use crate::coordinator::epsilon::EpsilonSupply;
 use crate::coordinator::server::{Coordinator, EngineFactory, SourceFactory};
+use crate::fault::FaultPlan;
 use crate::runtime::{CimEngine, EpsilonMode, InferenceEngine, SimEngine};
 use std::sync::Arc;
 
@@ -19,6 +20,7 @@ pub struct CoordinatorBuilder {
     engine_factory: Option<EngineFactory>,
     source_factory: Option<SourceFactory>,
     epsilon: Option<EpsilonMode>,
+    fault_plan: Option<FaultPlan>,
 }
 
 impl CoordinatorBuilder {
@@ -28,6 +30,7 @@ impl CoordinatorBuilder {
             engine_factory: None,
             source_factory: None,
             epsilon: None,
+            fault_plan: None,
         }
     }
 
@@ -79,6 +82,18 @@ impl CoordinatorBuilder {
         self
     }
 
+    /// Deterministic fault-injection schedule for chaos testing: every
+    /// shard engine is wrapped in a [`crate::fault::FaultyEngine`]
+    /// decorator driven by the plan (see [`crate::fault`]'s module docs
+    /// for the taxonomy and determinism contract). Overrides both the
+    /// `BNN_CIM_FAULT_PLAN` environment variable and the config's
+    /// `[faults]` section; pass `FaultPlan::default()` to explicitly
+    /// disable injection regardless of either.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
     /// Boot the pool.
     ///
     /// Resolution: the engine comes from [`Self::engine_factory`] if
@@ -88,12 +103,17 @@ impl CoordinatorBuilder {
     /// from [`Self::source_factory`] if set, else from
     /// [`Self::epsilon`], else from the backend default (in-word for
     /// `cim`, per-shard GRNG banks otherwise).
+    /// The fault plan (chaos testing) resolves builder override >
+    /// `BNN_CIM_FAULT_PLAN` env var > config `[faults]`; when the
+    /// resolved plan is active every shard engine is wrapped in a
+    /// deterministic [`crate::fault::FaultyEngine`] decorator.
     pub fn start(self) -> Result<Coordinator, ServeError> {
         let CoordinatorBuilder {
-            cfg,
+            mut cfg,
             engine_factory,
             source_factory,
             epsilon,
+            fault_plan,
         } = self;
         // The stock cim engine generates ε inside its tile arrays; the
         // worker handshake would silently ignore an external supply, so
@@ -112,9 +132,26 @@ impl CoordinatorBuilder {
                     .into(),
             ));
         }
+        // Fault-plan resolution: builder override > env var > config.
+        // The resolved plan is written back into the config so
+        // `Coordinator::config()` reports what actually runs.
+        let plan = match fault_plan {
+            Some(plan) => plan,
+            None => match FaultPlan::from_env().map_err(ServeError::from)? {
+                Some(plan) => plan,
+                None => cfg.faults.clone(),
+            },
+        };
+        plan.validate().map_err(ServeError::from)?;
+        cfg.faults = plan.clone();
         let make_engine = match engine_factory {
             Some(f) => f,
             None => default_engine_factory(&cfg)?,
+        };
+        let make_engine = if plan.active() {
+            crate::fault::wrap_engine_factory(make_engine, plan)
+        } else {
+            make_engine
         };
         let supply = match (source_factory, epsilon) {
             (Some(_), Some(EpsilonMode::InWord)) => {

@@ -33,6 +33,12 @@ pub enum ServeError {
     /// The serving side dropped the reply channel (worker death or
     /// engine failure mid-batch) — the response will never arrive.
     Disconnected,
+    /// The shard serving this request died (or kept failing) and the
+    /// per-request retry budget (`server.retry_budget`) is exhausted —
+    /// delivered as a typed reply by the supervisor, so waits resolve
+    /// promptly instead of running out their own deadline. Inference is
+    /// pure: resubmitting the same request is always safe.
+    ShardFailed { shard: usize },
     /// Invalid configuration or an inconsistent builder combination.
     Config(String),
     /// The pool failed to boot: engine load, worker spawn, or a backend
@@ -57,6 +63,9 @@ impl std::fmt::Display for ServeError {
             ServeError::Timeout => write!(f, "request timed out"),
             ServeError::Disconnected => {
                 write!(f, "serving side dropped the reply channel")
+            }
+            ServeError::ShardFailed { shard } => {
+                write!(f, "shard {shard} failed and the retry budget is exhausted")
             }
             ServeError::Config(s) => write!(f, "configuration error: {s}"),
             ServeError::Startup(s) => write!(f, "startup error: {s}"),

@@ -16,6 +16,7 @@ pub struct Infer {
     pub(crate) pixels: Vec<f32>,
     pub(crate) mc_samples: usize,
     pub(crate) defer_threshold: Option<f64>,
+    pub(crate) deadline: Option<std::time::Duration>,
 }
 
 impl Infer {
@@ -27,6 +28,7 @@ impl Infer {
             pixels,
             mc_samples: 0,
             defer_threshold: None,
+            deadline: None,
         }
     }
 
@@ -44,6 +46,16 @@ impl Infer {
         self.defer_threshold = Some(nats);
         self
     }
+
+    /// End-to-end deadline for this request, fixed at admission
+    /// (default: `server.request_timeout_ms`). The budget survives
+    /// failure recovery: a request redelivered after a shard death keeps
+    /// its *original* deadline, so retries never stretch the caller's
+    /// time bound (DESIGN.md §9).
+    pub fn deadline(mut self, budget: std::time::Duration) -> Self {
+        self.deadline = Some(budget);
+        self
+    }
 }
 
 #[cfg(test)]
@@ -55,8 +67,13 @@ mod tests {
         let req = Infer::new(vec![0.0; 4]);
         assert_eq!(req.mc_samples, 0);
         assert_eq!(req.defer_threshold, None);
-        let req = Infer::new(vec![0.0; 4]).mc_samples(12).defer_threshold(0.3);
+        assert_eq!(req.deadline, None);
+        let req = Infer::new(vec![0.0; 4])
+            .mc_samples(12)
+            .defer_threshold(0.3)
+            .deadline(std::time::Duration::from_millis(250));
         assert_eq!(req.mc_samples, 12);
         assert_eq!(req.defer_threshold, Some(0.3));
+        assert_eq!(req.deadline, Some(std::time::Duration::from_millis(250)));
     }
 }

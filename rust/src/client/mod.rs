@@ -61,9 +61,11 @@ pub use ticket::Ticket;
 pub use crate::bayes::{McPrediction, UncertaintyReport};
 pub use crate::config::{Backend, Config};
 pub use crate::coordinator::{
-    Coordinator, EngineFactory, InferResponse, MetricsSnapshot, ShardSnapshot, SourceFactory,
+    Coordinator, EngineFactory, InferResponse, MetricsSnapshot, ShardHealth, ShardSnapshot,
+    SourceFactory,
 };
 pub use crate::edge::EdgeServer;
+pub use crate::fault::FaultPlan;
 pub use crate::runtime::EpsilonMode;
 
 impl Coordinator {

@@ -1,6 +1,7 @@
 //! [`Ticket`] — the typed handle to one in-flight request.
 
 use crate::client::ServeError;
+use crate::coordinator::request::Reply;
 use crate::coordinator::InferResponse;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::Duration;
@@ -13,38 +14,48 @@ use std::time::Duration;
 /// without losing the handle. Dropping a ticket abandons the response —
 /// the shard worker then finds a dead reply channel, counts the request
 /// under `requests_orphaned` in the metrics, and carries on serving.
+///
+/// Failures are *delivered* through the same channel: when a shard dies
+/// and the supervisor exhausts the retry budget, a blocked `wait`
+/// resolves promptly with [`ServeError::ShardFailed`] rather than
+/// hanging until the global request deadline.
 pub struct Ticket {
     /// Request id (matches [`InferResponse::id`] on the response).
     pub id: u64,
-    rx: Receiver<InferResponse>,
+    rx: Receiver<Reply>,
 }
 
 impl Ticket {
-    pub(crate) fn new(id: u64, rx: Receiver<InferResponse>) -> Self {
+    pub(crate) fn new(id: u64, rx: Receiver<Reply>) -> Self {
         Self { id, rx }
     }
 
-    /// Block until the response arrives. [`ServeError::Disconnected`]
-    /// means the serving side dropped the reply channel (worker death or
-    /// engine failure mid-batch) and the response will never come.
+    /// Block until the outcome arrives: the response, a typed failure
+    /// (e.g. [`ServeError::ShardFailed`] once the supervisor gives up on
+    /// the request), or [`ServeError::Disconnected`] if the serving side
+    /// dropped the reply channel without delivering either.
     pub fn wait(self) -> Result<InferResponse, ServeError> {
-        self.rx.recv().map_err(|_| ServeError::Disconnected)
+        match self.rx.recv() {
+            Ok(reply) => reply.into_result(),
+            Err(_) => Err(ServeError::Disconnected),
+        }
     }
 
     /// Block up to `timeout`. On [`ServeError::Timeout`] the ticket is
     /// still live: keep waiting, or drop it to abandon the request (the
     /// late reply is then counted as orphaned, not leaked).
     pub fn wait_timeout(&self, timeout: Duration) -> Result<InferResponse, ServeError> {
-        self.rx.recv_timeout(timeout).map_err(|e| match e {
-            RecvTimeoutError::Timeout => ServeError::Timeout,
-            RecvTimeoutError::Disconnected => ServeError::Disconnected,
-        })
+        match self.rx.recv_timeout(timeout) {
+            Ok(reply) => reply.into_result(),
+            Err(RecvTimeoutError::Timeout) => Err(ServeError::Timeout),
+            Err(RecvTimeoutError::Disconnected) => Err(ServeError::Disconnected),
+        }
     }
 
     /// Non-blocking poll: `Ok(None)` while the request is in flight.
     pub fn try_wait(&self) -> Result<Option<InferResponse>, ServeError> {
         match self.rx.try_recv() {
-            Ok(resp) => Ok(Some(resp)),
+            Ok(reply) => reply.into_result().map(Some),
             Err(TryRecvError::Empty) => Ok(None),
             Err(TryRecvError::Disconnected) => Err(ServeError::Disconnected),
         }

@@ -28,6 +28,9 @@ pub struct Config {
     pub chip: ChipConfig,
     pub model: ModelConfig,
     pub server: ServerConfig,
+    /// Deterministic fault-injection schedule (`[faults]`); inert by
+    /// default — see [`crate::fault`].
+    pub faults: crate::fault::FaultPlan,
 }
 
 impl Config {
@@ -53,6 +56,9 @@ impl Config {
         if let Some(server) = doc.get("server") {
             cfg.server.apply_json(server)?;
         }
+        if let Some(faults) = doc.get("faults") {
+            cfg.faults.apply_json(faults)?;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -61,6 +67,7 @@ impl Config {
         self.chip.validate()?;
         self.model.validate()?;
         self.server.validate()?;
+        self.faults.validate()?;
         if self.model.mc_samples > self.server.max_mc_samples {
             return Err(Error::Config(format!(
                 "model.mc_samples ({}) exceeds server.max_mc_samples ({})",

@@ -86,6 +86,16 @@ pub struct ServerConfig {
     pub edge_retry_after_ms: u64,
     /// Largest accepted request body \[bytes\] (413 beyond this).
     pub edge_max_body_bytes: usize,
+    /// How many times a request recovered from a failed shard is
+    /// redelivered before the client sees `ServeError::ShardFailed`.
+    /// Inference is pure, so redelivery is safe; the deadline carried by
+    /// the request still bounds the total time budget across retries.
+    pub retry_budget: usize,
+    /// How many times the supervisor respawns a crashed shard worker
+    /// before declaring the shard `dead` (0 = never respawn). Each
+    /// respawn re-seeds the shard from its original deterministic
+    /// `shard_die_seed` split.
+    pub shard_restart_limit: usize,
 }
 
 impl Default for ServerConfig {
@@ -106,6 +116,8 @@ impl Default for ServerConfig {
             edge_degraded_mc_samples: 4,
             edge_retry_after_ms: 250,
             edge_max_body_bytes: 8 << 20,
+            retry_budget: 1,
+            shard_restart_limit: 8,
         }
     }
 }
@@ -136,6 +148,8 @@ impl ServerConfig {
         )?;
         u64_field(doc, "edge_retry_after_ms", &mut self.edge_retry_after_ms)?;
         usize_field(doc, "edge_max_body_bytes", &mut self.edge_max_body_bytes)?;
+        usize_field(doc, "retry_budget", &mut self.retry_budget)?;
+        usize_field(doc, "shard_restart_limit", &mut self.shard_restart_limit)?;
         Ok(())
     }
 

@@ -8,6 +8,15 @@
 //! request→shard routing — and therefore every response — is a pure
 //! function of `(die_seed, workers)`).
 //!
+//! Routing is health-aware (DESIGN.md §9): the round-robin target is
+//! preferred, but a shard the supervisor has marked `Restarting`/`Dead`
+//! is skipped for the next healthy one. With every shard healthy the
+//! scan degenerates to the original pure round-robin, so the
+//! deterministic-replay contract is unchanged on the no-fault path. If
+//! *no* shard is healthy the dispatcher parks the batch and rescans
+//! until the supervisor heals a shard — or fails the batch typed
+//! ([`ServeError::ShardFailed`]) once every shard is terminally dead.
+//!
 //! Each shard worker constructs its own non-`Send` engine and — for
 //! external-ε backends — its own independent ε source (a per-shard GRNG
 //! bank seeded from a SplitMix64 split of `die_seed`), then runs:
@@ -15,7 +24,12 @@
 //! judge (`bayes::UncertaintyReport`, per-request threshold) → reply.
 //! Replies into dead channels (dropped `Ticket`s, timed-out blocking
 //! calls) are counted as `requests_orphaned` — the worker never crashes
-//! on an absent reader. Under `EpsilonMode::External` the worker fills ε buffers
+//! on an absent reader. Each batch is parked in the shard's
+//! [`InFlight`] slot for the duration of the serve, so a worker panic
+//! leaves the batch recoverable; a *transient* engine error (worker
+//! still alive) is recovered in place by the worker itself, under the
+//! same retry-budget/deadline rules the supervisor applies after a
+//! death. Under `EpsilonMode::External` the worker fills ε buffers
 //! per head call; under `EpsilonMode::InWord` the engine's own memory
 //! arrays generate ε during the MVM (the chip's dataflow) and the worker
 //! reads ε/energy totals back from the engine. Either way this is the
@@ -23,24 +37,28 @@
 //! independent compute lanes with no shared RNG unit on a bus.
 
 use crate::bayes::{aggregate_mc, UncertaintyReport};
+use crate::client::ServeError;
 use crate::config::Config;
 use crate::coordinator::batch::{effective_t, pack_images, plan_calls, scatter_features, Batch};
 use crate::coordinator::epsilon::EpsilonSource;
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{InferRequest, InferResponse};
+use crate::coordinator::request::{InferRequest, InferResponse, Reply};
+use crate::coordinator::supervisor::{recover_batch, InFlight, ShardHealth, ShardTable, WorkerCtx};
 use crate::runtime::{ArtifactSpec, EpsilonMode, InferenceEngine};
 use crate::util::threadpool::Bounded;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Front-end loop: runs until the request queue closes, then closes every
 /// shard queue behind itself so the workers drain and exit.
 pub(crate) fn run_dispatcher(
     requests: Bounded<InferRequest>,
-    shard_queues: Vec<Bounded<Batch>>,
+    table: Arc<ShardTable>,
+    metrics: Metrics,
     max_batch: usize,
     deadline: Duration,
 ) {
-    let shards = shard_queues.len().max(1);
+    let shards = table.shards().max(1);
     let mut next_batch_id: u64 = 0;
     loop {
         // Block for the first request (or shutdown).
@@ -69,19 +87,50 @@ pub(crate) fn run_dispatcher(
         }
         next_batch_id += 1;
         let target = ((next_batch_id - 1) % shards as u64) as usize;
-        let dead = shard_queues[target]
-            .send(Batch {
-                id: next_batch_id,
-                requests: members,
-            })
-            .is_err();
-        if dead || closed {
+        let mut pending = Some(Batch {
+            id: next_batch_id,
+            requests: members,
+        });
+        'route: loop {
+            let health = table.health();
+            if health.iter().all(|h| *h == ShardHealth::Dead) {
+                // Terminal: no shard will ever come back. Fail every
+                // member typed so blocked waits resolve promptly.
+                let batch = pending.take().expect("batch still pending");
+                for req in batch.requests {
+                    metrics.record_failed_shard(target);
+                    let _ = req
+                        .reply
+                        .send(Reply::Failed(ServeError::ShardFailed { shard: target }));
+                }
+                break 'route;
+            }
+            for k in 0..shards {
+                let i = (target + k) % shards;
+                if health[i] != ShardHealth::Healthy {
+                    continue;
+                }
+                // Clone the queue under the table's short lock; block on
+                // the send outside it. For a healthy target this is the
+                // original backpressure behaviour, unchanged.
+                let queue = table.queue(i);
+                match queue.send(pending.take().expect("batch still pending")) {
+                    Ok(()) => break 'route,
+                    // Closed between the health read and the send: the
+                    // worker just died — try the next candidate.
+                    Err(batch) => pending = Some(batch),
+                }
+            }
+            // No healthy shard accepted (restarts in flight): park
+            // briefly and rescan. The supervisor always makes progress —
+            // every exit ends in Healthy or Dead — so this terminates.
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        if closed {
             break;
         }
     }
-    for q in &shard_queues {
-        q.close();
-    }
+    table.close_all();
 }
 
 /// Per-shard metadata resolved once from the engine's manifest.
@@ -94,14 +143,17 @@ struct ShardPlan {
 }
 
 /// Worker loop: owns this shard's engine (and, for external-ε backends,
-/// its ε source) for its lifetime.
+/// its ε source) for its lifetime. Each batch is parked in `slot` while
+/// served; on a transient engine error the worker recovers the batch in
+/// place (retry budget + original deadline), and on a panic the
+/// supervisor recovers it from the slot.
 pub(crate) fn run_shard_worker(
     shard: usize,
     mut engine: Box<dyn InferenceEngine>,
     mut source: Option<Box<dyn EpsilonSource>>,
     batches: Bounded<Batch>,
-    metrics: Metrics,
-    cfg: Config,
+    slot: InFlight,
+    ctx: WorkerCtx,
 ) {
     let manifest = engine.manifest().clone();
     let plan = ShardPlan {
@@ -112,20 +164,30 @@ pub(crate) fn run_shard_worker(
         head_spec: manifest.entry("head").expect("head entry").clone(),
     };
     while let Some(batch) = batches.recv() {
-        serve_batch(
+        // The guard is held across the whole serve: a panic inside
+        // poisons the slot with the batch still parked, which is exactly
+        // what the supervisor recovers (poison-tolerant lock there).
+        let mut guard = slot.lock();
+        *guard = Some(batch);
+        let served = serve_batch(
             shard,
             engine.as_mut(),
             &mut source,
-            &batch,
-            &metrics,
-            &cfg,
+            guard.as_ref().expect("batch parked"),
+            &ctx.metrics,
+            &ctx.cfg,
             &plan,
         );
+        let batch = guard.take().expect("batch parked");
+        drop(guard);
         // serve_batch records before replying (so snapshots taken after a
         // response are current); repeat here so ε/energy drawn by a batch
         // that *failed* mid-way is still counted. Absolute totals make
         // the double-record idempotent.
-        record_energy_counters(shard, engine.as_ref(), &source, &metrics);
+        record_energy_counters(shard, engine.as_ref(), &source, &ctx.metrics);
+        if served.is_err() {
+            recover_batch(batch, shard, &ctx);
+        }
     }
 }
 
@@ -153,7 +215,9 @@ fn record_energy_counters(
 
 /// One fused batch: features once, then packed MC head passes — fresh
 /// external ε per call, or engine-internal in-word ε per MVM — then
-/// aggregate/defer/reply.
+/// aggregate/defer/reply. `Err` means the engine failed before any reply
+/// was sent (engine errors happen before the reply loop), so the caller
+/// can redeliver the whole batch without double-replying.
 fn serve_batch(
     shard: usize,
     engine: &mut dyn InferenceEngine,
@@ -162,7 +226,7 @@ fn serve_batch(
     metrics: &Metrics,
     cfg: &Config,
     plan: &ShardPlan,
-) {
+) -> Result<(), ()> {
     let reqs = &batch.requests;
     let mc: Vec<usize> = reqs.iter().map(|r| r.mc_samples).collect();
     let t = effective_t(&mc, cfg.model.mc_samples);
@@ -176,7 +240,7 @@ fn serve_batch(
         Ok(f) => f,
         Err(e) => {
             eprintln!("[bnn-cim shard {shard}] features execution failed: {e}");
-            return;
+            return Err(());
         }
     };
 
@@ -218,7 +282,7 @@ fn serve_batch(
             Ok(p) => p,
             Err(e) => {
                 eprintln!("[bnn-cim shard {shard}] head execution failed: {e}");
-                return;
+                return Err(());
             }
         };
         for (slot, &req) in owners.iter().enumerate() {
@@ -261,17 +325,18 @@ fn serve_batch(
         // instead of silently discarding the send error.
         let orphaned = req
             .reply
-            .send(InferResponse {
+            .send(Reply::Response(InferResponse {
                 id: req.id,
                 pred,
                 uncertainty,
                 latency,
                 batch_id: batch.id,
                 energy_j: energy_per_req_j,
-            })
+            }))
             .is_err();
         if orphaned {
             metrics.record_orphaned(shard);
         }
     }
+    Ok(())
 }

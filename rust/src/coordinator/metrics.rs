@@ -46,6 +46,17 @@ pub struct ShardSnapshot {
     /// Degraded requests whose cheap-pass `UncertaintyReport` came back
     /// uncertain and which the edge re-ran at full fidelity.
     pub requests_escalated: u64,
+    /// Times the supervisor respawned this shard's worker after a death
+    /// (DESIGN.md §9). The restart re-derives the shard's original
+    /// deterministic seed split.
+    pub shard_restarts: u64,
+    /// Requests redelivered through the admission queue after this shard
+    /// failed them (worker death or transient engine error), within the
+    /// per-request retry budget. Attributed to the *failing* shard.
+    pub requests_retried: u64,
+    /// Requests that received a typed `ShardFailed`/`Timeout` reply after
+    /// this shard failed them with no retry budget (or deadline) left.
+    pub requests_failed_shard: u64,
     pub batches: u64,
     pub mc_passes: u64,
     /// Engine executions (PJRT calls, sim-engine or cim-engine calls).
@@ -120,6 +131,13 @@ pub struct MetricsSnapshot {
     /// Degraded requests escalated back to full sampling after an
     /// uncertain cheap-pass verdict.
     pub requests_escalated: u64,
+    /// Worker respawns across all shards (supervisor self-healing).
+    pub shard_restarts: u64,
+    /// Requests redelivered after a shard failure, across all shards.
+    pub requests_retried: u64,
+    /// Requests failed typed (`ShardFailed`/recovery `Timeout`) after
+    /// exhausting the retry budget, across all shards.
+    pub requests_failed_shard: u64,
     pub requests_deferred: u64,
     pub batches: u64,
     pub mc_passes: u64,
@@ -181,6 +199,7 @@ impl MetricsSnapshot {
         let mut out = format!(
             "requests={} rejected={} orphaned={} deferred={} batches={} (fill {:.2})\n\
              edge shed={} degraded={} escalated={}\n\
+             faults restarts={} retried={} failed_shard={}\n\
              mc_passes={} pjrt_exec={} eps_samples={} eps_energy={:.3} µJ\n\
              latency p50={:.2} ms p95={:.2} ms max={:.2} ms | throughput={:.1} req/s",
             self.requests_total,
@@ -192,6 +211,9 @@ impl MetricsSnapshot {
             self.requests_shed,
             self.requests_degraded,
             self.requests_escalated,
+            self.shard_restarts,
+            self.requests_retried,
+            self.requests_failed_shard,
             self.mc_passes,
             self.pjrt_executions,
             self.epsilon_samples,
@@ -250,6 +272,12 @@ impl MetricsSnapshot {
                         s.requests_shed, s.requests_degraded, s.requests_escalated
                     ));
                 }
+                if s.shard_restarts + s.requests_retried + s.requests_failed_shard > 0 {
+                    out.push_str(&format!(
+                        " restarts={} retried={} failed={}",
+                        s.shard_restarts, s.requests_retried, s.requests_failed_shard
+                    ));
+                }
                 if s.engine_energy_j > 0.0 {
                     out.push_str(&format!(
                         " tiles {:.3} µJ, {:.0} fJ/Sa",
@@ -276,6 +304,9 @@ struct ShardInner {
     requests_shed: u64,
     requests_degraded: u64,
     requests_escalated: u64,
+    shard_restarts: u64,
+    requests_retried: u64,
+    requests_failed_shard: u64,
     batches: u64,
     mc_passes: u64,
     engine_executions: u64,
@@ -356,6 +387,24 @@ impl Metrics {
     /// re-ran it at full fidelity.
     pub fn record_escalated(&self, shard: usize) {
         self.inner.lock().unwrap().shards[shard].requests_escalated += 1;
+    }
+
+    /// The supervisor respawned this shard's worker after a death
+    /// (DESIGN.md §9).
+    pub fn record_shard_restart(&self, shard: usize) {
+        self.inner.lock().unwrap().shards[shard].shard_restarts += 1;
+    }
+
+    /// A request was redelivered after shard `shard` failed it (worker
+    /// death or transient engine error), within the retry budget.
+    pub fn record_retried(&self, shard: usize) {
+        self.inner.lock().unwrap().shards[shard].requests_retried += 1;
+    }
+
+    /// A request was failed typed (`ShardFailed`, or `Timeout` during
+    /// recovery) after shard `shard` failed it with no budget left.
+    pub fn record_failed_shard(&self, shard: usize) {
+        self.inner.lock().unwrap().shards[shard].requests_failed_shard += 1;
     }
 
     pub fn record_batch(
@@ -466,6 +515,9 @@ impl Metrics {
                 requests_shed: s.requests_shed,
                 requests_degraded: s.requests_degraded,
                 requests_escalated: s.requests_escalated,
+                shard_restarts: s.shard_restarts,
+                requests_retried: s.requests_retried,
+                requests_failed_shard: s.requests_failed_shard,
                 batches: s.batches,
                 mc_passes: s.mc_passes,
                 engine_executions: s.engine_executions,
@@ -499,6 +551,9 @@ impl Metrics {
             requests_shed: per_shard.iter().map(|s| s.requests_shed).sum(),
             requests_degraded: per_shard.iter().map(|s| s.requests_degraded).sum(),
             requests_escalated: per_shard.iter().map(|s| s.requests_escalated).sum(),
+            shard_restarts: per_shard.iter().map(|s| s.shard_restarts).sum(),
+            requests_retried: per_shard.iter().map(|s| s.requests_retried).sum(),
+            requests_failed_shard: per_shard.iter().map(|s| s.requests_failed_shard).sum(),
             requests_deferred: g.requests_deferred,
             batches,
             mc_passes: per_shard.iter().map(|s| s.mc_passes).sum(),
@@ -604,6 +659,32 @@ mod tests {
         // A quiet registry still renders the edge line (zeros, no gating).
         let quiet = Metrics::new(1).snapshot().render();
         assert!(quiet.contains("shed=0 degraded=0 escalated=0"), "{quiet}");
+    }
+
+    #[test]
+    fn fault_counters_count_per_shard_and_globally() {
+        let m = Metrics::new(2);
+        m.record_shard_restart(1);
+        m.record_retried(1);
+        m.record_retried(1);
+        m.record_retried(0);
+        m.record_failed_shard(1);
+        let s = m.snapshot();
+        assert_eq!(s.shard_restarts, 1);
+        assert_eq!(s.requests_retried, 3);
+        assert_eq!(s.requests_failed_shard, 1);
+        assert_eq!(s.per_shard[0].shard_restarts, 0);
+        assert_eq!(s.per_shard[1].shard_restarts, 1);
+        assert_eq!(s.per_shard[0].requests_retried, 1);
+        assert_eq!(s.per_shard[1].requests_retried, 2);
+        assert_eq!(s.per_shard[1].requests_failed_shard, 1);
+        let r = s.render();
+        assert!(r.contains("faults restarts=1 retried=3 failed_shard=1"), "{r}");
+        // Per-shard render line surfaces nonzero fault counters.
+        assert!(r.contains("restarts=1 retried=2 failed=1"), "{r}");
+        // A quiet registry still renders the fault line (zeros).
+        let quiet = Metrics::new(1).snapshot().render();
+        assert!(quiet.contains("faults restarts=0 retried=0 failed_shard=0"), "{quiet}");
     }
 
     #[test]

@@ -10,6 +10,8 @@
 //! - [`batch`] — pure batch-assembly / slot-packing cores (no I/O).
 //! - `dispatch` — the dispatcher and shard-worker loops (private).
 //! - [`server`] — the [`Coordinator`] handle (boot/admission/shutdown).
+//! - [`supervisor`] — shard health, worker respawn, batch recovery
+//!   (DESIGN.md §9; the public face is [`ShardHealth`]).
 //! - [`epsilon`] — ε sources, including per-shard seed derivation.
 //! - [`metrics`] — global + per-shard counters.
 
@@ -19,6 +21,7 @@ pub mod epsilon;
 pub mod metrics;
 pub mod request;
 pub mod server;
+pub mod supervisor;
 
 pub use batch::Batch;
 pub use epsilon::{
@@ -26,5 +29,6 @@ pub use epsilon::{
     PhiloxSource,
 };
 pub use metrics::{Metrics, MetricsSnapshot, ShardSnapshot};
-pub use request::{InferRequest, InferResponse, RejectReason};
+pub use request::{InferRequest, InferResponse, RejectReason, Reply};
 pub use server::{Coordinator, EngineFactory, SourceFactory};
+pub use supervisor::ShardHealth;

@@ -6,6 +6,7 @@
 //! workers.
 
 use crate::bayes::{McPrediction, UncertaintyReport};
+use crate::client::ServeError;
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
@@ -20,8 +21,35 @@ pub struct InferRequest {
     /// (`None` = `model.defer_threshold`).
     pub defer_threshold: Option<f64>,
     pub enqueued: Instant,
-    /// Reply channel.
-    pub reply: Sender<InferResponse>,
+    /// End-to-end deadline, fixed at admission (`Infer::deadline` or
+    /// `server.request_timeout_ms`). A retried request carries its
+    /// *original* deadline, so recovery never exceeds the budget the
+    /// caller signed up for.
+    pub deadline: Instant,
+    /// Redeliveries consumed so far (bounded by `server.retry_budget`).
+    pub retries: usize,
+    /// Reply channel: exactly one [`Reply`] per request — a response, or
+    /// a typed failure pushed by the supervisor/recovery path.
+    pub reply: Sender<Reply>,
+}
+
+/// What comes back over a request's reply channel. Failures are
+/// *delivered*, not signalled by dropping the sender, so a
+/// [`Ticket`](crate::client::Ticket) blocked in `wait` resolves promptly
+/// with the typed error instead of hanging until its own timeout.
+#[derive(Clone, Debug)]
+pub enum Reply {
+    Response(InferResponse),
+    Failed(ServeError),
+}
+
+impl Reply {
+    pub fn into_result(self) -> Result<InferResponse, ServeError> {
+        match self {
+            Reply::Response(resp) => Ok(resp),
+            Reply::Failed(err) => Err(err),
+        }
+    }
 }
 
 /// The coordinator's answer.

@@ -19,6 +19,13 @@
 //! workers)` pair replays identically for serial workloads (routing is
 //! round-robin on the batch id, not racy work-stealing).
 //!
+//! The pool is supervised (DESIGN.md §9): a supervisor thread respawns
+//! dead shard workers with their original shard index (so the
+//! deterministic seed splits are re-derived), recovers the in-flight
+//! batch, and redelivers it under `server.retry_budget` and each
+//! request's admission-time deadline — see [`crate::coordinator::supervisor`]'s
+//! module docs for the state machine.
+//!
 //! Client-facing construction and submission live in [`crate::client`]
 //! (API v1): `Coordinator::builder(cfg)…start()`, `submit(Infer) →
 //! Ticket`. The historical `start*` constructors remain below as
@@ -27,16 +34,20 @@
 use crate::client::{Infer, ServeError};
 use crate::config::{Backend, Config};
 use crate::coordinator::batch::Batch;
-use crate::coordinator::dispatch::{run_dispatcher, run_shard_worker};
+use crate::coordinator::dispatch::run_dispatcher;
 use crate::coordinator::epsilon::{EpsilonSource, EpsilonSupply};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
-use crate::coordinator::request::{InferRequest, InferResponse, RejectReason};
+use crate::coordinator::request::{InferRequest, InferResponse, RejectReason, Reply};
+use crate::coordinator::supervisor::{
+    run_supervisor, spawn_shard_worker, InFlight, ShardHealth, ShardTable, SupervisorMsg,
+    WorkerCtx,
+};
 use crate::error::{Error, Result};
 use crate::runtime::EpsilonMode;
 use crate::util::threadpool::Bounded;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Factory building one engine per shard, called inside the shard's own
@@ -52,11 +63,14 @@ pub type SourceFactory = Arc<dyn Fn(usize) -> Box<dyn EpsilonSource> + Send + Sy
 /// Handle to a running coordinator pool.
 pub struct Coordinator {
     requests: Bounded<InferRequest>,
-    shard_queues: Vec<Bounded<Batch>>,
+    table: Arc<ShardTable>,
     metrics: Metrics,
     cfg: Config,
     dispatcher: Option<std::thread::JoinHandle<()>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    supervisor: Option<std::thread::JoinHandle<()>>,
+    supervisor_tx: Sender<SupervisorMsg>,
+    shutting_down: Arc<AtomicBool>,
+    shards: usize,
     next_id: Arc<AtomicU64>,
 }
 
@@ -75,61 +89,34 @@ impl Coordinator {
         let shards = cfg.server.workers.max(1);
         let requests: Bounded<InferRequest> = Bounded::new(cfg.server.queue_capacity);
         let shard_queues: Vec<Bounded<Batch>> = (0..shards).map(|_| Bounded::new(2)).collect();
+        let slots: Vec<InFlight> = (0..shards).map(|_| InFlight::default()).collect();
         let metrics = Metrics::new(shards);
+
+        // Everything a (re)spawn needs, kept by the supervisor for the
+        // pool's lifetime so a restarted shard is built from the same
+        // factory/supply/config as at boot.
+        let ctx = WorkerCtx {
+            make_engine,
+            supply,
+            metrics: metrics.clone(),
+            cfg: cfg.clone(),
+            requests: requests.clone(),
+        };
+        let (exit_tx, exit_rx) = channel::<SupervisorMsg>();
 
         // Spawn the workers; each reports Ok(artifact batch) or Err(msg)
         // once its engine is constructed.
         let (ready_tx, ready_rx) = channel::<std::result::Result<usize, String>>();
         let mut workers = Vec::with_capacity(shards);
         for shard in 0..shards {
-            let make_engine = Arc::clone(&make_engine);
-            let supply = supply.clone();
-            let queue = shard_queues[shard].clone();
-            let metrics = metrics.clone();
-            let cfg = cfg.clone();
-            let ready_tx = ready_tx.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("bnn-cim-shard-{shard}"))
-                .spawn(move || {
-                    // If this worker dies — startup failure or a panic
-                    // anywhere in the serving loop — closing its queue
-                    // unblocks the dispatcher's round-robin send so
-                    // shutdown can never deadlock on a dead shard.
-                    struct CloseOnDrop(Bounded<Batch>);
-                    impl Drop for CloseOnDrop {
-                        fn drop(&mut self) {
-                            self.0.close();
-                        }
-                    }
-                    let _close_guard = CloseOnDrop(queue.clone());
-                    let engine = match make_engine(shard) {
-                        Ok(e) => e,
-                        Err(e) => {
-                            let _ = ready_tx.send(Err(e.to_string()));
-                            return;
-                        }
-                    };
-                    // ε-ownership handshake: in-word engines draw their
-                    // own ε (any external supply is simply unused);
-                    // external-ε engines must be given a source.
-                    let source = match (engine.epsilon_mode(), supply.source_for(shard)) {
-                        (EpsilonMode::InWord, _) => None,
-                        (EpsilonMode::External, Some(s)) => Some(s),
-                        (EpsilonMode::External, None) => {
-                            let _ = ready_tx.send(Err(format!(
-                                "shard {shard}: engine '{}' consumes {} ε \
-                                 but the supply is {}",
-                                engine.name(),
-                                EpsilonMode::External.name(),
-                                EpsilonMode::InWord.name(),
-                            )));
-                            return;
-                        }
-                    };
-                    let _ = ready_tx.send(Ok(engine.manifest().batch));
-                    run_shard_worker(shard, engine, source, queue, metrics, cfg);
-                })
-                .map_err(|e| Error::Coordinator(format!("spawn shard {shard}: {e}")))?;
+            let handle = spawn_shard_worker(
+                shard,
+                &ctx,
+                shard_queues[shard].clone(),
+                slots[shard].clone(),
+                exit_tx.clone(),
+                ready_tx.clone(),
+            )?;
             workers.push(handle);
         }
         drop(ready_tx);
@@ -159,25 +146,48 @@ impl Coordinator {
             return Err(err);
         }
 
+        let table = Arc::new(ShardTable::new(shard_queues));
+        let handles: Arc<Mutex<Vec<Option<std::thread::JoinHandle<()>>>>> =
+            Arc::new(Mutex::new(workers.into_iter().map(Some).collect()));
+        let shutting_down = Arc::new(AtomicBool::new(false));
+
         // Batches can never exceed what the smallest engine can pack.
         let max_batch = cfg.server.max_batch.min(min_art_batch);
         let deadline = Duration::from_secs_f64(cfg.server.batch_deadline_ms / 1e3);
         let dispatcher = {
             let requests = requests.clone();
-            let shard_queues = shard_queues.clone();
+            let table = Arc::clone(&table);
+            let metrics = metrics.clone();
             std::thread::Builder::new()
                 .name("bnn-cim-dispatcher".into())
-                .spawn(move || run_dispatcher(requests, shard_queues, max_batch, deadline))
+                .spawn(move || run_dispatcher(requests, table, metrics, max_batch, deadline))
                 .map_err(|e| Error::Coordinator(format!("spawn dispatcher: {e}")))?
+        };
+        // The supervisor owns the worker handles from here on: it joins
+        // dead workers as it respawns them and joins the whole (possibly
+        // respawned) pool at shutdown.
+        let supervisor = {
+            let exit_tx = exit_tx.clone();
+            let table = Arc::clone(&table);
+            let shutting_down = Arc::clone(&shutting_down);
+            std::thread::Builder::new()
+                .name("bnn-cim-supervisor".into())
+                .spawn(move || {
+                    run_supervisor(exit_rx, exit_tx, table, slots, handles, ctx, shutting_down)
+                })
+                .map_err(|e| Error::Coordinator(format!("spawn supervisor: {e}")))?
         };
 
         Ok(Coordinator {
             requests,
-            shard_queues,
+            table,
             metrics,
             cfg,
             dispatcher: Some(dispatcher),
-            workers,
+            supervisor: Some(supervisor),
+            supervisor_tx: exit_tx,
+            shutting_down,
+            shards,
             next_id: Arc::new(AtomicU64::new(1)),
         })
     }
@@ -188,11 +198,12 @@ impl Coordinator {
     pub(crate) fn submit_request(
         &self,
         req: Infer,
-    ) -> std::result::Result<(u64, Receiver<InferResponse>), ServeError> {
+    ) -> std::result::Result<(u64, Receiver<Reply>), ServeError> {
         let Infer {
             pixels,
             mc_samples,
             defer_threshold,
+            deadline,
         } = req;
         let expected = self.cfg.model.image_side * self.cfg.model.image_side;
         if pixels.len() != expected {
@@ -219,12 +230,17 @@ impl Coordinator {
             }
         }
         let (tx, rx) = channel();
+        let enqueued = Instant::now();
         let req = InferRequest {
             id: self.next_id.fetch_add(1, Ordering::SeqCst),
             pixels,
             mc_samples,
             defer_threshold,
-            enqueued: Instant::now(),
+            enqueued,
+            // Fixed at admission: a retried request keeps this instant,
+            // so failure recovery never stretches the caller's budget.
+            deadline: enqueued + deadline.unwrap_or_else(|| self.request_timeout()),
+            retries: 0,
             reply: tx,
         };
         let id = req.id;
@@ -252,9 +268,28 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
-    /// Number of shard workers in the pool.
+    /// Number of shard workers in the pool (healthy or not).
     pub fn workers(&self) -> usize {
-        self.workers.len()
+        self.shards
+    }
+
+    /// Per-shard liveness as tracked by the supervisor:
+    /// `healthy` / `restarting/n` / `dead` (DESIGN.md §9). Surfaced by
+    /// the edge's `/v1/health`.
+    pub fn shard_health(&self) -> Vec<ShardHealth> {
+        self.table.health()
+    }
+
+    /// Shards currently serving (health == `Healthy`).
+    pub fn healthy_workers(&self) -> usize {
+        self.table.healthy_count()
+    }
+
+    /// True once every shard is terminally dead (`shard_restart_limit`
+    /// exceeded or respawns failing): the pool cannot serve again, and
+    /// new submissions fail fast with [`ServeError::ShardFailed`].
+    pub fn all_shards_dead(&self) -> bool {
+        self.table.all_dead()
     }
 
     /// Requests currently waiting in the admission queue. The network
@@ -289,17 +324,21 @@ impl Coordinator {
     }
 
     fn stop(&mut self) {
+        // Flag first: worker exits during the drain are normal, and the
+        // supervisor must not respawn into a closing pool.
+        self.shutting_down.store(true, Ordering::SeqCst);
         self.requests.close();
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
         }
         // The dispatcher closes the shard queues on exit; repeat here so a
         // dispatcher that never started still lets the workers drain.
-        for q in &self.shard_queues {
-            q.close();
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        self.table.close_all();
+        // The supervisor owns the worker handles (it joins respawned
+        // threads the constructor never saw); tell it to finish and wait.
+        if let Some(s) = self.supervisor.take() {
+            let _ = self.supervisor_tx.send(SupervisorMsg::Shutdown);
+            let _ = s.join();
         }
     }
 }

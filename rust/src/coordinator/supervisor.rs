@@ -1,0 +1,396 @@
+//! Shard supervision: health tracking, worker respawn, and in-flight
+//! batch recovery (DESIGN.md §9).
+//!
+//! Every shard worker carries two drop guards. The inner one closes the
+//! shard's batch queue (so the dispatcher can never block on a dead
+//! shard); the outer one notifies this module's supervisor thread. On a
+//! worker death the supervisor: reaps the thread, recovers the in-flight
+//! batch (parked in the shard's `InFlight` slot) plus anything still
+//! queued behind the closed queue, respawns the worker **with its
+//! original shard index** — the engine factory and ε supply re-derive
+//! the original deterministic `shard_die_seed` split, so a restarted
+//! shard serves bit-identically to a fresh boot — and redelivers the
+//! recovered requests through the admission queue under the per-request
+//! retry budget. Inference is pure, so redelivery is safe; when the
+//! budget (or the request's original deadline) is exhausted the client
+//! receives a typed [`ServeError::ShardFailed`] / `Timeout` reply
+//! instead of a dropped channel.
+//!
+//! State machine per shard: `healthy → restarting/n → healthy` on each
+//! recovered crash, `→ dead` once `server.shard_restart_limit` is
+//! exceeded or a respawn itself fails. `dead` is terminal for the pool's
+//! lifetime; the dispatcher routes around non-healthy shards and fails
+//! batches typed-and-fast only when *every* shard is dead.
+
+use crate::client::ServeError;
+use crate::config::Config;
+use crate::coordinator::batch::Batch;
+use crate::coordinator::dispatch::run_shard_worker;
+use crate::coordinator::epsilon::EpsilonSupply;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{InferRequest, Reply};
+use crate::coordinator::server::EngineFactory;
+use crate::error::{Error, Result};
+use crate::runtime::EpsilonMode;
+use crate::util::threadpool::Bounded;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Liveness of one shard, as reported by `/v1/health` and
+/// [`Coordinator::shard_health`](crate::coordinator::Coordinator::shard_health).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardHealth {
+    /// Serving normally.
+    Healthy,
+    /// The worker died and respawn `n` is in flight.
+    Restarting(u64),
+    /// Past `server.shard_restart_limit` (or a respawn failed): the
+    /// supervisor has given up on this shard for the pool's lifetime.
+    Dead,
+}
+
+impl ShardHealth {
+    /// Wire label: `healthy`, `restarting/n`, `dead`.
+    pub fn label(&self) -> String {
+        match self {
+            ShardHealth::Healthy => "healthy".into(),
+            ShardHealth::Restarting(n) => format!("restarting/{n}"),
+            ShardHealth::Dead => "dead".into(),
+        }
+    }
+}
+
+struct ShardEntry {
+    queue: Bounded<Batch>,
+    health: ShardHealth,
+    restarts: u64,
+}
+
+/// Shared registry of per-shard queues and health, read by the
+/// dispatcher (routing), the supervisor (restart bookkeeping), and the
+/// coordinator handle (health surface). Queues are swapped on respawn —
+/// a closed `Bounded` cannot reopen — so everything routes through this
+/// table instead of holding queue clones.
+pub(crate) struct ShardTable {
+    entries: Mutex<Vec<ShardEntry>>,
+}
+
+impl ShardTable {
+    pub fn new(queues: Vec<Bounded<Batch>>) -> Self {
+        Self {
+            entries: Mutex::new(
+                queues
+                    .into_iter()
+                    .map(|queue| ShardEntry {
+                        queue,
+                        health: ShardHealth::Healthy,
+                        restarts: 0,
+                    })
+                    .collect(),
+            ),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Vec<ShardEntry>> {
+        self.entries.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub fn shards(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn queue(&self, shard: usize) -> Bounded<Batch> {
+        self.lock()[shard].queue.clone()
+    }
+
+    pub fn swap_queue(&self, shard: usize, queue: Bounded<Batch>) {
+        self.lock()[shard].queue = queue;
+    }
+
+    pub fn mark(&self, shard: usize, health: ShardHealth) {
+        self.lock()[shard].health = health;
+    }
+
+    /// Bump the restart counter and enter `Restarting(n)`; returns `n`.
+    pub fn begin_restart(&self, shard: usize) -> u64 {
+        let mut entries = self.lock();
+        entries[shard].restarts += 1;
+        let n = entries[shard].restarts;
+        entries[shard].health = ShardHealth::Restarting(n);
+        n
+    }
+
+    pub fn restarts(&self, shard: usize) -> u64 {
+        self.lock()[shard].restarts
+    }
+
+    pub fn health(&self) -> Vec<ShardHealth> {
+        self.lock().iter().map(|e| e.health.clone()).collect()
+    }
+
+    pub fn healthy_count(&self) -> usize {
+        self.lock()
+            .iter()
+            .filter(|e| e.health == ShardHealth::Healthy)
+            .count()
+    }
+
+    pub fn all_dead(&self) -> bool {
+        self.lock().iter().all(|e| e.health == ShardHealth::Dead)
+    }
+
+    pub fn close_all(&self) {
+        for entry in self.lock().iter() {
+            entry.queue.close();
+        }
+    }
+}
+
+/// The shard's in-flight slot: the worker parks each batch here while
+/// serving it and clears the slot once every reply is sent, so a panic
+/// mid-batch leaves the batch recoverable by the supervisor. The lock is
+/// uncontended while the worker lives (the supervisor only touches it
+/// after the death notification) and poison-tolerant after a panic.
+#[derive(Clone, Default)]
+pub(crate) struct InFlight(Arc<Mutex<Option<Batch>>>);
+
+impl InFlight {
+    pub fn lock(&self) -> MutexGuard<'_, Option<Batch>> {
+        self.0.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub fn take(&self) -> Option<Batch> {
+        self.lock().take()
+    }
+}
+
+/// Everything needed to (re)spawn a shard worker and to recover its
+/// work: kept by the supervisor for the pool's lifetime so a respawned
+/// shard is built from the *same* factory/supply/config as at boot.
+#[derive(Clone)]
+pub(crate) struct WorkerCtx {
+    pub make_engine: EngineFactory,
+    pub supply: EpsilonSupply,
+    pub metrics: Metrics,
+    pub cfg: Config,
+    /// The admission queue: recovered requests are redelivered through
+    /// the front door so normal routing applies to retries.
+    pub requests: Bounded<InferRequest>,
+}
+
+/// Wire format between worker drop guards / `Coordinator::stop` and the
+/// supervisor loop.
+pub(crate) enum SupervisorMsg {
+    /// A worker thread exited (panic or drain) — sent by its drop guard
+    /// *after* its queue closed, so the queue's stranded contents are
+    /// stable.
+    WorkerExit(usize),
+    /// The pool is stopping: close every queue, join every worker, exit.
+    Shutdown,
+}
+
+/// Spawn one shard worker thread. The worker reports
+/// `Ok(manifest batch)` or `Err(reason)` on `ready_tx` once its engine
+/// is constructed, then serves until its queue closes or it dies.
+pub(crate) fn spawn_shard_worker(
+    shard: usize,
+    ctx: &WorkerCtx,
+    queue: Bounded<Batch>,
+    slot: InFlight,
+    exit_tx: Sender<SupervisorMsg>,
+    ready_tx: Sender<std::result::Result<usize, String>>,
+) -> Result<JoinHandle<()>> {
+    let ctx = ctx.clone();
+    std::thread::Builder::new()
+        .name(format!("bnn-cim-shard-{shard}"))
+        .spawn(move || {
+            // Declared before the close guard so it drops *after* it
+            // (reverse drop order): by the time the supervisor hears of
+            // this death the queue is closed and no new batch can land
+            // in it — draining the stranded contents is race-free.
+            struct ExitNotify(Sender<SupervisorMsg>, usize);
+            impl Drop for ExitNotify {
+                fn drop(&mut self) {
+                    let _ = self.0.send(SupervisorMsg::WorkerExit(self.1));
+                }
+            }
+            let _exit_guard = ExitNotify(exit_tx, shard);
+            // If this worker dies — startup failure or a panic anywhere
+            // in the serving loop — closing its queue unblocks the
+            // dispatcher's send so routing (and shutdown) can never
+            // deadlock on a dead shard.
+            struct CloseOnDrop(Bounded<Batch>);
+            impl Drop for CloseOnDrop {
+                fn drop(&mut self) {
+                    self.0.close();
+                }
+            }
+            let _close_guard = CloseOnDrop(queue.clone());
+            let engine = match (ctx.make_engine)(shard) {
+                Ok(e) => e,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e.to_string()));
+                    return;
+                }
+            };
+            // ε-ownership handshake: in-word engines draw their own ε
+            // (any external supply is simply unused); external-ε engines
+            // must be given a source.
+            let source = match (engine.epsilon_mode(), ctx.supply.source_for(shard)) {
+                (EpsilonMode::InWord, _) => None,
+                (EpsilonMode::External, Some(s)) => Some(s),
+                (EpsilonMode::External, None) => {
+                    let _ = ready_tx.send(Err(format!(
+                        "shard {shard}: engine '{}' consumes {} ε \
+                         but the supply is {}",
+                        engine.name(),
+                        EpsilonMode::External.name(),
+                        EpsilonMode::InWord.name(),
+                    )));
+                    return;
+                }
+            };
+            let _ = ready_tx.send(Ok(engine.manifest().batch));
+            run_shard_worker(shard, engine, source, queue, slot, ctx);
+        })
+        .map_err(|e| Error::Coordinator(format!("spawn shard {shard}: {e}")))
+}
+
+/// Redeliver a recovered batch's requests, one by one, under the retry
+/// budget and each request's original deadline. Shared by the supervisor
+/// (worker death) and the worker itself (transient engine errors).
+pub(crate) fn recover_batch(batch: Batch, failed_shard: usize, ctx: &WorkerCtx) {
+    let budget = ctx.cfg.server.retry_budget;
+    for mut req in batch.requests {
+        req.retries += 1;
+        if req.retries > budget {
+            ctx.metrics.record_failed_shard(failed_shard);
+            let _ = req
+                .reply
+                .send(Reply::Failed(ServeError::ShardFailed { shard: failed_shard }));
+            continue;
+        }
+        if Instant::now() >= req.deadline {
+            // Budget remains but time does not: the deadline fixed at
+            // admission caps the retry, so recovery never stretches the
+            // caller's end-to-end bound.
+            ctx.metrics.record_failed_shard(failed_shard);
+            let _ = req.reply.send(Reply::Failed(ServeError::Timeout));
+            continue;
+        }
+        match ctx.requests.try_send(req) {
+            Ok(()) => ctx.metrics.record_retried(failed_shard),
+            Err(req) => {
+                // Admission full or closed — there is nowhere to retry.
+                ctx.metrics.record_failed_shard(failed_shard);
+                let _ = req
+                    .reply
+                    .send(Reply::Failed(ServeError::ShardFailed { shard: failed_shard }));
+            }
+        }
+    }
+}
+
+/// The supervisor loop (thread `bnn-cim-supervisor`): turns worker-death
+/// notifications into recovery + respawn, and owns the worker
+/// `JoinHandle`s so shutdown joins respawned threads too.
+pub(crate) fn run_supervisor(
+    rx: Receiver<SupervisorMsg>,
+    exit_tx: Sender<SupervisorMsg>,
+    table: Arc<ShardTable>,
+    slots: Vec<InFlight>,
+    handles: Arc<Mutex<Vec<Option<JoinHandle<()>>>>>,
+    ctx: WorkerCtx,
+    shutting_down: Arc<AtomicBool>,
+) {
+    let lock_handles = |h: &Arc<Mutex<Vec<Option<JoinHandle<()>>>>>| {
+        h.lock().unwrap_or_else(|p| p.into_inner())
+    };
+    while let Ok(msg) = rx.recv() {
+        let shard = match msg {
+            SupervisorMsg::Shutdown => break,
+            SupervisorMsg::WorkerExit(shard) => shard,
+        };
+        if shutting_down.load(Ordering::SeqCst) {
+            // Normal drain during stop(); everything is joined below.
+            continue;
+        }
+        // Reap the dead thread (its exit guard already ran, so this
+        // join returns promptly).
+        if let Some(handle) = lock_handles(&handles)[shard].take() {
+            let _ = handle.join();
+        }
+        // Recover the in-flight batch plus anything stranded behind the
+        // now-closed queue. Collected before the queue is swapped.
+        let mut stranded: Vec<Batch> = slots[shard].take().into_iter().collect();
+        stranded.extend(table.queue(shard).drain_up_to(usize::MAX));
+
+        if table.restarts(shard) >= ctx.cfg.server.shard_restart_limit as u64 {
+            eprintln!(
+                "[bnn-cim supervisor] shard {shard} exceeded shard_restart_limit ({}) — dead",
+                ctx.cfg.server.shard_restart_limit
+            );
+            table.mark(shard, ShardHealth::Dead);
+        } else {
+            let attempt = table.begin_restart(shard);
+            // Respawn with the original shard index: the factory and ε
+            // supply re-derive the original deterministic seeds.
+            let queue = Bounded::new(2);
+            let (ready_tx, ready_rx) = channel::<std::result::Result<usize, String>>();
+            let spawned = spawn_shard_worker(
+                shard,
+                &ctx,
+                queue.clone(),
+                slots[shard].clone(),
+                exit_tx.clone(),
+                ready_tx,
+            );
+            match spawned {
+                Ok(handle) => {
+                    let ready = ready_rx.recv();
+                    if matches!(&ready, Ok(Ok(_))) {
+                        table.swap_queue(shard, queue);
+                        table.mark(shard, ShardHealth::Healthy);
+                        ctx.metrics.record_shard_restart(shard);
+                        eprintln!(
+                            "[bnn-cim supervisor] shard {shard} restarted \
+                             (attempt {attempt}, original seed split)"
+                        );
+                        lock_handles(&handles)[shard] = Some(handle);
+                    } else {
+                        let why = match ready {
+                            Ok(Err(msg)) => msg,
+                            _ => "worker died before reporting ready".into(),
+                        };
+                        eprintln!(
+                            "[bnn-cim supervisor] shard {shard} respawn failed: {why} — dead"
+                        );
+                        let _ = handle.join();
+                        table.mark(shard, ShardHealth::Dead);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("[bnn-cim supervisor] shard {shard} respawn failed: {e} — dead");
+                    table.mark(shard, ShardHealth::Dead);
+                }
+            }
+        }
+        // Redeliver after the respawn so even a one-shard pool has a
+        // healthy destination for the recovered work.
+        for batch in stranded {
+            recover_batch(batch, shard, &ctx);
+        }
+    }
+    // Shutdown: close every (possibly swapped-in) queue so workers
+    // drain, then join the whole pool — including respawned threads the
+    // coordinator handle never saw.
+    table.close_all();
+    for slot in lock_handles(&handles).iter_mut() {
+        if let Some(handle) = slot.take() {
+            let _ = handle.join();
+        }
+    }
+}

@@ -445,6 +445,19 @@ impl MiniClient {
         path: &str,
         body: Option<&str>,
     ) -> std::io::Result<(u16, String)> {
+        let (status, _head, body) = self.request_with_head(method, path, body)?;
+        Ok((status, body))
+    }
+
+    /// Like [`Self::request`], but also returns the raw response head
+    /// (status line + headers) so tests can pin header contracts such as
+    /// `Retry-After` on shed/unhealthy responses.
+    pub fn request_with_head(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> std::io::Result<(u16, String, String)> {
         let mut req = format!("{method} {path} HTTP/1.1\r\nHost: edge\r\n");
         if let Some(b) = body {
             req.push_str(&format!(
@@ -500,7 +513,7 @@ impl MiniClient {
             self.buf = rest[content_length..].to_vec();
             rest.truncate(content_length);
         }
-        Ok((status, String::from_utf8_lossy(&rest).into_owned()))
+        Ok((status, head, String::from_utf8_lossy(&rest).into_owned()))
     }
 }
 

@@ -135,6 +135,12 @@ fn shard_json(o: &mut String, s: &ShardSnapshot) {
     write_number(o, s.requests_degraded as f64);
     push_key(o, false, "requests_escalated");
     write_number(o, s.requests_escalated as f64);
+    push_key(o, false, "shard_restarts");
+    write_number(o, s.shard_restarts as f64);
+    push_key(o, false, "requests_retried");
+    write_number(o, s.requests_retried as f64);
+    push_key(o, false, "requests_failed_shard");
+    write_number(o, s.requests_failed_shard as f64);
     push_key(o, false, "batches");
     write_number(o, s.batches as f64);
     push_key(o, false, "mc_passes");
@@ -167,6 +173,12 @@ pub fn metrics_json(s: &MetricsSnapshot) -> String {
     write_number(&mut o, s.requests_degraded as f64);
     push_key(&mut o, false, "requests_escalated");
     write_number(&mut o, s.requests_escalated as f64);
+    push_key(&mut o, false, "shard_restarts");
+    write_number(&mut o, s.shard_restarts as f64);
+    push_key(&mut o, false, "requests_retried");
+    write_number(&mut o, s.requests_retried as f64);
+    push_key(&mut o, false, "requests_failed_shard");
+    write_number(&mut o, s.requests_failed_shard as f64);
     push_key(&mut o, false, "requests_deferred");
     write_number(&mut o, s.requests_deferred as f64);
     push_key(&mut o, false, "batches");

@@ -4,14 +4,18 @@
 //!
 //! - `POST /v1/infer` — single object or `{"requests": [...]}` batch.
 //! - `GET  /v1/metrics` — [`MetricsSnapshot`] as JSON (+ `render` text).
-//! - `GET  /v1/health` — liveness + queue state.
+//! - `GET  /v1/health` — liveness + queue state + per-shard health
+//!   (`healthy` / `restarting/n` / `dead`, DESIGN.md §9).
 //!
 //! Every [`ServeError`] has a fixed HTTP status (the taxonomy is part of
 //! the wire contract, tested and documented in DESIGN.md §8): `QueueFull`
 //! → 429, shape/bounds validation → 400, `ShuttingDown` → 503, `Timeout`
-//! → 504, `Disconnected` → 502, config/startup faults → 500.
+//! → 504, `Disconnected`/`ShardFailed` → 502, config/startup faults →
+//! 500. A pool whose shards are *all* terminally dead is a service-level
+//! condition, not a per-request one: `POST /v1/infer` then answers 503 +
+//! `Retry-After` up front instead of a 502 per request.
 
-use crate::client::{Coordinator, Infer, InferResponse, ServeError, Ticket};
+use crate::client::{Coordinator, Infer, InferResponse, ServeError, ShardHealth, Ticket};
 use crate::coordinator::Metrics;
 use crate::edge::admission::{AdmissionPolicy, Decision};
 use crate::edge::http::{Request, Response};
@@ -73,8 +77,28 @@ impl Router {
 
     fn health(&self) -> Response {
         let cfg = self.coord.config();
+        let health = self.coord.shard_health();
+        let healthy = health
+            .iter()
+            .filter(|h| **h == ShardHealth::Healthy)
+            .count();
+        // Service-level verdict: `ok` (all serving), `degraded` (some
+        // shards down or restarting), `unhealthy` (none serving).
+        let status = if healthy == health.len() {
+            "ok"
+        } else if healthy > 0 {
+            "degraded"
+        } else {
+            "unhealthy"
+        };
+        let shard_labels = health
+            .iter()
+            .map(|h| format!("\"{}\"", h.label()))
+            .collect::<Vec<_>>()
+            .join(",");
         let body = format!(
-            "{{\"status\":\"ok\",\"backend\":\"{}\",\"workers\":{},\
+            "{{\"status\":\"{status}\",\"backend\":\"{}\",\"workers\":{},\
+             \"healthy_workers\":{healthy},\"shards\":[{shard_labels}],\
              \"queue_depth\":{},\"queue_capacity\":{}}}",
             cfg.server.backend.name(),
             self.shards,
@@ -117,6 +141,13 @@ impl Router {
             Ok(parsed) => parsed,
             Err(msg) => return Response::json(400, error_json("bad_request", &msg, None)),
         };
+
+        // A pool whose shards are all terminally dead can never serve
+        // again: answer 503 + Retry-After once, at the service level,
+        // instead of submitting and collecting a 502 per request.
+        if self.coord.all_shards_dead() {
+            return unhealthy_response(self.policy.retry_after_ms);
+        }
 
         // One admission decision per HTTP request (the batch is one
         // caller): the most expensive member sets the band.
@@ -261,6 +292,22 @@ fn shed_response(retry_after_ms: u64, load: f64) -> Response {
     .with_header("Retry-After", &secs.to_string())
 }
 
+/// Every shard is terminally dead: the service cannot serve. 503 with a
+/// `Retry-After` (an operator restart is the only way back), the same
+/// shape a shutting-down pool answers with.
+fn unhealthy_response(retry_after_ms: u64) -> Response {
+    let secs = retry_after_ms.div_ceil(1000).max(1);
+    Response::json(
+        503,
+        error_json(
+            "unhealthy",
+            "service unhealthy: every shard is dead (restart limit exhausted)",
+            Some(retry_after_ms),
+        ),
+    )
+    .with_header("Retry-After", &secs.to_string())
+}
+
 /// The `ServeError` → HTTP status taxonomy (wire contract).
 pub fn status_for(e: &ServeError) -> u16 {
     match e {
@@ -270,7 +317,11 @@ pub fn status_for(e: &ServeError) -> u16 {
         | ServeError::InvalidDeferThreshold { .. } => 400,
         ServeError::ShuttingDown => 503,
         ServeError::Timeout => 504,
+        // Per-request serving failures past the retry budget: the pool
+        // may still be healthy for other requests, so these are 502s —
+        // only the all-shards-dead pre-check escalates to a 503.
         ServeError::Disconnected => 502,
+        ServeError::ShardFailed { .. } => 502,
         ServeError::Config(_) | ServeError::Startup(_) => 500,
     }
 }
@@ -284,6 +335,7 @@ fn error_kind(e: &ServeError) -> &'static str {
         ServeError::ShuttingDown => "shutting_down",
         ServeError::Timeout => "timeout",
         ServeError::Disconnected => "disconnected",
+        ServeError::ShardFailed { .. } => "shard_failed",
         ServeError::Config(_) => "config",
         ServeError::Startup(_) => "startup",
     }

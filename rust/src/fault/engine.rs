@@ -1,0 +1,275 @@
+//! [`FaultyEngine`] — an [`InferenceEngine`] decorator that executes a
+//! [`FaultPlan`] deterministically.
+
+use crate::error::{Error, Result};
+use crate::fault::FaultPlan;
+use crate::fault::ALL_SHARDS;
+use crate::grng::bank::shard_die_seed;
+use crate::runtime::{EngineEnergyReport, EpsilonMode, InferenceEngine, Manifest};
+use crate::util::rng::{Rng64, SplitMix64};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Wraps any engine and injects the plan's faults around `run` calls;
+/// all other [`InferenceEngine`] methods delegate untouched, so
+/// manifests, execution counters, ε ownership, and energy ledgers read
+/// exactly as the inner engine reports them.
+///
+/// The fault stream is `SplitMix64(shard_die_seed(plan.seed, shard))`
+/// advanced by `incarnation` splits — the same discipline the ε banks
+/// use for die seeds — so every (plan, shard, incarnation) triple
+/// replays its jitter draws and corrupted bits identically, and a
+/// respawned worker gets a fresh, deterministic stream rather than
+/// rewinding the dead one's.
+pub struct FaultyEngine {
+    inner: Box<dyn InferenceEngine>,
+    plan: FaultPlan,
+    shard: usize,
+    incarnation: u64,
+    runs: u64,
+    rng: SplitMix64,
+}
+
+impl FaultyEngine {
+    pub fn new(
+        inner: Box<dyn InferenceEngine>,
+        plan: FaultPlan,
+        shard: usize,
+        incarnation: u64,
+    ) -> Self {
+        let mut root = SplitMix64::new(shard_die_seed(plan.seed, shard));
+        root.jump(incarnation);
+        let rng = SplitMix64::new(root.split());
+        Self {
+            inner,
+            plan,
+            shard,
+            incarnation,
+            runs: 0,
+            rng,
+        }
+    }
+
+    /// The crash fault is armed only on a shard's first incarnation:
+    /// a respawned engine re-counting to `panic_at_run` would die again
+    /// at the same run and recovery could never converge.
+    fn panic_armed(&self) -> bool {
+        self.plan.panic_at_run > 0
+            && self.incarnation == 0
+            && (self.plan.panic_shard == ALL_SHARDS
+                || self.plan.panic_shard == self.shard as u64)
+    }
+
+    fn stall(&mut self) {
+        let mut total_ms = self.plan.stall_ms;
+        if self.plan.stall_jitter_ms > 0.0 {
+            // Uniform [0,1) from the top 53 bits of the fault stream.
+            let u01 = (self.rng.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            total_ms += self.plan.stall_jitter_ms * u01;
+        }
+        if total_ms > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(total_ms / 1e3));
+        }
+    }
+
+    /// SEU bit flips confined to mantissa/sign bits (a single upset
+    /// perturbs the sample without minting inf/NaN), then the droop
+    /// offset across every word.
+    fn corrupt(&mut self, buf: &mut [f32]) {
+        if !buf.is_empty() {
+            for _ in 0..self.plan.eps_bit_flips {
+                let idx = (self.rng.next_u64() % buf.len() as u64) as usize;
+                let pick = (self.rng.next_u64() % 24) as u32;
+                let bit = if pick == 23 { 31 } else { pick };
+                buf[idx] = f32::from_bits(buf[idx].to_bits() ^ (1u32 << bit));
+            }
+        }
+        if self.plan.adc_offset_step != 0.0 {
+            let step = self.plan.adc_offset_step as f32;
+            for v in buf.iter_mut() {
+                *v += step;
+            }
+        }
+    }
+}
+
+impl InferenceEngine for FaultyEngine {
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn run(&mut self, entry: &str, inputs: &[(&[f32], &Vec<usize>)]) -> Result<Vec<f32>> {
+        self.runs += 1;
+        self.stall();
+        if self.panic_armed() && self.runs == self.plan.panic_at_run {
+            panic!(
+                "[fault-plan] injected panic: shard {} run {} (seed {:#x})",
+                self.shard, self.runs, self.plan.seed
+            );
+        }
+        if self.plan.error_every > 0 && self.runs % self.plan.error_every == 0 {
+            return Err(Error::Coordinator(format!(
+                "[fault-plan] injected transient error: shard {} run {} (incarnation {})",
+                self.shard, self.runs, self.incarnation
+            )));
+        }
+        // ε corruption rides the buffers crossing the engine boundary:
+        // head calls of external-ε engines carry (features, ε1, ε2).
+        if entry == "head" && inputs.len() >= 3 && self.plan.corrupts_epsilon() {
+            let mut eps1 = inputs[1].0.to_vec();
+            let mut eps2 = inputs[2].0.to_vec();
+            self.corrupt(&mut eps1);
+            self.corrupt(&mut eps2);
+            let mut patched: Vec<(&[f32], &Vec<usize>)> = Vec::with_capacity(inputs.len());
+            patched.push(inputs[0]);
+            patched.push((&eps1[..], inputs[1].1));
+            patched.push((&eps2[..], inputs[2].1));
+            patched.extend(inputs.iter().skip(3).copied());
+            return self.inner.run(entry, &patched);
+        }
+        self.inner.run(entry, inputs)
+    }
+
+    fn executions(&self) -> u64 {
+        self.inner.executions()
+    }
+
+    fn name(&self) -> &'static str {
+        "fault-injected"
+    }
+
+    fn epsilon_mode(&self) -> EpsilonMode {
+        self.inner.epsilon_mode()
+    }
+
+    fn energy_report(&self) -> Option<EngineEnergyReport> {
+        self.inner.energy_report()
+    }
+}
+
+/// Wrap an engine factory so every shard's engine executes `plan`. The
+/// closure tracks how many engines each shard index has been given
+/// (its *incarnation*): the supervisor calls the factory again on
+/// respawn, and the incarnation both disarms the one-shot crash fault
+/// and advances the fault stream deterministically.
+pub fn wrap_engine_factory(
+    inner: crate::coordinator::EngineFactory,
+    plan: FaultPlan,
+) -> crate::coordinator::EngineFactory {
+    let incarnations: Arc<Mutex<HashMap<usize, u64>>> = Arc::new(Mutex::new(HashMap::new()));
+    Arc::new(move |shard| {
+        let engine = inner(shard)?;
+        let incarnation = {
+            let mut map = incarnations.lock().unwrap_or_else(|p| p.into_inner());
+            let slot = map.entry(shard).or_insert(0);
+            let current = *slot;
+            *slot += 1;
+            current
+        };
+        let faulty = FaultyEngine::new(engine, plan.clone(), shard, incarnation);
+        Ok(Box::new(faulty) as Box<dyn InferenceEngine>)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::runtime::SimEngine;
+
+    fn sim() -> Box<dyn InferenceEngine> {
+        Box::new(SimEngine::from_config(&Config::default()))
+    }
+
+    fn head_inputs(manifest: &Manifest) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<Vec<usize>>) {
+        let head = manifest.entry("head").expect("head entry").clone();
+        let feats = vec![0.25f32; head.input_len(0)];
+        let eps1 = vec![0.5f32; head.input_len(1)];
+        let eps2 = vec![-0.5f32; head.input_len(2)];
+        let shapes: Vec<Vec<usize>> = head.inputs.iter().map(|(_, s)| s.clone()).collect();
+        (feats, eps1, eps2, shapes)
+    }
+
+    #[test]
+    fn transient_errors_fire_on_schedule() {
+        let plan = FaultPlan {
+            error_every: 2,
+            ..FaultPlan::default()
+        };
+        let mut engine = FaultyEngine::new(sim(), plan, 0, 0);
+        let (feats, eps1, eps2, shapes) = head_inputs(&engine.manifest().clone());
+        let inputs = [
+            (&feats[..], &shapes[0]),
+            (&eps1[..], &shapes[1]),
+            (&eps2[..], &shapes[2]),
+        ];
+        assert!(engine.run("head", &inputs).is_ok(), "run 1 passes");
+        assert!(engine.run("head", &inputs).is_err(), "run 2 injected");
+        assert!(engine.run("head", &inputs).is_ok(), "run 3 passes");
+        assert!(engine.run("head", &inputs).is_err(), "run 4 injected");
+    }
+
+    #[test]
+    fn epsilon_corruption_is_deterministic_and_perturbs_output() {
+        let plan = FaultPlan {
+            eps_bit_flips: 4,
+            adc_offset_step: 0.5,
+            ..FaultPlan::default()
+        };
+        let run_once = |plan: &FaultPlan| {
+            let mut engine = FaultyEngine::new(sim(), plan.clone(), 0, 0);
+            let (feats, eps1, eps2, shapes) = head_inputs(&engine.manifest().clone());
+            engine
+                .run(
+                    "head",
+                    &[
+                        (&feats[..], &shapes[0]),
+                        (&eps1[..], &shapes[1]),
+                        (&eps2[..], &shapes[2]),
+                    ],
+                )
+                .unwrap()
+        };
+        let a = run_once(&plan);
+        let b = run_once(&plan);
+        assert_eq!(a, b, "same plan must replay bit-identically");
+        let clean = run_once(&FaultPlan::default());
+        assert_ne!(a, clean, "corruption must actually reach the head");
+        assert!(a.iter().all(|v| v.is_finite()), "SEU model must not mint NaN/inf");
+    }
+
+    #[test]
+    fn incarnations_disarm_the_panic_and_split_the_stream() {
+        let plan = FaultPlan {
+            panic_at_run: 1,
+            ..FaultPlan::default()
+        };
+        // Incarnation 1 (a respawn) must not panic at the same run.
+        let mut engine = FaultyEngine::new(sim(), plan.clone(), 0, 1);
+        let (feats, eps1, eps2, shapes) = head_inputs(&engine.manifest().clone());
+        engine
+            .run(
+                "head",
+                &[
+                    (&feats[..], &shapes[0]),
+                    (&eps1[..], &shapes[1]),
+                    (&eps2[..], &shapes[2]),
+                ],
+            )
+            .unwrap();
+        // And the factory wrapper counts incarnations per shard.
+        let factory = wrap_engine_factory(
+            Arc::new(|_shard| Ok(sim())),
+            FaultPlan {
+                panic_at_run: 1,
+                ..FaultPlan::default()
+            },
+        );
+        let _first = factory(0).unwrap(); // incarnation 0: armed
+        let mut second = factory(0).unwrap(); // incarnation 1: disarmed
+        let feats2 = vec![0.0f32; second.manifest().entry("features").unwrap().input_len(0)];
+        let fshape = second.manifest().entry("features").unwrap().inputs[0].1.clone();
+        second.run("features", &[(&feats2[..], &fshape)]).unwrap();
+    }
+}

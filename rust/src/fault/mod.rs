@@ -1,0 +1,35 @@
+//! Deterministic fault injection for chaos testing the serving stack.
+//!
+//! The related in-memory-BNN literature (Bayes2IMC's conductance-drift
+//! analysis, the FeFET GRNG's device-variation study) treats hardware
+//! non-idealities as first-class design inputs. This module gives the
+//! software stack the same capability: a [`FaultPlan`] describes *when*
+//! and *how* things break, and [`FaultyEngine`] wraps any
+//! [`InferenceEngine`](crate::runtime::InferenceEngine) to make them
+//! break exactly then — worker panics at engine-run N, fixed/jittered
+//! latency stalls, transient error returns, and hardware-grounded ε
+//! corruptions (single-event-upset bit flips and ADC droop offsets in
+//! the GRNG words).
+//!
+//! Everything is keyed off a SplitMix64-split fault seed
+//! (`shard_die_seed(plan.seed, shard)`, the same split discipline the ε
+//! banks use), so a chaos run replays bit-identically: same plan, same
+//! workload → same stalls, same flipped bits, same panic, same recovery.
+//!
+//! A plan reaches the pool three ways, in increasing precedence:
+//!
+//! 1. `[faults]` section in the config TOML (`cfg.faults`);
+//! 2. the `BNN_CIM_FAULT_PLAN` environment variable, a comma-separated
+//!    `key=value` spec (e.g. `seed=7,panic_at_run=3,stall_ms=1.5`);
+//! 3. [`CoordinatorBuilder::fault_plan`](crate::client::CoordinatorBuilder::fault_plan).
+//!
+//! The supervisor in `coordinator::supervisor` is the other half of the
+//! story: it turns the injected deaths into restarts, retries, and typed
+//! [`ServeError::ShardFailed`](crate::client::ServeError) outcomes
+//! instead of hung tickets (DESIGN.md §9).
+
+mod engine;
+mod plan;
+
+pub use engine::{wrap_engine_factory, FaultyEngine};
+pub use plan::{FaultPlan, ALL_SHARDS};

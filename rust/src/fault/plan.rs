@@ -1,0 +1,220 @@
+//! [`FaultPlan`] — the declarative description of a chaos run.
+
+use crate::config::{f64_field, u64_field};
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Sentinel for [`FaultPlan::panic_shard`]: arm the panic on every shard.
+pub const ALL_SHARDS: u64 = u64::MAX;
+
+/// A deterministic fault schedule. Every knob defaults to "off"; the
+/// default plan is inert ([`FaultPlan::active`] is `false`) so configs
+/// without a `[faults]` section serve exactly as before.
+///
+/// Fault taxonomy (DESIGN.md §9):
+///
+/// - **crash** — `panic_at_run`: the wrapped engine panics on its N-th
+///   `run` call (features and head passes both count). Armed only on a
+///   shard's *first* engine incarnation, so the supervisor's respawn is
+///   not re-killed at the same count and recovery converges.
+/// - **transient error** — `error_every`: every N-th `run` call returns
+///   `Err` without executing (a correctable fault: the worker survives
+///   and the batch is retried under the budget).
+/// - **latency** — `stall_ms` + `stall_jitter_ms`: a hot-die / thermal
+///   throttle model; every `run` sleeps `stall_ms` plus a uniform
+///   `[0, stall_jitter_ms)` draw from the fault stream.
+/// - **ε corruption** — `eps_bit_flips` and `adc_offset_step`: SEU bit
+///   flips (mantissa/sign only, so a single upset never mints inf/NaN)
+///   and a supply-droop offset step applied to the GRNG ε words feeding
+///   the Bayesian head. External-ε engines only — the corruption rides
+///   the ε buffers crossing the engine boundary; in-word engines draw ε
+///   inside their tile arrays where a decorator cannot reach.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Root fault seed; split per shard with the same SplitMix64
+    /// discipline as the ε die seeds, then per incarnation.
+    pub seed: u64,
+    /// Panic on the N-th engine `run` call (1-based; 0 = disabled).
+    pub panic_at_run: u64,
+    /// Restrict the panic to one shard index ([`ALL_SHARDS`] = every
+    /// shard is armed).
+    pub panic_shard: u64,
+    /// Return a transient error on every N-th `run` call (0 = disabled).
+    pub error_every: u64,
+    /// Fixed stall before every `run` call \[ms\].
+    pub stall_ms: f64,
+    /// Additional uniform `[0, jitter)` stall \[ms\], drawn from the
+    /// fault stream (deterministic per (seed, shard, incarnation, run)).
+    pub stall_jitter_ms: f64,
+    /// SEU model: bit flips injected per ε buffer per head call.
+    pub eps_bit_flips: u64,
+    /// Droop model: additive offset \[σ\] applied to every ε word.
+    pub adc_offset_step: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            seed: 0xFA_17,
+            panic_at_run: 0,
+            panic_shard: ALL_SHARDS,
+            error_every: 0,
+            stall_ms: 0.0,
+            stall_jitter_ms: 0.0,
+            eps_bit_flips: 0,
+            adc_offset_step: 0.0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Whether any fault is configured; an inert plan never wraps the
+    /// engine factory, so the zero-fault path costs nothing.
+    pub fn active(&self) -> bool {
+        self.panic_at_run > 0
+            || self.error_every > 0
+            || self.stall_ms > 0.0
+            || self.stall_jitter_ms > 0.0
+            || self.corrupts_epsilon()
+    }
+
+    /// Whether the plan perturbs the ε stream (bit flips or offset).
+    pub fn corrupts_epsilon(&self) -> bool {
+        self.eps_bit_flips > 0 || self.adc_offset_step != 0.0
+    }
+
+    /// Apply a `[faults]` TOML/JSON section field by field.
+    pub(crate) fn apply_json(&mut self, doc: &Json) -> Result<()> {
+        u64_field(doc, "seed", &mut self.seed)?;
+        u64_field(doc, "panic_at_run", &mut self.panic_at_run)?;
+        u64_field(doc, "panic_shard", &mut self.panic_shard)?;
+        u64_field(doc, "error_every", &mut self.error_every)?;
+        f64_field(doc, "stall_ms", &mut self.stall_ms)?;
+        f64_field(doc, "stall_jitter_ms", &mut self.stall_jitter_ms)?;
+        u64_field(doc, "eps_bit_flips", &mut self.eps_bit_flips)?;
+        f64_field(doc, "adc_offset_step", &mut self.adc_offset_step)?;
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("faults.stall_ms", self.stall_ms),
+            ("faults.stall_jitter_ms", self.stall_jitter_ms),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                return Err(Error::Config(format!("{name} must be finite and >= 0, got {v}")));
+            }
+        }
+        if !self.adc_offset_step.is_finite() {
+            return Err(Error::Config(format!(
+                "faults.adc_offset_step must be finite, got {}",
+                self.adc_offset_step
+            )));
+        }
+        Ok(())
+    }
+
+    /// Parse a compact `key=value,key=value` spec (the `BNN_CIM_FAULT_PLAN`
+    /// environment variable and the CLI `--fault-plan` flag), starting
+    /// from the inert default. Example:
+    /// `seed=7,panic_at_run=3,panic_shard=0,stall_ms=1.5`.
+    pub fn parse_spec(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for pair in spec.split(',') {
+            let pair = pair.trim();
+            if pair.is_empty() {
+                continue;
+            }
+            let (key, value) = pair
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("fault plan: expected key=value, got '{pair}'")))?;
+            let (key, value) = (key.trim(), value.trim());
+            let bad_u64 =
+                || Error::Config(format!("fault plan: '{key}' must be a non-negative integer"));
+            let bad_f64 = || Error::Config(format!("fault plan: '{key}' must be a number"));
+            match key {
+                "seed" => plan.seed = value.parse().map_err(|_| bad_u64())?,
+                "panic_at_run" => plan.panic_at_run = value.parse().map_err(|_| bad_u64())?,
+                "panic_shard" => plan.panic_shard = value.parse().map_err(|_| bad_u64())?,
+                "error_every" => plan.error_every = value.parse().map_err(|_| bad_u64())?,
+                "stall_ms" => plan.stall_ms = value.parse().map_err(|_| bad_f64())?,
+                "stall_jitter_ms" => {
+                    plan.stall_jitter_ms = value.parse().map_err(|_| bad_f64())?
+                }
+                "eps_bit_flips" => plan.eps_bit_flips = value.parse().map_err(|_| bad_u64())?,
+                "adc_offset_step" => {
+                    plan.adc_offset_step = value.parse().map_err(|_| bad_f64())?
+                }
+                other => {
+                    return Err(Error::Config(format!("fault plan: unknown key '{other}'")))
+                }
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// The `BNN_CIM_FAULT_PLAN` environment override, if set and
+    /// non-empty. A malformed spec is an error, not a silent no-op — a
+    /// chaos sweep that thinks it injected faults but didn't is worse
+    /// than one that fails to start.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var("BNN_CIM_FAULT_PLAN") {
+            Ok(spec) if !spec.trim().is_empty() => Ok(Some(Self::parse_spec(&spec)?)),
+            _ => Ok(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_inert() {
+        let plan = FaultPlan::default();
+        assert!(!plan.active());
+        assert!(!plan.corrupts_epsilon());
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn spec_parses_every_knob_and_rejects_junk() {
+        let plan = FaultPlan::parse_spec(
+            "seed=7, panic_at_run=3, panic_shard=0, error_every=10, \
+             stall_ms=1.5, stall_jitter_ms=2.0, eps_bit_flips=4, adc_offset_step=-0.25",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.panic_at_run, 3);
+        assert_eq!(plan.panic_shard, 0);
+        assert_eq!(plan.error_every, 10);
+        assert_eq!(plan.stall_ms, 1.5);
+        assert_eq!(plan.stall_jitter_ms, 2.0);
+        assert_eq!(plan.eps_bit_flips, 4);
+        assert_eq!(plan.adc_offset_step, -0.25);
+        assert!(plan.active());
+        assert_eq!(FaultPlan::parse_spec("").unwrap(), FaultPlan::default());
+        assert!(FaultPlan::parse_spec("bogus_knob=1").is_err());
+        assert!(FaultPlan::parse_spec("stall_ms").is_err());
+        assert!(FaultPlan::parse_spec("stall_ms=-1").is_err());
+        assert!(FaultPlan::parse_spec("panic_at_run=x").is_err());
+    }
+
+    #[test]
+    fn toml_faults_section_parses() {
+        let cfg = crate::config::Config::from_toml_str(
+            "[faults]\nseed = 9\npanic_at_run = 2\nstall_ms = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.faults.seed, 9);
+        assert_eq!(cfg.faults.panic_at_run, 2);
+        assert_eq!(cfg.faults.stall_ms, 0.5);
+        assert!(cfg.faults.active());
+        assert!(!crate::config::Config::default().faults.active());
+        assert!(
+            crate::config::Config::from_toml_str("[faults]\nstall_ms = -2.0\n").is_err(),
+            "validate() must reject negative stalls"
+        );
+    }
+}

@@ -35,6 +35,7 @@ pub mod bayes;
 pub mod data;
 pub mod nn;
 pub mod runtime;
+pub mod fault;
 pub mod coordinator;
 pub mod client;
 pub mod edge;

@@ -148,6 +148,13 @@ fn commands() -> Vec<Command> {
                      synthetic load; --duration bounds the run, omit it to run until killed",
                     None,
                 ),
+                opt(
+                    "fault-plan",
+                    "deterministic fault-injection spec 'k=v,...' (e.g. \
+                     'seed=7,panic_at_run=40,stall_ms=0.5'); overrides [faults] and \
+                     BNN_CIM_FAULT_PLAN — chaos drills, DESIGN.md §9",
+                    None,
+                ),
             ],
         },
     ]
@@ -330,6 +337,12 @@ fn cmd_serve(args: &bnn_cim::util::cli::Args) -> CmdResult {
         eprintln!("warning: --sim is deprecated; use --backend sim");
         cfg.server.backend = Backend::Sim;
     }
+    // CLI beats env beats config: hand the spec to the builder as an
+    // explicit override rather than via cfg.faults.
+    let fault_plan = match args.get("fault-plan") {
+        Some(spec) => Some(bnn_cim::client::FaultPlan::parse_spec(spec)?),
+        None => None,
+    };
     // --listen (or [server] listen in the config) switches from the
     // synthetic-load loop to the network edge.
     let listen = args
@@ -339,9 +352,13 @@ fn cmd_serve(args: &bnn_cim::util::cli::Args) -> CmdResult {
     if !listen.is_empty() {
         // No explicit --duration means run until killed.
         let bound = args.get("duration").map(|_| duration);
-        return serve_listen(cfg, &listen, bound);
+        return serve_listen(cfg, &listen, bound, fault_plan);
     }
-    let coord = Coordinator::builder(cfg.clone()).start()?;
+    let mut builder = Coordinator::builder(cfg.clone());
+    if let Some(plan) = fault_plan {
+        builder = builder.fault_plan(plan);
+    }
+    let coord = builder.start()?;
     println!(
         "serving on {} shard worker(s), backend = {}",
         cfg.server.workers,
@@ -379,11 +396,20 @@ fn cmd_serve(args: &bnn_cim::util::cli::Args) -> CmdResult {
 /// `serve --listen`: boot the coordinator plus the network edge and hold
 /// until the duration elapses (`None` = until killed), printing a metrics
 /// render every ~10 s.
-fn serve_listen(cfg: Config, listen: &str, duration: Option<Duration>) -> CmdResult {
+fn serve_listen(
+    cfg: Config,
+    listen: &str,
+    duration: Option<Duration>,
+    fault_plan: Option<bnn_cim::client::FaultPlan>,
+) -> CmdResult {
     use bnn_cim::client::EdgeServer;
     use std::sync::Arc;
 
-    let coord = Arc::new(Coordinator::builder(cfg.clone()).start()?);
+    let mut builder = Coordinator::builder(cfg.clone());
+    if let Some(plan) = fault_plan {
+        builder = builder.fault_plan(plan);
+    }
+    let coord = Arc::new(builder.start()?);
     let edge = EdgeServer::bind(listen, Arc::clone(&coord))?;
     println!(
         "edge listening on http://{} — {} shard worker(s), backend = {}, \

@@ -108,6 +108,7 @@ fn v1_data_types_are_structurally_pinned() {
         ServeError::ShuttingDown,
         ServeError::Timeout,
         ServeError::Disconnected,
+        ServeError::ShardFailed { shard: 0 },
         ServeError::Config(String::new()),
         ServeError::Startup(String::new()),
     ];

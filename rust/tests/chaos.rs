@@ -1,0 +1,207 @@
+//! Chaos acceptance (ISSUE 8): supervised shards under deterministic
+//! fault injection.
+//!
+//! 1. Kill a shard worker mid-flight under load: the supervisor respawns
+//!    it and **every** submitted ticket resolves — as a response or a
+//!    typed error — with zero lost (hung/Disconnected) tickets.
+//! 2. Fault replay is deterministic: two pools under the same ε-corruption
+//!    plan produce bit-identical responses, and both differ from a clean
+//!    pool (the injected SEU flips really perturb the
+//!    `UncertaintyReport`).
+//! 3. A dead shard (restart limit exhausted) fails blocked waits
+//!    *promptly* with `ServeError::ShardFailed` — well under the request
+//!    timeout — and an all-dead pool fails new submissions fast too.
+//!
+//! Everything runs on the deterministic `SimEngine`. The crash test
+//! optionally emits a conservation report (`BNN_CIM_CHAOS_REPORT=path`)
+//! that `scripts/bench_gate.py` audits in CI's chaos-smoke job.
+
+use bnn_cim::client::{Backend, Config, Coordinator, FaultPlan, Infer, ServeError, ShardHealth};
+use bnn_cim::data::SyntheticPerson;
+use std::time::{Duration, Instant};
+
+fn chaos_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.model.mc_samples = 4;
+    cfg.server.batch_deadline_ms = 1.0;
+    cfg.server.request_timeout_ms = 30_000.0;
+    cfg
+}
+
+/// Kill-mid-flight under load: with the panic armed on every shard's
+/// first engine incarnation, both workers of a 2-shard pool die while
+/// requests are in flight. The supervisor must respawn them (original
+/// seed splits) and redeliver the recovered batches under the retry
+/// budget, so every ticket resolves — response or typed error — with
+/// nothing hung and nothing Disconnected.
+#[test]
+fn killed_workers_are_respawned_and_no_ticket_is_lost() {
+    let mut cfg = chaos_cfg();
+    cfg.server.retry_budget = 2;
+    let coord = Coordinator::builder(cfg)
+        .backend(Backend::Sim)
+        .workers(2)
+        .fault_plan(FaultPlan {
+            seed: 7,
+            panic_at_run: 5,
+            ..FaultPlan::default()
+        })
+        .start()
+        .unwrap();
+
+    let n: u64 = 40;
+    let gen = SyntheticPerson::new(32, 21);
+    let tickets = coord
+        .submit_many((0..n).map(|i| Infer::new(gen.sample(i).pixels)))
+        .unwrap();
+
+    let (mut completed, mut failed_typed) = (0u64, 0u64);
+    for t in tickets {
+        match t.wait_timeout(Duration::from_secs(30)) {
+            Ok(_) => completed += 1,
+            Err(ServeError::ShardFailed { .. }) => failed_typed += 1,
+            Err(other) => panic!("ticket lost to an untyped failure: {other}"),
+        }
+    }
+    assert_eq!(
+        completed + failed_typed,
+        n,
+        "conservation: every submitted ticket must resolve"
+    );
+
+    let m = coord.metrics();
+    assert!(
+        m.shard_restarts >= 1,
+        "the armed panic must have killed at least one worker (restarts = {})",
+        m.shard_restarts
+    );
+    assert!(
+        m.requests_retried >= 1,
+        "recovered in-flight requests must be redelivered (retried = {})",
+        m.requests_retried
+    );
+    // Both shards recovered: the pool ends fully healthy.
+    assert_eq!(coord.healthy_workers(), 2);
+    assert!(coord.shard_health().iter().all(|h| *h == ShardHealth::Healthy));
+    // Per-shard counters sum to the global ones.
+    let per_restarts: u64 = m.per_shard.iter().map(|s| s.shard_restarts).sum();
+    let per_retried: u64 = m.per_shard.iter().map(|s| s.requests_retried).sum();
+    assert_eq!(per_restarts, m.shard_restarts);
+    assert_eq!(per_retried, m.requests_retried);
+
+    if let Ok(path) = std::env::var("BNN_CIM_CHAOS_REPORT") {
+        let report = format!(
+            "{{\n  \"source\": \"tests/chaos.rs killed_workers_are_respawned_and_no_ticket_is_lost\",\n  \
+               \"suite\": \"chaos\",\n  \
+               \"submitted\": {n},\n  \
+               \"completed\": {completed},\n  \
+               \"failed_typed\": {failed_typed},\n  \
+               \"shard_restarts\": {},\n  \
+               \"requests_retried\": {}\n}}\n",
+            m.shard_restarts, m.requests_retried
+        );
+        std::fs::write(&path, report).unwrap();
+        eprintln!("chaos report written to {path}");
+    }
+
+    coord.shutdown();
+}
+
+/// Fault replay: the chaos stream is part of the determinism contract.
+/// Two pools under the same ε-corruption plan must produce bit-identical
+/// responses for a serial workload, and both must differ from a clean
+/// pool — the SEU bit flips and the ADC offset step really reach the
+/// Bayesian head and perturb its `UncertaintyReport`.
+#[test]
+fn fault_replay_is_bit_identical_and_perturbs_uncertainty() {
+    let run = |plan: FaultPlan| {
+        let coord = Coordinator::builder(chaos_cfg())
+            .backend(Backend::Sim)
+            .fault_plan(plan)
+            .start()
+            .unwrap();
+        let gen = SyntheticPerson::new(32, 9);
+        let mut out = Vec::new();
+        for i in 0..5 {
+            let resp = coord.infer(Infer::new(gen.sample(i).pixels)).unwrap();
+            out.push((resp.pred.probs.clone(), resp.uncertainty.entropy));
+        }
+        coord.shutdown();
+        out
+    };
+    let corrupt = FaultPlan {
+        seed: 42,
+        eps_bit_flips: 2,
+        adc_offset_step: 0.5,
+        ..FaultPlan::default()
+    };
+    let a = run(corrupt.clone());
+    let b = run(corrupt);
+    // `FaultPlan::default()` explicitly disables injection, so the clean
+    // pool is immune to any ambient BNN_CIM_FAULT_PLAN (CI sweeps).
+    let clean = run(FaultPlan::default());
+    assert_eq!(a, b, "same fault plan must replay bit-identically");
+    assert_ne!(a, clean, "ε corruption must perturb the posterior");
+    let entropy_moved = a.iter().zip(&clean).any(|(f, c)| f.1 != c.1);
+    assert!(entropy_moved, "entropy must move under ε corruption");
+}
+
+/// Failure is *delivered*, not discovered by timeout: with respawns
+/// disabled and no retry budget, a worker panic turns every affected wait
+/// into a prompt `ShardFailed` — orders of magnitude before the 30 s
+/// request timeout — the shard reports `dead`, and an all-dead pool fails
+/// fresh submissions just as fast.
+#[test]
+fn dead_shard_fails_waits_promptly_and_all_dead_pool_fails_fast() {
+    let mut cfg = chaos_cfg();
+    cfg.server.retry_budget = 0;
+    cfg.server.shard_restart_limit = 0;
+    let coord = Coordinator::builder(cfg)
+        .backend(Backend::Sim)
+        .workers(1)
+        .fault_plan(FaultPlan {
+            seed: 3,
+            panic_at_run: 1,
+            ..FaultPlan::default()
+        })
+        .start()
+        .unwrap();
+
+    let gen = SyntheticPerson::new(32, 17);
+    let tickets = coord
+        .submit_many((0..3).map(|i| Infer::new(gen.sample(i).pixels)))
+        .unwrap();
+    let t0 = Instant::now();
+    for t in tickets {
+        match t.wait() {
+            Err(ServeError::ShardFailed { shard: 0 }) => {}
+            other => panic!("expected ShardFailed from shard 0, got {other:?}"),
+        }
+    }
+    let elapsed = t0.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(10),
+        "typed failure took {elapsed:?} — waits must not run out the 30 s deadline"
+    );
+
+    // The supervisor has already marked the shard dead (waits resolved
+    // *after* recovery), so the health surface is settled.
+    assert_eq!(coord.shard_health(), vec![ShardHealth::Dead]);
+    assert_eq!(coord.healthy_workers(), 0);
+    assert!(coord.all_shards_dead());
+    let m = coord.metrics();
+    assert_eq!(m.shard_restarts, 0, "shard_restart_limit = 0: no respawn");
+    assert!(m.requests_failed_shard >= 1);
+
+    // New submissions are admitted (the queue is open) but fail fast and
+    // typed at dispatch — not by timeout.
+    let t0 = Instant::now();
+    let ticket = coord.submit(Infer::new(gen.sample(99).pixels)).unwrap();
+    match ticket.wait() {
+        Err(ServeError::ShardFailed { .. }) => {}
+        other => panic!("expected ShardFailed on an all-dead pool, got {other:?}"),
+    }
+    assert!(t0.elapsed() < Duration::from_secs(10));
+
+    coord.shutdown();
+}

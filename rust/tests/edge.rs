@@ -245,6 +245,7 @@ fn serve_error_status_taxonomy_is_fixed() {
     assert_eq!(status_for(&ServeError::ShuttingDown), 503);
     assert_eq!(status_for(&ServeError::Timeout), 504);
     assert_eq!(status_for(&ServeError::Disconnected), 502);
+    assert_eq!(status_for(&ServeError::ShardFailed { shard: 0 }), 502);
     assert_eq!(status_for(&ServeError::Config("x".into())), 500);
     assert_eq!(status_for(&ServeError::Startup("x".into())), 500);
 }
@@ -433,6 +434,79 @@ fn wire_infer_is_bit_identical_to_in_process() {
         assert_eq!(w.get("degraded").and_then(Json::as_bool), Some(false));
         assert_eq!(w.get("escalated").and_then(Json::as_bool), Some(false));
     }
+
+    edge.shutdown();
+    drop(coord); // Drop shuts the pool down
+}
+
+/// An all-dead backend is a *service*-level condition on the wire: after
+/// the lone shard dies with respawns disabled, in-flight requests come
+/// back as per-request 502 `shard_failed`, `/v1/health` reports
+/// `unhealthy` with the shard labelled `dead`, and fresh `POST /v1/infer`
+/// calls are answered 503 `unhealthy` + `Retry-After` up front — not a
+/// 502 per request.
+#[test]
+fn all_dead_backend_answers_503_with_retry_after() {
+    use bnn_cim::client::FaultPlan;
+    let mut cfg = edge_cfg();
+    cfg.server.workers = 1;
+    cfg.server.retry_budget = 0;
+    cfg.server.shard_restart_limit = 0;
+    let coord = Arc::new(
+        Coordinator::builder(cfg.clone())
+            .fault_plan(FaultPlan {
+                seed: 5,
+                panic_at_run: 1,
+                ..FaultPlan::default()
+            })
+            .start()
+            .unwrap(),
+    );
+    let edge = EdgeServer::bind("127.0.0.1:0", Arc::clone(&coord)).unwrap();
+    let mut client = MiniClient::connect(edge.local_addr(), CLIENT_TIMEOUT).unwrap();
+
+    let person = SyntheticPerson::new(cfg.model.image_side, 23).sample(0);
+    let body = format!("{{\"pixels\":{}}}", pixels_json(&person.pixels));
+
+    // First request rides into the crash: by the time its typed failure
+    // is delivered the supervisor has already marked the shard dead, so
+    // this is a per-request 502 with the shard_failed kind.
+    let (status, resp) = client.request("POST", "/v1/infer", Some(&body)).unwrap();
+    assert_eq!(status, 502, "got {resp}");
+    let doc = Json::parse(&resp).unwrap();
+    assert_eq!(
+        doc.get("error").and_then(|e| e.get("kind")).and_then(Json::as_str),
+        Some("shard_failed")
+    );
+
+    // The health surface has settled on the terminal verdict.
+    let (status, resp) = client.request("GET", "/v1/health", None).unwrap();
+    assert_eq!(status, 200);
+    let doc = Json::parse(&resp).unwrap();
+    assert_eq!(doc.get("status").and_then(Json::as_str), Some("unhealthy"));
+    assert_eq!(doc.get("healthy_workers").and_then(Json::as_f64), Some(0.0));
+    let shards = doc.get("shards").and_then(Json::as_arr).unwrap();
+    assert_eq!(shards.len(), 1);
+    assert_eq!(shards[0].as_str(), Some("dead"));
+
+    // Every subsequent infer is refused at the service level: one 503
+    // with the Retry-After header, before any submission happens.
+    let (status, head, resp) = client
+        .request_with_head("POST", "/v1/infer", Some(&body))
+        .unwrap();
+    assert_eq!(status, 503, "got {resp}");
+    let doc = Json::parse(&resp).unwrap();
+    let err = doc.get("error").unwrap();
+    assert_eq!(err.get("kind").and_then(Json::as_str), Some("unhealthy"));
+    assert!(
+        err.get("retry_after_ms").and_then(Json::as_f64).unwrap() > 0.0,
+        "body must carry the millisecond hint"
+    );
+    assert!(
+        head.lines()
+            .any(|l| l.to_ascii_lowercase().starts_with("retry-after:")),
+        "503 must carry a Retry-After header; head was:\n{head}"
+    );
 
     edge.shutdown();
     drop(coord); // Drop shuts the pool down

@@ -31,6 +31,11 @@ Rules:
   above measured capacity) must show the admission machine engaging —
   `shed + degraded + escalated > 0` — while `p99_bounded` stays true
   (p99 latency within the configured request timeout).
+- BENCH_chaos.json only (written by tests/chaos.rs when
+  BNN_CIM_CHAOS_REPORT names the output path): conservation — every
+  submitted ticket resolved (`completed + failed_typed == submitted`) —
+  and the kill actually happened (`shard_restarts > 0`) with recovered
+  work redelivered (`requests_retried > 0`).
 
 Exit code 0 = all gates pass; 1 = any gate fails (fails the CI job).
 """
@@ -47,6 +52,7 @@ GATES = {
     "BENCH_cim_mvm.json": "speedup_single_thread",
     "BENCH_grng_fill.json": "speedup_block_vs_legacy",
     "BENCH_edge.json": "peak_completed_rps",
+    "BENCH_chaos.json": "completed",
 }
 
 failures = []
@@ -185,6 +191,39 @@ def gate_edge_overload(edge):
         )
 
 
+def gate_chaos_conservation(chaos):
+    """Zero lost tickets under the kill: conservation must hold exactly,
+    and the chaos run must have actually exercised the supervisor."""
+    submitted = chaos.get("submitted", 0) or 0
+    completed = chaos.get("completed", 0) or 0
+    failed_typed = chaos.get("failed_typed", 0) or 0
+    if submitted <= 0:
+        failures.append("BENCH_chaos.json: no submissions recorded")
+        return
+    if completed + failed_typed != submitted:
+        failures.append(
+            f"BENCH_chaos.json: ticket conservation violated — "
+            f"completed {completed} + failed_typed {failed_typed} != "
+            f"submitted {submitted} (lost/hung tickets)"
+        )
+    else:
+        print(
+            f"BENCH_chaos.json: conservation holds "
+            f"({completed} completed + {failed_typed} typed failures "
+            f"= {submitted} submitted)"
+        )
+    if (chaos.get("shard_restarts", 0) or 0) <= 0:
+        failures.append(
+            "BENCH_chaos.json: shard_restarts = 0 — the armed panic never "
+            "killed a worker, so the run proved nothing"
+        )
+    if (chaos.get("requests_retried", 0) or 0) <= 0:
+        failures.append(
+            "BENCH_chaos.json: requests_retried = 0 — no recovered work "
+            "was redelivered"
+        )
+
+
 def main(argv):
     selected = argv[1:] or list(GATES)
     unknown = [p for p in selected if p not in GATES]
@@ -200,6 +239,8 @@ def main(argv):
             gate_simd_kernel(fresh)
         elif path == "BENCH_edge.json":
             gate_edge_overload(fresh)
+        elif path == "BENCH_chaos.json":
+            gate_chaos_conservation(fresh)
 
     if failures:
         print("\nBENCH GATE FAILURES:", file=sys.stderr)
