@@ -1,0 +1,177 @@
+//! Bench: elastic serving — the copy-on-calibrate shared tile state and
+//! the autoscaler built on it (DESIGN.md §10).
+//!
+//! Three measurements, written machine-readably to `BENCH_elastic.json`
+//! at the repo root:
+//!
+//! 1. **Footprint split** — bytes in the Arc-shared immutable layer
+//!    (μ digit planes, σ masks, IDAC/ADC calibration, head mapping) vs
+//!    bytes of per-replica private state (ε buffers, scratch, ledgers).
+//!    The whole point of copy-on-calibrate is that the private slice is
+//!    tiny, so replicas are nearly free.
+//! 2. **Replica boot vs full boot** — growing the replica pool by one
+//!    (`set_replicas`: Arc::clone + stream reseed) against a cold
+//!    `CimEngine::for_shard` bring-up (weights, mapping, calibration).
+//!    The ratio is the headline `replica_boot_speedup` the CI gate
+//!    tracks across PRs.
+//! 3. **Throughput around a scale event** — an identical pre-queued
+//!    burst through an elastic pool (mc_workers 1 → ceiling 4) and a
+//!    pinned pool (elastic off, mc_workers = 1), with the scale
+//!    counters proving the autoscaler actually engaged.
+
+use bnn_cim::client::{Config, Coordinator, Infer};
+use bnn_cim::config::Backend;
+use bnn_cim::data::SyntheticPerson;
+use bnn_cim::runtime::{CimEngine, InferenceEngine};
+use bnn_cim::util::bench::{black_box, is_calibrated_report, repo_root_artifact, Suite};
+use bnn_cim::util::json::Json;
+use std::time::{Duration, Instant};
+
+fn chip_cfg(quick: bool, mc: usize) -> Config {
+    let mut cfg = Config::default();
+    cfg.server.backend = Backend::Cim;
+    cfg.model.mc_samples = mc;
+    if quick {
+        // Smoke scale: small tiles keep CI's bring-up measurements fast
+        // without changing what is being compared (both sides of every
+        // ratio shrink together).
+        cfg.chip.tile.rows = 16;
+        cfg.chip.tile.words_per_row = 4;
+    }
+    cfg
+}
+
+/// Drive a pre-queued burst and return (req/s, scale_up, scale_down,
+/// peak replicas gauge observed at the end of the drain).
+fn run_burst(cfg: &Config, n_req: usize) -> (f64, u64, u64, usize) {
+    let mut cfg = cfg.clone();
+    cfg.server.queue_capacity = cfg.server.queue_capacity.max(n_req + 8);
+    let coord = Coordinator::builder(cfg.clone()).start().expect("boot cim pool");
+    let gen = SyntheticPerson::new(cfg.model.image_side, 7);
+    let imgs: Vec<Vec<f32>> = (0..n_req as u64).map(|i| gen.sample(i).pixels).collect();
+    let t0 = Instant::now();
+    let tickets = coord
+        .submit_many(imgs.into_iter().map(Infer::new))
+        .expect("queue sized for full load");
+    for t in tickets {
+        t.wait_timeout(Duration::from_secs(600)).expect("response");
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let m = coord.metrics();
+    let replicas = m.per_shard.iter().map(|s| s.replicas_active).max().unwrap_or(0);
+    coord.shutdown();
+    (n_req as f64 / dt.max(1e-9), m.scale_up, m.scale_down, replicas)
+}
+
+fn main() {
+    let mut suite = Suite::new("elastic (shared tile state, replica boot, autoscaler)");
+    suite.header();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mc = if quick { 8 } else { 32 };
+    let cfg = chip_cfg(quick, mc);
+
+    // 1. Footprint split at a 4-replica pool.
+    let mut engine = CimEngine::for_shard(&cfg, 0);
+    engine.set_replicas(4);
+    let bytes_shared = engine.bytes_shared();
+    let bytes_private = engine.bytes_private();
+    let bytes_private_per_replica = bytes_private / engine.replica_count().max(1);
+    suite.note(
+        "footprint (4 replicas)",
+        format!(
+            "{} B shared (Arc'd planes/masks/calibration) vs {} B private \
+             ({} B/replica: ε buffers + scratch + ledger)",
+            bytes_shared, bytes_private, bytes_private_per_replica
+        ),
+    );
+
+    // 2. Full bring-up vs replica growth.
+    let boot_iters = if quick { 1 } else { 3 };
+    let t0 = Instant::now();
+    for _ in 0..boot_iters {
+        black_box(CimEngine::for_shard(&cfg, 0));
+    }
+    let full_boot_us = t0.elapsed().as_secs_f64() * 1e6 / boot_iters as f64;
+
+    // Repeatedly shrink to 1 and regrow: every grow step is one
+    // `make_replica` (Arc::clone + deterministic stream reseed), the
+    // operation the elastic scaler pays per scale-up.
+    let (grow, reps) = if quick { (4usize, 2usize) } else { (8, 8) };
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        engine.set_replicas(1);
+        engine.set_replicas(1 + grow);
+    }
+    let replica_boot_us = t0.elapsed().as_secs_f64() * 1e6 / (reps * grow) as f64;
+    let replica_boot_speedup = full_boot_us / replica_boot_us.max(1e-9);
+    suite.note(
+        "boot latency",
+        format!(
+            "full bring-up {:.0} µs vs replica grow {:.2} µs — {:.0}x",
+            full_boot_us, replica_boot_us, replica_boot_speedup
+        ),
+    );
+    drop(engine);
+
+    // 3. Throughput around a scale event: same burst, elastic vs pinned.
+    let n_req = if quick { 24 } else { 64 };
+    let mut serve_cfg = cfg.clone();
+    serve_cfg.server.workers = 1;
+    serve_cfg.server.mc_workers = 1;
+    serve_cfg.server.min_mc_workers = 1;
+    serve_cfg.server.max_mc_workers = 4;
+    serve_cfg.server.max_batch = 2;
+    serve_cfg.server.batch_deadline_ms = 0.5;
+
+    serve_cfg.server.elastic = false;
+    let _ = run_burst(&serve_cfg, n_req / 4); // warm page cache/allocator
+    let (pinned_rps, _, _, _) = run_burst(&serve_cfg, n_req);
+
+    serve_cfg.server.elastic = true;
+    let (elastic_rps, scale_up, scale_down, peak_replicas) = run_burst(&serve_cfg, n_req);
+    suite.note(
+        "scale event",
+        format!(
+            "{:.1} req/s elastic (scale_up={}, scale_down={}, peak replicas={}) \
+             vs {:.1} req/s pinned at mc_workers=1 ({} req, T={})",
+            elastic_rps, scale_up, scale_down, peak_replicas, pinned_rps, n_req, mc
+        ),
+    );
+
+    let mut scale_event = Json::obj();
+    scale_event
+        .set("requests", Json::Num(n_req as f64))
+        .set("elastic_req_per_s", Json::Num(elastic_rps))
+        .set("pinned_req_per_s", Json::Num(pinned_rps))
+        .set("scale_up", Json::Num(scale_up as f64))
+        .set("scale_down", Json::Num(scale_down as f64))
+        .set("peak_replicas", Json::Num(peak_replicas as f64));
+
+    // A --quick run is smoke-scale: it must not replace an existing
+    // calibrated report (same contract as BENCH_serving.json).
+    let root = repo_root_artifact("BENCH_elastic.json");
+    if quick && is_calibrated_report(&root) {
+        println!("  keeping calibrated {}", root.display());
+    } else {
+        let source = if quick {
+            "benches/elastic.rs --quick (smoke-scale)"
+        } else {
+            "benches/elastic.rs (calibrated, release profile)"
+        };
+        suite.write_report(
+            &root,
+            vec![
+                ("source", Json::Str(source.to_string())),
+                ("replica_boot_speedup", Json::Num(replica_boot_speedup)),
+                ("full_boot_us", Json::Num(full_boot_us)),
+                ("replica_boot_us", Json::Num(replica_boot_us)),
+                ("bytes_shared", Json::Num(bytes_shared as f64)),
+                ("bytes_private", Json::Num(bytes_private as f64)),
+                ("bytes_private_per_replica", Json::Num(bytes_private_per_replica as f64)),
+                ("scale_event", scale_event),
+            ],
+        );
+        println!("  wrote {}", root.display());
+    }
+    suite.finish();
+}

@@ -204,6 +204,37 @@ impl TileArray {
         }
     }
 
+    /// Eagerly build every tile's SoA plane cache so replica clones share
+    /// the planes through their `Arc`s (see [`CimTile::warm_planes`]).
+    pub fn warm_planes(&mut self) {
+        for t in &mut self.tiles {
+            t.warm_planes();
+        }
+    }
+
+    /// Bytes of `Arc`-shared die state across all tiles (counted once per
+    /// model, however many replicas share it).
+    pub fn bytes_shared(&self) -> usize {
+        self.tiles.iter().map(|t| t.bytes_shared()).sum()
+    }
+
+    /// Bytes each replica owns privately (ε buffers + streams + scratch).
+    pub fn bytes_private(&self) -> usize {
+        self.tiles.iter().map(|t| t.bytes_private()).sum::<usize>()
+            + self.chunk.capacity() * std::mem::size_of::<u8>()
+    }
+
+    /// True when `other` is a replica sharing this array's immutable
+    /// layer tile for tile (pointer identity, not value equality).
+    pub fn shares_statics_with(&self, other: &TileArray) -> bool {
+        self.tiles.len() == other.tiles.len()
+            && self
+                .tiles
+                .iter()
+                .zip(other.tiles.iter())
+                .all(|(a, b)| a.shares_statics_with(b))
+    }
+
     /// Aggregate energy ledger across tiles.
     pub fn ledger(&self) -> EnergyLedger {
         let mut total = EnergyLedger::new();

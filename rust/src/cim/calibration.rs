@@ -52,7 +52,7 @@ pub fn calibrate(tile: &mut CimTile, adc_avg_n: usize, grng_avg_n: usize) -> Res
     // Save σ state? The controller runs before weights are programmed
     // (chip bring-up), so we just use the current state and restore σ=0.
     let zero_x = vec![0u8; rows];
-    tile.adc_offset_cal.iter_mut().for_each(|v| *v = 0.0);
+    tile.adc_offset_cal_mut().iter_mut().for_each(|v| *v = 0.0);
     // Write σ = 1 everywhere so σε columns convert too (paper procedure).
     for r in 0..rows {
         for w in 0..words {
@@ -68,7 +68,7 @@ pub fn calibrate(tile: &mut CimTile, adc_avg_n: usize, grng_avg_n: usize) -> Res
             *a += *c as f64;
         }
     }
-    for (cal, acc) in tile.adc_offset_cal.iter_mut().zip(adc_acc.iter()) {
+    for (cal, acc) in tile.adc_offset_cal_mut().iter_mut().zip(adc_acc.iter()) {
         *cal = *acc / adc_avg_n as f64;
     }
     let adc_offset_rms_lsb = rms(&tile.adc_offset_cal);
@@ -82,7 +82,7 @@ pub fn calibrate(tile: &mut CimTile, adc_avg_n: usize, grng_avg_n: usize) -> Res
     // quantization — so the controller drives the row at FULL input code
     // instead, which is the same measurement at measurable gain (the
     // estimate divides the drive back out).
-    tile.grng_offset_cal.iter_mut().for_each(|v| *v = 0.0);
+    tile.grng_offset_cal_mut().iter_mut().for_each(|v| *v = 0.0);
     let mut grng_est = vec![0.0f64; rows * words];
     let lsb = tile.sigma_lsb();
     let max_code = tile.max_input_code();

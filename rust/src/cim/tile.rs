@@ -22,6 +22,7 @@ use crate::config::ChipConfig;
 use crate::energy::{Component, EnergyLedger};
 use crate::grng::{DieVariation, GrngBank};
 use crate::util::rng::SplitMix64;
+use std::sync::Arc;
 
 /// Options controlling an MVM.
 #[derive(Clone, Copy, Debug)]
@@ -96,6 +97,14 @@ struct TilePlanes {
     mu: Vec<f64>,
     sigma_mask: Vec<f64>,
     sigma_val: Vec<f64>,
+}
+
+impl TilePlanes {
+    /// Heap footprint of the cached planes \[bytes\].
+    fn bytes(&self) -> usize {
+        (self.mu.len() + self.sigma_mask.len() + self.sigma_val.len())
+            * std::mem::size_of::<f64>()
+    }
 }
 
 /// Reusable per-MVM scratch buffers — no `vec!` on the hot path.
@@ -231,15 +240,29 @@ impl ConvertUnit<'_> {
 }
 
 /// One CIM tile: `rows` inputs × `words` outputs.
+///
+/// # Shared immutable layer (copy-on-calibrate)
+///
+/// The chip's whole economy comes from keeping weights resident while
+/// only ε changes per sample; the software mirror is that everything
+/// *static per die* — programmed μ/σ words, the SoA plane cache, IDAC
+/// bows, and the calibration registers — lives behind `Arc`s, so a
+/// `Clone` of a calibrated tile shares those planes instead of deep-
+/// copying them. Only the per-replica *stream* state (ε buffers, GRNG
+/// lane states, ADC noise streams, scratch, the energy ledger) is
+/// private. Bring-up mutation (`program`, `write_sigma_raw`,
+/// calibration writes) goes through `Arc::make_mut`: in-place while the
+/// tile is still uniquely owned, copy-on-write after replicas share it
+/// — which is exactly the "copy-on-calibrate" contract.
 #[derive(Clone)]
 pub struct CimTile {
     pub chip: ChipConfig,
     rows: usize,
     words: usize,
-    /// μ words, row-major [rows × words].
-    mu: Vec<MuWord>,
-    /// σ words, row-major [rows × words].
-    sigma: Vec<SigmaWord>,
+    /// μ words, row-major [rows × words] (shared immutable layer).
+    mu: Arc<Vec<MuWord>>,
+    /// σ words, row-major [rows × words] (shared immutable layer).
+    sigma: Arc<Vec<SigmaWord>>,
     /// In-word GRNG bank (one cell per σ word).
     pub bank: GrngBank,
     /// Current ε matrix in plane-major `[word][row]` layout — filled
@@ -250,23 +273,27 @@ pub struct CimTile {
     /// Second ε buffer for the double-buffered `mvm_batch` pipeline
     /// (sample k runs from buffer k % 2 while k+1 fills).
     eps_spare: Vec<f64>,
-    /// Row IDACs.
-    idacs: Vec<Idac>,
-    /// Column ADCs: [words × (mu_bits + sigma_bits)].
+    /// Row IDACs (static die state after construction — shared layer).
+    idacs: Arc<Vec<Idac>>,
+    /// Column ADCs: [words × (mu_bits + sigma_bits)]. Mutable per
+    /// replica: every conversion advances an ADC's private noise stream.
     adcs: Vec<SarAdc>,
     /// Digital offset-correction registers per ADC \[LSB\], set by
-    /// calibration (zeros when uncalibrated).
-    pub adc_offset_cal: Vec<f64>,
+    /// calibration (zeros when uncalibrated). Shared layer; mutate via
+    /// [`CimTile::adc_offset_cal_mut`].
+    pub adc_offset_cal: Arc<Vec<f64>>,
     /// μ-side correction for GRNG static offsets ε₀ (Eq. 10): value to
     /// subtract from the recombined σε word output, in weight LSB units.
-    pub grng_offset_cal: Vec<f64>,
+    /// Shared layer; mutate via [`CimTile::grng_offset_cal_mut`].
+    pub grng_offset_cal: Arc<Vec<f64>>,
     /// Energy ledger.
     pub ledger: EnergyLedger,
     /// ADC full-scale: LSB size in "drive·digit" charge units.
     adc_lsb_mu: f64,
     adc_lsb_sigma: f64,
-    /// SoA fast-path cache; `None` after any word write.
-    planes: Option<TilePlanes>,
+    /// SoA fast-path cache; `None` after any word write. Behind `Arc`
+    /// so replicas cloned after [`CimTile::warm_planes`] share one copy.
+    planes: Option<Arc<TilePlanes>>,
     /// Reusable MVM scratch buffers.
     scratch: MvmScratch,
 }
@@ -300,15 +327,18 @@ impl CimTile {
             chip: chip.clone(),
             rows,
             words,
-            mu: vec![MuWord { digits: 0, bits: chip.tile.mu_bits as u8 }; rows * words],
-            sigma: vec![SigmaWord { code: 0, bits: chip.tile.sigma_bits as u8 }; rows * words],
+            mu: Arc::new(vec![MuWord { digits: 0, bits: chip.tile.mu_bits as u8 }; rows * words]),
+            sigma: Arc::new(vec![
+                SigmaWord { code: 0, bits: chip.tile.sigma_bits as u8 };
+                rows * words
+            ]),
             bank,
             eps_t: vec![0.0; rows * words],
             eps_spare: Vec::new(),
-            idacs,
+            idacs: Arc::new(idacs),
             adcs,
-            adc_offset_cal: vec![0.0; words * adc_per_word],
-            grng_offset_cal: vec![0.0; rows * words],
+            adc_offset_cal: Arc::new(vec![0.0; words * adc_per_word]),
+            grng_offset_cal: Arc::new(vec![0.0; rows * words]),
             ledger: EnergyLedger::new(),
             adc_lsb_mu,
             adc_lsb_sigma,
@@ -329,8 +359,9 @@ impl CimTile {
     /// Costs SRAM write energy.
     pub fn program(&mut self, row: usize, word: usize, mu_fixed: f64, sigma_fixed: f64) {
         let idx = row * self.words + word;
-        self.mu[idx] = MuWord::quantize(mu_fixed, self.chip.tile.mu_bits as u8);
-        self.sigma[idx] = SigmaWord::quantize(sigma_fixed, self.chip.tile.sigma_bits as u8);
+        Arc::make_mut(&mut self.mu)[idx] = MuWord::quantize(mu_fixed, self.chip.tile.mu_bits as u8);
+        Arc::make_mut(&mut self.sigma)[idx] =
+            SigmaWord::quantize(sigma_fixed, self.chip.tile.sigma_bits as u8);
         self.planes = None;
         let cells = 2 * self.chip.tile.mu_bits + self.chip.tile.sigma_bits;
         self.ledger.deposit(
@@ -364,7 +395,7 @@ impl CimTile {
     /// Direct σ-word write (used by the calibration controller).
     pub fn write_sigma_raw(&mut self, row: usize, word: usize, code: u8) {
         let idx = row * self.words + word;
-        self.sigma[idx] = SigmaWord {
+        Arc::make_mut(&mut self.sigma)[idx] = SigmaWord {
             code: code.min(((1u16 << self.chip.tile.sigma_bits) - 1) as u8),
             bits: self.chip.tile.sigma_bits as u8,
         };
@@ -686,10 +717,21 @@ impl CimTile {
     }
 
     /// Take the plane cache (building it if a word write invalidated it).
-    fn take_planes(&mut self) -> TilePlanes {
+    fn take_planes(&mut self) -> Arc<TilePlanes> {
         match self.planes.take() {
             Some(p) => p,
-            None => self.build_planes(),
+            None => Arc::new(self.build_planes()),
+        }
+    }
+
+    /// Build the SoA plane cache eagerly so that subsequent `Clone`s
+    /// share it through the `Arc` instead of each replica rebuilding (or
+    /// deep-copying) its own. Called once after programming/calibration,
+    /// before replica fan-out. Idempotent; a later word write still
+    /// invalidates and rebuilds on the next MVM.
+    pub fn warm_planes(&mut self) {
+        if self.planes.is_none() {
+            self.planes = Some(Arc::new(self.build_planes()));
         }
     }
 
@@ -888,13 +930,67 @@ impl CimTile {
         }
     }
 
+    /// Bytes of die state this tile holds behind `Arc`s — counted once
+    /// per model no matter how many replicas share it (μ/σ words, plane
+    /// cache, IDAC bows, calibration registers, GRNG cell parameters).
+    pub fn bytes_shared(&self) -> usize {
+        self.mu.len() * std::mem::size_of::<MuWord>()
+            + self.sigma.len() * std::mem::size_of::<SigmaWord>()
+            + self.idacs.len() * std::mem::size_of::<Idac>()
+            + (self.adc_offset_cal.len() + self.grng_offset_cal.len())
+                * std::mem::size_of::<f64>()
+            + self.planes.as_ref().map_or(0, |p| p.bytes())
+            + self.bank.bytes_shared()
+    }
+
+    /// Bytes each replica of this tile owns privately: ε buffers, ADC
+    /// noise streams, GRNG lane states, scratch. O(ε buffers + streams),
+    /// not O(weights) — the point of the shared layer.
+    pub fn bytes_private(&self) -> usize {
+        (self.eps_t.len() + self.eps_spare.len()) * std::mem::size_of::<f64>()
+            + self.adcs.len() * std::mem::size_of::<SarAdc>()
+            + (self.scratch.drives.capacity() + self.scratch.row_terms.capacity())
+                * std::mem::size_of::<f64>()
+            + self.bank.bytes_private()
+    }
+
+    /// True when `other` shares this tile's immutable layer by pointer
+    /// identity (the replica-fan-out invariant pinned by tests): same μ/σ
+    /// word allocations, IDACs, calibration tables, plane cache, and GRNG
+    /// cell parameters.
+    pub fn shares_statics_with(&self, other: &CimTile) -> bool {
+        Arc::ptr_eq(&self.mu, &other.mu)
+            && Arc::ptr_eq(&self.sigma, &other.sigma)
+            && Arc::ptr_eq(&self.idacs, &other.idacs)
+            && Arc::ptr_eq(&self.adc_offset_cal, &other.adc_offset_cal)
+            && Arc::ptr_eq(&self.grng_offset_cal, &other.grng_offset_cal)
+            && match (&self.planes, &other.planes) {
+                (Some(a), Some(b)) => Arc::ptr_eq(a, b),
+                (None, None) => true,
+                _ => false,
+            }
+            && self.bank.shares_params_with(&other.bank)
+    }
+
     /// Install the calibrated per-cell ε₀ registers (len = rows × words,
     /// row-major). The canonical setter used by the calibration
     /// controller; the registers are read live by every MVM, so no plane
     /// invalidation is needed.
     pub fn set_grng_offset_cal(&mut self, est: &[f64]) {
         assert_eq!(est.len(), self.grng_offset_cal.len());
-        self.grng_offset_cal.copy_from_slice(est);
+        Arc::make_mut(&mut self.grng_offset_cal).copy_from_slice(est);
+    }
+
+    /// Copy-on-write access to the ADC offset registers (calibration
+    /// controller only): in-place during bring-up, a private copy if any
+    /// replica still shares the old table.
+    pub fn adc_offset_cal_mut(&mut self) -> &mut [f64] {
+        Arc::make_mut(&mut self.adc_offset_cal)
+    }
+
+    /// Copy-on-write access to the GRNG ε₀ registers (calibration).
+    pub fn grng_offset_cal_mut(&mut self) -> &mut [f64] {
+        Arc::make_mut(&mut self.grng_offset_cal)
     }
 
     /// ADC LSB size of the σε path in charge units (calibration math).
@@ -1199,5 +1295,41 @@ mod tests {
         c.reseed_streams(0xFEED);
         c.refresh_epsilon();
         assert_eq!(b.last_epsilon(), c.last_epsilon());
+    }
+
+    #[test]
+    fn clone_shares_immutable_layer_and_cow_detaches_it() {
+        let mut tile = make_tile();
+        random_program(&mut tile, 41, 8.0);
+        crate::cim::calibration::calibrate(&mut tile, 8, 2).unwrap();
+        tile.warm_planes();
+        let mut replica = tile.clone();
+        // The clone shares every static plane by pointer identity and
+        // owns only stream-sized private state.
+        assert!(tile.shares_statics_with(&replica));
+        assert!(
+            replica.bytes_private() < tile.bytes_shared(),
+            "private {} must be smaller than shared {}",
+            replica.bytes_private(),
+            tile.bytes_shared()
+        );
+        // Reseeding streams must not detach the shared layer…
+        replica.reseed_streams(0xABCD);
+        assert!(tile.shares_statics_with(&replica));
+        // …and MVMs on the shared planes stay bit-identical to a private
+        // deep copy of the same die (the pre-split behavior).
+        let x = random_input(&tile, 3);
+        let det = MvmOptions {
+            bayesian: false,
+            refresh_epsilon: false,
+            ideal_analog: true,
+        };
+        assert_eq!(tile.mvm(&x, det).mu, replica.mvm(&x, det).mu);
+        // A word write copies-on-write: the writer detaches, the other
+        // replica keeps reading the original planes.
+        let before = tile.mu_value(0, 0);
+        replica.program(0, 0, 100.0, 1.0);
+        assert!(!tile.shares_statics_with(&replica));
+        assert_eq!(tile.mu_value(0, 0), before, "CoW must not leak into peers");
     }
 }

@@ -10,7 +10,7 @@ use crate::config::{Backend, Config};
 use crate::coordinator::epsilon::EpsilonSupply;
 use crate::coordinator::server::{Coordinator, EngineFactory, SourceFactory};
 use crate::fault::FaultPlan;
-use crate::runtime::{CimEngine, EpsilonMode, InferenceEngine, SimEngine};
+use crate::runtime::{CimEngine, EpsilonMode, InferenceEngine, SharedModelCache, SimEngine};
 use std::sync::Arc;
 
 /// Fluent configuration of a [`Coordinator`] pool. Build with
@@ -51,6 +51,30 @@ impl CoordinatorBuilder {
     /// `(die_seed, workers, mc_workers)`.
     pub fn mc_workers(mut self, n: usize) -> Self {
         self.cfg.server.mc_workers = n;
+        self
+    }
+
+    /// Elastic capacity (overrides `cfg.server.elastic`): autoscale each
+    /// shard's MC-replica pool between `min_mc_workers` and
+    /// `max_mc_workers` against queue depth, with idle-time work
+    /// stealing between shards. Trades the bit-identical replay contract
+    /// for a banded one — see DESIGN.md §10.
+    pub fn elastic(mut self, on: bool) -> Self {
+        self.cfg.server.elastic = on;
+        self
+    }
+
+    /// Elastic floor for the per-shard replica pool (overrides
+    /// `cfg.server.min_mc_workers`).
+    pub fn min_mc_workers(mut self, n: usize) -> Self {
+        self.cfg.server.min_mc_workers = n;
+        self
+    }
+
+    /// Elastic ceiling for the per-shard replica pool (overrides
+    /// `cfg.server.max_mc_workers`).
+    pub fn max_mc_workers(mut self, n: usize) -> Self {
+        self.cfg.server.max_mc_workers = n;
         self
     }
 
@@ -184,8 +208,14 @@ fn default_engine_factory(cfg: &Config) -> Result<EngineFactory, ServeError> {
         }
         Backend::Cim => {
             let cfg = cfg.clone();
+            // One calibrated-model cache per pool: the boot-time builds
+            // populate it, and supervisor respawns clone from it instead
+            // of re-running bring-up — Arc-sharing the weight/calibration
+            // layer while staying bit-identical to a cold boot.
+            let cache = SharedModelCache::new();
             Ok(Arc::new(move |shard| {
-                Ok(Box::new(CimEngine::for_shard(&cfg, shard)) as Box<dyn InferenceEngine>)
+                Ok(Box::new(CimEngine::for_shard_cached(&cfg, shard, &cache))
+                    as Box<dyn InferenceEngine>)
             }))
         }
         #[cfg(feature = "pjrt")]

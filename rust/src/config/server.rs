@@ -1,6 +1,6 @@
 //! Serving / coordinator configuration.
 
-use super::{f64_field, string_field, u64_field, usize_field};
+use super::{bool_field, f64_field, string_field, u64_field, usize_field};
 use crate::error::{Error, Result};
 use crate::util::json::Json;
 
@@ -65,6 +65,23 @@ pub struct ServerConfig {
     /// bit-identical for a fixed `(die_seed, workers, mc_workers)` — a
     /// *fixed* default (never host CPU count) keeps replay portable.
     pub mc_workers: usize,
+    /// Elastic capacity: when true the dispatcher autoscales each
+    /// shard's MC-replica pool between `min_mc_workers` and
+    /// `max_mc_workers` against queue depth, and idle shard workers
+    /// steal queued batches from overloaded peers. Replica clones share
+    /// the calibrated weight/calibration layer behind `Arc`s, so a scale
+    /// event costs O(ε buffers), not O(weights). Default OFF: the static
+    /// pool keeps the bit-identical replay contract on
+    /// `(die_seed, workers, mc_workers)`. With elasticity ON the result
+    /// *distribution* is unchanged (every replica stream is a fixed
+    /// function of its index) but slot→replica assignment follows load,
+    /// so replay is banded, not bitwise — see DESIGN.md §10.
+    pub elastic: bool,
+    /// Elastic floor for the per-shard MC-replica pool (≥ 1).
+    pub min_mc_workers: usize,
+    /// Elastic ceiling for the per-shard MC-replica pool
+    /// (≥ `mc_workers` ≥ `min_mc_workers`).
+    pub max_mc_workers: usize,
     /// Per-request deadline \[ms\]; exceeded requests are rejected.
     pub request_timeout_ms: f64,
     /// Network-edge listen address (`host:port`; port 0 = ephemeral).
@@ -108,6 +125,9 @@ impl Default for ServerConfig {
             workers: 1,
             max_mc_samples: 256,
             mc_workers: 4,
+            elastic: false,
+            min_mc_workers: 1,
+            max_mc_workers: 8,
             request_timeout_ms: 1000.0,
             listen: String::new(),
             edge_threads: 4,
@@ -136,6 +156,9 @@ impl ServerConfig {
         usize_field(doc, "workers", &mut self.workers)?;
         usize_field(doc, "max_mc_samples", &mut self.max_mc_samples)?;
         usize_field(doc, "mc_workers", &mut self.mc_workers)?;
+        bool_field(doc, "elastic", &mut self.elastic)?;
+        usize_field(doc, "min_mc_workers", &mut self.min_mc_workers)?;
+        usize_field(doc, "max_mc_workers", &mut self.max_mc_workers)?;
         f64_field(doc, "request_timeout_ms", &mut self.request_timeout_ms)?;
         string_field(doc, "listen", &mut self.listen)?;
         usize_field(doc, "edge_threads", &mut self.edge_threads)?;
@@ -168,6 +191,14 @@ impl ServerConfig {
         }
         if self.mc_workers == 0 {
             return Err(Error::Config("server: mc_workers must be > 0".into()));
+        }
+        if self.min_mc_workers == 0
+            || self.min_mc_workers > self.mc_workers
+            || self.mc_workers > self.max_mc_workers
+        {
+            return Err(Error::Config(
+                "server: need 1 <= min_mc_workers <= mc_workers <= max_mc_workers".into(),
+            ));
         }
         if self.batch_deadline_ms < 0.0 || self.request_timeout_ms <= 0.0 {
             return Err(Error::Config("server: invalid timeouts".into()));

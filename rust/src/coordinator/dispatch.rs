@@ -40,23 +40,33 @@ use crate::bayes::{aggregate_mc, UncertaintyReport};
 use crate::client::ServeError;
 use crate::config::Config;
 use crate::coordinator::batch::{effective_t, pack_images, plan_calls, scatter_features, Batch};
+use crate::coordinator::elastic::{ElasticCtx, IDLE_TICK, IDLE_TICKS_PER_DECAY, SCALE_UP_DEPTH};
 use crate::coordinator::epsilon::EpsilonSource;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{InferRequest, InferResponse, Reply};
 use crate::coordinator::supervisor::{recover_batch, InFlight, ShardHealth, ShardTable, WorkerCtx};
-use crate::runtime::{ArtifactSpec, EpsilonMode, InferenceEngine};
+use crate::runtime::{EpsilonMode, InferenceEngine, Manifest};
 use crate::util::threadpool::Bounded;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Front-end loop: runs until the request queue closes, then closes every
 /// shard queue behind itself so the workers drain and exit.
+///
+/// In elastic mode the dispatcher doubles as the scale-up half of the
+/// autoscaler: whenever the admission queue is still backed up after a
+/// batch was assembled, it raises every shard's replica target one step
+/// toward `server.max_mc_workers` (workers apply the target at their
+/// next batch boundary). Scale-*down* lives in the workers — only they
+/// observe idleness, since an idle pool never reaches this loop.
 pub(crate) fn run_dispatcher(
     requests: Bounded<InferRequest>,
     table: Arc<ShardTable>,
     metrics: Metrics,
     max_batch: usize,
     deadline: Duration,
+    elastic: ElasticCtx,
+    max_mc_workers: usize,
 ) {
     let shards = table.shards().max(1);
     let mut next_batch_id: u64 = 0;
@@ -86,6 +96,15 @@ pub(crate) fn run_dispatcher(
             }
         }
         next_batch_id += 1;
+        // Scale-up check: requests still queued behind a full batch mean
+        // the pool is behind demand — raise the replica targets.
+        if elastic.enabled && requests.len() >= SCALE_UP_DEPTH {
+            for shard in 0..shards {
+                if elastic.raise_target(shard, max_mc_workers) {
+                    metrics.record_scale_up(shard);
+                }
+            }
+        }
         let target = ((next_batch_id - 1) % shards as u64) as usize;
         let mut pending = Some(Batch {
             id: next_batch_id,
@@ -133,13 +152,34 @@ pub(crate) fn run_dispatcher(
     table.close_all();
 }
 
-/// Per-shard metadata resolved once from the engine's manifest.
+/// Per-shard metadata resolved from the engine's manifest: only the
+/// scalars and input shapes the serve loop needs — the manifest and its
+/// `ArtifactSpec`s are never cloned.
 struct ShardPlan {
     art_batch: usize,
     pixels_per_img: usize,
     classes: usize,
-    feat_spec: ArtifactSpec,
-    head_spec: ArtifactSpec,
+    /// Input shape of the `features` entry (one input: pixels).
+    feat_shape: Vec<usize>,
+    /// Input shapes of the `head` entry (features [, ε_w, ε_b]).
+    head_shapes: Vec<Vec<usize>>,
+}
+
+impl ShardPlan {
+    fn from_manifest(m: &Manifest) -> Self {
+        let head = m.entry("head").expect("head entry");
+        Self {
+            art_batch: m.batch,
+            pixels_per_img: m.side * m.side,
+            classes: m.classes,
+            feat_shape: m.entry("features").expect("features entry").inputs[0].1.clone(),
+            head_shapes: head.inputs.iter().map(|(_, shape)| shape.clone()).collect(),
+        }
+    }
+
+    fn head_input_len(&self, i: usize) -> usize {
+        self.head_shapes[i].iter().product()
+    }
 }
 
 /// Worker loop: owns this shard's engine (and, for external-ε backends,
@@ -147,23 +187,66 @@ struct ShardPlan {
 /// served; on a transient engine error the worker recovers the batch in
 /// place (retry budget + original deadline), and on a panic the
 /// supervisor recovers it from the slot.
+///
+/// Batch boundaries are the control points: the worker checks the swap
+/// slot (model hot-swap, any mode) and the replica target (elastic mode)
+/// between batches, never mid-serve. In elastic mode an *idle* worker
+/// polls with a timeout so it can steal a queued batch from a backed-up
+/// peer, and decays its own replica pool toward `min_mc_workers` after
+/// sustained idleness.
 pub(crate) fn run_shard_worker(
     shard: usize,
     mut engine: Box<dyn InferenceEngine>,
+    mut engine_gen: u64,
     mut source: Option<Box<dyn EpsilonSource>>,
     batches: Bounded<Batch>,
     slot: InFlight,
     ctx: WorkerCtx,
 ) {
-    let manifest = engine.manifest().clone();
-    let plan = ShardPlan {
-        art_batch: manifest.batch,
-        pixels_per_img: manifest.side * manifest.side,
-        classes: manifest.classes,
-        feat_spec: manifest.entry("features").expect("features entry").clone(),
-        head_spec: manifest.entry("head").expect("head entry").clone(),
-    };
-    while let Some(batch) = batches.recv() {
+    let mut plan = ShardPlan::from_manifest(engine.manifest());
+    let mut idle_ticks = 0u32;
+    loop {
+        let batch = if ctx.elastic.enabled {
+            match batches.recv_timeout(IDLE_TICK) {
+                Ok(Some(b)) => {
+                    idle_ticks = 0;
+                    b
+                }
+                Ok(None) => {
+                    // Idle tick: steal from a backed-up healthy peer if
+                    // possible, otherwise decay toward the replica floor.
+                    if let Some(b) = ctx.table.try_steal(shard) {
+                        ctx.metrics.record_work_stolen(shard);
+                        idle_ticks = 0;
+                        b
+                    } else {
+                        idle_ticks += 1;
+                        if idle_ticks >= IDLE_TICKS_PER_DECAY {
+                            idle_ticks = 0;
+                            let floor = ctx.cfg.server.min_mc_workers.max(1);
+                            if ctx.elastic.lower_target(shard, floor) {
+                                ctx.metrics.record_scale_down(shard);
+                            }
+                            apply_replica_target(engine.as_mut(), shard, &ctx);
+                        }
+                        continue;
+                    }
+                }
+                // Queue closed and drained: normal exit.
+                Err(()) => break,
+            }
+        } else {
+            match batches.recv() {
+                Some(b) => b,
+                None => break,
+            }
+        };
+        maybe_swap_engine(&mut engine, &mut engine_gen, &mut source, &mut plan, shard, &ctx);
+        // Applied in *both* modes: in static mode the target only moves
+        // on an explicit `Coordinator::set_replica_target`, so this is a
+        // no-op on the replay path (and keeps the capacity gauges fresh
+        // across a model swap).
+        apply_replica_target(engine.as_mut(), shard, &ctx);
         // The guard is held across the whole serve: a panic inside
         // poisons the slot with the batch still parked, which is exactly
         // what the supervisor recovers (poison-tolerant lock there).
@@ -187,6 +270,82 @@ pub(crate) fn run_shard_worker(
         record_energy_counters(shard, engine.as_ref(), &source, &ctx.metrics);
         if served.is_err() {
             recover_batch(batch, shard, &ctx);
+        }
+    }
+}
+
+/// Bring the engine's replica pool to the shard's published target and
+/// refresh the capacity gauges. Growth replays the engine's boot-time
+/// per-index seed splits and shrink retires ledgers, so this is safe to
+/// call at every batch boundary (no-op when already at target).
+fn apply_replica_target(engine: &mut dyn InferenceEngine, shard: usize, ctx: &WorkerCtx) {
+    let want = ctx.elastic.target(shard);
+    if want != engine.replica_count() {
+        engine.set_replicas(want);
+    }
+    ctx.metrics.record_replicas(
+        shard,
+        engine.replica_count(),
+        engine.bytes_shared(),
+        engine.bytes_private(),
+    );
+}
+
+/// Flip to a newly published model if the swap generation moved
+/// (publish-drain-flip: the worker finished its previous batch, so the
+/// flip is never observed mid-request). The new engine is built in this
+/// thread — engines are not `Send` — and must be compatible with the
+/// pool: same ε contract as the supply allows, and an artifact batch no
+/// smaller than the current plan's (the dispatcher's fused batches are
+/// sized at boot). An incompatible or failing swap keeps the old model
+/// serving and consumes the generation so it is not retried every batch.
+fn maybe_swap_engine(
+    engine: &mut Box<dyn InferenceEngine>,
+    engine_gen: &mut u64,
+    source: &mut Option<Box<dyn EpsilonSource>>,
+    plan: &mut ShardPlan,
+    shard: usize,
+    ctx: &WorkerCtx,
+) {
+    if ctx.elastic.swap.generation() == *engine_gen {
+        return;
+    }
+    let (gen, factory) = ctx.elastic.swap.current();
+    match factory(shard) {
+        Ok(new_engine) => {
+            if new_engine.manifest().batch < plan.art_batch {
+                eprintln!(
+                    "[bnn-cim shard {shard}] model swap rejected: artifact batch {} < pool batch {} — keeping the old model",
+                    new_engine.manifest().batch,
+                    plan.art_batch
+                );
+                *engine_gen = gen;
+                return;
+            }
+            let new_source = match (new_engine.epsilon_mode(), ctx.supply.source_for(shard)) {
+                (EpsilonMode::InWord, _) => None,
+                (EpsilonMode::External, Some(s)) => Some(s),
+                (EpsilonMode::External, None) => {
+                    eprintln!(
+                        "[bnn-cim shard {shard}] model swap rejected: engine '{}' needs \
+                         external ε but the supply is in-word — keeping the old model",
+                        new_engine.name()
+                    );
+                    *engine_gen = gen;
+                    return;
+                }
+            };
+            *plan = ShardPlan::from_manifest(new_engine.manifest());
+            *engine = new_engine;
+            *source = new_source;
+            *engine_gen = gen;
+            ctx.metrics.record_model_swap(shard);
+        }
+        Err(e) => {
+            eprintln!(
+                "[bnn-cim shard {shard}] model swap failed: {e} — keeping the old model"
+            );
+            *engine_gen = gen;
         }
     }
 }
@@ -236,7 +395,7 @@ fn serve_batch(
 
     let exec_before = engine.executions();
     let energy_before = engine.energy_report().map(|r| r.total_j).unwrap_or(0.0);
-    let feats = match engine.run("features", &[(&packed, &plan.feat_spec.inputs[0].1)]) {
+    let feats = match engine.run("features", &[(&packed, &plan.feat_shape)]) {
         Ok(f) => f,
         Err(e) => {
             eprintln!("[bnn-cim shard {shard}] features execution failed: {e}");
@@ -252,8 +411,8 @@ fn serve_batch(
         (Vec::new(), Vec::new())
     } else {
         (
-            vec![0.0f32; plan.head_spec.input_len(1)],
-            vec![0.0f32; plan.head_spec.input_len(2)],
+            vec![0.0f32; plan.head_input_len(1)],
+            vec![0.0f32; plan.head_input_len(2)],
         )
     };
     let mut packed_feats = vec![0.0f32; feats.len()];
@@ -261,7 +420,7 @@ fn serve_batch(
     for owners in plan_calls(reqs.len(), t, plan.art_batch) {
         scatter_features(&feats, &owners, feat_dim, &mut packed_feats);
         let result = if in_word {
-            engine.run("head", &[(&packed_feats, &plan.head_spec.inputs[0].1)])
+            engine.run("head", &[(&packed_feats, &plan.head_shapes[0])])
         } else {
             // Fresh ε for every call (each slot is an independent MC pass).
             let src = source
@@ -272,9 +431,9 @@ fn serve_batch(
             engine.run(
                 "head",
                 &[
-                    (&packed_feats, &plan.head_spec.inputs[0].1),
-                    (&eps1, &plan.head_spec.inputs[1].1),
-                    (&eps2, &plan.head_spec.inputs[2].1),
+                    (&packed_feats, &plan.head_shapes[0]),
+                    (&eps1, &plan.head_shapes[1]),
+                    (&eps2, &plan.head_shapes[2]),
                 ],
             )
         };

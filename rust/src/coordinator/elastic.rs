@@ -1,0 +1,189 @@
+//! Elastic-capacity shared state (DESIGN.md §10).
+//!
+//! Two control surfaces live here, both written by control-plane actors
+//! and *applied* by shard workers at batch boundaries (engines are not
+//! `Send`, so only the owning worker thread may touch one):
+//!
+//! - [`SwapState`] — the publish-drain-flip slot for online model
+//!   hot-swap. `Coordinator::swap_model` publishes a new engine factory
+//!   and bumps the generation; each worker notices the bump between
+//!   batches, builds the new engine *in its own thread*, and flips. A
+//!   batch is always served end-to-end by one engine instance, so no
+//!   caller ever observes a torn model.
+//! - [`ElasticCtx::targets`] — per-shard MC-replica targets. The
+//!   dispatcher raises them under queue pressure; idle workers decay
+//!   them toward `server.min_mc_workers`. Workers apply the target with
+//!   `InferenceEngine::set_replicas`, which is O(ε buffers) because the
+//!   replica clone shares the calibrated weight/calibration layer behind
+//!   `Arc`s (copy-on-calibrate — see `cim::tile`).
+//!
+//! Determinism: with `server.elastic = false` (the default) none of this
+//! machinery runs on the serve path and replay stays bit-identical for a
+//! fixed `(die_seed, workers, mc_workers)`. With elasticity on, every
+//! replica stream is still a fixed function of its index (regrowth
+//! replays the boot-time seed split), but slot→replica assignment and
+//! batch→shard routing follow load — the contract is banded (same result
+//! *distribution*), not bitwise.
+
+use crate::coordinator::server::EngineFactory;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+/// Idle-poll period of an elastic shard worker: how often an idle worker
+/// wakes to steal work or decay its replica pool.
+pub(crate) const IDLE_TICK: Duration = Duration::from_millis(5);
+
+/// Consecutive empty idle ticks before a worker lowers its replica
+/// target one step toward `server.min_mc_workers` (~25 ms of idleness
+/// per step at [`IDLE_TICK`]).
+pub(crate) const IDLE_TICKS_PER_DECAY: u32 = 5;
+
+/// Admission-queue depth at which the dispatcher raises every shard's
+/// replica target one step toward `server.max_mc_workers`: more requests
+/// waiting than the batch being routed means the pool is behind.
+pub(crate) const SCALE_UP_DEPTH: usize = 2;
+
+/// The model hot-swap slot: a generation counter plus the engine factory
+/// the generation refers to. Workers poll [`SwapState::generation`]
+/// (one atomic load) once per batch and only take the lock on a change.
+pub(crate) struct SwapState {
+    /// Mirror of the generation inside `inner`, readable without the
+    /// lock for the per-batch fast path.
+    gen: AtomicU64,
+    inner: Mutex<(u64, EngineFactory)>,
+}
+
+impl SwapState {
+    pub fn new(factory: EngineFactory) -> Self {
+        Self {
+            gen: AtomicU64::new(1),
+            inner: Mutex::new((1, factory)),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, (u64, EngineFactory)> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.gen.load(Ordering::Acquire)
+    }
+
+    /// The current `(generation, factory)` pair, read atomically under
+    /// the lock (so a worker never pairs a new factory with an old
+    /// generation or vice versa).
+    pub fn current(&self) -> (u64, EngineFactory) {
+        let g = self.lock();
+        (g.0, Arc::clone(&g.1))
+    }
+
+    /// Publish a new factory and return the new generation. Workers flip
+    /// at their next batch boundary; supervisor respawns also build from
+    /// the published factory, so a shard restarted after a swap comes
+    /// back on the new model.
+    pub fn publish(&self, factory: EngineFactory) -> u64 {
+        let mut g = self.lock();
+        g.0 += 1;
+        g.1 = factory;
+        self.gen.store(g.0, Ordering::Release);
+        g.0
+    }
+}
+
+/// Shared elastic-control state, cloned into the dispatcher and every
+/// shard worker context.
+#[derive(Clone)]
+pub(crate) struct ElasticCtx {
+    /// `server.elastic`: gates autoscaling, idle decay, and stealing.
+    /// Model hot-swap works in both modes.
+    pub enabled: bool,
+    pub swap: Arc<SwapState>,
+    /// Per-shard MC-replica targets (indexed by shard).
+    pub targets: Arc<Vec<AtomicUsize>>,
+}
+
+impl ElasticCtx {
+    pub fn new(enabled: bool, shards: usize, initial_target: usize, factory: EngineFactory) -> Self {
+        Self {
+            enabled,
+            swap: Arc::new(SwapState::new(factory)),
+            targets: Arc::new((0..shards).map(|_| AtomicUsize::new(initial_target)).collect()),
+        }
+    }
+
+    pub fn target(&self, shard: usize) -> usize {
+        self.targets[shard].load(Ordering::Relaxed)
+    }
+
+    /// Force a shard's target to `n` (operator override / tests); the
+    /// owning worker applies it at its next batch boundary or idle tick.
+    pub fn set_target(&self, shard: usize, n: usize) {
+        self.targets[shard].store(n.max(1), Ordering::Relaxed);
+    }
+
+    /// Raise the target one step toward `max`; true if it moved.
+    pub fn raise_target(&self, shard: usize, max: usize) -> bool {
+        self.targets[shard]
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |t| {
+                (t < max).then_some(t + 1)
+            })
+            .is_ok()
+    }
+
+    /// Lower the target one step toward `min`; true if it moved.
+    pub fn lower_target(&self, shard: usize, min: usize) -> bool {
+        self.targets[shard]
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |t| {
+                (t > min).then_some(t - 1)
+            })
+            .is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{InferenceEngine, SimEngine};
+
+    fn noop_factory() -> EngineFactory {
+        Arc::new(|_shard| {
+            Ok(Box::new(SimEngine::new(1, 4, 2, 2, 7)) as Box<dyn InferenceEngine>)
+        })
+    }
+
+    #[test]
+    fn swap_publish_bumps_generation_and_swaps_factory() {
+        let swap = SwapState::new(noop_factory());
+        assert_eq!(swap.generation(), 1);
+        let (g, f) = swap.current();
+        assert_eq!(g, 1);
+        assert!(f(0).is_ok());
+        let g2 = swap.publish(noop_factory());
+        assert_eq!(g2, 2);
+        assert_eq!(swap.generation(), 2);
+        let (g, _) = swap.current();
+        assert_eq!(g, 2);
+    }
+
+    #[test]
+    fn targets_move_stepwise_within_bounds() {
+        let ctx = ElasticCtx::new(true, 2, 4, noop_factory());
+        assert_eq!(ctx.target(0), 4);
+        assert!(ctx.raise_target(0, 8));
+        assert_eq!(ctx.target(0), 5);
+        // Clamped at the ceiling.
+        ctx.set_target(0, 8);
+        assert!(!ctx.raise_target(0, 8));
+        // Decay steps down to the floor and stops.
+        assert!(ctx.lower_target(0, 1));
+        assert_eq!(ctx.target(0), 7);
+        ctx.set_target(0, 1);
+        assert!(!ctx.lower_target(0, 1));
+        // Shard 1 untouched throughout.
+        assert_eq!(ctx.target(1), 4);
+        // set_target clamps to >= 1.
+        ctx.set_target(1, 0);
+        assert_eq!(ctx.target(1), 1);
+    }
+}

@@ -82,6 +82,25 @@ pub struct ShardSnapshot {
     /// `epsilon_sa_per_s` (0 until two increasing records, ~30 s decay).
     /// The live counterpart of the paper's 102 GOp/s peak throughput.
     pub engine_ops_per_s: f64,
+    /// Gauge: MC replicas currently live in this shard's engine (the
+    /// elastic pool size; `server.mc_workers` when static).
+    pub replicas_active: usize,
+    /// Gauge: bytes of the engine's Arc-shared immutable layer (μ/σ
+    /// words, digit planes, calibration tables, GRNG parameter lanes) —
+    /// counted once regardless of replica count.
+    pub bytes_shared: usize,
+    /// Gauge: bytes of per-replica private state (ε buffers, stream
+    /// state, scratch) summed over live replicas.
+    pub bytes_private: usize,
+    /// Autoscaler raised this shard's replica target (queue pressure).
+    pub scale_up: u64,
+    /// This shard's worker decayed its replica target (sustained idle).
+    pub scale_down: u64,
+    /// Batches this shard's idle worker stole from a backed-up peer.
+    pub work_stolen: u64,
+    /// Times this shard flipped to a newly published model
+    /// (`Coordinator::swap_model`, publish-drain-flip).
+    pub model_swaps: u64,
 }
 
 impl ShardSnapshot {
@@ -157,6 +176,21 @@ pub struct MetricsSnapshot {
     pub engine_ops: u64,
     /// Aggregate measured engine compute rate across shards [Op/s].
     pub engine_ops_per_s: f64,
+    /// Gauge: live MC replicas across all shards.
+    pub replicas_active: usize,
+    /// Gauge: Arc-shared immutable bytes across all shards (each shard's
+    /// layer counted once, however many replicas share it).
+    pub bytes_shared: usize,
+    /// Gauge: per-replica private bytes across all shards.
+    pub bytes_private: usize,
+    /// Scale-up events across all shards.
+    pub scale_up: u64,
+    /// Scale-down events across all shards.
+    pub scale_down: u64,
+    /// Batches stolen between shard queues (elastic work stealing).
+    pub work_stolen: u64,
+    /// Model hot-swap flips across all shards.
+    pub model_swaps: u64,
     pub latency_p50_ms: f64,
     pub latency_p95_ms: f64,
     pub latency_max_ms: f64,
@@ -242,6 +276,20 @@ impl MetricsSnapshot {
                 self.engine_j_per_op() * 1e15,
             ));
         }
+        // Elastic capacity: always-on like the fault line, so operators
+        // see the live pool shape (and the shared-vs-private footprint
+        // split that makes replica scaling cheap) at a glance.
+        out.push_str(&format!(
+            "\nelastic replicas={} shared={} B private={} B scale_up={} scale_down={} \
+             stolen={} swaps={}",
+            self.replicas_active,
+            self.bytes_shared,
+            self.bytes_private,
+            self.scale_up,
+            self.scale_down,
+            self.work_stolen,
+            self.model_swaps,
+        ));
         // Always-on gap to the paper's Tab. II throughput headlines, so
         // every render answers "how far is software from the silicon".
         out.push_str(&format!(
@@ -276,6 +324,15 @@ impl MetricsSnapshot {
                     out.push_str(&format!(
                         " restarts={} retried={} failed={}",
                         s.shard_restarts, s.requests_retried, s.requests_failed_shard
+                    ));
+                }
+                if s.replicas_active > 0 {
+                    out.push_str(&format!(" replicas={}", s.replicas_active));
+                }
+                if s.scale_up + s.scale_down + s.work_stolen + s.model_swaps > 0 {
+                    out.push_str(&format!(
+                        " scale_up={} scale_down={} stolen={} swaps={}",
+                        s.scale_up, s.scale_down, s.work_stolen, s.model_swaps
                     ));
                 }
                 if s.engine_energy_j > 0.0 {
@@ -325,6 +382,13 @@ struct ShardInner {
     engine_ops_per_s: f64,
     /// (when, total ops) of the last engine record — the delta base.
     engine_last: Option<(std::time::Instant, u64)>,
+    replicas_active: usize,
+    bytes_shared: usize,
+    bytes_private: usize,
+    scale_up: u64,
+    scale_down: u64,
+    work_stolen: u64,
+    model_swaps: u64,
 }
 
 struct Inner {
@@ -492,6 +556,41 @@ impl Metrics {
         s.engine_ops = ops;
     }
 
+    /// Capacity gauges for one shard: live replica count plus the
+    /// shared/private byte split of its engine. Overwrites, not adds —
+    /// the worker re-records at every batch boundary and on scale
+    /// events, so the gauges track the pool's current shape.
+    pub fn record_replicas(&self, shard: usize, active: usize, shared: usize, private: usize) {
+        let mut g = self.inner.lock().unwrap();
+        let s = &mut g.shards[shard];
+        s.replicas_active = active;
+        s.bytes_shared = shared;
+        s.bytes_private = private;
+    }
+
+    /// The autoscaler raised this shard's replica target (queue
+    /// pressure; dispatcher side).
+    pub fn record_scale_up(&self, shard: usize) {
+        self.inner.lock().unwrap().shards[shard].scale_up += 1;
+    }
+
+    /// This shard's worker decayed its replica target after sustained
+    /// idleness.
+    pub fn record_scale_down(&self, shard: usize) {
+        self.inner.lock().unwrap().shards[shard].scale_down += 1;
+    }
+
+    /// This shard's idle worker stole a queued batch from a backed-up
+    /// peer (attributed to the *thief*).
+    pub fn record_work_stolen(&self, shard: usize) {
+        self.inner.lock().unwrap().shards[shard].work_stolen += 1;
+    }
+
+    /// This shard flipped to a newly published model (hot swap).
+    pub fn record_model_swap(&self, shard: usize) {
+        self.inner.lock().unwrap().shards[shard].model_swaps += 1;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         let mut lat = g.latencies_ms.clone();
@@ -541,6 +640,13 @@ impl Metrics {
                     }
                     _ => 0.0,
                 },
+                replicas_active: s.replicas_active,
+                bytes_shared: s.bytes_shared,
+                bytes_private: s.bytes_private,
+                scale_up: s.scale_up,
+                scale_down: s.scale_down,
+                work_stolen: s.work_stolen,
+                model_swaps: s.model_swaps,
             })
             .collect();
         let batches: u64 = per_shard.iter().map(|s| s.batches).sum();
@@ -565,6 +671,13 @@ impl Metrics {
             engine_mvms: per_shard.iter().map(|s| s.engine_mvms).sum(),
             engine_ops: per_shard.iter().map(|s| s.engine_ops).sum(),
             engine_ops_per_s: per_shard.iter().map(|s| s.engine_ops_per_s).sum(),
+            replicas_active: per_shard.iter().map(|s| s.replicas_active).sum(),
+            bytes_shared: per_shard.iter().map(|s| s.bytes_shared).sum(),
+            bytes_private: per_shard.iter().map(|s| s.bytes_private).sum(),
+            scale_up: per_shard.iter().map(|s| s.scale_up).sum(),
+            scale_down: per_shard.iter().map(|s| s.scale_down).sum(),
+            work_stolen: per_shard.iter().map(|s| s.work_stolen).sum(),
+            model_swaps: per_shard.iter().map(|s| s.model_swaps).sum(),
             latency_p50_ms: pct(0.50),
             latency_p95_ms: pct(0.95),
             latency_max_ms: lat.last().copied().unwrap_or(0.0),
@@ -685,6 +798,42 @@ mod tests {
         // A quiet registry still renders the fault line (zeros).
         let quiet = Metrics::new(1).snapshot().render();
         assert!(quiet.contains("faults restarts=0 retried=0 failed_shard=0"), "{quiet}");
+    }
+
+    #[test]
+    fn elastic_gauges_overwrite_and_counters_accumulate() {
+        let m = Metrics::new(2);
+        // Gauges overwrite: the second record is the live pool shape.
+        m.record_replicas(0, 4, 10_000, 800);
+        m.record_replicas(0, 2, 10_000, 400);
+        m.record_replicas(1, 3, 10_000, 600);
+        m.record_scale_up(0);
+        m.record_scale_up(1);
+        m.record_scale_down(0);
+        m.record_work_stolen(1);
+        m.record_model_swap(0);
+        m.record_model_swap(1);
+        let s = m.snapshot();
+        assert_eq!(s.replicas_active, 5);
+        assert_eq!(s.bytes_shared, 20_000);
+        assert_eq!(s.bytes_private, 1000);
+        assert_eq!(s.scale_up, 2);
+        assert_eq!(s.scale_down, 1);
+        assert_eq!(s.work_stolen, 1);
+        assert_eq!(s.model_swaps, 2);
+        assert_eq!(s.per_shard[0].replicas_active, 2);
+        assert_eq!(s.per_shard[0].bytes_private, 400);
+        assert_eq!(s.per_shard[1].work_stolen, 1);
+        let r = s.render();
+        assert!(
+            r.contains("elastic replicas=5") && r.contains("stolen=1 swaps=2"),
+            "{r}"
+        );
+        // Per-shard render line surfaces the pool and its scale events.
+        assert!(r.contains("replicas=2 scale_up=1 scale_down=1"), "{r}");
+        // A quiet registry still renders the elastic line (zeros).
+        let quiet = Metrics::new(1).snapshot().render();
+        assert!(quiet.contains("elastic replicas=0"), "{quiet}");
     }
 
     #[test]

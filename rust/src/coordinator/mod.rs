@@ -9,6 +9,8 @@
 //! Module layout:
 //! - [`batch`] — pure batch-assembly / slot-packing cores (no I/O).
 //! - `dispatch` — the dispatcher and shard-worker loops (private).
+//! - `elastic` — hot-swap slot + per-shard replica targets (private;
+//!   DESIGN.md §10).
 //! - [`server`] — the [`Coordinator`] handle (boot/admission/shutdown).
 //! - [`supervisor`] — shard health, worker respawn, batch recovery
 //!   (DESIGN.md §9; the public face is [`ShardHealth`]).
@@ -17,6 +19,7 @@
 
 pub mod batch;
 mod dispatch;
+mod elastic;
 pub mod epsilon;
 pub mod metrics;
 pub mod request;

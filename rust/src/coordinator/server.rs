@@ -35,6 +35,7 @@ use crate::client::{Infer, ServeError};
 use crate::config::{Backend, Config};
 use crate::coordinator::batch::Batch;
 use crate::coordinator::dispatch::run_dispatcher;
+use crate::coordinator::elastic::ElasticCtx;
 use crate::coordinator::epsilon::{EpsilonSource, EpsilonSupply};
 use crate::coordinator::metrics::{Metrics, MetricsSnapshot};
 use crate::coordinator::request::{InferRequest, InferResponse, RejectReason, Reply};
@@ -66,6 +67,7 @@ pub struct Coordinator {
     table: Arc<ShardTable>,
     metrics: Metrics,
     cfg: Config,
+    elastic: ElasticCtx,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     supervisor: Option<std::thread::JoinHandle<()>>,
     supervisor_tx: Sender<SupervisorMsg>,
@@ -91,16 +93,33 @@ impl Coordinator {
         let shard_queues: Vec<Bounded<Batch>> = (0..shards).map(|_| Bounded::new(2)).collect();
         let slots: Vec<InFlight> = (0..shards).map(|_| InFlight::default()).collect();
         let metrics = Metrics::new(shards);
+        // The table is built *before* the workers so it can ride inside
+        // WorkerCtx: elastic workers steal queued batches from peers
+        // through it.
+        let table = Arc::new(ShardTable::new(shard_queues));
+
+        // Elastic control plane: the hot-swap slot (owns the engine
+        // factory — workers and supervisor respawns both build from the
+        // published factory) plus per-shard replica targets, seeded at
+        // the static pool size.
+        let elastic = ElasticCtx::new(
+            cfg.server.elastic,
+            shards,
+            cfg.server.mc_workers.max(1),
+            make_engine,
+        );
 
         // Everything a (re)spawn needs, kept by the supervisor for the
         // pool's lifetime so a restarted shard is built from the same
-        // factory/supply/config as at boot.
+        // factory/supply/config as at boot (or the swapped-in factory,
+        // if a model swap was published since).
         let ctx = WorkerCtx {
-            make_engine,
             supply,
             metrics: metrics.clone(),
             cfg: cfg.clone(),
             requests: requests.clone(),
+            elastic: elastic.clone(),
+            table: Arc::clone(&table),
         };
         let (exit_tx, exit_rx) = channel::<SupervisorMsg>();
 
@@ -112,7 +131,7 @@ impl Coordinator {
             let handle = spawn_shard_worker(
                 shard,
                 &ctx,
-                shard_queues[shard].clone(),
+                table.queue(shard),
                 slots[shard].clone(),
                 exit_tx.clone(),
                 ready_tx.clone(),
@@ -137,16 +156,13 @@ impl Coordinator {
         }
         if let Some(err) = failure {
             requests.close();
-            for q in &shard_queues {
-                q.close();
-            }
+            table.close_all();
             for w in workers {
                 let _ = w.join();
             }
             return Err(err);
         }
 
-        let table = Arc::new(ShardTable::new(shard_queues));
         let handles: Arc<Mutex<Vec<Option<std::thread::JoinHandle<()>>>>> =
             Arc::new(Mutex::new(workers.into_iter().map(Some).collect()));
         let shutting_down = Arc::new(AtomicBool::new(false));
@@ -158,9 +174,13 @@ impl Coordinator {
             let requests = requests.clone();
             let table = Arc::clone(&table);
             let metrics = metrics.clone();
+            let elastic = elastic.clone();
+            let max_mc = cfg.server.max_mc_workers.max(1);
             std::thread::Builder::new()
                 .name("bnn-cim-dispatcher".into())
-                .spawn(move || run_dispatcher(requests, table, metrics, max_batch, deadline))
+                .spawn(move || {
+                    run_dispatcher(requests, table, metrics, max_batch, deadline, elastic, max_mc)
+                })
                 .map_err(|e| Error::Coordinator(format!("spawn dispatcher: {e}")))?
         };
         // The supervisor owns the worker handles from here on: it joins
@@ -183,6 +203,7 @@ impl Coordinator {
             table,
             metrics,
             cfg,
+            elastic,
             dispatcher: Some(dispatcher),
             supervisor: Some(supervisor),
             supervisor_tx: exit_tx,
@@ -315,6 +336,44 @@ impl Coordinator {
     /// The resolved configuration this pool was booted with (read-only).
     pub fn config(&self) -> &Config {
         &self.cfg
+    }
+
+    /// Publish a new engine factory for online model hot-swap
+    /// (publish-drain-flip; DESIGN.md §10). Returns the new swap
+    /// generation. Each shard worker finishes the batch it is serving,
+    /// notices the generation bump at its next batch boundary, builds
+    /// the new engine *in its own thread*, and flips — no request is
+    /// ever served by a torn model and no downtime is taken. Supervisor
+    /// respawns also build from the published factory.
+    ///
+    /// Compatibility rules (violations keep the old model serving and
+    /// are logged): the new engine's artifact batch must not be smaller
+    /// than the pool's boot-time batch, and its ε mode must be
+    /// satisfiable by the pool's ε supply. Engine-owned energy/ε
+    /// counters restart from zero on the new engine; the metrics
+    /// registry keeps absolute totals, so cumulative counters simply
+    /// continue from the swap point.
+    pub fn swap_model(&self, factory: EngineFactory) -> u64 {
+        self.elastic.swap.publish(factory)
+    }
+
+    /// Force one shard's MC-replica target (operator override and the
+    /// deterministic escape hatch for tests). Clamped to
+    /// `[min_mc_workers, max_mc_workers]`; the owning worker applies it
+    /// at its next batch boundary or idle tick. With `server.elastic`
+    /// off the target is applied on the next served batch but never
+    /// drifts afterwards (no autoscaler is running).
+    pub fn set_replica_target(&self, shard: usize, n: usize) {
+        let lo = self.cfg.server.min_mc_workers.max(1);
+        let hi = self.cfg.server.max_mc_workers.max(lo);
+        self.elastic.set_target(shard, n.clamp(lo, hi));
+    }
+
+    /// The current MC-replica target for `shard` (what the autoscaler
+    /// or an operator override has asked for; the live count is the
+    /// `replicas_active` gauge in [`Coordinator::metrics`]).
+    pub fn replica_target(&self, shard: usize) -> usize {
+        self.elastic.target(shard)
     }
 
     /// Graceful shutdown: close the request queue, let the dispatcher

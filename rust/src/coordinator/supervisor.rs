@@ -26,10 +26,10 @@ use crate::client::ServeError;
 use crate::config::Config;
 use crate::coordinator::batch::Batch;
 use crate::coordinator::dispatch::run_shard_worker;
+use crate::coordinator::elastic::ElasticCtx;
 use crate::coordinator::epsilon::EpsilonSupply;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{InferRequest, Reply};
-use crate::coordinator::server::EngineFactory;
 use crate::error::{Error, Result};
 use crate::runtime::EpsilonMode;
 use crate::util::threadpool::Bounded;
@@ -147,6 +147,25 @@ impl ShardTable {
             entry.queue.close();
         }
     }
+
+    /// Work stealing (elastic mode): an idle worker takes one queued
+    /// batch from the first backed-up healthy peer, scanning round-robin
+    /// from its own index. The drain is atomic under the table lock, so
+    /// a batch is served exactly once — by whichever worker got it.
+    pub fn try_steal(&self, thief: usize) -> Option<Batch> {
+        let entries = self.lock();
+        let n = entries.len();
+        for k in 1..n {
+            let victim = (thief + k) % n;
+            if entries[victim].health != ShardHealth::Healthy {
+                continue;
+            }
+            if let Some(batch) = entries[victim].queue.drain_up_to(1).pop() {
+                return Some(batch);
+            }
+        }
+        None
+    }
 }
 
 /// The shard's in-flight slot: the worker parks each batch here while
@@ -172,13 +191,18 @@ impl InFlight {
 /// shard is built from the *same* factory/supply/config as at boot.
 #[derive(Clone)]
 pub(crate) struct WorkerCtx {
-    pub make_engine: EngineFactory,
     pub supply: EpsilonSupply,
     pub metrics: Metrics,
     pub cfg: Config,
     /// The admission queue: recovered requests are redelivered through
     /// the front door so normal routing applies to retries.
     pub requests: Bounded<InferRequest>,
+    /// Hot-swap slot + per-shard replica targets. The engine factory
+    /// lives in `elastic.swap`, so a worker (re)spawn always builds from
+    /// the most recently published model.
+    pub elastic: ElasticCtx,
+    /// The shard registry, for idle-time work stealing (elastic mode).
+    pub table: Arc<ShardTable>,
 }
 
 /// Wire format between worker drop guards / `Coordinator::stop` and the
@@ -229,7 +253,11 @@ pub(crate) fn spawn_shard_worker(
                 }
             }
             let _close_guard = CloseOnDrop(queue.clone());
-            let engine = match (ctx.make_engine)(shard) {
+            // Build from the swap slot's current factory: at boot this is
+            // the factory the pool started with; after a swap_model, a
+            // respawned shard comes back on the published model.
+            let (engine_gen, factory) = ctx.elastic.swap.current();
+            let engine = match factory(shard) {
                 Ok(e) => e,
                 Err(e) => {
                     let _ = ready_tx.send(Err(e.to_string()));
@@ -253,8 +281,16 @@ pub(crate) fn spawn_shard_worker(
                     return;
                 }
             };
+            // Initial capacity gauges, so metrics report the replica
+            // pool and its shared/private footprint before any traffic.
+            ctx.metrics.record_replicas(
+                shard,
+                engine.replica_count(),
+                engine.bytes_shared(),
+                engine.bytes_private(),
+            );
             let _ = ready_tx.send(Ok(engine.manifest().batch));
-            run_shard_worker(shard, engine, source, queue, slot, ctx);
+            run_shard_worker(shard, engine, engine_gen, source, queue, slot, ctx);
         })
         .map_err(|e| Error::Coordinator(format!("spawn shard {shard}: {e}")))
 }

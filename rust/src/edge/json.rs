@@ -153,6 +153,20 @@ fn shard_json(o: &mut String, s: &ShardSnapshot) {
     write_number(o, s.epsilon_fj_per_sample());
     push_key(o, false, "gop_per_s");
     write_number(o, s.gop_per_s());
+    push_key(o, false, "replicas_active");
+    write_number(o, s.replicas_active as f64);
+    push_key(o, false, "bytes_shared");
+    write_number(o, s.bytes_shared as f64);
+    push_key(o, false, "bytes_private");
+    write_number(o, s.bytes_private as f64);
+    push_key(o, false, "scale_up");
+    write_number(o, s.scale_up as f64);
+    push_key(o, false, "scale_down");
+    write_number(o, s.scale_down as f64);
+    push_key(o, false, "work_stolen");
+    write_number(o, s.work_stolen as f64);
+    push_key(o, false, "model_swaps");
+    write_number(o, s.model_swaps as f64);
     o.push('}');
 }
 
@@ -193,6 +207,20 @@ pub fn metrics_json(s: &MetricsSnapshot) -> String {
     write_number(&mut o, s.epsilon_gsa_per_s());
     push_key(&mut o, false, "gop_per_s");
     write_number(&mut o, s.gop_per_s());
+    push_key(&mut o, false, "replicas_active");
+    write_number(&mut o, s.replicas_active as f64);
+    push_key(&mut o, false, "bytes_shared");
+    write_number(&mut o, s.bytes_shared as f64);
+    push_key(&mut o, false, "bytes_private");
+    write_number(&mut o, s.bytes_private as f64);
+    push_key(&mut o, false, "scale_up");
+    write_number(&mut o, s.scale_up as f64);
+    push_key(&mut o, false, "scale_down");
+    write_number(&mut o, s.scale_down as f64);
+    push_key(&mut o, false, "work_stolen");
+    write_number(&mut o, s.work_stolen as f64);
+    push_key(&mut o, false, "model_swaps");
+    write_number(&mut o, s.model_swaps as f64);
     push_key(&mut o, false, "latency_p50_ms");
     write_number(&mut o, s.latency_p50_ms);
     push_key(&mut o, false, "latency_p95_ms");

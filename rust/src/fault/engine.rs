@@ -146,6 +146,26 @@ impl InferenceEngine for FaultyEngine {
     fn energy_report(&self) -> Option<EngineEnergyReport> {
         self.inner.energy_report()
     }
+
+    // Elastic capacity passes straight through: the decorator injects
+    // faults on the run path only, so scaling the wrapped engine's
+    // replica pool (and reading its footprint split) must behave exactly
+    // as it would bare.
+    fn replica_count(&self) -> usize {
+        self.inner.replica_count()
+    }
+
+    fn set_replicas(&mut self, n: usize) {
+        self.inner.set_replicas(n);
+    }
+
+    fn bytes_shared(&self) -> usize {
+        self.inner.bytes_shared()
+    }
+
+    fn bytes_private(&self) -> usize {
+        self.inner.bytes_private()
+    }
 }
 
 /// Wrap an engine factory so every shard's engine executes `plan`. The

@@ -43,6 +43,7 @@ use crate::config::{ChipConfig, GrngConfig};
 use crate::grng::circuit::{eps_fast_step, CellParams};
 use crate::grng::mismatch::DieVariation;
 use crate::util::rng::{ziggurat_normal, ziggurat_step, Rng64, SplitMix64, Xoshiro256, XoshiroLanes};
+use std::sync::Arc;
 
 /// Derive the die seed for shard `shard` of a sharded serving pool.
 ///
@@ -87,8 +88,10 @@ pub struct GrngBank {
     pub words: usize,
     /// Full per-cell params (AoS) — construction-time source of truth for
     /// the SoA lanes, metadata queries (offsets, energy, latency), and
-    /// the retained legacy sampler.
-    params: Vec<CellParams>,
+    /// the retained legacy sampler. Die physics, immutable after
+    /// construction: shared across MC replicas through the `Arc` (a
+    /// replica clone shares the die, reseeds only its streams).
+    params: Arc<Vec<CellParams>>,
     /// Per-cell sampling states in SoA lanes (state word k of every cell
     /// contiguous), shared by the block and legacy paths (interleaving
     /// them continues one stream per cell). The layout is what lets the
@@ -98,17 +101,18 @@ pub struct GrngBank {
     /// cell; no allocation on the hot path).
     bits_scratch: Vec<u64>,
     // ---- SoA hot lanes (copies of `params` fields, row-major) ----
-    diff_mean_s: Vec<f64>,
-    diff_sigma_s: Vec<f64>,
-    sigma_unit_s: Vec<f64>,
+    // Static per die, `Arc`-shared across replica clones like `params`.
+    diff_mean_s: Arc<Vec<f64>>,
+    diff_sigma_s: Arc<Vec<f64>>,
+    sigma_unit_s: Arc<Vec<f64>>,
     /// σ_unit lane in plane-major (`[word][row]`) order, so the
     /// plane-major normalization pass is contiguous too.
-    sigma_unit_t: Vec<f64>,
-    p_outlier: Vec<f64>,
-    outlier_scale_s: Vec<f64>,
+    sigma_unit_t: Arc<Vec<f64>>,
+    p_outlier: Arc<Vec<f64>>,
+    outlier_scale_s: Arc<Vec<f64>>,
     /// Flat indices of outlier-capable cells (p_outlier > 0) — the sparse
     /// second pass. Usually all cells (hot die) or none (p clamped to 0).
-    outlier_cells: Vec<u32>,
+    outlier_cells: Arc<Vec<u32>>,
     /// Total samples drawn (for energy/throughput accounting).
     samples_drawn: u64,
 }
@@ -129,16 +133,16 @@ impl GrngBank {
         let mut bank = Self {
             rows: die.rows,
             words: die.words,
-            params,
+            params: Arc::new(params),
             states,
             bits_scratch: Vec::new(),
-            diff_mean_s: Vec::new(),
-            diff_sigma_s: Vec::new(),
-            sigma_unit_s: Vec::new(),
-            sigma_unit_t: Vec::new(),
-            p_outlier: Vec::new(),
-            outlier_scale_s: Vec::new(),
-            outlier_cells: Vec::new(),
+            diff_mean_s: Arc::new(Vec::new()),
+            diff_sigma_s: Arc::new(Vec::new()),
+            sigma_unit_s: Arc::new(Vec::new()),
+            sigma_unit_t: Arc::new(Vec::new()),
+            p_outlier: Arc::new(Vec::new()),
+            outlier_scale_s: Arc::new(Vec::new()),
+            outlier_cells: Arc::new(Vec::new()),
             samples_drawn: 0,
         };
         bank.rebuild_lanes();
@@ -146,22 +150,27 @@ impl GrngBank {
     }
 
     /// Lower the AoS params into the contiguous SoA sampling lanes.
+    /// Construction-time only: the lanes are immutable die physics
+    /// afterwards, shared by every replica through their `Arc`s.
     fn rebuild_lanes(&mut self) {
         let n = self.params.len();
-        self.diff_mean_s = self.params.iter().map(|p| p.diff_mean_s).collect();
-        self.diff_sigma_s = self.params.iter().map(|p| p.diff_sigma_s).collect();
-        self.sigma_unit_s = self.params.iter().map(|p| p.sigma_unit_s).collect();
-        self.p_outlier = self.params.iter().map(|p| p.p_outlier).collect();
-        self.outlier_scale_s = self.params.iter().map(|p| p.outlier_scale_s).collect();
-        self.outlier_cells = (0..n as u32)
-            .filter(|&i| self.p_outlier[i as usize] > 0.0)
-            .collect();
-        self.sigma_unit_t = vec![0.0; n];
+        self.diff_mean_s = Arc::new(self.params.iter().map(|p| p.diff_mean_s).collect());
+        self.diff_sigma_s = Arc::new(self.params.iter().map(|p| p.diff_sigma_s).collect());
+        self.sigma_unit_s = Arc::new(self.params.iter().map(|p| p.sigma_unit_s).collect());
+        self.p_outlier = Arc::new(self.params.iter().map(|p| p.p_outlier).collect());
+        self.outlier_scale_s = Arc::new(self.params.iter().map(|p| p.outlier_scale_s).collect());
+        self.outlier_cells = Arc::new(
+            (0..n as u32)
+                .filter(|&i| self.p_outlier[i as usize] > 0.0)
+                .collect(),
+        );
+        let mut sigma_unit_t = vec![0.0; n];
         for r in 0..self.rows {
             for w in 0..self.words {
-                self.sigma_unit_t[w * self.rows + r] = self.sigma_unit_s[r * self.words + w];
+                sigma_unit_t[w * self.rows + r] = self.sigma_unit_s[r * self.words + w];
             }
         }
+        self.sigma_unit_t = Arc::new(sigma_unit_t);
     }
 
     /// Convenience: bank for the configured chip with its die seed.
@@ -208,7 +217,7 @@ impl GrngBank {
         // Pass 2: outlier-capable cells draw their uniform (keeping each
         // cell's sequence aligned with the scalar path); the heavy tail
         // itself is the rare branch.
-        for &cell in &self.outlier_cells {
+        for &cell in self.outlier_cells.iter() {
             let i = cell as usize;
             let mut st = self.states.lane(i);
             if st.next_f64() < self.p_outlier[i] {
@@ -270,7 +279,7 @@ impl GrngBank {
         // transposed (the 4 KB output stays cache-resident at tile scale).
         self.fill_gaussian_block(true, out);
         // Pass 2: sparse outliers, transposed targets.
-        for &cell in &self.outlier_cells {
+        for &cell in self.outlier_cells.iter() {
             let i = cell as usize;
             let t = (i % words) * rows + i / words;
             let mut st = self.states.lane(i);
@@ -361,6 +370,36 @@ impl GrngBank {
 
     pub fn samples_drawn(&self) -> u64 {
         self.samples_drawn
+    }
+
+    /// Bytes of die physics behind `Arc`s (cell params + SoA lanes) —
+    /// counted once per die no matter how many replicas share the bank.
+    pub fn bytes_shared(&self) -> usize {
+        self.params.len() * std::mem::size_of::<CellParams>()
+            + (self.diff_mean_s.len()
+                + self.diff_sigma_s.len()
+                + self.sigma_unit_s.len()
+                + self.sigma_unit_t.len()
+                + self.p_outlier.len()
+                + self.outlier_scale_s.len())
+                * std::mem::size_of::<f64>()
+            + self.outlier_cells.len() * std::mem::size_of::<u32>()
+    }
+
+    /// Bytes each replica owns privately: the Xoshiro state lanes (four
+    /// u64 words per cell) plus the uniform-sweep scratch.
+    pub fn bytes_private(&self) -> usize {
+        self.states.len() * 4 * std::mem::size_of::<u64>()
+            + self.bits_scratch.capacity() * std::mem::size_of::<u64>()
+    }
+
+    /// True when `other` shares this bank's die physics by pointer
+    /// identity (replica fan-out, not an independent die).
+    pub fn shares_params_with(&self, other: &GrngBank) -> bool {
+        Arc::ptr_eq(&self.params, &other.params)
+            && Arc::ptr_eq(&self.sigma_unit_s, &other.sigma_unit_s)
+            && Arc::ptr_eq(&self.sigma_unit_t, &other.sigma_unit_t)
+            && Arc::ptr_eq(&self.outlier_cells, &other.outlier_cells)
     }
 }
 

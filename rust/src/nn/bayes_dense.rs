@@ -13,22 +13,26 @@ use crate::cim::{MvmOptions, TileArray, WeightScale};
 use crate::config::ChipConfig;
 use crate::nn::quant::ActQuantizer;
 use crate::util::rng::{Rng64, Xoshiro256};
+use std::sync::Arc;
 
 /// One Bayesian FC layer.
 ///
-/// `Clone` copies the full state — weights, the mapped (calibrated)
-/// tile arrays, and the RNG positions. An MC-parallel replica is a clone
-/// followed by [`BayesDense::reseed_streams`]: same die, independent
-/// sample streams.
+/// `Clone` shares the immutable layer — float weights behind `Arc`s and
+/// the mapped (calibrated) tile arrays' static planes — and copies only
+/// the stream state (RNG positions, ε buffers, scratch, ledgers). An
+/// MC-parallel replica is a clone followed by
+/// [`BayesDense::reseed_streams`]: same die, independent sample streams,
+/// O(ε buffers + streams) private bytes instead of O(weights).
 #[derive(Clone)]
 pub struct BayesDense {
     pub in_dim: usize,
     pub out_dim: usize,
-    /// Posterior means, row-major [in × out].
-    pub mu: Vec<f32>,
-    /// Posterior standard deviations (≥ 0), row-major [in × out].
-    pub sigma: Vec<f32>,
-    pub bias: Vec<f32>,
+    /// Posterior means, row-major [in × out] (shared across replicas).
+    pub mu: Arc<Vec<f32>>,
+    /// Posterior standard deviations (≥ 0), row-major [in × out]
+    /// (shared across replicas).
+    pub sigma: Arc<Vec<f32>>,
+    pub bias: Arc<Vec<f32>>,
     /// ReLU after this layer?
     pub relu: bool,
     /// Hardware mapping (lazy: built on first `forward_hw`).
@@ -60,9 +64,9 @@ impl BayesDense {
         Self {
             in_dim,
             out_dim,
-            mu,
-            sigma,
-            bias,
+            mu: Arc::new(mu),
+            sigma: Arc::new(sigma),
+            bias: Arc::new(bias),
             relu,
             hw: None,
             rng: Xoshiro256::new(seed ^ 0xBA7E5),
@@ -185,7 +189,9 @@ impl BayesDense {
     /// Float reference forward pass with software ε ~ N(0,1).
     pub fn forward_ref(&mut self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.in_dim);
-        let mut y = self.bias.clone();
+        // `to_vec`, not `clone`: cloning the `Arc` would alias the shared
+        // bias vector and the += below would copy-on-write every call.
+        let mut y = self.bias.to_vec();
         for i in 0..self.in_dim {
             let xi = x[i];
             if xi == 0.0 {
@@ -208,7 +214,7 @@ impl BayesDense {
     /// Deterministic μ-only forward pass.
     pub fn forward_mean(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.in_dim);
-        let mut y = self.bias.clone();
+        let mut y = self.bias.to_vec();
         for i in 0..self.in_dim {
             let xi = x[i];
             if xi == 0.0 {
@@ -246,6 +252,43 @@ impl BayesDense {
     /// hardware diagnostics; `None` until `map_to_hardware`).
     pub fn hw_array_mut(&mut self) -> Option<&mut TileArray> {
         self.hw.as_mut().map(|hw| &mut hw.array)
+    }
+
+    /// Eagerly build the mapped tiles' SoA plane caches so replica clones
+    /// share them (no-op when unmapped). Call once after
+    /// [`BayesDense::map_to_hardware`], before replica fan-out.
+    pub fn warm_planes(&mut self) {
+        if let Some(hw) = self.hw.as_mut() {
+            hw.array.warm_planes();
+        }
+    }
+
+    /// Bytes of `Arc`-shared state: float weights plus the mapped tiles'
+    /// static die planes. Counted once per model.
+    pub fn bytes_shared(&self) -> usize {
+        (self.mu.len() + self.sigma.len() + self.bias.len()) * std::mem::size_of::<f32>()
+            + self.hw.as_ref().map_or(0, |hw| hw.array.bytes_shared())
+    }
+
+    /// Bytes each replica owns privately (RNG state + the mapped tiles'
+    /// ε buffers, noise streams, and scratch).
+    pub fn bytes_private(&self) -> usize {
+        std::mem::size_of::<Xoshiro256>()
+            + self.hw.as_ref().map_or(0, |hw| hw.array.bytes_private())
+    }
+
+    /// True when `other` is a replica sharing this layer's immutable
+    /// state by pointer identity (weights and, when mapped, every tile's
+    /// static planes).
+    pub fn shares_statics_with(&self, other: &BayesDense) -> bool {
+        Arc::ptr_eq(&self.mu, &other.mu)
+            && Arc::ptr_eq(&self.sigma, &other.sigma)
+            && Arc::ptr_eq(&self.bias, &other.bias)
+            && match (&self.hw, &other.hw) {
+                (Some(a), Some(b)) => a.array.shares_statics_with(&b.array),
+                (None, None) => true,
+                _ => false,
+            }
     }
 }
 
@@ -289,7 +332,7 @@ mod tests {
     #[test]
     fn hw_tracks_mean_path_when_sigma_zero() {
         let mut layer = BayesDense::random(16, 4, false, 3);
-        layer.sigma.iter_mut().for_each(|s| *s = 0.0);
+        Arc::make_mut(&mut layer.sigma).iter_mut().for_each(|s| *s = 0.0);
         layer.map_to_hardware(&small_chip(), 6.0);
         let mut rng = Xoshiro256::new(9);
         let mut hw_out = Vec::new();
@@ -369,6 +412,26 @@ mod tests {
         let mut c = a.clone();
         c.reseed_streams(0x5A5A);
         assert_eq!(yb, c.forward_hw(&x, true));
+    }
+
+    #[test]
+    fn replica_clone_shares_weights_and_planes() {
+        let mut a = BayesDense::random(16, 4, false, 29);
+        a.map_to_hardware(&small_chip(), 6.0);
+        a.warm_planes();
+        let mut b = a.clone();
+        b.reseed_streams(0x1CE);
+        // The replica's clone cost is stream-sized, not weight-sized, and
+        // the shared layer is identical by pointer, not just by value.
+        assert!(a.shares_statics_with(&b));
+        assert!(
+            b.bytes_private() < a.bytes_shared(),
+            "private {} must stay below shared {}",
+            b.bytes_private(),
+            a.bytes_shared()
+        );
+        let x = vec![1.5f32; 16];
+        assert_eq!(a.forward_mean(&x), b.forward_mean(&x));
     }
 
     #[test]

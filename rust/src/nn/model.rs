@@ -16,6 +16,7 @@ use crate::util::rng::{Rng64, Xoshiro256};
 use std::path::Path;
 
 /// One feature-extractor layer.
+#[derive(Clone)]
 pub enum FeatLayer {
     /// Standard conv (weights HWIO) + bias + ReLU6.
     Conv {
@@ -34,6 +35,14 @@ pub enum FeatLayer {
 }
 
 /// Full model: features + Bayesian head + deterministic comparison head.
+///
+/// Cloning a *mapped* model is cheap on the head side: each
+/// `BayesDense`'s weight/calibration layer lives behind `Arc`s
+/// (copy-on-calibrate — see `cim::tile`), so the clone shares that
+/// storage and copies only stream state, ε scratch, and the (small)
+/// feature-extractor tensors. `runtime::SharedModelCache` leans on this
+/// to make supervisor respawns reuse the boot-time calibration.
+#[derive(Clone)]
 pub struct Model {
     pub features: Vec<FeatLayer>,
     /// Bayesian classifier head (the chip's CIM layers).
@@ -279,6 +288,29 @@ impl Model {
 
     pub fn head_is_mapped(&self) -> bool {
         self.head.iter().all(|l| l.is_mapped())
+    }
+
+    /// Eagerly build every mapped head layer's SoA plane caches so that
+    /// MC replicas cloned afterwards share them through their `Arc`s (a
+    /// replica "boot" is then an `Arc::clone` + stream reseed — O(ε
+    /// buffers), not O(weights)). Call after
+    /// [`Model::map_head_to_hardware`], before replica fan-out.
+    pub fn warm_head_planes(&mut self) {
+        for layer in &mut self.head {
+            layer.warm_planes();
+        }
+    }
+
+    /// Bytes of `Arc`-shared head state (weights + static die planes),
+    /// counted once per model however many replicas share it.
+    pub fn head_bytes_shared(&self) -> usize {
+        self.head.iter().map(|l| l.bytes_shared()).sum()
+    }
+
+    /// Bytes one replica of the head owns privately (ε buffers, RNG and
+    /// ADC-noise streams, scratch).
+    pub fn head_bytes_private(&self) -> usize {
+        self.head.iter().map(|l| l.bytes_private()).sum()
     }
 
     /// Aggregate energy ledger across every mapped head layer's tiles

@@ -30,15 +30,16 @@
 use super::artifact::{ArtifactSpec, Manifest};
 use super::{EngineEnergyReport, EpsilonMode, InferenceEngine};
 use crate::config::Config;
-use crate::energy::Component;
+use crate::energy::{Component, EnergyLedger};
 use crate::error::{Error, Result};
 use crate::grng::shard_chip;
 use crate::nn::model::{head_sample_layers, head_sample_layers_mc};
 use crate::nn::{BayesDense, Model};
 use crate::util::rng::SplitMix64;
 use crate::util::threadpool::par_map_mut;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 
 /// Weight seed shared by every shard of a simulated CIM deployment (the
 /// "model weights" replicated across lanes; dies still differ per shard).
@@ -57,6 +58,22 @@ pub const CIM_WEIGHT_SEED: u64 = 0xC1BE_27F0_5EED_CA11;
 /// across compute lanes (VIBNN's parallel RNG banks; Fan et al.'s
 /// unrolled FPGA sampler).
 ///
+/// A replica clone is *cheap* by construction: μ/σ digit planes, IDAC and
+/// ADC calibration tables, and the GRNG bank's SoA parameter lanes live
+/// in a shared immutable layer behind `Arc`s (copy-on-calibrate — see
+/// `cim::tile`), so cloning copies only ε buffers, RNG stream state and
+/// scratch. `warm_head_planes` runs before the fan-out so the bit-plane
+/// cache is built once and shared, not rebuilt per replica.
+///
+/// # Elastic capacity (`InferenceEngine::set_replicas`)
+///
+/// The replica pool can grow and shrink at batch boundaries. Replica `i`
+/// always derives its stream seed from the i-th split of the shard's
+/// replica seed, whether it was born at boot or re-grown after a shrink —
+/// so a pool resized to `n` is bit-identical to a pool *booted* at `n`
+/// (pinned by tests below). Shrink retires replicas into
+/// `retired_ledger`, so cumulative energy accounting never loses joules.
+///
 /// Determinism contract: slot `b` always runs on replica `b % mc_workers`,
 /// each replica processes its slots in ascending order on its own thread
 /// (`util::threadpool::par_map_mut` hands each replica to exactly one
@@ -71,6 +88,12 @@ pub struct CimEngine {
     /// Serving traffic runs here; `model` stays the reference instance
     /// for fidelity tests and hardware diagnostics.
     replicas: Vec<Vec<BayesDense>>,
+    /// Base seed of the replica stream sequence (`die_seed` split); keeps
+    /// elastic growth on the same per-index streams as boot-time fan-out.
+    replica_seed_base: u64,
+    /// Energy deposited by replicas that were since scaled away — folded
+    /// into `energy_report` so shrink never loses joules.
+    retired_ledger: EnergyLedger,
     /// MAC ops represented by one per-tile MVM (J/Op denominator).
     ops_per_tile_mvm: u64,
     executions: u64,
@@ -81,35 +104,54 @@ impl CimEngine {
     /// independent die (`shard_die_seed` split of `chip.die_seed`), and
     /// the head mapped + calibrated onto tile arrays.
     pub fn for_shard(cfg: &Config, shard: usize) -> Self {
+        Self::from_calibrated(cfg, shard, Self::build_model(cfg, shard))
+    }
+
+    /// Like [`Self::for_shard`], but the expensive bring-up (weight
+    /// generation, hardware mapping, calibration, plane warming) is
+    /// served from `cache`: the first build per shard populates it, and
+    /// every later build — supervisor respawns in particular — clones the
+    /// cached pristine model, Arc-sharing its weight/calibration layer.
+    /// Bit-identical to a fresh [`Self::for_shard`] because bring-up is
+    /// deterministic in `(cfg, shard)` and the cached model is stored
+    /// untouched (the clone carries boot-time stream state).
+    pub fn for_shard_cached(cfg: &Config, shard: usize, cache: &SharedModelCache) -> Self {
+        Self::from_calibrated(cfg, shard, cache.model_for(cfg, shard))
+    }
+
+    /// The full bring-up for one shard die: shared weights, hardware
+    /// mapping + calibration (Eq. 8–10), ledgers cleared, planes warmed.
+    fn build_model(cfg: &Config, shard: usize) -> Model {
         let chip = shard_chip(&cfg.chip, shard);
-        let batch = cfg.server.max_batch.max(1);
-        let side = cfg.model.image_side;
-        let classes = cfg.model.classes;
-        let mut model = Model::random(side, classes, CIM_WEIGHT_SEED);
+        let mut model = Model::random(cfg.model.image_side, cfg.model.classes, CIM_WEIGHT_SEED);
         model.map_head_to_hardware(&chip);
         // Bring-up (programming + calibration) energy is a one-time cost;
         // zero the ledgers so energy_report meters serving traffic only.
         model.reset_head_ledgers();
+        // Build the bit-plane cache ONCE on the prototype before the
+        // replica fan-out: clones then share it behind an Arc instead of
+        // each replica lazily rebuilding its own copy on first MVM.
+        model.warm_head_planes();
+        model
+    }
 
-        // MC-parallel replicas: clone the calibrated head (cheap — no
-        // recalibration) and reseed each clone's stochastic streams from
+    /// Assemble an engine around an already-calibrated model (from
+    /// [`Self::build_model`] or a [`SharedModelCache`] hit).
+    fn from_calibrated(cfg: &Config, shard: usize, model: Model) -> Self {
+        let chip = shard_chip(&cfg.chip, shard);
+        let batch = cfg.server.max_batch.max(1);
+        let side = cfg.model.image_side;
+        let classes = cfg.model.classes;
+
+        // MC-parallel replicas: clone the calibrated head (an Arc share
+        // of the immutable weight/calibration layer — no recalibration,
+        // no weight copy) and reseed each clone's stochastic streams from
         // a split of this shard's die seed. Replica ledgers start at zero
         // (cloned after the bring-up reset).
         let mc_workers = cfg.server.mc_workers.max(1);
-        let mut replica_seeder = SplitMix64::new(chip.die_seed ^ 0x4D43_5052_11CA_5EED);
+        let replica_seed_base = chip.die_seed ^ 0x4D43_5052_11CA_5EED;
         let replicas: Vec<Vec<BayesDense>> = (0..mc_workers)
-            .map(|_| {
-                let mut layer_seeder = SplitMix64::new(replica_seeder.split());
-                model
-                    .head
-                    .iter()
-                    .map(|layer| {
-                        let mut rep = layer.clone();
-                        rep.reseed_streams(layer_seeder.split());
-                        rep
-                    })
-                    .collect()
-            })
+            .map(|i| Self::make_replica(&model.head, replica_seed_base, i))
             .collect();
 
         let feature_dim = model.feature_dim;
@@ -160,9 +202,37 @@ impl CimEngine {
             manifest,
             model,
             replicas,
+            replica_seed_base,
+            retired_ledger: EnergyLedger::new(),
             ops_per_tile_mvm: chip.tile.ops_per_mvm() as u64,
             executions: 0,
         }
+    }
+
+    /// Build MC replica `index` from the calibrated prototype head.
+    ///
+    /// The clone shares the immutable layer (μ/σ words, planes, IDAC/ADC
+    /// calibration, GRNG parameter lanes) behind `Arc`s; only ε buffers
+    /// and stream state are private. Replica `index`'s stream seed is the
+    /// (index+1)-th split of `seed_base` — replayed from the base each
+    /// time — so a replica re-grown after a shrink carries the *same*
+    /// stream it would have had at boot, and the boot-time fan-out is
+    /// byte-for-byte the historical sequence.
+    fn make_replica(prototype: &[BayesDense], seed_base: u64, index: usize) -> Vec<BayesDense> {
+        let mut replica_seeder = SplitMix64::new(seed_base);
+        let mut seed = 0;
+        for _ in 0..=index {
+            seed = replica_seeder.split();
+        }
+        let mut layer_seeder = SplitMix64::new(seed);
+        prototype
+            .iter()
+            .map(|layer| {
+                let mut rep = layer.clone();
+                rep.reseed_streams(layer_seeder.split());
+                rep
+            })
+            .collect()
     }
 
     /// Engine matching a serving [`Config`] on the chip's own die
@@ -257,6 +327,42 @@ impl CimEngine {
     }
 }
 
+/// Per-shard cache of calibrated cim models, shared by an engine
+/// factory's clones so that supervisor respawns (and model re-boots in
+/// general) skip the bring-up entirely: the respawned engine clones the
+/// cached pristine model, Arc-sharing its μ/σ words, digit planes,
+/// IDAC/ADC calibration tables, and GRNG parameter lanes with every
+/// other engine built for that shard. Only stream state and ε scratch
+/// are copied, so a respawn costs O(ε buffers) — and stays bit-identical
+/// to a cold boot because the cached model is never mutated after
+/// insertion (serving engines own their clones).
+#[derive(Clone, Default)]
+pub struct SharedModelCache {
+    models: Arc<Mutex<HashMap<usize, Model>>>,
+}
+
+impl SharedModelCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A pristine calibrated model for `shard`: built once, cloned ever
+    /// after. The lock is held across a miss's bring-up so concurrent
+    /// boots of the same shard do the expensive work exactly once.
+    fn model_for(&self, cfg: &Config, shard: usize) -> Model {
+        let mut models = self.models.lock().unwrap_or_else(|p| p.into_inner());
+        models
+            .entry(shard)
+            .or_insert_with(|| CimEngine::build_model(cfg, shard))
+            .clone()
+    }
+
+    /// Shards with a cached model (diagnostics/tests).
+    pub fn cached_shards(&self) -> usize {
+        self.models.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+}
+
 impl InferenceEngine for CimEngine {
     fn manifest(&self) -> &Manifest {
         &self.manifest
@@ -308,11 +414,47 @@ impl InferenceEngine for CimEngine {
         EpsilonMode::InWord
     }
 
+    fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    fn set_replicas(&mut self, n: usize) {
+        let n = n.max(1);
+        while self.replicas.len() > n {
+            // Retire from the tail so surviving replicas keep their index
+            // (and therefore their stream identity).
+            if let Some(replica) = self.replicas.pop() {
+                for layer in &replica {
+                    self.retired_ledger.absorb(&layer.ledger());
+                }
+            }
+        }
+        while self.replicas.len() < n {
+            let index = self.replicas.len();
+            self.replicas
+                .push(Self::make_replica(&self.model.head, self.replica_seed_base, index));
+        }
+    }
+
+    fn bytes_shared(&self) -> usize {
+        self.model.head_bytes_shared()
+    }
+
+    fn bytes_private(&self) -> usize {
+        self.replicas
+            .iter()
+            .flat_map(|replica| replica.iter())
+            .map(|layer| layer.bytes_private())
+            .sum()
+    }
+
     fn energy_report(&self) -> Option<EngineEnergyReport> {
         // Serving traffic deposits into the MC replicas; the reference
         // model's tiles only move when fidelity tests drive them
-        // directly. Aggregate both so nothing is lost.
+        // directly. Aggregate both — plus replicas retired by elastic
+        // shrink — so nothing is lost.
         let mut ledger = self.model.head_ledger();
+        ledger.absorb(&self.retired_ledger);
         for replica in &self.replicas {
             for layer in replica {
                 ledger.absorb(&layer.ledger());
@@ -341,6 +483,21 @@ mod tests {
         cfg
     }
 
+    /// Copy out scalar dims + per-entry input shapes so tests never clone
+    /// the whole `Manifest`: (batch, side, feature_dim, classes,
+    /// features-input shape, head-input shape).
+    fn dims_and_shapes(e: &CimEngine) -> (usize, usize, usize, usize, Vec<usize>, Vec<usize>) {
+        let m = e.manifest();
+        (
+            m.batch,
+            m.side,
+            m.feature_dim,
+            m.classes,
+            m.entry("features").unwrap().inputs[0].1.clone(),
+            m.entry("head").unwrap().inputs[0].1.clone(),
+        )
+    }
+
     #[test]
     fn manifest_contract_declares_in_word_epsilon() {
         let cfg = tiny_cfg();
@@ -361,24 +518,22 @@ mod tests {
     fn head_produces_normalized_stochastic_probs_and_meters_energy() {
         let cfg = tiny_cfg();
         let mut e = CimEngine::from_config(&cfg);
-        let m = e.manifest().clone();
-        let images = vec![0.4f32; m.batch * m.side * m.side];
-        let fspec = m.entry("features").unwrap().clone();
-        let feats = e.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
-        assert_eq!(feats.len(), m.batch * m.feature_dim);
+        let (batch, side, fdim, classes, fshape, hshape) = dims_and_shapes(&e);
+        let images = vec![0.4f32; batch * side * side];
+        let feats = e.run("features", &[(&images, &fshape)]).unwrap();
+        assert_eq!(feats.len(), batch * fdim);
         // Feature extraction is software: no tile energy yet.
         let r0 = e.energy_report().unwrap();
         assert_eq!(r0.mvm_count, 0);
         assert!(r0.total_j == 0.0, "bring-up energy must be cleared");
 
-        let hspec = m.entry("head").unwrap().clone();
-        let p0 = e.run("head", &[(&feats, &hspec.inputs[0].1)]).unwrap();
-        for row in p0.chunks(m.classes) {
+        let p0 = e.run("head", &[(&feats, &hshape)]).unwrap();
+        for row in p0.chunks(classes) {
             let sum: f32 = row.iter().sum();
             assert!((sum - 1.0).abs() < 1e-4, "softmax row sums to {sum}");
         }
         // Fresh in-word ε per pass ⇒ stochastic head.
-        let p1 = e.run("head", &[(&feats, &hspec.inputs[0].1)]).unwrap();
+        let p1 = e.run("head", &[(&feats, &hshape)]).unwrap();
         assert_ne!(p0, p1, "in-word ε must vary across MC passes");
         // Every MVM deposited joules and drew ε from the in-word banks.
         let r = e.energy_report().unwrap();
@@ -399,16 +554,14 @@ mod tests {
         let cfg = tiny_cfg();
         let mut a = CimEngine::for_shard(&cfg, 0);
         let mut b = CimEngine::for_shard(&cfg, 0);
-        let m = a.manifest().clone();
-        let images = vec![0.7f32; m.batch * m.side * m.side];
-        let fspec = m.entry("features").unwrap().clone();
-        let fa = a.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
-        let fb = b.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
+        let (batch, side, _fdim, _classes, fshape, hshape) = dims_and_shapes(&a);
+        let images = vec![0.7f32; batch * side * side];
+        let fa = a.run("features", &[(&images, &fshape)]).unwrap();
+        let fb = b.run("features", &[(&images, &fshape)]).unwrap();
         assert_eq!(fa, fb);
-        let hspec = m.entry("head").unwrap().clone();
         for _ in 0..3 {
-            let pa = a.run("head", &[(&fa, &hspec.inputs[0].1)]).unwrap();
-            let pb = b.run("head", &[(&fb, &hspec.inputs[0].1)]).unwrap();
+            let pa = a.run("head", &[(&fa, &hshape)]).unwrap();
+            let pb = b.run("head", &[(&fb, &hshape)]).unwrap();
             assert_eq!(pa, pb, "same (weights, die) must replay bitwise");
         }
     }
@@ -418,17 +571,15 @@ mod tests {
         let cfg = tiny_cfg();
         let mut a = CimEngine::for_shard(&cfg, 0);
         let mut b = CimEngine::for_shard(&cfg, 1);
-        let m = a.manifest().clone();
-        let images = vec![0.7f32; m.batch * m.side * m.side];
-        let fspec = m.entry("features").unwrap().clone();
-        let fa = a.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
+        let (batch, side, _fdim, _classes, fshape, hshape) = dims_and_shapes(&a);
+        let images = vec![0.7f32; batch * side * side];
+        let fa = a.run("features", &[(&images, &fshape)]).unwrap();
         // Weights are shared across shards: identical feature paths.
-        let fb = b.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
+        let fb = b.run("features", &[(&images, &fshape)]).unwrap();
         assert_eq!(fa, fb);
         // Dies are not: ε streams (and analog chains) differ.
-        let hspec = m.entry("head").unwrap().clone();
-        let pa = a.run("head", &[(&fa, &hspec.inputs[0].1)]).unwrap();
-        let pb = b.run("head", &[(&fb, &hspec.inputs[0].1)]).unwrap();
+        let pa = a.run("head", &[(&fa, &hshape)]).unwrap();
+        let pb = b.run("head", &[(&fb, &hshape)]).unwrap();
         assert_ne!(pa, pb, "independent dies must sample independently");
     }
 
@@ -442,18 +593,16 @@ mod tests {
         cfg.server.mc_workers = 3;
         let mut a = CimEngine::from_config(&cfg);
         let mut b = CimEngine::from_config(&cfg);
-        let m = a.manifest().clone();
-        let images = vec![0.6f32; m.batch * m.side * m.side];
-        let fspec = m.entry("features").unwrap().clone();
-        let feats = a.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
-        let _ = b.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
-        let hspec = m.entry("head").unwrap().clone();
+        let (batch, side, _fdim, classes, fshape, hshape) = dims_and_shapes(&a);
+        let images = vec![0.6f32; batch * side * side];
+        let feats = a.run("features", &[(&images, &fshape)]).unwrap();
+        let _ = b.run("features", &[(&images, &fshape)]).unwrap();
         for _ in 0..3 {
-            let pa = a.run("head", &[(&feats, &hspec.inputs[0].1)]).unwrap();
-            let pb = b.run("head", &[(&feats, &hspec.inputs[0].1)]).unwrap();
+            let pa = a.run("head", &[(&feats, &hshape)]).unwrap();
+            let pb = b.run("head", &[(&feats, &hshape)]).unwrap();
             assert_eq!(pa, pb, "MC fan-out must be schedule-independent");
             // Every slot filled: all rows are valid softmax outputs.
-            for row in pa.chunks(m.classes) {
+            for row in pa.chunks(classes) {
                 let sum: f32 = row.iter().sum();
                 assert!((sum - 1.0).abs() < 1e-4, "slot left empty: {row:?}");
             }
@@ -465,11 +614,11 @@ mod tests {
         cfg1.server.max_batch = 5;
         cfg1.server.mc_workers = 1;
         let mut c = CimEngine::from_config(&cfg1);
-        let _ = c.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
-        let pc = c.run("head", &[(&feats, &hspec.inputs[0].1)]).unwrap();
+        let _ = c.run("features", &[(&images, &fshape)]).unwrap();
+        let pc = c.run("head", &[(&feats, &hshape)]).unwrap();
         let mut d = CimEngine::from_config(&cfg);
-        let _ = d.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
-        let pd = d.run("head", &[(&feats, &hspec.inputs[0].1)]).unwrap();
+        let _ = d.run("features", &[(&images, &fshape)]).unwrap();
+        let pd = d.run("head", &[(&feats, &hshape)]).unwrap();
         assert_ne!(pd, pc, "slot→replica assignment must depend on mc_workers");
     }
 
@@ -477,17 +626,128 @@ mod tests {
     fn rejects_wrong_shapes_and_epsilon_inputs() {
         let cfg = tiny_cfg();
         let mut e = CimEngine::from_config(&cfg);
-        let m = e.manifest().clone();
-        let fspec = m.entry("features").unwrap().clone();
+        let (batch, _side, fdim, _classes, fshape, hshape) = dims_and_shapes(&e);
         let short = vec![0.0f32; 3];
-        assert!(e.run("features", &[(&short, &fspec.inputs[0].1)]).is_err());
+        assert!(e.run("features", &[(&short, &fshape)]).is_err());
         // Passing external ε to an in-word engine is a contract error.
-        let feats = vec![0.0f32; m.batch * m.feature_dim];
-        let hspec = m.entry("head").unwrap().clone();
+        let feats = vec![0.0f32; batch * fdim];
         let eps = vec![0.0f32; 8];
-        let shape = &hspec.inputs[0].1;
-        let with_eps = [(&feats[..], shape), (&eps[..], shape)];
+        let with_eps = [(&feats[..], &hshape), (&eps[..], &hshape)];
         assert!(e.run("head", &with_eps).is_err());
         assert!(e.run("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn replicas_share_immutable_layer_with_prototype() {
+        let mut cfg = tiny_cfg();
+        cfg.server.mc_workers = 3;
+        let e = CimEngine::from_config(&cfg);
+        // Every replica's layers point at the SAME weight/calibration
+        // storage as the reference model — clone copied no weights.
+        for replica in &e.replicas {
+            for (rep, proto) in replica.iter().zip(e.model.head.iter()) {
+                assert!(
+                    rep.shares_statics_with(proto),
+                    "replica must Arc-share the immutable layer"
+                );
+            }
+        }
+        // Footprint split: the private (per-replica) state is small next
+        // to the shared layer even with 3 replicas on a tiny tile.
+        let shared = e.bytes_shared();
+        let private = e.bytes_private();
+        assert!(shared > 0 && private > 0);
+        assert!(
+            private < shared,
+            "private {private} B should be dwarfed by shared {shared} B"
+        );
+    }
+
+    #[test]
+    fn elastic_regrowth_is_bit_identical_to_boot_and_keeps_energy() {
+        // A pool shrunk to 1 and re-grown to 3 must serve the same
+        // samples a freshly booted pool would, and shrink must not drop
+        // the retired replicas' joules.
+        let mut cfg = tiny_cfg();
+        cfg.server.max_batch = 3;
+        cfg.server.mc_workers = 3;
+        let mut a = CimEngine::from_config(&cfg);
+        let mut b = CimEngine::from_config(&cfg);
+        let (batch, side, _fdim, classes, fshape, hshape) = dims_and_shapes(&a);
+        let images = vec![0.5f32; batch * side * side];
+        let feats = a.run("features", &[(&images, &fshape)]).unwrap();
+        let _ = b.run("features", &[(&images, &fshape)]).unwrap();
+
+        // Deposit energy in all three replicas, then shrink: the total
+        // must survive the retirement (modulo f64 summation order).
+        assert_eq!(a.replica_count(), 3);
+        let _ = a.run("head", &[(&feats, &hshape)]).unwrap();
+        let j_before = a.energy_report().unwrap().total_j;
+        assert!(j_before > 0.0);
+        a.set_replicas(1);
+        assert_eq!(a.replica_count(), 1);
+        let j_after = a.energy_report().unwrap().total_j;
+        assert!(
+            (j_after - j_before).abs() <= j_before * 1e-9,
+            "shrink must retire ledgers, not drop them: {j_before} -> {j_after}"
+        );
+
+        // Re-grow: replicas 1 and 2 restart their boot streams and share
+        // statics with the prototype again.
+        a.set_replicas(3);
+        assert_eq!(a.replica_count(), 3);
+        for replica in &a.replicas {
+            for (rep, proto) in replica.iter().zip(a.model.head.iter()) {
+                assert!(rep.shares_statics_with(proto));
+            }
+        }
+        // Slot i runs on replica i (batch == mc_workers). b's FIRST head
+        // pass uses boot streams on every replica, so a's re-grown
+        // replicas (1, 2) must reproduce b's slots 1, 2 exactly. Slot 0
+        // runs on a's surviving replica 0, whose stream has advanced.
+        let pa = a.run("head", &[(&feats, &hshape)]).unwrap();
+        let pb = b.run("head", &[(&feats, &hshape)]).unwrap();
+        for slot in 1..batch {
+            assert_eq!(
+                &pa[slot * classes..(slot + 1) * classes],
+                &pb[slot * classes..(slot + 1) * classes],
+                "re-grown replica {slot} must replay its boot stream"
+            );
+        }
+
+        // The pool never collapses below one replica.
+        a.set_replicas(0);
+        assert_eq!(a.replica_count(), 1);
+    }
+
+    #[test]
+    fn cached_build_is_bit_identical_to_cold_boot_and_shares_statics() {
+        // The supervisor's respawn path: a cache-served engine must share
+        // the cached calibration layer (no re-calibration) yet serve
+        // byte-for-byte what a cold boot serves.
+        let cfg = tiny_cfg();
+        let cache = SharedModelCache::new();
+        let mut cold = CimEngine::for_shard(&cfg, 0);
+        let mut warm = CimEngine::for_shard_cached(&cfg, 0, &cache); // populates
+        let mut respawn = CimEngine::for_shard_cached(&cfg, 0, &cache); // hit
+        assert_eq!(cache.cached_shards(), 1);
+        // Engines from the same cache Arc-share one immutable layer.
+        for (a, b) in warm.model().head.iter().zip(respawn.model().head.iter()) {
+            assert!(
+                a.shares_statics_with(b),
+                "cache-served engines must share calibration storage"
+            );
+        }
+        let (batch, side, _fdim, _classes, fshape, hshape) = dims_and_shapes(&cold);
+        let images = vec![0.3f32; batch * side * side];
+        let feats = cold.run("features", &[(&images, &fshape)]).unwrap();
+        for e in [&mut warm, &mut respawn] {
+            assert_eq!(feats, e.run("features", &[(&images, &fshape)]).unwrap());
+        }
+        for _ in 0..2 {
+            let p_cold = cold.run("head", &[(&feats, &hshape)]).unwrap();
+            assert_eq!(p_cold, warm.run("head", &[(&feats, &hshape)]).unwrap());
+            assert_eq!(p_cold, respawn.run("head", &[(&feats, &hshape)]).unwrap());
+        }
     }
 }

@@ -6,9 +6,10 @@ use crate::error::{Error, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
-/// A compiled entry point.
+/// A compiled entry point. Shape metadata is NOT duplicated here: the
+/// manifest owns the single copy of every `ArtifactSpec` and `run`
+/// validates against it by name.
 pub struct LoadedEntry {
-    pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -52,10 +53,7 @@ impl Engine {
         let exe = client
             .compile(&comp)
             .map_err(|e| Error::Runtime(format!("compile {path}: {e}")))?;
-        Ok(LoadedEntry {
-            spec: spec.clone(),
-            exe,
-        })
+        Ok(LoadedEntry { exe })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -73,20 +71,21 @@ impl Engine {
             .entries
             .get(entry)
             .ok_or_else(|| Error::Runtime(format!("unknown entry '{entry}'")))?;
-        if inputs.len() != loaded.spec.inputs.len() {
+        let spec = self.manifest.entry(entry)?;
+        if inputs.len() != spec.inputs.len() {
             return Err(Error::Runtime(format!(
                 "entry '{entry}' expects {} inputs, got {}",
-                loaded.spec.inputs.len(),
+                spec.inputs.len(),
                 inputs.len()
             )));
         }
         let mut literals = Vec::with_capacity(inputs.len());
         for (i, (data, shape)) in inputs.iter().enumerate() {
-            let want: usize = loaded.spec.inputs[i].1.iter().product();
+            let want: usize = spec.inputs[i].1.iter().product();
             if data.len() != want {
                 return Err(Error::Runtime(format!(
                     "entry '{entry}' input {i} ('{}') expects {} elements, got {}",
-                    loaded.spec.inputs[i].0,
+                    spec.inputs[i].0,
                     want,
                     data.len()
                 )));

@@ -33,7 +33,7 @@ mod executor;
 mod sim;
 
 pub use artifact::{ArtifactSpec, Manifest};
-pub use cim_engine::CimEngine;
+pub use cim_engine::{CimEngine, SharedModelCache};
 #[cfg(feature = "pjrt")]
 pub use executor::{Engine, LoadedEntry};
 pub use sim::SimEngine;
@@ -106,6 +106,34 @@ pub trait InferenceEngine {
     /// `None` for purely software backends.
     fn energy_report(&self) -> Option<EngineEnergyReport> {
         None
+    }
+
+    /// MC replicas currently instantiated inside this engine (1 for
+    /// engines without replica parallelism).
+    fn replica_count(&self) -> usize {
+        1
+    }
+
+    /// Elastic capacity hook: grow or shrink the engine's MC replica pool
+    /// to `n` (clamped to ≥ 1 by implementations). Growth must continue
+    /// the engine's deterministic replica-seed sequence — replica `i`
+    /// is the same stream whether it was born at boot or re-grown later —
+    /// and shrink must not lose accumulated energy accounting. Default:
+    /// no-op for engines without replicas.
+    fn set_replicas(&mut self, n: usize) {
+        let _ = n;
+    }
+
+    /// Bytes of model/calibration state this engine shares across its MC
+    /// replicas behind `Arc`s (0 for backends without the split).
+    fn bytes_shared(&self) -> usize {
+        0
+    }
+
+    /// Bytes of per-replica private state (ε buffers, RNG streams,
+    /// scratch) across all replicas (0 when not modeled).
+    fn bytes_private(&self) -> usize {
+        0
     }
 }
 

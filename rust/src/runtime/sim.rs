@@ -233,18 +233,34 @@ mod tests {
         SimEngine::new(4, 8, 6, 3, 99)
     }
 
+    /// Copy out scalar dims + the features-entry input shape so tests
+    /// never clone the whole `Manifest`.
+    fn dims_and_fshape(e: &SimEngine) -> (usize, usize, usize, usize, Vec<usize>) {
+        let m = e.manifest();
+        (
+            m.batch,
+            m.side,
+            m.feature_dim,
+            m.classes,
+            m.entry("features").unwrap().inputs[0].1.clone(),
+        )
+    }
+
     fn run_head_of(engine: &mut SimEngine, feats: &[f32], e1: f32, e2: f32) -> Vec<f32> {
-        let spec = engine.manifest().entry("head").unwrap().clone();
-        let eps1 = vec![e1; spec.input_len(1)];
-        let eps2 = vec![e2; spec.input_len(2)];
+        let (fshape, wshape, bshape) = {
+            let spec = engine.manifest().entry("head").unwrap();
+            (
+                spec.inputs[0].1.clone(),
+                spec.inputs[1].1.clone(),
+                spec.inputs[2].1.clone(),
+            )
+        };
+        let eps1 = vec![e1; wshape.iter().product()];
+        let eps2 = vec![e2; bshape.iter().product()];
         engine
             .run(
                 "head",
-                &[
-                    (feats, &spec.inputs[0].1),
-                    (&eps1, &spec.inputs[1].1),
-                    (&eps2, &spec.inputs[2].1),
-                ],
+                &[(feats, &fshape), (&eps1, &wshape), (&eps2, &bshape)],
             )
             .unwrap()
     }
@@ -266,15 +282,12 @@ mod tests {
     #[test]
     fn probs_are_normalized_and_eps_sensitive() {
         let mut e = tiny();
-        let m = e.manifest().clone();
-        let images = vec![0.25f32; m.batch * m.side * m.side];
-        let fspec = m.entry("features").unwrap().clone();
-        let feats = e
-            .run("features", &[(&images, &fspec.inputs[0].1)])
-            .unwrap();
-        assert_eq!(feats.len(), m.batch * m.feature_dim);
+        let (batch, side, fdim, classes, fshape) = dims_and_fshape(&e);
+        let images = vec![0.25f32; batch * side * side];
+        let feats = e.run("features", &[(&images, &fshape)]).unwrap();
+        assert_eq!(feats.len(), batch * fdim);
         let p0 = run_head_of(&mut e, &feats, 0.0, 0.0);
-        for row in p0.chunks(m.classes) {
+        for row in p0.chunks(classes) {
             let sum: f32 = row.iter().sum();
             assert!((sum - 1.0).abs() < 1e-5, "softmax row sums to {sum}");
         }
@@ -288,11 +301,10 @@ mod tests {
     fn same_seed_is_bit_identical_across_instances() {
         let mut a = tiny();
         let mut b = tiny();
-        let m = a.manifest().clone();
-        let images = vec![0.5f32; m.batch * m.side * m.side];
-        let fspec = m.entry("features").unwrap().clone();
-        let fa = a.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
-        let fb = b.run("features", &[(&images, &fspec.inputs[0].1)]).unwrap();
+        let (batch, side, _fdim, _classes, fshape) = dims_and_fshape(&a);
+        let images = vec![0.5f32; batch * side * side];
+        let fa = a.run("features", &[(&images, &fshape)]).unwrap();
+        let fb = b.run("features", &[(&images, &fshape)]).unwrap();
         assert_eq!(fa, fb);
         assert_eq!(run_head_of(&mut a, &fa, 0.5, 0.5), run_head_of(&mut b, &fb, 0.5, 0.5));
     }
@@ -300,9 +312,9 @@ mod tests {
     #[test]
     fn rejects_wrong_input_shapes() {
         let mut e = tiny();
-        let fspec = e.manifest().entry("features").unwrap().clone();
+        let (_batch, _side, _fdim, _classes, fshape) = dims_and_fshape(&e);
         let short = vec![0.0f32; 3];
-        assert!(e.run("features", &[(&short, &fspec.inputs[0].1)]).is_err());
+        assert!(e.run("features", &[(&short, &fshape)]).is_err());
         assert!(e.run("nope", &[]).is_err());
     }
 }

@@ -146,6 +146,64 @@ fn fault_replay_is_bit_identical_and_perturbs_uncertainty() {
     assert!(entropy_moved, "entropy must move under ε corruption");
 }
 
+/// Respawn fidelity on the chip backend: a shard worker killed mid-serve
+/// is rebuilt through the engine factory's `SharedModelCache` — cloning
+/// the cached calibrated model (Arc-sharing its weight/calibration
+/// layer) instead of re-running bring-up — and must serve **bit-
+/// identically** to a freshly booted pool. The crash lands inside
+/// request 1's serve, so the respawned engine (boot-time streams)
+/// re-serves request 1 exactly as a cold boot would, and every later
+/// response continues that stream.
+#[test]
+fn respawned_cim_shard_replays_bit_identically_to_fresh_boot() {
+    let mut cfg = chaos_cfg();
+    cfg.server.retry_budget = 2;
+    // Small tiles keep cim bring-up cheap in debug builds; max_batch = 1
+    // keeps the workload serial (one request per batch).
+    cfg.chip.tile.rows = 16;
+    cfg.chip.tile.words_per_row = 4;
+    cfg.server.max_batch = 1;
+    let gen = SyntheticPerson::new(32, 33);
+
+    // Pool A: the armed panic kills the worker during request 1's serve;
+    // the supervisor respawns it from the model cache and redelivers.
+    let faulty = Coordinator::builder(cfg.clone())
+        .backend(Backend::Cim)
+        .fault_plan(FaultPlan {
+            seed: 5,
+            panic_at_run: 3,
+            ..FaultPlan::default()
+        })
+        .start()
+        .unwrap();
+    let r1 = faulty.infer(Infer::new(gen.sample(0).pixels)).unwrap();
+    let r2 = faulty.infer(Infer::new(gen.sample(1).pixels)).unwrap();
+    let m = faulty.metrics();
+    assert!(
+        m.shard_restarts >= 1,
+        "the armed panic must have forced a respawn (restarts = {})",
+        m.shard_restarts
+    );
+    faulty.shutdown();
+
+    // Pool B: clean cold boot, same config and workload. The respawned
+    // shard restarted its deterministic streams, so A's responses must
+    // match B's byte for byte.
+    let fresh = Coordinator::builder(cfg)
+        .backend(Backend::Cim)
+        .fault_plan(FaultPlan::default())
+        .start()
+        .unwrap();
+    let f1 = fresh.infer(Infer::new(gen.sample(0).pixels)).unwrap();
+    let f2 = fresh.infer(Infer::new(gen.sample(1).pixels)).unwrap();
+    fresh.shutdown();
+
+    assert_eq!(r1.pred.probs, f1.pred.probs, "respawn must replay boot streams");
+    assert_eq!(r1.uncertainty.entropy, f1.uncertainty.entropy);
+    assert_eq!(r2.pred.probs, f2.pred.probs, "post-respawn stream must continue");
+    assert_eq!(r2.uncertainty.entropy, f2.uncertainty.entropy);
+}
+
 /// Failure is *delivered*, not discovered by timeout: with respawns
 /// disabled and no retry budget, a worker panic turns every affected wait
 /// into a prompt `ShardFailed` — orders of magnitude before the 30 s

@@ -1,0 +1,192 @@
+//! Elastic capacity acceptance (ISSUE 9): copy-on-calibrate shared tile
+//! state under autoscaling, work stealing, and online model swap.
+//!
+//! 1. A burst against a small `max_batch` drives the dispatcher's
+//!    scale-up policy; every ticket resolves (zero lost), and once the
+//!    burst drains the idle decay returns the replica pool to the floor.
+//! 2. `Coordinator::swap_model` is zero-downtime: requests keep
+//!    succeeding across a publish-drain-flip, and the swap counter
+//!    proves the worker actually flipped engines.
+//! 3. `set_replica_target` is the deterministic escape hatch: clamped to
+//!    `[min_mc_workers, max_mc_workers]`, applied at the next batch
+//!    boundary, visible through `replica_target` and the
+//!    `replicas_active` gauge — and the footprint gauges split into a
+//!    nonzero shared (Arc'd weights + calibration) and private
+//!    (ε buffers + scratch) layer.
+//!
+//! Scale-up/scale-down run on the cim backend so the replica pool being
+//! resized is the real Arc-sharing engine, not a no-op stub.
+
+use bnn_cim::client::{Backend, Config, Coordinator, EngineFactory, Infer, MetricsSnapshot};
+use bnn_cim::data::SyntheticPerson;
+use bnn_cim::runtime::{InferenceEngine, SimEngine};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Small-tile cim config: cheap bring-up in debug builds, serial batches.
+fn elastic_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.model.mc_samples = 4;
+    cfg.chip.tile.rows = 16;
+    cfg.chip.tile.words_per_row = 4;
+    cfg.server.max_batch = 1;
+    cfg.server.batch_deadline_ms = 1.0;
+    cfg.server.request_timeout_ms = 30_000.0;
+    cfg
+}
+
+/// Poll the metrics snapshot until `pred` holds or ~5 s elapse.
+fn wait_for(coord: &Coordinator, pred: impl Fn(&MetricsSnapshot) -> bool) -> MetricsSnapshot {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let m = coord.metrics();
+        if pred(&m) || Instant::now() >= deadline {
+            return m;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Burst → scale up; drain → decay back to the floor. Zero lost tickets
+/// throughout: elasticity changes *throughput shape*, never delivery.
+#[test]
+fn burst_scales_up_and_idle_decays_to_floor_with_no_lost_tickets() {
+    let coord = Coordinator::builder(elastic_cfg())
+        .backend(Backend::Cim)
+        .workers(1)
+        .mc_workers(1)
+        .elastic(true)
+        .min_mc_workers(1)
+        .max_mc_workers(4)
+        .start()
+        .unwrap();
+
+    // Burst: with max_batch = 1, the dispatcher sees queue depth ≥ 2
+    // after nearly every batch it assembles and raises the target.
+    let gen = SyntheticPerson::new(32, 44);
+    let tickets = coord
+        .submit_many((0..16).map(|i| Infer::new(gen.sample(i).pixels)))
+        .unwrap();
+    for t in tickets {
+        t.wait_timeout(Duration::from_secs(30))
+            .expect("elastic pool must not lose tickets");
+    }
+
+    let m = coord.metrics();
+    assert!(
+        m.scale_up >= 1,
+        "a 16-deep burst over max_batch = 1 must trigger scale-up (scale_up = {})",
+        m.scale_up
+    );
+
+    // Drained: the idle decay walks the pool back to min_mc_workers and
+    // refreshes the gauge from inside the worker's idle tick.
+    let m = wait_for(&coord, |m| m.scale_down >= 1 && m.per_shard[0].replicas_active == 1);
+    assert!(
+        m.scale_down >= 1,
+        "an idle elastic pool must decay (scale_down = {})",
+        m.scale_down
+    );
+    assert_eq!(
+        m.per_shard[0].replicas_active, 1,
+        "idle decay must return the pool to min_mc_workers"
+    );
+
+    coord.shutdown();
+}
+
+/// Publish-drain-flip under traffic: every request around the swap
+/// succeeds, and the flip is observable in `model_swaps`. Works with
+/// elasticity OFF — hot swap is a batch-boundary mechanism, not an
+/// autoscaler feature.
+#[test]
+fn model_swap_under_traffic_is_zero_downtime() {
+    let mut cfg = Config::default();
+    cfg.model.mc_samples = 4;
+    cfg.server.max_batch = 1;
+    cfg.server.batch_deadline_ms = 1.0;
+    cfg.server.request_timeout_ms = 30_000.0;
+    let coord = Coordinator::builder(cfg.clone())
+        .backend(Backend::Sim)
+        .workers(1)
+        .start()
+        .unwrap();
+
+    let gen = SyntheticPerson::new(32, 45);
+    for i in 0..3 {
+        coord.infer(Infer::new(gen.sample(i).pixels)).unwrap();
+    }
+
+    // Publish a fresh engine build; the worker flips at its next batch
+    // boundary, so the very next request is served by the new engine.
+    let swap_cfg = cfg.clone();
+    let factory: EngineFactory = Arc::new(move |_shard| {
+        Ok(Box::new(SimEngine::from_config(&swap_cfg)) as Box<dyn InferenceEngine>)
+    });
+    let generation = coord.swap_model(factory);
+    assert!(generation >= 2, "publish must advance the generation");
+
+    for i in 3..6 {
+        coord
+            .infer(Infer::new(gen.sample(i).pixels))
+            .expect("requests across a model swap must keep succeeding");
+    }
+    let m = wait_for(&coord, |m| m.model_swaps >= 1);
+    assert!(
+        m.model_swaps >= 1,
+        "the worker must have flipped to the published engine (swaps = {})",
+        m.model_swaps
+    );
+
+    coord.shutdown();
+}
+
+/// Manual replica targeting: clamped into the configured band, applied
+/// at the next batch boundary, and reflected in both `replica_target`
+/// and the `replicas_active` gauge. The footprint gauges prove the
+/// copy-on-calibrate split: a nonzero Arc-shared layer and a nonzero
+/// per-replica private layer.
+#[test]
+fn set_replica_target_is_clamped_applied_and_splits_footprint() {
+    let mut cfg = elastic_cfg();
+    cfg.server.mc_workers = 2;
+    cfg.server.min_mc_workers = 1;
+    cfg.server.max_mc_workers = 4;
+    let coord = Coordinator::builder(cfg)
+        .backend(Backend::Cim)
+        .workers(1)
+        .start()
+        .unwrap();
+    let gen = SyntheticPerson::new(32, 46);
+
+    // Boot target is mc_workers.
+    assert_eq!(coord.replica_target(0), 2);
+
+    // Above the band: clamped to max_mc_workers, applied on next batch.
+    coord.set_replica_target(0, 99);
+    assert_eq!(coord.replica_target(0), 4);
+    coord.infer(Infer::new(gen.sample(0).pixels)).unwrap();
+    let m = coord.metrics();
+    assert_eq!(m.per_shard[0].replicas_active, 4);
+
+    // Below the band: clamped to min_mc_workers.
+    coord.set_replica_target(0, 0);
+    assert_eq!(coord.replica_target(0), 1);
+    coord.infer(Infer::new(gen.sample(1).pixels)).unwrap();
+    let m = coord.metrics();
+    assert_eq!(m.per_shard[0].replicas_active, 1);
+
+    // Copy-on-calibrate footprint split: weights/calibration are shared
+    // behind Arc, only ε buffers and scratch are per-replica.
+    assert!(m.bytes_shared > 0, "shared layer must be reported");
+    assert!(m.bytes_private > 0, "private layer must be reported");
+    assert!(
+        m.bytes_shared > m.bytes_private,
+        "shared weights/calibration ({} B) should dominate per-replica \
+         private state ({} B) at 1 replica",
+        m.bytes_shared,
+        m.bytes_private
+    );
+
+    coord.shutdown();
+}

@@ -36,6 +36,13 @@ Rules:
   submitted ticket resolved (`completed + failed_typed == submitted`) —
   and the kill actually happened (`shard_restarts > 0`) with recovered
   work redelivered (`requests_retried > 0`).
+- BENCH_elastic.json only (written by benches/elastic.rs): the
+  copy-on-calibrate split must hold — the Arc-shared immutable layer
+  strictly larger than one replica's private state — and the scale
+  event must show the autoscaler engaging (`scale_event.scale_up > 0`)
+  while both throughput points stay positive. The headline
+  `replica_boot_speedup` (full bring-up / replica grow) is tracked
+  against the checked-in baseline like every other headline.
 
 Exit code 0 = all gates pass; 1 = any gate fails (fails the CI job).
 """
@@ -53,6 +60,7 @@ GATES = {
     "BENCH_grng_fill.json": "speedup_block_vs_legacy",
     "BENCH_edge.json": "peak_completed_rps",
     "BENCH_chaos.json": "completed",
+    "BENCH_elastic.json": "replica_boot_speedup",
 }
 
 failures = []
@@ -224,6 +232,52 @@ def gate_chaos_conservation(chaos):
         )
 
 
+def gate_elastic(doc):
+    """Copy-on-calibrate must actually pay: the Arc-shared layer dominates
+    one replica's private state, and the scale event really scaled."""
+    shared = doc.get("bytes_shared", 0) or 0
+    per_replica = doc.get("bytes_private_per_replica", 0) or 0
+    if shared <= 0 or per_replica <= 0:
+        failures.append(
+            f"BENCH_elastic.json: footprint gauges missing "
+            f"(bytes_shared={shared!r}, bytes_private_per_replica="
+            f"{per_replica!r})"
+        )
+    elif shared <= per_replica:
+        failures.append(
+            f"BENCH_elastic.json: shared layer ({shared} B) does not "
+            f"dominate per-replica private state ({per_replica} B) — "
+            f"replicas are deep-copying what should be Arc-shared"
+        )
+    else:
+        print(
+            f"BENCH_elastic.json: footprint split holds "
+            f"({shared} B shared vs {per_replica} B/replica private)"
+        )
+    event = doc.get("scale_event")
+    if not isinstance(event, dict):
+        failures.append("BENCH_elastic.json: no scale_event point recorded")
+        return
+    if (event.get("scale_up", 0) or 0) <= 0:
+        failures.append(
+            "BENCH_elastic.json: scale_event.scale_up = 0 — the burst "
+            "never engaged the autoscaler"
+        )
+    else:
+        print(
+            f"BENCH_elastic.json: autoscaler engaged "
+            f"(scale_up={event.get('scale_up'):.0f}, "
+            f"peak replicas={event.get('peak_replicas', 0):.0f})"
+        )
+    for key in ("elastic_req_per_s", "pinned_req_per_s"):
+        v = event.get(key, 0) or 0
+        if not isinstance(v, (int, float)) or v <= 0:
+            failures.append(
+                f"BENCH_elastic.json: scale_event.{key} = {v!r} — the "
+                f"burst never completed"
+            )
+
+
 def main(argv):
     selected = argv[1:] or list(GATES)
     unknown = [p for p in selected if p not in GATES]
@@ -241,6 +295,8 @@ def main(argv):
             gate_edge_overload(fresh)
         elif path == "BENCH_chaos.json":
             gate_chaos_conservation(fresh)
+        elif path == "BENCH_elastic.json":
+            gate_elastic(fresh)
 
     if failures:
         print("\nBENCH GATE FAILURES:", file=sys.stderr)
