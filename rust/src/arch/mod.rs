@@ -148,6 +148,9 @@ fn clamp_supported(level: SimdLevel) -> SimdLevel {
 /// Returns the previous override so callers can scope-restore it. The
 /// override is capped at the detected level when applied, not here.
 pub fn force_level(level: Option<SimdLevel>) -> Option<SimdLevel> {
+    // RELAXED: the override is a standalone u8 cell — no other memory is
+    // published through it, and forced scopes are serialized by the
+    // FORCE_SCOPE mutex in ForcedLevelGuard, so swap order is total.
     decode(FORCED.swap(encode(level), Ordering::Relaxed))
 }
 
@@ -155,6 +158,8 @@ pub fn force_level(level: Option<SimdLevel>) -> Option<SimdLevel> {
 /// programmatic override, else the `BNN_CIM_FORCE_SCALAR` environment
 /// pin, else the detected hardware level.
 pub fn active_level() -> SimdLevel {
+    // RELAXED: reads the same standalone override cell; a stale read can
+    // only pick a *supported* level (clamp below), never corrupt data.
     if let Some(l) = decode(FORCED.load(Ordering::Relaxed)) {
         return clamp_supported(l);
     }

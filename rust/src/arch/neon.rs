@@ -12,6 +12,11 @@ use crate::util::rng::xoshiro_lane_step;
 /// Vector [`super::lane_dot`]: four 2×f64 accumulators hold the eight
 /// interleaved lanes; each 8-row chunk contributes one mul+add per
 /// accumulator in the same ascending row order as the scalar walk.
+///
+/// # Safety
+/// NEON is baseline on aarch64, but callers still route through
+/// `clamp_supported` in `arch/mod.rs`; `a` and `b` must be equal-length
+/// slices.
 #[target_feature(enable = "neon")]
 pub unsafe fn lane_dot_neon(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -52,6 +57,10 @@ pub unsafe fn lane_dot_neon(a: &[f64], b: &[f64]) -> f64 {
 }
 
 /// Vector [`super::mul_into`]: elementwise product, 2 lanes at a time.
+///
+/// # Safety
+/// `dst`, `a`, and `b` must be equal-length slices; NEON must be
+/// available (baseline on aarch64).
 #[target_feature(enable = "neon")]
 pub unsafe fn mul_into_neon(dst: &mut [f64], a: &[f64], b: &[f64]) {
     debug_assert_eq!(dst.len(), a.len());
@@ -71,6 +80,10 @@ pub unsafe fn mul_into_neon(dst: &mut [f64], a: &[f64], b: &[f64]) {
 }
 
 /// Vector [`super::div_assign`]: elementwise quotient, 2 lanes at a time.
+///
+/// # Safety
+/// `dst` and `by` must be equal-length slices; NEON must be available
+/// (baseline on aarch64).
 #[target_feature(enable = "neon")]
 pub unsafe fn div_assign_neon(dst: &mut [f64], by: &[f64]) {
     debug_assert_eq!(dst.len(), by.len());
@@ -90,6 +103,10 @@ pub unsafe fn div_assign_neon(dst: &mut [f64], by: &[f64]) {
 /// Vector [`super::xoshiro_block`]: one xoshiro256++ step on two lanes at
 /// a time, integer-exact; a trailing odd lane steps scalar. rotl(v, k)
 /// is `(v << k) | (v >> (64 - k))`.
+///
+/// # Safety
+/// All five slices must share one length; NEON must be available
+/// (baseline on aarch64).
 #[target_feature(enable = "neon")]
 pub unsafe fn xoshiro_block_neon(
     s0: &mut [u64],

@@ -25,6 +25,10 @@ use crate::util::rng::xoshiro_lane_step;
 /// chunk contributes one mul+add per accumulator, in the same ascending
 /// row order as the scalar walk. The remainder (rows mod 8) is scalar
 /// into lanes 0..rem, then the fixed pairwise [`lane_combine`].
+///
+/// # Safety
+/// Caller must have verified AVX2 support (`clamp_supported` in
+/// `arch/mod.rs`); `a` and `b` must be equal-length slices.
 #[target_feature(enable = "avx2")]
 pub unsafe fn lane_dot_avx2(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -51,6 +55,10 @@ pub unsafe fn lane_dot_avx2(a: &[f64], b: &[f64]) -> f64 {
 }
 
 /// Vector [`super::mul_into`]: elementwise product, 4 lanes at a time.
+///
+/// # Safety
+/// Caller must have verified AVX2 support; `dst`, `a`, and `b` must be
+/// equal-length slices.
 #[target_feature(enable = "avx2")]
 pub unsafe fn mul_into_avx2(dst: &mut [f64], a: &[f64], b: &[f64]) {
     debug_assert_eq!(dst.len(), a.len());
@@ -72,6 +80,10 @@ pub unsafe fn mul_into_avx2(dst: &mut [f64], a: &[f64], b: &[f64]) {
 }
 
 /// Vector [`super::div_assign`]: elementwise quotient, 4 lanes at a time.
+///
+/// # Safety
+/// Caller must have verified AVX2 support; `dst` and `by` must be
+/// equal-length slices.
 #[target_feature(enable = "avx2")]
 pub unsafe fn div_assign_avx2(dst: &mut [f64], by: &[f64]) {
     debug_assert_eq!(dst.len(), by.len());
@@ -94,6 +106,10 @@ pub unsafe fn div_assign_avx2(dst: &mut [f64], by: &[f64]) {
 /// at a time, integer-exact; remainder lanes step scalar. AVX2 has no
 /// 64-bit lane rotate (vprolq is AVX-512), so rotl(v, k) is composed as
 /// `(v << k) | (v >> (64 - k))`.
+///
+/// # Safety
+/// Caller must have verified AVX2 support; all five slices must share
+/// one length (unaligned loads/stores are used, so no alignment duty).
 #[target_feature(enable = "avx2")]
 pub unsafe fn xoshiro_block_avx2(
     s0: &mut [u64],

@@ -48,7 +48,7 @@ use crate::coordinator::supervisor::{recover_batch, InFlight, ShardHealth, Shard
 use crate::runtime::{EpsilonMode, InferenceEngine, Manifest};
 use crate::util::threadpool::Bounded;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Front-end loop: runs until the request queue closes, then closes every
 /// shard queue behind itself so the workers drain and exit.
@@ -79,9 +79,9 @@ pub(crate) fn run_dispatcher(
         let mut members = vec![first];
         let mut closed = false;
         // Fill up to max_batch until the deadline.
-        let cutoff = Instant::now() + deadline;
+        let cutoff = crate::util::clock::now() + deadline;
         while members.len() < max_batch {
-            let now = Instant::now();
+            let now = crate::util::clock::now();
             if now >= cutoff {
                 break;
             }

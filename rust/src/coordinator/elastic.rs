@@ -113,18 +113,26 @@ impl ElasticCtx {
     }
 
     pub fn target(&self, shard: usize) -> usize {
+        // RELAXED: targets are pure hints — the owning worker re-reads
+        // at every batch boundary, so a stale value only delays a
+        // resize by one batch; no other memory is published through it.
         self.targets[shard].load(Ordering::Relaxed)
     }
 
     /// Force a shard's target to `n` (operator override / tests); the
     /// owning worker applies it at its next batch boundary or idle tick.
     pub fn set_target(&self, shard: usize, n: usize) {
+        // RELAXED: hint store, same contract as `target` — the counter
+        // itself is the entire message.
         self.targets[shard].store(n.max(1), Ordering::Relaxed);
     }
 
     /// Raise the target one step toward `max`; true if it moved.
     pub fn raise_target(&self, shard: usize, max: usize) -> bool {
         self.targets[shard]
+            // RELAXED: the RMW itself is atomic (no lost steps); no
+            // acquire/release needed because nothing else piggybacks on
+            // the target cell.
             .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |t| {
                 (t < max).then_some(t + 1)
             })
@@ -134,6 +142,7 @@ impl ElasticCtx {
     /// Lower the target one step toward `min`; true if it moved.
     pub fn lower_target(&self, shard: usize, min: usize) -> bool {
         self.targets[shard]
+            // RELAXED: same hint contract as `raise_target`.
             .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |t| {
                 (t > min).then_some(t - 1)
             })

@@ -416,7 +416,7 @@ impl Metrics {
                 requests_deferred: 0,
                 batch_fill_sum: 0.0,
                 latencies_ms: Vec::new(),
-                started: std::time::Instant::now(),
+                started: crate::util::clock::now(),
                 shards: (0..shards.max(1)).map(|_| ShardInner::default()).collect(),
             })),
         }
@@ -506,7 +506,7 @@ impl Metrics {
     /// of an unchanged total (idle worker loops) keep the last rate, so
     /// snapshots stay idempotent.
     pub fn record_epsilon(&self, shard: usize, samples: u64, energy_j: f64) {
-        let now = std::time::Instant::now();
+        let now = crate::util::clock::now();
         let mut g = self.inner.lock().unwrap();
         let s = &mut g.shards[shard];
         match s.epsilon_last {
@@ -537,7 +537,7 @@ impl Metrics {
     /// the `ops` delta between consecutive records, exactly like
     /// [`Metrics::record_epsilon`] derives the GSa/s rate.
     pub fn record_engine_energy(&self, shard: usize, total_j: f64, mvms: u64, ops: u64) {
-        let now = std::time::Instant::now();
+        let now = crate::util::clock::now();
         let mut g = self.inner.lock().unwrap();
         let s = &mut g.shards[shard];
         match s.engine_last {

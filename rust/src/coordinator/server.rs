@@ -49,7 +49,7 @@ use crate::util::threadpool::Bounded;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Factory building one engine per shard, called inside the shard's own
 /// worker thread (engines need not be `Send`). The argument is the shard
@@ -251,7 +251,7 @@ impl Coordinator {
             }
         }
         let (tx, rx) = channel();
-        let enqueued = Instant::now();
+        let enqueued = crate::util::clock::now();
         let req = InferRequest {
             id: self.next_id.fetch_add(1, Ordering::SeqCst),
             pixels,
@@ -679,7 +679,7 @@ mod tests {
             .unwrap();
         let gen = SyntheticPerson::new(32, 13);
         let ticket = coord.submit(Infer::new(gen.sample(0).pixels)).unwrap();
-        let t0 = Instant::now();
+        let t0 = crate::util::clock::now();
         let resp = loop {
             match ticket.try_wait().unwrap() {
                 Some(resp) => break resp,

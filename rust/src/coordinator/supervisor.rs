@@ -37,7 +37,6 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
-use std::time::Instant;
 
 /// Liveness of one shard, as reported by `/v1/health` and
 /// [`Coordinator::shard_health`](crate::coordinator::Coordinator::shard_health).
@@ -309,7 +308,7 @@ pub(crate) fn recover_batch(batch: Batch, failed_shard: usize, ctx: &WorkerCtx) 
                 .send(Reply::Failed(ServeError::ShardFailed { shard: failed_shard }));
             continue;
         }
-        if Instant::now() >= req.deadline {
+        if crate::util::clock::now() >= req.deadline {
             // Budget remains but time does not: the deadline fixed at
             // admission caps the retry, so recovery never stretches the
             // caller's end-to-end bound.

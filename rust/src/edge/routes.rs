@@ -131,6 +131,9 @@ impl Router {
 
     fn record_shed(&self, n: usize) {
         for _ in 0..n {
+            // RELAXED: pure round-robin attribution counter; fetch_add
+            // is already atomic and no ordering with other memory is
+            // implied by which shard a shed is charged to.
             let shard = self.shed_rr.fetch_add(1, Ordering::Relaxed) % self.shards.max(1);
             self.metrics.record_shed(shard);
         }

@@ -144,7 +144,7 @@ fn matching_source(kind: &str) -> Option<Box<dyn GaussianSource>> {
 }
 
 fn software_throughput(mut src: Box<dyn GaussianSource>, n: usize) -> f64 {
-    let t0 = std::time::Instant::now();
+    let t0 = crate::util::clock::now();
     let mut acc = 0.0;
     for _ in 0..n {
         acc += src.sample();

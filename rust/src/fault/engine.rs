@@ -7,7 +7,7 @@ use crate::fault::ALL_SHARDS;
 use crate::grng::bank::shard_die_seed;
 use crate::runtime::{EngineEnergyReport, EpsilonMode, InferenceEngine, Manifest};
 use crate::util::rng::{Rng64, SplitMix64};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
@@ -177,7 +177,9 @@ pub fn wrap_engine_factory(
     inner: crate::coordinator::EngineFactory,
     plan: FaultPlan,
 ) -> crate::coordinator::EngineFactory {
-    let incarnations: Arc<Mutex<HashMap<usize, u64>>> = Arc::new(Mutex::new(HashMap::new()));
+    // BTreeMap, not HashMap: fault/ is replay-pinned, and hash-seeded
+    // iteration order must not leak into anything observable.
+    let incarnations: Arc<Mutex<BTreeMap<usize, u64>>> = Arc::new(Mutex::new(BTreeMap::new()));
     Arc::new(move |shard| {
         let engine = inner(shard)?;
         let incarnation = {

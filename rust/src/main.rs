@@ -10,7 +10,7 @@ use bnn_cim::experiments::{self, fig10_11::Arm};
 use bnn_cim::nn::Model;
 use bnn_cim::util::cli::{parse_args, render_cmd_help, render_help, Command, OptSpec};
 use std::path::Path;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 fn main() {
     let mut args: Vec<String> = std::env::args().skip(1).collect();
@@ -366,7 +366,7 @@ fn cmd_serve(args: &bnn_cim::util::cli::Args) -> CmdResult {
     );
     let gen = SyntheticPerson::new(cfg.model.image_side, 321);
     let period = Duration::from_secs_f64(1.0 / rate.max(0.1));
-    let t0 = Instant::now();
+    let t0 = bnn_cim::util::clock::now();
     let mut tickets = Vec::new();
     let mut sent = 0u64;
     while t0.elapsed() < duration {
@@ -420,7 +420,7 @@ fn serve_listen(
         cfg.server.edge_degrade_load * 100.0,
         cfg.server.edge_shed_load * 100.0,
     );
-    let t0 = Instant::now();
+    let t0 = bnn_cim::util::clock::now();
     let mut ticks = 0u64;
     loop {
         std::thread::sleep(Duration::from_secs(1));

@@ -7,7 +7,7 @@
 
 use crate::util::json::Json;
 use crate::util::stats;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
@@ -110,14 +110,14 @@ impl Suite {
     ) -> &BenchResult {
         // Warmup and iteration-count calibration.
         let mut iters_per_batch = 1u64;
-        let warmup_end = Instant::now() + self.opts.warmup;
+        let warmup_end = crate::util::clock::now() + self.opts.warmup;
         loop {
-            let t0 = Instant::now();
+            let t0 = crate::util::clock::now();
             for _ in 0..iters_per_batch {
                 f();
             }
             let dt = t0.elapsed();
-            if Instant::now() >= warmup_end {
+            if crate::util::clock::now() >= warmup_end {
                 // Aim for measure/batches per batch.
                 let target = self.opts.measure.as_nanos() as f64 / self.opts.batches as f64;
                 let per_iter = dt.as_nanos() as f64 / iters_per_batch as f64;
@@ -132,7 +132,7 @@ impl Suite {
         let mut estimates = Vec::with_capacity(self.opts.batches);
         let mut total_iters = 0u64;
         for _ in 0..self.opts.batches {
-            let t0 = Instant::now();
+            let t0 = crate::util::clock::now();
             for _ in 0..iters_per_batch {
                 f();
             }
@@ -296,7 +296,7 @@ pub fn measure_serving_sweep(cfg: &crate::config::Config, n_req: usize) -> Servi
     let gen = SyntheticPerson::new(cfg.model.image_side, 7);
     // Pre-generate so the dataset is not on the measured path.
     let imgs: Vec<Vec<f32>> = (0..n_req as u64).map(|i| gen.sample(i).pixels).collect();
-    let t0 = Instant::now();
+    let t0 = crate::util::clock::now();
     let tickets = coord
         .submit_many(imgs.into_iter().map(Infer::new))
         .expect("queue sized for full load");
@@ -330,7 +330,7 @@ pub fn quick_ns_per_iter<F: FnMut()>(mut f: F, min_iters: u64, target: Duration)
     for _ in 0..min_iters.clamp(1, 16) {
         f();
     }
-    let t0 = Instant::now();
+    let t0 = crate::util::clock::now();
     let mut iters = 0u64;
     loop {
         f();

@@ -1,0 +1,20 @@
+//! The single sanctioned wall-clock read.
+//!
+//! Replay-pinned modules (`arch`, `bayes`, `cim`, `fault`, `grng`, `nn`,
+//! `edge::json`, `util::rng` — see `tools/invariant-lint/contracts.toml`)
+//! must be time-free: `invariant-lint` rule R3 rejects any `Instant` or
+//! `SystemTime` token there, and `clippy.toml` disallows
+//! `Instant::now`/`SystemTime::now` everywhere else so that timing-aware
+//! code (deadlines, metrics, benches) funnels through this one function.
+//! That makes "who reads the clock" a one-line grep, which is what keeps
+//! the determinism audit in DESIGN.md §11 honest.
+
+use std::time::Instant;
+
+/// Current monotonic instant. The only call site of `Instant::now` in
+/// the crate; everything scheduling against wall time goes through here.
+#[inline]
+#[allow(clippy::disallowed_methods)]
+pub fn now() -> Instant {
+    Instant::now()
+}

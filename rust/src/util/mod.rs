@@ -3,6 +3,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod clock;
 pub mod json;
 pub mod propcheck;
 pub mod rng;

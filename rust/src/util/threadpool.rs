@@ -264,7 +264,7 @@ impl<T> Bounded<T> {
 
     /// Receive with a timeout; Ok(None) on timeout, Err(()) when closed.
     pub fn recv_timeout(&self, dur: std::time::Duration) -> Result<Option<T>, ()> {
-        let deadline = std::time::Instant::now() + dur;
+        let deadline = crate::util::clock::now() + dur;
         let mut q = self.inner.queue.lock().unwrap();
         loop {
             if let Some(item) = q.pop_front() {
@@ -274,7 +274,7 @@ impl<T> Bounded<T> {
             if *self.inner.closed.lock().unwrap() {
                 return Err(());
             }
-            let now = std::time::Instant::now();
+            let now = crate::util::clock::now();
             if now >= deadline {
                 return Ok(None);
             }

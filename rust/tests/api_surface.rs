@@ -9,8 +9,9 @@
 //! 2. The shim-equivalence tests pin the `#[deprecated]` pre-v1
 //!    constructors bit-identical to their builder replacements, so the
 //!    deprecation window cannot drift. They are the only remaining
-//!    callers of the old constructors.
-#![allow(deprecated)]
+//!    callers of the old constructors — each carries its own
+//!    item-scoped `#[allow(deprecated)]` so a *new* deprecated call
+//!    anywhere else in this file still warns.
 
 use bnn_cim::client::{
     Backend, Config, Coordinator, CoordinatorBuilder, EngineFactory, EpsilonMode, Infer,
@@ -138,6 +139,7 @@ fn serve(coord: Coordinator) -> Vec<Vec<f64>> {
 }
 
 #[test]
+#[allow(deprecated)] // exercises the pre-v1 shims on purpose
 fn deprecated_sim_constructors_are_builder_shims() {
     let via_builder = serve(
         Coordinator::builder(sim_cfg())
@@ -173,6 +175,7 @@ fn deprecated_sim_constructors_are_builder_shims() {
 }
 
 #[test]
+#[allow(deprecated)] // exercises the pre-v1 shims on purpose
 fn deprecated_cim_constructor_is_a_builder_shim() {
     // Small tiles keep bring-up calibration cheap in debug builds.
     let mk = || {
@@ -192,6 +195,7 @@ fn deprecated_cim_constructor_is_a_builder_shim() {
 }
 
 #[test]
+#[allow(deprecated)] // exercises the pre-v1 shims on purpose
 fn deprecated_infer_blocking_is_an_infer_shim() {
     let gen = SyntheticPerson::new(32, 9);
     let old = {
@@ -219,6 +223,7 @@ fn deprecated_infer_blocking_is_an_infer_shim() {
 
 #[cfg(not(feature = "pjrt"))]
 #[test]
+#[allow(deprecated)] // start/start_with_source are pre-v1 shims
 fn pjrt_constructors_error_cleanly_without_the_feature() {
     use bnn_cim::coordinator::PhiloxSource;
     // Builder and shims agree: booting the pjrt backend without the

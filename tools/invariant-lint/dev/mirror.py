@@ -1,0 +1,639 @@
+#!/usr/bin/env python3
+"""Reference mirror of invariant-lint (rules R1-R5) for toolchain-less
+containers.
+
+The authoring environment for this repo historically has no Rust
+toolchain (see ROADMAP.md), so this script re-implements the linter's
+exact token-level semantics in Python. It exists to validate contract
+changes and annotation sweeps locally before CI runs the real binary;
+the Rust implementation in ../src is authoritative. Keep the two in
+sync when changing rule semantics.
+
+Usage: python3 tools/invariant-lint/dev/mirror.py [--contracts PATH]
+       [--edges] <paths...>
+"""
+
+import sys
+from pathlib import Path
+
+
+def parse_toml(text):
+    """TOML subset matching src/toml_lite.rs (sections, strings, ints,
+    bools, single-line string arrays). No tomllib: the authoring
+    containers may run Python < 3.11."""
+    doc = {}
+    section = []
+    for raw in text.splitlines():
+        # Strip comments outside strings.
+        out, in_str = [], False
+        for ch in raw:
+            if ch == '"':
+                in_str = not in_str
+            if ch == "#" and not in_str:
+                break
+            out.append(ch)
+        line = "".join(out).strip()
+        if not line:
+            continue
+        if line.startswith("["):
+            section = line.strip("[]").strip().split(".")
+            continue
+        key, _, val = line.partition("=")
+        key = key.strip().strip('"')
+        val = val.strip()
+        if val.startswith("["):
+            items = []
+            body = val.strip("[]")
+            cur, in_str = [], False
+            parts = []
+            for ch in body:
+                if ch == '"':
+                    in_str = not in_str
+                if ch == "," and not in_str:
+                    parts.append("".join(cur))
+                    cur = []
+                else:
+                    cur.append(ch)
+            parts.append("".join(cur))
+            for p in parts:
+                p = p.strip()
+                if p:
+                    items.append(p.strip('"'))
+            parsed = items
+        elif val.startswith('"'):
+            parsed = val.strip('"')
+        elif val in ("true", "false"):
+            parsed = val == "true"
+        else:
+            parsed = int(val)
+        node = doc
+        for s in section:
+            node = node.setdefault(s, {})
+        node[key] = parsed
+    return doc
+
+MULTI = ["::", "=>", "->", "||", "&&", "..=", ".."]
+ACQUIRE = {"lock", "read", "write"}
+GUARD_CHAIN = {"unwrap", "expect", "unwrap_or_else"}
+KEYWORDS = {"if", "while", "for", "match", "return", "loop", "fn", "let", "move", "in"}
+
+
+def strip(text: str) -> str:
+    b = text
+    out = []
+    i, n = 0, len(b)
+    while i < n:
+        c = b[i]
+        if c == "/" and i + 1 < n and b[i + 1] == "/":
+            while i < n and b[i] != "\n":
+                out.append(" ")
+                i += 1
+            continue
+        if c == "/" and i + 1 < n and b[i + 1] == "*":
+            depth = 1
+            out.append("  ")
+            i += 2
+            while i < n and depth:
+                if b[i] == "/" and i + 1 < n and b[i + 1] == "*":
+                    depth += 1
+                    out.append("  ")
+                    i += 2
+                elif b[i] == "*" and i + 1 < n and b[i + 1] == "/":
+                    depth -= 1
+                    out.append("  ")
+                    i += 2
+                else:
+                    out.append("\n" if b[i] == "\n" else " ")
+                    i += 1
+            continue
+        if c == "r" or (c == "b" and i + 1 < n and b[i + 1] == "r"):
+            start = i + 1 if c == "b" else i
+            j = start + 1
+            while j < n and b[j] == "#":
+                j += 1
+            prev_ident = i > 0 and (b[i - 1].isalnum() or b[i - 1] == "_")
+            if j < n and b[j] == '"' and not prev_ident:
+                hashes = j - (start + 1)
+                out.append(" " * (j - i + 1))
+                i = j + 1
+                close = '"' + "#" * hashes
+                while i < n:
+                    if b[i] == '"' and b[i : i + len(close)] == close:
+                        out.append(" " * len(close))
+                        i += len(close)
+                        break
+                    out.append("\n" if b[i] == "\n" else " ")
+                    i += 1
+                continue
+        if c == '"':
+            out.append('"')
+            i += 1
+            while i < n:
+                if b[i] == "\\" and i + 1 < n:
+                    out.append("  ")
+                    i += 2
+                    continue
+                if b[i] == '"':
+                    out.append('"')
+                    i += 1
+                    break
+                out.append("\n" if b[i] == "\n" else " ")
+                i += 1
+            continue
+        if c == "'":
+            end = char_literal_end(b, i)
+            if end is not None:
+                out.append(" " * (end - i))
+                i = end
+                continue
+        out.append(c)
+        i += 1
+    return "".join(out)
+
+
+def char_literal_end(b, i):
+    n = len(b)
+    if i + 1 >= n:
+        return None
+    if b[i + 1] == "\\":
+        j = i + 2
+        while j < n and b[j] not in ("'", "\n"):
+            j += 1
+        return j + 1 if j < n and b[j] == "'" else None
+    # Exactly one char then a closing quote (mirror counts UTF-8 bytes;
+    # Python strings are chars, which matches one codepoint per char).
+    close = i + 2
+    if close < n and b[close] == "'" and b[i + 1] != "\n":
+        return close + 1
+    return None
+
+
+def tokenize(s):
+    toks = []  # (line, text, is_ident)
+    line, i, n = 1, 0, len(s)
+    while i < n:
+        c = s[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c.isspace():
+            i += 1
+            continue
+        if c == "_" or c.isalpha():
+            j = i
+            while j < n and (s[j] == "_" or s[j].isalnum()):
+                j += 1
+            toks.append((line, s[i:j], True))
+            i = j
+            continue
+        if c.isdigit():
+            j = i
+            while j < n and (s[j] == "_" or s[j].isalnum()):
+                j += 1
+            if j + 1 < n and s[j] == "." and s[j + 1].isdigit():
+                j += 1
+                while j < n and (s[j] == "_" or s[j].isalnum()):
+                    j += 1
+            toks.append((line, s[i:j], False))
+            i = j
+            continue
+        matched = False
+        for pat in MULTI:
+            if s.startswith(pat, i):
+                toks.append((line, pat, False))
+                i += len(pat)
+                matched = True
+                break
+        if matched:
+            continue
+        toks.append((line, c, False))
+        i += 1
+    return toks
+
+
+def test_ranges(toks):
+    ranges = []
+    i = 0
+    while i + 6 < len(toks):
+        if [t[1] for t in toks[i : i + 7]] == ["#", "[", "cfg", "(", "test", ")", "]"]:
+            j = i + 7
+            while j < len(toks) and toks[j][1] not in ("mod", "{", ";"):
+                j += 1
+            if j < len(toks) and toks[j][1] == "mod":
+                while j < len(toks) and toks[j][1] != "{":
+                    j += 1
+                if j < len(toks):
+                    start_line = toks[i][0]
+                    depth = 0
+                    while j < len(toks):
+                        if toks[j][1] == "{":
+                            depth += 1
+                        elif toks[j][1] == "}":
+                            depth -= 1
+                            if depth == 0:
+                                ranges.append((start_line, toks[j][0]))
+                                break
+                        j += 1
+            i = max(j, i + 1)
+        else:
+            i += 1
+    return ranges
+
+
+class Src:
+    def __init__(self, rel, text):
+        self.rel = rel
+        self.raw = text.splitlines()
+        self.toks = tokenize(strip(text))
+        self.tests = test_ranges(self.toks)
+
+    def in_test(self, line):
+        return any(lo <= line <= hi for lo, hi in self.tests)
+
+    def window(self, line, above, needles):
+        lo = max(0, line - above - 1)
+        return any(any(nd in l for nd in needles) for l in self.raw[lo:line])
+
+
+def under(rel, dirs):
+    for d in dirs:
+        d = d.rstrip("/")
+        if rel == d or rel.startswith(d + "/"):
+            return True
+    return False
+
+
+def rules_r1_r4(f, c, out):
+    for line, text, is_ident in f.toks:
+        if text == "unsafe":
+            if not under(f.rel, c["rules"]["unsafe"]["allowed_dirs"]):
+                out.append((f.rel, line, "R1", "unsafe outside allowed dirs"))
+            if not f.window(line, 10, ["SAFETY:", "# Safety"]):
+                out.append((f.rel, line, "R1", "unsafe without SAFETY"))
+    if under(f.rel, c["rules"]["fma"]["deny_dirs"]):
+        for line, text, is_ident in f.toks:
+            if is_ident and text in c["rules"]["fma"]["tokens"]:
+                out.append((f.rel, line, "R2", f"fused-op token {text}"))
+    if under(f.rel, c["rules"]["replay"]["pinned"]):
+        for line, text, is_ident in f.toks:
+            if is_ident and not f.in_test(line) and text in c["rules"]["replay"]["banned"]:
+                out.append((f.rel, line, "R3", f"banned ident {text}"))
+    if f.rel not in c["rules"]["relaxed"]["allow"]:
+        t = f.toks
+        for i in range(len(t) - 2):
+            if t[i][1] == "Ordering" and t[i + 1][1] == "::" and t[i + 2][1] == "Relaxed":
+                if not f.window(t[i][0], 3, ["RELAXED:"]):
+                    out.append((f.rel, t[i][0], "R4", "Relaxed without RELAXED:"))
+
+
+def match_brace(toks, open_i):
+    depth = 0
+    j = open_i
+    while j < len(toks):
+        if toks[j][1] == "{":
+            depth += 1
+        elif toks[j][1] == "}":
+            depth -= 1
+            if depth == 0:
+                return j
+        j += 1
+    return len(toks)
+
+
+def closure_body(toks, pipe):
+    j = pipe
+    if toks[j][1] == "||":
+        j += 1
+    else:
+        j += 1
+        while j < len(toks) and toks[j][1] != "|":
+            j += 1
+        j += 1
+    if j >= len(toks):
+        return None
+    if toks[j][1] == "{":
+        return (j + 1, match_brace(toks, j))
+    start = j
+    paren = brace = 0
+    while j < len(toks):
+        t = toks[j][1]
+        if t == "(":
+            paren += 1
+        elif t == ")":
+            if paren == 0:
+                return (start, j)
+            paren -= 1
+        elif t == "{":
+            brace += 1
+        elif t == "}":
+            brace -= 1
+        elif t in (",", ";") and paren == 0 and brace == 0:
+            return (start, j)
+        j += 1
+    return (start, len(toks))
+
+
+def collect_funcs(f, file_idx, out):
+    toks = f.toks
+    depth = 0
+    impls = []
+    named_pipes = set()
+    i = 0
+    while i < len(toks):
+        t = toks[i][1]
+        if t == "{":
+            depth += 1
+        elif t == "}":
+            depth -= 1
+            while impls and depth < impls[-1][1]:
+                impls.pop()
+        elif t == "impl":
+            j = i + 1
+            angle = 0
+            last_ident = None
+            while j < len(toks) and not (angle == 0 and toks[j][1] == "{"):
+                tj = toks[j][1]
+                if tj == "<":
+                    angle += 1
+                elif tj == ">":
+                    angle -= 1
+                elif toks[j][2] and angle == 0 and tj != "for":
+                    last_ident = tj
+                j += 1
+            if last_ident:
+                impls.append((last_ident, depth + 1))
+        elif t == "fn" and i + 1 < len(toks) and toks[i + 1][2]:
+            name = toks[i + 1][1]
+            j = i + 2
+            paren = 0
+            while j < len(toks):
+                tj = toks[j][1]
+                if tj == "(":
+                    paren += 1
+                elif tj == ")":
+                    paren -= 1
+                elif tj in (";", "{") and paren == 0:
+                    break
+                j += 1
+            if j < len(toks) and toks[j][1] == "{":
+                out.append(
+                    dict(name=name, qual=impls[-1][0] if impls else None,
+                         file=file_idx, body=(j + 1, match_brace(toks, j)))
+                )
+        elif t == "let":
+            j = i + 1
+            if j < len(toks) and toks[j][1] == "mut":
+                j += 1
+            if j + 1 < len(toks) and toks[j][2] and toks[j + 1][1] == "=":
+                name = toks[j][1]
+                k = j + 2
+                if k < len(toks) and toks[k][1] == "move":
+                    k += 1
+                if k < len(toks) and toks[k][1] in ("|", "||"):
+                    body = closure_body(toks, k)
+                    if body:
+                        named_pipes.add(k)
+                        out.append(dict(name=name, qual=None, file=file_idx, body=body))
+        i += 1
+    i = 0
+    while i < len(toks):
+        t = toks[i][1]
+        if t in ("|", "||") and i not in named_pipes:
+            prev = toks[i - 1][1] if i else ""
+            if prev in ("(", ",", "=", "move", "=>", ";", "{", "}", "return"):
+                body = closure_body(toks, i)
+                if body:
+                    out.append(dict(name="<closure>", qual=None, file=file_idx, body=body))
+                    i = body[1]
+                    continue
+        i += 1
+
+
+def receiver_path(toks, dot, floor):
+    segs = []
+    j = dot
+    while j > floor:
+        line, text, is_ident = toks[j - 1]
+        if is_ident or (text and text.isdigit()):
+            segs.append(text)
+            if j >= 2 and toks[j - 2][1] == ".":
+                j -= 2
+                continue
+        break
+    segs.reverse()
+    return segs
+
+
+def resolve(path, qual, lg):
+    if path and path[0] == "self":
+        return lg.get("types", {}).get(qual) if qual else None
+    for seg in reversed(path):
+        if seg in lg.get("vars", {}):
+            return lg["vars"][seg]
+    return None
+
+
+def find_binding(toks, i, floor):
+    j = i
+    let_at = None
+    while j > floor:
+        j -= 1
+        t = toks[j][1]
+        if t in (";", "{", "}"):
+            break
+        if t == "let":
+            let_at = j
+            break
+    if let_at is None:
+        return None
+    name = None
+    k = let_at + 1
+    while k < i and toks[k][1] != "=":
+        if toks[k][2] and toks[k][1] not in ("mut", "ref", "Ok", "Some", "Err"):
+            name = toks[k][1]
+        k += 1
+    return name
+
+
+def scan_body(f, fun, allf, lg, diags):
+    toks = f.toks
+    start, end = fun["body"]
+    nested = [g["body"] for g in allf
+              if g["file"] == fun["file"] and g["body"][0] > start and g["body"][1] <= end]
+    events = []
+    guards = []  # dict(lock, depth, binding, temp)
+    depth = 0
+    ignore = set(lg.get("ignore_methods", []))
+    i = start
+    while i < end:
+        skipped = False
+        for ns, ne in nested:
+            if ns <= i < ne:
+                i = ne
+                skipped = True
+                break
+        if skipped:
+            continue
+        line, text, is_ident = toks[i]
+        if text == "{":
+            depth += 1
+        elif text == "}":
+            depth -= 1
+            guards = [g for g in guards if g["depth"] <= depth]
+        elif text == ";":
+            guards = [g for g in guards if not (g["temp"] and depth <= g["depth"])]
+        else:
+            if (
+                text == "drop"
+                and i + 3 < end
+                and toks[i + 1][1] == "("
+                and toks[i + 2][2]
+                and toks[i + 3][1] == ")"
+            ):
+                victim = toks[i + 2][1]
+                guards = [g for g in guards if g["binding"] != victim]
+                i += 4
+                continue
+            is_method = i > 0 and toks[i - 1][1] == "."
+            calls_paren = i + 1 < end and toks[i + 1][1] == "("
+            if is_ident and calls_paren:
+                zero_arg = i + 2 < end and toks[i + 2][1] == ")"
+                if is_method and zero_arg and text in ACQUIRE:
+                    path = receiver_path(toks, i - 1, start)
+                    lock = resolve(path, fun["qual"], lg)
+                    if lock:
+                        events.append((line, [g["lock"] for g in guards], ("acq", lock)))
+                        binding = find_binding(toks, i, start)
+                        guards.append(
+                            dict(lock=lock, depth=depth, binding=binding, temp=binding is None)
+                        )
+                    else:
+                        diags.append(
+                            (f.rel, line, "R5", f"unresolved lock receiver {'.'.join(path)}")
+                        )
+                    i += 3
+                    continue
+                is_macro = i + 1 < end and toks[i + 1][1] == "!"
+                skip = (
+                    text in KEYWORDS
+                    or is_macro
+                    or (is_method and (text in ignore or text in GUARD_CHAIN))
+                )
+                if not skip:
+                    events.append((line, [g["lock"] for g in guards], ("call", text)))
+        i += 1
+    return events
+
+
+def lockgraph(files, c, diags):
+    lg = c.get("lockgraph", {})
+    scan_dirs = lg.get("scan", [])
+    funcs = []
+    for idx, f in enumerate(files):
+        if under(f.rel, scan_dirs):
+            collect_funcs(f, idx, funcs)
+    events = [scan_body(files[fn["file"]], fn, funcs, lg, diags) for fn in funcs]
+    by_name = {}
+    for i, fn in enumerate(funcs):
+        if fn["name"] != "<closure>":
+            by_name.setdefault(fn["name"], []).append(i)
+    acq = [set(l for _, _, (k, l) in evs if k == "acq") for evs in events]
+    changed = True
+    while changed:
+        changed = False
+        for i, evs in enumerate(events):
+            for _, _, (k, name) in evs:
+                if k == "call":
+                    for t in by_name.get(name, []):
+                        if t != i and not acq[t] <= acq[i]:
+                            acq[i] |= acq[t]
+                            changed = True
+    edges = {}
+    for i, evs in enumerate(events):
+        f = files[funcs[i]["file"]]
+        for line, held, (k, name) in evs:
+            if not held:
+                continue
+            acquired = [name] if k == "acq" else sorted(
+                set().union(*[acq[t] for t in by_name.get(name, []) if t != i] or [set()])
+            )
+            for h in held:
+                for a in acquired:
+                    edges.setdefault((h, a), (f.rel, line))
+    # Cycle detection.
+    adj = {}
+    for a, b in edges:
+        adj.setdefault(a, set()).add(b)
+    seen_sets = set()
+    cycles = []
+    for root in sorted(adj):
+        path = []
+
+        def dfs(node):
+            path.append(node)
+            for nxt in sorted(adj.get(node, ())):
+                if nxt == root:
+                    return path + [root]
+                if nxt not in path:
+                    got = dfs(nxt)
+                    if got:
+                        return got
+            path.pop()
+            return None
+
+        cyc = dfs(root)
+        if cyc:
+            key = tuple(sorted(cyc[:-1]))
+            if key not in seen_sets:
+                seen_sets.add(key)
+                cycles.append(cyc)
+    for cyc in cycles:
+        f, l = edges.get((cyc[0], cyc[1]), ("", 0))
+        diags.append((f, l, "R5", "lock-order cycle: " + " -> ".join(cyc)))
+    return edges
+
+
+def main():
+    args = sys.argv[1:]
+    contracts_path = None
+    show_edges = False
+    roots = []
+    i = 0
+    while i < len(args):
+        if args[i] == "--contracts":
+            contracts_path = Path(args[i + 1])
+            i += 2
+        elif args[i] == "--edges":
+            show_edges = True
+            i += 1
+        else:
+            roots.append(Path(args[i]))
+            i += 1
+    if contracts_path is None:
+        contracts_path = Path(__file__).resolve().parent.parent / "contracts.toml"
+    c = parse_toml(contracts_path.read_text())
+    total = 0
+    for root in roots:
+        files = []
+        if root.is_file():
+            files.append(Src(root.name, root.read_text()))
+        else:
+            for p in sorted(root.rglob("*.rs")):
+                files.append(Src(str(p.relative_to(root)), p.read_text()))
+        diags = []
+        for f in files:
+            rules_r1_r4(f, c, diags)
+        edges = lockgraph(files, c, diags)
+        diags.sort()
+        for d in sorted(set(diags)):
+            print("%s:%d: [%s] %s" % d)
+        total += len(diags)
+        if show_edges:
+            for (a, b), (fr, lr) in sorted(edges.items()):
+                print(f"# edge {a} -> {b}  ({fr}:{lr})", file=sys.stderr)
+    sys.exit(1 if total else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+// BAD (R1): unsafe inside the allowed dir but with no SAFETY comment.
+pub fn lane_sum(a: &[f64]) -> f64 {
+    unsafe { *a.get_unchecked(0) }
+}

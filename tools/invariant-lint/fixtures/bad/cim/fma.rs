@@ -1,0 +1,4 @@
+// BAD (R2): fused multiply-add in a bit-identity kernel module.
+pub fn mac(acc: f64, a: f64, b: f64) -> f64 {
+    a.mul_add(b, acc)
+}

@@ -1,0 +1,5 @@
+// BAD (R1): unsafe outside the allowed dirs, even though annotated.
+pub fn peek(a: &[f64]) -> f64 {
+    // SAFETY: caller guarantees a is non-empty.
+    unsafe { *a.get_unchecked(0) }
+}

@@ -1,0 +1,15 @@
+// BAD (R5): two paths acquire the same pair of locks in opposite
+// orders — the classic AB/BA deadlock shape.
+use std::sync::Mutex;
+
+pub fn worker_a(alpha: &Mutex<u32>, beta: &Mutex<u32>) {
+    let g = alpha.lock();
+    beta.lock();
+    drop(g);
+}
+
+pub fn worker_b(alpha: &Mutex<u32>, beta: &Mutex<u32>) {
+    let g = beta.lock();
+    alpha.lock();
+    drop(g);
+}

@@ -1,0 +1,6 @@
+// BAD (R4): Relaxed ordering with no RELAXED: justification.
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn bump(counter: &AtomicUsize) -> usize {
+    counter.fetch_add(1, Ordering::Relaxed)
+}

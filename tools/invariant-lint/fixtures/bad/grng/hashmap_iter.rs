@@ -1,0 +1,6 @@
+// BAD (R3): hash-ordered iteration inside a replay-pinned module.
+use std::collections::HashMap;
+
+pub fn total(map: &HashMap<u32, f64>) -> f64 {
+    map.values().sum()
+}

@@ -1,0 +1,6 @@
+// BAD (R3): wall-clock read inside a replay-pinned module.
+use std::time::Instant;
+
+pub fn seed_from_clock() -> u64 {
+    Instant::now().elapsed().as_nanos() as u64
+}

@@ -1,0 +1,13 @@
+// GOOD: unsafe in the allowed dir, annotated.
+pub fn lane_sum(a: &[f64]) -> f64 {
+    // SAFETY: caller guarantees a is non-empty; bounds checked above.
+    unsafe { *a.get_unchecked(0) }
+}
+
+/// Doc-sectioned form.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available.
+pub unsafe fn lane_dot(a: &[f64], b: &[f64]) -> f64 {
+    a[0] * b[0]
+}

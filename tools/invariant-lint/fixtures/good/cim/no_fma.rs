@@ -1,0 +1,7 @@
+// GOOD: separate mul + add roundings; "mul_add" only in comment/string.
+pub fn mac(acc: f64, a: f64, b: f64) -> f64 {
+    // mul_add is forbidden here: two roundings, bit-identical on all arms.
+    let why = "no mul_add";
+    let _ = why;
+    acc + a * b
+}

@@ -1,0 +1,16 @@
+// GOOD: both paths acquire alpha before beta — a consistent global
+// order, so the lock graph is acyclic.
+use std::sync::Mutex;
+
+pub fn worker_a(alpha: &Mutex<u32>, beta: &Mutex<u32>) {
+    let g = alpha.lock();
+    beta.lock();
+    drop(g);
+}
+
+pub fn worker_b(alpha: &Mutex<u32>, beta: &Mutex<u32>) {
+    let g = alpha.lock();
+    let h = beta.lock();
+    drop(h);
+    drop(g);
+}

@@ -1,0 +1,7 @@
+// GOOD: Relaxed ordering justified.
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn bump(counter: &AtomicUsize) -> usize {
+    // RELAXED: monotonic stats counter; no data published through it.
+    counter.fetch_add(1, Ordering::Relaxed)
+}

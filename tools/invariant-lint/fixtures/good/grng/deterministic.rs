@@ -1,0 +1,32 @@
+// GOOD: replay-pinned module with counter-based state only; wall-clock
+// timing confined to a cfg(test) module.
+use std::collections::BTreeMap;
+
+pub fn fill(seed: u64, out: &mut [u64]) {
+    let mut s = seed;
+    for v in out.iter_mut() {
+        s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *v = s;
+    }
+}
+
+pub fn histogram(samples: &[u64]) -> BTreeMap<u64, u64> {
+    let mut h = BTreeMap::new();
+    for &s in samples {
+        *h.entry(s % 16).or_insert(0) += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_is_fine_in_tests() {
+        let t0 = std::time::Instant::now();
+        let mut out = [0u64; 4];
+        fill(7, &mut out);
+        assert!(t0.elapsed().as_secs() < 60);
+    }
+}

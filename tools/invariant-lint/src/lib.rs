@@ -1,0 +1,159 @@
+//! invariant-lint: static enforcement of the repo's determinism and
+//! concurrency contracts (DESIGN.md §11).
+//!
+//! Rules:
+//! - **R1** — `unsafe` confined to the SIMD arch layer, every use
+//!   annotated `// SAFETY:` (or a `# Safety` doc section).
+//! - **R2** — no fused-multiply-add tokens in bit-identity kernels.
+//! - **R3** — no wall clocks, hash-ordered collections, or ambient
+//!   randomness in replay-pinned modules.
+//! - **R4** — every `Ordering::Relaxed` carries a `// RELAXED:`
+//!   justification.
+//! - **R5** — the coordinator's lock-acquisition graph is acyclic.
+//!
+//! Everything is std-only and hand-rolled, same ethos as the edge's
+//! JSON codec: the linter must never acquire a dependency surface
+//! larger than the invariants it guards.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+pub mod lockgraph;
+pub mod rules;
+pub mod scan;
+pub mod toml_lite;
+
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl Diagnostic {
+    pub fn new(file: &str, line: usize, rule: &'static str, msg: String) -> Diagnostic {
+        Diagnostic {
+            file: file.to_string(),
+            line,
+            rule,
+            msg,
+        }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.msg
+        )
+    }
+}
+
+/// Parsed `contracts.toml`.
+#[derive(Debug, Clone)]
+pub struct Contracts {
+    pub unsafe_allowed_dirs: Vec<String>,
+    pub fma_deny_dirs: Vec<String>,
+    pub fma_tokens: Vec<String>,
+    pub replay_pinned: Vec<String>,
+    pub replay_banned: Vec<String>,
+    pub relaxed_allow: Vec<String>,
+    pub lock_scan: Vec<String>,
+    pub lock_types: BTreeMap<String, String>,
+    pub lock_vars: BTreeMap<String, String>,
+    pub lock_ignore_methods: Vec<String>,
+}
+
+impl Contracts {
+    pub fn from_doc(doc: &toml_lite::Doc) -> Contracts {
+        Contracts {
+            unsafe_allowed_dirs: doc.list("rules.unsafe.allowed_dirs"),
+            fma_deny_dirs: doc.list("rules.fma.deny_dirs"),
+            fma_tokens: doc.list("rules.fma.tokens"),
+            replay_pinned: doc.list("rules.replay.pinned"),
+            replay_banned: doc.list("rules.replay.banned"),
+            relaxed_allow: doc.list("rules.relaxed.allow"),
+            lock_scan: doc.list("lockgraph.scan"),
+            lock_types: doc.table("lockgraph.types"),
+            lock_vars: doc.table("lockgraph.vars"),
+            lock_ignore_methods: doc.list("lockgraph.ignore_methods"),
+        }
+    }
+
+    pub fn load(path: &Path) -> Result<Contracts, String> {
+        let text = fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let doc = toml_lite::Doc::parse(&text)
+            .map_err(|e| format!("{}: {e}", path.display()))?;
+        Ok(Contracts::from_doc(&doc))
+    }
+
+    /// Contracts used by the unit tests: a miniature of the real file.
+    pub fn test_default() -> Contracts {
+        let mut lock_types = BTreeMap::new();
+        for (k, v) in [
+            ("ShardTable", "shard_table"),
+            ("InFlight", "in_flight"),
+            ("SwapState", "swap_state"),
+            ("Metrics", "metrics"),
+        ] {
+            lock_types.insert(k.to_string(), v.to_string());
+        }
+        let mut lock_vars = BTreeMap::new();
+        for (k, v) in [
+            ("slot", "in_flight"),
+            ("metrics", "metrics"),
+            ("h", "handles"),
+            ("entries", "shard_table"),
+        ] {
+            lock_vars.insert(k.to_string(), v.to_string());
+        }
+        Contracts {
+            unsafe_allowed_dirs: vec!["arch".into()],
+            fma_deny_dirs: vec!["arch".into(), "cim".into(), "grng".into()],
+            fma_tokens: ["mul_add", "fma", "_mm256_fmadd_pd", "vfmaq_f64"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            replay_pinned: vec!["arch".into(), "cim".into(), "grng".into()],
+            replay_banned: ["Instant", "SystemTime", "HashMap", "HashSet", "thread_rng"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            relaxed_allow: Vec::new(),
+            lock_scan: vec!["coordinator".into()],
+            lock_types,
+            lock_vars,
+            lock_ignore_methods: ["clone", "len", "iter", "push", "send", "recv", "close"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        }
+    }
+}
+
+/// Lint every `.rs` file under `root` (or `root` itself when it is a
+/// file). Diagnostics come back sorted by (file, line, rule).
+pub fn lint_root(root: &Path, c: &Contracts) -> io::Result<Vec<Diagnostic>> {
+    let mut sources = Vec::new();
+    for (abs, rel) in scan::rs_files(root)? {
+        sources.push(scan::SourceFile::load(&abs, &rel)?);
+    }
+    let mut diags = Vec::new();
+    for f in &sources {
+        rules::r1_unsafe(f, c, &mut diags);
+        rules::r2_fma(f, c, &mut diags);
+        rules::r3_replay(f, c, &mut diags);
+        rules::r4_relaxed(f, c, &mut diags);
+    }
+    diags.extend(lockgraph::analyze(&sources, c).diagnostics);
+    diags.sort();
+    diags.dedup();
+    Ok(diags)
+}

@@ -1,0 +1,697 @@
+//! R5: static lock-order screening over the coordinator.
+//!
+//! The scanner extracts every `Mutex`/`RwLock` acquisition site
+//! (`.lock()` / zero-arg `.read()` / `.write()`), resolves the receiver
+//! to a named *lock class* via `contracts.toml` (`[lockgraph.types]` for
+//! `self`-rooted acquisitions inside an `impl`, `[lockgraph.vars]` for
+//! free variables), tracks guard lifetimes with scope heuristics, and
+//! follows named calls transitively to build a lock-class digraph.
+//! A cycle (including a self-edge: re-locking a held class) fails the
+//! lint. Unresolvable receivers are themselves diagnostics so the maps
+//! stay maintained as the coordinator grows.
+//!
+//! Known under-approximations (documented in DESIGN.md §11): anonymous
+//! closures are scanned as detached roots — their internal lock edges
+//! are seen, but a closure executed synchronously under a held guard
+//! does not inherit that guard — and locks internal to unscanned
+//! modules (`util::threadpool::Bounded`, `runtime::SharedModelCache`)
+//! are invisible to the graph.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::scan::{SourceFile, Token};
+use crate::{Contracts, Diagnostic};
+
+const ACQUIRE_METHODS: [&str; 3] = ["lock", "read", "write"];
+const GUARD_CHAIN: [&str; 3] = ["unwrap", "expect", "unwrap_or_else"];
+const KEYWORDS: [&str; 10] = [
+    "if", "while", "for", "match", "return", "loop", "fn", "let", "move", "in",
+];
+
+#[derive(Debug)]
+struct Func {
+    /// Bare name; anonymous closures get `"<closure>"` and are never
+    /// resolvable as callees.
+    name: String,
+    /// Surrounding `impl` type, for `self`-rooted receiver resolution.
+    qual: Option<String>,
+    file_idx: usize,
+    /// Token index range [start, end) of the body.
+    body: (usize, usize),
+}
+
+#[derive(Debug, Clone)]
+struct Event {
+    line: usize,
+    held: Vec<String>,
+    kind: EventKind,
+}
+
+#[derive(Debug, Clone)]
+enum EventKind {
+    Acquire(String),
+    Call(String),
+}
+
+struct Guard {
+    lock: String,
+    depth: i32,
+    binding: Option<String>,
+    temp: bool,
+}
+
+pub struct LockGraph {
+    /// Ordered edges (held, acquired) -> first observed site.
+    pub edges: BTreeMap<(String, String), (String, usize)>,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+pub fn analyze(files: &[SourceFile], c: &Contracts) -> LockGraph {
+    let mut diags = Vec::new();
+    let mut funcs = Vec::new();
+    for (idx, f) in files.iter().enumerate() {
+        if !crate::rules::is_under(&f.rel, &c.lock_scan) {
+            continue;
+        }
+        collect_funcs(f, idx, &mut funcs);
+    }
+    let events: Vec<Vec<Event>> = funcs
+        .iter()
+        .map(|fun| scan_body(&files[fun.file_idx], fun, &funcs, c, &mut diags))
+        .collect();
+
+    // Bare name -> function indices (closures excluded).
+    let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    for (i, f) in funcs.iter().enumerate() {
+        if f.name != "<closure>" {
+            by_name.entry(f.name.as_str()).or_default().push(i);
+        }
+    }
+
+    // Transitive acquisition sets, to fixpoint.
+    let mut acq: Vec<BTreeSet<String>> = events
+        .iter()
+        .map(|evs| {
+            evs.iter()
+                .filter_map(|e| match &e.kind {
+                    EventKind::Acquire(l) => Some(l.clone()),
+                    EventKind::Call(_) => None,
+                })
+                .collect()
+        })
+        .collect();
+    loop {
+        let mut changed = false;
+        for (i, evs) in events.iter().enumerate() {
+            let mut add: BTreeSet<String> = BTreeSet::new();
+            for e in evs {
+                if let EventKind::Call(name) = &e.kind {
+                    if let Some(targets) = by_name.get(name.as_str()) {
+                        for &t in targets {
+                            if t != i {
+                                add.extend(acq[t].iter().cloned());
+                            }
+                        }
+                    }
+                }
+            }
+            for l in add {
+                changed |= acq[i].insert(l);
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Edges: held -> (direct acquisition | every lock a callee reaches).
+    let mut edges: BTreeMap<(String, String), (String, usize)> = BTreeMap::new();
+    for (i, evs) in events.iter().enumerate() {
+        let file = &files[funcs[i].file_idx];
+        for e in evs {
+            if e.held.is_empty() {
+                continue;
+            }
+            let acquired: Vec<String> = match &e.kind {
+                EventKind::Acquire(l) => vec![l.clone()],
+                EventKind::Call(name) => by_name
+                    .get(name.as_str())
+                    .map(|ts| {
+                        ts.iter()
+                            .filter(|&&t| t != i)
+                            .flat_map(|&t| acq[t].iter().cloned())
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+            };
+            for h in &e.held {
+                for a in &acquired {
+                    edges
+                        .entry((h.clone(), a.clone()))
+                        .or_insert_with(|| (file.rel.clone(), e.line));
+                }
+            }
+        }
+    }
+
+    for cycle in find_cycles(&edges) {
+        let mut sites = Vec::new();
+        for w in cycle.windows(2) {
+            if let Some((f, l)) = edges.get(&(w[0].clone(), w[1].clone())) {
+                sites.push(format!("{}->{} at {}:{}", w[0], w[1], f, l));
+            }
+        }
+        let (file, line) = edges
+            .get(&(cycle[0].clone(), cycle[1].clone()))
+            .cloned()
+            .unwrap_or_default();
+        diags.push(Diagnostic::new(
+            &file,
+            line,
+            "R5",
+            format!(
+                "lock-order cycle: {} ({})",
+                cycle.join(" -> "),
+                sites.join(", ")
+            ),
+        ));
+    }
+
+    LockGraph {
+        edges,
+        diagnostics: diags,
+    }
+}
+
+/// Collect named fns (with impl context), `let name = |..|` closures,
+/// and anonymous closures (as detached `"<closure>"` roots).
+fn collect_funcs(file: &SourceFile, file_idx: usize, out: &mut Vec<Func>) {
+    let toks = &file.tokens;
+    let mut depth: i32 = 0;
+    let mut impl_stack: Vec<(String, i32)> = Vec::new();
+    let mut named_pipes: BTreeSet<usize> = BTreeSet::new();
+    let mut i = 0;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                while impl_stack.last().map(|&(_, d)| depth < d).unwrap_or(false) {
+                    impl_stack.pop();
+                }
+            }
+            "impl" => {
+                // Type name = last top-level ident before the body `{`,
+                // skipping generic params.
+                let mut j = i + 1;
+                let mut angle = 0i32;
+                let mut last_ident = None;
+                while j < toks.len() && !(angle == 0 && toks[j].text == "{") {
+                    match toks[j].text.as_str() {
+                        "<" => angle += 1,
+                        ">" => angle -= 1,
+                        _ if toks[j].is_ident && angle == 0 && toks[j].text != "for" => {
+                            last_ident = Some(toks[j].text.clone());
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                if let Some(name) = last_ident {
+                    impl_stack.push((name, depth + 1));
+                }
+            }
+            "fn" if i + 1 < toks.len() && toks[i + 1].is_ident => {
+                let name = toks[i + 1].text.clone();
+                // Body `{` = first brace outside the parameter parens.
+                let mut j = i + 2;
+                let mut paren = 0i32;
+                while j < toks.len() {
+                    match toks[j].text.as_str() {
+                        "(" => paren += 1,
+                        ")" => paren -= 1,
+                        ";" if paren == 0 => break, // trait method decl
+                        "{" if paren == 0 => break,
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                if j < toks.len() && toks[j].text == "{" {
+                    let end = match_brace(toks, j);
+                    out.push(Func {
+                        name,
+                        qual: impl_stack.last().map(|(n, _)| n.clone()),
+                        file_idx,
+                        body: (j + 1, end),
+                    });
+                }
+            }
+            "let" => {
+                // `let name = |..| body` / `let name = move |..| body`
+                let mut j = i + 1;
+                if j < toks.len() && toks[j].text == "mut" {
+                    j += 1;
+                }
+                if j + 1 < toks.len() && toks[j].is_ident && toks[j + 1].text == "=" {
+                    let name = toks[j].text.clone();
+                    let mut k = j + 2;
+                    if k < toks.len() && toks[k].text == "move" {
+                        k += 1;
+                    }
+                    if k < toks.len() && (toks[k].text == "|" || toks[k].text == "||") {
+                        if let Some((start, end)) = closure_body(toks, k) {
+                            named_pipes.insert(k);
+                            out.push(Func {
+                                name,
+                                qual: None,
+                                file_idx,
+                                body: (start, end),
+                            });
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    // Anonymous closures: `|` / `||` in argument or expression position
+    // that a `let name =` didn't already claim.
+    let mut i = 0;
+    while i < toks.len() {
+        let t = toks[i].text.as_str();
+        if (t == "|" || t == "||") && !named_pipes.contains(&i) {
+            let prev = if i == 0 { "" } else { toks[i - 1].text.as_str() };
+            if matches!(prev, "(" | "," | "=" | "move" | "=>" | ";" | "{" | "}" | "return") {
+                if let Some((start, end)) = closure_body(toks, i) {
+                    out.push(Func {
+                        name: "<closure>".to_string(),
+                        qual: None,
+                        file_idx,
+                        body: (start, end),
+                    });
+                    i = end;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Token index of the matching `}` for the `{` at `open`.
+fn match_brace(toks: &[Token], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = open;
+    while j < toks.len() {
+        match toks[j].text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+/// Body range of a closure whose params start at `pipe` (a `|` or `||`
+/// token). Block bodies span the braces; expression bodies run to the
+/// `,`/`)`/`;` that ends them at depth zero.
+fn closure_body(toks: &[Token], pipe: usize) -> Option<(usize, usize)> {
+    let mut j = pipe;
+    if toks[j].text == "||" {
+        j += 1;
+    } else {
+        j += 1;
+        while j < toks.len() && toks[j].text != "|" {
+            j += 1;
+        }
+        j += 1;
+    }
+    if j >= toks.len() {
+        return None;
+    }
+    if toks[j].text == "{" {
+        return Some((j + 1, match_brace(toks, j)));
+    }
+    let start = j;
+    let mut paren = 0i32;
+    let mut brace = 0i32;
+    while j < toks.len() {
+        match toks[j].text.as_str() {
+            "(" => paren += 1,
+            ")" => {
+                if paren == 0 {
+                    return Some((start, j));
+                }
+                paren -= 1;
+            }
+            "{" => brace += 1,
+            "}" => brace -= 1,
+            "," if paren == 0 && brace == 0 => return Some((start, j)),
+            ";" if paren == 0 && brace == 0 => return Some((start, j)),
+            _ => {}
+        }
+        j += 1;
+    }
+    Some((start, toks.len()))
+}
+
+/// Scan one function body for acquisitions and calls with held sets.
+fn scan_body(
+    file: &SourceFile,
+    fun: &Func,
+    all: &[Func],
+    c: &Contracts,
+    diags: &mut Vec<Diagnostic>,
+) -> Vec<Event> {
+    let toks = &file.tokens;
+    let (start, end) = fun.body;
+    // Nested registered bodies (closures, nested fns) are scanned as
+    // their own detached functions; skip them here.
+    let nested: Vec<(usize, usize)> = all
+        .iter()
+        .filter(|f| f.file_idx == fun.file_idx && f.body.0 > start && f.body.1 <= end)
+        .map(|f| f.body)
+        .collect();
+
+    let mut events = Vec::new();
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut depth = 0i32;
+    let mut i = start;
+    'outer: while i < end {
+        for &(ns, ne) in &nested {
+            if i >= ns && i < ne {
+                i = ne;
+                continue 'outer;
+            }
+        }
+        let t = &toks[i];
+        match t.text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                guards.retain(|g| g.depth <= depth);
+            }
+            ";" => {
+                guards.retain(|g| !(g.temp && depth <= g.depth));
+            }
+            _ => {
+                // drop(name) releases a let-bound guard early.
+                if t.text == "drop"
+                    && i + 3 < end
+                    && toks[i + 1].text == "("
+                    && toks[i + 2].is_ident
+                    && toks[i + 3].text == ")"
+                {
+                    let victim = toks[i + 2].text.clone();
+                    guards.retain(|g| g.binding.as_deref() != Some(victim.as_str()));
+                    i += 4;
+                    continue;
+                }
+                let is_method = i > 0 && toks[i - 1].text == ".";
+                let calls_paren = i + 1 < end && toks[i + 1].text == "(";
+                if t.is_ident && calls_paren {
+                    let zero_arg = i + 2 < end && toks[i + 2].text == ")";
+                    if is_method && zero_arg && ACQUIRE_METHODS.contains(&t.text.as_str()) {
+                        let path = receiver_path(toks, i - 1, start);
+                        match resolve(&path, fun.qual.as_deref(), c) {
+                            Some(lock) => {
+                                events.push(Event {
+                                    line: t.line,
+                                    held: guards.iter().map(|g| g.lock.clone()).collect(),
+                                    kind: EventKind::Acquire(lock.clone()),
+                                });
+                                let binding = find_binding(toks, i, start);
+                                guards.push(Guard {
+                                    lock,
+                                    depth,
+                                    temp: binding.is_none(),
+                                    binding,
+                                });
+                            }
+                            None => diags.push(Diagnostic::new(
+                                &file.rel,
+                                t.line,
+                                "R5",
+                                format!(
+                                    "unresolved lock receiver `{}` — add it to [lockgraph.vars] or [lockgraph.types] in contracts.toml",
+                                    path.join(".")
+                                ),
+                            )),
+                        }
+                        i += 3;
+                        continue;
+                    }
+                    let is_macro = i + 1 < end && toks[i + 1].text == "!";
+                    let skip = KEYWORDS.contains(&t.text.as_str())
+                        || is_macro
+                        || (is_method
+                            && (c.lock_ignore_methods.iter().any(|m| m == &t.text)
+                                || GUARD_CHAIN.contains(&t.text.as_str())));
+                    if !skip {
+                        events.push(Event {
+                            line: t.line,
+                            held: guards.iter().map(|g| g.lock.clone()).collect(),
+                            kind: EventKind::Call(t.text.clone()),
+                        });
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    events
+}
+
+/// Dotted receiver path ending at the `.` before the acquire method.
+fn receiver_path(toks: &[Token], dot: usize, floor: usize) -> Vec<String> {
+    let mut segs = Vec::new();
+    let mut j = dot; // toks[j] == "."
+    while j > floor {
+        let prev = &toks[j - 1];
+        let field_like =
+            prev.is_ident || (!prev.text.is_empty() && prev.text.chars().all(|c| c.is_ascii_digit()));
+        if field_like {
+            segs.push(prev.text.clone());
+            if j >= 2 && toks[j - 2].text == "." {
+                j -= 2;
+                continue;
+            }
+        }
+        break;
+    }
+    segs.reverse();
+    segs
+}
+
+/// Resolve a receiver path to a lock class. `self`-rooted paths use the
+/// impl type map; free paths try each segment (last first) in the vars
+/// map.
+fn resolve(path: &[String], qual: Option<&str>, c: &Contracts) -> Option<String> {
+    if path.first().map(String::as_str) == Some("self") {
+        return qual.and_then(|q| c.lock_types.get(q).cloned());
+    }
+    for seg in path.iter().rev() {
+        if let Some(l) = c.lock_vars.get(seg) {
+            return Some(l.clone());
+        }
+    }
+    None
+}
+
+/// `let`-bound guard name for the statement containing token `i`, if any.
+fn find_binding(toks: &[Token], i: usize, floor: usize) -> Option<String> {
+    let mut j = i;
+    let mut let_at = None;
+    while j > floor {
+        j -= 1;
+        match toks[j].text.as_str() {
+            ";" | "{" | "}" => break,
+            "let" => {
+                let_at = Some(j);
+                break;
+            }
+            _ => {}
+        }
+    }
+    let let_at = let_at?;
+    let mut name = None;
+    let mut k = let_at + 1;
+    while k < i && toks[k].text != "=" {
+        if toks[k].is_ident
+            && !matches!(toks[k].text.as_str(), "mut" | "ref" | "Ok" | "Some" | "Err")
+        {
+            name = Some(toks[k].text.clone());
+        }
+        k += 1;
+    }
+    name
+}
+
+fn dfs_back_to_root(
+    node: &str,
+    root: &str,
+    adj: &BTreeMap<&str, BTreeSet<&str>>,
+    path: &mut Vec<String>,
+) -> Option<Vec<String>> {
+    path.push(node.to_string());
+    if let Some(nexts) = adj.get(node) {
+        for &n in nexts {
+            if n == root {
+                let mut cyc = path.clone();
+                cyc.push(root.to_string());
+                path.pop();
+                return Some(cyc);
+            }
+            if !path.iter().any(|p| p == n) {
+                if let Some(cyc) = dfs_back_to_root(n, root, adj, path) {
+                    path.pop();
+                    return Some(cyc);
+                }
+            }
+        }
+    }
+    path.pop();
+    None
+}
+
+/// Elementary cycles in the lock-class digraph, deduplicated by node
+/// set, each returned as [a, b, ..., a].
+fn find_cycles(edges: &BTreeMap<(String, String), (String, usize)>) -> Vec<Vec<String>> {
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for (a, b) in edges.keys() {
+        adj.entry(a.as_str()).or_default().insert(b.as_str());
+    }
+    let roots: Vec<&str> = adj.keys().copied().collect();
+    let mut seen_sets: BTreeSet<Vec<String>> = BTreeSet::new();
+    let mut cycles = Vec::new();
+    for root in roots {
+        let mut path = Vec::new();
+        if let Some(cyc) = dfs_back_to_root(root, root, &adj, &mut path) {
+            let mut key: Vec<String> = cyc[..cyc.len() - 1].to_vec();
+            key.sort();
+            if seen_sets.insert(key) {
+                cycles.push(cyc);
+            }
+        }
+    }
+    cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scan::SourceFile;
+
+    fn analyze_src(src: &str) -> LockGraph {
+        let f = SourceFile::from_text("coordinator/x.rs", src);
+        analyze(&[f], &Contracts::test_default())
+    }
+
+    #[test]
+    fn ordered_edges_no_cycle() {
+        let g = analyze_src(
+            "fn a(slot: S, metrics: M) {\n  let g = slot.lock();\n  metrics.lock();\n}\n",
+        );
+        assert!(g.diagnostics.is_empty(), "{:?}", g.diagnostics);
+        assert!(g.edges.contains_key(&("in_flight".into(), "metrics".into())));
+    }
+
+    #[test]
+    fn opposite_orders_cycle() {
+        let g = analyze_src(
+            "fn a(slot: S, metrics: M) { let g = slot.lock(); metrics.lock(); }\n\
+             fn b(slot: S, metrics: M) { let g = metrics.lock(); slot.lock(); }\n",
+        );
+        assert!(g
+            .diagnostics
+            .iter()
+            .any(|d| d.rule == "R5" && d.msg.contains("cycle")));
+    }
+
+    #[test]
+    fn transitive_cycle_through_call() {
+        let g = analyze_src(
+            "fn a(slot: S) { let g = slot.lock(); touch(); }\n\
+             fn touch(metrics: M) { metrics.lock(); }\n\
+             fn b(metrics: M) { let g = metrics.lock(); grab(); }\n\
+             fn grab(slot: S) { slot.lock(); }\n",
+        );
+        assert!(g
+            .diagnostics
+            .iter()
+            .any(|d| d.rule == "R5" && d.msg.contains("cycle")));
+    }
+
+    #[test]
+    fn drop_releases_guard() {
+        let g = analyze_src(
+            "fn a(slot: S, metrics: M) {\n  let g = slot.lock();\n  drop(g);\n  metrics.lock();\n}\n",
+        );
+        assert!(!g.edges.contains_key(&("in_flight".into(), "metrics".into())));
+    }
+
+    #[test]
+    fn temp_guard_releases_at_statement_end() {
+        let g = analyze_src(
+            "fn a(metrics: M, slot: S) {\n  metrics.lock().count += 1;\n  slot.lock();\n}\n",
+        );
+        assert!(!g.edges.contains_key(&("metrics".into(), "in_flight".into())));
+    }
+
+    #[test]
+    fn self_rooted_acquisition_uses_impl_map() {
+        let g = analyze_src(
+            "struct Metrics;\nimpl Metrics {\n  fn bump(&self) { self.inner.lock().x += 1; }\n}\n",
+        );
+        assert!(g.diagnostics.is_empty(), "{:?}", g.diagnostics);
+    }
+
+    #[test]
+    fn unresolved_receiver_is_reported() {
+        let g = analyze_src("fn a(mystery: S) { mystery.lock(); }\n");
+        assert!(g
+            .diagnostics
+            .iter()
+            .any(|d| d.msg.contains("unresolved lock receiver")));
+    }
+
+    #[test]
+    fn detached_closures_do_not_inherit_guards() {
+        let g = analyze_src(
+            "fn a(slot: S, metrics: M) {\n  let g = slot.lock();\n  spawn(move || { metrics.lock(); });\n}\n",
+        );
+        assert!(!g.edges.contains_key(&("in_flight".into(), "metrics".into())));
+    }
+
+    #[test]
+    fn closure_internal_edges_are_still_seen() {
+        let g = analyze_src(
+            "fn a(slot: S, metrics: M) {\n  spawn(move || {\n    let g = slot.lock();\n    metrics.lock();\n  });\n}\n",
+        );
+        assert!(g.edges.contains_key(&("in_flight".into(), "metrics".into())));
+    }
+
+    #[test]
+    fn relock_is_a_self_cycle() {
+        let g = analyze_src("fn a(slot: S) { let g = slot.lock(); slot.lock(); }\n");
+        assert!(g
+            .diagnostics
+            .iter()
+            .any(|d| d.rule == "R5" && d.msg.contains("cycle")));
+    }
+
+    #[test]
+    fn let_closure_is_resolvable_as_callee() {
+        let g = analyze_src(
+            "fn a(metrics: M, h: H) {\n  let lock_handles = |x| h.lock();\n  let g = metrics.lock();\n  lock_handles(1);\n}\n",
+        );
+        assert!(g.edges.contains_key(&("metrics".into(), "handles".into())));
+    }
+}

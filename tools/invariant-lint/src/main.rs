@@ -1,0 +1,70 @@
+//! CLI: `invariant-lint [--contracts PATH] <paths...>`
+//!
+//! Lints every `.rs` file under each path against the contracts file
+//! (default: the checked-in `contracts.toml` next to this tool), prints
+//! `file:line: [R#] message` diagnostics, and exits nonzero when any
+//! rule fires. One-command repro over the tree:
+//!
+//! ```text
+//! cargo run -p invariant-lint -- rust/src
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut contracts_path =
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/contracts.toml"));
+    let mut roots: Vec<PathBuf> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--contracts" => match args.next() {
+                Some(p) => contracts_path = PathBuf::from(p),
+                None => {
+                    eprintln!("--contracts requires a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                eprintln!("usage: invariant-lint [--contracts PATH] <paths...>");
+                return ExitCode::SUCCESS;
+            }
+            _ => roots.push(PathBuf::from(arg)),
+        }
+    }
+    if roots.is_empty() {
+        eprintln!("usage: invariant-lint [--contracts PATH] <paths...>");
+        return ExitCode::from(2);
+    }
+
+    let contracts = match invariant_lint::Contracts::load(&contracts_path) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("invariant-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let mut total = 0usize;
+    for root in &roots {
+        match invariant_lint::lint_root(root, &contracts) {
+            Ok(diags) => {
+                for d in &diags {
+                    println!("{d}");
+                }
+                total += diags.len();
+            }
+            Err(e) => {
+                eprintln!("invariant-lint: {}: {e}", root.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+    if total > 0 {
+        eprintln!("invariant-lint: {total} violation(s)");
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

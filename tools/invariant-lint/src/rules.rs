@@ -1,0 +1,195 @@
+//! Rules R1–R4: token-level invariant checks over one stripped source
+//! file. R5 (lock-order cycles) lives in `lockgraph.rs`.
+
+use crate::scan::SourceFile;
+use crate::{Contracts, Diagnostic};
+
+/// `rel` is under `dir` when `dir` names one of its ancestor directories
+/// (entries may be nested like "util/rng.rs", which matches exactly or
+/// as a prefix).
+fn under(rel: &str, dirs: &[String]) -> bool {
+    dirs.iter().any(|d| {
+        let d = d.trim_end_matches('/');
+        rel == d || rel.starts_with(&format!("{d}/"))
+    })
+}
+
+/// R1: `unsafe` confined to the allowed dirs, and every occurrence
+/// carries a `// SAFETY:` (or `# Safety` doc section) within the
+/// preceding 10 lines.
+pub fn r1_unsafe(file: &SourceFile, c: &Contracts, out: &mut Vec<Diagnostic>) {
+    for t in &file.tokens {
+        if t.text != "unsafe" {
+            continue;
+        }
+        if !under(&file.rel, &c.unsafe_allowed_dirs) {
+            out.push(Diagnostic::new(
+                &file.rel,
+                t.line,
+                "R1",
+                format!(
+                    "`unsafe` outside the allowed dirs ({:?}) — keep unsafe confined to the SIMD arch layer",
+                    c.unsafe_allowed_dirs
+                ),
+            ));
+        }
+        if !file.window_contains(t.line, 10, &["SAFETY:", "# Safety"]) {
+            out.push(Diagnostic::new(
+                &file.rel,
+                t.line,
+                "R1",
+                "`unsafe` without a `// SAFETY:` comment (or `# Safety` doc section) in the preceding 10 lines"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// R2: no fused-multiply-add tokens in kernel/hot-path modules — the
+/// bit-identity contract requires separate mul + add roundings.
+pub fn r2_fma(file: &SourceFile, c: &Contracts, out: &mut Vec<Diagnostic>) {
+    if !under(&file.rel, &c.fma_deny_dirs) {
+        return;
+    }
+    for t in &file.tokens {
+        if t.is_ident && c.fma_tokens.iter().any(|b| b == &t.text) {
+            out.push(Diagnostic::new(
+                &file.rel,
+                t.line,
+                "R2",
+                format!(
+                    "fused-op token `{}` in a bit-identity kernel module — use separate mul + add",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+/// R3: replay-pinned modules must not touch wall clocks, hash-ordered
+/// collections, or ambient randomness. `#[cfg(test)] mod` blocks are
+/// exempt (tests may time things; they are not replayed).
+pub fn r3_replay(file: &SourceFile, c: &Contracts, out: &mut Vec<Diagnostic>) {
+    if !under(&file.rel, &c.replay_pinned) {
+        return;
+    }
+    for t in &file.tokens {
+        if !t.is_ident || file.in_test_range(t.line) {
+            continue;
+        }
+        if c.replay_banned.iter().any(|b| b == &t.text) {
+            out.push(Diagnostic::new(
+                &file.rel,
+                t.line,
+                "R3",
+                format!(
+                    "`{}` inside replay-pinned module — wall clocks, hash ordering, and ambient randomness break bit-identical replay",
+                    t.text
+                ),
+            ));
+        }
+    }
+}
+
+/// R4: every `Ordering::Relaxed` outside the allowlist carries a
+/// `// RELAXED:` justification within the preceding 3 lines.
+pub fn r4_relaxed(file: &SourceFile, c: &Contracts, out: &mut Vec<Diagnostic>) {
+    if c.relaxed_allow.iter().any(|f| f == &file.rel) {
+        return;
+    }
+    let toks = &file.tokens;
+    for i in 0..toks.len().saturating_sub(2) {
+        if toks[i].text == "Ordering"
+            && toks[i + 1].text == "::"
+            && toks[i + 2].text == "Relaxed"
+            && !file.window_contains(toks[i].line, 3, &["RELAXED:"])
+        {
+            out.push(Diagnostic::new(
+                &file.rel,
+                toks[i].line,
+                "R4",
+                "`Ordering::Relaxed` without a `// RELAXED:` justification in the preceding 3 lines"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+pub fn is_under(rel: &str, dirs: &[String]) -> bool {
+    under(rel, dirs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn contracts() -> Contracts {
+        Contracts::test_default()
+    }
+
+    fn run_on(rel: &str, src: &str) -> Vec<Diagnostic> {
+        let f = SourceFile::from_text(rel, src);
+        let c = contracts();
+        let mut out = Vec::new();
+        r1_unsafe(&f, &c, &mut out);
+        r2_fma(&f, &c, &mut out);
+        r3_replay(&f, &c, &mut out);
+        r4_relaxed(&f, &c, &mut out);
+        out
+    }
+
+    #[test]
+    fn r1_flags_unsafe_outside_arch_and_missing_safety() {
+        let d = run_on("cim/x.rs", "fn f() { unsafe { core(); } }");
+        assert!(d.iter().any(|d| d.rule == "R1" && d.msg.contains("outside")));
+        assert!(d.iter().any(|d| d.rule == "R1" && d.msg.contains("SAFETY")));
+    }
+
+    #[test]
+    fn r1_passes_annotated_arch_unsafe() {
+        let d = run_on(
+            "arch/x.rs",
+            "fn f() {\n    // SAFETY: caller checked the CPU feature.\n    unsafe { core(); }\n}",
+        );
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn r2_flags_mul_add_in_kernels_only() {
+        let bad = run_on("grng/fill.rs", "fn f(a: f64) -> f64 { a.mul_add(2.0, 1.0) }");
+        assert!(bad.iter().any(|d| d.rule == "R2"));
+        let ok = run_on("coordinator/x.rs", "fn f(a: f64) -> f64 { a.mul_add(2.0, 1.0) }");
+        assert!(ok.iter().all(|d| d.rule != "R2"));
+    }
+
+    #[test]
+    fn r3_flags_wall_clock_outside_tests_only() {
+        let bad = run_on("cim/t.rs", "fn f() { let t = Instant::now(); }");
+        assert!(bad.iter().any(|d| d.rule == "R3"));
+        let ok = run_on(
+            "cim/t.rs",
+            "fn f() {}\n#[cfg(test)]\nmod tests {\n    fn t() { let x = Instant::now(); }\n}\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn r3_ignores_strings_and_comments() {
+        let ok = run_on(
+            "cim/t.rs",
+            "// Instant::now() is forbidden here.\nfn f() -> &'static str { \"HashMap\" }\n",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+
+    #[test]
+    fn r4_requires_relaxed_justification() {
+        let bad = run_on("coordinator/a.rs", "fn f() { x.load(Ordering::Relaxed); }");
+        assert!(bad.iter().any(|d| d.rule == "R4"));
+        let ok = run_on(
+            "coordinator/a.rs",
+            "fn f() {\n    // RELAXED: pure hint, applied at batch boundaries.\n    x.load(Ordering::Relaxed);\n}",
+        );
+        assert!(ok.is_empty(), "{ok:?}");
+    }
+}

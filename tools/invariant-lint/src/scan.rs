@@ -1,0 +1,415 @@
+//! Source scanning: comment/string stripping, a flat token stream with
+//! line numbers, `#[cfg(test)]` block ranges, and the `.rs` file walk.
+//!
+//! The stripper replaces comment and string-literal *contents* with
+//! spaces so byte offsets and line numbers survive; rule passes that
+//! need the comments back (SAFETY/RELAXED windows) search the raw lines.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub line: usize, // 1-indexed
+    pub text: String,
+    pub is_ident: bool,
+}
+
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the scan root, forward slashes.
+    pub rel: String,
+    pub raw_lines: Vec<String>,
+    pub tokens: Vec<Token>,
+    /// Inclusive line ranges covered by `#[cfg(test)] mod ... { }`.
+    pub test_ranges: Vec<(usize, usize)>,
+}
+
+impl SourceFile {
+    pub fn load(path: &Path, rel: &str) -> io::Result<SourceFile> {
+        let text = fs::read_to_string(path)?;
+        Ok(SourceFile::from_text(rel, &text))
+    }
+
+    pub fn from_text(rel: &str, text: &str) -> SourceFile {
+        let stripped = strip(text);
+        let tokens = tokenize(&stripped);
+        let test_ranges = find_test_ranges(&tokens);
+        SourceFile {
+            rel: rel.to_string(),
+            raw_lines: text.lines().map(str::to_string).collect(),
+            tokens,
+            test_ranges,
+        }
+    }
+
+    pub fn in_test_range(&self, line: usize) -> bool {
+        self.test_ranges.iter().any(|&(lo, hi)| lo <= line && line <= hi)
+    }
+
+    /// True when any raw line in `[line - above, line]` contains `needle`.
+    pub fn window_contains(&self, line: usize, above: usize, needles: &[&str]) -> bool {
+        let lo = line.saturating_sub(above + 1);
+        let hi = line.min(self.raw_lines.len());
+        self.raw_lines[lo..hi]
+            .iter()
+            .any(|l| needles.iter().any(|n| l.contains(n)))
+    }
+}
+
+/// Replace comments and string/char-literal contents with spaces,
+/// preserving newlines. Handles nested block comments, raw strings, and
+/// the lifetime-vs-char-literal ambiguity.
+pub fn strip(text: &str) -> String {
+    let b = text.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        // Line comment.
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            while i < b.len() && b[i] != b'\n' {
+                out.push(b' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (nesting).
+        if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let mut depth = 1;
+            out.push(b' ');
+            out.push(b' ');
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else {
+                    out.push(if b[i] == b'\n' { b'\n' } else { b' ' });
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string r"..." / r#"..."# (and br variants).
+        if c == b'r' || (c == b'b' && i + 1 < b.len() && b[i + 1] == b'r') {
+            let start = if c == b'b' { i + 1 } else { i };
+            let mut j = start + 1;
+            while j < b.len() && b[j] == b'#' {
+                j += 1;
+            }
+            if j < b.len() && b[j] == b'"' && (i == 0 || !is_ident_byte(b[i - 1])) {
+                let hashes = j - (start + 1);
+                for _ in i..=j {
+                    out.push(b' ');
+                }
+                i = j + 1;
+                let close: Vec<u8> = std::iter::once(b'"')
+                    .chain(std::iter::repeat(b'#').take(hashes))
+                    .collect();
+                while i < b.len() {
+                    if b[i] == b'"' && b[i..].starts_with(&close) {
+                        for _ in 0..close.len() {
+                            out.push(b' ');
+                        }
+                        i += close.len();
+                        break;
+                    }
+                    out.push(if b[i] == b'\n' { b'\n' } else { b' ' });
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // Ordinary string.
+        if c == b'"' {
+            out.push(b'"');
+            i += 1;
+            while i < b.len() {
+                if b[i] == b'\\' && i + 1 < b.len() {
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                    continue;
+                }
+                if b[i] == b'"' {
+                    out.push(b'"');
+                    i += 1;
+                    break;
+                }
+                out.push(if b[i] == b'\n' { b'\n' } else { b' ' });
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal vs lifetime: 'x' or '\n' is a literal; 'ident not
+        // followed by a closing quote is a lifetime.
+        if c == b'\'' {
+            let lit_end = char_literal_end(b, i);
+            if let Some(end) = lit_end {
+                for _ in i..end {
+                    out.push(b' ');
+                }
+                i = end;
+                continue;
+            }
+        }
+        out.push(c);
+        i += 1;
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+fn char_literal_end(b: &[u8], i: usize) -> Option<usize> {
+    // b[i] == '\''. Escaped: '\X...'; plain: 'C'.
+    if i + 1 >= b.len() {
+        return None;
+    }
+    if b[i + 1] == b'\\' {
+        let mut j = i + 2;
+        while j < b.len() && b[j] != b'\'' && b[j] != b'\n' {
+            j += 1;
+        }
+        return if j < b.len() && b[j] == b'\'' { Some(j + 1) } else { None };
+    }
+    // Plain literal: exactly one char (ASCII or multibyte) then a close
+    // quote. Anything else ('a, 'static, <'a, 'b>) is a lifetime.
+    let first = b[i + 1];
+    let width = if first < 0x80 {
+        1
+    } else if first >= 0xF0 {
+        4
+    } else if first >= 0xE0 {
+        3
+    } else {
+        2
+    };
+    let close = i + 1 + width;
+    if close < b.len() && b[close] == b'\'' && first != b'\n' {
+        Some(close + 1)
+    } else {
+        None
+    }
+}
+
+fn is_ident_byte(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+pub fn tokenize(stripped: &str) -> Vec<Token> {
+    let b = stripped.as_bytes();
+    let mut toks = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        if c == b'_' || c.is_ascii_alphabetic() {
+            let start = i;
+            while i < b.len() && is_ident_byte(b[i]) {
+                i += 1;
+            }
+            toks.push(Token {
+                line,
+                text: stripped[start..i].to_string(),
+                is_ident: true,
+            });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < b.len() && is_ident_byte(b[i]) {
+                i += 1;
+            }
+            // Consume a fraction only when digits follow the dot, so
+            // `self.0.lock()` keeps its field-access dots.
+            if i + 1 < b.len() && b[i] == b'.' && b[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < b.len() && is_ident_byte(b[i]) {
+                    i += 1;
+                }
+            }
+            toks.push(Token {
+                line,
+                text: stripped[start..i].to_string(),
+                is_ident: false,
+            });
+            continue;
+        }
+        // Multi-char puncts we care about keeping atomic.
+        let mut matched = false;
+        for pat in ["::", "=>", "->", "||", "&&", "..=", ".."] {
+            if stripped[i..].starts_with(pat) {
+                toks.push(Token {
+                    line,
+                    text: pat.to_string(),
+                    is_ident: false,
+                });
+                i += pat.len();
+                matched = true;
+                break;
+            }
+        }
+        if matched {
+            continue;
+        }
+        let ch = stripped[i..].chars().next().unwrap();
+        toks.push(Token {
+            line,
+            text: ch.to_string(),
+            is_ident: false,
+        });
+        i += ch.len_utf8();
+    }
+    toks
+}
+
+/// Inclusive line ranges of `#[cfg(test)] mod name { ... }` blocks.
+fn find_test_ranges(toks: &[Token]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let mut i = 0;
+    while i + 6 < toks.len() {
+        let is_cfg_test = toks[i].text == "#"
+            && toks[i + 1].text == "["
+            && toks[i + 2].text == "cfg"
+            && toks[i + 3].text == "("
+            && toks[i + 4].text == "test"
+            && toks[i + 5].text == ")"
+            && toks[i + 6].text == "]";
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        // Find the item the attribute decorates; only `mod` blocks are
+        // excluded wholesale (fn-level cfg(test) is rare in this tree).
+        let mut j = i + 7;
+        while j < toks.len() && toks[j].text != "mod" && toks[j].text != "{" && toks[j].text != ";"
+        {
+            j += 1;
+        }
+        if j < toks.len() && toks[j].text == "mod" {
+            // Advance to the opening brace, then match it.
+            while j < toks.len() && toks[j].text != "{" {
+                j += 1;
+            }
+            if j < toks.len() {
+                let start_line = toks[i].line;
+                let mut depth = 0i32;
+                while j < toks.len() {
+                    match toks[j].text.as_str() {
+                        "{" => depth += 1,
+                        "}" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                ranges.push((start_line, toks[j].line));
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            }
+        }
+        i = j.max(i + 1);
+    }
+    ranges
+}
+
+/// All `.rs` files under `root`, sorted, as (abs path, rel path) pairs.
+/// A bare file argument yields itself with its file name as rel.
+pub fn rs_files(root: &Path) -> io::Result<Vec<(PathBuf, String)>> {
+    let mut out = Vec::new();
+    if root.is_file() {
+        let rel = root
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        out.push((root.to_path_buf(), rel));
+        return Ok(out);
+    }
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<PathBuf> = fs::read_dir(&dir)?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+                let rel = p
+                    .strip_prefix(root)
+                    .unwrap_or(&p)
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                out.push((p, rel));
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings_preserving_lines() {
+        let src = "let a = \"Instant::now()\"; // Instant::now()\nlet b = 'x';\n/* HashMap */ let c = 1;\n";
+        let s = strip(src);
+        assert!(!s.contains("Instant"));
+        assert!(!s.contains("HashMap"));
+        assert_eq!(s.matches('\n').count(), src.matches('\n').count());
+        assert!(s.contains("let b ="));
+    }
+
+    #[test]
+    fn lifetimes_survive_char_literals_do_not() {
+        let s = strip("fn f<'a>(x: &'a str) -> char { 'y' }");
+        assert!(s.contains("'a"));
+        assert!(!s.contains("'y'"));
+    }
+
+    #[test]
+    fn raw_strings_are_stripped() {
+        let s = strip("let x = r#\"mul_add\"#; let y = 2;");
+        assert!(!s.contains("mul_add"));
+        assert!(s.contains("let y = 2"));
+    }
+
+    #[test]
+    fn tokenizer_keeps_field_access_dots() {
+        let toks = tokenize("self.0.lock()");
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["self", ".", "0", ".", "lock", "(", ")"]);
+    }
+
+    #[test]
+    fn cfg_test_mod_ranges_found() {
+        let f = SourceFile::from_text(
+            "x.rs",
+            "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn tail() {}\n",
+        );
+        assert_eq!(f.test_ranges, vec![(2, 5)]);
+        assert!(f.in_test_range(4));
+        assert!(!f.in_test_range(6));
+    }
+}

@@ -1,0 +1,225 @@
+//! Minimal TOML-subset parser for `contracts.toml`, in the same idiom as
+//! the tree's `util::toml`: sections (`[a.b]`), bare or quoted keys, and
+//! string / integer / boolean / string-array values. Everything is stored
+//! flat as `section.path.key -> Value` so callers read dotted paths.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Bool(bool),
+    List(Vec<String>),
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Doc {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, TomlError> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| TomlError {
+                    line: lineno,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| TomlError {
+                line: lineno,
+                msg: format!("expected `key = value`, got `{line}`"),
+            })?;
+            let key = parse_key(line[..eq].trim(), lineno)?;
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            let full = if section.is_empty() {
+                key
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.entries.insert(full, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    /// String-array value; absent key reads as the empty list.
+    pub fn list(&self, key: &str) -> Vec<String> {
+        match self.entries.get(key) {
+            Some(Value::List(v)) => v.clone(),
+            Some(Value::Str(s)) => vec![s.clone()],
+            _ => Vec::new(),
+        }
+    }
+
+    /// All `prefix.<name> = "str"` pairs, keyed by `<name>`.
+    pub fn table(&self, prefix: &str) -> BTreeMap<String, String> {
+        let want = format!("{prefix}.");
+        let mut out = BTreeMap::new();
+        for (k, v) in &self.entries {
+            if let Some(name) = k.strip_prefix(&want) {
+                if let Value::Str(s) = v {
+                    out.insert(name.to_string(), s.clone());
+                }
+            }
+        }
+        out
+    }
+}
+
+fn parse_key(raw: &str, lineno: usize) -> Result<String, TomlError> {
+    let raw = raw.trim();
+    if let Some(inner) = raw.strip_prefix('"') {
+        return inner.strip_suffix('"').map(str::to_string).ok_or(TomlError {
+            line: lineno,
+            msg: "unterminated quoted key".into(),
+        });
+    }
+    if raw.is_empty() {
+        return Err(TomlError {
+            line: lineno,
+            msg: "empty key".into(),
+        });
+    }
+    Ok(raw.to_string())
+}
+
+fn parse_value(raw: &str, lineno: usize) -> Result<Value, TomlError> {
+    if raw == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = raw.strip_prefix('"') {
+        let s = inner.strip_suffix('"').ok_or_else(|| TomlError {
+            line: lineno,
+            msg: "unterminated string".into(),
+        })?;
+        return Ok(Value::Str(s.to_string()));
+    }
+    if let Some(inner) = raw.strip_prefix('[') {
+        let body = inner.strip_suffix(']').ok_or_else(|| TomlError {
+            line: lineno,
+            msg: "unterminated array (arrays must be single-line)".into(),
+        })?;
+        let mut items = Vec::new();
+        for part in split_top_level(body) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match parse_value(part, lineno)? {
+                Value::Str(s) => items.push(s),
+                _ => {
+                    return Err(TomlError {
+                        line: lineno,
+                        msg: "only string arrays are supported".into(),
+                    })
+                }
+            }
+        }
+        return Ok(Value::List(items));
+    }
+    raw.parse::<i64>().map(Value::Int).map_err(|_| TomlError {
+        line: lineno,
+        msg: format!("unrecognized value `{raw}`"),
+    })
+}
+
+/// Split on commas that sit outside string quotes.
+fn split_top_level(body: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in body.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+/// Drop a `#` comment, respecting `#` inside quoted strings.
+fn strip_comment(raw: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in raw.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &raw[..i],
+            _ => {}
+        }
+    }
+    raw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_keys_and_arrays() {
+        let doc = Doc::parse(
+            r#"
+top = 3
+[rules.fma]
+deny_dirs = ["arch", "cim"] # trailing comment
+[lockgraph.vars]
+slot = "in_flight"
+"quoted.key" = "v"
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("top"), Some(&Value::Int(3)));
+        assert_eq!(
+            doc.list("rules.fma.deny_dirs"),
+            vec!["arch".to_string(), "cim".to_string()]
+        );
+        let vars = doc.table("lockgraph.vars");
+        assert_eq!(vars.get("slot").map(String::as_str), Some("in_flight"));
+        assert_eq!(vars.get("quoted.key").map(String::as_str), Some("v"));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Doc::parse("[unclosed").is_err());
+        assert!(Doc::parse("key value").is_err());
+        assert!(Doc::parse("k = [1, 2]").is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! Fixture suite: every rule fires on its known-bad snippet, stays
+//! silent on the known-good mirror, and the tree itself lints clean
+//! (the self-check CI runs as `cargo run -p invariant-lint -- rust/src`).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use invariant_lint::{lint_root, Contracts, Diagnostic};
+
+fn tool_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture_contracts() -> Contracts {
+    Contracts::load(&tool_dir().join("fixtures/contracts.toml")).expect("fixture contracts")
+}
+
+fn lint_fixtures(sub: &str) -> Vec<Diagnostic> {
+    lint_root(&tool_dir().join("fixtures").join(sub), &fixture_contracts()).expect("lint")
+}
+
+fn has(diags: &[Diagnostic], file: &str, rule: &str) -> bool {
+    diags.iter().any(|d| d.file == file && d.rule == rule)
+}
+
+#[test]
+fn every_bad_fixture_is_flagged() {
+    let diags = lint_fixtures("bad");
+    assert!(has(&diags, "arch/no_safety.rs", "R1"), "{diags:?}");
+    assert!(has(&diags, "cim/unsafe_here.rs", "R1"), "{diags:?}");
+    assert!(has(&diags, "cim/fma.rs", "R2"), "{diags:?}");
+    assert!(has(&diags, "grng/wallclock.rs", "R3"), "{diags:?}");
+    assert!(has(&diags, "grng/hashmap_iter.rs", "R3"), "{diags:?}");
+    assert!(has(&diags, "coordinator/relaxed.rs", "R4"), "{diags:?}");
+    assert!(
+        diags
+            .iter()
+            .any(|d| d.rule == "R5" && d.msg.contains("cycle")),
+        "{diags:?}"
+    );
+}
+
+#[test]
+fn bad_unsafe_in_allowed_dir_flags_only_the_missing_safety() {
+    let diags = lint_fixtures("bad");
+    let arch: Vec<&Diagnostic> = diags
+        .iter()
+        .filter(|d| d.file == "arch/no_safety.rs")
+        .collect();
+    assert!(arch.iter().all(|d| d.msg.contains("SAFETY")), "{arch:?}");
+    assert!(
+        arch.iter().all(|d| !d.msg.contains("outside")),
+        "arch is an allowed dir: {arch:?}"
+    );
+}
+
+#[test]
+fn good_fixtures_are_silent() {
+    let diags = lint_fixtures("good");
+    assert!(diags.is_empty(), "good fixtures must lint clean: {diags:?}");
+}
+
+#[test]
+fn diagnostics_carry_file_and_line() {
+    let diags = lint_fixtures("bad");
+    for d in &diags {
+        assert!(d.line > 0, "{d:?}");
+        assert!(!d.file.is_empty(), "{d:?}");
+    }
+    // Deterministic ordering: sorted by (file, line, rule).
+    let mut sorted = diags.clone();
+    sorted.sort();
+    assert_eq!(diags, sorted);
+}
+
+#[test]
+fn binary_exits_nonzero_on_bad_zero_on_good() {
+    let bin = env!("CARGO_BIN_EXE_invariant-lint");
+    let contracts = tool_dir().join("fixtures/contracts.toml");
+    let run = |sub: &str| {
+        Command::new(bin)
+            .arg("--contracts")
+            .arg(&contracts)
+            .arg(tool_dir().join("fixtures").join(sub))
+            .output()
+            .expect("spawn invariant-lint")
+    };
+    let bad = run("bad");
+    assert!(!bad.status.success(), "bad fixtures must fail the lint");
+    let stdout = String::from_utf8_lossy(&bad.stdout);
+    assert!(stdout.contains(":"), "diagnostics use file:line: {stdout}");
+    let good = run("good");
+    assert!(good.status.success(), "good fixtures must pass the lint");
+}
+
+#[test]
+fn self_check_the_tree_lints_clean() {
+    // The merged tree must satisfy its own contracts: this is the same
+    // invocation CI runs (`cargo run -p invariant-lint -- rust/src`).
+    let repo_src = tool_dir().join("../../rust/src");
+    assert!(repo_src.is_dir(), "expected rust/src at {repo_src:?}");
+    let contracts = Contracts::load(&tool_dir().join("contracts.toml")).expect("contracts");
+    let diags = lint_root(&repo_src, &contracts).expect("lint rust/src");
+    assert!(
+        diags.is_empty(),
+        "rust/src must lint clean; violations:\n{}",
+        diags
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn lock_graph_sees_the_coordinator() {
+    // Guard against the scanner silently going blind: the real tree
+    // must yield a non-empty acquisition graph with the known classes.
+    let repo_src = tool_dir().join("../../rust/src");
+    let contracts = Contracts::load(&tool_dir().join("contracts.toml")).expect("contracts");
+    let mut sources = Vec::new();
+    for (abs, rel) in invariant_lint::scan::rs_files(&repo_src).expect("walk") {
+        sources.push(invariant_lint::scan::SourceFile::load(&abs, &rel).expect("read"));
+    }
+    let graph = invariant_lint::lockgraph::analyze(&sources, &contracts);
+    assert!(
+        graph.diagnostics.is_empty(),
+        "{:?}",
+        graph.diagnostics
+    );
+    let classes: std::collections::BTreeSet<&str> = graph
+        .edges
+        .keys()
+        .flat_map(|(a, b)| [a.as_str(), b.as_str()])
+        .collect();
+    assert!(
+        classes.contains("metrics"),
+        "expected the in_flight->metrics edge from the dispatch hot path; got {classes:?} ({:?})",
+        graph.edges.keys().collect::<Vec<_>>()
+    );
+}
